@@ -1,0 +1,102 @@
+"""AOT lowering: JAX per-layer units → HLO *text* artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+Run once via ``make artifacts``; python never runs on the training path.
+
+Usage: python -m compile.aot --out ../artifacts [--only gcn_fwd_n256]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Variant set. N buckets are powers of two; rust pads each partition's local
+# vertex count up to the next bucket. Dim pairs cover the standard config
+# (f=64, hidden=64, classes=16) and the tiny test config (f=16, classes=4).
+
+N_BUCKETS = [256, 512, 1024, 2048, 4096]
+TINY_N = [256, 512]
+
+# (d_in, d_out, relu)
+GCN_DIMS = [(64, 64, True), (64, 16, False)]
+TINY_DIMS = [(16, 16, True), (16, 4, False)]
+
+
+def variants():
+    """Yield (name, kind, n, d_in, d_out, relu) for every artifact."""
+    for n in N_BUCKETS:
+        dim_sets = list(GCN_DIMS) + (list(TINY_DIMS) if n in TINY_N else [])
+        for kind in ("gcn_fwd", "gcn_bwd", "sage_fwd", "sage_bwd"):
+            for d_in, d_out, relu in dim_sets:
+                tag = "relu" if relu else "lin"
+                name = f"{kind}_n{n}_d{d_in}x{d_out}_{tag}"
+                yield name, kind, n, d_in, d_out, relu
+        for c in [16] + ([4] if n in TINY_N else []):
+            yield f"ce_grad_n{n}_c{c}", "ce_grad", n, c, c, False
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(kind, n, d_in, d_out, relu) -> str:
+    fn = model.unit_fn(kind, relu)
+    args = model.unit_args(kind, n, d_in, d_out)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    t0 = time.time()
+    count = 0
+    for name, kind, n, d_in, d_out, relu in variants():
+        entry = {
+            "name": name,
+            "kind": kind,
+            "n": n,
+            "d_in": d_in,
+            "d_out": d_out,
+            "relu": relu,
+            "file": f"{name}.hlo.txt",
+        }
+        manifest.append(entry)
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.out, entry["file"])
+        text = lower_one(kind, n, d_in, d_out, relu)
+        with open(path, "w") as f:
+            f.write(text)
+        count += 1
+        print(f"[{time.time() - t0:7.1f}s] {name} ({len(text) // 1024} KiB)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(
+            {"version": 1, "units": manifest, "n_buckets": N_BUCKETS}, f, indent=1
+        )
+    print(f"wrote {count} artifacts + manifest to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

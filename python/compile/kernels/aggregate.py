@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernel: the GNN aggregation hot-spot.
+
+The paper's hot-spot is SpMM over the (normalized) adjacency — on the TPU
+target this maps to a *blocked dense matmul* Â·H tiled for VMEM with
+``BlockSpec`` and fed to the MXU (DESIGN.md §Hardware-Adaptation). Padding
+rows/cols of Â are zero, so padded vertices contribute nothing.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel into plain HLO so the same
+artifact runs on the rust CPU client. Real-TPU performance is *estimated*
+from the VMEM footprint / MXU utilization (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU block sizes: 3 f32 tiles of ≤256x256 ≈ 768 KiB ≪ 16 MiB VMEM, leaving
+# room for double buffering. Used when CAPGNN_TPU_TILES=1 (compile-only
+# target) and by the VMEM/MXU estimates.
+BM = 256
+BN = 128
+BK = 256
+
+import os
+
+# CPU-interpret lowering uses whole-operand blocks by default: the CPU
+# backend has no VMEM constraint, and XLA 0.5.1 (the rust runtime) executes
+# the single-step kernel as one fused dot instead of a while-loop of
+# dynamic slices (§Perf L1 iteration log in EXPERIMENTS.md: 0.35 s → 1.5 ms
+# per unit at n=1024). Caps keep the single block bounded.
+CPU_BM_CAP = 8192
+CPU_BK_CAP = 8192
+CPU_BN_CAP = 512
+
+USE_TPU_TILES = os.environ.get("CAPGNN_TPU_TILES") == "1"
+
+
+def default_blocks(m: int, n: int, k: int):
+    """Block choice for lowering: TPU tiles under CAPGNN_TPU_TILES=1,
+    whole-matrix (capped) blocks for the CPU-interpret artifacts."""
+    if USE_TPU_TILES:
+        return BM, BN, BK
+    return min(m, CPU_BM_CAP), min(n, CPU_BN_CAP), min(k, CPU_BK_CAP)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm × bn) output tile: accumulate x_tile @ y_tile over the K grid
+    axis. Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) axis so the
+    accumulator tile stays resident in VMEM."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 0, bn: int = 0, bk: int = 0):
+    """Blocked Pallas matmul ``x @ y`` for f32 operands.
+
+    Block sizes default to [`default_blocks`]; shapes must divide evenly by
+    the (clamped) block sizes — the AOT path always pads to powers of two
+    ≥ 16, which all block choices divide.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    dbm, dbn, dbk = default_blocks(m, n, k)
+    bm = min(bm or dbm, m)
+    bn = min(bn or dbn, n)
+    bk = min(bk or dbk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def aggregate(a_hat, h):
+    """Aggregation Â·H — the paper's SpMM hot-spot as the L1 kernel."""
+    return matmul(a_hat, h)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """Estimated VMEM footprint of one grid step (x, y, o tiles, f32),
+    ×2 for double buffering of the input tiles."""
+    return 4 * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = BM, bn: int = BN, bk: int = BK) -> float:
+    """Fraction of MXU-issue slots doing useful work for an (m,k)x(k,n)
+    matmul: the MXU is a 128x128 systolic array, so utilization is the
+    product of each block dim's occupancy of its 128-multiple padding."""
+    def occ(dim, block):
+        eff = min(dim, block)
+        padded = ((eff + 127) // 128) * 128
+        return eff / padded
+
+    return occ(m, bm) * occ(n, bn) * occ(k, bk)

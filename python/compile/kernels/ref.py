@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernel and the per-layer model units.
+
+Everything here is the *specification*; ``aggregate.py`` (L1) and
+``model.py`` (L2) must match these to float tolerance. The rust
+NativeBackend mirrors these formulas a third time, giving a three-way
+cross-check (pytest: kernel↔ref; cargo test: native↔xla artifact).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def gcn_fwd_ref(a_hat, h, w, relu: bool):
+    """One GCN layer: act(Â · H · W)."""
+    z = a_hat @ h @ w
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def gcn_bwd_ref(a_hat, h, w, d_out, relu: bool):
+    """Backward of one GCN layer given dL/dH' (Z rematerialized).
+
+    Returns (gW, dH_in):
+      Z   = Â H W;  dZ = d_out ⊙ 1[Z>0] (or d_out if linear)
+      gW  = (Â H)ᵀ dZ
+      dH  = Âᵀ dZ Wᵀ
+    """
+    ah = a_hat @ h
+    z = ah @ w
+    dz = d_out * (z > 0.0) if relu else d_out
+    g_w = ah.T @ dz
+    d_h = a_hat.T @ (dz @ w.T)
+    return g_w, d_h
+
+
+def sage_fwd_ref(a_mean, h, w_self, w_neigh, relu: bool):
+    """GraphSAGE mean layer: act(H·Wself + (Ā·H)·Wneigh)."""
+    z = h @ w_self + (a_mean @ h) @ w_neigh
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def sage_bwd_ref(a_mean, h, w_self, w_neigh, d_out, relu: bool):
+    """Backward of one SAGE layer. Returns (gWself, gWneigh, dH_in)."""
+    ah = a_mean @ h
+    z = h @ w_self + ah @ w_neigh
+    dz = d_out * (z > 0.0) if relu else d_out
+    g_ws = h.T @ dz
+    g_wn = ah.T @ dz
+    d_h = dz @ w_self.T + a_mean.T @ (dz @ w_neigh.T)
+    return g_ws, g_wn, d_h
+
+
+def ce_grad_ref(logits, y, mask):
+    """Masked softmax cross-entropy.
+
+    Returns (loss, correct, dZ):
+      loss    = −Σ_mask y·log softmax(z) / Σ mask
+      correct = #(argmax z == argmax y) over mask
+      dZ      = (softmax(z) − y) · mask / Σ mask
+    """
+    m = mask.astype(jnp.float32)[:, None]
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.sum(y * logp * m) / n
+    p = jnp.exp(logp)
+    dz = (p - y) * m / n
+    pred_ok = (jnp.argmax(logits, axis=-1) == jnp.argmax(y, axis=-1)).astype(
+        jnp.float32
+    )
+    correct = jnp.sum(pred_ok * m[:, 0])
+    return loss, correct, dz

@@ -1,0 +1,101 @@
+"""Layer-2 JAX model: the per-layer GCN/GraphSAGE compute units the rust
+coordinator composes into distributed full-batch training.
+
+Each unit is a pure function over fixed shapes, lowered once by ``aot.py``.
+The *aggregation* product (Â·H — the paper's SpMM hot-spot) goes through
+the L1 Pallas kernel; the combination products (H·W) stay as jnp dots that
+XLA fuses. Halo exchange happens *between* these units, inside rust — that
+boundary is exactly where JACA lives (DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.aggregate import aggregate
+
+
+def gcn_fwd(a_hat, h, w, relu: bool):
+    """act(Â·H·W) with Pallas aggregation."""
+    ah = aggregate(a_hat, h)
+    z = ah @ w
+    return (jnp.maximum(z, 0.0) if relu else z,)
+
+
+def gcn_bwd(a_hat, h, w, d_out, relu: bool):
+    """(gW, dH_in); Z rematerialized (memory over recompute — §Perf L2)."""
+    ah = aggregate(a_hat, h)
+    z = ah @ w
+    dz = d_out * (z > 0.0) if relu else d_out
+    g_w = ah.T @ dz
+    # Âᵀ(dZ Wᵀ) is another aggregation product (Â is symmetric for GCN, but
+    # keep the transpose for generality with directed operators).
+    d_h = aggregate(a_hat.T, dz @ w.T)
+    return g_w, d_h
+
+
+def sage_fwd(a_mean, h, w_self, w_neigh, relu: bool):
+    ah = aggregate(a_mean, h)
+    z = h @ w_self + ah @ w_neigh
+    return (jnp.maximum(z, 0.0) if relu else z,)
+
+
+def sage_bwd(a_mean, h, w_self, w_neigh, d_out, relu: bool):
+    ah = aggregate(a_mean, h)
+    z = h @ w_self + ah @ w_neigh
+    dz = d_out * (z > 0.0) if relu else d_out
+    g_ws = h.T @ dz
+    g_wn = ah.T @ dz
+    d_h = dz @ w_self.T + aggregate(a_mean.T, dz @ w_neigh.T)
+    return g_ws, g_wn, d_h
+
+
+def ce_grad(logits, y, mask):
+    """Masked CE loss + correct-count + dZ (same math as the oracle; this
+    unit has no aggregation, so it is pure jnp)."""
+    return ref.ce_grad_ref(logits, y, mask)
+
+
+# ---------------------------------------------------------------------------
+# Shape specs used by aot.py and the tests.
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def unit_fn(kind: str, relu: bool):
+    """The lowering entry point for one unit kind."""
+    if kind == "gcn_fwd":
+        return lambda a, h, w: gcn_fwd(a, h, w, relu)
+    if kind == "gcn_bwd":
+        return lambda a, h, w, d: gcn_bwd(a, h, w, d, relu)
+    if kind == "sage_fwd":
+        return lambda a, h, ws, wn: sage_fwd(a, h, ws, wn, relu)
+    if kind == "sage_bwd":
+        return lambda a, h, ws, wn, d: sage_bwd(a, h, ws, wn, d, relu)
+    if kind == "ce_grad":
+        return ce_grad
+    raise ValueError(f"unknown unit kind {kind!r}")
+
+
+def unit_args(kind: str, n: int, d_in: int, d_out: int):
+    """Example (ShapeDtypeStruct) args for lowering one unit."""
+    a = spec((n, n))
+    if kind == "gcn_fwd":
+        return (a, spec((n, d_in)), spec((d_in, d_out)))
+    if kind == "gcn_bwd":
+        return (a, spec((n, d_in)), spec((d_in, d_out)), spec((n, d_out)))
+    if kind == "sage_fwd":
+        return (a, spec((n, d_in)), spec((d_in, d_out)), spec((d_in, d_out)))
+    if kind == "sage_bwd":
+        return (
+            a,
+            spec((n, d_in)),
+            spec((d_in, d_out)),
+            spec((d_in, d_out)),
+            spec((n, d_out)),
+        )
+    if kind == "ce_grad":
+        return (spec((n, d_out)), spec((n, d_out)), spec((n,)))
+    raise ValueError(f"unknown unit kind {kind!r}")

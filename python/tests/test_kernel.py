@@ -1,0 +1,92 @@
+"""L1 correctness: the Pallas aggregation kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases pin the block-edge behaviour.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aggregate import (
+    BK,
+    BM,
+    BN,
+    matmul,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+
+RNG = np.random.RandomState(1234)
+
+
+def rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+def assert_matches_ref(m, k, n, seed=0, **blocks):
+    x = rand((m, k), seed)
+    y = rand((k, n), seed + 1)
+    got = matmul(jnp.asarray(x), jnp.asarray(y), **blocks)
+    want = ref.matmul_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# Power-of-two dims ≥ 16 — exactly the shapes the AOT path produces.
+pow2 = st.sampled_from([16, 32, 64, 128, 256, 512])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=pow2, k=pow2, n=pow2, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref_hypothesis(m, k, n, seed):
+    assert_matches_ref(m, k, n, seed)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (256, 256, 64),   # single K block
+        (512, 512, 16),   # multi K block, narrow N
+        (BM, BK, BN),     # exactly one block
+        (2 * BM, 2 * BK, BN),  # multi-tile both grid axes
+        (16, 16, 16),     # smaller than every block (clamped)
+    ],
+)
+def test_matmul_block_edges(m, k, n):
+    assert_matches_ref(m, k, n)
+
+
+def test_matmul_custom_blocks():
+    assert_matches_ref(128, 128, 64, bm=32, bn=32, bk=32)
+    assert_matches_ref(128, 128, 64, bm=128, bn=64, bk=128)
+
+
+def test_matmul_rejects_ragged():
+    x = jnp.zeros((100, 64))
+    y = jnp.zeros((64, 64))
+    with pytest.raises(AssertionError):
+        matmul(x, y, bm=32)  # 100 not divisible by bm=32
+
+
+def test_matmul_zero_padding_rows():
+    # Padded vertices: zero rows/cols must contribute nothing.
+    a = np.zeros((64, 64), np.float32)
+    a[:32, :32] = rand((32, 32), 7)
+    h = rand((64, 16), 8)
+    h[32:] = 0.0
+    got = np.asarray(matmul(jnp.asarray(a), jnp.asarray(h)))
+    assert np.all(got[32:] == 0.0)
+    np.testing.assert_allclose(got[:32], a[:32] @ h, rtol=2e-4, atol=2e-4)
+
+
+def test_vmem_budget():
+    # Default blocks must fit comfortably in 16 MiB VMEM (double-buffered).
+    assert vmem_bytes() < 4 * 1024 * 1024
+
+
+def test_mxu_estimate_monotone():
+    # Full 128-multiples → utilization 1; shrinking a dim below 128 hurts.
+    assert mxu_utilization_estimate(256, 128, 256) == 1.0
+    assert mxu_utilization_estimate(256, 64, 256) == 0.5
+    assert mxu_utilization_estimate(256, 16, 256) == 0.125

@@ -1,0 +1,13 @@
+//! Bench target for the paper's Fig. 5 (edge-cut vs halo correlation).
+//! Prints the same rows/series the paper reports; timing via the
+//! hand-rolled harness (criterion unavailable offline — DESIGN.md S6).
+
+use capgnn::expt::{self, Ctx};
+use capgnn::util::bench::run_expt_bench;
+
+fn main() {
+    let ctx = if capgnn::util::bench::quick_mode() { Ctx::quick() } else { Ctx { scale: 0.5, epochs: 1, seed: 42 } };
+    run_expt_bench("fig5", || {
+        expt::motivation::fig5(ctx);
+    });
+}

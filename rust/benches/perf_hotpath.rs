@@ -1,0 +1,116 @@
+//! §Perf micro-benchmarks over the L3 hot paths: native matmul kernels,
+//! cache lookup/insert throughput, halo exchange round, partitioners, and
+//! the end-to-end epoch. These are *wallclock* benches (unlike the
+//! experiment drivers, which report simulated time) — the before/after log
+//! in EXPERIMENTS.md §Perf comes from here.
+
+use capgnn::cache::{PolicyKind, TwoLevelCache};
+use capgnn::comm::exchange::{ExchangeEngine, ExchangeParams};
+use capgnn::device::profile::{DeviceKind, Gpu};
+use capgnn::device::topology::Topology;
+use capgnn::graph::spec_by_name;
+use capgnn::partition::halo::build_plan;
+use capgnn::partition::Method;
+use capgnn::runtime::native::matmul;
+use capgnn::runtime::{Backend, NativeBackend};
+use capgnn::train::{train, TrainConfig};
+use capgnn::util::bench::run_bench;
+use capgnn::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // L3 kernel: dense matmul at trainer shapes.
+    for (n, k, m) in [(1024usize, 1024usize, 64usize), (512, 512, 64)] {
+        let x: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; n * m];
+        run_bench(&format!("native_matmul_{n}x{k}x{m}"), || {
+            matmul(n, k, m, &x, &y, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // Sparse-style matmul (zero-skipping path) at adjacency density ~1%.
+    {
+        let n = 1024usize;
+        let mut a = vec![0.0f32; n * n];
+        for _ in 0..(n * n / 100) {
+            let i = rng.index(n);
+            let j = rng.index(n);
+            a[i * n + j] = 0.5;
+        }
+        let h: Vec<f32> = (0..n * 64).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; n * 64];
+        run_bench("native_aggregation_sparse_1pct_1024", || {
+            matmul(n, n, 64, &a, &h, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // Cache throughput.
+    {
+        let mut cache = TwoLevelCache::new(PolicyKind::Jaca, &[4096; 4], 16384);
+        for k in 0..16384u64 {
+            cache.set_priority((k % 4) as usize, k, (k % 7) as u32 + 1);
+        }
+        run_bench("cache_lookup_fill_16k", || {
+            for k in 0..16384u64 {
+                let w = (k % 4) as usize;
+                if cache.lookup(w, k) == capgnn::cache::twolevel::Hit::Miss {
+                    cache.fill(w, k, vec![1.0; 16], 0);
+                }
+            }
+        });
+    }
+
+    // Partitioners on the Reddit twin.
+    let ds = spec_by_name("Rt").unwrap().build_scaled(42, 0.5);
+    for method in [Method::Metis, Method::Fennel, Method::Random] {
+        run_bench(&format!("partition_{}_rt", method.name()), || {
+            let mut r = Rng::new(3);
+            std::hint::black_box(method.partition(&ds.graph, 4, &mut r));
+        });
+    }
+
+    // One halo-exchange round.
+    {
+        let mut r = Rng::new(4);
+        let ps = Method::Metis.partition(&ds.graph, 4, &mut r);
+        let plan = build_plan(&ds.graph, &ps);
+        let gpus: Vec<Gpu> = (0..4).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut r)).collect();
+        let topo = Topology::pcie_pairs(4);
+        let eng = ExchangeEngine::new(&gpus, &topo);
+        let caps: Vec<usize> = plan.parts.iter().map(|p| p.n_halo()).collect();
+        let total = caps.iter().sum();
+        let mut cache = TwoLevelCache::new(PolicyKind::Jaca, &caps, total);
+        run_bench("halo_exchange_round_rt", || {
+            let rep = eng.exchange(
+                &plan,
+                &mut cache,
+                ExchangeParams::new(0, 0, 64),
+                |v| vec![v as f32; 64],
+                |_, _, row| {
+                    std::hint::black_box(row);
+                },
+            );
+            std::hint::black_box(rep.bytes_moved);
+        });
+    }
+
+    // End-to-end epoch (native backend), the trainer hot loop.
+    {
+        let gpus: Vec<Gpu> = {
+            let mut r = Rng::new(5);
+            (0..4).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut r)).collect()
+        };
+        let topo = Topology::pcie_pairs(4);
+        let cfg = TrainConfig { epochs: 1, ..TrainConfig::capgnn(1) };
+        let mut backend = NativeBackend::new();
+        run_bench("train_epoch_rt_x4_native", || {
+            let rep = train(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
+            std::hint::black_box(rep.total_time());
+        });
+        let _ = backend.name();
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench target for the paper's Table 9 (distributed extension).
+//! Prints the same rows/series the paper reports; timing via the
+//! hand-rolled harness (criterion unavailable offline — DESIGN.md S6).
+
+use capgnn::expt::{self, Ctx};
+use capgnn::util::bench::run_expt_bench;
+
+fn main() {
+    let ctx = if capgnn::util::bench::quick_mode() { Ctx::quick() } else { Ctx { scale: 0.25, epochs: 12, seed: 42 } };
+    run_expt_bench("tab9", || {
+        expt::overall::tab9(ctx);
+    });
+}

@@ -1,0 +1,161 @@
+//! Adaptive cache capacity — paper Algorithm 1 (`cal_capacity`).
+//!
+//! Derives the per-GPU local-cache capacities and the CPU global-cache
+//! capacity from subgraph halo sizes, per-layer feature dimensions, and
+//! available/reserved memory.
+
+use crate::partition::SubgraphPlan;
+
+/// Inputs of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct CapacityInput {
+    /// Top-k halo vertices to consider per part (k = usize::MAX for all —
+    /// the paper's k = -1).
+    pub top_k: usize,
+    /// Available GPU memory per part, MiB.
+    pub gpu_mem_mib: Vec<f64>,
+    /// Reserved GPU memory, MiB.
+    pub gpu_reserved_mib: f64,
+    /// Available CPU memory, MiB.
+    pub cpu_mem_mib: f64,
+    /// Reserved CPU memory, MiB.
+    pub cpu_reserved_mib: f64,
+    /// Per-layer feature dimensions `f_dim[k]` (bytes per cached row is
+    /// Σ f_dim[k]·4 — a vertex row is cached at every layer).
+    pub layer_dims: Vec<usize>,
+}
+
+/// Outputs of Algorithm 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheCapacity {
+    /// Local (GPU) capacity per part, in vertices.
+    pub gpu: Vec<usize>,
+    /// Global (CPU) capacity, in vertices.
+    pub cpu: usize,
+}
+
+/// Bytes to cache one vertex across all layers.
+pub fn row_bytes(layer_dims: &[usize]) -> usize {
+    layer_dims.iter().map(|d| d * 4).sum()
+}
+
+/// Algorithm 1. GPU capacity is `min(free-memory / row-bytes, |Hᵢ|)`; CPU
+/// capacity is `min(free-cpu-memory / row-bytes, |∪ᵢ Hᵢ|)`.
+pub fn cal_capacity(plan: &SubgraphPlan, input: &CapacityInput) -> CacheCapacity {
+    let per_row = row_bytes(&input.layer_dims).max(1) as f64;
+    assert_eq!(input.gpu_mem_mib.len(), plan.parts.len());
+
+    let mut gpu = Vec::with_capacity(plan.parts.len());
+    let mut union: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    for (i, part) in plan.parts.iter().enumerate() {
+        // Top-k halo vertices by overlap ratio.
+        let mut halos: Vec<(u32, u32)> = part
+            .halo_ids()
+            .iter()
+            .zip(&part.halo_overlap)
+            .map(|(&v, &r)| (r, v))
+            .collect();
+        halos.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        halos.truncate(input.top_k);
+        for &(_, v) in &halos {
+            union.insert(v);
+        }
+        let free_bytes = ((input.gpu_mem_mib[i] - input.gpu_reserved_mib).max(0.0)) * 1024.0 * 1024.0;
+        let cap = (free_bytes / per_row).floor() as usize;
+        gpu.push(cap.min(halos.len()));
+    }
+    let free_cpu = ((input.cpu_mem_mib - input.cpu_reserved_mib).max(0.0)) * 1024.0 * 1024.0;
+    let cpu_cap = (free_cpu / per_row).floor() as usize;
+    CacheCapacity { gpu, cpu: cpu_cap.min(union.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::sbm;
+    use crate::partition::{halo::build_plan, Method};
+    use crate::util::Rng;
+
+    fn plan() -> SubgraphPlan {
+        let mut rng = Rng::new(81);
+        let (g, _) = sbm(400, 4, 8.0, 4.0, &mut rng);
+        let ps = Method::Metis.partition(&g, 4, &mut rng);
+        build_plan(&g, &ps)
+    }
+
+    fn base_input(parts: usize) -> CapacityInput {
+        CapacityInput {
+            top_k: usize::MAX,
+            gpu_mem_mib: vec![64.0; parts],
+            gpu_reserved_mib: 1.0,
+            cpu_mem_mib: 512.0,
+            cpu_reserved_mib: 8.0,
+            layer_dims: vec![64, 32, 16],
+        }
+    }
+
+    #[test]
+    fn row_bytes_sums_layers() {
+        assert_eq!(row_bytes(&[64, 32, 16]), (64 + 32 + 16) * 4);
+    }
+
+    #[test]
+    fn capped_by_halo_size() {
+        let p = plan();
+        let cap = cal_capacity(&p, &base_input(4));
+        for (i, part) in p.parts.iter().enumerate() {
+            assert!(cap.gpu[i] <= part.n_halo());
+        }
+        // Plenty of memory → exactly halo-sized.
+        for (i, part) in p.parts.iter().enumerate() {
+            assert_eq!(cap.gpu[i], part.n_halo());
+        }
+    }
+
+    #[test]
+    fn capped_by_memory() {
+        let p = plan();
+        let mut input = base_input(4);
+        // row = 448 bytes; 1 MiB free − 0.9 reserved ≈ 0.1 MiB → ~234 rows.
+        input.gpu_mem_mib = vec![1.0; 4];
+        input.gpu_reserved_mib = 0.9;
+        let cap = cal_capacity(&p, &input);
+        for (i, part) in p.parts.iter().enumerate() {
+            assert!(cap.gpu[i] <= 235);
+            assert!(cap.gpu[i] <= part.n_halo());
+        }
+    }
+
+    #[test]
+    fn top_k_limits_candidates() {
+        let p = plan();
+        let mut input = base_input(4);
+        input.top_k = 5;
+        let cap = cal_capacity(&p, &input);
+        assert!(cap.gpu.iter().all(|&c| c <= 5));
+        assert!(cap.cpu <= 20);
+    }
+
+    #[test]
+    fn cpu_capped_by_union() {
+        let p = plan();
+        let cap = cal_capacity(&p, &base_input(4));
+        let union: std::collections::HashSet<u32> = p
+            .parts
+            .iter()
+            .flat_map(|part| part.halo_ids().iter().copied())
+            .collect();
+        assert_eq!(cap.cpu, union.len());
+    }
+
+    #[test]
+    fn zero_memory_zero_capacity() {
+        let p = plan();
+        let mut input = base_input(4);
+        input.gpu_mem_mib = vec![0.0; 4];
+        input.cpu_mem_mib = 0.0;
+        let cap = cal_capacity(&p, &input);
+        assert!(cap.gpu.iter().all(|&c| c == 0));
+        assert_eq!(cap.cpu, 0);
+    }
+}

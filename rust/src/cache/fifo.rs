@@ -1,0 +1,115 @@
+//! FIFO replacement — baseline of Figs. 15/16 (as in BGL's base strategy).
+
+use super::CachePolicy;
+use std::collections::{HashSet, VecDeque};
+
+pub struct FifoCache {
+    capacity: usize,
+    queue: VecDeque<u64>,
+    set: HashSet<u64>,
+}
+
+impl FifoCache {
+    pub fn new(capacity: usize) -> FifoCache {
+        FifoCache {
+            capacity,
+            queue: VecDeque::with_capacity(capacity),
+            set: HashSet::with_capacity(capacity),
+        }
+    }
+}
+
+impl CachePolicy for FifoCache {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.set.contains(&key)
+    }
+
+    fn touch(&mut self, _key: u64) {
+        // FIFO ignores recency.
+    }
+
+    fn insert(&mut self, key: u64) -> Option<u64> {
+        if self.capacity == 0 {
+            return Some(key);
+        }
+        if self.set.contains(&key) {
+            return None;
+        }
+        let evicted = if self.set.len() >= self.capacity {
+            // Evict oldest still-resident entry.
+            loop {
+                match self.queue.pop_front() {
+                    Some(old) if self.set.remove(&old) => break Some(old),
+                    Some(_) => continue, // stale queue entry (removed key)
+                    None => break None,
+                }
+            }
+        } else {
+            None
+        };
+        self.set.insert(key);
+        self.queue.push_back(key);
+        evicted
+    }
+
+    fn remove(&mut self, key: u64) {
+        self.set.remove(&key);
+        // Queue entry becomes stale; skipped at eviction time.
+    }
+
+    fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_oldest() {
+        let mut c = FifoCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert_eq!(c.insert(3), Some(1));
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn touch_does_not_protect() {
+        let mut c = FifoCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        c.touch(1); // irrelevant for FIFO
+        assert_eq!(c.insert(3), Some(1));
+    }
+
+    #[test]
+    fn duplicate_insert_noop() {
+        let mut c = FifoCache::new(2);
+        c.insert(1);
+        assert_eq!(c.insert(1), None);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn remove_then_insert_uses_free_slot() {
+        let mut c = FifoCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        c.remove(1);
+        assert_eq!(c.insert(3), None); // no eviction needed
+        assert_eq!(c.len(), 2);
+        // Next eviction must skip stale entry for 1 and evict 2.
+        assert_eq!(c.insert(4), Some(2));
+    }
+}

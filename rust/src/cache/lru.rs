@@ -1,0 +1,127 @@
+//! LRU replacement — classic baseline of Figs. 15/16.
+
+use super::CachePolicy;
+use std::collections::{BTreeSet, HashMap};
+
+pub struct LruCache {
+    capacity: usize,
+    /// key → last-use tick
+    last_use: HashMap<u64, u64>,
+    /// (tick, key) ordered ascending — front is least recent.
+    order: BTreeSet<(u64, u64)>,
+    tick: u64,
+}
+
+impl LruCache {
+    pub fn new(capacity: usize) -> LruCache {
+        LruCache {
+            capacity,
+            last_use: HashMap::with_capacity(capacity),
+            order: BTreeSet::new(),
+            tick: 0,
+        }
+    }
+
+    fn bump(&mut self, key: u64) {
+        self.tick += 1;
+        if let Some(old) = self.last_use.insert(key, self.tick) {
+            self.order.remove(&(old, key));
+        }
+        self.order.insert((self.tick, key));
+    }
+}
+
+impl CachePolicy for LruCache {
+    fn name(&self) -> &'static str {
+        "LRU"
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.last_use.contains_key(&key)
+    }
+
+    fn touch(&mut self, key: u64) {
+        if self.last_use.contains_key(&key) {
+            self.bump(key);
+        }
+    }
+
+    fn insert(&mut self, key: u64) -> Option<u64> {
+        if self.capacity == 0 {
+            return Some(key);
+        }
+        if self.last_use.contains_key(&key) {
+            self.bump(key);
+            return None;
+        }
+        let evicted = if self.last_use.len() >= self.capacity {
+            let &(tick, victim) = self.order.iter().next().unwrap();
+            self.order.remove(&(tick, victim));
+            self.last_use.remove(&victim);
+            Some(victim)
+        } else {
+            None
+        };
+        self.bump(key);
+        evicted
+    }
+
+    fn remove(&mut self, key: u64) {
+        if let Some(tick) = self.last_use.remove(&key) {
+            self.order.remove(&(tick, key));
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.last_use.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recent() {
+        let mut c = LruCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        c.touch(1); // 2 is now least recent
+        assert_eq!(c.insert(3), Some(2));
+        assert!(c.contains(1) && c.contains(3));
+    }
+
+    #[test]
+    fn reinsert_refreshes() {
+        let mut c = LruCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        c.insert(1); // refresh 1
+        assert_eq!(c.insert(3), Some(2));
+    }
+
+    #[test]
+    fn remove_frees_slot() {
+        let mut c = LruCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        c.remove(1);
+        assert_eq!(c.insert(3), None);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn internal_order_consistent() {
+        let mut c = LruCache::new(3);
+        for k in 0..10u64 {
+            c.insert(k);
+            assert_eq!(c.order.len(), c.last_use.len());
+            assert!(c.len() <= 3);
+        }
+        assert!(c.contains(9) && c.contains(8) && c.contains(7));
+    }
+}

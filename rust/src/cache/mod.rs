@@ -1,0 +1,144 @@
+//! JACA — Joint Adaptive Caching Algorithm (paper §4.2) plus the FIFO/LRU
+//! baselines, all behind one [`CachePolicy`] interface and composed into
+//! the two-level (GPU-local + CPU-global) structure of Fig. 9.
+//!
+//! Keys are `u64`; the trainer encodes `(layer << 32) | vertex` so input
+//! features and per-layer intermediate embeddings share one cache, exactly
+//! as the paper's "vertex features" terminology collects both.
+
+pub mod capacity;
+pub mod fifo;
+pub mod jaca;
+pub mod lru;
+pub mod store;
+pub mod twolevel;
+
+pub use capacity::{cal_capacity, CacheCapacity, CapacityInput};
+pub use store::FeatureStore;
+pub use twolevel::{TwoLevelCache, TwoLevelStats};
+
+/// Cache replacement policy over u64 keys.
+pub trait CachePolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Is `key` resident? Does not mutate recency (use [`Self::touch`]).
+    fn contains(&self, key: u64) -> bool;
+    /// Record an access to a resident key (recency/frequency update).
+    fn touch(&mut self, key: u64);
+    /// Insert `key`; returns the evicted key if one was displaced, or
+    /// `None`. Policies may *refuse* (return `Some(key)` echoing the input)
+    /// when the key is lower priority than everything resident (JACA).
+    fn insert(&mut self, key: u64) -> Option<u64>;
+    /// Remove a key if resident.
+    fn remove(&mut self, key: u64);
+    fn len(&self) -> usize;
+    fn capacity(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Hint the static priority of a key (vertex overlap ratio for JACA).
+    /// Default: ignored.
+    fn set_priority(&mut self, _key: u64, _priority: u32) {}
+}
+
+/// Which policy to instantiate (benches sweep this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Jaca,
+    Fifo,
+    Lru,
+}
+
+impl PolicyKind {
+    pub fn build(self, capacity: usize) -> Box<dyn CachePolicy> {
+        match self {
+            PolicyKind::Jaca => Box::new(jaca::JacaCache::new(capacity)),
+            PolicyKind::Fifo => Box::new(fifo::FifoCache::new(capacity)),
+            PolicyKind::Lru => Box::new(lru::LruCache::new(capacity)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Jaca => "JACA",
+            PolicyKind::Fifo => "FIFO",
+            PolicyKind::Lru => "LRU",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "jaca" => Some(PolicyKind::Jaca),
+            "fifo" => Some(PolicyKind::Fifo),
+            "lru" => Some(PolicyKind::Lru),
+            _ => None,
+        }
+    }
+}
+
+/// Encode a (layer, vertex) cache key.
+#[inline]
+pub fn key_of(layer: u32, vertex: u32) -> u64 {
+    ((layer as u64) << 32) | vertex as u64
+}
+
+/// Decode a cache key.
+#[inline]
+pub fn vertex_of(key: u64) -> u32 {
+    (key & 0xFFFF_FFFF) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_roundtrip() {
+        let k = key_of(3, 12345);
+        assert_eq!(vertex_of(k), 12345);
+        assert_eq!(k >> 32, 3);
+    }
+
+    #[test]
+    fn builders() {
+        for kind in [PolicyKind::Jaca, PolicyKind::Fifo, PolicyKind::Lru] {
+            let c = kind.build(4);
+            assert_eq!(c.capacity(), 4);
+            assert_eq!(c.len(), 0);
+            assert!(c.is_empty());
+        }
+        assert_eq!(PolicyKind::from_name("lru"), Some(PolicyKind::Lru));
+        assert_eq!(PolicyKind::from_name("x"), None);
+    }
+
+    /// Shared behavioural checks across all policies.
+    fn basic_contract(kind: PolicyKind) {
+        let mut c = kind.build(2);
+        assert!(c.insert(1).is_none());
+        assert!(c.insert(2).is_none());
+        assert!(c.contains(1) && c.contains(2));
+        assert_eq!(c.len(), 2);
+        // Inserting a third key evicts (or refuses) — len stays ≤ cap.
+        let _ = c.insert(3);
+        assert!(c.len() <= 2);
+        c.remove(2);
+        assert!(!c.contains(2));
+        assert!(c.len() <= 1);
+    }
+
+    #[test]
+    fn all_policies_respect_capacity() {
+        basic_contract(PolicyKind::Jaca);
+        basic_contract(PolicyKind::Fifo);
+        basic_contract(PolicyKind::Lru);
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        for kind in [PolicyKind::Jaca, PolicyKind::Fifo, PolicyKind::Lru] {
+            let mut c = kind.build(0);
+            let _ = c.insert(9);
+            assert_eq!(c.len(), 0);
+            assert!(!c.contains(9));
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! StoreEngine — unified memory management under JACA (paper Fig. 7/9).
+//!
+//! Holds the actual f32 rows behind cache keys: a hash-indexed feature
+//! table ("hash-based feature retrieval" after decoupling structure from
+//! features), with byte accounting for the per-GPU *pinned* regions and
+//! the CPU *shared* region. The simulated pinned/shared distinction feeds
+//! the comm model: pinned-region transfers are DMA/asynchronous (overlap
+//! eligible), pageable ones are synchronous.
+
+use std::collections::HashMap;
+
+/// A hash-indexed table of f32 rows (one per cache key).
+#[derive(Clone, Debug, Default)]
+pub struct FeatureStore {
+    rows: HashMap<u64, Vec<f32>>,
+    bytes: usize,
+    /// Generation tag per row — the epoch the row was written (staleness
+    /// tracking for the bounded-staleness refresh).
+    written_at: HashMap<u64, u64>,
+}
+
+impl FeatureStore {
+    pub fn new() -> FeatureStore {
+        FeatureStore::default()
+    }
+
+    pub fn put(&mut self, key: u64, row: Vec<f32>, epoch: u64) {
+        self.bytes += row.len() * 4;
+        if let Some(old) = self.rows.insert(key, row) {
+            self.bytes -= old.len() * 4;
+        }
+        self.written_at.insert(key, epoch);
+    }
+
+    pub fn get(&self, key: u64) -> Option<&[f32]> {
+        self.rows.get(&key).map(|r| r.as_slice())
+    }
+
+    /// Epoch at which the row was written (staleness = now − written_at).
+    pub fn age(&self, key: u64, now: u64) -> Option<u64> {
+        self.written_at.get(&key).map(|&w| now.saturating_sub(w))
+    }
+
+    pub fn remove(&mut self, key: u64) {
+        if let Some(old) = self.rows.remove(&key) {
+            self.bytes -= old.len() * 4;
+        }
+        self.written_at.remove(&key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.written_at.clear();
+        self.bytes = 0;
+    }
+}
+
+/// Byte accounting for the pinned-per-GPU + shared regions (Fig. 3 upper
+/// half). Purely bookkeeping — the simulation charges different transfer
+/// costs depending on which region a row lives in.
+#[derive(Clone, Debug)]
+pub struct MemoryRegions {
+    /// Pinned region bytes per GPU.
+    pub pinned: Vec<usize>,
+    pub pinned_limit: usize,
+    /// Shared (global cache) bytes.
+    pub shared: usize,
+    pub shared_limit: usize,
+}
+
+impl MemoryRegions {
+    pub fn new(num_gpus: usize, pinned_limit: usize, shared_limit: usize) -> MemoryRegions {
+        MemoryRegions {
+            pinned: vec![0; num_gpus],
+            pinned_limit,
+            shared: 0,
+            shared_limit,
+        }
+    }
+
+    /// Try to reserve pinned bytes for `gpu`; false if the region is full
+    /// (transfer falls back to pageable = synchronous).
+    pub fn reserve_pinned(&mut self, gpu: usize, bytes: usize) -> bool {
+        if self.pinned[gpu] + bytes <= self.pinned_limit {
+            self.pinned[gpu] += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release_pinned(&mut self, gpu: usize, bytes: usize) {
+        self.pinned[gpu] = self.pinned[gpu].saturating_sub(bytes);
+    }
+
+    pub fn reserve_shared(&mut self, bytes: usize) -> bool {
+        if self.shared + bytes <= self.shared_limit {
+            self.shared += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release_shared(&mut self, bytes: usize) {
+        self.shared = self.shared.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_bytes() {
+        let mut s = FeatureStore::new();
+        s.put(1, vec![1.0; 8], 0);
+        assert_eq!(s.bytes(), 32);
+        assert_eq!(s.get(1).unwrap().len(), 8);
+        s.put(1, vec![2.0; 4], 1); // overwrite shrinks
+        assert_eq!(s.bytes(), 16);
+        s.remove(1);
+        assert_eq!(s.bytes(), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn age_tracks_epochs() {
+        let mut s = FeatureStore::new();
+        s.put(5, vec![0.0; 2], 3);
+        assert_eq!(s.age(5, 10), Some(7));
+        assert_eq!(s.age(5, 2), Some(0)); // saturates
+        assert_eq!(s.age(6, 10), None);
+    }
+
+    #[test]
+    fn pinned_region_limits() {
+        let mut r = MemoryRegions::new(2, 100, 50);
+        assert!(r.reserve_pinned(0, 60));
+        assert!(!r.reserve_pinned(0, 60));
+        assert!(r.reserve_pinned(1, 60)); // independent per GPU
+        r.release_pinned(0, 60);
+        assert!(r.reserve_pinned(0, 100));
+    }
+
+    #[test]
+    fn shared_region_limits() {
+        let mut r = MemoryRegions::new(1, 10, 50);
+        assert!(r.reserve_shared(50));
+        assert!(!r.reserve_shared(1));
+        r.release_shared(25);
+        assert!(r.reserve_shared(25));
+    }
+}

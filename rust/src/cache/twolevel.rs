@@ -1,0 +1,290 @@
+//! The two-level joint cache of Fig. 9: a per-GPU *local cache* backed by
+//! device memory and one software-managed *global cache* in CPU shared
+//! memory, coordinated so that a halo row found in either level is never
+//! re-sent by its owner.
+
+use super::store::FeatureStore;
+use super::{CachePolicy, PolicyKind};
+
+/// Where a lookup was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hit {
+    /// Resident in the requesting GPU's local cache.
+    Local,
+    /// Resident in the CPU global cache (H2D copy to use).
+    Global,
+    /// Not cached — must be communicated from the owner.
+    Miss,
+}
+
+/// Counters the cache experiments report.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TwoLevelStats {
+    pub checks: u64,
+    pub local_hits: u64,
+    pub global_hits: u64,
+    pub misses: u64,
+    pub local_evictions: u64,
+    pub global_evictions: u64,
+    pub local_refusals: u64,
+    pub fills: u64,
+}
+
+impl TwoLevelStats {
+    /// Overall hit rate (local + global).
+    pub fn hit_rate(&self) -> f64 {
+        if self.checks == 0 {
+            0.0
+        } else {
+            (self.local_hits + self.global_hits) as f64 / self.checks as f64
+        }
+    }
+    pub fn local_hit_rate(&self) -> f64 {
+        if self.checks == 0 {
+            0.0
+        } else {
+            self.local_hits as f64 / self.checks as f64
+        }
+    }
+}
+
+/// Two-level cache over `P` workers.
+pub struct TwoLevelCache {
+    pub kind: PolicyKind,
+    locals: Vec<Box<dyn CachePolicy>>,
+    global: Box<dyn CachePolicy>,
+    local_store: Vec<FeatureStore>,
+    global_store: FeatureStore,
+    pub stats: TwoLevelStats,
+}
+
+impl TwoLevelCache {
+    pub fn new(kind: PolicyKind, local_caps: &[usize], global_cap: usize) -> TwoLevelCache {
+        TwoLevelCache {
+            kind,
+            locals: local_caps.iter().map(|&c| kind.build(c)).collect(),
+            global: kind.build(global_cap),
+            local_store: local_caps.iter().map(|_| FeatureStore::new()).collect(),
+            global_store: FeatureStore::new(),
+            stats: TwoLevelStats::default(),
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.locals.len()
+    }
+
+    pub fn local_len(&self, w: usize) -> usize {
+        self.locals[w].len()
+    }
+
+    pub fn global_len(&self) -> usize {
+        self.global.len()
+    }
+
+    /// Hint JACA priorities (vertex overlap ratios) for a worker's halo.
+    pub fn set_priority(&mut self, worker: usize, key: u64, priority: u32) {
+        self.locals[worker].set_priority(key, priority);
+        self.global.set_priority(key, priority);
+    }
+
+    /// Look `key` up for `worker`, promoting global hits into the local
+    /// cache (the prefetch path of Fig. 9).
+    pub fn lookup(&mut self, worker: usize, key: u64) -> Hit {
+        self.stats.checks += 1;
+        if self.locals[worker].contains(key) {
+            self.locals[worker].touch(key);
+            self.stats.local_hits += 1;
+            return Hit::Local;
+        }
+        if self.global.contains(key) {
+            self.global.touch(key);
+            self.stats.global_hits += 1;
+            // Promote into the local cache (prefetch H2D).
+            if let Some(row) = self.global_store.get(key).map(|r| r.to_vec()) {
+                let epoch = self.global_store.age(key, u64::MAX).unwrap_or(0);
+                self.insert_local(worker, key, row, u64::MAX - epoch);
+            }
+            return Hit::Global;
+        }
+        self.stats.misses += 1;
+        Hit::Miss
+    }
+
+    /// Non-mutating residency probe (no stats, no promotion). Used by the
+    /// *sender-side* dedup check: "before sending features, a worker first
+    /// checks whether the vertices are already present".
+    pub fn resident_anywhere(&self, worker: usize, key: u64) -> bool {
+        self.locals[worker].contains(key) || self.global.contains(key)
+    }
+
+    /// Row behind a key as seen by `worker` (local first, then global).
+    pub fn get_row(&self, worker: usize, key: u64) -> Option<&[f32]> {
+        self.local_store[worker]
+            .get(key)
+            .or_else(|| self.global_store.get(key))
+    }
+
+    /// Age (in epochs) of the freshest cached copy.
+    pub fn age(&self, worker: usize, key: u64, now: u64) -> Option<u64> {
+        match (
+            self.local_store[worker].age(key, now),
+            self.global_store.age(key, now),
+        ) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn insert_local(&mut self, worker: usize, key: u64, row: Vec<f32>, epoch: u64) {
+        match self.locals[worker].insert(key) {
+            Some(victim) if victim == key => {
+                self.stats.local_refusals += 1;
+            }
+            Some(victim) => {
+                self.stats.local_evictions += 1;
+                self.local_store[worker].remove(victim);
+                self.local_store[worker].put(key, row, epoch);
+            }
+            None => {
+                self.local_store[worker].put(key, row, epoch);
+            }
+        }
+    }
+
+    fn insert_global(&mut self, key: u64, row: Vec<f32>, epoch: u64) {
+        match self.global.insert(key) {
+            Some(victim) if victim == key => {}
+            Some(victim) => {
+                self.stats.global_evictions += 1;
+                self.global_store.remove(victim);
+                self.global_store.put(key, row, epoch);
+            }
+            None => {
+                self.global_store.put(key, row, epoch);
+            }
+        }
+    }
+
+    /// Fill after a miss (or a refresh): store the row for `worker` and
+    /// publish it to the global cache for the other workers.
+    pub fn fill(&mut self, worker: usize, key: u64, row: Vec<f32>, epoch: u64) {
+        self.stats.fills += 1;
+        self.insert_global(key, row.clone(), epoch);
+        self.insert_local(worker, key, row, epoch);
+    }
+
+    /// Update a cached row in place wherever it is resident (lightweight
+    /// vertex update — no eviction churn).
+    pub fn refresh(&mut self, key: u64, row: &[f32], epoch: u64) {
+        if self.global.contains(key) {
+            self.global_store.put(key, row.to_vec(), epoch);
+        }
+        for (w, local) in self.locals.iter().enumerate() {
+            if local.contains(key) {
+                self.local_store[w].put(key, row.to_vec(), epoch);
+            }
+        }
+    }
+
+    /// Drop everything (between runs).
+    pub fn clear(&mut self) {
+        let caps: Vec<usize> = self.locals.iter().map(|l| l.capacity()).collect();
+        let global_cap = self.global.capacity();
+        self.locals = caps.iter().map(|&c| self.kind.build(c)).collect();
+        self.global = self.kind.build(global_cap);
+        for s in &mut self.local_store {
+            s.clear();
+        }
+        self.global_store.clear();
+        self.stats = TwoLevelStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(kind: PolicyKind) -> TwoLevelCache {
+        TwoLevelCache::new(kind, &[2, 2], 4)
+    }
+
+    #[test]
+    fn miss_fill_hit_cycle() {
+        let mut c = cache(PolicyKind::Lru);
+        assert_eq!(c.lookup(0, 7), Hit::Miss);
+        c.fill(0, 7, vec![1.0, 2.0], 0);
+        assert_eq!(c.lookup(0, 7), Hit::Local);
+        assert_eq!(c.get_row(0, 7).unwrap(), &[1.0, 2.0]);
+        // Worker 1 finds it in the global cache.
+        assert_eq!(c.lookup(1, 7), Hit::Global);
+        // …and it was promoted into worker 1's local cache.
+        assert_eq!(c.lookup(1, 7), Hit::Local);
+        assert_eq!(c.stats.local_hits, 2);
+        assert_eq!(c.stats.global_hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut c = cache(PolicyKind::Fifo);
+        c.fill(0, 1, vec![0.0], 0);
+        c.lookup(0, 1);
+        c.lookup(0, 2);
+        assert!((c.stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_eviction_removes_row() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill(0, 1, vec![1.0], 0);
+        c.fill(0, 2, vec![2.0], 0);
+        c.fill(0, 3, vec![3.0], 0); // local cap 2 → evicts key 1 locally
+        assert!(c.stats.local_evictions >= 1);
+        // Key 1 should still be in the global cache (cap 4).
+        assert_eq!(c.lookup(0, 1), Hit::Global);
+    }
+
+    #[test]
+    fn jaca_refuses_cold_keys_locally() {
+        let mut c = cache(PolicyKind::Jaca);
+        c.set_priority(0, 1, 5);
+        c.set_priority(0, 2, 5);
+        c.set_priority(0, 9, 1);
+        c.fill(0, 1, vec![1.0], 0);
+        c.fill(0, 2, vec![2.0], 0);
+        c.fill(0, 9, vec![9.0], 0); // refused locally, kept globally
+        assert!(c.stats.local_refusals >= 1);
+        assert_eq!(c.lookup(0, 9), Hit::Global);
+        assert_eq!(c.lookup(0, 1), Hit::Local);
+    }
+
+    #[test]
+    fn refresh_updates_resident_copies() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill(0, 5, vec![1.0], 0);
+        c.refresh(5, &[9.0], 1);
+        assert_eq!(c.get_row(0, 5).unwrap(), &[9.0]);
+        // Refresh of non-resident key is a no-op.
+        c.refresh(77, &[1.0], 1);
+        assert_eq!(c.lookup(1, 77), Hit::Miss);
+    }
+
+    #[test]
+    fn resident_anywhere_is_pure() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill(0, 3, vec![1.0], 0);
+        let checks = c.stats.checks;
+        assert!(c.resident_anywhere(1, 3)); // global
+        assert_eq!(c.stats.checks, checks);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill(0, 1, vec![1.0], 0);
+        c.clear();
+        assert_eq!(c.stats, TwoLevelStats::default());
+        assert_eq!(c.lookup(0, 1), Hit::Miss);
+    }
+}

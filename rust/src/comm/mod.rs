@@ -1,0 +1,10 @@
+//! Communication engine: the all-to-all halo feature exchange with the
+//! JACA cache on the send/receive path, byte accounting, and the pipeline
+//! overlap model.
+
+pub mod exchange;
+pub mod pipeline;
+pub mod queues;
+
+pub use exchange::{CommCosts, ExchangeEngine, ExchangeReport};
+pub use pipeline::combine_epoch;

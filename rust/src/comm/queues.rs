@@ -1,0 +1,126 @@
+//! The three pipeline queues of §4.2 ("Pipeline Design"): each worker has
+//! a *local queue* (global→local cache pulls) and a *prefetch queue*
+//! (push-ahead to a designated worker); one *global queue* funnels
+//! publishes into the global cache.
+//!
+//! Entries are batched per (source, destination) pair so a flush issues one
+//! simulated DMA transfer per pair instead of one per vertex — the
+//! "batched cache operations" optimization of §5.5.
+
+use std::collections::VecDeque;
+
+/// One queued row movement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueueItem {
+    pub key: u64,
+    pub row: Vec<f32>,
+    /// Epoch the row was produced.
+    pub epoch: u64,
+}
+
+/// A FIFO transfer queue with byte accounting.
+#[derive(Clone, Debug, Default)]
+pub struct TransferQueue {
+    items: VecDeque<QueueItem>,
+    bytes: u64,
+}
+
+impl TransferQueue {
+    pub fn new() -> TransferQueue {
+        TransferQueue::default()
+    }
+
+    pub fn push(&mut self, item: QueueItem) {
+        self.bytes += (item.row.len() * 4) as u64;
+        self.items.push_back(item);
+    }
+
+    /// Drain everything, returning (items, total bytes) — one batched DMA.
+    pub fn flush(&mut self) -> (Vec<QueueItem>, u64) {
+        let bytes = self.bytes;
+        self.bytes = 0;
+        (self.items.drain(..).collect(), bytes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// The queue set for a `P`-worker machine.
+#[derive(Clone, Debug)]
+pub struct QueueSet {
+    /// local_q[w]: rows waiting to move global→local for worker w.
+    pub local: Vec<TransferQueue>,
+    /// One global queue: rows published by workers toward the CPU cache.
+    pub global: TransferQueue,
+    /// prefetch[src][dst]: rows src pushes ahead to dst.
+    pub prefetch: Vec<Vec<TransferQueue>>,
+}
+
+impl QueueSet {
+    pub fn new(p: usize) -> QueueSet {
+        QueueSet {
+            local: (0..p).map(|_| TransferQueue::new()).collect(),
+            global: TransferQueue::new(),
+            prefetch: (0..p)
+                .map(|_| (0..p).map(|_| TransferQueue::new()).collect())
+                .collect(),
+        }
+    }
+
+    pub fn total_pending_bytes(&self) -> u64 {
+        self.local.iter().map(|q| q.bytes()).sum::<u64>()
+            + self.global.bytes()
+            + self
+                .prefetch
+                .iter()
+                .flat_map(|row| row.iter().map(|q| q.bytes()))
+                .sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_flush_bytes() {
+        let mut q = TransferQueue::new();
+        q.push(QueueItem { key: 1, row: vec![0.0; 4], epoch: 0 });
+        q.push(QueueItem { key: 2, row: vec![0.0; 2], epoch: 0 });
+        assert_eq!(q.bytes(), 24);
+        assert_eq!(q.len(), 2);
+        let (items, bytes) = q.flush();
+        assert_eq!(items.len(), 2);
+        assert_eq!(bytes, 24);
+        assert!(q.is_empty());
+        assert_eq!(q.bytes(), 0);
+    }
+
+    #[test]
+    fn queue_set_shape() {
+        let qs = QueueSet::new(3);
+        assert_eq!(qs.local.len(), 3);
+        assert_eq!(qs.prefetch.len(), 3);
+        assert_eq!(qs.prefetch[0].len(), 3);
+        assert_eq!(qs.total_pending_bytes(), 0);
+    }
+
+    #[test]
+    fn pending_bytes_aggregate() {
+        let mut qs = QueueSet::new(2);
+        qs.local[0].push(QueueItem { key: 1, row: vec![0.0; 1], epoch: 0 });
+        qs.global.push(QueueItem { key: 2, row: vec![0.0; 2], epoch: 0 });
+        qs.prefetch[0][1].push(QueueItem { key: 3, row: vec![0.0; 3], epoch: 0 });
+        assert_eq!(qs.total_pending_bytes(), (1 + 2 + 3) * 4);
+    }
+}

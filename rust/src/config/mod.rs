@@ -1,0 +1,158 @@
+//! Run configuration: translate CLI arguments into a full experiment spec
+//! (dataset twin, GPU group, trainer config, backend choice).
+
+use crate::baselines::System;
+use crate::cache::PolicyKind;
+use crate::device::profile::{Gpu, GpuGroup};
+use crate::device::topology::Topology;
+use crate::graph::{spec_by_name, Dataset, DatasetSpec};
+use crate::model::ModelKind;
+use crate::partition::Method;
+use crate::runtime::BackendKind;
+use crate::train::{CapacityMode, TrainConfig};
+use crate::util::{Args, Rng};
+use anyhow::{anyhow, Result};
+
+/// Everything needed to launch one training run.
+pub struct RunSpec {
+    pub dataset: Dataset,
+    pub spec: &'static DatasetSpec,
+    pub gpus: Vec<Gpu>,
+    pub topology: Topology,
+    pub train: TrainConfig,
+    pub backend: BackendKind,
+    pub system: System,
+}
+
+/// Parse a [`RunSpec`] from CLI options. Recognized options:
+/// `--dataset rt --group x4|--parts 4 --system capgnn --model gcn
+///  --epochs 200 --policy jaca --method metis --backend xla|native
+///  --scale 1.0 --seed 42 --local-cap N --global-cap N --no-pipe
+///  --refresh 8 --lr 0.02 --hidden 64 --layers 3`
+pub fn run_spec(args: &Args) -> Result<RunSpec> {
+    let spec = spec_by_name(&args.get_or("dataset", "rt"))
+        .ok_or_else(|| anyhow!("unknown dataset (try Cl/Fr/Cs/Rt/Yp/As/Os)"))?;
+    let seed = args.u64_or("seed", 42);
+    let scale = args.f64_or("scale", 1.0);
+    let dataset = spec.build_scaled(seed, scale);
+
+    let mut rng = Rng::new(seed ^ 0x6b8b4567);
+    let gpus: Vec<Gpu> = if let Some(group) = args.get("group") {
+        GpuGroup::by_name(group)
+            .ok_or_else(|| anyhow!("unknown group (x2..x8)"))?
+            .instantiate(&mut rng)
+    } else {
+        let parts = args.usize_or("parts", 4);
+        GpuGroup { name: "custom", kinds: &[] }
+            .kinds
+            .iter()
+            .copied()
+            .chain(std::iter::repeat(crate::device::profile::DeviceKind::Rtx3090))
+            .take(parts)
+            .enumerate()
+            .map(|(i, k)| Gpu::new(i, k, &mut rng))
+            .collect()
+    };
+    let topology = Topology::pcie_pairs(gpus.len());
+
+    let system = System::from_name(&args.get_or("system", "capgnn"))
+        .ok_or_else(|| anyhow!("unknown system"))?;
+    let epochs = args.usize_or("epochs", 200);
+    let mut train = system.config(epochs, spec.f_dim);
+
+    train.model = ModelKind::from_name(&args.get_or("model", "gcn"))
+        .ok_or_else(|| anyhow!("unknown model (gcn/sage)"))?;
+    train.hidden = args.usize_or("hidden", 64);
+    train.layers = args.usize_or("layers", 3);
+    train.lr = args.f64_or("lr", 0.02) as f32;
+    train.seed = seed;
+    if let Some(m) = args.get("method") {
+        train.method = Method::from_name(m).ok_or_else(|| anyhow!("unknown method"))?;
+    }
+    if let Some(p) = args.get("policy") {
+        train.policy = PolicyKind::from_name(p).ok_or_else(|| anyhow!("unknown policy"))?;
+    }
+    if args.has_flag("no-pipe") {
+        train.pipeline = false;
+    }
+    if args.has_flag("no-cache") {
+        train.use_cache = false;
+    }
+    if args.has_flag("no-rapa") {
+        train.use_rapa = false;
+    }
+    train.refresh_interval = args.u64_or("refresh", train.refresh_interval);
+    if let (Some(l), Some(g)) = (args.get("local-cap"), args.get("global-cap")) {
+        train.capacity = CapacityMode::Fixed {
+            local: l.parse().map_err(|_| anyhow!("bad local-cap"))?,
+            global: g.parse().map_err(|_| anyhow!("bad global-cap"))?,
+        };
+    }
+
+    let backend = match args.get_or("backend", "native").as_str() {
+        "xla" => BackendKind::Xla,
+        "native" => BackendKind::Native,
+        other => return Err(anyhow!("unknown backend {other}")),
+    };
+
+    Ok(RunSpec { dataset, spec, gpus, topology, train, backend, system })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults() {
+        let spec = run_spec(&args(&["--scale", "0.1", "--epochs", "5"])).unwrap();
+        assert_eq!(spec.spec.label, "Rt");
+        assert_eq!(spec.gpus.len(), 4);
+        assert_eq!(spec.train.epochs, 5);
+        assert!(spec.train.use_cache);
+        assert_eq!(spec.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn group_and_system() {
+        let spec = run_spec(&args(&[
+            "--dataset", "cl", "--group", "x3", "--system", "vanilla",
+            "--scale", "0.1", "--backend", "xla",
+        ]))
+        .unwrap();
+        assert_eq!(spec.gpus.len(), 3);
+        assert!(!spec.train.use_cache);
+        assert_eq!(spec.backend, BackendKind::Xla);
+    }
+
+    #[test]
+    fn flags_toggle() {
+        let spec = run_spec(&args(&[
+            "--scale", "0.1", "--no-pipe", "--no-cache", "--no-rapa",
+        ]))
+        .unwrap();
+        assert!(!spec.train.pipeline && !spec.train.use_cache && !spec.train.use_rapa);
+    }
+
+    #[test]
+    fn errors_on_unknown() {
+        assert!(run_spec(&args(&["--dataset", "zz"])).is_err());
+        assert!(run_spec(&args(&["--group", "x99"])).is_err());
+        assert!(run_spec(&args(&["--backend", "cuda"])).is_err());
+    }
+
+    #[test]
+    fn fixed_capacity() {
+        let spec = run_spec(&args(&[
+            "--scale", "0.1", "--local-cap", "100", "--global-cap", "400",
+        ]))
+        .unwrap();
+        assert_eq!(
+            spec.train.capacity,
+            CapacityMode::Fixed { local: 100, global: 400 }
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Heterogeneous device performance model (substitution S1).
+//!
+//! The paper measures 16 physical NVIDIA GPUs (Tables 1/3/4). This module
+//! carries those measurements as a simulation substrate: each simulated GPU
+//! exposes the compute (MM, SpMM) and communication (H2D, D2H, IDT)
+//! capabilities the paper's Table 1 reports, with a small per-device jitter
+//! so repeated "measurements" show the paper's ±σ behaviour. A [`SimClock`]
+//! accumulates simulated time per worker.
+
+pub mod profile;
+pub mod simclock;
+pub mod topology;
+
+pub use profile::{benchmark_device, DeviceKind, Gpu, GpuGroup, PerfSample, GROUPS};
+pub use simclock::SimClock;
+pub use topology::Topology;

@@ -1,0 +1,296 @@
+//! GPU models and their measured capabilities (paper Tables 1, 3, 4).
+
+use crate::util::{Rng, Summary};
+
+/// GPU models used in the paper's testbed (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Rtx3090,
+    TeslaA40,
+    Rtx3060,
+    Rtx2060,
+    Gtx1660Ti,
+    Gtx1650,
+}
+
+impl DeviceKind {
+    /// The two-letter label the paper uses (Table 3).
+    pub fn label(self) -> &'static str {
+        match self {
+            DeviceKind::Rtx3090 => "R9",
+            DeviceKind::TeslaA40 => "T4",
+            DeviceKind::Rtx3060 => "R6",
+            DeviceKind::Rtx2060 => "R2",
+            DeviceKind::Gtx1660Ti => "G6",
+            DeviceKind::Gtx1650 => "G5",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::Rtx3090 => "RTX 3090",
+            DeviceKind::TeslaA40 => "Tesla A40",
+            DeviceKind::Rtx3060 => "RTX 3060",
+            DeviceKind::Rtx2060 => "RTX 2060",
+            DeviceKind::Gtx1660Ti => "GTX 1660Ti",
+            DeviceKind::Gtx1650 => "GTX 1650",
+        }
+    }
+
+    /// Device memory in GiB (Table 3).
+    pub fn memory_gib(self) -> f64 {
+        match self {
+            DeviceKind::Rtx3090 => 24.0,
+            DeviceKind::TeslaA40 => 48.0,
+            DeviceKind::Rtx3060 => 12.0,
+            DeviceKind::Rtx2060 => 6.0,
+            DeviceKind::Gtx1660Ti => 6.0,
+            DeviceKind::Gtx1650 => 4.0,
+        }
+    }
+
+    /// Baseline task timings from the paper's Table 1, seconds for a
+    /// 16384×16384 f32 workload: (MM, SpMM, H2D, D2H, IDT).
+    pub fn table1(self) -> (f64, f64, f64, f64, f64) {
+        match self {
+            DeviceKind::Rtx3090 => (0.1383, 0.1063, 0.1197, 0.1213, 0.0014),
+            DeviceKind::TeslaA40 => (0.1421, 0.1198, 0.1187, 0.1189, 0.0021),
+            DeviceKind::Rtx3060 => (0.3439, 0.1962, 0.1220, 0.1236, 0.0038),
+            DeviceKind::Rtx2060 => (0.4972, 0.2955, 0.1192, 0.1195, 0.0033),
+            DeviceKind::Gtx1660Ti => (0.9938, 0.3409, 0.1238, 0.1244, 0.0057),
+            DeviceKind::Gtx1650 => (1.2743, 0.6323, 0.1253, 0.1253, 0.0094),
+        }
+    }
+
+    /// Relative measurement jitter (σ/μ) per task, approximating Table 1's
+    /// reported standard deviations.
+    pub fn jitter(self) -> f64 {
+        0.005
+    }
+}
+
+/// One simulated GPU instance: a kind plus a stable per-instance bias
+/// ("even for the same GPU model, subtle performance variations arise" —
+/// Obs. 3).
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub id: usize,
+    pub kind: DeviceKind,
+    /// Per-instance multiplicative bias on compute times (≈±1%).
+    bias: f64,
+}
+
+/// One measurement of all five tasks (a row of Table 1).
+#[derive(Clone, Copy, Debug)]
+pub struct PerfSample {
+    pub mm: f64,
+    pub spmm: f64,
+    pub h2d: f64,
+    pub d2h: f64,
+    pub idt: f64,
+}
+
+impl Gpu {
+    pub fn new(id: usize, kind: DeviceKind, rng: &mut Rng) -> Gpu {
+        Gpu { id, kind, bias: 1.0 + rng.normal() * 0.008 }
+    }
+
+    /// Draw one noisy measurement of the five tasks.
+    pub fn sample(&self, rng: &mut Rng) -> PerfSample {
+        let (mm, spmm, h2d, d2h, idt) = self.kind.table1();
+        let j = self.kind.jitter();
+        let mut noisy = |base: f64| base * self.bias * (1.0 + rng.normal() * j);
+        PerfSample {
+            mm: noisy(mm),
+            spmm: noisy(spmm),
+            h2d: noisy(h2d),
+            d2h: noisy(d2h),
+            idt: noisy(idt),
+        }
+    }
+
+    /// Expected (noise-free) capabilities — what RAPA's cost model uses
+    /// after its 50-rep averaging.
+    pub fn expected(&self) -> PerfSample {
+        let (mm, spmm, h2d, d2h, idt) = self.kind.table1();
+        PerfSample {
+            mm: mm * self.bias,
+            spmm: spmm * self.bias,
+            h2d: h2d * self.bias,
+            d2h: d2h * self.bias,
+            idt: idt * self.bias,
+        }
+    }
+
+    pub fn memory_bytes(&self) -> u64 {
+        (self.kind.memory_gib() * (1u64 << 30) as f64) as u64
+    }
+}
+
+/// Reproduce the paper's Table 1 benchmark: `reps` measurements per task
+/// per GPU, reported as mean ± std.
+pub fn benchmark_device(gpu: &Gpu, reps: usize, rng: &mut Rng) -> [Summary; 5] {
+    let mut cols: [Vec<f64>; 5] = Default::default();
+    for _ in 0..reps {
+        let s = gpu.sample(rng);
+        cols[0].push(s.mm);
+        cols[1].push(s.spmm);
+        cols[2].push(s.h2d);
+        cols[3].push(s.d2h);
+        cols[4].push(s.idt);
+    }
+    [
+        Summary::of(&cols[0]),
+        Summary::of(&cols[1]),
+        Summary::of(&cols[2]),
+        Summary::of(&cols[3]),
+        Summary::of(&cols[4]),
+    ]
+}
+
+/// A named GPU group (paper Table 4): x2 … x8.
+#[derive(Clone, Debug)]
+pub struct GpuGroup {
+    pub name: &'static str,
+    pub kinds: &'static [DeviceKind],
+}
+
+/// Table 4 groups. x2 = two 3090s, each step adds the next device.
+pub const GROUPS: [GpuGroup; 7] = [
+    GpuGroup { name: "x2", kinds: &[DeviceKind::Rtx3090, DeviceKind::Rtx3090] },
+    GpuGroup {
+        name: "x3",
+        kinds: &[DeviceKind::Rtx3090, DeviceKind::Rtx3090, DeviceKind::TeslaA40],
+    },
+    GpuGroup {
+        name: "x4",
+        kinds: &[
+            DeviceKind::Rtx3090,
+            DeviceKind::Rtx3090,
+            DeviceKind::TeslaA40,
+            DeviceKind::TeslaA40,
+        ],
+    },
+    GpuGroup {
+        name: "x5",
+        kinds: &[
+            DeviceKind::Rtx3090,
+            DeviceKind::Rtx3090,
+            DeviceKind::TeslaA40,
+            DeviceKind::TeslaA40,
+            DeviceKind::Rtx3060,
+        ],
+    },
+    GpuGroup {
+        name: "x6",
+        kinds: &[
+            DeviceKind::Rtx3090,
+            DeviceKind::Rtx3090,
+            DeviceKind::TeslaA40,
+            DeviceKind::TeslaA40,
+            DeviceKind::Rtx3060,
+            DeviceKind::Rtx3060,
+        ],
+    },
+    GpuGroup {
+        name: "x7",
+        kinds: &[
+            DeviceKind::Rtx3090,
+            DeviceKind::Rtx3090,
+            DeviceKind::TeslaA40,
+            DeviceKind::TeslaA40,
+            DeviceKind::Rtx3060,
+            DeviceKind::Rtx3060,
+            DeviceKind::Gtx1660Ti,
+        ],
+    },
+    GpuGroup {
+        name: "x8",
+        kinds: &[
+            DeviceKind::Rtx3090,
+            DeviceKind::Rtx3090,
+            DeviceKind::TeslaA40,
+            DeviceKind::TeslaA40,
+            DeviceKind::Rtx3060,
+            DeviceKind::Rtx3060,
+            DeviceKind::Gtx1660Ti,
+            DeviceKind::Gtx1660Ti,
+        ],
+    },
+];
+
+impl GpuGroup {
+    /// Find a group by name ("x2" … "x8").
+    pub fn by_name(name: &str) -> Option<&'static GpuGroup> {
+        GROUPS.iter().find(|g| g.name == name)
+    }
+
+    /// Instantiate the group's GPUs deterministically.
+    pub fn instantiate(&self, rng: &mut Rng) -> Vec<Gpu> {
+        self.kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| Gpu::new(i, k, rng))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ordering_preserved() {
+        // Compute capability ordering: 3090 ≈ A40 > 3060 > 2060 > 1660Ti > 1650.
+        let order = [
+            DeviceKind::Rtx3090,
+            DeviceKind::TeslaA40,
+            DeviceKind::Rtx3060,
+            DeviceKind::Rtx2060,
+            DeviceKind::Gtx1660Ti,
+            DeviceKind::Gtx1650,
+        ];
+        for w in order.windows(2) {
+            assert!(w[0].table1().0 < w[1].table1().0);
+        }
+    }
+
+    #[test]
+    fn samples_are_noisy_but_close() {
+        let mut rng = Rng::new(1);
+        let gpu = Gpu::new(0, DeviceKind::Rtx3090, &mut rng);
+        let sums = benchmark_device(&gpu, 50, &mut rng);
+        let (mm, ..) = DeviceKind::Rtx3090.table1();
+        assert!((sums[0].mean - mm).abs() / mm < 0.05);
+        assert!(sums[0].std > 0.0);
+        assert!(sums[0].std / sums[0].mean < 0.03);
+    }
+
+    #[test]
+    fn same_kind_different_instances_differ() {
+        let mut rng = Rng::new(2);
+        let a = Gpu::new(0, DeviceKind::Rtx3090, &mut rng);
+        let b = Gpu::new(1, DeviceKind::Rtx3090, &mut rng);
+        assert!(a.expected().mm != b.expected().mm);
+        // but within ~5%
+        assert!((a.expected().mm - b.expected().mm).abs() / a.expected().mm < 0.05);
+    }
+
+    #[test]
+    fn groups_sizes_match_names() {
+        for g in &GROUPS {
+            let n: usize = g.name[1..].parse().unwrap();
+            assert_eq!(g.kinds.len(), n);
+        }
+        assert!(GpuGroup::by_name("x4").is_some());
+        assert!(GpuGroup::by_name("x9").is_none());
+    }
+
+    #[test]
+    fn memory_sizes() {
+        assert_eq!(DeviceKind::TeslaA40.memory_gib(), 48.0);
+        let mut rng = Rng::new(3);
+        let gpu = Gpu::new(0, DeviceKind::Gtx1650, &mut rng);
+        assert_eq!(gpu.memory_bytes(), 4 * (1u64 << 30));
+    }
+}

@@ -1,0 +1,148 @@
+//! Simulated-time accounting.
+//!
+//! Each worker carries a `SimClock`; compute and communication charges are
+//! derived from the device performance model (Table 1 capabilities scaled
+//! by workload size). Reported epoch/communication times in the benches are
+//! simulated seconds — the quantity the paper's tables report — while
+//! wallclock is tracked separately for the §Perf pass.
+
+use std::time::Instant;
+
+/// Per-stage simulated time breakdown (paper §5.5 stages).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimes {
+    pub check_cache: f64,
+    pub pick_cache: f64,
+    pub communication: f64,
+    pub aggregation: f64,
+    /// Everything else (dense compute, loss, optimizer).
+    pub compute: f64,
+    /// Barrier / gradient synchronization.
+    pub sync: f64,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> f64 {
+        self.check_cache
+            + self.pick_cache
+            + self.communication
+            + self.aggregation
+            + self.compute
+            + self.sync
+    }
+
+    pub fn add(&mut self, other: &StageTimes) {
+        self.check_cache += other.check_cache;
+        self.pick_cache += other.pick_cache;
+        self.communication += other.communication;
+        self.aggregation += other.aggregation;
+        self.compute += other.compute;
+        self.sync += other.sync;
+    }
+
+    pub fn scale(&self, k: f64) -> StageTimes {
+        StageTimes {
+            check_cache: self.check_cache * k,
+            pick_cache: self.pick_cache * k,
+            communication: self.communication * k,
+            aggregation: self.aggregation * k,
+            compute: self.compute * k,
+            sync: self.sync * k,
+        }
+    }
+}
+
+/// Simulated clock for one worker.
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    /// Simulated seconds since epoch start.
+    pub now: f64,
+    pub stages: StageTimes,
+    wall_start: Instant,
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock { now: 0.0, stages: StageTimes::default(), wall_start: Instant::now() }
+    }
+
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+        self.stages = StageTimes::default();
+        self.wall_start = Instant::now();
+    }
+
+    pub fn charge_check_cache(&mut self, secs: f64) {
+        self.now += secs;
+        self.stages.check_cache += secs;
+    }
+    pub fn charge_pick_cache(&mut self, secs: f64) {
+        self.now += secs;
+        self.stages.pick_cache += secs;
+    }
+    pub fn charge_comm(&mut self, secs: f64) {
+        self.now += secs;
+        self.stages.communication += secs;
+    }
+    pub fn charge_aggregation(&mut self, secs: f64) {
+        self.now += secs;
+        self.stages.aggregation += secs;
+    }
+    pub fn charge_compute(&mut self, secs: f64) {
+        self.now += secs;
+        self.stages.compute += secs;
+    }
+    /// Advance to a barrier time (workers wait for the slowest).
+    pub fn barrier_at(&mut self, t: f64) {
+        if t > self.now {
+            self.stages.sync += t - self.now;
+            self.now = t;
+        }
+    }
+
+    pub fn wallclock(&self) -> f64 {
+        self.wall_start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let mut c = SimClock::new();
+        c.charge_comm(1.0);
+        c.charge_aggregation(2.0);
+        c.charge_check_cache(0.5);
+        assert!((c.now - 3.5).abs() < 1e-12);
+        assert!((c.stages.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_only_moves_forward() {
+        let mut c = SimClock::new();
+        c.charge_compute(2.0);
+        c.barrier_at(1.0); // no-op, already past
+        assert_eq!(c.now, 2.0);
+        assert_eq!(c.stages.sync, 0.0);
+        c.barrier_at(3.0);
+        assert_eq!(c.now, 3.0);
+        assert_eq!(c.stages.sync, 1.0);
+    }
+
+    #[test]
+    fn stage_add_scale() {
+        let mut a = StageTimes { communication: 1.0, ..Default::default() };
+        let b = StageTimes { aggregation: 2.0, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.total(), 3.0);
+        assert_eq!(a.scale(0.5).total(), 1.5);
+    }
+}

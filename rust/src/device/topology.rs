@@ -1,0 +1,166 @@
+//! Machine topology: which GPU pairs can use P2P, and the cost of moving
+//! bytes between endpoints (paper Fig. 8 / Fig. 12).
+//!
+//! Transfers between GPUs without P2P go GPU→CPU→GPU (D2H + H2D); P2P
+//! pairs use IDT. Concurrent transfers over the shared PCIe root complex
+//! get a contention multiplier — the bandwidth-contention effect the paper
+//! cites (Li et al., 2020).
+
+use super::profile::Gpu;
+
+/// Reference workload of the paper's capability measurements: a
+/// 16384×16384 f32 matrix (Table 1) — timings scale linearly in bytes.
+pub const REF_BYTES: f64 = 16384.0 * 16384.0 * 4.0;
+
+/// Machine topology over a set of GPUs.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// p2p[i][j] = direct GPU-GPU path available.
+    pub p2p: Vec<Vec<bool>>,
+    /// Contention multiplier applied when `k` transfers share the PCIe
+    /// complex: cost × (1 + contention·(k−1)).
+    pub contention: f64,
+    /// Per-pair cost multiplier (1.0 within a machine; ≫1 across machines
+    /// over Ethernet — the Table-9 distributed extension).
+    pub link_mult: Vec<Vec<f64>>,
+}
+
+impl Topology {
+    /// Paper-like topology: GPUs attached pairwise to PCIe switches; P2P
+    /// available only within a pair (common consumer board layout).
+    pub fn pcie_pairs(n: usize) -> Topology {
+        let mut p2p = vec![vec![false; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                p2p[i][j] = i != j && i / 2 == j / 2;
+            }
+        }
+        Topology { p2p, contention: 0.15, link_mult: vec![vec![1.0; n]; n] }
+    }
+
+    /// Fully P2P-connected (NVLink-like).
+    pub fn full_p2p(n: usize) -> Topology {
+        let mut p2p = vec![vec![true; n]; n];
+        for (i, row) in p2p.iter_mut().enumerate() {
+            row[i] = false;
+        }
+        Topology { p2p, contention: 0.05, link_mult: vec![vec![1.0; n]; n] }
+    }
+
+    /// No P2P at all — every transfer is routed through the CPU.
+    pub fn no_p2p(n: usize) -> Topology {
+        Topology {
+            p2p: vec![vec![false; n]; n],
+            contention: 0.15,
+            link_mult: vec![vec![1.0; n]; n],
+        }
+    }
+
+    /// Multi-machine cluster: `machine_of[w]` maps each worker to a
+    /// machine. Intra-machine pairs follow the PCIe-pairs layout;
+    /// cross-machine pairs have no P2P and pay `ether_mult`× the cost
+    /// (PCIe ≈ 12 GB/s vs 10 GbE ≈ 1.2 GB/s ⇒ default 10×).
+    pub fn cluster(machine_of: &[usize], ether_mult: f64) -> Topology {
+        let n = machine_of.len();
+        let mut t = Topology::pcie_pairs(n);
+        for i in 0..n {
+            for j in 0..n {
+                if machine_of[i] != machine_of[j] {
+                    t.p2p[i][j] = false;
+                    t.link_mult[i][j] = ether_mult;
+                }
+            }
+        }
+        t
+    }
+
+    pub fn n(&self) -> usize {
+        self.p2p.len()
+    }
+
+    /// Simulated seconds to move `bytes` from GPU `src` to GPU `dst`,
+    /// with `concurrent` transfers sharing the interconnect.
+    pub fn transfer_time(
+        &self,
+        gpus: &[Gpu],
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        concurrent: usize,
+    ) -> f64 {
+        assert!(src < self.n() && dst < self.n());
+        let scale = bytes as f64 / REF_BYTES;
+        let base = if self.p2p[src][dst] {
+            // Direct P2P: IDT cost of the slower endpoint.
+            gpus[src].expected().idt.max(gpus[dst].expected().idt)
+        } else {
+            // Routed through the CPU: D2H on src + H2D on dst.
+            gpus[src].expected().d2h + gpus[dst].expected().h2d
+        };
+        let contention = 1.0 + self.contention * (concurrent.saturating_sub(1)) as f64;
+        base * scale * contention * self.link_mult[src][dst]
+    }
+
+    /// Host→device time (CPU global cache → GPU local cache).
+    pub fn h2d_time(&self, gpus: &[Gpu], dst: usize, bytes: u64, concurrent: usize) -> f64 {
+        let scale = bytes as f64 / REF_BYTES;
+        let contention = 1.0 + self.contention * (concurrent.saturating_sub(1)) as f64;
+        gpus[dst].expected().h2d * scale * contention
+    }
+
+    /// Device→host time (GPU → CPU global cache).
+    pub fn d2h_time(&self, gpus: &[Gpu], src: usize, bytes: u64, concurrent: usize) -> f64 {
+        let scale = bytes as f64 / REF_BYTES;
+        let contention = 1.0 + self.contention * (concurrent.saturating_sub(1)) as f64;
+        gpus[src].expected().d2h * scale * contention
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::{DeviceKind, Gpu};
+    use crate::util::Rng;
+
+    fn gpus(n: usize) -> Vec<Gpu> {
+        let mut rng = Rng::new(1);
+        (0..n).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng)).collect()
+    }
+
+    #[test]
+    fn pcie_pairs_structure() {
+        let t = Topology::pcie_pairs(4);
+        assert!(t.p2p[0][1] && t.p2p[1][0]);
+        assert!(t.p2p[2][3]);
+        assert!(!t.p2p[0][2]);
+        assert!(!t.p2p[1][1]);
+    }
+
+    #[test]
+    fn p2p_faster_than_routed() {
+        let g = gpus(4);
+        let t = Topology::pcie_pairs(4);
+        let direct = t.transfer_time(&g, 0, 1, 1 << 20, 1);
+        let routed = t.transfer_time(&g, 0, 2, 1 << 20, 1);
+        assert!(direct < routed / 10.0, "direct {direct} routed {routed}");
+    }
+
+    #[test]
+    fn contention_increases_cost() {
+        let g = gpus(2);
+        let t = Topology::no_p2p(2);
+        let one = t.transfer_time(&g, 0, 1, 1 << 20, 1);
+        let four = t.transfer_time(&g, 0, 1, 1 << 20, 4);
+        assert!(four > one);
+        assert!((four / one - 1.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_in_bytes() {
+        let g = gpus(2);
+        let t = Topology::no_p2p(2);
+        let a = t.transfer_time(&g, 0, 1, 1 << 20, 1);
+        let b = t.transfer_time(&g, 0, 1, 1 << 21, 1);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,325 @@
+//! Cache experiments (paper §5.2–§5.5): Figs. 14–19.
+
+use super::Ctx;
+use crate::cache::PolicyKind;
+use crate::device::profile::{DeviceKind, Gpu};
+use crate::device::topology::Topology;
+use crate::graph::{spec_by_name, Dataset};
+use crate::model::ModelKind;
+use crate::runtime::NativeBackend;
+use crate::train::{train, CapacityMode, TrainConfig, TrainReport};
+use crate::util::json::{num, obj, s};
+use crate::util::{bench, table::fmt_secs, Rng, Table};
+
+fn reddit(ctx: Ctx) -> Dataset {
+    spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale)
+}
+
+fn r9_gpus(n: usize, seed: u64) -> Vec<Gpu> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng)).collect()
+}
+
+fn base_cfg(ctx: Ctx, model: ModelKind) -> TrainConfig {
+    TrainConfig {
+        model,
+        // Isolate caching: RAPA and pipeline off (paper §5.3–5.5 setup).
+        use_rapa: false,
+        pipeline: false,
+        ..TrainConfig::capgnn(ctx.epochs)
+    }
+}
+
+fn run_one(ctx: Ctx, ds: &Dataset, parts: usize, cfg: &TrainConfig) -> TrainReport {
+    let gpus = r9_gpus(parts, ctx.seed);
+    let topo = Topology::pcie_pairs(parts);
+    let mut backend = NativeBackend::new();
+    train(ds, &gpus, &topo, &mut backend, cfg).expect("train")
+}
+
+/// Fig. 14: hit rate when prioritizing high- vs low-overlap vertices.
+pub fn fig14(ctx: Ctx) {
+    let ds = reddit(ctx);
+    let mut table = Table::new(
+        "Fig. 14 — cache hit rate: high vs low overlap priority (Reddit twin, 20% caches)",
+        &["model", "parts", "high-overlap", "low-overlap"],
+    );
+    for model in [ModelKind::Gcn, ModelKind::Sage] {
+        for parts in [2usize, 4, 6, 8] {
+            let mut hi = base_cfg(ctx, model);
+            hi.capacity = CapacityMode::Fraction(0.2);
+            let mut lo = hi.clone();
+            lo.invert_priority = true;
+            let rh = run_one(ctx, &ds, parts, &hi);
+            let rl = run_one(ctx, &ds, parts, &lo);
+            table.row(vec![
+                model.name().to_string(),
+                parts.to_string(),
+                format!("{:.3}", rh.cache.hit_rate()),
+                format!("{:.3}", rl.cache.hit_rate()),
+            ]);
+            bench::record_json(obj(vec![
+                ("expt", s("fig14")),
+                ("model", s(model.name())),
+                ("parts", num(parts as f64)),
+                ("hit_high", num(rh.cache.hit_rate())),
+                ("hit_low", num(rl.cache.hit_rate())),
+            ]));
+        }
+    }
+    table.print();
+    println!("shape check: high-overlap priority ≥ low-overlap at every point\n");
+}
+
+const POLICIES: [PolicyKind; 3] = [PolicyKind::Jaca, PolicyKind::Fifo, PolicyKind::Lru];
+
+fn capacity_sweep(ds: &Dataset, parts: usize) -> Vec<usize> {
+    // Sweep up to the max useful capacity (halo coverage across layers).
+    let mut rng = Rng::new(99);
+    let ps = crate::partition::Method::Metis.partition(&ds.graph, parts, &mut rng);
+    let plan = crate::partition::halo::build_plan(&ds.graph, &ps);
+    let max_halo = plan.parts.iter().map(|p| p.n_halo()).max().unwrap_or(64) * 3;
+    [0.05, 0.1, 0.2, 0.4, 0.7, 1.0, 1.3]
+        .iter()
+        .map(|f| ((max_halo as f64 * f) as usize).max(4))
+        .collect()
+}
+
+/// Fig. 15: hit rate vs capacity and partitions, JACA vs FIFO vs LRU.
+pub fn fig15(ctx: Ctx) {
+    let ds = reddit(ctx);
+    let mut table = Table::new(
+        "Fig. 15 — hit rate vs cache capacity (Reddit twin)",
+        &["model", "parts", "capacity", "JACA", "FIFO", "LRU"],
+    );
+    for model in [ModelKind::Gcn, ModelKind::Sage] {
+        for parts in [2usize, 4] {
+            for cap in capacity_sweep(&ds, parts) {
+                let mut rates = Vec::new();
+                for policy in POLICIES {
+                    let mut cfg = base_cfg(ctx, model);
+                    cfg.policy = policy;
+                    cfg.capacity = CapacityMode::Fixed { local: cap, global: cap };
+                    let r = run_one(ctx, &ds, parts, &cfg);
+                    rates.push(r.cache.hit_rate());
+                }
+                table.row(vec![
+                    model.name().to_string(),
+                    parts.to_string(),
+                    cap.to_string(),
+                    format!("{:.3}", rates[0]),
+                    format!("{:.3}", rates[1]),
+                    format!("{:.3}", rates[2]),
+                ]);
+                bench::record_json(obj(vec![
+                    ("expt", s("fig15")),
+                    ("model", s(model.name())),
+                    ("parts", num(parts as f64)),
+                    ("cap", num(cap as f64)),
+                    ("jaca", num(rates[0])),
+                    ("fifo", num(rates[1])),
+                    ("lru", num(rates[2])),
+                ]));
+            }
+        }
+    }
+    table.print();
+    println!("shape check: hit rate rises with capacity then saturates; JACA ≥ LRU ≥ FIFO at small caps\n");
+}
+
+/// Fig. 16: epoch time vs capacity and partitions.
+pub fn fig16(ctx: Ctx) {
+    let ds = reddit(ctx);
+    let mut table = Table::new(
+        "Fig. 16 — epoch/comm time vs cache capacity (Reddit twin, simulated seconds)",
+        &["model", "parts", "capacity", "policy", "total", "comm"],
+    );
+    for model in [ModelKind::Gcn, ModelKind::Sage] {
+        for parts in [2usize, 4] {
+            for cap in capacity_sweep(&ds, parts) {
+                for policy in POLICIES {
+                    let mut cfg = base_cfg(ctx, model);
+                    cfg.policy = policy;
+                    cfg.capacity = CapacityMode::Fixed { local: cap, global: cap };
+                    let r = run_one(ctx, &ds, parts, &cfg);
+                    table.row(vec![
+                        model.name().to_string(),
+                        parts.to_string(),
+                        cap.to_string(),
+                        policy.name().to_string(),
+                        fmt_secs(r.total_time()),
+                        fmt_secs(r.total_comm()),
+                    ]);
+                    bench::record_json(obj(vec![
+                        ("expt", s("fig16")),
+                        ("model", s(model.name())),
+                        ("parts", num(parts as f64)),
+                        ("cap", num(cap as f64)),
+                        ("policy", s(policy.name())),
+                        ("total_s", num(r.total_time())),
+                        ("comm_s", num(r.total_comm())),
+                    ]));
+                }
+            }
+        }
+    }
+    table.print();
+    println!("shape check: JACA lowest total/comm at every capacity; FIFO/LRU improve as capacity covers halos\n");
+}
+
+/// Figs. 17–18: per-stage breakdown, one capacity fixed / both varying.
+pub fn fig17_18(ctx: Ctx) {
+    let ds = reddit(ctx);
+    let mut table = Table::new(
+        "Figs. 17–18 — stage breakdown vs cache capacities (GCN, simulated seconds)",
+        &["parts", "local_cap", "global_cap", "check", "pick", "comm", "agg", "total"],
+    );
+    let caps = capacity_sweep(&ds, 4);
+    let fixed = *caps.last().unwrap();
+    let mut emit = |parts: usize, local: usize, global: usize| {
+        let mut cfg = base_cfg(ctx, ModelKind::Gcn);
+        cfg.capacity = CapacityMode::Fixed { local, global };
+        let r = run_one(ctx, &ds, parts, &cfg);
+        let st = &r.stage_totals;
+        table.row(vec![
+            parts.to_string(),
+            local.to_string(),
+            global.to_string(),
+            format!("{:.4}", st.check_cache),
+            format!("{:.4}", st.pick_cache),
+            fmt_secs(st.communication),
+            fmt_secs(st.aggregation),
+            fmt_secs(r.total_time()),
+        ]);
+        bench::record_json(obj(vec![
+            ("expt", s("fig17")),
+            ("parts", num(parts as f64)),
+            ("local", num(local as f64)),
+            ("global", num(global as f64)),
+            ("check_s", num(st.check_cache)),
+            ("pick_s", num(st.pick_cache)),
+            ("comm_s", num(st.communication)),
+            ("agg_s", num(st.aggregation)),
+            ("total_s", num(r.total_time())),
+        ]));
+    };
+    for parts in [2usize, 3, 4] {
+        // (a–c) fix local, vary global.
+        for &g in &caps {
+            emit(parts, fixed, g);
+        }
+        // (d–f) fix global, vary local.
+        for &l in &caps {
+            emit(parts, l, fixed);
+        }
+        // Fig. 18: both together.
+        for &c in &caps {
+            emit(parts, c, c);
+        }
+    }
+    table.print();
+    println!("shape check: check/pick small & stable; comm falls as either capacity rises\n");
+}
+
+/// Fig. 19: overhead ratio and benefit-to-overhead ratio.
+pub fn fig19(ctx: Ctx) {
+    let ds = reddit(ctx);
+    let mut table = Table::new(
+        "Fig. 19 — JACA overhead vs benefit (GCN, 4 partitions)",
+        &["capacity", "r_overhead", "r_benefit"],
+    );
+    let parts = 4;
+    // No-cache baseline for the benefit numerator.
+    let mut base = base_cfg(ctx, ModelKind::Gcn);
+    base.use_cache = false;
+    let r0 = run_one(ctx, &ds, parts, &base);
+    for cap in capacity_sweep(&ds, parts) {
+        let mut cfg = base_cfg(ctx, ModelKind::Gcn);
+        cfg.capacity = CapacityMode::Fixed { local: cap, global: cap };
+        let r = run_one(ctx, &ds, parts, &cfg);
+        let overhead = r.stage_totals.check_cache + r.stage_totals.pick_cache;
+        let r_overhead = overhead / r.total_time().max(1e-12);
+        let r_benefit = (r0.total_time() - r.total_time()) / overhead.max(1e-12);
+        table.row(vec![
+            cap.to_string(),
+            format!("{:.5}", r_overhead),
+            format!("{:.1}", r_benefit),
+        ]);
+        bench::record_json(obj(vec![
+            ("expt", s("fig19")),
+            ("cap", num(cap as f64)),
+            ("r_overhead", num(r_overhead)),
+            ("r_benefit", num(r_benefit)),
+        ]));
+    }
+    table.print();
+    println!("shape check: overhead ratio small and flat; benefit grows with capacity\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx() -> Ctx {
+        Ctx { scale: 0.1, epochs: 4, seed: 7 }
+    }
+
+    #[test]
+    fn jaca_beats_fifo_at_small_capacity() {
+        let ctx = tiny_ctx();
+        let ds = reddit(ctx);
+        let caps = capacity_sweep(&ds, 2);
+        let small = caps[1];
+        let mut rates = Vec::new();
+        for policy in [PolicyKind::Jaca, PolicyKind::Fifo] {
+            let mut cfg = base_cfg(ctx, ModelKind::Gcn);
+            cfg.policy = policy;
+            cfg.capacity = CapacityMode::Fixed { local: small, global: small };
+            rates.push(run_one(ctx, &ds, 2, &cfg).cache.hit_rate());
+        }
+        assert!(
+            rates[0] >= rates[1] - 0.02,
+            "JACA {} vs FIFO {}",
+            rates[0],
+            rates[1]
+        );
+    }
+
+    #[test]
+    fn priority_inversion_hurts_global_hits() {
+        // The overlap-priority advantage acts through the *global* cache:
+        // a cached high-overlap vertex serves several partitions, a
+        // low-overlap one serves a single partition. Local lookups are
+        // uniform over each worker's halo, so the signal is in
+        // global_hits, with many partitions to create overlap.
+        let ctx = Ctx { scale: 0.3, epochs: 6, seed: 7 };
+        let ds = reddit(ctx);
+        let mut hi = base_cfg(ctx, ModelKind::Gcn);
+        hi.capacity = CapacityMode::Fraction(0.2);
+        let mut lo = hi.clone();
+        lo.invert_priority = true;
+        let rh = run_one(ctx, &ds, 8, &hi);
+        let rl = run_one(ctx, &ds, 8, &lo);
+        assert!(
+            rh.cache.global_hits >= rl.cache.global_hits,
+            "high {} low {}",
+            rh.cache.global_hits,
+            rl.cache.global_hits
+        );
+    }
+
+    #[test]
+    fn larger_capacity_never_lowers_hit_rate_much() {
+        let ctx = tiny_ctx();
+        let ds = reddit(ctx);
+        let caps = capacity_sweep(&ds, 2);
+        let mut prev = -1.0f64;
+        for &cap in [caps[0], caps[3], caps[5]].iter() {
+            let mut cfg = base_cfg(ctx, ModelKind::Gcn);
+            cfg.capacity = CapacityMode::Fixed { local: cap, global: cap };
+            let r = run_one(ctx, &ds, 2, &cfg);
+            assert!(r.cache.hit_rate() >= prev - 0.05);
+            prev = r.cache.hit_rate();
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md
+//! per-experiment index). Each driver prints the same rows/series the
+//! paper reports and is callable both from `capgnn expt <id>` and from the
+//! corresponding `cargo bench` target.
+
+pub mod cache_expts;
+pub mod device_tab;
+pub mod motivation;
+pub mod overall;
+pub mod rapa_expts;
+
+use crate::util::Args;
+use anyhow::{anyhow, Result};
+
+/// Shared experiment context (quick-mode scaling and workload knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct Ctx {
+    /// Dataset scale multiplier (twins are built at `spec.n × scale`).
+    pub scale: f64,
+    /// Training epochs for experiments that train.
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn from_args(args: &Args) -> Ctx {
+        let quick = crate::util::bench::quick_mode() || args.has_flag("quick");
+        Ctx {
+            scale: args.f64_or("scale", if quick { 0.25 } else { 1.0 }),
+            epochs: args.usize_or("epochs", if quick { 8 } else { 40 }),
+            seed: args.u64_or("seed", 42),
+        }
+    }
+
+    pub fn quick() -> Ctx {
+        Ctx { scale: 0.25, epochs: 8, seed: 42 }
+    }
+}
+
+/// Dispatch an experiment by id ("fig4" … "tab9").
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args);
+    match id {
+        "fig4" => motivation::fig4(ctx),
+        "fig5" => motivation::fig5(ctx),
+        "fig6" => motivation::fig6(ctx),
+        "tab1" => device_tab::tab1(ctx),
+        "fig14" => cache_expts::fig14(ctx),
+        "fig15" => cache_expts::fig15(ctx),
+        "fig16" => cache_expts::fig16(ctx),
+        "fig17" | "fig18" => cache_expts::fig17_18(ctx),
+        "fig19" => cache_expts::fig19(ctx),
+        "fig20" => rapa_expts::fig20(ctx),
+        "fig21" => rapa_expts::fig21(ctx),
+        "fig22" => overall::fig22(ctx),
+        "tab7" => overall::tab7(ctx, args.has_flag("full")),
+        "tab8" => overall::tab8(ctx),
+        "tab9" => overall::tab9(ctx),
+        other => return Err(anyhow!("unknown experiment {other}")),
+    }
+    Ok(())
+}
+
+pub const ALL_IDS: [&str; 15] = [
+    "fig4", "fig5", "fig6", "tab1", "fig14", "fig15", "fig16", "fig17",
+    "fig19", "fig20", "fig21", "fig22", "tab7", "tab8", "tab9",
+];

@@ -1,0 +1,178 @@
+//! Motivation study (paper §3.4): Figs. 4–6 — halo explosion, edge-cut
+//! correlation, and halo duplication.
+
+use super::Ctx;
+use crate::graph::SPECS;
+use crate::partition::halo::halo_stats;
+use crate::partition::Method;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::{bench, stats, Rng, Table};
+
+const METHODS: [Method; 2] = [Method::Metis, Method::Random];
+const DATASETS: [&str; 4] = ["Cl", "Fr", "Cs", "Rt"];
+
+fn datasets(ctx: Ctx) -> Vec<(&'static str, crate::graph::Dataset)> {
+    SPECS
+        .iter()
+        .filter(|sp| DATASETS.contains(&sp.label))
+        .map(|sp| (sp.label, sp.build_scaled(ctx.seed, ctx.scale)))
+        .collect()
+}
+
+/// Fig. 4: number/ratio of halo vs inner vertices across partitions/hops.
+pub fn fig4(ctx: Ctx) {
+    let mut table = Table::new(
+        "Fig. 4 — halo vs inner vertices (Obs. 1)",
+        &["dataset", "method", "parts", "hops", "inner", "halo", "halo/inner"],
+    );
+    let mut rng = Rng::new(ctx.seed);
+    for (label, ds) in datasets(ctx) {
+        for method in METHODS {
+            for parts in [2usize, 4, 8] {
+                let ps = method.partition(&ds.graph, parts, &mut rng);
+                for hops in [1usize, 2, 3] {
+                    let st = halo_stats(&ds.graph, &ps, hops);
+                    table.row(vec![
+                        label.to_string(),
+                        method.name().to_string(),
+                        parts.to_string(),
+                        hops.to_string(),
+                        st.inner.iter().sum::<usize>().to_string(),
+                        st.total_halo.to_string(),
+                        format!("{:.2}", st.halo_to_inner()),
+                    ]);
+                    bench::record_json(obj(vec![
+                        ("expt", s("fig4")),
+                        ("dataset", s(label)),
+                        ("method", s(method.name())),
+                        ("parts", num(parts as f64)),
+                        ("hops", num(hops as f64)),
+                        ("halo_ratio", num(st.halo_to_inner())),
+                    ]));
+                }
+            }
+        }
+    }
+    table.print();
+    println!("shape check: ratio grows with parts and hops; ≥1 for dense twins at 8 parts\n");
+}
+
+/// Fig. 5: edge-cut vs total 1-hop halo correlation.
+pub fn fig5(ctx: Ctx) {
+    let mut table = Table::new(
+        "Fig. 5 — edge cut vs 1-hop halo count",
+        &["dataset", "parts", "edge_cut", "halo_1hop", "pearson_r(all points)"],
+    );
+    let mut rng = Rng::new(ctx.seed);
+    let mut cuts = Vec::new();
+    let mut halos = Vec::new();
+    let mut rows = Vec::new();
+    for (label, ds) in datasets(ctx) {
+        for parts in 2..=8usize {
+            let ps = Method::Metis.partition(&ds.graph, parts, &mut rng);
+            let st = halo_stats(&ds.graph, &ps, 1);
+            cuts.push(st.edge_cut as f64);
+            halos.push(st.total_halo as f64);
+            rows.push((label, parts, st.edge_cut, st.total_halo));
+        }
+    }
+    let r = stats::pearson(&cuts, &halos);
+    for (label, parts, cut, halo) in rows {
+        table.row(vec![
+            label.to_string(),
+            parts.to_string(),
+            cut.to_string(),
+            halo.to_string(),
+            format!("{r:.3}"),
+        ]);
+    }
+    table.print();
+    bench::record_json(obj(vec![
+        ("expt", s("fig5")),
+        ("pearson_r", num(r)),
+        ("cuts", arr(cuts.into_iter().map(num).collect())),
+        ("halos", arr(halos.into_iter().map(num).collect())),
+    ]));
+    println!("shape check: strong positive correlation (paper: clear positive trend); r={r:.3}\n");
+}
+
+/// Fig. 6: overlapping (duplicate) halo vertices (Obs. 2).
+pub fn fig6(ctx: Ctx) {
+    let mut table = Table::new(
+        "Fig. 6 — overlapping halo vertices (Obs. 2)",
+        &["dataset", "method", "parts", "hops", "unique_halo", "overlapping", "overlap%"],
+    );
+    let mut rng = Rng::new(ctx.seed);
+    for (label, ds) in datasets(ctx) {
+        for method in METHODS {
+            for parts in [2usize, 4, 8] {
+                let ps = method.partition(&ds.graph, parts, &mut rng);
+                for hops in [1usize, 2] {
+                    let st = halo_stats(&ds.graph, &ps, hops);
+                    let pct = if st.unique_halo == 0 {
+                        0.0
+                    } else {
+                        st.overlapping as f64 / st.unique_halo as f64 * 100.0
+                    };
+                    table.row(vec![
+                        label.to_string(),
+                        method.name().to_string(),
+                        parts.to_string(),
+                        hops.to_string(),
+                        st.unique_halo.to_string(),
+                        st.overlapping.to_string(),
+                        format!("{pct:.1}%"),
+                    ]);
+                    bench::record_json(obj(vec![
+                        ("expt", s("fig6")),
+                        ("dataset", s(label)),
+                        ("method", s(method.name())),
+                        ("parts", num(parts as f64)),
+                        ("hops", num(hops as f64)),
+                        ("overlapping", num(st.overlapping as f64)),
+                    ]));
+                }
+            }
+        }
+    }
+    table.print();
+    println!("shape check: overlap grows with parts and hops\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_runs_quick() {
+        fig4(Ctx { scale: 0.1, epochs: 1, seed: 1 });
+    }
+
+    #[test]
+    fn fig5_correlation_positive() {
+        // The motivating claim itself, as a test.
+        let ctx = Ctx { scale: 0.15, epochs: 1, seed: 2 };
+        let mut rng = Rng::new(ctx.seed);
+        let mut cuts = Vec::new();
+        let mut halos = Vec::new();
+        for (_, ds) in datasets(ctx) {
+            for parts in 2..=6usize {
+                let ps = Method::Metis.partition(&ds.graph, parts, &mut rng);
+                let st = halo_stats(&ds.graph, &ps, 1);
+                cuts.push(st.edge_cut as f64);
+                halos.push(st.total_halo as f64);
+            }
+        }
+        assert!(stats::pearson(&cuts, &halos) > 0.8);
+    }
+
+    #[test]
+    fn obs1_halo_exceeds_inner_on_dense_twin() {
+        let ctx = Ctx { scale: 0.25, epochs: 1, seed: 3 };
+        let ds = crate::graph::spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+        let mut rng = Rng::new(3);
+        let ps = Method::Random.partition(&ds.graph, 8, &mut rng);
+        let st = halo_stats(&ds.graph, &ps, 2);
+        assert!(st.halo_to_inner() >= 1.0, "ratio {}", st.halo_to_inner());
+    }
+}

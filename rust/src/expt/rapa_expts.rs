@@ -1,0 +1,155 @@
+//! RAPA experiments (paper §5.6–§5.7): Fig. 20 iteration traces and
+//! Fig. 21 heterogeneous-GPU robustness.
+
+use super::Ctx;
+use crate::baselines::System;
+use crate::device::profile::{DeviceKind, Gpu, GpuGroup};
+use crate::device::topology::Topology;
+use crate::graph::spec_by_name;
+use crate::model::ModelKind;
+use crate::partition::rapa::{self, RapaConfig};
+use crate::partition::Method;
+use crate::runtime::NativeBackend;
+use crate::train::train;
+use crate::util::json::{num, obj, s};
+use crate::util::{bench, stats, table::fmt_secs, Rng, Table};
+
+/// Fig. 20: evolution of nodes/edges/score per subgraph across RAPA
+/// iterations for x2..x5 groups.
+pub fn fig20(ctx: Ctx) {
+    let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+    let mut table = Table::new(
+        "Fig. 20 — RAPA iteration traces (Reddit twin)",
+        &["group", "iter", "part", "nodes", "edges", "lambda", "std(lambda)"],
+    );
+    for group in ["x2", "x3", "x4", "x5"] {
+        let mut rng = Rng::new(ctx.seed);
+        let gpus = GpuGroup::by_name(group).unwrap().instantiate(&mut rng);
+        let res = rapa::run(&ds.graph, &gpus, &RapaConfig::default(), Method::Metis, &mut rng);
+        for snap in &res.trace {
+            for (pi, &(nodes, edges, lambda)) in snap.parts.iter().enumerate() {
+                table.row(vec![
+                    group.to_string(),
+                    snap.iter.to_string(),
+                    pi.to_string(),
+                    nodes.to_string(),
+                    edges.to_string(),
+                    format!("{lambda:.1}"),
+                    format!("{:.2}", snap.lambda_std),
+                ]);
+            }
+            bench::record_json(obj(vec![
+                ("expt", s("fig20")),
+                ("group", s(group)),
+                ("iter", num(snap.iter as f64)),
+                ("lambda_std", num(snap.lambda_std)),
+                ("lambda_max", num(snap.lambda_max)),
+            ]));
+        }
+        let first = &res.trace[0];
+        let last = res.trace.last().unwrap();
+        println!(
+            "{group}: std(lambda) {:.2} -> {:.2} in {} iters; pruned {:?}",
+            first.lambda_std,
+            last.lambda_std,
+            res.trace.len() - 1,
+            res.pruned
+        );
+    }
+    table.print();
+    println!("shape check: lambda spread shrinks monotonically; more parts = larger initial imbalance\n");
+}
+
+/// Heterogeneous pairings of Fig. 21.
+fn hetero_groups() -> Vec<(&'static str, Vec<DeviceKind>)> {
+    use DeviceKind::*;
+    vec![
+        ("R9+R9", vec![Rtx3090, Rtx3090]),
+        ("T4+T4", vec![TeslaA40, TeslaA40]),
+        ("G6+R9", vec![Gtx1660Ti, Rtx3090]),
+        ("G6+T4", vec![Gtx1660Ti, TeslaA40]),
+        ("R9x2+T4x2", vec![Rtx3090, Rtx3090, TeslaA40, TeslaA40]),
+        ("G6x2+R9x2", vec![Gtx1660Ti, Gtx1660Ti, Rtx3090, Rtx3090]),
+    ]
+}
+
+/// Fig. 21: total/comm/aggregation time under heterogeneous GPU settings,
+/// with per-worker aggregation variance as the balance signal.
+pub fn fig21(ctx: Ctx) {
+    let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+    let mut table = Table::new(
+        "Fig. 21 — robustness under heterogeneous GPUs (Reddit twin, GCN, simulated seconds)",
+        &["gpus", "system", "total", "comm", "agg", "agg_std_across_workers"],
+    );
+    for (gname, kinds) in hetero_groups() {
+        let mut rng = Rng::new(ctx.seed);
+        let gpus: Vec<Gpu> = kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| Gpu::new(i, k, &mut rng))
+            .collect();
+        let topo = Topology::pcie_pairs(gpus.len());
+        for system in [System::DistGcn, System::CachedGcn, System::Vanilla, System::CaPGnn] {
+            let cfg = {
+                let mut c = system.config(ctx.epochs, ds.data.f_dim);
+                c.model = ModelKind::Gcn;
+                c
+            };
+            let mut backend = NativeBackend::new();
+            let r = train(&ds, &gpus, &topo, &mut backend, &cfg).expect("train");
+            let aggs: Vec<f64> = r.worker_stages.iter().map(|st| st.aggregation).collect();
+            table.row(vec![
+                gname.to_string(),
+                system.name().to_string(),
+                fmt_secs(r.total_time()),
+                fmt_secs(r.total_comm()),
+                fmt_secs(stats::mean(&aggs)),
+                format!("{:.4}", stats::std_dev(&aggs)),
+            ]);
+            bench::record_json(obj(vec![
+                ("expt", s("fig21")),
+                ("group", s(gname)),
+                ("system", s(system.name())),
+                ("total_s", num(r.total_time())),
+                ("comm_s", num(r.total_comm())),
+                ("agg_std", num(stats::std_dev(&aggs))),
+            ]));
+        }
+    }
+    table.print();
+    println!("shape check: on heterogeneous pairs, DistGCN/CachedGCN aggregation variance blows up; CaPGNN stays low with lowest total/comm\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::TrainConfig;
+
+    #[test]
+    fn rapa_balances_hetero_pair_better_than_vanilla() {
+        let ctx = Ctx { scale: 0.15, epochs: 4, seed: 5 };
+        let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+        let mut rng = Rng::new(5);
+        use DeviceKind::*;
+        let gpus: Vec<Gpu> = [Gtx1660Ti, Rtx3090]
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| Gpu::new(i, k, &mut rng))
+            .collect();
+        let topo = Topology::pcie_pairs(2);
+        let mut backend = NativeBackend::new();
+        let cap = TrainConfig::capgnn(ctx.epochs);
+        let van = TrainConfig::vanilla(ctx.epochs);
+        let rc = train(&ds, &gpus, &topo, &mut backend, &cap).unwrap();
+        let rv = train(&ds, &gpus, &topo, &mut backend, &van).unwrap();
+        // CaPGNN (RAPA) shifts load off the weak GPU: aggregation spread
+        // across workers should not be larger than Vanilla's.
+        let spread = |r: &crate::train::TrainReport| {
+            let aggs: Vec<f64> = r.worker_stages.iter().map(|s| s.aggregation).collect();
+            stats::std_dev(&aggs)
+        };
+        assert!(spread(&rc) <= spread(&rv) * 1.05,
+            "capgnn {} vanilla {}", spread(&rc), spread(&rv));
+        assert!(rc.total_time() < rv.total_time());
+    }
+}

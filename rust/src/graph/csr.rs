@@ -1,0 +1,284 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! The whole repo works on undirected graphs stored in CSR with both edge
+//! directions materialized (each undirected edge {u,v} appears as (u,v) and
+//! (v,u)). Vertex ids are `u32` — the synthetic dataset twins top out well
+//! below 2^32.
+
+use crate::util::Rng;
+
+/// An undirected graph in CSR form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    /// Row pointer: `offsets[v]..offsets[v+1]` indexes `neighbors`.
+    pub offsets: Vec<u64>,
+    /// Column indices, sorted within each row.
+    pub neighbors: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list. Self-loops and duplicate edges
+    /// are removed; both directions are materialized.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        let mut deg = vec![0u64; n];
+        let mut clean: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            debug_assert!((u as usize) < n && (v as usize) < n);
+            clean.push((u, v));
+            clean.push((v, u));
+        }
+        clean.sort_unstable();
+        clean.dedup();
+        for &(u, _) in &clean {
+            deg[u as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let neighbors = clean.into_iter().map(|(_, v)| v).collect();
+        Graph { offsets, neighbors }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Number of directed arcs (2·m).
+    #[inline]
+    pub fn arcs(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Neighbors of `v`, sorted ascending.
+    #[inline]
+    pub fn nbrs(&self, v: u32) -> &[u32] {
+        &self.neighbors[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// True if the edge {u,v} exists (binary search).
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.nbrs(u).binary_search(&v).is_ok()
+    }
+
+    /// Average degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.arcs() as f64 / self.n() as f64
+        }
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Validate CSR invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        if *self.offsets.last().unwrap() as usize != self.neighbors.len() {
+            return Err("offsets end != neighbors len".into());
+        }
+        for v in 0..n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("offsets not monotone at {v}"));
+            }
+            let nb = self.nbrs(v as u32);
+            for w in nb.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {v} not strictly sorted"));
+                }
+            }
+            for &u in nb {
+                if u as usize >= n {
+                    return Err(format!("neighbor {u} out of range"));
+                }
+                if u == v as u32 {
+                    return Err(format!("self loop at {v}"));
+                }
+                if !self.has_edge(u, v as u32) {
+                    return Err(format!("asymmetric edge ({v},{u})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the induced subgraph over `vertices` (global ids). Returns
+    /// the subgraph plus the local→global id map; global ids not present
+    /// keep no edges.
+    pub fn induced_subgraph(&self, vertices: &[u32]) -> (Graph, Vec<u32>) {
+        let mut local_of = std::collections::HashMap::with_capacity(vertices.len());
+        for (i, &g) in vertices.iter().enumerate() {
+            local_of.insert(g, i as u32);
+        }
+        let mut edges = Vec::new();
+        for (i, &g) in vertices.iter().enumerate() {
+            for &nb in self.nbrs(g) {
+                if let Some(&j) = local_of.get(&nb) {
+                    if (i as u32) < j {
+                        edges.push((i as u32, j));
+                    }
+                }
+            }
+        }
+        (Graph::from_edges(vertices.len(), &edges), vertices.to_vec())
+    }
+
+    /// Symmetric-normalized dense adjacency with self loops:
+    /// Â = D̃^{-1/2} (A + I) D̃^{-1/2}, row-major `n×n`.
+    /// This is the GCN propagation operator (Kipf & Welling).
+    pub fn normalized_dense_adj(&self) -> Vec<f32> {
+        let n = self.n();
+        let mut dtilde = vec![0.0f64; n];
+        for v in 0..n {
+            dtilde[v] = self.degree(v as u32) as f64 + 1.0;
+        }
+        let inv_sqrt: Vec<f64> = dtilde.iter().map(|d| 1.0 / d.sqrt()).collect();
+        let mut a = vec![0.0f32; n * n];
+        for v in 0..n {
+            a[v * n + v] = (inv_sqrt[v] * inv_sqrt[v]) as f32;
+            for &u in self.nbrs(v as u32) {
+                a[v * n + u as usize] = (inv_sqrt[v] * inv_sqrt[u as usize]) as f32;
+            }
+        }
+        a
+    }
+
+    /// Row-normalized (mean-aggregator) dense adjacency without self
+    /// loops — the GraphSAGE mean aggregation operator. Isolated vertices
+    /// get an all-zero row.
+    pub fn mean_dense_adj(&self) -> Vec<f32> {
+        let n = self.n();
+        let mut a = vec![0.0f32; n * n];
+        for v in 0..n {
+            let d = self.degree(v as u32);
+            if d == 0 {
+                continue;
+            }
+            let w = 1.0 / d as f32;
+            for &u in self.nbrs(v as u32) {
+                a[v * n + u as usize] = w;
+            }
+        }
+        a
+    }
+
+    /// A random graph for tests: Erdős–Rényi G(n, m-ish).
+    pub fn random(n: usize, m: usize, rng: &mut Rng) -> Graph {
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let u = rng.index(n) as u32;
+            let v = rng.index(n) as u32;
+            if u != v {
+                edges.push((u, v));
+            }
+        }
+        Graph::from_edges(n, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path4() -> Graph {
+        // 0-1-2-3 path
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = path4();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.nbrs(1), &[0, 2]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(2), 0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = path4();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn induced_subgraph_maps_ids() {
+        let g = path4();
+        let (sub, ids) = g.induced_subgraph(&[1, 2, 3]);
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.m(), 2); // 1-2, 2-3 survive
+        assert!(sub.has_edge(0, 1));
+        assert!(sub.has_edge(1, 2));
+        assert!(!sub.has_edge(0, 2));
+    }
+
+    #[test]
+    fn normalized_adj_rows() {
+        let g = path4();
+        let a = g.normalized_dense_adj();
+        let n = 4;
+        // Symmetric.
+        for i in 0..n {
+            for j in 0..n {
+                assert!((a[i * n + j] - a[j * n + i]).abs() < 1e-6);
+            }
+        }
+        // Known value: deg(0)=1 → d̃=2, deg(1)=2 → d̃=3, edge weight 1/sqrt(6).
+        assert!((a[0 * n + 1] - 1.0 / 6.0f32.sqrt()).abs() < 1e-6);
+        assert!((a[0 * n + 0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_adj_rows_sum_to_one() {
+        let g = path4();
+        let a = g.mean_dense_adj();
+        for v in 0..4 {
+            let sum: f32 = a[v * 4..(v + 1) * 4].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row {v} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn random_graph_valid() {
+        let mut rng = Rng::new(1);
+        let g = Graph::random(50, 200, &mut rng);
+        assert_eq!(g.n(), 50);
+        g.check_invariants().unwrap();
+    }
+}

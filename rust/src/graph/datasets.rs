@@ -1,0 +1,257 @@
+//! Scaled-down synthetic twins of the paper's seven benchmark datasets
+//! (Table 5), plus tiny variants for tests.
+//!
+//! Each twin preserves the *structural knobs* that drive the paper's
+//! observations — average degree (density), degree skew, number of classes,
+//! homophily — at roughly 1/64–1/256 of the original vertex count so that
+//! full-batch training runs on the CPU PJRT backend in seconds. Feature
+//! dimensions are scaled to the artifact bucket sizes.
+
+use super::csr::Graph;
+use super::features::{split_masks, synth_features, NodeData};
+use super::generator::skewed_sbm;
+use crate::util::Rng;
+
+/// A dataset twin: graph + node data + provenance.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    /// Two-letter label the paper uses (Cl, Fr, Cs, Rt, Yp, As, Os).
+    pub label: &'static str,
+    pub graph: Graph,
+    pub data: NodeData,
+}
+
+/// Static description of a twin (what `build` generates).
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub label: &'static str,
+    /// Vertices in the twin.
+    pub n: usize,
+    /// Expected intra-class degree.
+    pub deg_in: f64,
+    /// Expected inter-class degree.
+    pub deg_out: f64,
+    /// Power-law skew (1.0 = uniform).
+    pub skew: f64,
+    pub classes: usize,
+    pub f_dim: usize,
+    /// Paper-reported original sizes, for reporting.
+    pub orig_nodes: usize,
+    pub orig_edges: usize,
+}
+
+/// The seven paper datasets as twins. Degrees approximate
+/// 2·|E|/|V| of the originals, capped so the dense per-partition adjacency
+/// stays affordable; `f_dim` matches the artifact buckets.
+pub const SPECS: [DatasetSpec; 7] = [
+    DatasetSpec {
+        name: "corafull",
+        label: "Cl",
+        n: 1536,
+        deg_in: 8.0,
+        deg_out: 2.0,
+        skew: 1.3,
+        classes: 16,
+        f_dim: 64,
+        orig_nodes: 19_793,
+        orig_edges: 126_842,
+    },
+    DatasetSpec {
+        name: "flickr",
+        label: "Fr",
+        n: 2048,
+        deg_in: 12.0,
+        deg_out: 6.0,
+        skew: 1.8,
+        classes: 7,
+        f_dim: 64,
+        orig_nodes: 89_250,
+        orig_edges: 899_756,
+    },
+    DatasetSpec {
+        name: "coauthor-physics",
+        label: "Cs",
+        n: 1536,
+        deg_in: 20.0,
+        deg_out: 4.0,
+        skew: 1.4,
+        classes: 5,
+        f_dim: 64,
+        orig_nodes: 34_493,
+        orig_edges: 495_924,
+    },
+    DatasetSpec {
+        name: "reddit",
+        label: "Rt",
+        n: 3072,
+        deg_in: 60.0,
+        deg_out: 24.0,
+        skew: 2.0,
+        classes: 16,
+        f_dim: 64,
+        orig_nodes: 232_965,
+        orig_edges: 114_615_892,
+    },
+    DatasetSpec {
+        name: "yelp",
+        label: "Yp",
+        n: 4096,
+        deg_in: 18.0,
+        deg_out: 12.0,
+        skew: 1.8,
+        classes: 16,
+        f_dim: 64,
+        orig_nodes: 716_847,
+        orig_edges: 13_954_819,
+    },
+    DatasetSpec {
+        name: "amazon-products",
+        label: "As",
+        n: 6144,
+        deg_in: 90.0,
+        deg_out: 60.0,
+        skew: 2.2,
+        classes: 16,
+        f_dim: 64,
+        orig_nodes: 1_569_960,
+        orig_edges: 264_339_468,
+    },
+    DatasetSpec {
+        name: "ogbn-products",
+        label: "Os",
+        n: 6144,
+        deg_in: 30.0,
+        deg_out: 14.0,
+        skew: 2.0,
+        classes: 16,
+        f_dim: 64,
+        orig_nodes: 2_449_029,
+        orig_edges: 61_859_140,
+    },
+];
+
+/// Look up a spec by `name` or paper `label` (case-insensitive).
+pub fn spec_by_name(name: &str) -> Option<&'static DatasetSpec> {
+    let lower = name.to_ascii_lowercase();
+    SPECS
+        .iter()
+        .find(|s| s.name == lower || s.label.to_ascii_lowercase() == lower)
+}
+
+impl DatasetSpec {
+    /// Materialize the twin deterministically from `seed`.
+    pub fn build(&self, seed: u64) -> Dataset {
+        self.build_scaled(seed, 1.0)
+    }
+
+    /// Materialize at `scale`× the twin's node count (benches use <1 for
+    /// quick mode, tests use tiny scales).
+    pub fn build_scaled(&self, seed: u64, scale: f64) -> Dataset {
+        let n = ((self.n as f64 * scale) as usize).max(self.classes * 4);
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        let (graph, labels) =
+            skewed_sbm(n, self.classes, self.deg_in, self.deg_out, self.skew, &mut rng);
+        let features = synth_features(
+            &graph,
+            &labels,
+            self.classes,
+            self.f_dim,
+            0.8,
+            0.2,
+            &mut rng,
+        );
+        let (train_mask, val_mask, test_mask) = split_masks(n, 0.6, 0.2, &mut rng);
+        Dataset {
+            name: self.name,
+            label: self.label,
+            graph,
+            data: NodeData {
+                features,
+                f_dim: self.f_dim,
+                labels,
+                num_classes: self.classes,
+                train_mask,
+                val_mask,
+                test_mask,
+            },
+        }
+    }
+}
+
+/// Tiny dataset for unit/integration tests: 4-class SBM, 256 vertices.
+pub fn tiny(seed: u64) -> Dataset {
+    let spec = DatasetSpec {
+        name: "tiny",
+        label: "Ty",
+        n: 256,
+        deg_in: 10.0,
+        deg_out: 2.0,
+        skew: 1.2,
+        classes: 4,
+        f_dim: 16,
+        orig_nodes: 256,
+        orig_edges: 1536,
+    };
+    let mut d = spec.build(seed);
+    d.name = "tiny";
+    d
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_specs_build_scaled_down() {
+        for spec in &SPECS {
+            let d = spec.build_scaled(1, 0.125);
+            d.graph.check_invariants().unwrap();
+            assert_eq!(d.data.n(), d.graph.n());
+            assert_eq!(d.data.features.len(), d.graph.n() * spec.f_dim);
+            assert!(d.data.labels.iter().all(|&l| (l as usize) < spec.classes));
+        }
+    }
+
+    #[test]
+    fn lookup_by_name_and_label() {
+        assert_eq!(spec_by_name("reddit").unwrap().label, "Rt");
+        assert_eq!(spec_by_name("rt").unwrap().name, "reddit");
+        assert_eq!(spec_by_name("Os").unwrap().name, "ogbn-products");
+        assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn deterministic_builds() {
+        let a = spec_by_name("Cl").unwrap().build_scaled(7, 0.25);
+        let b = spec_by_name("Cl").unwrap().build_scaled(7, 0.25);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.data.labels, b.data.labels);
+    }
+
+    #[test]
+    fn tiny_is_small() {
+        let d = tiny(3);
+        assert_eq!(d.graph.n(), 256);
+        assert_eq!(d.data.num_classes, 4);
+    }
+
+    #[test]
+    fn density_ordering_matches_paper() {
+        // Rt/As are the dense twins, Cl the sparsest — same ordering as the
+        // originals' average degrees.
+        let cl = spec_by_name("Cl").unwrap().build_scaled(1, 0.25);
+        let rt = spec_by_name("Rt").unwrap().build_scaled(1, 0.25);
+        assert!(rt.graph.avg_degree() > 2.0 * cl.graph.avg_degree());
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets (Reddit, Yelp, AmazonProducts, ogbn-products, …)
+//! are replaced by scaled-down synthetic twins (substitution S2 in
+//! DESIGN.md). Two families cover their structure:
+//!
+//! - **SBM** (stochastic block model): class-homophilous community graphs.
+//!   Communities double as labels, so GNNs genuinely learn from structure —
+//!   needed for the accuracy columns of Tables 7/8 and Fig. 22.
+//! - **R-MAT**: power-law graphs matching the skewed degree distributions
+//!   that make halo explosion (Obs. 1–2) pronounced.
+
+use super::csr::Graph;
+use crate::util::Rng;
+
+/// Stochastic block model with `k` equal blocks.
+///
+/// `p_in`/`p_out` are expressed as *expected degrees*: each vertex gets on
+/// average `deg_in` neighbors inside its block and `deg_out` outside, which
+/// keeps generation O(m) instead of O(n²).
+pub fn sbm(n: usize, k: usize, deg_in: f64, deg_out: f64, rng: &mut Rng) -> (Graph, Vec<u32>) {
+    assert!(k >= 1 && n >= k);
+    let labels: Vec<u32> = (0..n).map(|v| (v % k) as u32).collect();
+    // Vertices of each block.
+    let mut blocks: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for v in 0..n {
+        blocks[labels[v] as usize].push(v as u32);
+    }
+    let m_in = (n as f64 * deg_in / 2.0) as usize;
+    let m_out = (n as f64 * deg_out / 2.0) as usize;
+    let mut edges = Vec::with_capacity(m_in + m_out);
+    for _ in 0..m_in {
+        let b = rng.index(k);
+        let bl = &blocks[b];
+        if bl.len() < 2 {
+            continue;
+        }
+        let u = bl[rng.index(bl.len())];
+        let v = bl[rng.index(bl.len())];
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    for _ in 0..m_out {
+        let b1 = rng.index(k);
+        let mut b2 = rng.index(k);
+        if k > 1 {
+            while b2 == b1 {
+                b2 = rng.index(k);
+            }
+        }
+        let u = blocks[b1][rng.index(blocks[b1].len())];
+        let v = blocks[b2][rng.index(blocks[b2].len())];
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    (Graph::from_edges(n, &edges), labels)
+}
+
+/// R-MAT generator (Chakrabarti et al.): recursively subdivide the
+/// adjacency matrix with probabilities (a,b,c,d). Defaults a=0.57, b=c=0.19
+/// produce a power-law degree distribution similar to social graphs.
+pub fn rmat(scale: u32, avg_degree: f64, rng: &mut Rng) -> Graph {
+    let n = 1usize << scale;
+    let m = (n as f64 * avg_degree / 2.0) as usize;
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u != v {
+            edges.push((u as u32, v as u32));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// SBM with an R-MAT-style skew inside blocks: vertices are picked with a
+/// power-law bias so the twin matches both homophily *and* degree skew.
+pub fn skewed_sbm(
+    n: usize,
+    k: usize,
+    deg_in: f64,
+    deg_out: f64,
+    skew: f64,
+    rng: &mut Rng,
+) -> (Graph, Vec<u32>) {
+    assert!(k >= 1 && n >= k);
+    let labels: Vec<u32> = (0..n).map(|v| (v % k) as u32).collect();
+    let mut blocks: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for v in 0..n {
+        blocks[labels[v] as usize].push(v as u32);
+    }
+    // Power-law index: idx = floor(len * u^skew) biases toward low indices.
+    let pick = |bl: &[u32], rng: &mut Rng| -> u32 {
+        let u = rng.f64();
+        let idx = ((bl.len() as f64) * u.powf(skew)) as usize;
+        bl[idx.min(bl.len() - 1)]
+    };
+    let m_in = (n as f64 * deg_in / 2.0) as usize;
+    let m_out = (n as f64 * deg_out / 2.0) as usize;
+    let mut edges = Vec::with_capacity(m_in + m_out);
+    for _ in 0..m_in {
+        let b = rng.index(k);
+        let u = pick(&blocks[b], rng);
+        let v = pick(&blocks[b], rng);
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    for _ in 0..m_out {
+        let b1 = rng.index(k);
+        let mut b2 = rng.index(k);
+        if k > 1 {
+            while b2 == b1 {
+                b2 = rng.index(k);
+            }
+        }
+        let u = pick(&blocks[b1], rng);
+        let v = pick(&blocks[b2], rng);
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    (Graph::from_edges(n, &edges), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbm_shape_and_homophily() {
+        let mut rng = Rng::new(42);
+        let (g, labels) = sbm(600, 6, 12.0, 2.0, &mut rng);
+        assert_eq!(g.n(), 600);
+        g.check_invariants().unwrap();
+        // Most edges should be intra-block.
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for v in 0..g.n() as u32 {
+            for &u in g.nbrs(v) {
+                total += 1;
+                if labels[u as usize] == labels[v as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        let h = intra as f64 / total as f64;
+        assert!(h > 0.7, "homophily {h} too low");
+    }
+
+    #[test]
+    fn rmat_power_law_skew() {
+        let mut rng = Rng::new(7);
+        let g = rmat(10, 8.0, &mut rng);
+        assert_eq!(g.n(), 1024);
+        g.check_invariants().unwrap();
+        // Skewed: max degree far above average.
+        assert!(g.max_degree() as f64 > 4.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn skewed_sbm_valid() {
+        let mut rng = Rng::new(9);
+        let (g, labels) = skewed_sbm(500, 5, 10.0, 3.0, 2.0, &mut rng);
+        g.check_invariants().unwrap();
+        assert_eq!(labels.len(), 500);
+        assert!(g.max_degree() as f64 > 2.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let (g1, _) = sbm(200, 4, 8.0, 2.0, &mut Rng::new(5));
+        let (g2, _) = sbm(200, 4, 8.0, 2.0, &mut Rng::new(5));
+        assert_eq!(g1, g2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Graph substrate: CSR storage, synthetic generators, the dataset-twin
+//! suite (substitution S2), feature synthesis and reordering.
+
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod generator;
+pub mod reorder;
+
+pub use csr::Graph;
+pub use datasets::{spec_by_name, Dataset, DatasetSpec, SPECS};
+pub use features::NodeData;

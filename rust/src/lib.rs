@@ -1,0 +1,29 @@
+//! # CaPGNN
+//!
+//! Reproduction of *CaPGNN: Optimizing Parallel Graph Neural Network
+//! Training with Joint Caching and Resource-Aware Graph Partitioning*
+//! (Song, Zou, Shi, 2025) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The crate is the **layer-3 coordinator**: it owns the graph substrate,
+//! the partitioners (METIS-like multilevel / Random / Fennel / RAPA), the
+//! two-level JACA cache, the communication queues and pipeline, the
+//! heterogeneous-device performance model, and the full-batch multi-worker
+//! trainer. The per-layer GNN compute graphs are AOT-compiled from JAX
+//! (layer 2) with a Pallas aggregation kernel (layer 1) into HLO text that
+//! [`runtime`] loads through the PJRT CPU client.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod baselines;
+pub mod cache;
+pub mod comm;
+pub mod config;
+pub mod device;
+pub mod dist;
+pub mod expt;
+pub mod graph;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,222 @@
+//! `capgnn` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   train      run one training configuration and print the report
+//!   partition  run a partitioner (+ optional RAPA) and print halo stats
+//!   device     print the simulated-testbed Table 1
+//!   expt <id>  run a paper experiment (fig4…tab9; see DESIGN.md)
+//!   info       datasets, artifact status, experiment ids
+
+use capgnn::baselines::System;
+use capgnn::device::profile::GpuGroup;
+use capgnn::expt;
+use capgnn::graph::SPECS;
+use capgnn::partition::halo::halo_stats;
+use capgnn::partition::rapa::{self, RapaConfig};
+use capgnn::runtime::Manifest;
+use capgnn::train::train;
+use capgnn::util::table::fmt_secs;
+use capgnn::util::{Args, Rng, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "train" => cmd_train(&args),
+        "partition" => cmd_partition(&args),
+        "device" => {
+            expt::device_tab::tab1(expt::Ctx::from_args(&args));
+            0
+        }
+        "expt" => cmd_expt(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            if cmd == "help" {
+                0
+            } else {
+                eprintln!("unknown command: {cmd}");
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "capgnn — parallel full-batch GNN training (CaPGNN reproduction)
+
+USAGE: capgnn <command> [options]
+
+COMMANDS:
+  train      --dataset rt --group x4 --system capgnn --model gcn
+             --epochs 200 --backend native|xla --scale 1.0
+             [--policy jaca|fifo|lru --method metis|random|fennel
+              --no-pipe --no-cache --no-rapa --refresh 8
+              --local-cap N --global-cap N --seed 42]
+  partition  --dataset rt --group x4 --method metis [--rapa] [--hops 1]
+  device     print the simulated GPU testbed (paper Table 1)
+  expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
+             fig21 fig22 tab7 [--full] tab8 tab9   [--quick]
+  info       list datasets, artifacts, experiments"
+    );
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let spec = match capgnn::config::run_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut backend = match spec.backend.build() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("backend error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "training {} on {} ({} vertices, {} edges) with {} GPUs [{}], backend={}",
+        spec.train.model.name(),
+        spec.dataset.name,
+        spec.dataset.graph.n(),
+        spec.dataset.graph.m(),
+        spec.gpus.len(),
+        spec.system.name(),
+        backend.name(),
+    );
+    match train(&spec.dataset, &spec.gpus, &spec.topology, backend.as_mut(), &spec.train) {
+        Ok(r) => {
+            println!(
+                "epochs={} total={}s comm={}s (sim) | loss {:.4} -> {:.4} | best val acc {:.2}% | test acc {:.2}%",
+                r.epoch_times.len(),
+                fmt_secs(r.total_time()),
+                fmt_secs(r.total_comm()),
+                r.losses.first().copied().unwrap_or(f32::NAN),
+                r.losses.last().copied().unwrap_or(f32::NAN),
+                r.best_val_acc() * 100.0,
+                r.test_acc * 100.0,
+            );
+            println!(
+                "cache: {:.1}% hit rate, {} fills | bytes moved {} saved {} | wallclock {:.1}s",
+                r.cache.hit_rate() * 100.0,
+                r.cache.fills,
+                r.bytes_moved,
+                r.bytes_saved,
+                r.wallclock
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_partition(args: &Args) -> i32 {
+    let spec = match capgnn::config::run_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut rng = Rng::new(spec.train.seed);
+    let hops = args.usize_or("hops", 1);
+    let ps = spec.train.method.partition(&spec.dataset.graph, spec.gpus.len(), &mut rng);
+    let st = halo_stats(&spec.dataset.graph, &ps, hops);
+    let mut table = Table::new(
+        &format!(
+            "partition {} of {} into {} parts (hops={hops})",
+            spec.train.method.name(),
+            spec.dataset.name,
+            spec.gpus.len()
+        ),
+        &["part", "inner", "halo"],
+    );
+    for (i, (inner, halo)) in st.inner.iter().zip(&st.halo).enumerate() {
+        table.row(vec![i.to_string(), inner.to_string(), halo.to_string()]);
+    }
+    table.print();
+    println!(
+        "edge cut {} | total halo {} ({:.2}x inner) | overlapping {}",
+        st.edge_cut,
+        st.total_halo,
+        st.halo_to_inner(),
+        st.overlapping
+    );
+    if args.has_flag("rapa") {
+        let res = rapa::run(
+            &spec.dataset.graph,
+            &spec.gpus,
+            &RapaConfig::default(),
+            spec.train.method,
+            &mut rng,
+        );
+        println!(
+            "RAPA: {} iterations, pruned {:?} halo replicas, final lambda {:?}",
+            res.trace.len() - 1,
+            res.pruned,
+            res.lambda.iter().map(|l| format!("{l:.1}")).collect::<Vec<_>>()
+        );
+    }
+    0
+}
+
+fn cmd_expt(args: &Args) -> i32 {
+    let Some(id) = args.positional.get(1) else {
+        eprintln!("usage: capgnn expt <id>; ids: {}", expt::ALL_IDS.join(" "));
+        return 2;
+    };
+    match expt::run(id, args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    let mut table = Table::new(
+        "dataset twins (substitution S2)",
+        &["label", "name", "twin |V|", "classes", "f_dim", "orig |V|", "orig |E|"],
+    );
+    for spec in &SPECS {
+        table.row(vec![
+            spec.label.to_string(),
+            spec.name.to_string(),
+            spec.n.to_string(),
+            spec.classes.to_string(),
+            spec.f_dim.to_string(),
+            spec.orig_nodes.to_string(),
+            spec.orig_edges.to_string(),
+        ]);
+    }
+    table.print();
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => println!(
+            "artifacts: {} units in {} (buckets {:?})",
+            m.units.len(),
+            m.dir.display(),
+            m.n_buckets
+        ),
+        Err(e) => println!("artifacts: NOT BUILT ({e}) — run `make artifacts`"),
+    }
+    println!("GPU groups: x2..x8 (see Table 4)");
+    println!(
+        "systems: {}",
+        capgnn::baselines::ALL_SYSTEMS
+            .iter()
+            .map(|s| s.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!("experiments: {}", expt::ALL_IDS.join(" "));
+    let _ = (System::CaPGnn, GpuGroup::by_name("x2"));
+    0
+}

@@ -1,0 +1,181 @@
+//! GNN model parameters (GCN / GraphSAGE) shared by all workers.
+//!
+//! The compute itself lives in the backends ([`crate::runtime`]); this
+//! module owns weight shapes, Glorot initialization, and the SGD update —
+//! identical across workers after each gradient all-reduce.
+
+use crate::util::Rng;
+
+/// Which architecture (paper evaluates GCN and GraphSAGE).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Sage,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "GCN",
+            ModelKind::Sage => "GraphSAGE",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Some(ModelKind::Gcn),
+            "sage" | "graphsage" => Some(ModelKind::Sage),
+            _ => None,
+        }
+    }
+
+    /// Weight matrices per layer (GCN: W; SAGE: Wself, Wneigh).
+    pub fn mats_per_layer(self) -> usize {
+        match self {
+            ModelKind::Gcn => 1,
+            ModelKind::Sage => 2,
+        }
+    }
+}
+
+/// One layer's shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerDims {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub relu: bool,
+}
+
+/// Standard layer stack: f → hidden → … → classes, relu everywhere but the
+/// last layer (paper: 3-layer, hidden 256 — scaled to the artifact dims).
+pub fn layer_stack(f_dim: usize, hidden: usize, classes: usize, layers: usize) -> Vec<LayerDims> {
+    assert!(layers >= 1);
+    let mut dims = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let d_in = if l == 0 { f_dim } else { hidden };
+        let d_out = if l == layers - 1 { classes } else { hidden };
+        dims.push(LayerDims { d_in, d_out, relu: l != layers - 1 });
+    }
+    dims
+}
+
+/// Model parameters.
+#[derive(Clone, Debug)]
+pub struct GnnModel {
+    pub kind: ModelKind,
+    pub dims: Vec<LayerDims>,
+    /// weights[layer][mat] — row-major d_in×d_out.
+    pub weights: Vec<Vec<Vec<f32>>>,
+}
+
+impl GnnModel {
+    /// Glorot-uniform init, deterministic in `rng`.
+    pub fn new(kind: ModelKind, dims: Vec<LayerDims>, rng: &mut Rng) -> GnnModel {
+        let weights = dims
+            .iter()
+            .map(|d| {
+                (0..kind.mats_per_layer())
+                    .map(|_| glorot(d.d_in, d.d_out, rng))
+                    .collect()
+            })
+            .collect();
+        GnnModel { kind, dims, weights }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.weights
+            .iter()
+            .flat_map(|l| l.iter().map(|m| m.len()))
+            .sum()
+    }
+
+    /// Gradient byte size (for the all-reduce cost model).
+    pub fn grad_bytes(&self) -> u64 {
+        (self.param_count() * 4) as u64
+    }
+
+    /// SGD step: w ← w − lr·g. `grads` mirrors `weights`.
+    pub fn sgd_step(&mut self, grads: &[Vec<Vec<f32>>], lr: f32) {
+        assert_eq!(grads.len(), self.weights.len());
+        for (lw, lg) in self.weights.iter_mut().zip(grads) {
+            for (w, g) in lw.iter_mut().zip(lg) {
+                debug_assert_eq!(w.len(), g.len());
+                for (wv, gv) in w.iter_mut().zip(g) {
+                    *wv -= lr * gv;
+                }
+            }
+        }
+    }
+
+    /// Zero-shaped gradient accumulator.
+    pub fn zero_grads(&self) -> Vec<Vec<Vec<f32>>> {
+        self.weights
+            .iter()
+            .map(|l| l.iter().map(|m| vec![0.0; m.len()]).collect())
+            .collect()
+    }
+}
+
+fn glorot(d_in: usize, d_out: usize, rng: &mut Rng) -> Vec<f32> {
+    let limit = (6.0 / (d_in + d_out) as f64).sqrt();
+    (0..d_in * d_out)
+        .map(|_| ((rng.f64() * 2.0 - 1.0) * limit) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_shapes() {
+        let dims = layer_stack(64, 32, 16, 3);
+        assert_eq!(dims.len(), 3);
+        assert_eq!(dims[0], LayerDims { d_in: 64, d_out: 32, relu: true });
+        assert_eq!(dims[1], LayerDims { d_in: 32, d_out: 32, relu: true });
+        assert_eq!(dims[2], LayerDims { d_in: 32, d_out: 16, relu: false });
+    }
+
+    #[test]
+    fn single_layer_stack() {
+        let dims = layer_stack(8, 4, 2, 1);
+        assert_eq!(dims, vec![LayerDims { d_in: 8, d_out: 2, relu: false }]);
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut rng = Rng::new(1);
+        let w = glorot(100, 100, &mut rng);
+        let limit = (6.0f64 / 200.0).sqrt() as f32;
+        assert!(w.iter().all(|v| v.abs() <= limit));
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        assert!(mean.abs() < 0.01);
+    }
+
+    #[test]
+    fn sage_has_two_mats() {
+        let mut rng = Rng::new(2);
+        let m = GnnModel::new(ModelKind::Sage, layer_stack(8, 8, 4, 2), &mut rng);
+        assert_eq!(m.weights[0].len(), 2);
+        assert_eq!(m.param_count(), 2 * (8 * 8) + 2 * (8 * 4));
+        assert_eq!(m.grad_bytes(), (m.param_count() * 4) as u64);
+    }
+
+    #[test]
+    fn sgd_moves_weights() {
+        let mut rng = Rng::new(3);
+        let mut m = GnnModel::new(ModelKind::Gcn, layer_stack(4, 4, 2, 2), &mut rng);
+        let before = m.weights[0][0].clone();
+        let mut grads = m.zero_grads();
+        grads[0][0].iter_mut().for_each(|g| *g = 1.0);
+        m.sgd_step(&grads, 0.1);
+        for (b, a) in before.iter().zip(&m.weights[0][0]) {
+            assert!((b - a - 0.1).abs() < 1e-6);
+        }
+    }
+}

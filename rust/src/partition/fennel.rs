@@ -1,0 +1,95 @@
+//! Fennel streaming partitioner (Tsourakakis et al., WSDM'14).
+//!
+//! Single pass over a random vertex stream; each vertex goes to the part
+//! maximizing `|N(v) ∩ Pᵢ| − α·γ·|Pᵢ|^{γ−1}` subject to a hard balance cap.
+//! Used as the streaming alternative pre-partitioner (paper §2.4 mentions
+//! Fennel as the streaming family).
+
+use super::PartitionSet;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+const GAMMA: f64 = 1.5;
+/// Hard cap on part size relative to perfect balance.
+const SLACK: f64 = 1.1;
+
+pub fn partition(g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
+    let n = g.n();
+    let m = g.m().max(1);
+    // α from the paper: m · (γ/2)^... simplified standard choice.
+    let alpha = (m as f64) * (parts as f64).powf(GAMMA - 1.0) / (n as f64).powf(GAMMA);
+    let cap = ((n as f64 / parts as f64) * SLACK).ceil() as usize;
+
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut assignment = vec![u32::MAX; n];
+    let mut sizes = vec![0usize; parts];
+    let mut nbr_count = vec![0usize; parts];
+
+    for &v in &order {
+        for c in nbr_count.iter_mut() {
+            *c = 0;
+        }
+        for &u in g.nbrs(v) {
+            let p = assignment[u as usize];
+            if p != u32::MAX {
+                nbr_count[p as usize] += 1;
+            }
+        }
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..parts {
+            if sizes[p] >= cap {
+                continue;
+            }
+            let score =
+                nbr_count[p] as f64 - alpha * GAMMA * (sizes[p] as f64).powf(GAMMA - 1.0);
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        // All full (possible only from rounding): take smallest.
+        if best_score == f64::NEG_INFINITY {
+            best = (0..parts).min_by_key(|&p| sizes[p]).unwrap();
+        }
+        assignment[v as usize] = best as u32;
+        sizes[best] += 1;
+    }
+    PartitionSet::new(parts, assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::sbm;
+    use crate::partition::random;
+
+    #[test]
+    fn respects_balance_cap() {
+        let mut rng = Rng::new(1);
+        let (g, _) = sbm(500, 5, 8.0, 2.0, &mut rng);
+        let ps = partition(&g, 5, &mut rng);
+        ps.check(&g).unwrap();
+        assert!(ps.imbalance() <= SLACK + 0.05, "imbalance {}", ps.imbalance());
+    }
+
+    #[test]
+    fn cuts_fewer_edges_than_random() {
+        let mut rng = Rng::new(2);
+        let (g, _) = sbm(600, 4, 10.0, 1.0, &mut rng);
+        let fennel = partition(&g, 4, &mut rng);
+        let rand = random::partition(&g, 4, &mut rng);
+        assert!(fennel.edge_cut(&g) < rand.edge_cut(&g));
+    }
+
+    #[test]
+    fn assigns_every_vertex() {
+        let mut rng = Rng::new(3);
+        let (g, _) = sbm(100, 2, 6.0, 2.0, &mut rng);
+        let ps = partition(&g, 3, &mut rng);
+        assert!(ps.assignment.iter().all(|&p| p != u32::MAX));
+        assert_eq!(ps.sizes().iter().sum::<usize>(), 100);
+    }
+}

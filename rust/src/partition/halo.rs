@@ -1,0 +1,315 @@
+//! Halo-vertex machinery: k-hop halo expansion, the vertex overlap ratio
+//! R(v) (paper Eq. 2), duplicate/edge-cut statistics behind the motivation
+//! study (Figs. 4–6), and the [`SubgraphPlan`] the trainer consumes.
+
+use super::PartitionSet;
+use crate::graph::Graph;
+use std::collections::{HashMap, HashSet};
+
+/// Halo vertices of part `p`: vertices within `hops` of the part's inner
+/// set that are not inner themselves. Sorted ascending.
+pub fn expand_halo(g: &Graph, ps: &PartitionSet, p: u32, hops: usize) -> Vec<u32> {
+    let mut frontier: Vec<u32> = ps.members(p);
+    let inner: HashSet<u32> = frontier.iter().copied().collect();
+    let mut halo: HashSet<u32> = HashSet::new();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.nbrs(v) {
+                if !inner.contains(&u) && halo.insert(u) {
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    let mut out: Vec<u32> = halo.into_iter().collect();
+    out.sort_unstable();
+    out
+}
+
+/// Aggregate halo statistics for one (graph, partitioning, hops) setting —
+/// the quantities Figs. 4–6 plot.
+#[derive(Clone, Debug)]
+pub struct HaloStats {
+    pub hops: usize,
+    /// Inner vertex count per part.
+    pub inner: Vec<usize>,
+    /// Halo vertex count per part.
+    pub halo: Vec<usize>,
+    /// Σ halo (with multiplicity across parts).
+    pub total_halo: usize,
+    /// Number of distinct vertices appearing in ≥1 halo.
+    pub unique_halo: usize,
+    /// Number of distinct vertices appearing in ≥2 halos (the duplicates of
+    /// Obs. 2 / Fig. 6).
+    pub overlapping: usize,
+    /// Unique cut edges (Fig. 5).
+    pub edge_cut: usize,
+}
+
+impl HaloStats {
+    /// Ratio of total halo to total inner vertices (Obs. 1: often ≥ 1).
+    pub fn halo_to_inner(&self) -> f64 {
+        let inner: usize = self.inner.iter().sum();
+        if inner == 0 {
+            0.0
+        } else {
+            self.total_halo as f64 / inner as f64
+        }
+    }
+}
+
+/// Compute the overlap ratio R(v) = |{i : v ∈ H(Gᵢ)}| for every vertex
+/// (paper Eq. 2). Returns a dense vector indexed by vertex id.
+pub fn overlap_ratio(g: &Graph, ps: &PartitionSet, hops: usize) -> Vec<u32> {
+    let mut r = vec![0u32; g.n()];
+    for p in 0..ps.num_parts as u32 {
+        for v in expand_halo(g, ps, p, hops) {
+            r[v as usize] += 1;
+        }
+    }
+    r
+}
+
+/// Full halo statistics for a partitioning.
+pub fn halo_stats(g: &Graph, ps: &PartitionSet, hops: usize) -> HaloStats {
+    let mut inner = Vec::with_capacity(ps.num_parts);
+    let mut halo = Vec::with_capacity(ps.num_parts);
+    let mut seen: HashMap<u32, u32> = HashMap::new();
+    let mut total = 0usize;
+    for p in 0..ps.num_parts as u32 {
+        let members = ps.members(p);
+        inner.push(members.len());
+        let h = expand_halo(g, ps, p, hops);
+        total += h.len();
+        for v in &h {
+            *seen.entry(*v).or_insert(0) += 1;
+        }
+        halo.push(h.len());
+    }
+    HaloStats {
+        hops,
+        inner,
+        halo,
+        total_halo: total,
+        unique_halo: seen.len(),
+        overlapping: seen.values().filter(|&&c| c >= 2).count(),
+        edge_cut: ps.edge_cut(g),
+    }
+}
+
+/// A training-ready subgraph: inner vertices followed by 1-hop halo
+/// vertices, with the local adjacency among them. This is what each worker
+/// (GPU) owns.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    /// This part's id.
+    pub part: u32,
+    /// Global ids: `[inner..., halo...]`; local id = index.
+    pub global_ids: Vec<u32>,
+    /// Number of inner vertices (prefix of `global_ids`).
+    pub n_inner: usize,
+    /// Owner part of each halo vertex (parallel to the halo suffix).
+    pub halo_owner: Vec<u32>,
+    /// Local graph over `global_ids` (edges among inner∪halo).
+    pub local: Graph,
+    /// Overlap ratio of each halo vertex (for JACA priority).
+    pub halo_overlap: Vec<u32>,
+}
+
+impl Subgraph {
+    pub fn n_local(&self) -> usize {
+        self.global_ids.len()
+    }
+    pub fn n_halo(&self) -> usize {
+        self.global_ids.len() - self.n_inner
+    }
+    /// Halo global ids (suffix).
+    pub fn halo_ids(&self) -> &[u32] {
+        &self.global_ids[self.n_inner..]
+    }
+    /// Local index of a global id, if present.
+    pub fn local_of(&self, global: u32) -> Option<usize> {
+        // global_ids is not sorted overall (inner sorted, halo sorted);
+        // search both segments.
+        let (inner, halo) = self.global_ids.split_at(self.n_inner);
+        inner
+            .binary_search(&global)
+            .ok()
+            .or_else(|| halo.binary_search(&global).ok().map(|i| i + self.n_inner))
+    }
+}
+
+/// A full per-worker plan: one [`Subgraph`] per part (1-hop halo — the
+/// exchange granularity of per-layer training).
+#[derive(Clone, Debug)]
+pub struct SubgraphPlan {
+    pub parts: Vec<Subgraph>,
+    /// Global overlap ratio (1-hop) used by JACA.
+    pub overlap: Vec<u32>,
+}
+
+/// Build the plan from a partitioning with full 1-hop halos.
+pub fn build_plan(g: &Graph, ps: &PartitionSet) -> SubgraphPlan {
+    let halos: Vec<Vec<u32>> = (0..ps.num_parts as u32)
+        .map(|p| expand_halo(g, ps, p, 1))
+        .collect();
+    build_plan_with_halos(g, ps, &halos)
+}
+
+/// Build the plan with explicitly chosen halo sets (RAPA prunes halo
+/// replicas, so its plan keeps only a subset of each part's 1-hop halo).
+pub fn build_plan_with_halos(g: &Graph, ps: &PartitionSet, halos: &[Vec<u32>]) -> SubgraphPlan {
+    assert_eq!(halos.len(), ps.num_parts);
+    let overlap = overlap_ratio(g, ps, 1);
+    let mut parts = Vec::with_capacity(ps.num_parts);
+    for p in 0..ps.num_parts as u32 {
+        let inner = ps.members(p);
+        let mut halo = halos[p as usize].clone();
+        halo.sort_unstable();
+        let mut global_ids = inner.clone();
+        global_ids.extend_from_slice(&halo);
+        let halo_owner: Vec<u32> = halo.iter().map(|&v| ps.assignment[v as usize]).collect();
+        let halo_overlap: Vec<u32> = halo.iter().map(|&v| overlap[v as usize]).collect();
+
+        // Local edges: all edges with at least one inner endpoint (edges
+        // between two halo vertices are irrelevant for aggregating inner
+        // rows and are dropped to keep the local graph sparse).
+        let mut local_of: HashMap<u32, u32> = HashMap::with_capacity(global_ids.len());
+        for (i, &v) in global_ids.iter().enumerate() {
+            local_of.insert(v, i as u32);
+        }
+        let mut edges = Vec::new();
+        for (i, &v) in inner.iter().enumerate() {
+            for &u in g.nbrs(v) {
+                if let Some(&j) = local_of.get(&u) {
+                    let i = i as u32;
+                    // Keep inner-inner once; inner-halo always (halo local
+                    // index > n_inner so i < j holds).
+                    if i < j {
+                        edges.push((i, j));
+                    } else if (j as usize) < inner.len() {
+                        // inner-inner already counted from the other side
+                    } else {
+                        edges.push((j, i));
+                    }
+                }
+            }
+        }
+        let local = Graph::from_edges(global_ids.len(), &edges);
+        parts.push(Subgraph {
+            part: p,
+            global_ids,
+            n_inner: inner.len(),
+            halo_owner,
+            local,
+            halo_overlap,
+        });
+    }
+    SubgraphPlan { parts, overlap }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::sbm;
+    use crate::partition::{Method, PartitionSet};
+    use crate::util::Rng;
+
+    fn sample() -> (Graph, PartitionSet) {
+        // 0-1-2-3-4 path split as {0,1},{2,3},{4}
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let ps = PartitionSet::new(3, vec![0, 0, 1, 1, 2]);
+        (g, ps)
+    }
+
+    #[test]
+    fn one_hop_halo() {
+        let (g, ps) = sample();
+        assert_eq!(expand_halo(&g, &ps, 0, 1), vec![2]);
+        assert_eq!(expand_halo(&g, &ps, 1, 1), vec![1, 4]);
+        assert_eq!(expand_halo(&g, &ps, 2, 1), vec![3]);
+    }
+
+    #[test]
+    fn two_hop_halo_grows() {
+        let (g, ps) = sample();
+        assert_eq!(expand_halo(&g, &ps, 0, 2), vec![2, 3]);
+        assert_eq!(expand_halo(&g, &ps, 2, 2), vec![2, 3]);
+    }
+
+    #[test]
+    fn overlap_ratio_eq2() {
+        let (g, ps) = sample();
+        let r = overlap_ratio(&g, &ps, 1);
+        // v1 is halo of part1 only; v2 halo of part0; v3 halo of part2;
+        // v4 halo of part1.
+        assert_eq!(r, vec![0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let mut rng = Rng::new(61);
+        let (g, _) = sbm(400, 4, 8.0, 4.0, &mut rng);
+        let ps = Method::Metis.partition(&g, 4, &mut rng);
+        let s = halo_stats(&g, &ps, 1);
+        assert_eq!(s.inner.iter().sum::<usize>(), 400);
+        assert!(s.unique_halo <= s.total_halo);
+        assert!(s.overlapping <= s.unique_halo);
+        assert!(s.total_halo > 0);
+    }
+
+    #[test]
+    fn more_partitions_more_halo() {
+        // Obs. 1: halo grows with partition count.
+        let mut rng = Rng::new(62);
+        let (g, _) = sbm(600, 6, 10.0, 5.0, &mut rng);
+        let s2 = halo_stats(&g, &Method::Random.partition(&g, 2, &mut rng), 1);
+        let s8 = halo_stats(&g, &Method::Random.partition(&g, 8, &mut rng), 1);
+        assert!(s8.total_halo > s2.total_halo);
+        assert!(s8.overlapping >= s2.overlapping);
+    }
+
+    #[test]
+    fn plan_shape() {
+        let (g, ps) = sample();
+        let plan = build_plan(&g, &ps);
+        assert_eq!(plan.parts.len(), 3);
+        let p0 = &plan.parts[0];
+        assert_eq!(p0.n_inner, 2);
+        assert_eq!(p0.halo_ids(), &[2]);
+        assert_eq!(p0.halo_owner, vec![1]);
+        // Local graph: edges 0-1 (inner) and 1-2 (inner-halo).
+        assert_eq!(p0.local.m(), 2);
+        assert!(p0.local.has_edge(0, 1));
+        assert!(p0.local.has_edge(1, 2));
+        assert_eq!(p0.local_of(2), Some(2));
+        assert_eq!(p0.local_of(4), None);
+    }
+
+    #[test]
+    fn plan_covers_all_cut_edges() {
+        let mut rng = Rng::new(63);
+        let (g, _) = sbm(300, 3, 6.0, 3.0, &mut rng);
+        let ps = Method::Metis.partition(&g, 3, &mut rng);
+        let plan = build_plan(&g, &ps);
+        // Every vertex is inner in exactly one part.
+        let mut owner_count = vec![0; g.n()];
+        for sg in &plan.parts {
+            for &v in &sg.global_ids[..sg.n_inner] {
+                owner_count[v as usize] += 1;
+            }
+        }
+        assert!(owner_count.iter().all(|&c| c == 1));
+        // Each part's local edge count ≥ its induced inner edges.
+        for sg in &plan.parts {
+            let inner_ids = &sg.global_ids[..sg.n_inner];
+            let (ind, _) = g.induced_subgraph(inner_ids);
+            assert!(sg.local.m() >= ind.m());
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Coarsening phase: heavy-edge matching (HEM).
+//!
+//! Visit vertices in random order; match each unmatched vertex with its
+//! unmatched neighbor of maximum edge weight (ties → heavier vertex last).
+//! Matched pairs collapse into one coarse vertex; parallel edges merge
+//! their weights.
+
+use super::WGraph;
+use crate::util::Rng;
+
+/// One level of coarsening. Returns the coarse graph and the fine→coarse
+/// vertex map.
+pub(crate) fn coarsen_once(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    // Limit merged vertex weight so one coarse vertex cannot dominate a
+    // part (important on power-law graphs).
+    let max_vwgt = (g.total_vwgt() as f64 / 20.0).ceil() as u64;
+
+    let mut mate = vec![u32::MAX; n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let mut best = u32::MAX;
+        let mut best_w = 0u64;
+        for &(u, w) in &g.adj[v as usize] {
+            if mate[u as usize] == u32::MAX
+                && g.vwgt[v as usize] + g.vwgt[u as usize] <= max_vwgt.max(2)
+                && w > best_w
+            {
+                best = u;
+                best_w = w;
+            }
+        }
+        if best != u32::MAX {
+            mate[v as usize] = best;
+            mate[best as usize] = v;
+        } else {
+            mate[v as usize] = v; // matched with itself
+        }
+    }
+
+    // Number coarse vertices.
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n as u32 {
+        if map[v as usize] != u32::MAX {
+            continue;
+        }
+        let m = mate[v as usize];
+        map[v as usize] = next;
+        if m != v {
+            map[m as usize] = next;
+        }
+        next += 1;
+    }
+    let cn = next as usize;
+
+    // Build coarse graph.
+    let mut vwgt = vec![0u64; cn];
+    for v in 0..n {
+        vwgt[map[v] as usize] += g.vwgt[v];
+    }
+    // Merge edges via a hashmap per coarse vertex.
+    let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); cn];
+    {
+        let mut acc: std::collections::HashMap<(u32, u32), u64> = std::collections::HashMap::new();
+        for v in 0..n {
+            let cv = map[v];
+            for &(u, w) in &g.adj[v] {
+                let cu = map[u as usize];
+                if cv == cu {
+                    continue;
+                }
+                let key = if cv < cu { (cv, cu) } else { (cu, cv) };
+                *acc.entry(key).or_insert(0) += w;
+            }
+        }
+        for ((a, b), w) in acc {
+            // Each undirected fine edge was seen twice (both directions).
+            let w = w / 2;
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+        }
+    }
+    for row in adj.iter_mut() {
+        row.sort_unstable();
+    }
+
+    (WGraph { vwgt, adj }, map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::sbm;
+    use crate::graph::Graph;
+
+    #[test]
+    fn shrinks_and_preserves_weight() {
+        let mut rng = Rng::new(31);
+        let (g, _) = sbm(500, 4, 8.0, 2.0, &mut rng);
+        let wg = WGraph::from_graph(&g);
+        let (coarse, map) = coarsen_once(&wg, &mut rng);
+        assert!(coarse.n() < wg.n());
+        assert!(coarse.n() >= wg.n() / 2);
+        assert_eq!(coarse.total_vwgt(), wg.total_vwgt());
+        assert!(map.iter().all(|&c| (c as usize) < coarse.n()));
+    }
+
+    #[test]
+    fn edge_weights_merge() {
+        // Square 0-1-2-3-0; matching collapses pairs; total edge weight of
+        // the coarse graph + internal edges equals 4.
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let wg = WGraph::from_graph(&g);
+        let mut rng = Rng::new(1);
+        let (coarse, map) = coarsen_once(&wg, &mut rng);
+        let internal: u64 = {
+            let mut cnt = 0;
+            for v in 0..4u32 {
+                for &u in g.nbrs(v) {
+                    if v < u && map[v as usize] == map[u as usize] {
+                        cnt += 1;
+                    }
+                }
+            }
+            cnt
+        };
+        let coarse_edges: u64 = coarse
+            .adj
+            .iter()
+            .enumerate()
+            .map(|(v, row)| {
+                row.iter()
+                    .filter(|&&(u, _)| (v as u32) < u)
+                    .map(|&(_, w)| w)
+                    .sum::<u64>()
+            })
+            .sum();
+        assert_eq!(internal + coarse_edges, 4);
+    }
+
+    #[test]
+    fn no_self_loops_in_coarse() {
+        let mut rng = Rng::new(32);
+        let (g, _) = sbm(200, 2, 8.0, 1.0, &mut rng);
+        let (coarse, _) = coarsen_once(&WGraph::from_graph(&g), &mut rng);
+        for (v, row) in coarse.adj.iter().enumerate() {
+            assert!(row.iter().all(|&(u, _)| u as usize != v));
+        }
+    }
+}

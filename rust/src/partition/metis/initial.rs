@@ -1,0 +1,122 @@
+//! Initial partitioning on the coarsest graph: greedy graph growing.
+//!
+//! Grow parts one at a time from a random seed vertex, always absorbing the
+//! frontier vertex with the strongest connection to the growing part, until
+//! the part reaches its weight budget. The last part takes the remainder.
+
+use super::WGraph;
+use crate::util::Rng;
+
+pub(crate) fn greedy_growing(g: &WGraph, parts: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n();
+    let total = g.total_vwgt();
+    let budget = (total as f64 / parts as f64).ceil() as u64;
+
+    let mut assignment = vec![u32::MAX; n];
+    let mut unassigned = n;
+
+    for p in 0..parts as u32 {
+        if unassigned == 0 {
+            break;
+        }
+        if p as usize == parts - 1 {
+            for a in assignment.iter_mut() {
+                if *a == u32::MAX {
+                    *a = p;
+                }
+            }
+            break;
+        }
+        // Seed: random unassigned vertex.
+        let mut seed = rng.index(n);
+        while assignment[seed] != u32::MAX {
+            seed = (seed + 1) % n;
+        }
+        let mut weight = 0u64;
+        // gain[v] = connection weight to the growing part.
+        let mut gain = vec![0u64; n];
+        let mut in_frontier = vec![false; n];
+        let mut frontier: Vec<u32> = vec![seed as u32];
+        in_frontier[seed] = true;
+
+        while weight < budget && unassigned > 0 {
+            // Pick the frontier vertex with max gain; if the frontier is
+            // empty (disconnected), jump to a random unassigned vertex.
+            let pick = frontier
+                .iter()
+                .copied()
+                .filter(|&v| assignment[v as usize] == u32::MAX)
+                .max_by_key(|&v| gain[v as usize]);
+            let v = match pick {
+                Some(v) => v,
+                None => {
+                    let mut s = rng.index(n);
+                    while assignment[s] != u32::MAX {
+                        s = (s + 1) % n;
+                    }
+                    frontier.push(s as u32);
+                    in_frontier[s] = true;
+                    s as u32
+                }
+            };
+            assignment[v as usize] = p;
+            weight += g.vwgt[v as usize];
+            unassigned -= 1;
+            frontier.retain(|&u| u != v);
+            for &(u, w) in &g.adj[v as usize] {
+                if assignment[u as usize] == u32::MAX {
+                    gain[u as usize] += w;
+                    if !in_frontier[u as usize] {
+                        in_frontier[u as usize] = true;
+                        frontier.push(u);
+                    }
+                }
+            }
+        }
+    }
+    debug_assert!(assignment.iter().all(|&a| a != u32::MAX));
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::sbm;
+
+    #[test]
+    fn assigns_all_and_roughly_balances() {
+        let mut rng = Rng::new(41);
+        let (g, _) = sbm(300, 3, 8.0, 2.0, &mut rng);
+        let wg = WGraph::from_graph(&g);
+        let a = greedy_growing(&wg, 3, &mut rng);
+        assert!(a.iter().all(|&p| p < 3));
+        let mut sizes = [0usize; 3];
+        for &p in &a {
+            sizes[p as usize] += 1;
+        }
+        let avg = 100.0;
+        for s in sizes {
+            assert!((s as f64) < avg * 1.6, "sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn single_part() {
+        let mut rng = Rng::new(42);
+        let (g, _) = sbm(50, 2, 4.0, 1.0, &mut rng);
+        let a = greedy_growing(&WGraph::from_graph(&g), 1, &mut rng);
+        assert!(a.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn handles_disconnected() {
+        // Two disjoint triangles.
+        let g = crate::graph::Graph::from_edges(
+            6,
+            &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)],
+        );
+        let mut rng = Rng::new(43);
+        let a = greedy_growing(&WGraph::from_graph(&g), 2, &mut rng);
+        assert!(a.iter().all(|&p| p < 2));
+    }
+}

@@ -1,0 +1,169 @@
+//! METIS-like multilevel k-way partitioner (Karypis & Kumar 1998):
+//! **coarsening** (heavy-edge matching) → **initial partitioning** (greedy
+//! graph growing on the coarsest graph) → **uncoarsening with boundary
+//! FM-style refinement**.
+//!
+//! Built from scratch — the real METIS is a C library the offline
+//! environment does not ship. The implementation favours clarity over the
+//! last few percent of cut quality; on the SBM/R-MAT twins it recovers
+//! community structure well (see `metis_beats_random_cut` test).
+
+mod coarsen;
+mod initial;
+mod refine;
+
+use super::PartitionSet;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Internal weighted graph used across the V-cycle.
+#[derive(Clone, Debug)]
+pub(crate) struct WGraph {
+    /// Vertex weights (number of original vertices merged in).
+    pub vwgt: Vec<u64>,
+    /// Adjacency with merged edge weights; no self loops.
+    pub adj: Vec<Vec<(u32, u64)>>,
+}
+
+impl WGraph {
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    pub fn total_vwgt(&self) -> u64 {
+        self.vwgt.iter().sum()
+    }
+
+    pub fn from_graph(g: &Graph) -> WGraph {
+        let n = g.n();
+        let mut adj = Vec::with_capacity(n);
+        for v in 0..n as u32 {
+            adj.push(g.nbrs(v).iter().map(|&u| (u, 1u64)).collect());
+        }
+        WGraph { vwgt: vec![1; n], adj }
+    }
+
+    /// Edge-cut weight of an assignment over this weighted graph.
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub fn cut(&self, assignment: &[u32]) -> u64 {
+        let mut cut = 0u64;
+        for v in 0..self.n() {
+            for &(u, w) in &self.adj[v] {
+                if (v as u32) < u && assignment[v] != assignment[u as usize] {
+                    cut += w;
+                }
+            }
+        }
+        cut
+    }
+}
+
+/// Coarsening stops when the graph is below this many vertices (per part).
+const COARSE_PER_PART: usize = 30;
+/// Refinement passes per uncoarsening level.
+const REFINE_PASSES: usize = 4;
+/// Allowed imbalance during refinement.
+pub(crate) const BALANCE_SLACK: f64 = 1.05;
+
+/// Multilevel k-way partition of `g` into `parts`.
+pub fn partition(g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
+    assert!(parts >= 1);
+    let n = g.n();
+    if parts == 1 || n <= parts {
+        // Degenerate: everything in part 0 / one vertex per part.
+        let assignment = (0..n).map(|v| (v % parts) as u32).collect();
+        return PartitionSet::new(parts, assignment);
+    }
+
+    // Phase 1: coarsen.
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new(); // (graph, map fine->coarse)
+    let mut cur = WGraph::from_graph(g);
+    let target = (COARSE_PER_PART * parts).max(64);
+    while cur.n() > target {
+        let (coarse, map) = coarsen::coarsen_once(&cur, rng);
+        // Stall guard: matching failed to shrink meaningfully.
+        if coarse.n() as f64 > cur.n() as f64 * 0.95 {
+            break;
+        }
+        levels.push((std::mem::replace(&mut cur, coarse), map));
+    }
+
+    // Phase 2: initial partition on the coarsest graph.
+    let mut assignment = initial::greedy_growing(&cur, parts, rng);
+    refine::refine(&cur, &mut assignment, parts, REFINE_PASSES, rng);
+
+    // Phase 3: uncoarsen + refine.
+    while let Some((fine, map)) = levels.pop() {
+        let mut fine_assignment = vec![0u32; fine.n()];
+        for v in 0..fine.n() {
+            fine_assignment[v] = assignment[map[v] as usize];
+        }
+        assignment = fine_assignment;
+        refine::refine(&fine, &mut assignment, parts, REFINE_PASSES, rng);
+        cur = fine;
+    }
+    let _ = cur;
+
+    PartitionSet::new(parts, assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, sbm};
+
+    #[test]
+    fn recovers_sbm_blocks_mostly() {
+        let mut rng = Rng::new(21);
+        let (g, labels) = sbm(800, 4, 12.0, 0.5, &mut rng);
+        let ps = partition(&g, 4, &mut rng);
+        ps.check(&g).unwrap();
+        // The cut should be a small fraction of total edges because blocks
+        // are nearly disconnected.
+        let frac = ps.edge_cut(&g) as f64 / g.m() as f64;
+        assert!(frac < 0.15, "cut fraction {frac}");
+        let _ = labels;
+    }
+
+    #[test]
+    fn balanced_within_slack() {
+        let mut rng = Rng::new(22);
+        let (g, _) = sbm(900, 6, 10.0, 3.0, &mut rng);
+        for parts in [2usize, 3, 5, 8] {
+            let ps = partition(&g, parts, &mut rng);
+            assert!(
+                ps.imbalance() <= BALANCE_SLACK + 0.12,
+                "parts={parts} imbalance={}",
+                ps.imbalance()
+            );
+        }
+    }
+
+    #[test]
+    fn handles_power_law() {
+        let mut rng = Rng::new(23);
+        let g = rmat(10, 10.0, &mut rng);
+        let ps = partition(&g, 4, &mut rng);
+        ps.check(&g).unwrap();
+        assert!(ps.sizes().iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        let mut rng = Rng::new(24);
+        let ps1 = partition(&g, 1, &mut rng);
+        assert_eq!(ps1.sizes(), vec![3]);
+        let ps3 = partition(&g, 3, &mut rng);
+        assert_eq!(ps3.sizes().iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut r1 = Rng::new(25);
+        let (g, _) = sbm(300, 3, 8.0, 2.0, &mut r1);
+        let a = partition(&g, 3, &mut Rng::new(9));
+        let b = partition(&g, 3, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

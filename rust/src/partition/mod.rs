@@ -1,0 +1,180 @@
+//! Graph partitioning: vertex-centric (edge-cut) partitioners with halo
+//! expansion — the substrate under both the motivation study (Figs. 4–6)
+//! and the RAPA contribution.
+
+pub mod fennel;
+pub mod halo;
+pub mod metis;
+pub mod random;
+pub mod rapa;
+
+pub use halo::{HaloStats, SubgraphPlan};
+
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// A vertex-centric partitioning: `assignment[v] = part`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionSet {
+    pub num_parts: usize,
+    pub assignment: Vec<u32>,
+}
+
+impl PartitionSet {
+    pub fn new(num_parts: usize, assignment: Vec<u32>) -> PartitionSet {
+        debug_assert!(assignment.iter().all(|&p| (p as usize) < num_parts));
+        PartitionSet { num_parts, assignment }
+    }
+
+    /// Vertices of part `p`, ascending.
+    pub fn members(&self, p: u32) -> Vec<u32> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == p)
+            .map(|(v, _)| v as u32)
+            .collect()
+    }
+
+    /// Part sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.num_parts];
+        for &p in &self.assignment {
+            s[p as usize] += 1;
+        }
+        s
+    }
+
+    /// Number of unique cut edges (each undirected pair counted once) —
+    /// the paper's Fig. 5 edge-cut definition.
+    pub fn edge_cut(&self, g: &Graph) -> usize {
+        let mut cut = 0usize;
+        for v in 0..g.n() as u32 {
+            for &u in g.nbrs(v) {
+                if v < u && self.assignment[v as usize] != self.assignment[u as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Max size / avg size (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let sizes = self.sizes();
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        let avg = self.assignment.len() as f64 / self.num_parts as f64;
+        if avg == 0.0 {
+            1.0
+        } else {
+            max / avg
+        }
+    }
+
+    /// Validate against a graph (property tests).
+    pub fn check(&self, g: &Graph) -> Result<(), String> {
+        if self.assignment.len() != g.n() {
+            return Err("assignment length != n".into());
+        }
+        if let Some(&p) = self.assignment.iter().find(|&&p| p as usize >= self.num_parts) {
+            return Err(format!("part id {p} out of range"));
+        }
+        Ok(())
+    }
+}
+
+/// Which partitioning algorithm to use (pre-partitioning stage of RAPA,
+/// and the baselines' partitioner).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// METIS-like multilevel (coarsen → greedy grow → FM refine).
+    Metis,
+    /// Uniform random assignment.
+    Random,
+    /// Fennel single-pass streaming.
+    Fennel,
+}
+
+impl Method {
+    pub fn partition(self, g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
+        match self {
+            Method::Metis => metis::partition(g, parts, rng),
+            Method::Random => random::partition(g, parts, rng),
+            Method::Fennel => fennel::partition(g, parts, rng),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Metis => "metis",
+            Method::Random => "random",
+            Method::Fennel => "fennel",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "metis" => Some(Method::Metis),
+            "random" => Some(Method::Random),
+            "fennel" => Some(Method::Fennel),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::sbm;
+
+    #[test]
+    fn members_and_sizes_consistent() {
+        let ps = PartitionSet::new(3, vec![0, 1, 2, 0, 1, 0]);
+        assert_eq!(ps.sizes(), vec![3, 2, 1]);
+        assert_eq!(ps.members(0), vec![0, 3, 5]);
+        assert_eq!(ps.members(2), vec![2]);
+    }
+
+    #[test]
+    fn edge_cut_counts_unique_pairs() {
+        // Triangle split 0|12: two cut edges (0-1, 0-2).
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        let ps = PartitionSet::new(2, vec![0, 1, 1]);
+        assert_eq!(ps.edge_cut(&g), 2);
+    }
+
+    #[test]
+    fn imbalance_of_even_split() {
+        let ps = PartitionSet::new(2, vec![0, 1, 0, 1]);
+        assert!((ps.imbalance() - 1.0).abs() < 1e-12);
+        let ps2 = PartitionSet::new(2, vec![0, 0, 0, 1]);
+        assert!((ps2.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_methods_produce_valid_partitions() {
+        let mut rng = Rng::new(10);
+        let (g, _) = sbm(400, 4, 8.0, 2.0, &mut rng);
+        for m in [Method::Metis, Method::Random, Method::Fennel] {
+            let ps = m.partition(&g, 4, &mut rng);
+            ps.check(&g).unwrap();
+            assert_eq!(ps.num_parts, 4);
+            // Every part non-empty on this size.
+            assert!(ps.sizes().iter().all(|&s| s > 0), "{:?} empty part", m);
+        }
+    }
+
+    #[test]
+    fn metis_beats_random_cut() {
+        let mut rng = Rng::new(11);
+        let (g, _) = sbm(600, 4, 10.0, 1.0, &mut rng);
+        let metis = Method::Metis.partition(&g, 4, &mut rng);
+        let random = Method::Random.partition(&g, 4, &mut rng);
+        assert!(
+            metis.edge_cut(&g) < random.edge_cut(&g) / 2,
+            "metis {} vs random {}",
+            metis.edge_cut(&g),
+            random.edge_cut(&g)
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Uniform random vertex partitioning — the "Random" baseline of the
+//! motivation study (Figs. 4/6). Balanced by construction (round-robin over
+//! a shuffled vertex order).
+
+use super::PartitionSet;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+pub fn partition(g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
+    let n = g.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut assignment = vec![0u32; n];
+    for (i, &v) in order.iter().enumerate() {
+        assignment[v as usize] = (i % parts) as u32;
+    }
+    PartitionSet::new(parts, assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_exactly() {
+        let g = Graph::from_edges(10, &[(0, 1)]);
+        let mut rng = Rng::new(1);
+        let ps = partition(&g, 3, &mut rng);
+        let sizes = ps.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = Graph::from_edges(20, &[(0, 1), (2, 3)]);
+        let a = partition(&g, 4, &mut Rng::new(5));
+        let b = partition(&g, 4, &mut Rng::new(5));
+        assert_eq!(a, b);
+    }
+}

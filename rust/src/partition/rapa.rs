@@ -1,0 +1,399 @@
+//! RAPA — Resource-Aware Partitioning Algorithm (paper §4.3).
+//!
+//! Pipeline: METIS pre-partition → per-GPU cost modeling (Eq. 13/14) →
+//! iterative halo-replica pruning (Algs. 2–3) driven by the vertex
+//! influence score (Eq. 16) under the balance/memory objective (Eq. 15) →
+//! graph reordering.
+//!
+//! RAPA only removes *halo replicas* (never inner vertices), so training
+//! remains full-batch: every vertex is still trained exactly once on its
+//! owner.
+
+use super::halo::{build_plan_with_halos, expand_halo, overlap_ratio, SubgraphPlan};
+use super::{Method, PartitionSet};
+use crate::device::profile::Gpu;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Tunables for RAPA (paper defaults in §5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct RapaConfig {
+    /// α in Eq. 14 — weight of SpMM (edge-bound) vs MM (vertex-bound) cost.
+    pub alpha: f64,
+    /// ε: stop when Std(λ) < eps_frac · mean(λ).
+    pub eps_frac: f64,
+    /// Reserved memory β in bytes (gradients etc.).
+    pub beta_bytes: u64,
+    /// Feature dim (for the memory constraint).
+    pub f_dim: usize,
+    /// Model layer dims (for the memory constraint).
+    pub layers: usize,
+    /// Scale applied to device memory — the twins are ~100× smaller than
+    /// the paper's graphs, so memory is scaled to keep Eq. 15 meaningful.
+    pub mem_scale: f64,
+    /// Hard cap on adjust iterations.
+    pub max_iters: usize,
+}
+
+impl Default for RapaConfig {
+    fn default() -> Self {
+        RapaConfig {
+            alpha: 0.7,
+            eps_frac: 0.01,
+            beta_bytes: 100 << 20,
+            f_dim: 64,
+            layers: 3,
+            mem_scale: 1.0,
+            max_iters: 32,
+        }
+    }
+}
+
+/// Per-part state RAPA iterates on.
+#[derive(Clone, Debug)]
+struct PartState {
+    inner: Vec<u32>,
+    halo: Vec<u32>,
+    /// |E_all|: edges with ≥1 inner endpoint and both endpoints retained.
+    e_all: usize,
+    /// |E_outer|: retained inner–halo edges (cross-partition interactions,
+    /// the Eq. 13 proxy).
+    e_outer: usize,
+}
+
+/// Snapshot of one adjustment iteration (Fig. 20 series).
+#[derive(Clone, Debug)]
+pub struct IterSnapshot {
+    pub iter: usize,
+    /// Per part: (local nodes, local edges, λᵢ).
+    pub parts: Vec<(usize, usize, f64)>,
+    pub lambda_std: f64,
+    pub lambda_max: f64,
+}
+
+/// RAPA output.
+#[derive(Clone, Debug)]
+pub struct RapaResult {
+    pub plan: SubgraphPlan,
+    pub assignment: PartitionSet,
+    /// Which GPU each part landed on (identity here: part i → gpu i).
+    pub trace: Vec<IterSnapshot>,
+    /// Final per-part λ.
+    pub lambda: Vec<f64>,
+    /// Halo replicas removed per part.
+    pub pruned: Vec<usize>,
+}
+
+/// Eq. 13 — communication-cost proxy for part `i`.
+pub fn comm_cost(gpus: &[Gpu], i: usize, e_outer: usize, parts: usize) -> f64 {
+    let p = parts as f64;
+    let e = gpus[i].expected();
+    let max_h2d = gpus.iter().map(|g| g.expected().h2d).fold(0.0, f64::max);
+    let max_d2h = gpus.iter().map(|g| g.expected().d2h).fold(0.0, f64::max);
+    let max_idt = gpus.iter().map(|g| g.expected().idt).fold(0.0, f64::max);
+    e_outer as f64
+        * ((e.h2d / max_h2d + e.d2h / max_d2h) * (1.0 - 1.0 / p) + (e.idt / max_idt) * (1.0 / p))
+}
+
+/// Eq. 14 — computation cost for part `i`.
+pub fn comp_cost(
+    gpus: &[Gpu],
+    i: usize,
+    e_all: usize,
+    v_inner: usize,
+    alpha: f64,
+) -> f64 {
+    let e = gpus[i].expected();
+    let max_spmm = gpus.iter().map(|g| g.expected().spmm).fold(0.0, f64::max);
+    let max_mm = gpus.iter().map(|g| g.expected().mm).fold(0.0, f64::max);
+    alpha * e_all as f64 * (e.spmm / max_spmm) + (1.0 - alpha) * v_inner as f64 * (e.mm / max_mm)
+}
+
+/// Eq. 16 — influence score of halo vertex `v` within a part. Lower score
+/// ⇒ removed first. `local_deg` is v's retained degree inside the part.
+pub fn influence_score(g: &Graph, v: u32, local_deg: usize, overlap: u32) -> f64 {
+    let mut s = 0.0f64;
+    for &j in g.nbrs(v) {
+        let dj = g.degree(j).max(1) as f64;
+        s += 1.0 / dj.sqrt() / (local_deg.max(1) as f64).sqrt();
+    }
+    // Undirected graph: in- and out-neighborhood coincide, giving the
+    // factor 2 of Eq. 16's two sums.
+    2.0 * s * overlap.max(1) as f64
+}
+
+/// Memory requirement of a part (Eq. 15's constraint left-hand side).
+fn mem_needed(cfg: &RapaConfig, n_local: usize, e_local: usize) -> u64 {
+    const M_VERTEX: u64 = 4; // id bookkeeping
+    const M_EDGE: u64 = 8; // CSR entry both directions
+    let feat = (n_local * cfg.f_dim * 4 * cfg.layers) as u64;
+    n_local as u64 * M_VERTEX + e_local as u64 * 2 * M_EDGE + feat + cfg.beta_bytes
+}
+
+fn lambda_of(gpus: &[Gpu], cfg: &RapaConfig, st: &PartState, parts: usize, i: usize) -> f64 {
+    comp_cost(gpus, i, st.e_all, st.inner.len(), cfg.alpha)
+        + comm_cost(gpus, i, st.e_outer, parts)
+}
+
+/// Count retained local edges for a part: inner–inner plus inner–halo
+/// (halo set given as a sorted vec).
+fn count_edges(g: &Graph, inner: &[u32], halo: &[u32], assignment: &[u32], part: u32) -> (usize, usize) {
+    use std::collections::HashSet;
+    let halo_set: HashSet<u32> = halo.iter().copied().collect();
+    let mut e_all = 0usize;
+    let mut e_outer = 0usize;
+    for &v in inner {
+        for &u in g.nbrs(v) {
+            if assignment[u as usize] == part {
+                if v < u {
+                    e_all += 1;
+                }
+            } else if halo_set.contains(&u) {
+                e_all += 1;
+                e_outer += 1;
+            }
+        }
+    }
+    (e_all, e_outer)
+}
+
+/// Run RAPA end-to-end: pre-partition with `method`, assign parts to the
+/// GPUs in order, adjust halo replicas until balanced (Algs. 2–3).
+pub fn run(
+    g: &Graph,
+    gpus: &[Gpu],
+    cfg: &RapaConfig,
+    method: Method,
+    rng: &mut Rng,
+) -> RapaResult {
+    let parts = gpus.len();
+    let ps = method.partition(g, parts, rng);
+    run_with_partition(g, gpus, cfg, ps)
+}
+
+/// RAPA adjustment stage on an existing pre-partitioning.
+pub fn run_with_partition(
+    g: &Graph,
+    gpus: &[Gpu],
+    cfg: &RapaConfig,
+    ps: PartitionSet,
+) -> RapaResult {
+    let parts = gpus.len();
+    assert_eq!(ps.num_parts, parts);
+    let overlap = overlap_ratio(g, &ps, 1);
+
+    let mut states: Vec<PartState> = (0..parts as u32)
+        .map(|p| {
+            let inner = ps.members(p);
+            let halo = expand_halo(g, &ps, p, 1);
+            let (e_all, e_outer) = count_edges(g, &inner, &halo, &ps.assignment, p);
+            PartState { inner, halo, e_all, e_outer }
+        })
+        .collect();
+    let initial_halo: Vec<usize> = states.iter().map(|s| s.halo.len()).collect();
+
+    let mut trace = Vec::new();
+    let snapshot = |states: &[PartState], iter: usize| -> IterSnapshot {
+        let lambdas: Vec<f64> = (0..parts)
+            .map(|i| lambda_of(gpus, cfg, &states[i], parts, i))
+            .collect();
+        IterSnapshot {
+            iter,
+            parts: states
+                .iter()
+                .zip(&lambdas)
+                .map(|(s, &l)| (s.inner.len() + s.halo.len(), s.e_all, l))
+                .collect(),
+            lambda_std: crate::util::stats::std_dev(&lambdas),
+            lambda_max: crate::util::stats::max(&lambdas),
+        }
+    };
+    trace.push(snapshot(&states, 0));
+
+    // Algorithm 2: iterate adjust_subgraph until balanced or stuck.
+    for iter in 1..=cfg.max_iters {
+        let lambdas: Vec<f64> = (0..parts)
+            .map(|i| lambda_of(gpus, cfg, &states[i], parts, i))
+            .collect();
+        let mean = crate::util::stats::mean(&lambdas);
+        let std = crate::util::stats::std_dev(&lambdas);
+        if std < cfg.eps_frac * mean {
+            break;
+        }
+
+        // Algorithm 3: visit parts from most-overloaded (weakest first).
+        let mut order: Vec<usize> = (0..parts).collect();
+        order.sort_by(|&a, &b| lambdas[b].partial_cmp(&lambdas[a]).unwrap());
+        let mut all_done = true;
+
+        for &i in &order {
+            let st = &states[i];
+            let mem_ok = mem_needed(cfg, st.inner.len() + st.halo.len(), st.e_all)
+                <= (gpus[i].memory_bytes() as f64 * cfg.mem_scale) as u64;
+            if lambdas[i] <= mean && mem_ok {
+                continue; // r_i = 1 for this part
+            }
+            if st.halo.is_empty() {
+                continue;
+            }
+            // Score retained halo replicas (Eq. 16), ascending.
+            let part = i as u32;
+            let mut scored: Vec<(f64, u32)> = st
+                .halo
+                .iter()
+                .map(|&v| {
+                    let local_deg = g
+                        .nbrs(v)
+                        .iter()
+                        .filter(|&&u| ps.assignment[u as usize] == part)
+                        .count();
+                    (influence_score(g, v, local_deg, overlap[v as usize]), v)
+                })
+                .collect();
+            scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+            let target = 0.5 * (lambdas[i] + mean);
+            let mut removed: Vec<u32> = Vec::new();
+            let mut halo: Vec<u32> = st.halo.clone();
+            let mut e_all = st.e_all;
+            let mut e_outer = st.e_outer;
+            for &(_, v) in &scored {
+                // Removing v drops all its retained cross edges.
+                let deg_in_part = g
+                    .nbrs(v)
+                    .iter()
+                    .filter(|&&u| ps.assignment[u as usize] == part)
+                    .count();
+                halo.retain(|&h| h != v);
+                removed.push(v);
+                e_all -= deg_in_part;
+                e_outer -= deg_in_part;
+                let probe = PartState {
+                    inner: st.inner.clone(),
+                    halo: halo.clone(),
+                    e_all,
+                    e_outer,
+                };
+                let lam = lambda_of(gpus, cfg, &probe, parts, i);
+                let mem_ok = mem_needed(cfg, probe.inner.len() + probe.halo.len(), probe.e_all)
+                    <= (gpus[i].memory_bytes() as f64 * cfg.mem_scale) as u64;
+                if lam <= target && mem_ok {
+                    break;
+                }
+            }
+            if !removed.is_empty() {
+                states[i].halo = halo;
+                states[i].e_all = e_all;
+                states[i].e_outer = e_outer;
+                all_done = false;
+            }
+        }
+
+        trace.push(snapshot(&states, iter));
+        if all_done {
+            break; // r = 1: no further improvement possible
+        }
+    }
+
+    let halos: Vec<Vec<u32>> = states.iter().map(|s| s.halo.clone()).collect();
+    let plan = build_plan_with_halos(g, &ps, &halos);
+    let lambda: Vec<f64> = (0..parts)
+        .map(|i| lambda_of(gpus, cfg, &states[i], parts, i))
+        .collect();
+    let pruned = states
+        .iter()
+        .zip(initial_halo)
+        .map(|(s, h0)| h0 - s.halo.len())
+        .collect();
+    RapaResult { plan, assignment: ps, trace, lambda, pruned }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::{DeviceKind, GpuGroup};
+    use crate::graph::generator::skewed_sbm;
+
+    fn hetero_gpus() -> Vec<Gpu> {
+        let mut rng = Rng::new(1);
+        vec![
+            Gpu::new(0, DeviceKind::Rtx3090, &mut rng),
+            Gpu::new(1, DeviceKind::Rtx3090, &mut rng),
+            Gpu::new(2, DeviceKind::Gtx1650, &mut rng),
+        ]
+    }
+
+    #[test]
+    fn cost_model_prefers_fast_gpus() {
+        let gpus = hetero_gpus();
+        // Same workload costs more on the 1650 than the 3090.
+        let fast = comp_cost(&gpus, 0, 1000, 500, 0.7);
+        let slow = comp_cost(&gpus, 2, 1000, 500, 0.7);
+        assert!(slow > 2.0 * fast, "slow {slow} fast {fast}");
+        let fast_c = comm_cost(&gpus, 0, 1000, 3);
+        let slow_c = comm_cost(&gpus, 2, 1000, 3);
+        assert!(slow_c >= fast_c);
+    }
+
+    #[test]
+    fn influence_score_increases_with_overlap() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        let s1 = influence_score(&g, 0, 2, 1);
+        let s3 = influence_score(&g, 0, 2, 3);
+        assert!(s3 > s1);
+    }
+
+    #[test]
+    fn balances_heterogeneous_group() {
+        let mut rng = Rng::new(71);
+        let (g, _) = skewed_sbm(900, 6, 14.0, 6.0, 1.6, &mut rng);
+        let gpus = hetero_gpus();
+        let cfg = RapaConfig::default();
+        let res = run(&g, &gpus, &cfg, Method::Metis, &mut rng);
+        // λ spread should shrink versus iteration 0.
+        let first = &res.trace[0];
+        let last = res.trace.last().unwrap();
+        assert!(
+            last.lambda_std < first.lambda_std,
+            "std {} -> {}",
+            first.lambda_std,
+            last.lambda_std
+        );
+        // Weak GPU (part 2) must have pruned halo replicas.
+        assert!(res.pruned[2] > 0, "pruned {:?}", res.pruned);
+        // Inner vertices all preserved (full-batch invariant).
+        let total_inner: usize = res.plan.parts.iter().map(|p| p.n_inner).sum();
+        assert_eq!(total_inner, g.n());
+    }
+
+    #[test]
+    fn homogeneous_group_changes_little() {
+        let mut rng = Rng::new(72);
+        let (g, _) = skewed_sbm(600, 4, 10.0, 4.0, 1.4, &mut rng);
+        let gpus = GpuGroup::by_name("x2").unwrap().instantiate(&mut rng);
+        let res = run(&g, &gpus, &RapaConfig::default(), Method::Metis, &mut rng);
+        let frac_pruned: f64 = res.pruned.iter().sum::<usize>() as f64
+            / res
+                .plan
+                .parts
+                .iter()
+                .map(|p| p.n_halo())
+                .sum::<usize>()
+                .max(1) as f64;
+        // Equal GPUs: METIS is already balanced, pruning should be mild.
+        assert!(frac_pruned < 1.0, "pruned fraction {frac_pruned}");
+    }
+
+    #[test]
+    fn trace_is_monotone_iterations() {
+        let mut rng = Rng::new(73);
+        let (g, _) = skewed_sbm(500, 5, 10.0, 5.0, 1.8, &mut rng);
+        let gpus = hetero_gpus();
+        let res = run(&g, &gpus, &RapaConfig::default(), Method::Metis, &mut rng);
+        for (i, snap) in res.trace.iter().enumerate() {
+            assert_eq!(snap.iter, i);
+            assert_eq!(snap.parts.len(), 3);
+        }
+        assert!(res.trace.len() >= 2);
+    }
+}

@@ -1,0 +1,150 @@
+//! Artifact manifest: what `python/compile/aot.py` produced, and how the
+//! trainer picks a padded bucket for a partition.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The per-layer unit kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum UnitKind {
+    GcnFwd,
+    GcnBwd,
+    SageFwd,
+    SageBwd,
+    CeGrad,
+}
+
+impl UnitKind {
+    pub fn from_str(s: &str) -> Option<UnitKind> {
+        match s {
+            "gcn_fwd" => Some(UnitKind::GcnFwd),
+            "gcn_bwd" => Some(UnitKind::GcnBwd),
+            "sage_fwd" => Some(UnitKind::SageFwd),
+            "sage_bwd" => Some(UnitKind::SageBwd),
+            "ce_grad" => Some(UnitKind::CeGrad),
+            _ => None,
+        }
+    }
+}
+
+/// Identity of one compiled unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UnitKey {
+    pub kind: UnitKind,
+    pub n: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub relu: bool,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub units: BTreeMap<UnitKey, String>, // key -> file name
+    pub n_buckets: Vec<usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json = Json::parse(&text)?;
+        let mut units = BTreeMap::new();
+        for u in json
+            .get("units")
+            .and_then(|u| u.as_arr())
+            .ok_or("manifest missing units")?
+        {
+            let kind = UnitKind::from_str(
+                u.get("kind").and_then(|k| k.as_str()).ok_or("unit kind")?,
+            )
+            .ok_or("bad unit kind")?;
+            let key = UnitKey {
+                kind,
+                n: u.get("n").and_then(|v| v.as_usize()).ok_or("n")?,
+                d_in: u.get("d_in").and_then(|v| v.as_usize()).ok_or("d_in")?,
+                d_out: u.get("d_out").and_then(|v| v.as_usize()).ok_or("d_out")?,
+                relu: matches!(u.get("relu"), Some(Json::Bool(true))),
+            };
+            let file = u.get("file").and_then(|f| f.as_str()).ok_or("file")?;
+            units.insert(key, file.to_string());
+        }
+        let n_buckets = json
+            .get("n_buckets")
+            .and_then(|b| b.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
+        Ok(Manifest { dir: dir.to_path_buf(), units, n_buckets })
+    }
+
+    /// Default location: `$CAPGNN_ARTIFACTS` or `artifacts/` under the
+    /// crate root (works from `cargo test`/`cargo bench` cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("CAPGNN_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        let manifest_dir = env!("CARGO_MANIFEST_DIR");
+        Path::new(manifest_dir).join("artifacts")
+    }
+
+    /// Smallest bucket ≥ `n_local`.
+    pub fn bucket_for(&self, n_local: usize) -> Option<usize> {
+        self.n_buckets.iter().copied().find(|&b| b >= n_local)
+    }
+
+    /// Absolute path of a unit's HLO file, if present.
+    pub fn path_of(&self, key: &UnitKey) -> Option<PathBuf> {
+        self.units.get(key).map(|f| self.dir.join(f))
+    }
+
+    pub fn has(&self, key: &UnitKey) -> bool {
+        self.units.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_if_built() {
+        let Some(m) = manifest() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        assert!(!m.units.is_empty());
+        let key = UnitKey {
+            kind: UnitKind::GcnFwd,
+            n: 256,
+            d_in: 64,
+            d_out: 64,
+            relu: true,
+        };
+        assert!(m.has(&key), "standard gcn unit missing");
+        assert!(m.path_of(&key).unwrap().exists());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.bucket_for(100), Some(256));
+        assert_eq!(m.bucket_for(256), Some(256));
+        assert_eq!(m.bucket_for(257), Some(512));
+        assert_eq!(m.bucket_for(usize::MAX), None);
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(UnitKind::from_str("ce_grad"), Some(UnitKind::CeGrad));
+        assert_eq!(UnitKind::from_str("zzz"), None);
+    }
+}

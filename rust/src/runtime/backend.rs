@@ -1,0 +1,70 @@
+//! The compute-backend interface the trainer programs against.
+//!
+//! Two implementations:
+//! - [`crate::runtime::XlaBackend`] — AOT artifacts through PJRT (the
+//!   production path);
+//! - [`crate::runtime::NativeBackend`] — pure-rust mirror of the same
+//!   per-layer math (hermetic tests + cross-check oracle).
+//!
+//! All matrices are row-major `f32` slices with explicit dims; `n` is the
+//! *padded* local vertex count.
+
+use anyhow::Result;
+
+/// Output of the loss unit.
+#[derive(Clone, Debug)]
+pub struct LossGrad {
+    pub loss: f32,
+    /// Correct predictions over the mask.
+    pub correct: f32,
+    /// dL/dlogits, masked and normalized.
+    pub dz: Vec<f32>,
+}
+
+pub trait Backend {
+    /// act(Â·H·W): `a` is n×n, `h` n×d_in, `w` d_in×d_out.
+    fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>>;
+
+    /// Returns (gW [d_in×d_out], dH_in [n×d_in]).
+    #[allow(clippy::too_many_arguments)]
+    fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
+               -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// act(H·Wself + (Ā·H)·Wneigh).
+    #[allow(clippy::too_many_arguments)]
+    fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32])
+                -> Result<Vec<f32>>;
+
+    /// Returns (gWself, gWneigh, dH_in).
+    #[allow(clippy::too_many_arguments)]
+    fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// Masked CE loss/grad; `logits`/`y` are n×c, `mask` n.
+    fn ce_grad(&mut self, n: usize, c: usize,
+               logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which backend to construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts via PJRT.
+    Xla,
+    /// Pure-rust mirror.
+    Native,
+}
+
+impl BackendKind {
+    pub fn build(self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Xla => Ok(Box::new(crate::runtime::XlaBackend::from_default_dir()?)),
+            BackendKind::Native => Ok(Box::new(crate::runtime::NativeBackend::new())),
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! XLA/PJRT backend: lazily compiles the HLO-text artifacts and executes
+//! them with literals built from the trainer's row-major buffers.
+//!
+//! One `PjRtClient` per process; executables are cached per [`UnitKey`].
+
+use super::artifacts::{Manifest, UnitKey, UnitKind};
+use super::backend::{Backend, LossGrad};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<UnitKey, xla::PjRtLoadedExecutable>,
+    /// Device-resident adjacency buffers, keyed by (n, content
+    /// fingerprint). Â is constant across epochs and dominates the
+    /// per-call payload (n² f32); caching it both removes the repeated
+    /// host→device copy and sidesteps most of the C-shim's per-transfer
+    /// leak (see `run`).
+    adj_cache: HashMap<(usize, u64), xla::PjRtBuffer>,
+    /// Compile + execute counters (runtime introspection for benches).
+    pub compiles: usize,
+    pub executions: std::cell::Cell<usize>,
+}
+
+/// FNV-1a over the dimensions and a strided sample of the matrix — enough
+/// to distinguish the per-worker adjacency matrices of one process.
+fn fingerprint(data: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(data.len() as u64);
+    let stride = (data.len() / 64).max(1);
+    for i in (0..data.len()).step_by(stride) {
+        mix(data[i].to_bits() as u64 ^ (i as u64) << 32);
+    }
+    h
+}
+
+impl XlaBackend {
+    pub fn new(manifest: Manifest) -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(XlaBackend {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            adj_cache: HashMap::new(),
+            compiles: 0,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load from `$CAPGNN_ARTIFACTS` / `<crate>/artifacts`.
+    pub fn from_default_dir() -> Result<XlaBackend> {
+        let dir = Manifest::default_dir();
+        let manifest = Manifest::load(&dir)
+            .map_err(|e| anyhow!("manifest: {e} — run `make artifacts` first"))?;
+        XlaBackend::new(manifest)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn ensure_executable(&mut self, key: UnitKey) -> Result<()> {
+        if !self.executables.contains_key(&key) {
+            let path = self
+                .manifest
+                .path_of(&key)
+                .ok_or_else(|| anyhow!("no artifact for {key:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {key:?}: {e:?}"))?;
+            self.compiles += 1;
+            self.executables.insert(key, exe);
+        }
+        Ok(())
+    }
+
+    /// Device buffer for the (constant) adjacency operand, cached.
+    fn adj_buf(&mut self, a: &[f32], n: usize) -> Result<(usize, u64)> {
+        let key = (n, fingerprint(a));
+        if !self.adj_cache.contains_key(&key) {
+            let buf = self.buf2(a, n, n)?;
+            self.adj_cache.insert(key, buf);
+        }
+        Ok(key)
+    }
+
+    fn buf2(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(data.len(), rows * cols);
+        self.client
+            .buffer_from_host_buffer(data, &[rows, cols], None)
+            .map_err(|e| anyhow!("buffer2: {e:?}"))
+    }
+
+    fn buf1(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(|e| anyhow!("buffer1: {e:?}"))
+    }
+
+    /// Execute via device buffers (`execute_b`), not literals: the literal
+    /// path through the C shim's `execute` leaks ~30 MiB per call at
+    /// n=1024 (OOM after a few hundred epochs). Buffers carry a rust
+    /// `Drop`; the remaining shim leak is per-transfer, which the Â cache
+    /// reduces to the small per-epoch operands.
+    fn run(&self, key: UnitKey, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        self.executions.set(self.executions.get() + 1);
+        let exe = &self.executables[&key];
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute {key:?}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+
+    fn vec_of(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let key = UnitKey { kind: UnitKind::GcnFwd, n, d_in, d_out, relu };
+        self.ensure_executable(key)?;
+        let adj = self.adj_buf(a, n)?;
+        let bh = self.buf2(h, n, d_in)?;
+        let bw = self.buf2(w, d_in, d_out)?;
+        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bw])?;
+        Self::vec_of(&out[0])
+    }
+
+    fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
+               -> Result<(Vec<f32>, Vec<f32>)> {
+        let key = UnitKey { kind: UnitKind::GcnBwd, n, d_in, d_out, relu };
+        self.ensure_executable(key)?;
+        let adj = self.adj_buf(a, n)?;
+        let bh = self.buf2(h, n, d_in)?;
+        let bw = self.buf2(w, d_in, d_out)?;
+        let bd = self.buf2(d_out_grad, n, d_out)?;
+        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bw, &bd])?;
+        Ok((Self::vec_of(&out[0])?, Self::vec_of(&out[1])?))
+    }
+
+    fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32])
+                -> Result<Vec<f32>> {
+        let key = UnitKey { kind: UnitKind::SageFwd, n, d_in, d_out, relu };
+        self.ensure_executable(key)?;
+        let adj = self.adj_buf(a, n)?;
+        let bh = self.buf2(h, n, d_in)?;
+        let bs = self.buf2(w_self, d_in, d_out)?;
+        let bn = self.buf2(w_neigh, d_in, d_out)?;
+        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bs, &bn])?;
+        Self::vec_of(&out[0])
+    }
+
+    fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let key = UnitKey { kind: UnitKind::SageBwd, n, d_in, d_out, relu };
+        self.ensure_executable(key)?;
+        let adj = self.adj_buf(a, n)?;
+        let bh = self.buf2(h, n, d_in)?;
+        let bs = self.buf2(w_self, d_in, d_out)?;
+        let bn = self.buf2(w_neigh, d_in, d_out)?;
+        let bd = self.buf2(d_out_grad, n, d_out)?;
+        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bs, &bn, &bd])?;
+        Ok((
+            Self::vec_of(&out[0])?,
+            Self::vec_of(&out[1])?,
+            Self::vec_of(&out[2])?,
+        ))
+    }
+
+    fn ce_grad(&mut self, n: usize, c: usize,
+               logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {
+        let key = UnitKey { kind: UnitKind::CeGrad, n, d_in: c, d_out: c, relu: false };
+        self.ensure_executable(key)?;
+        let bl = self.buf2(logits, n, c)?;
+        let by = self.buf2(y, n, c)?;
+        let bm = self.buf1(mask)?;
+        let out = self.run(key, &[&bl, &by, &bm])?;
+        let loss = out[0]
+            .to_vec::<f32>()
+            .context("loss")?
+            .first()
+            .copied()
+            .unwrap_or(f32::NAN);
+        let correct = out[1]
+            .to_vec::<f32>()
+            .context("correct")?
+            .first()
+            .copied()
+            .unwrap_or(0.0);
+        Ok(LossGrad { loss, correct, dz: Self::vec_of(&out[2])? })
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+    use crate::util::Rng;
+
+    fn have_artifacts() -> bool {
+        Manifest::load(&Manifest::default_dir()).is_ok()
+    }
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn rand_adj(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut a = rand_vec(rng, n * n);
+        for v in a.iter_mut() {
+            *v = v.abs() / n as f32;
+        }
+        a
+    }
+
+    /// The central cross-check: XLA artifact ≡ native backend on every unit.
+    #[test]
+    fn xla_matches_native_all_units() {
+        if !have_artifacts() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let mut xla = XlaBackend::from_default_dir().unwrap();
+        let mut nat = NativeBackend::new();
+        let mut rng = Rng::new(5);
+        let (n, di, do_) = (256, 16, 16);
+        let a = rand_adj(&mut rng, n);
+        let h = rand_vec(&mut rng, n * di);
+        let w = rand_vec(&mut rng, di * do_);
+        let w2 = rand_vec(&mut rng, di * do_);
+        let d_out = rand_vec(&mut rng, n * do_);
+
+        let close = |x: &[f32], y: &[f32], tol: f32, what: &str| {
+            assert_eq!(x.len(), y.len(), "{what} length");
+            for (i, (a, b)) in x.iter().zip(y.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < tol * (1.0 + a.abs()),
+                    "{what}[{i}]: xla {a} native {b}"
+                );
+            }
+        };
+
+        for relu in [true, false] {
+            // gcn dims available: (16,16,relu) and (16,4,lin) at n=256.
+            let (di2, do2) = if relu { (16, 16) } else { (16, 4) };
+            let wd = rand_vec(&mut rng, di2 * do2);
+            let dd = rand_vec(&mut rng, n * do2);
+            let xf = xla.gcn_fwd(n, di2, do2, relu, &a, &h, &wd).unwrap();
+            let nf = nat.gcn_fwd(n, di2, do2, relu, &a, &h, &wd).unwrap();
+            close(&xf, &nf, 2e-3, "gcn_fwd");
+            let (xgw, xdh) = xla.gcn_bwd(n, di2, do2, relu, &a, &h, &wd, &dd).unwrap();
+            let (ngw, ndh) = nat.gcn_bwd(n, di2, do2, relu, &a, &h, &wd, &dd).unwrap();
+            close(&xgw, &ngw, 2e-3, "gcn_bwd gW");
+            close(&xdh, &ndh, 2e-3, "gcn_bwd dH");
+        }
+
+        let xs = xla.sage_fwd(n, di, do_, true, &a, &h, &w, &w2).unwrap();
+        let ns = nat.sage_fwd(n, di, do_, true, &a, &h, &w, &w2).unwrap();
+        close(&xs, &ns, 2e-3, "sage_fwd");
+        let (xg1, xg2, xdh) =
+            xla.sage_bwd(n, di, do_, true, &a, &h, &w, &w2, &d_out).unwrap();
+        let (ng1, ng2, ndh) =
+            nat.sage_bwd(n, di, do_, true, &a, &h, &w, &w2, &d_out).unwrap();
+        close(&xg1, &ng1, 2e-3, "sage gWs");
+        close(&xg2, &ng2, 2e-3, "sage gWn");
+        close(&xdh, &ndh, 2e-3, "sage dH");
+
+        // ce_grad at c=4.
+        let c = 4;
+        let logits = rand_vec(&mut rng, n * c);
+        let mut y = vec![0.0f32; n * c];
+        for i in 0..n {
+            y[i * c + i % c] = 1.0;
+        }
+        let mask: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let xl = xla.ce_grad(n, c, &logits, &y, &mask).unwrap();
+        let nl = nat.ce_grad(n, c, &logits, &y, &mask).unwrap();
+        assert!((xl.loss - nl.loss).abs() < 1e-4, "{} vs {}", xl.loss, nl.loss);
+        assert_eq!(xl.correct, nl.correct);
+        close(&xl.dz, &nl.dz, 1e-4, "ce dz");
+
+        // Executable cache: re-running compiles nothing new.
+        let before = xla.compiles;
+        let _ = xla.gcn_fwd(n, 16, 16, true, &a, &h, &w).unwrap();
+        assert_eq!(xla.compiles, before);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them from the rust training path. Python is never involved at runtime.
+
+pub mod artifacts;
+pub mod backend;
+pub mod client;
+pub mod native;
+
+pub use artifacts::{Manifest, UnitKey, UnitKind};
+pub use backend::{Backend, BackendKind};
+pub use client::XlaBackend;
+pub use native::NativeBackend;

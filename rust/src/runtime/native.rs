@@ -1,0 +1,410 @@
+//! Pure-rust compute backend: a third, independent implementation of the
+//! per-layer math (after the Pallas kernel and the jnp oracle). Used for
+//! hermetic `cargo test` runs and as the cross-check oracle against the
+//! XLA artifacts.
+
+use super::backend::{Backend, LossGrad};
+use anyhow::Result;
+
+/// Row-major matmul: out[m×n] = x[m×k] · y[k×n].
+/// i-k-j loop order with a row accumulator — autovectorizes well; the §Perf
+/// pass validated this ordering ~8× faster than naive i-j-k at n=1024.
+pub fn matmul(m: usize, k: usize, n: usize, x: &[f32], y: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(y.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue; // Â rows are sparse-ish after padding
+            }
+            let yrow = &y[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * yrow[j];
+            }
+        }
+    }
+}
+
+/// out = xᵀ[k×m]·y — i.e. matmul of x transposed, without materializing it.
+pub fn matmul_tn(m: usize, k: usize, n: usize, x: &[f32], y: &[f32], out: &mut [f32]) {
+    // x is m×k (we want xᵀ·y = k×n), y is m×n.
+    assert_eq!(x.len(), m * k);
+    assert_eq!(y.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let yrow = &y[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * yrow[j];
+            }
+        }
+    }
+}
+
+fn relu_inplace(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub struct NativeBackend {
+    // Scratch buffers reused across calls (no allocation in the hot loop —
+    // §Perf L3).
+    scratch: Vec<f32>,
+    scratch2: Vec<f32>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { scratch: Vec::new(), scratch2: Vec::new() }
+    }
+
+    fn buf(&mut self, len: usize) -> &mut Vec<f32> {
+        self.scratch.resize(len, 0.0);
+        &mut self.scratch
+    }
+}
+
+impl Backend for NativeBackend {
+    fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let ah = {
+            let b = self.buf(n * d_in);
+            matmul(n, n, d_in, a, h, b);
+            b.clone()
+        };
+        let mut z = vec![0.0f32; n * d_out];
+        matmul(n, d_in, d_out, &ah, w, &mut z);
+        if relu {
+            relu_inplace(&mut z);
+        }
+        Ok(z)
+    }
+
+    fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
+               -> Result<(Vec<f32>, Vec<f32>)> {
+        // ah = A·H ; z = ah·W
+        self.scratch.resize(n * d_in, 0.0);
+        matmul(n, n, d_in, a, h, &mut self.scratch);
+        let ah = self.scratch.clone();
+        self.scratch2.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, &ah, w, &mut self.scratch2);
+        // dz = d_out_grad ⊙ relu'(z)
+        let mut dz = d_out_grad.to_vec();
+        if relu {
+            for (dzv, &zv) in dz.iter_mut().zip(self.scratch2.iter()) {
+                if zv <= 0.0 {
+                    *dzv = 0.0;
+                }
+            }
+        }
+        // gW = ahᵀ·dz
+        let mut g_w = vec![0.0f32; d_in * d_out];
+        matmul_tn(n, d_in, d_out, &ah, &dz, &mut g_w);
+        // dH = Aᵀ·(dz·Wᵀ); W is d_in×d_out so dz·Wᵀ is n×d_in.
+        let mut dzw = vec![0.0f32; n * d_in];
+        // dz[n×d_out]·Wᵀ[d_out×d_in] — computed as matmul with transposed W:
+        for i in 0..n {
+            for di in 0..d_in {
+                let mut acc = 0.0f32;
+                for dj in 0..d_out {
+                    acc += dz[i * d_out + dj] * w[di * d_out + dj];
+                }
+                dzw[i * d_in + di] = acc;
+            }
+        }
+        let mut d_h = vec![0.0f32; n * d_in];
+        matmul_tn(n, n, d_in, a, &dzw, &mut d_h); // Aᵀ·dzw
+        Ok((g_w, d_h))
+    }
+
+    fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32])
+                -> Result<Vec<f32>> {
+        let mut z = vec![0.0f32; n * d_out];
+        matmul(n, d_in, d_out, h, w_self, &mut z);
+        self.scratch.resize(n * d_in, 0.0);
+        matmul(n, n, d_in, a, h, &mut self.scratch);
+        let ah = self.scratch.clone();
+        self.scratch2.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, &ah, w_neigh, &mut self.scratch2);
+        for (zv, &nv) in z.iter_mut().zip(self.scratch2.iter()) {
+            *zv += nv;
+        }
+        if relu {
+            relu_inplace(&mut z);
+        }
+        Ok(z)
+    }
+
+    fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        // Recompute z for relu mask.
+        let z = self.sage_fwd(n, d_in, d_out, false, a, h, w_self, w_neigh)?;
+        let mut dz = d_out_grad.to_vec();
+        if relu {
+            for (dzv, &zv) in dz.iter_mut().zip(z.iter()) {
+                if zv <= 0.0 {
+                    *dzv = 0.0;
+                }
+            }
+        }
+        // ah = A·H
+        let mut ah = vec![0.0f32; n * d_in];
+        matmul(n, n, d_in, a, h, &mut ah);
+        let mut g_ws = vec![0.0f32; d_in * d_out];
+        matmul_tn(n, d_in, d_out, h, &dz, &mut g_ws);
+        let mut g_wn = vec![0.0f32; d_in * d_out];
+        matmul_tn(n, d_in, d_out, &ah, &dz, &mut g_wn);
+        // dH = dz·Wselfᵀ + Aᵀ·(dz·Wneighᵀ)
+        let mut dzs = vec![0.0f32; n * d_in];
+        let mut dzn = vec![0.0f32; n * d_in];
+        for i in 0..n {
+            for di in 0..d_in {
+                let mut acc_s = 0.0f32;
+                let mut acc_n = 0.0f32;
+                for dj in 0..d_out {
+                    let d = dz[i * d_out + dj];
+                    acc_s += d * w_self[di * d_out + dj];
+                    acc_n += d * w_neigh[di * d_out + dj];
+                }
+                dzs[i * d_in + di] = acc_s;
+                dzn[i * d_in + di] = acc_n;
+            }
+        }
+        let mut d_h = vec![0.0f32; n * d_in];
+        matmul_tn(n, n, d_in, a, &dzn, &mut d_h);
+        for (dh, &s) in d_h.iter_mut().zip(dzs.iter()) {
+            *dh += s;
+        }
+        Ok((g_ws, g_wn, d_h))
+    }
+
+    fn ce_grad(&mut self, n: usize, c: usize,
+               logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {
+        let n_mask: f32 = mask.iter().sum::<f32>().max(1.0);
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f32;
+        let mut dz = vec![0.0f32; n * c];
+        for i in 0..n {
+            let row = &logits[i * c..(i + 1) * c];
+            let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - maxv).exp();
+            }
+            let log_sum = sum.ln() + maxv;
+            let m = mask[i];
+            let yrow = &y[i * c..(i + 1) * c];
+            let mut argmax_l = 0;
+            let mut argmax_y = 0;
+            for j in 0..c {
+                let logp = row[j] - log_sum;
+                let p = logp.exp();
+                dz[i * c + j] = (p - yrow[j]) * m / n_mask;
+                if m > 0.0 {
+                    loss -= (yrow[j] * logp) as f64;
+                }
+                if row[j] > row[argmax_l] {
+                    argmax_l = j;
+                }
+                if yrow[j] > yrow[argmax_y] {
+                    argmax_y = j;
+                }
+            }
+            if m > 0.0 && argmax_l == argmax_y {
+                correct += 1.0;
+            }
+        }
+        Ok(LossGrad {
+            loss: (loss / n_mask as f64) as f32,
+            correct,
+            dz,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![1.0, 0.0, 0.0, 1.0];
+        let mut out = vec![0.0; 4];
+        matmul(2, 2, 2, &x, &y, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (7, 5, 3);
+        let x = rand_vec(&mut rng, m * k);
+        let y = rand_vec(&mut rng, m * n);
+        let mut got = vec![0.0; k * n];
+        matmul_tn(m, k, n, &x, &y, &mut got);
+        // Explicit transpose.
+        let mut xt = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                xt[j * m + i] = x[i * k + j];
+            }
+        }
+        let mut want = vec![0.0; k * n];
+        matmul(k, m, n, &xt, &y, &mut want);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gcn_fwd_identity_adj() {
+        let mut b = NativeBackend::new();
+        let n = 4;
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let h = vec![1.0f32; n * 2];
+        let w = vec![1.0, -1.0, 1.0, -1.0]; // 2×2
+        let out = b.gcn_fwd(n, 2, 2, true, &a, &h, &w).unwrap();
+        // z = h@w = [2,-2] per row → relu → [2,0]
+        for i in 0..n {
+            assert_eq!(out[i * 2], 2.0);
+            assert_eq!(out[i * 2 + 1], 0.0);
+        }
+    }
+
+    /// Finite-difference check of gcn_bwd's gW.
+    #[test]
+    fn gcn_bwd_finite_difference() {
+        let mut rng = Rng::new(2);
+        let mut b = NativeBackend::new();
+        let (n, di, do_) = (6, 4, 3);
+        let mut a = rand_vec(&mut rng, n * n);
+        for v in a.iter_mut() {
+            *v = v.abs() / n as f32;
+        }
+        let h = rand_vec(&mut rng, n * di);
+        let w = rand_vec(&mut rng, di * do_);
+        let d_out = rand_vec(&mut rng, n * do_);
+
+        let (g_w, _) = b.gcn_bwd(n, di, do_, true, &a, &h, &w, &d_out).unwrap();
+        let f = |b: &mut NativeBackend, w: &[f32]| -> f32 {
+            let out = b.gcn_fwd(n, di, do_, true, &a, &h, w).unwrap();
+            out.iter().zip(d_out.iter()).map(|(o, d)| o * d).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 3, 7, di * do_ - 1] {
+            let mut wp = w.clone();
+            wp[idx] += eps;
+            let mut wm = w.clone();
+            wm[idx] -= eps;
+            let fd = (f(&mut b, &wp) - f(&mut b, &wm)) / (2.0 * eps);
+            assert!(
+                (fd - g_w[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} analytic {}",
+                g_w[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn sage_bwd_finite_difference() {
+        let mut rng = Rng::new(3);
+        let mut b = NativeBackend::new();
+        let (n, di, do_) = (5, 3, 3);
+        let mut a = rand_vec(&mut rng, n * n);
+        for v in a.iter_mut() {
+            *v = v.abs() / n as f32;
+        }
+        let h = rand_vec(&mut rng, n * di);
+        let ws = rand_vec(&mut rng, di * do_);
+        let wn = rand_vec(&mut rng, di * do_);
+        let d_out = rand_vec(&mut rng, n * do_);
+        let (g_ws, g_wn, _) =
+            b.sage_bwd(n, di, do_, true, &a, &h, &ws, &wn, &d_out).unwrap();
+        let f = |b: &mut NativeBackend, ws: &[f32], wn: &[f32]| -> f32 {
+            let out = b.sage_fwd(n, di, do_, true, &a, &h, ws, wn).unwrap();
+            out.iter().zip(d_out.iter()).map(|(o, d)| o * d).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 4, di * do_ - 1] {
+            let mut p = ws.clone();
+            p[idx] += eps;
+            let mut m = ws.clone();
+            m[idx] -= eps;
+            let fd = (f(&mut b, &p, &wn) - f(&mut b, &m, &wn)) / (2.0 * eps);
+            assert!((fd - g_ws[idx]).abs() < 2e-2 * (1.0 + fd.abs()));
+            let mut p = wn.clone();
+            p[idx] += eps;
+            let mut m = wn.clone();
+            m[idx] -= eps;
+            let fd = (f(&mut b, &ws, &p) - f(&mut b, &ws, &m)) / (2.0 * eps);
+            assert!((fd - g_wn[idx]).abs() < 2e-2 * (1.0 + fd.abs()));
+        }
+    }
+
+    #[test]
+    fn ce_grad_uniform_logits() {
+        let mut b = NativeBackend::new();
+        let (n, c) = (4, 4);
+        let logits = vec![0.0f32; n * c];
+        let mut y = vec![0.0f32; n * c];
+        for i in 0..n {
+            y[i * c + i % c] = 1.0;
+        }
+        let mask = vec![1.0f32; n];
+        let lg = b.ce_grad(n, c, &logits, &y, &mask).unwrap();
+        assert!((lg.loss - (c as f32).ln()).abs() < 1e-5);
+        // dz sums to zero per row.
+        for i in 0..n {
+            let s: f32 = lg.dz[i * c..(i + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ce_grad_mask_zeroes_rows() {
+        let mut b = NativeBackend::new();
+        let (n, c) = (3, 2);
+        let logits = vec![1.0, -1.0, 0.5, 0.5, 2.0, 0.0];
+        let y = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0];
+        let mask = vec![1.0, 0.0, 1.0];
+        let lg = b.ce_grad(n, c, &logits, &y, &mask).unwrap();
+        assert_eq!(&lg.dz[2..4], &[0.0, 0.0]);
+        assert!(lg.correct <= 2.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The full-batch multi-worker trainer: composes partitioning (RAPA or a
+//! baseline partitioner), the two-level JACA cache, the exchange engine,
+//! the pipeline model, and a compute backend into the paper's training
+//! loop.
+
+pub mod report;
+pub mod trainer;
+
+pub use report::TrainReport;
+pub use trainer::{train, CapacityMode, TrainConfig};

@@ -1,0 +1,97 @@
+//! Training outcome: everything the paper's tables/figures report.
+
+use crate::cache::TwoLevelStats;
+use crate::device::simclock::StageTimes;
+
+/// Per-run record.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// Simulated epoch wall time (barrier over workers), per epoch.
+    pub epoch_times: Vec<f64>,
+    /// Simulated visible communication time per epoch.
+    pub comm_times: Vec<f64>,
+    /// Global training loss per epoch.
+    pub losses: Vec<f32>,
+    /// Validation accuracy per epoch (fraction).
+    pub val_accs: Vec<f32>,
+    /// Final test accuracy.
+    pub test_acc: f32,
+    /// Mean per-worker stage breakdown, summed over epochs.
+    pub stage_totals: StageTimes,
+    /// Per-worker stage breakdown, summed over epochs (load-balance
+    /// analysis — Fig. 21 variance).
+    pub worker_stages: Vec<StageTimes>,
+    /// Device bytes moved / saved by caching over the run.
+    pub bytes_moved: u64,
+    pub bytes_saved: u64,
+    /// Final cache statistics.
+    pub cache: TwoLevelStats,
+    /// Real wallclock of the run (perf accounting, not a paper metric).
+    pub wallclock: f64,
+    /// Halo replicas pruned by RAPA (0 when RAPA is off).
+    pub rapa_pruned: usize,
+}
+
+impl TrainReport {
+    /// Total simulated training time (Σ epochs) — the paper's "Epoch"
+    /// column reports total time for 200 epochs.
+    pub fn total_time(&self) -> f64 {
+        self.epoch_times.iter().sum()
+    }
+
+    /// Total simulated communication time — the "Comm" column.
+    pub fn total_comm(&self) -> f64 {
+        self.comm_times.iter().sum()
+    }
+
+    /// Best validation accuracy seen.
+    pub fn best_val_acc(&self) -> f32 {
+        self.val_accs.iter().copied().fold(0.0, f32::max)
+    }
+
+    /// Mean epoch time.
+    pub fn mean_epoch(&self) -> f64 {
+        if self.epoch_times.is_empty() {
+            0.0
+        } else {
+            self.total_time() / self.epoch_times.len() as f64
+        }
+    }
+
+    /// Overhead ratio r_overhead = (check+pick)/total (Fig. 19).
+    pub fn overhead_ratio(&self) -> f64 {
+        let t = self.total_time();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.stage_totals.check_cache + self.stage_totals.pick_cache) / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let r = TrainReport {
+            epoch_times: vec![1.0, 2.0],
+            comm_times: vec![0.5, 0.25],
+            val_accs: vec![0.3, 0.8, 0.7],
+            ..Default::default()
+        };
+        assert_eq!(r.total_time(), 3.0);
+        assert_eq!(r.total_comm(), 0.75);
+        assert_eq!(r.best_val_acc(), 0.8);
+        assert_eq!(r.mean_epoch(), 1.5);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let r = TrainReport::default();
+        assert_eq!(r.mean_epoch(), 0.0);
+        assert_eq!(r.overhead_ratio(), 0.0);
+        assert_eq!(r.best_val_acc(), 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Hand-rolled CLI argument parsing (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option, e.g. `--parts 2,4,8`.
+    pub fn list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed() {
+        // NB: boolean flags must use `--flag=`-less form at the end or
+        // before another option — `--flag value` reads as an option.
+        let a = parse(&["train", "extra", "--dataset", "rt", "--parts=4", "--verbose"]);
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("dataset"), Some("rt"));
+        assert_eq!(a.usize_or("parts", 1), 4);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.01), 0.01);
+        assert_eq!(a.get_or("x", "y"), "y");
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = parse(&["--pipe"]);
+        assert!(a.has_flag("pipe"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--parts", "2,4,8"]);
+        assert_eq!(a.list_or("parts", &[1]), vec![2, 4, 8]);
+        assert_eq!(a.list_or("hops", &[1, 2]), vec![1, 2]);
+    }
+}

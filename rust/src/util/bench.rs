@@ -1,0 +1,104 @@
+//! Tiny bench harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a `harness = false` binary that calls
+//! [`run_bench`] with a closure; results (mean ± std over warm reps) are
+//! printed and optionally appended as JSON lines to
+//! `target/bench-results.jsonl` for postprocessing.
+
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::Summary;
+
+/// Measure `f` `reps` times after `warmup` unmeasured runs.
+pub fn measure<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&times)
+}
+
+/// Named wallclock measurement with standard reporting.
+pub fn run_bench<F: FnMut()>(name: &str, f: F) -> Summary {
+    let reps = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let sum = measure(f, 1, reps);
+    println!("bench {name}: {sum}");
+    record(name, &sum);
+    sum
+}
+
+/// Experiment-driver bench: one measured run by default (the driver itself
+/// sweeps many configurations), still honouring BENCH_REPS.
+pub fn run_expt_bench<F: FnMut()>(name: &str, f: F) -> Summary {
+    let reps = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let sum = measure(f, 0, reps);
+    println!("bench {name}: {sum}");
+    record(name, &sum);
+    sum
+}
+
+/// Append a result line to `target/bench-results.jsonl`.
+pub fn record(name: &str, sum: &Summary) {
+    let line = obj(vec![
+        ("bench", s(name)),
+        ("mean_s", num(sum.mean)),
+        ("std_s", num(sum.std)),
+        ("n", num(sum.n as f64)),
+    ])
+    .to_string();
+    let _ = std::fs::create_dir_all("target");
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bench-results.jsonl")
+    {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// Append an arbitrary JSON record (used by experiment drivers to dump the
+/// series a figure plots).
+pub fn record_json(value: Json) {
+    let _ = std::fs::create_dir_all("target");
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bench-results.jsonl")
+    {
+        let _ = writeln!(f, "{}", value.to_string());
+    }
+}
+
+/// Standard "quick mode" check: benches honour BENCH_QUICK=1 to shrink
+/// workloads (used in CI / smoke runs).
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts() {
+        let mut calls = 0;
+        let s = measure(|| calls += 1, 2, 3);
+        assert_eq!(calls, 5);
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+}

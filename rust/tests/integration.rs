@@ -1,0 +1,203 @@
+//! Integration tests: the full stack composed end-to-end — partitioner →
+//! RAPA → JACA cache → exchange → backend → trainer — plus cross-backend
+//! consistency (native rust vs AOT XLA artifacts).
+
+use capgnn::baselines::{Ablation, System};
+use capgnn::device::profile::{DeviceKind, Gpu, GpuGroup};
+use capgnn::device::topology::Topology;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::tiny;
+use capgnn::graph::spec_by_name;
+use capgnn::model::ModelKind;
+use capgnn::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
+use capgnn::train::{train, TrainConfig};
+use capgnn::util::Rng;
+
+fn gpus(n: usize, seed: u64) -> Vec<Gpu> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng)).collect()
+}
+
+fn tiny_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn have_artifacts() -> bool {
+    Manifest::load(&Manifest::default_dir()).is_ok()
+}
+
+/// The determinism contract: same seed ⇒ bit-identical report.
+#[test]
+fn training_is_deterministic() {
+    let ds = tiny(1);
+    let g = gpus(2, 3);
+    let topo = Topology::pcie_pairs(2);
+    let cfg = tiny_cfg(8);
+    let mut b1 = NativeBackend::new();
+    let mut b2 = NativeBackend::new();
+    let r1 = train(&ds, &g, &topo, &mut b1, &cfg).unwrap();
+    let r2 = train(&ds, &g, &topo, &mut b2, &cfg).unwrap();
+    assert_eq!(r1.losses, r2.losses);
+    assert_eq!(r1.val_accs, r2.val_accs);
+    assert_eq!(r1.bytes_moved, r2.bytes_moved);
+}
+
+/// Native and XLA backends must agree on the training trajectory (they
+/// implement the same math; fp reassociation allows small drift).
+#[test]
+fn xla_and_native_backends_agree() {
+    if !have_artifacts() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let ds = tiny(2);
+    let g = gpus(2, 4);
+    let topo = Topology::pcie_pairs(2);
+    let cfg = tiny_cfg(6);
+    let mut nat = NativeBackend::new();
+    let mut xla = XlaBackend::from_default_dir().unwrap();
+    let rn = train(&ds, &g, &topo, &mut nat, &cfg).unwrap();
+    let rx = train(&ds, &g, &topo, &mut xla, &cfg).unwrap();
+    for (i, (a, b)) in rn.losses.iter().zip(&rx.losses).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-3 * (1.0 + a.abs()),
+            "epoch {i}: native loss {a} xla loss {b}"
+        );
+    }
+    // Identical cache/communication behaviour (independent of backend).
+    assert_eq!(rn.bytes_moved, rx.bytes_moved);
+    assert_eq!(rn.cache.checks, rx.cache.checks);
+}
+
+/// Every system preset runs end-to-end on every model it supports.
+#[test]
+fn all_systems_run_both_models() {
+    let ds = tiny(3);
+    let g = gpus(2, 5);
+    let topo = Topology::pcie_pairs(2);
+    for system in capgnn::baselines::ALL_SYSTEMS {
+        for model in [ModelKind::Gcn, ModelKind::Sage] {
+            if !system.supports_sage() && model == ModelKind::Sage {
+                continue;
+            }
+            let mut cfg = system.config(4, ds.data.f_dim);
+            cfg.model = model;
+            cfg.hidden = 16;
+            cfg.layers = 2;
+            let mut backend = NativeBackend::new();
+            let r = train(&ds, &g, &topo, &mut backend, &cfg)
+                .unwrap_or_else(|e| panic!("{} {} failed: {e}", system.name(), model.name()));
+            assert_eq!(r.epoch_times.len(), 4);
+            assert!(r.losses.iter().all(|l| l.is_finite()));
+        }
+    }
+}
+
+/// Every ablation arm runs and the comm ordering matches Table 8's shape:
+/// Vanilla ≥ (+JACA | +RAPA) ≥ +JACA+RAPA ≥ full-with-pipe (visible comm).
+#[test]
+fn ablation_comm_ordering() {
+    let ds = spec_by_name("Rt").unwrap().build_scaled(9, 0.15);
+    let g = GpuGroup::by_name("x4").unwrap().instantiate(&mut Rng::new(6));
+    let topo = Topology::pcie_pairs(4);
+    let mut comm = std::collections::HashMap::new();
+    for arm in capgnn::baselines::ABLATIONS {
+        let cfg = arm.config(6);
+        let mut backend = NativeBackend::new();
+        let r = train(&ds, &g, &topo, &mut backend, &cfg).unwrap();
+        comm.insert(arm.name(), r.total_comm());
+    }
+    let vanilla = comm["Vanilla"];
+    assert!(comm["+JACA"] < vanilla, "JACA must cut comm: {comm:?}");
+    assert!(comm["+RAPA"] < vanilla, "RAPA must cut comm: {comm:?}");
+    assert!(
+        comm["+JACA+RAPA"] <= comm["+JACA"] * 1.05,
+        "combining should not regress: {comm:?}"
+    );
+    assert!(
+        comm["+JACA+RAPA+Pipe."] <= comm["+JACA+RAPA"] * 1.05,
+        "pipeline hides comm: {comm:?}"
+    );
+    let _ = Ablation::Full;
+}
+
+/// Multi-machine cluster training composes with every preset cluster.
+#[test]
+fn distributed_presets_run() {
+    let ds = tiny(4);
+    for name in ["1M-4D", "2M-2D", "2M-4D"] {
+        let cluster = Cluster::preset(name).unwrap();
+        let mut backend = NativeBackend::new();
+        let cfg = tiny_cfg(4);
+        let r = capgnn::dist::train_distributed(&ds, &cluster, &mut backend, &cfg)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(r.epochs_per_sec > 0.0);
+        assert!(r.report.losses.iter().all(|l| l.is_finite()));
+    }
+}
+
+/// Failure injection: pathological inputs must not panic.
+#[test]
+fn degenerate_inputs_survive() {
+    // Graph with isolated vertices and a single component of 3.
+    let mut ds = tiny(5);
+    // Single worker (no communication at all).
+    let g = gpus(1, 7);
+    let topo = Topology::pcie_pairs(1);
+    let cfg = tiny_cfg(3);
+    let mut backend = NativeBackend::new();
+    let r = train(&ds, &g, &topo, &mut backend, &cfg).unwrap();
+    assert_eq!(r.bytes_moved, 0);
+
+    // Zero cache capacity with caching "on" — works, just never hits.
+    let g2 = gpus(2, 8);
+    let topo2 = Topology::pcie_pairs(2);
+    let mut cfg2 = tiny_cfg(3);
+    cfg2.capacity = capgnn::train::CapacityMode::Fixed { local: 0, global: 0 };
+    let r2 = train(&ds, &g2, &topo2, &mut backend, &cfg2).unwrap();
+    assert_eq!(r2.cache.local_hits + r2.cache.global_hits, 0);
+    assert!(r2.losses.iter().all(|l| l.is_finite()));
+
+    // More partitions than sensible (8 workers on 256 vertices).
+    let g3 = gpus(8, 9);
+    let topo3 = Topology::pcie_pairs(8);
+    let r3 = train(&ds, &g3, &topo3, &mut backend, &tiny_cfg(2)).unwrap();
+    assert!(r3.losses[1].is_finite());
+    ds.name = "tiny";
+    let _ = System::CaPGnn;
+}
+
+/// Bounded staleness: infrequent refresh must still converge on the twin
+/// (Theorem 1's empirical counterpart), and refresh=1 matches Vanilla's
+/// numerics exactly.
+#[test]
+fn staleness_bounded_convergence() {
+    let ds = tiny(6);
+    let g = gpus(2, 10);
+    let topo = Topology::pcie_pairs(2);
+
+    let mut stale = tiny_cfg(40);
+    stale.refresh_interval = 10; // halo embeddings up to 10 epochs old
+    let mut backend = NativeBackend::new();
+    let r = train(&ds, &g, &topo, &mut backend, &stale).unwrap();
+    assert!(
+        r.losses.last().unwrap() < &(r.losses[0] * 0.7),
+        "stale training must still converge: {:?} -> {:?}",
+        r.losses[0],
+        r.losses.last()
+    );
+    assert!(r.best_val_acc() > 0.5);
+
+    // refresh=1: every non-static halo row fetched fresh every epoch ⇒
+    // numerics identical to cache-off Vanilla (only static layer-0
+    // features come from the cache, with identical values).
+    let mut fresh = tiny_cfg(5);
+    fresh.refresh_interval = 1;
+    let mut vanilla = tiny_cfg(5);
+    vanilla.use_cache = false;
+    let rf = train(&ds, &g, &topo, &mut backend, &fresh).unwrap();
+    let rv = train(&ds, &g, &topo, &mut backend, &vanilla).unwrap();
+    for (a, b) in rf.losses.iter().zip(&rv.losses) {
+        assert!((a - b).abs() < 1e-6, "fresh {a} vanilla {b}");
+    }
+}

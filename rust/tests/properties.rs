@@ -1,0 +1,228 @@
+//! Property-based tests (hand-rolled sweep harness; proptest unavailable
+//! offline): invariants of the graph substrate, partitioners, halo
+//! machinery, RAPA and the cache policies under randomized inputs.
+
+use capgnn::cache::{CachePolicy, PolicyKind};
+use capgnn::device::profile::{DeviceKind, Gpu};
+use capgnn::graph::generator::{rmat, sbm, skewed_sbm};
+use capgnn::graph::Graph;
+use capgnn::partition::halo::{build_plan, expand_halo, halo_stats, overlap_ratio};
+use capgnn::partition::rapa::{self, RapaConfig};
+use capgnn::partition::Method;
+use capgnn::util::Rng;
+use std::collections::HashSet;
+
+/// Run `f` across a seed sweep (our property-test loop).
+fn forall_seeds(n: u64, mut f: impl FnMut(u64)) {
+    for seed in 0..n {
+        f(seed);
+    }
+}
+
+fn random_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    match seed % 3 {
+        0 => sbm(100 + rng.index(300), 2 + rng.index(5), 6.0, 2.0, &mut rng).0,
+        1 => skewed_sbm(100 + rng.index(300), 2 + rng.index(5), 8.0, 3.0, 1.8, &mut rng).0,
+        _ => rmat(8 + (seed % 2) as u32, 6.0, &mut rng),
+    }
+}
+
+#[test]
+fn prop_graph_invariants_hold_for_all_generators() {
+    forall_seeds(24, |seed| {
+        let g = random_graph(seed);
+        g.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    });
+}
+
+#[test]
+fn prop_partitions_cover_and_respect_bounds() {
+    forall_seeds(18, |seed| {
+        let g = random_graph(seed);
+        let mut rng = Rng::new(seed ^ 77);
+        let parts = 2 + (seed % 5) as usize;
+        for method in [Method::Metis, Method::Random, Method::Fennel] {
+            let ps = method.partition(&g, parts, &mut rng);
+            ps.check(&g).unwrap();
+            // Every vertex assigned exactly once is implied by the dense
+            // assignment vector; check sizes sum.
+            assert_eq!(ps.sizes().iter().sum::<usize>(), g.n());
+        }
+    });
+}
+
+#[test]
+fn prop_halo_definition() {
+    // H(Gi) = { v ∉ Gi : dist(v, Gi) ≤ hops }, exactly.
+    forall_seeds(12, |seed| {
+        let g = random_graph(seed);
+        let mut rng = Rng::new(seed ^ 1234);
+        let ps = Method::Random.partition(&g, 3, &mut rng);
+        for p in 0..3u32 {
+            let inner: HashSet<u32> = ps.members(p).into_iter().collect();
+            let halo: HashSet<u32> = expand_halo(&g, &ps, p, 1).into_iter().collect();
+            // Disjoint from inner.
+            assert!(halo.is_disjoint(&inner), "seed {seed} part {p}");
+            // Exactly the out-neighbors of the inner set.
+            let mut expect = HashSet::new();
+            for &v in &inner {
+                for &u in g.nbrs(v) {
+                    if !inner.contains(&u) {
+                        expect.insert(u);
+                    }
+                }
+            }
+            assert_eq!(halo, expect, "seed {seed} part {p}");
+        }
+    });
+}
+
+#[test]
+fn prop_overlap_ratio_equals_halo_membership_count() {
+    forall_seeds(10, |seed| {
+        let g = random_graph(seed);
+        let mut rng = Rng::new(seed ^ 99);
+        let parts = 2 + (seed % 4) as usize;
+        let ps = Method::Metis.partition(&g, parts, &mut rng);
+        let r = overlap_ratio(&g, &ps, 1);
+        let mut counted = vec![0u32; g.n()];
+        for p in 0..parts as u32 {
+            for v in expand_halo(&g, &ps, p, 1) {
+                counted[v as usize] += 1;
+            }
+        }
+        assert_eq!(r, counted, "seed {seed}");
+        // Σ R(v) = total halo with multiplicity.
+        let st = halo_stats(&g, &ps, 1);
+        assert_eq!(r.iter().map(|&x| x as usize).sum::<usize>(), st.total_halo);
+    });
+}
+
+#[test]
+fn prop_subgraph_plan_partitions_inner_vertices() {
+    forall_seeds(10, |seed| {
+        let g = random_graph(seed);
+        let mut rng = Rng::new(seed ^ 5);
+        let ps = Method::Fennel.partition(&g, 4, &mut rng);
+        let plan = build_plan(&g, &ps);
+        let mut seen = vec![false; g.n()];
+        for sg in &plan.parts {
+            // Inner ids sorted and unique across parts.
+            for &v in &sg.global_ids[..sg.n_inner] {
+                assert!(!seen[v as usize], "seed {seed}: vertex {v} owned twice");
+                seen[v as usize] = true;
+            }
+            // halo_owner consistent with the assignment.
+            for (hi, &v) in sg.halo_ids().iter().enumerate() {
+                assert_eq!(sg.halo_owner[hi], ps.assignment[v as usize]);
+                assert_ne!(sg.halo_owner[hi], sg.part);
+            }
+            sg.local.check_invariants().unwrap();
+        }
+        assert!(seen.iter().all(|&b| b), "seed {seed}: vertex unowned");
+    });
+}
+
+#[test]
+fn prop_rapa_never_touches_inner_and_reduces_spread() {
+    forall_seeds(8, |seed| {
+        let g = random_graph(seed);
+        if g.n() < 60 {
+            return;
+        }
+        let mut rng = Rng::new(seed ^ 31);
+        let gpus = vec![
+            Gpu::new(0, DeviceKind::Rtx3090, &mut rng),
+            Gpu::new(1, DeviceKind::Rtx3060, &mut rng),
+            Gpu::new(2, DeviceKind::Gtx1650, &mut rng),
+        ];
+        let res = rapa::run(&g, &gpus, &RapaConfig::default(), Method::Metis, &mut rng);
+        // Full-batch invariant: every vertex trained exactly once.
+        let total_inner: usize = res.plan.parts.iter().map(|p| p.n_inner).sum();
+        assert_eq!(total_inner, g.n(), "seed {seed}");
+        // λ spread never grows from first to last snapshot.
+        let first = res.trace.first().unwrap().lambda_std;
+        let last = res.trace.last().unwrap().lambda_std;
+        assert!(last <= first + 1e-9, "seed {seed}: {first} -> {last}");
+        // Halos only shrink.
+        for (sg, &pruned) in res.plan.parts.iter().zip(&res.pruned) {
+            let full = expand_halo(&g, &res.assignment, sg.part, 1).len();
+            assert_eq!(full - pruned, sg.n_halo(), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_cache_policies_never_exceed_capacity() {
+    forall_seeds(12, |seed| {
+        let mut rng = Rng::new(seed);
+        for kind in [PolicyKind::Jaca, PolicyKind::Fifo, PolicyKind::Lru] {
+            let cap = 1 + rng.index(32);
+            let mut c = kind.build(cap);
+            let universe = 1 + rng.index(128) as u64;
+            for _ in 0..500 {
+                let key = rng.next_below(universe);
+                match rng.index(4) {
+                    0 => {
+                        let _ = c.insert(key);
+                    }
+                    1 => {
+                        c.touch(key);
+                    }
+                    2 => {
+                        c.remove(key);
+                    }
+                    _ => {
+                        let _ = c.contains(key);
+                    }
+                }
+                assert!(c.len() <= cap, "{} seed {seed}", kind.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cache_insert_then_contains_unless_refused() {
+    forall_seeds(10, |seed| {
+        let mut rng = Rng::new(seed ^ 2);
+        for kind in [PolicyKind::Jaca, PolicyKind::Fifo, PolicyKind::Lru] {
+            let mut c = kind.build(8);
+            for _ in 0..200 {
+                let key = rng.next_below(64);
+                c.set_priority(key, (key % 5) as u32 + 1);
+                let evicted = c.insert(key);
+                if evicted != Some(key) {
+                    assert!(c.contains(key), "{} seed {seed}", kind.name());
+                }
+                if let Some(victim) = evicted {
+                    if victim != key {
+                        assert!(!c.contains(victim));
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_reorder_preserves_isomorphism_class() {
+    forall_seeds(8, |seed| {
+        let g = random_graph(seed);
+        for perm in [
+            capgnn::graph::reorder::bfs_order(&g),
+            capgnn::graph::reorder::degree_order(&g),
+        ] {
+            let h = capgnn::graph::reorder::apply(&g, &perm);
+            assert_eq!(g.n(), h.n());
+            assert_eq!(g.m(), h.m());
+            // Edge preservation under the permutation.
+            for v in 0..g.n() as u32 {
+                for &u in g.nbrs(v) {
+                    assert!(h.has_edge(perm[v as usize], perm[u as usize]));
+                }
+            }
+        }
+    });
+}
