@@ -5,21 +5,17 @@
 //! Run: `cargo run --release --example cache_tuning`
 
 use capgnn::cache::PolicyKind;
-use capgnn::device::profile::{DeviceKind, Gpu};
-use capgnn::device::topology::Topology;
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
 use capgnn::graph::spec_by_name;
 use capgnn::runtime::NativeBackend;
-use capgnn::train::{train, CapacityMode, TrainConfig};
-use capgnn::util::{Rng, Table};
+use capgnn::train::{CapacityMode, Session, TrainConfig};
+use capgnn::util::Table;
 
 fn main() -> anyhow::Result<()> {
     let dataset = spec_by_name("Yp").unwrap().build_scaled(42, 0.4);
     let parts = 4;
-    let mut rng = Rng::new(11);
-    let gpus: Vec<Gpu> = (0..parts)
-        .map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng))
-        .collect();
-    let topology = Topology::pcie_pairs(parts);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, parts, 11);
     println!(
         "tuning caches for Yelp twin ({} vertices, {} partitions)",
         dataset.graph.n(),
@@ -43,7 +39,7 @@ fn main() -> anyhow::Result<()> {
             cfg.policy = policy;
             cfg.capacity = CapacityMode::Fixed { local: cap, global: cap * parts };
             let mut backend = NativeBackend::new();
-            let r = train(&dataset, &gpus, &topology, &mut backend, &cfg)?;
+            let r = Session::train(&dataset, &cluster, &mut backend, &cfg)?;
             table.row(vec![
                 policy.name().to_string(),
                 cap.to_string(),
@@ -63,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = base.clone();
     cfg.capacity = CapacityMode::Adaptive;
     let mut backend = NativeBackend::new();
-    let r = train(&dataset, &gpus, &topology, &mut backend, &cfg)?;
+    let r = Session::train(&dataset, &cluster, &mut backend, &cfg)?;
     println!(
         "\nadaptive (Algorithm 1): hit rate {:.1}%, total {:.2}s, comm {:.2}s",
         r.cache.hit_rate() * 100.0,

@@ -10,11 +10,11 @@
 //! Run: `cargo run --release --example e2e_train [-- --epochs 300]`
 
 use capgnn::device::profile::GpuGroup;
-use capgnn::device::topology::Topology;
-use capgnn::graph::spec_by_name;
+use capgnn::dist::Cluster;
 use capgnn::runtime::{Backend, XlaBackend};
-use capgnn::train::{train, TrainConfig};
-use capgnn::util::{Args, Rng};
+use capgnn::graph::spec_by_name;
+use capgnn::train::{Session, TrainConfig};
+use capgnn::util::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -30,9 +30,7 @@ fn main() -> anyhow::Result<()> {
         epochs
     );
 
-    let mut rng = Rng::new(42);
-    let gpus = GpuGroup::by_name("x4").unwrap().instantiate(&mut rng);
-    let topology = Topology::pcie_pairs(gpus.len());
+    let cluster = Cluster::from_group(GpuGroup::by_name("x4").unwrap(), 42);
 
     // The full CaPGNN system on the XLA artifact backend.
     let mut backend = XlaBackend::from_default_dir()?;
@@ -44,13 +42,23 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = TrainConfig::capgnn(epochs);
     let t0 = std::time::Instant::now();
-    let report = train(&dataset, &gpus, &topology, &mut backend, &cfg)?;
 
+    // Staged session: the loss curve streams out as epochs complete
+    // instead of being reconstructed from the final report.
+    let mut session = Session::build(&dataset, &cluster, &mut backend, &cfg)?;
     println!("\nloss curve (every 10 epochs):");
-    for (e, chunk) in report.losses.chunks(10).enumerate() {
-        let acc = report.val_accs[(e * 10 + chunk.len() - 1).min(report.val_accs.len() - 1)];
-        println!("  epoch {:>4}: loss {:.4}  val acc {:.2}%", e * 10 + 1, chunk[0], acc * 100.0);
+    for _ in 0..epochs {
+        let st = session.run_epoch()?;
+        if st.epoch % 10 == 0 {
+            println!(
+                "  epoch {:>4}: loss {:.4}  val acc {:.2}%",
+                st.epoch + 1,
+                st.loss,
+                st.val_acc * 100.0
+            );
+        }
     }
+    let report = session.finish()?;
     println!(
         "\nfinal: loss {:.4} | best val acc {:.2}% | test acc {:.2}%",
         report.losses.last().unwrap(),

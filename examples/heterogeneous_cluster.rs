@@ -5,29 +5,21 @@
 //!
 //! Run: `cargo run --release --example heterogeneous_cluster`
 
-use capgnn::baselines::System;
-use capgnn::device::profile::{DeviceKind, Gpu};
-use capgnn::device::topology::Topology;
+use capgnn::baselines::{run_preset, System};
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
 use capgnn::graph::spec_by_name;
 use capgnn::model::ModelKind;
 use capgnn::runtime::NativeBackend;
-use capgnn::train::train;
-use capgnn::util::{stats, Rng, Table};
+use capgnn::util::{stats, Table};
 
 fn main() -> anyhow::Result<()> {
     let dataset = spec_by_name("Rt").unwrap().build_scaled(42, 0.5);
-    let mut rng = Rng::new(9);
     use DeviceKind::*;
-    let gpus = vec![
-        Gpu::new(0, Gtx1660Ti, &mut rng),
-        Gpu::new(1, Gtx1660Ti, &mut rng),
-        Gpu::new(2, Rtx3090, &mut rng),
-        Gpu::new(3, Rtx3090, &mut rng),
-    ];
-    let topology = Topology::pcie_pairs(gpus.len());
+    let cluster = Cluster::heterogeneous(&[Gtx1660Ti, Gtx1660Ti, Rtx3090, Rtx3090], 9);
     println!(
         "cluster: {} | dataset: Reddit twin ({} vertices)",
-        gpus.iter().map(|g| g.kind.label()).collect::<Vec<_>>().join("+"),
+        cluster.name,
         dataset.graph.n()
     );
 
@@ -36,10 +28,8 @@ fn main() -> anyhow::Result<()> {
         &["system", "total", "comm", "agg(mean)", "agg(std)", "val acc"],
     );
     for system in [System::Vanilla, System::DistGcn, System::CachedGcn, System::CaPGnn] {
-        let mut cfg = system.config(40, dataset.data.f_dim);
-        cfg.model = ModelKind::Gcn;
         let mut backend = NativeBackend::new();
-        let r = train(&dataset, &gpus, &topology, &mut backend, &cfg)?;
+        let r = run_preset(system, ModelKind::Gcn, 40, &dataset, &cluster, &mut backend)?;
         let aggs: Vec<f64> = r.worker_stages.iter().map(|s| s.aggregation).collect();
         table.row(vec![
             system.name().to_string(),

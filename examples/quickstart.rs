@@ -1,15 +1,19 @@
-//! Quickstart: train a 2-layer GCN on the tiny synthetic dataset across
-//! two simulated GPUs with the full CaPGNN stack (METIS + RAPA + JACA +
-//! pipeline) on the native backend.
+//! Quickstart: the staged `Cluster`/`Session` training API.
+//!
+//! CaPGNN training has three stages (paper Fig. 7): **Partition** the
+//! graph over the cluster's devices, build the two-level **Cache**, then
+//! iterate **Epochs**. `Session::build` materializes the first two once;
+//! `run_epoch()` streams per-epoch stats; `eval()`/`finish()` close the
+//! run. The legacy one-call path `capgnn::train::train(...)` is a thin
+//! shim over exactly this sequence.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use capgnn::device::profile::{DeviceKind, Gpu};
-use capgnn::device::topology::Topology;
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
 use capgnn::graph::datasets::tiny;
 use capgnn::runtime::NativeBackend;
-use capgnn::train::{train, TrainConfig};
-use capgnn::util::Rng;
+use capgnn::train::{Session, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
     // 1. A dataset: 256-vertex, 4-class homophilous SBM twin.
@@ -21,13 +25,8 @@ fn main() -> anyhow::Result<()> {
         dataset.data.num_classes
     );
 
-    // 2. Two simulated GPUs on a PCIe topology.
-    let mut rng = Rng::new(7);
-    let gpus = vec![
-        Gpu::new(0, DeviceKind::Rtx3090, &mut rng),
-        Gpu::new(1, DeviceKind::Rtx3090, &mut rng),
-    ];
-    let topology = Topology::pcie_pairs(2);
+    // 2. A cluster: two simulated RTX 3090s on a PCIe topology.
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
 
     // 3. CaPGNN configuration (JACA + RAPA + pipeline).
     let cfg = TrainConfig {
@@ -37,10 +36,29 @@ fn main() -> anyhow::Result<()> {
         ..TrainConfig::capgnn(60)
     };
 
-    // 4. Train.
+    // 4. Build the session once: partition plan, workers, caches, and the
+    //    exchange engine are all materialized here.
     let mut backend = NativeBackend::new();
-    let report = train(&dataset, &gpus, &topology, &mut backend, &cfg)?;
+    let mut session = Session::build(&dataset, &cluster, &mut backend, &cfg)?;
 
+    // 5. Iterate epochs, watching stats stream out.
+    for _ in 0..cfg.epochs {
+        let stats = session.run_epoch()?;
+        if (stats.epoch + 1) % 20 == 0 {
+            println!(
+                "epoch {:>3}: loss {:.3} | val acc {:.1}% | {:.3}s sim ({} bytes moved)",
+                stats.epoch + 1,
+                stats.loss,
+                stats.val_acc * 100.0,
+                stats.time,
+                stats.bytes_moved
+            );
+        }
+    }
+
+    // 6. Close the run.
+    let eval = session.eval()?;
+    let report = session.finish()?;
     println!(
         "trained {} epochs | loss {:.3} -> {:.3}",
         report.epoch_times.len(),
@@ -48,8 +66,9 @@ fn main() -> anyhow::Result<()> {
         report.losses.last().unwrap()
     );
     println!(
-        "best val acc {:.1}% | test acc {:.1}%",
+        "best val acc {:.1}% | final val acc {:.1}% | test acc {:.1}%",
         report.best_val_acc() * 100.0,
+        eval.val_acc * 100.0,
         report.test_acc * 100.0
     );
     println!(

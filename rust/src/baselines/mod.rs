@@ -8,10 +8,13 @@
 //! solver-time model (substitution S5).
 
 use crate::cache::PolicyKind;
-use crate::graph::DatasetSpec;
+use crate::dist::Cluster;
+use crate::graph::{Dataset, DatasetSpec};
 use crate::model::ModelKind;
 use crate::partition::Method;
-use crate::train::{CapacityMode, TrainConfig};
+use crate::runtime::Backend;
+use crate::train::{CapacityMode, Session, TrainConfig, TrainReport};
+use anyhow::Result;
 
 /// The five compared systems.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -155,6 +158,21 @@ fn model_supported(sys: System, model: ModelKind) -> bool {
     sys.supports_sage() || model == ModelKind::Gcn
 }
 
+/// Run one system preset end-to-end on a cluster via the staged
+/// [`Session`] — the shared path of the comparison drivers and examples.
+pub fn run_preset(
+    system: System,
+    model: ModelKind,
+    epochs: usize,
+    dataset: &Dataset,
+    cluster: &Cluster,
+    backend: &mut dyn Backend,
+) -> Result<TrainReport> {
+    let mut cfg = system.config(epochs, dataset.data.f_dim);
+    cfg.model = model;
+    Session::train(dataset, cluster, backend, &cfg)
+}
+
 /// The paper-reported feature dims of the original datasets (Table 5),
 /// used only by the failure model.
 pub fn original_f_dim(spec: &DatasetSpec) -> usize {
@@ -260,6 +278,18 @@ mod tests {
         for s in [2, 4, 8] {
             assert!(System::CaPGnn.failure(as_, s, ModelKind::Sage).is_none());
         }
+    }
+
+    #[test]
+    fn run_preset_trains_on_a_cluster() {
+        use crate::device::profile::DeviceKind;
+        let ds = crate::graph::datasets::tiny(11);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 3);
+        let mut backend = crate::runtime::NativeBackend::new();
+        let r = run_preset(System::CaPGnn, ModelKind::Gcn, 3, &ds, &cluster, &mut backend)
+            .unwrap();
+        assert_eq!(r.epoch_times.len(), 3);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
     }
 
     #[test]

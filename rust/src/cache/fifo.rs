@@ -1,6 +1,6 @@
 //! FIFO replacement — baseline of Figs. 15/16 (as in BGL's base strategy).
 
-use super::CachePolicy;
+use super::{CachePolicy, InsertOutcome};
 use std::collections::{HashSet, VecDeque};
 
 pub struct FifoCache {
@@ -32,12 +32,12 @@ impl CachePolicy for FifoCache {
         // FIFO ignores recency.
     }
 
-    fn insert(&mut self, key: u64) -> Option<u64> {
+    fn insert(&mut self, key: u64) -> InsertOutcome {
         if self.capacity == 0 {
-            return Some(key);
+            return InsertOutcome::Refused;
         }
         if self.set.contains(&key) {
-            return None;
+            return InsertOutcome::Inserted;
         }
         let evicted = if self.set.len() >= self.capacity {
             // Evict oldest still-resident entry.
@@ -53,7 +53,10 @@ impl CachePolicy for FifoCache {
         };
         self.set.insert(key);
         self.queue.push_back(key);
-        evicted
+        match evicted {
+            Some(v) => InsertOutcome::Evicted(v),
+            None => InsertOutcome::Inserted,
+        }
     }
 
     fn remove(&mut self, key: u64) {
@@ -79,7 +82,7 @@ mod tests {
         let mut c = FifoCache::new(2);
         c.insert(1);
         c.insert(2);
-        assert_eq!(c.insert(3), Some(1));
+        assert_eq!(c.insert(3), InsertOutcome::Evicted(1));
         assert!(!c.contains(1));
         assert!(c.contains(2) && c.contains(3));
     }
@@ -90,14 +93,14 @@ mod tests {
         c.insert(1);
         c.insert(2);
         c.touch(1); // irrelevant for FIFO
-        assert_eq!(c.insert(3), Some(1));
+        assert_eq!(c.insert(3), InsertOutcome::Evicted(1));
     }
 
     #[test]
     fn duplicate_insert_noop() {
         let mut c = FifoCache::new(2);
         c.insert(1);
-        assert_eq!(c.insert(1), None);
+        assert_eq!(c.insert(1), InsertOutcome::Inserted);
         assert_eq!(c.len(), 1);
     }
 
@@ -107,9 +110,9 @@ mod tests {
         c.insert(1);
         c.insert(2);
         c.remove(1);
-        assert_eq!(c.insert(3), None); // no eviction needed
+        assert_eq!(c.insert(3), InsertOutcome::Inserted); // no eviction
         assert_eq!(c.len(), 2);
         // Next eviction must skip stale entry for 1 and evict 2.
-        assert_eq!(c.insert(4), Some(2));
+        assert_eq!(c.insert(4), InsertOutcome::Evicted(2));
     }
 }

@@ -8,7 +8,7 @@
 //! keeps high-overlap halo vertices pinned, which drives JACA's hit-rate
 //! advantage in Fig. 15.
 
-use super::CachePolicy;
+use super::{CachePolicy, InsertOutcome};
 use std::collections::{BTreeSet, HashMap};
 
 pub struct JacaCache {
@@ -61,14 +61,14 @@ impl CachePolicy for JacaCache {
         }
     }
 
-    fn insert(&mut self, key: u64) -> Option<u64> {
+    fn insert(&mut self, key: u64) -> InsertOutcome {
         if self.capacity == 0 {
-            return Some(key);
+            return InsertOutcome::Refused;
         }
         let prio = self.priority_of(key);
         if self.meta.contains_key(&key) {
             self.bump(key, prio);
-            return None;
+            return InsertOutcome::Inserted;
         }
         if self.meta.len() >= self.capacity {
             // Lowest-priority, least-recent resident.
@@ -79,15 +79,15 @@ impl CachePolicy for JacaCache {
                 // patterns of equal-priority keys — the paper instead pins
                 // the high-overlap residents and only replaces when a
                 // strictly more-overlapping vertex arrives.)
-                return Some(key);
+                return InsertOutcome::Refused;
             }
             self.order.remove(&(vp, vt, victim));
             self.meta.remove(&victim);
             self.bump(key, prio);
-            return Some(victim);
+            return InsertOutcome::Evicted(victim);
         }
         self.bump(key, prio);
-        None
+        InsertOutcome::Inserted
     }
 
     fn remove(&mut self, key: u64) {
@@ -125,7 +125,7 @@ mod tests {
         c.set_priority(3, 3);
         c.insert(1);
         c.insert(2);
-        assert_eq!(c.insert(3), Some(2)); // key 2 has lowest overlap
+        assert_eq!(c.insert(3), InsertOutcome::Evicted(2)); // lowest overlap
         assert!(c.contains(1) && c.contains(3));
     }
 
@@ -137,7 +137,7 @@ mod tests {
         c.set_priority(9, 1);
         c.insert(1);
         c.insert(2);
-        assert_eq!(c.insert(9), Some(9)); // echoed back: refused
+        assert_eq!(c.insert(9), InsertOutcome::Refused);
         assert!(!c.contains(9));
         assert!(c.contains(1) && c.contains(2));
     }
@@ -154,7 +154,7 @@ mod tests {
         c.insert(1);
         c.insert(2);
         c.touch(1);
-        assert_eq!(c.insert(3), Some(3)); // refused
+        assert_eq!(c.insert(3), InsertOutcome::Refused);
         assert!(c.contains(1) && c.contains(2));
     }
 
@@ -168,7 +168,7 @@ mod tests {
         // Demote 1; a priority-3 key now displaces it.
         c.set_priority(1, 1);
         c.set_priority(3, 3);
-        assert_eq!(c.insert(3), Some(1));
+        assert_eq!(c.insert(3), InsertOutcome::Evicted(1));
     }
 
     #[test]
@@ -177,6 +177,6 @@ mod tests {
         c.insert(42);
         assert!(c.contains(42));
         c.set_priority(7, 2);
-        assert_eq!(c.insert(7), Some(42));
+        assert_eq!(c.insert(7), InsertOutcome::Evicted(42));
     }
 }

@@ -1,6 +1,6 @@
 //! LRU replacement — classic baseline of Figs. 15/16.
 
-use super::CachePolicy;
+use super::{CachePolicy, InsertOutcome};
 use std::collections::{BTreeSet, HashMap};
 
 pub struct LruCache {
@@ -46,13 +46,13 @@ impl CachePolicy for LruCache {
         }
     }
 
-    fn insert(&mut self, key: u64) -> Option<u64> {
+    fn insert(&mut self, key: u64) -> InsertOutcome {
         if self.capacity == 0 {
-            return Some(key);
+            return InsertOutcome::Refused;
         }
         if self.last_use.contains_key(&key) {
             self.bump(key);
-            return None;
+            return InsertOutcome::Inserted;
         }
         let evicted = if self.last_use.len() >= self.capacity {
             let &(tick, victim) = self.order.iter().next().unwrap();
@@ -63,7 +63,10 @@ impl CachePolicy for LruCache {
             None
         };
         self.bump(key);
-        evicted
+        match evicted {
+            Some(v) => InsertOutcome::Evicted(v),
+            None => InsertOutcome::Inserted,
+        }
     }
 
     fn remove(&mut self, key: u64) {
@@ -91,7 +94,7 @@ mod tests {
         c.insert(1);
         c.insert(2);
         c.touch(1); // 2 is now least recent
-        assert_eq!(c.insert(3), Some(2));
+        assert_eq!(c.insert(3), InsertOutcome::Evicted(2));
         assert!(c.contains(1) && c.contains(3));
     }
 
@@ -101,7 +104,7 @@ mod tests {
         c.insert(1);
         c.insert(2);
         c.insert(1); // refresh 1
-        assert_eq!(c.insert(3), Some(2));
+        assert_eq!(c.insert(3), InsertOutcome::Evicted(2));
     }
 
     #[test]
@@ -110,7 +113,7 @@ mod tests {
         c.insert(1);
         c.insert(2);
         c.remove(1);
-        assert_eq!(c.insert(3), None);
+        assert_eq!(c.insert(3), InsertOutcome::Inserted);
         assert_eq!(c.len(), 2);
     }
 

@@ -17,6 +17,33 @@ pub use capacity::{cal_capacity, CacheCapacity, CapacityInput};
 pub use store::FeatureStore;
 pub use twolevel::{TwoLevelCache, TwoLevelStats};
 
+/// What a [`CachePolicy::insert`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// Key stored (or already resident); nothing was displaced.
+    Inserted,
+    /// Key stored; the returned resident was evicted to make room.
+    Evicted(u64),
+    /// Key not stored: the policy refused it (zero capacity, or — for
+    /// JACA — lower priority than everything resident).
+    Refused,
+}
+
+impl InsertOutcome {
+    /// Did the key end up resident?
+    pub fn stored(self) -> bool {
+        !matches!(self, InsertOutcome::Refused)
+    }
+
+    /// The evicted victim, if one was displaced.
+    pub fn victim(self) -> Option<u64> {
+        match self {
+            InsertOutcome::Evicted(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
 /// Cache replacement policy over u64 keys.
 pub trait CachePolicy: Send {
     fn name(&self) -> &'static str;
@@ -24,10 +51,9 @@ pub trait CachePolicy: Send {
     fn contains(&self, key: u64) -> bool;
     /// Record an access to a resident key (recency/frequency update).
     fn touch(&mut self, key: u64);
-    /// Insert `key`; returns the evicted key if one was displaced, or
-    /// `None`. Policies may *refuse* (return `Some(key)` echoing the input)
-    /// when the key is lower priority than everything resident (JACA).
-    fn insert(&mut self, key: u64) -> Option<u64>;
+    /// Insert `key`. The [`InsertOutcome`] distinguishes a refusal from an
+    /// eviction without any key comparison by the caller.
+    fn insert(&mut self, key: u64) -> InsertOutcome;
     /// Remove a key if resident.
     fn remove(&mut self, key: u64);
     fn len(&self) -> usize;
@@ -113,12 +139,13 @@ mod tests {
     /// Shared behavioural checks across all policies.
     fn basic_contract(kind: PolicyKind) {
         let mut c = kind.build(2);
-        assert!(c.insert(1).is_none());
-        assert!(c.insert(2).is_none());
+        assert_eq!(c.insert(1), InsertOutcome::Inserted);
+        assert_eq!(c.insert(2), InsertOutcome::Inserted);
         assert!(c.contains(1) && c.contains(2));
         assert_eq!(c.len(), 2);
         // Inserting a third key evicts (or refuses) — len stays ≤ cap.
-        let _ = c.insert(3);
+        let out = c.insert(3);
+        assert!(matches!(out, InsertOutcome::Evicted(_) | InsertOutcome::Refused));
         assert!(c.len() <= 2);
         c.remove(2);
         assert!(!c.contains(2));
@@ -136,9 +163,35 @@ mod tests {
     fn zero_capacity_never_stores() {
         for kind in [PolicyKind::Jaca, PolicyKind::Fifo, PolicyKind::Lru] {
             let mut c = kind.build(0);
-            let _ = c.insert(9);
+            assert_eq!(c.insert(9), InsertOutcome::Refused);
             assert_eq!(c.len(), 0);
             assert!(!c.contains(9));
         }
+    }
+
+    #[test]
+    fn insert_outcome_distinguishes_refusal_from_eviction() {
+        // LRU at capacity always evicts…
+        let mut lru = PolicyKind::Lru.build(1);
+        assert_eq!(lru.insert(1), InsertOutcome::Inserted);
+        assert_eq!(lru.insert(2), InsertOutcome::Evicted(1));
+        // …JACA full of higher-priority keys refuses instead — callers no
+        // longer need to compare the victim against the input key.
+        let mut jaca = PolicyKind::Jaca.build(1);
+        jaca.set_priority(1, 5);
+        assert_eq!(jaca.insert(1), InsertOutcome::Inserted);
+        assert_eq!(jaca.insert(2), InsertOutcome::Refused);
+        // Re-inserting a resident key is a no-op "Inserted", even at cap.
+        assert_eq!(jaca.insert(1), InsertOutcome::Inserted);
+    }
+
+    #[test]
+    fn insert_outcome_helpers() {
+        assert!(InsertOutcome::Inserted.stored());
+        assert!(InsertOutcome::Evicted(7).stored());
+        assert!(!InsertOutcome::Refused.stored());
+        assert_eq!(InsertOutcome::Evicted(7).victim(), Some(7));
+        assert_eq!(InsertOutcome::Inserted.victim(), None);
+        assert_eq!(InsertOutcome::Refused.victim(), None);
     }
 }

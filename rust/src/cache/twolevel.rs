@@ -4,7 +4,7 @@
 //! re-sent by its owner.
 
 use super::store::FeatureStore;
-use super::{CachePolicy, PolicyKind};
+use super::{CachePolicy, InsertOutcome, PolicyKind};
 
 /// Where a lookup was satisfied.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +27,7 @@ pub struct TwoLevelStats {
     pub local_evictions: u64,
     pub global_evictions: u64,
     pub local_refusals: u64,
+    pub global_refusals: u64,
     pub fills: u64,
 }
 
@@ -138,15 +139,15 @@ impl TwoLevelCache {
 
     fn insert_local(&mut self, worker: usize, key: u64, row: Vec<f32>, epoch: u64) {
         match self.locals[worker].insert(key) {
-            Some(victim) if victim == key => {
+            InsertOutcome::Refused => {
                 self.stats.local_refusals += 1;
             }
-            Some(victim) => {
+            InsertOutcome::Evicted(victim) => {
                 self.stats.local_evictions += 1;
                 self.local_store[worker].remove(victim);
                 self.local_store[worker].put(key, row, epoch);
             }
-            None => {
+            InsertOutcome::Inserted => {
                 self.local_store[worker].put(key, row, epoch);
             }
         }
@@ -154,13 +155,15 @@ impl TwoLevelCache {
 
     fn insert_global(&mut self, key: u64, row: Vec<f32>, epoch: u64) {
         match self.global.insert(key) {
-            Some(victim) if victim == key => {}
-            Some(victim) => {
+            InsertOutcome::Refused => {
+                self.stats.global_refusals += 1;
+            }
+            InsertOutcome::Evicted(victim) => {
                 self.stats.global_evictions += 1;
                 self.global_store.remove(victim);
                 self.global_store.put(key, row, epoch);
             }
-            None => {
+            InsertOutcome::Inserted => {
                 self.global_store.put(key, row, epoch);
             }
         }

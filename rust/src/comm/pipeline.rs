@@ -86,6 +86,40 @@ mod tests {
     }
 
     #[test]
+    fn zero_workers_is_an_empty_epoch() {
+        assert_eq!(epoch_across_workers(&[], true), (0.0, 0.0));
+        assert_eq!(epoch_across_workers(&[], false), (0.0, 0.0));
+    }
+
+    #[test]
+    fn single_worker_matches_combine() {
+        let s = stages(1.0, 2.0);
+        for pipelined in [true, false] {
+            assert_eq!(
+                epoch_across_workers(&[s], pipelined),
+                combine_epoch(&s, pipelined)
+            );
+        }
+    }
+
+    #[test]
+    fn zero_comm_makes_pipeline_a_noop() {
+        // With nothing to hide, pipelining must not change the epoch time.
+        let s = stages(0.0, 2.0);
+        let (on, c_on) = combine_epoch(&s, true);
+        let (off, c_off) = combine_epoch(&s, false);
+        assert!((on - off).abs() < 1e-12, "on {on} off {off}");
+        assert_eq!(c_on, 0.0);
+        assert_eq!(c_off, 0.0);
+        // And across a barrier of workers.
+        let ws = [stages(0.0, 1.0), stages(0.0, 3.0)];
+        assert_eq!(
+            epoch_across_workers(&ws, true).0,
+            epoch_across_workers(&ws, false).0
+        );
+    }
+
+    #[test]
     fn barrier_takes_slowest() {
         let fast = stages(0.1, 0.2);
         let slow = stages(1.0, 3.0);

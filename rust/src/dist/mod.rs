@@ -1,0 +1,294 @@
+//! Cluster shapes and the multi-machine extension (paper §7 / Table 9).
+//!
+//! [`Cluster`] unifies the loose `(&[Gpu], &Topology)` pair the trainer
+//! used to take: which simulated devices exist, how they are wired (PCIe
+//! pairs, full NVLink-like P2P), and — for the distributed extension —
+//! which machine each worker lives on. Cross-machine links lose P2P and
+//! pay an Ethernet cost multiplier, exactly the [`Topology::cluster`]
+//! model the paper's Table 9 uses (PCIe ≈ 12 GB/s vs 10 GbE ≈ 1.2 GB/s).
+//!
+//! [`train_distributed`] runs the staged [`Session`] over a cluster and
+//! reports throughput as simulated epochs/second. This is a *simulation
+//! stub* of multi-machine training: the numerics are identical to the
+//! single-machine path (full-batch, exact all-reduce); only the
+//! communication cost model changes. Real multi-process transport can
+//! slot in behind the same `Cluster` surface later.
+
+use crate::device::profile::{DeviceKind, Gpu, GpuGroup};
+use crate::device::topology::Topology;
+use crate::graph::Dataset;
+use crate::runtime::Backend;
+use crate::train::{Session, TrainConfig, TrainReport};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// A set of simulated workers plus their interconnect, with an optional
+/// machine assignment for multi-machine shapes.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    /// Human-readable shape label ("x4", "2M-2D", "custom", …).
+    pub name: String,
+    gpus: Vec<Gpu>,
+    topology: Topology,
+    /// Machine index of each worker (all 0 on a single box).
+    machine_of: Vec<usize>,
+}
+
+/// Default Ethernet cost multiplier for cross-machine links.
+pub const ETHER_MULT: f64 = 10.0;
+
+impl Cluster {
+    /// Wrap an explicit device list and topology (single machine). This is
+    /// the bridge from the legacy `(&[Gpu], &Topology)` call shape.
+    pub fn from_parts(gpus: Vec<Gpu>, topology: Topology) -> Cluster {
+        assert_eq!(gpus.len(), topology.n(), "topology size must match GPU count");
+        let n = gpus.len();
+        Cluster { name: "custom".into(), gpus, topology, machine_of: vec![0; n] }
+    }
+
+    /// `n` identical GPUs on a PCIe-pairs board.
+    pub fn homogeneous(kind: DeviceKind, n: usize, seed: u64) -> Cluster {
+        let mut rng = Rng::new(seed);
+        let gpus: Vec<Gpu> = (0..n).map(|i| Gpu::new(i, kind, &mut rng)).collect();
+        Cluster {
+            name: format!("{}x{n}", kind.label()),
+            gpus,
+            topology: Topology::pcie_pairs(n),
+            machine_of: vec![0; n],
+        }
+    }
+
+    /// A mixed-device box on a PCIe-pairs board (the paper's Table 4 /
+    /// Fig. 21 setting).
+    pub fn heterogeneous(kinds: &[DeviceKind], seed: u64) -> Cluster {
+        let mut rng = Rng::new(seed);
+        let gpus: Vec<Gpu> = kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| Gpu::new(i, k, &mut rng))
+            .collect();
+        let n = gpus.len();
+        Cluster {
+            name: kinds.iter().map(|k| k.label()).collect::<Vec<_>>().join("+"),
+            gpus,
+            topology: Topology::pcie_pairs(n),
+            machine_of: vec![0; n],
+        }
+    }
+
+    /// Instantiate one of the paper's named GPU groups (x2 … x8).
+    pub fn from_group(group: &GpuGroup, seed: u64) -> Cluster {
+        let mut rng = Rng::new(seed);
+        let gpus = group.instantiate(&mut rng);
+        let n = gpus.len();
+        Cluster {
+            name: group.name.to_string(),
+            gpus,
+            topology: Topology::pcie_pairs(n),
+            machine_of: vec![0; n],
+        }
+    }
+
+    /// Fully P2P-connected devices (NVLink-like fabric).
+    pub fn nvlink(kinds: &[DeviceKind], seed: u64) -> Cluster {
+        let mut c = Cluster::heterogeneous(kinds, seed);
+        c.topology = Topology::full_p2p(c.gpus.len());
+        c.name = format!("{}-nvlink", c.name);
+        c
+    }
+
+    /// Multi-machine cluster: one device list per machine. Intra-machine
+    /// pairs follow the PCIe-pairs layout; cross-machine pairs have no P2P
+    /// and pay `ether_mult`× the transfer cost.
+    pub fn multi_machine(machines: &[&[DeviceKind]], ether_mult: f64, seed: u64) -> Cluster {
+        let mut rng = Rng::new(seed);
+        let mut gpus = Vec::new();
+        let mut machine_of = Vec::new();
+        for (m, kinds) in machines.iter().enumerate() {
+            for &k in kinds.iter() {
+                gpus.push(Gpu::new(gpus.len(), k, &mut rng));
+                machine_of.push(m);
+            }
+        }
+        let topology = Topology::cluster(&machine_of, ether_mult);
+        let counts: Vec<usize> = machines.iter().map(|m| m.len()).collect();
+        let name = if counts.windows(2).all(|w| w[0] == w[1]) {
+            format!("{}M-{}D", machines.len(), counts.first().copied().unwrap_or(0))
+        } else {
+            // Asymmetric shape: spell out per-machine device counts.
+            let per: Vec<String> = counts.iter().map(|c| c.to_string()).collect();
+            format!("{}M-[{}]D", machines.len(), per.join("+"))
+        };
+        Cluster { name, gpus, topology, machine_of }
+    }
+
+    /// The Table-9 cluster shapes: "1M-4D", "2M-2D", "2M-4D" (RTX 3090s,
+    /// default Ethernet multiplier, fixed seed).
+    pub fn preset(name: &str) -> Option<Cluster> {
+        const R9: DeviceKind = DeviceKind::Rtx3090;
+        let c = match name {
+            "1M-4D" => {
+                let mut c = Cluster::homogeneous(R9, 4, 42);
+                c.name = "1M-4D".into();
+                c
+            }
+            "2M-2D" => Cluster::multi_machine(&[&[R9, R9], &[R9, R9]], ETHER_MULT, 42),
+            "2M-4D" => Cluster::multi_machine(&[&[R9; 4], &[R9; 4]], ETHER_MULT, 42),
+            _ => return None,
+        };
+        Some(c)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn gpus(&self) -> &[Gpu] {
+        &self.gpus
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    pub fn machine_of(&self) -> &[usize] {
+        &self.machine_of
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.machine_of.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    pub fn is_multi_machine(&self) -> bool {
+        self.num_machines() > 1
+    }
+}
+
+/// Outcome of a distributed run (Table 9's columns).
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub workers: usize,
+    pub machines: usize,
+    /// Simulated training throughput: epochs per simulated second.
+    pub epochs_per_sec: f64,
+    pub report: TrainReport,
+}
+
+/// Train over a (possibly multi-machine) cluster with the staged session
+/// and report simulated throughput.
+pub fn train_distributed(
+    dataset: &Dataset,
+    cluster: &Cluster,
+    backend: &mut dyn Backend,
+    cfg: &TrainConfig,
+) -> Result<DistReport> {
+    let report = Session::train(dataset, cluster, backend, cfg)?;
+    let epochs = report.epoch_times.len() as f64;
+    let total = report.total_time();
+    Ok(DistReport {
+        workers: cluster.n_workers(),
+        machines: cluster.num_machines(),
+        epochs_per_sec: if total > 0.0 { epochs / total } else { 0.0 },
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn presets_have_expected_shape() {
+        let a = Cluster::preset("1M-4D").unwrap();
+        assert_eq!(a.n_workers(), 4);
+        assert_eq!(a.num_machines(), 1);
+        assert!(!a.is_multi_machine());
+
+        let b = Cluster::preset("2M-2D").unwrap();
+        assert_eq!(b.n_workers(), 4);
+        assert_eq!(b.num_machines(), 2);
+        assert!(b.is_multi_machine());
+        // Intra-machine pair keeps P2P; cross-machine loses it and pays
+        // the Ethernet multiplier.
+        assert!(b.topology().p2p[0][1]);
+        assert!(!b.topology().p2p[0][2]);
+        assert!(b.topology().link_mult[0][2] > 1.0);
+
+        let c = Cluster::preset("2M-4D").unwrap();
+        assert_eq!(c.n_workers(), 8);
+        assert!(Cluster::preset("3M-1D").is_none());
+    }
+
+    #[test]
+    fn constructors_are_deterministic() {
+        let a = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let b = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        assert_eq!(a.gpus()[0].expected().mm, b.gpus()[0].expected().mm);
+        let h = Cluster::heterogeneous(&[DeviceKind::Gtx1650, DeviceKind::Rtx3090], 1);
+        assert_eq!(h.gpus()[0].kind, DeviceKind::Gtx1650);
+        assert_eq!(h.machine_of(), &[0, 0]);
+        let g = Cluster::from_group(GpuGroup::by_name("x3").unwrap(), 5);
+        assert_eq!(g.n_workers(), 3);
+        assert_eq!(g.name, "x3");
+        // Asymmetric multi-machine shapes spell out per-machine counts.
+        let m = Cluster::multi_machine(
+            &[&[DeviceKind::Rtx3090; 2], &[DeviceKind::Rtx3090; 4]],
+            10.0,
+            1,
+        );
+        assert_eq!(m.name, "2M-[2+4]D");
+        assert_eq!(m.n_workers(), 6);
+        assert_eq!(m.num_machines(), 2);
+    }
+
+    #[test]
+    fn nvlink_is_fully_connected() {
+        let c = Cluster::nvlink(&[DeviceKind::Rtx3090; 4], 3);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(c.topology().p2p[i][j], i != j);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_machine_transfer_costs_more() {
+        let one = Cluster::preset("1M-4D").unwrap();
+        let two = Cluster::preset("2M-2D").unwrap();
+        let bytes = 1u64 << 20;
+        // Worker 0 → worker 2 is routed on both shapes, but pays the
+        // Ethernet multiplier on the 2-machine cluster.
+        let t1 = one.topology().transfer_time(one.gpus(), 0, 2, bytes, 1);
+        let t2 = two.topology().transfer_time(two.gpus(), 0, 2, bytes, 1);
+        assert!(t2 > t1 * 5.0, "intra {t1} cross {t2}");
+    }
+
+    #[test]
+    fn distributed_training_pays_for_ethernet() {
+        let ds = tiny(3);
+        let mut cfg = TrainConfig::vanilla(3);
+        cfg.hidden = 16;
+        cfg.layers = 2;
+        let mut backend = NativeBackend::new();
+        let one =
+            train_distributed(&ds, &Cluster::preset("1M-4D").unwrap(), &mut backend, &cfg)
+                .unwrap();
+        let two =
+            train_distributed(&ds, &Cluster::preset("2M-2D").unwrap(), &mut backend, &cfg)
+                .unwrap();
+        assert_eq!(one.workers, 4);
+        assert_eq!(two.machines, 2);
+        assert!(one.epochs_per_sec > 0.0 && two.epochs_per_sec > 0.0);
+        // Same devices, same partition ⇒ same bytes; Ethernet only slows
+        // the simulated clock.
+        assert_eq!(one.report.bytes_moved, two.report.bytes_moved);
+        assert!(
+            two.report.total_comm() > one.report.total_comm(),
+            "2M comm {} must exceed 1M comm {}",
+            two.report.total_comm(),
+            one.report.total_comm()
+        );
+    }
+}

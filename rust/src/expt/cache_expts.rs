@@ -2,22 +2,17 @@
 
 use super::Ctx;
 use crate::cache::PolicyKind;
-use crate::device::profile::{DeviceKind, Gpu};
-use crate::device::topology::Topology;
+use crate::device::profile::DeviceKind;
+use crate::dist::Cluster;
 use crate::graph::{spec_by_name, Dataset};
 use crate::model::ModelKind;
 use crate::runtime::NativeBackend;
-use crate::train::{train, CapacityMode, TrainConfig, TrainReport};
+use crate::train::{CapacityMode, Session, TrainConfig, TrainReport};
 use crate::util::json::{num, obj, s};
 use crate::util::{bench, table::fmt_secs, Rng, Table};
 
 fn reddit(ctx: Ctx) -> Dataset {
     spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale)
-}
-
-fn r9_gpus(n: usize, seed: u64) -> Vec<Gpu> {
-    let mut rng = Rng::new(seed);
-    (0..n).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng)).collect()
 }
 
 fn base_cfg(ctx: Ctx, model: ModelKind) -> TrainConfig {
@@ -31,10 +26,9 @@ fn base_cfg(ctx: Ctx, model: ModelKind) -> TrainConfig {
 }
 
 fn run_one(ctx: Ctx, ds: &Dataset, parts: usize, cfg: &TrainConfig) -> TrainReport {
-    let gpus = r9_gpus(parts, ctx.seed);
-    let topo = Topology::pcie_pairs(parts);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, parts, ctx.seed);
     let mut backend = NativeBackend::new();
-    train(ds, &gpus, &topo, &mut backend, cfg).expect("train")
+    Session::train(ds, &cluster, &mut backend, cfg).expect("train")
 }
 
 /// Fig. 14: hit rate when prioritizing high- vs low-overlap vertices.

@@ -2,34 +2,30 @@
 //! overall performance, Table 8 ablation, Table 9 distributed extension.
 
 use super::Ctx;
-use crate::baselines::{Failure, System, ABLATIONS};
+use crate::baselines::{run_preset, Failure, System, ABLATIONS};
 use crate::device::profile::GpuGroup;
-use crate::device::topology::Topology;
 use crate::dist::{train_distributed, Cluster};
 use crate::graph::{spec_by_name, Dataset, DatasetSpec};
 use crate::model::ModelKind;
 use crate::runtime::NativeBackend;
-use crate::train::{train, TrainReport};
+use crate::train::{ConvergenceLog, Session, TrainReport};
 use crate::util::json::{arr, num, obj, s};
-use crate::util::{bench, table::fmt_secs, Rng, Table};
+use crate::util::{bench, table::fmt_secs, Table};
 
 fn run_system(
     ctx: Ctx,
     ds: &Dataset,
-    group: &GpuGroup,
+    cluster: &Cluster,
     system: System,
     model: ModelKind,
 ) -> TrainReport {
-    let mut rng = Rng::new(ctx.seed);
-    let gpus = group.instantiate(&mut rng);
-    let topo = Topology::pcie_pairs(gpus.len());
-    let mut cfg = system.config(ctx.epochs, ds.data.f_dim);
-    cfg.model = model;
     let mut backend = NativeBackend::new();
-    train(ds, &gpus, &topo, &mut backend, &cfg).expect("train")
+    run_preset(system, model, ctx.epochs, ds, cluster, &mut backend).expect("train")
 }
 
-/// Fig. 22: epoch-to-accuracy convergence curves.
+/// Fig. 22: epoch-to-accuracy convergence curves, streamed per epoch from
+/// a [`Session`] through a [`ConvergenceLog`] observer (one training run
+/// per curve — no re-training per checkpoint).
 pub fn fig22(ctx: Ctx) {
     let mut table = Table::new(
         "Fig. 22 — convergence (validation accuracy at epoch checkpoints)",
@@ -40,14 +36,23 @@ pub fn fig22(ctx: Ctx) {
         for model in [ModelKind::Gcn, ModelKind::Sage] {
             for group in ["x2", "x4"] {
                 let g = GpuGroup::by_name(group).unwrap();
+                let cluster = Cluster::from_group(g, ctx.seed);
                 for system in [System::DistGcn, System::CachedGcn, System::Vanilla, System::CaPGnn] {
                     if !system.supports_sage() && model == ModelKind::Sage {
                         continue;
                     }
-                    let r = run_system(ctx, &ds, g, system, model);
-                    let pts: Vec<String> = checkpoints(r.val_accs.len())
+                    let mut cfg = system.config(ctx.epochs, ds.data.f_dim);
+                    cfg.model = model;
+                    let mut backend = NativeBackend::new();
+                    let mut session =
+                        Session::build(&ds, &cluster, &mut backend, &cfg).expect("session");
+                    let mut log = ConvergenceLog::default();
+                    session.run(ctx.epochs, &mut log).expect("train");
+                    let val_accs: Vec<f32> =
+                        log.history.iter().map(|e| e.val_acc).collect();
+                    let pts: Vec<String> = checkpoints(val_accs.len())
                         .into_iter()
-                        .map(|e| format!("{}:{:.2}", e + 1, r.val_accs[e]))
+                        .map(|e| format!("{}:{:.2}", e + 1, val_accs[e]))
                         .collect();
                     table.row(vec![
                         ds_label.to_string(),
@@ -64,7 +69,7 @@ pub fn fig22(ctx: Ctx) {
                         ("system", s(system.name())),
                         (
                             "val_accs",
-                            arr(r.val_accs.iter().map(|&a| num(a as f64)).collect()),
+                            arr(val_accs.iter().map(|&a| num(a as f64)).collect()),
                         ),
                     ]));
                 }
@@ -112,6 +117,7 @@ pub fn tab7(ctx: Ctx, full: bool) {
         for model in [ModelKind::Gcn, ModelKind::Sage] {
             for group in &groups {
                 let g = GpuGroup::by_name(group).unwrap();
+                let cluster = Cluster::from_group(g, ctx.seed);
                 for system in crate::baselines::ALL_SYSTEMS {
                     if !system.supports_sage() && model == ModelKind::Sage {
                         continue;
@@ -120,7 +126,7 @@ pub fn tab7(ctx: Ctx, full: bool) {
                         Some(Failure::Timeout) => ("Timeout".into(), "-".into(), "-".into()),
                         Some(Failure::Oom) => ("OOM".into(), "-".into(), "-".into()),
                         None => {
-                            let r = run_system(ctx, &ds, g, system, model);
+                            let r = run_system(ctx, &ds, &cluster, system, model);
                             let scale200 = 200.0 / ctx.epochs as f64;
                             bench::record_json(obj(vec![
                                 ("expt", s("tab7")),
@@ -159,7 +165,7 @@ pub fn tab7(ctx: Ctx, full: bool) {
 /// Table 8: ablation at 4 partitions (2×R9 + 2×T4).
 pub fn tab8(ctx: Ctx) {
     let datasets = ["Cl", "Fr", "Cs", "Rt", "Yp", "As", "Os"];
-    let group = GpuGroup::by_name("x4").unwrap();
+    let cluster = Cluster::from_group(GpuGroup::by_name("x4").unwrap(), ctx.seed);
     let mut table = Table::new(
         "Table 8 — ablation (x4 = 2×RTX3090 + 2×A40, simulated seconds scaled to 200 epochs)",
         &["model", "arm", "dataset", "Epoch", "Comm", "Acc"],
@@ -170,11 +176,8 @@ pub fn tab8(ctx: Ctx) {
                 let ds = spec_by_name(ds_label).unwrap().build_scaled(ctx.seed, ctx.scale * 0.5);
                 let mut cfg = arm.config(ctx.epochs);
                 cfg.model = model;
-                let mut rng = Rng::new(ctx.seed);
-                let gpus = group.instantiate(&mut rng);
-                let topo = Topology::pcie_pairs(gpus.len());
                 let mut backend = NativeBackend::new();
-                let r = train(&ds, &gpus, &topo, &mut backend, &cfg).expect("train");
+                let r = Session::train(&ds, &cluster, &mut backend, &cfg).expect("train");
                 let scale200 = 200.0 / ctx.epochs as f64;
                 table.row(vec![
                     model.name().to_string(),
@@ -254,9 +257,9 @@ mod tests {
     fn capgnn_beats_vanilla_on_twin() {
         let ctx = Ctx { scale: 0.12, epochs: 6, seed: 3 };
         let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
-        let g = GpuGroup::by_name("x4").unwrap();
-        let cap = run_system(ctx, &ds, g, System::CaPGnn, ModelKind::Gcn);
-        let van = run_system(ctx, &ds, g, System::Vanilla, ModelKind::Gcn);
+        let cluster = Cluster::from_group(GpuGroup::by_name("x4").unwrap(), ctx.seed);
+        let cap = run_system(ctx, &ds, &cluster, System::CaPGnn, ModelKind::Gcn);
+        let van = run_system(ctx, &ds, &cluster, System::Vanilla, ModelKind::Gcn);
         assert!(cap.total_time() < van.total_time(),
             "capgnn {} vanilla {}", cap.total_time(), van.total_time());
         assert!(cap.total_comm() < van.total_comm() * 0.7);

@@ -2,15 +2,14 @@
 //! Fig. 21 heterogeneous-GPU robustness.
 
 use super::Ctx;
-use crate::baselines::System;
-use crate::device::profile::{DeviceKind, Gpu, GpuGroup};
-use crate::device::topology::Topology;
+use crate::baselines::{run_preset, System};
+use crate::device::profile::{DeviceKind, GpuGroup};
+use crate::dist::Cluster;
 use crate::graph::spec_by_name;
 use crate::model::ModelKind;
 use crate::partition::rapa::{self, RapaConfig};
 use crate::partition::Method;
 use crate::runtime::NativeBackend;
-use crate::train::train;
 use crate::util::json::{num, obj, s};
 use crate::util::{bench, stats, table::fmt_secs, Rng, Table};
 
@@ -82,21 +81,11 @@ pub fn fig21(ctx: Ctx) {
         &["gpus", "system", "total", "comm", "agg", "agg_std_across_workers"],
     );
     for (gname, kinds) in hetero_groups() {
-        let mut rng = Rng::new(ctx.seed);
-        let gpus: Vec<Gpu> = kinds
-            .iter()
-            .enumerate()
-            .map(|(i, &k)| Gpu::new(i, k, &mut rng))
-            .collect();
-        let topo = Topology::pcie_pairs(gpus.len());
+        let cluster = Cluster::heterogeneous(&kinds, ctx.seed);
         for system in [System::DistGcn, System::CachedGcn, System::Vanilla, System::CaPGnn] {
-            let cfg = {
-                let mut c = system.config(ctx.epochs, ds.data.f_dim);
-                c.model = ModelKind::Gcn;
-                c
-            };
             let mut backend = NativeBackend::new();
-            let r = train(&ds, &gpus, &topo, &mut backend, &cfg).expect("train");
+            let r = run_preset(system, ModelKind::Gcn, ctx.epochs, &ds, &cluster, &mut backend)
+                .expect("train");
             let aggs: Vec<f64> = r.worker_stages.iter().map(|st| st.aggregation).collect();
             table.row(vec![
                 gname.to_string(),
@@ -123,7 +112,9 @@ pub fn fig21(ctx: Ctx) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::train::TrainConfig;
+    use crate::device::profile::Gpu;
+    use crate::device::topology::Topology;
+    use crate::train::{train, TrainConfig};
 
     #[test]
     fn rapa_balances_hetero_pair_better_than_vanilla() {

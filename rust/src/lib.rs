@@ -12,6 +12,26 @@
 //! (layer 2) with a Pallas aggregation kernel (layer 1) into HLO text that
 //! [`runtime`] loads through the PJRT CPU client.
 //!
+//! ## Staged training API
+//!
+//! Training is a staged session over a cluster:
+//!
+//! - [`dist::Cluster`] describes the hardware: device list + interconnect,
+//!   with constructors for homogeneous/heterogeneous PCIe boxes, NVLink
+//!   fabrics, the paper's Table-4 groups, and multi-machine shapes
+//!   (`Cluster::preset("2M-4D")`, paper §7 / Table 9).
+//! - [`train::Session::build`] materializes the run once — partition plan
+//!   (RAPA), per-worker state, the two-level JACA cache, the exchange
+//!   engine — then [`train::Session::run_epoch`] executes one epoch and
+//!   returns its [`train::EpochStats`]; [`train::Session::eval`] scores
+//!   the current logits and [`train::Session::finish`] closes the run
+//!   into a [`train::TrainReport`].
+//! - [`train::EpochObserver`] hooks between epochs: early stopping
+//!   ([`train::EarlyStopping`]), streaming convergence curves
+//!   ([`train::ConvergenceLog`]), on-demand cache refresh
+//!   ([`train::PeriodicRefresh`]).
+//! - [`train::train`] is the legacy one-call shim over the same session.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod baselines;

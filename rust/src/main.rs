@@ -9,12 +9,13 @@
 
 use capgnn::baselines::System;
 use capgnn::device::profile::GpuGroup;
+use capgnn::dist::Cluster;
 use capgnn::expt;
 use capgnn::graph::SPECS;
 use capgnn::partition::halo::halo_stats;
 use capgnn::partition::rapa::{self, RapaConfig};
 use capgnn::runtime::Manifest;
-use capgnn::train::train;
+use capgnn::train::{EarlyStopping, Session};
 use capgnn::util::table::fmt_secs;
 use capgnn::util::{Args, Rng, Table};
 
@@ -54,7 +55,8 @@ COMMANDS:
              --epochs 200 --backend native|xla --scale 1.0
              [--policy jaca|fifo|lru --method metis|random|fennel
               --no-pipe --no-cache --no-rapa --refresh 8
-              --local-cap N --global-cap N --seed 42]
+              --local-cap N --global-cap N --seed 42
+              --early-stop PATIENCE]
   partition  --dataset rt --group x4 --method metis [--rapa] [--hops 1]
   device     print the simulated GPU testbed (paper Table 1)
   expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
@@ -88,7 +90,34 @@ fn cmd_train(args: &Args) -> i32 {
         spec.system.name(),
         backend.name(),
     );
-    match train(&spec.dataset, &spec.gpus, &spec.topology, backend.as_mut(), &spec.train) {
+    // Staged session: build once, then run epoch-by-epoch (with optional
+    // early stopping on the validation curve).
+    let cluster = Cluster::from_parts(spec.gpus.clone(), spec.topology.clone());
+    let run = (|| -> anyhow::Result<capgnn::train::TrainReport> {
+        let mut session =
+            Session::build(&spec.dataset, &cluster, backend.as_mut(), &spec.train)?;
+        match args.get("early-stop") {
+            Some(v) => {
+                let patience: usize = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --early-stop value: {v}"))?;
+                let mut stop = EarlyStopping::new(patience, 1e-4);
+                session.run(spec.train.epochs, &mut stop)?;
+                if let Some(e) = stop.stopped_at {
+                    println!(
+                        "early stop: no val-acc improvement in the last {} epochs (stopped after epoch {})",
+                        patience + 1,
+                        e + 1
+                    );
+                }
+            }
+            None => {
+                session.run_epochs(spec.train.epochs)?;
+            }
+        }
+        session.finish()
+    })();
+    match run {
         Ok(r) => {
             println!(
                 "epochs={} total={}s comm={}s (sim) | loss {:.4} -> {:.4} | best val acc {:.2}% | test acc {:.2}%",

@@ -1,10 +1,19 @@
-//! The full-batch multi-worker trainer: composes partitioning (RAPA or a
-//! baseline partitioner), the two-level JACA cache, the exchange engine,
-//! the pipeline model, and a compute backend into the paper's training
-//! loop.
+//! The full-batch multi-worker trainer, staged as a session: composes
+//! partitioning (RAPA or a baseline partitioner), the two-level JACA
+//! cache, the exchange engine, the pipeline model, and a compute backend
+//! into the paper's training loop.
+//!
+//! - [`Session`] — the staged API: build once (Partition → Cache), then
+//!   `run_epoch()` / `eval()` / observers.
+//! - [`train`] — the legacy one-call shim over a `Session`.
 
 pub mod report;
+pub mod session;
 pub mod trainer;
 
 pub use report::TrainReport;
+pub use session::{
+    ConvergenceLog, EarlyStopping, EpochObserver, EpochStats, EvalStats, PeriodicRefresh,
+    Session, Signal,
+};
 pub use trainer::{train, CapacityMode, TrainConfig};

@@ -1,0 +1,1077 @@
+//! The staged training session (paper Fig. 7 as an explicit lifecycle).
+//!
+//! [`Session::build`] materializes everything that is fixed for a run —
+//! partition plan (RAPA or a baseline partitioner), per-worker state, the
+//! two-level JACA cache with its priorities, and the exchange engine —
+//! then [`Session::run_epoch`] executes one full-batch epoch (per-layer
+//! halo exchange → compute → loss/backward → gradient all-reduce → SGD)
+//! and returns that epoch's [`EpochStats`]. Between epochs the caller can
+//! [`Session::eval`], force a cache refresh, or stop early through an
+//! [`EpochObserver`]; [`Session::finish`] closes the run into the same
+//! [`TrainReport`] the monolithic `train()` used to return.
+//!
+//! Epoch/communication times are *simulated* from the Table-1 device
+//! capabilities (substitution S1); numerics are real (PJRT or native).
+
+use crate::cache::{cal_capacity, key_of, CapacityInput, TwoLevelCache, TwoLevelStats};
+use crate::comm::exchange::{ExchangeEngine, ExchangeParams};
+use crate::comm::pipeline;
+use crate::device::profile::Gpu;
+use crate::device::simclock::StageTimes;
+use crate::dist::Cluster;
+use crate::graph::Dataset;
+use crate::model::{layer_stack, GnnModel, LayerDims, ModelKind};
+use crate::partition::halo::{build_plan, SubgraphPlan};
+use crate::partition::rapa;
+use crate::runtime::Backend;
+use crate::train::report::TrainReport;
+use crate::train::trainer::{CapacityMode, TrainConfig};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Per-worker training state (one simulated GPU).
+struct Worker {
+    n_pad: usize,
+    c_pad: usize,
+    a_hat: Vec<f32>,
+    y: Vec<f32>,
+    train_mask: Vec<f32>,
+    val_mask: Vec<f32>,
+    test_mask: Vec<f32>,
+    /// Activations h[0]=X … h[L]=logits, each n_pad × dims.
+    h: Vec<Vec<f32>>,
+    /// Historical halo rows per layer (skip_exchange mode).
+    halo_hist: Vec<Vec<f32>>,
+    /// Edge arcs in the local graph (for the compute-time model).
+    e_local: usize,
+    stages: StageTimes,
+    train_count: f32,
+}
+
+// Reference workloads of the Table-1 capability measurements.
+const REF_MM_WORK: f64 = 16384.0 * 16384.0 * 16384.0;
+const REF_SPMM_WORK: f64 = 0.004 * 16384.0 * 16384.0 * 16384.0;
+
+/// What one [`Session::run_epoch`] call produced.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    /// 0-based epoch index this call executed.
+    pub epoch: u64,
+    /// Simulated epoch wall time (barrier over workers).
+    pub time: f64,
+    /// Simulated visible communication time.
+    pub comm_time: f64,
+    /// Global training loss.
+    pub loss: f32,
+    /// Validation accuracy from this epoch's logits.
+    pub val_acc: f32,
+    /// Device bytes moved / saved by caching during this epoch.
+    pub bytes_moved: u64,
+    pub bytes_saved: u64,
+    /// Mean per-worker stage breakdown for this epoch.
+    pub stages: StageTimes,
+    /// Cumulative cache counters after this epoch.
+    pub cache: TwoLevelStats,
+}
+
+/// Accuracy snapshot from the current logits (no weight update).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalStats {
+    pub val_acc: f32,
+    pub test_acc: f32,
+}
+
+/// Verdict an observer returns after each epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    Continue,
+    Stop,
+}
+
+/// Between-epoch hook: convergence logging, early stopping, cache
+/// refreshes — anything that watches or steers a running session.
+pub trait EpochObserver {
+    fn on_epoch(&mut self, session: &mut Session<'_>, stats: &EpochStats) -> Signal;
+}
+
+/// The no-op observer: run every epoch to completion.
+impl EpochObserver for () {
+    fn on_epoch(&mut self, _session: &mut Session<'_>, _stats: &EpochStats) -> Signal {
+        Signal::Continue
+    }
+}
+
+/// Stop when validation accuracy has not improved by `min_delta` for more
+/// than `patience` consecutive epochs.
+#[derive(Clone, Debug)]
+pub struct EarlyStopping {
+    pub patience: usize,
+    pub min_delta: f32,
+    best: f32,
+    since_best: usize,
+    /// Epoch index at which training stopped (if it did).
+    pub stopped_at: Option<usize>,
+}
+
+impl EarlyStopping {
+    pub fn new(patience: usize, min_delta: f32) -> EarlyStopping {
+        EarlyStopping {
+            patience,
+            min_delta,
+            best: f32::NEG_INFINITY,
+            since_best: 0,
+            stopped_at: None,
+        }
+    }
+
+    pub fn best_val_acc(&self) -> f32 {
+        self.best
+    }
+}
+
+impl EpochObserver for EarlyStopping {
+    fn on_epoch(&mut self, _session: &mut Session<'_>, stats: &EpochStats) -> Signal {
+        if stats.val_acc > self.best + self.min_delta {
+            self.best = stats.val_acc;
+            self.since_best = 0;
+            return Signal::Continue;
+        }
+        self.since_best += 1;
+        if self.since_best > self.patience {
+            self.stopped_at = Some(stats.epoch as usize);
+            return Signal::Stop;
+        }
+        Signal::Continue
+    }
+}
+
+/// Record every epoch's stats (streaming convergence curves — Fig. 22).
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceLog {
+    pub history: Vec<EpochStats>,
+}
+
+impl EpochObserver for ConvergenceLog {
+    fn on_epoch(&mut self, _session: &mut Session<'_>, stats: &EpochStats) -> Signal {
+        self.history.push(stats.clone());
+        Signal::Continue
+    }
+}
+
+/// Force a halo-cache refresh every `every` epochs — the observer-driven
+/// variant of `TrainConfig::refresh_interval`.
+#[derive(Clone, Copy, Debug)]
+pub struct PeriodicRefresh {
+    pub every: u64,
+}
+
+impl EpochObserver for PeriodicRefresh {
+    fn on_epoch(&mut self, session: &mut Session<'_>, stats: &EpochStats) -> Signal {
+        if self.every > 0 && (stats.epoch + 1) % self.every == 0 {
+            session.request_refresh();
+        }
+        Signal::Continue
+    }
+}
+
+/// A fully materialized training run: Partition → Cache → Epoch… → finish.
+pub struct Session<'a> {
+    cfg: TrainConfig,
+    backend: &'a mut dyn Backend,
+    plan: SubgraphPlan,
+    model: GnnModel,
+    dims: Vec<LayerDims>,
+    workers: Vec<Worker>,
+    cache: TwoLevelCache,
+    engine: ExchangeEngine<'a>,
+    /// Global vertices anyone needs at exchange time.
+    halo_union: Vec<u32>,
+    /// Global vertex -> (worker, local row) of its owner.
+    owner_of: HashMap<u32, (usize, usize)>,
+    /// Scratch: published halo rows for the current layer.
+    published: HashMap<u32, Vec<f32>>,
+    qrng: Rng,
+    report: TrainReport,
+    epoch: u64,
+    force_refresh: bool,
+    total_train: f32,
+    f_dim: usize,
+    wall: Instant,
+}
+
+impl<'a> Session<'a> {
+    /// Stage 1+2: partition the graph over the cluster's devices, build
+    /// per-worker state, size and prime the two-level cache, and wire the
+    /// exchange engine. No epochs run yet.
+    pub fn build(
+        dataset: &Dataset,
+        cluster: &'a Cluster,
+        backend: &'a mut dyn Backend,
+        cfg: &TrainConfig,
+    ) -> Result<Session<'a>> {
+        let wall = Instant::now();
+        let gpus = cluster.gpus();
+        let topology = cluster.topology();
+        let p = gpus.len();
+        assert!(p >= 1);
+        let mut rng = Rng::new(cfg.seed);
+        let g = &dataset.graph;
+        let data = &dataset.data;
+
+        // ---- Partition (RAPA or plain) ---------------------------------
+        let (plan, rapa_pruned): (SubgraphPlan, usize) = if cfg.use_rapa {
+            let mut rcfg = cfg.rapa;
+            rcfg.f_dim = data.f_dim;
+            rcfg.layers = cfg.layers;
+            let res = rapa::run(g, gpus, &rcfg, cfg.method, &mut rng);
+            let pruned = res.pruned.iter().sum();
+            (res.plan, pruned)
+        } else {
+            let ps = cfg.method.partition(g, p, &mut rng);
+            (build_plan(g, &ps), 0)
+        };
+
+        // ---- Model ------------------------------------------------------
+        let c_pad = if data.num_classes <= 4 { 4 } else { 16 };
+        if data.num_classes > c_pad {
+            return Err(anyhow!("num_classes {} exceeds padded bucket", data.num_classes));
+        }
+        let dims = layer_stack(data.f_dim, cfg.hidden, c_pad, cfg.layers);
+        let model = GnnModel::new(cfg.model, dims.clone(), &mut rng);
+
+        // ---- Workers ----------------------------------------------------
+        let deg: Vec<f64> = (0..g.n() as u32).map(|v| g.degree(v) as f64).collect();
+        let mut workers: Vec<Worker> = Vec::with_capacity(p);
+        for sg in &plan.parts {
+            let n_local = sg.n_local();
+            let n_pad = n_local.next_power_of_two().max(256);
+            // Local normalized adjacency with *global* degrees (keeps the
+            // math identical to single-GPU full-batch training).
+            let mut a_hat = vec![0.0f32; n_pad * n_pad];
+            match cfg.model {
+                ModelKind::Gcn => {
+                    for i in 0..n_local {
+                        let gi = sg.global_ids[i];
+                        let di = deg[gi as usize] + 1.0;
+                        a_hat[i * n_pad + i] = (1.0 / di) as f32;
+                        for &lj in sg.local.nbrs(i as u32) {
+                            let gjd = deg[sg.global_ids[lj as usize] as usize] + 1.0;
+                            a_hat[i * n_pad + lj as usize] = (1.0 / (di * gjd).sqrt()) as f32;
+                        }
+                    }
+                }
+                ModelKind::Sage => {
+                    for i in 0..n_local {
+                        let gi = sg.global_ids[i];
+                        let d = deg[gi as usize].max(1.0);
+                        for &lj in sg.local.nbrs(i as u32) {
+                            a_hat[i * n_pad + lj as usize] = (1.0 / d) as f32;
+                        }
+                    }
+                }
+            }
+            // Features: inner rows owned locally; halo rows arrive by
+            // exchange.
+            let f = data.f_dim;
+            let mut x = vec![0.0f32; n_pad * f];
+            for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
+                x[i * f..(i + 1) * f].copy_from_slice(data.feature_row(v));
+            }
+            let mut y = vec![0.0f32; n_pad * c_pad];
+            let mut train_mask = vec![0.0f32; n_pad];
+            let mut val_mask = vec![0.0f32; n_pad];
+            let mut test_mask = vec![0.0f32; n_pad];
+            let mut train_count = 0.0f32;
+            for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
+                y[i * c_pad + data.labels[v as usize] as usize] = 1.0;
+                let vu = v as usize;
+                if data.train_mask[vu] {
+                    train_mask[i] = 1.0;
+                    train_count += 1.0;
+                }
+                if data.val_mask[vu] {
+                    val_mask[i] = 1.0;
+                }
+                if data.test_mask[vu] {
+                    test_mask[i] = 1.0;
+                }
+            }
+            let mut h = Vec::with_capacity(cfg.layers + 1);
+            h.push(x);
+            for d in &dims {
+                h.push(vec![0.0f32; n_pad * d.d_out]);
+            }
+            let halo_hist = dims
+                .iter()
+                .map(|d| vec![0.0f32; sg.n_halo() * d.d_out])
+                .collect();
+            workers.push(Worker {
+                n_pad,
+                c_pad,
+                a_hat,
+                y,
+                train_mask,
+                val_mask,
+                test_mask,
+                h,
+                halo_hist,
+                e_local: sg.local.arcs(),
+                stages: StageTimes::default(),
+                train_count,
+            });
+        }
+        let total_train: f32 = workers.iter().map(|w| w.train_count).sum::<f32>().max(1.0);
+
+        // ---- Cache ------------------------------------------------------
+        let max_caps: Vec<usize> = plan.parts.iter().map(|sg| sg.n_halo()).collect();
+        let max_global: usize = {
+            let mut set = std::collections::HashSet::new();
+            for sg in &plan.parts {
+                set.extend(sg.halo_ids().iter().copied());
+            }
+            set.len()
+        };
+        // Rows are cached per layer, so scale capacities by cached layers
+        // (layer-0 features + L−1 intermediate embeddings).
+        let layers_cached = cfg.layers;
+        let (local_caps, global_cap) = match cfg.capacity {
+            CapacityMode::Adaptive => {
+                let input = CapacityInput {
+                    top_k: usize::MAX,
+                    gpu_mem_mib: gpus
+                        .iter()
+                        .map(|g| g.memory_bytes() as f64 / (1 << 20) as f64)
+                        .collect(),
+                    gpu_reserved_mib: 100.0,
+                    cpu_mem_mib: 768.0 * 1024.0,
+                    cpu_reserved_mib: 1024.0,
+                    layer_dims: dims.iter().map(|d| d.d_in).collect(),
+                };
+                let cap = cal_capacity(&plan, &input);
+                (
+                    cap.gpu.iter().map(|&c| c * layers_cached).collect::<Vec<_>>(),
+                    cap.cpu * layers_cached,
+                )
+            }
+            CapacityMode::Fixed { local, global } => (vec![local; p], global),
+            CapacityMode::Fraction(fr) => (
+                max_caps
+                    .iter()
+                    .map(|&c| ((c as f64 * fr).ceil() as usize) * layers_cached)
+                    .collect(),
+                ((max_global as f64 * fr).ceil() as usize) * layers_cached,
+            ),
+        };
+        let mut cache = TwoLevelCache::new(cfg.policy, &local_caps, global_cap);
+        // JACA priorities: vertex overlap ratio, same for every layer's key.
+        let max_overlap = plan
+            .parts
+            .iter()
+            .flat_map(|sg| sg.halo_overlap.iter().copied())
+            .max()
+            .unwrap_or(1);
+        for (w, sg) in plan.parts.iter().enumerate() {
+            for (hi, &v) in sg.halo_ids().iter().enumerate() {
+                let prio = if cfg.invert_priority {
+                    max_overlap + 1 - sg.halo_overlap[hi]
+                } else {
+                    sg.halo_overlap[hi]
+                };
+                for l in 0..=cfg.layers as u32 {
+                    cache.set_priority(w, key_of(l, v), prio);
+                }
+            }
+        }
+
+        let engine = ExchangeEngine::new(gpus, topology);
+        let report = TrainReport {
+            rapa_pruned,
+            worker_stages: vec![StageTimes::default(); p],
+            ..Default::default()
+        };
+        let qrng = rng.fork(0xC0FFEE);
+
+        let halo_union: Vec<u32> = {
+            let mut set: std::collections::BTreeSet<u32> = Default::default();
+            for sg in &plan.parts {
+                set.extend(sg.halo_ids().iter().copied());
+            }
+            set.into_iter().collect()
+        };
+        let owner_of: HashMap<u32, (usize, usize)> = {
+            let mut m = HashMap::new();
+            for (w, sg) in plan.parts.iter().enumerate() {
+                for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
+                    m.insert(v, (w, i));
+                }
+            }
+            m
+        };
+
+        Ok(Session {
+            cfg: cfg.clone(),
+            backend,
+            plan,
+            model,
+            dims,
+            workers,
+            cache,
+            engine,
+            halo_union,
+            owner_of,
+            published: HashMap::new(),
+            qrng,
+            report,
+            epoch: 0,
+            force_refresh: false,
+            total_train,
+            f_dim: data.f_dim,
+            wall,
+        })
+    }
+
+    /// One-shot convenience: build, run `cfg.epochs` epochs, finish.
+    pub fn train(
+        dataset: &Dataset,
+        cluster: &Cluster,
+        backend: &mut dyn Backend,
+        cfg: &TrainConfig,
+    ) -> Result<TrainReport> {
+        let mut session = Session::build(dataset, cluster, backend, cfg)?;
+        session.run_epochs(cfg.epochs)?;
+        session.finish()
+    }
+
+    /// Stage 3: run one full-batch epoch and report what it did.
+    pub fn run_epoch(&mut self) -> Result<EpochStats> {
+        let Self {
+            cfg,
+            backend,
+            plan,
+            model,
+            dims,
+            workers,
+            cache,
+            engine,
+            halo_union,
+            owner_of,
+            published,
+            qrng,
+            report,
+            epoch,
+            force_refresh,
+            total_train,
+            f_dim,
+            ..
+        } = self;
+        let backend: &mut dyn Backend = &mut **backend;
+        let epoch_now: u64 = *epoch;
+        let p = workers.len();
+        let bytes_moved0 = report.bytes_moved;
+        let bytes_saved0 = report.bytes_saved;
+
+        for w in workers.iter_mut() {
+            w.stages = StageTimes::default();
+        }
+        let refresh_epoch = (cfg.refresh_interval > 0
+            && epoch_now > 0
+            && epoch_now % cfg.refresh_interval == 0)
+            || *force_refresh;
+        *force_refresh = false;
+
+        // ---- Forward ----------------------------------------------------
+        for l in 0..=cfg.layers {
+            // Exchange halo rows of representation `l` (0 = input feats)
+            // before computing layer l (which aggregates them).
+            if l < cfg.layers {
+                let d = if l == 0 { *f_dim } else { dims[l - 1].d_out };
+                let is_static = l == 0; // input features never go stale
+                let skip =
+                    cfg.skip_exchange && epoch_now > 0 && !refresh_epoch && !is_static;
+                if skip {
+                    // Reuse historical halo rows (charged only bookkeeping).
+                    for (wi, sg) in plan.parts.iter().enumerate() {
+                        let w = &mut workers[wi];
+                        for hi in 0..sg.n_halo() {
+                            let dst = (sg.n_inner + hi) * d;
+                            let src = hi * d;
+                            let hist = &w.halo_hist[l.max(1) - 1];
+                            let row = &hist[src..src + d];
+                            w.h[l][dst..dst + d].copy_from_slice(row);
+                        }
+                    }
+                } else {
+                    // Publish fresh rows from owners.
+                    published.clear();
+                    for &v in halo_union.iter() {
+                        let (ow, row_idx) = owner_of[&v];
+                        let w = &workers[ow];
+                        let src = row_idx * d;
+                        published.insert(v, w.h[l][src..src + d].to_vec());
+                    }
+                    let mut params = ExchangeParams::new(l as u32, epoch_now, d);
+                    params.use_cache = cfg.use_cache;
+                    params.refresh = refresh_epoch && !is_static;
+                    params.comm_multiplier = cfg.comm_multiplier;
+                    if let Some(b) = cfg.quantized_row_bytes {
+                        params.bytes_per_row = b;
+                    }
+                    let bits = cfg.quantize_bits;
+                    let mut sunk: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+                    let mut full_rows = 0u64;
+                    let rep = engine.exchange(
+                        plan,
+                        cache,
+                        params,
+                        |v| {
+                            let row = published[&v].clone();
+                            match bits {
+                                Some(b) => {
+                                    let (q, quantized) = quantize(&row, b, qrng);
+                                    if !quantized {
+                                        full_rows += 1;
+                                    }
+                                    q
+                                }
+                                None => row,
+                            }
+                        },
+                        |w, hi, row| sunk.push((w, hi, row.to_vec())),
+                    );
+                    for (wi, hi, row) in sunk {
+                        let sg = &plan.parts[wi];
+                        let w = &mut workers[wi];
+                        let dst = (sg.n_inner + hi) * d;
+                        w.h[l][dst..dst + d].copy_from_slice(&row);
+                        if l > 0 {
+                            w.halo_hist[l - 1][hi * d..hi * d + d].copy_from_slice(&row);
+                        }
+                    }
+                    for (w, st) in workers.iter_mut().zip(&rep.stages) {
+                        w.stages.add(st);
+                    }
+                    report.bytes_moved += rep.bytes_moved;
+                    report.bytes_saved += rep.bytes_saved;
+                    // Rows that could not be quantized traveled at full f32
+                    // precision — charge the difference so byte accounting
+                    // matches the wire.
+                    let full = (d * 4) as u64;
+                    if full_rows > 0 && full > params.bytes_per_row {
+                        report.bytes_moved += full_rows * (full - params.bytes_per_row);
+                    }
+                }
+            }
+
+            if l == cfg.layers {
+                break;
+            }
+            // Compute layer l on every worker.
+            let ld = dims[l];
+            for (wi, w) in workers.iter_mut().enumerate() {
+                let n_pad = w.n_pad;
+                let out = match cfg.model {
+                    ModelKind::Gcn => backend.gcn_fwd(
+                        n_pad,
+                        ld.d_in,
+                        ld.d_out,
+                        ld.relu,
+                        &w.a_hat,
+                        &w.h[l],
+                        &model.weights[l][0],
+                    )?,
+                    ModelKind::Sage => backend.sage_fwd(
+                        n_pad,
+                        ld.d_in,
+                        ld.d_out,
+                        ld.relu,
+                        &w.a_hat,
+                        &w.h[l],
+                        &model.weights[l][0],
+                        &model.weights[l][1],
+                    )?,
+                };
+                w.h[l + 1] = out;
+                charge_layer(
+                    w,
+                    &engine.gpus[wi],
+                    plan.parts[wi].n_inner,
+                    ld.d_in,
+                    ld.d_out,
+                    false,
+                    cfg.model,
+                );
+            }
+        }
+
+        // ---- Loss + backward --------------------------------------------
+        let mut grads = model.zero_grads();
+        let mut loss_sum = 0.0f32;
+        let mut val_correct = 0.0f32;
+        let mut val_total = 0.0f32;
+        for (wi, w) in workers.iter_mut().enumerate() {
+            let n_pad = w.n_pad;
+            let lg = backend.ce_grad(n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.train_mask)?;
+            let weight = w.train_count / *total_train;
+            loss_sum += lg.loss * weight;
+            // Validation accuracy from the same logits.
+            let vm: f32 = w.val_mask.iter().sum();
+            if vm > 0.0 {
+                let vg = backend.ce_grad(n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.val_mask)?;
+                val_correct += vg.correct;
+                val_total += vm;
+            }
+            // Backward chain.
+            let mut dh = lg.dz;
+            // Scale to global normalization.
+            for v in dh.iter_mut() {
+                *v *= weight;
+            }
+            for l in (0..cfg.layers).rev() {
+                let ld = dims[l];
+                match cfg.model {
+                    ModelKind::Gcn => {
+                        let (gw, dh_prev) = backend.gcn_bwd(
+                            n_pad,
+                            ld.d_in,
+                            ld.d_out,
+                            ld.relu,
+                            &w.a_hat,
+                            &w.h[l],
+                            &model.weights[l][0],
+                            &dh,
+                        )?;
+                        axpy(&mut grads[l][0], &gw);
+                        dh = dh_prev;
+                    }
+                    ModelKind::Sage => {
+                        let (gws, gwn, dh_prev) = backend.sage_bwd(
+                            n_pad,
+                            ld.d_in,
+                            ld.d_out,
+                            ld.relu,
+                            &w.a_hat,
+                            &w.h[l],
+                            &model.weights[l][0],
+                            &model.weights[l][1],
+                            &dh,
+                        )?;
+                        axpy(&mut grads[l][0], &gws);
+                        axpy(&mut grads[l][1], &gwn);
+                        dh = dh_prev;
+                    }
+                }
+                // Drop cross-partition halo gradients (S4).
+                let n_inner = plan.parts[wi].n_inner;
+                for r in n_inner..w.n_pad {
+                    for c in 0..ld.d_in {
+                        dh[r * ld.d_in + c] = 0.0;
+                    }
+                }
+                charge_layer(
+                    w,
+                    &engine.gpus[wi],
+                    plan.parts[wi].n_inner,
+                    ld.d_in,
+                    ld.d_out,
+                    true,
+                    cfg.model,
+                );
+            }
+        }
+
+        // ---- Gradient all-reduce + step ---------------------------------
+        let grad_bytes = model.grad_bytes();
+        let ring_bytes = (grad_bytes as f64 * 2.0 * (p as f64 - 1.0) / p as f64) as u64;
+        for (wi, w) in workers.iter_mut().enumerate() {
+            if p > 1 {
+                let t = engine.topology.transfer_time(
+                    engine.gpus,
+                    wi,
+                    (wi + 1) % p,
+                    ring_bytes,
+                    p,
+                );
+                w.stages.communication += t * cfg.comm_multiplier;
+            }
+        }
+        model.sgd_step(&grads, cfg.lr);
+
+        // ---- Epoch accounting -------------------------------------------
+        let stage_list: Vec<StageTimes> = workers.iter().map(|w| w.stages).collect();
+        let (epoch_time, comm_visible) =
+            pipeline::epoch_across_workers(&stage_list, cfg.pipeline);
+        report.epoch_times.push(epoch_time);
+        report.comm_times.push(comm_visible);
+        report.losses.push(loss_sum);
+        let val_acc = if val_total > 0.0 { val_correct / val_total } else { 0.0 };
+        report.val_accs.push(val_acc);
+        let mut mean_stage = StageTimes::default();
+        for (wi, st) in stage_list.iter().enumerate() {
+            mean_stage.add(st);
+            report.worker_stages[wi].add(st);
+        }
+        let mean = mean_stage.scale(1.0 / p as f64);
+        report.stage_totals.add(&mean);
+        *epoch += 1;
+
+        Ok(EpochStats {
+            epoch: epoch_now,
+            time: epoch_time,
+            comm_time: comm_visible,
+            loss: loss_sum,
+            val_acc,
+            bytes_moved: report.bytes_moved - bytes_moved0,
+            bytes_saved: report.bytes_saved - bytes_saved0,
+            stages: mean,
+            cache: cache.stats,
+        })
+    }
+
+    /// Run `n` epochs back to back (no observer).
+    pub fn run_epochs(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.run_epoch()?;
+        }
+        Ok(())
+    }
+
+    /// Run up to `max_epochs`, consulting `observer` after each epoch.
+    /// Returns how many epochs actually ran.
+    pub fn run(
+        &mut self,
+        max_epochs: usize,
+        observer: &mut dyn EpochObserver,
+    ) -> Result<usize> {
+        let mut ran = 0;
+        for _ in 0..max_epochs {
+            let stats = self.run_epoch()?;
+            ran += 1;
+            if observer.on_epoch(self, &stats) == Signal::Stop {
+                break;
+            }
+        }
+        Ok(ran)
+    }
+
+    /// Accuracy of the current logits on the validation and test splits.
+    pub fn eval(&mut self) -> Result<EvalStats> {
+        let Self { cfg, backend, workers, .. } = self;
+        let backend: &mut dyn Backend = &mut **backend;
+        let l = cfg.layers;
+        let (mut vc, mut vt, mut tc, mut tt) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for w in workers.iter() {
+            let vm: f32 = w.val_mask.iter().sum();
+            if vm > 0.0 {
+                let g = backend.ce_grad(w.n_pad, w.c_pad, &w.h[l], &w.y, &w.val_mask)?;
+                vc += g.correct;
+                vt += vm;
+            }
+            let tm: f32 = w.test_mask.iter().sum();
+            if tm > 0.0 {
+                let g = backend.ce_grad(w.n_pad, w.c_pad, &w.h[l], &w.y, &w.test_mask)?;
+                tc += g.correct;
+                tt += tm;
+            }
+        }
+        Ok(EvalStats {
+            val_acc: if vt > 0.0 { vc / vt } else { 0.0 },
+            test_acc: if tt > 0.0 { tc / tt } else { 0.0 },
+        })
+    }
+
+    /// Force the next epoch to refresh cached halo embeddings (bounded
+    /// staleness on demand — e.g. from an [`EpochObserver`]).
+    pub fn request_refresh(&mut self) {
+        self.force_refresh = true;
+    }
+
+    /// Epochs run so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// The accumulated report so far (finalized by [`Session::finish`]).
+    pub fn report(&self) -> &TrainReport {
+        &self.report
+    }
+
+    /// Close the run: score the test split from the final logits and
+    /// return the accumulated [`TrainReport`].
+    pub fn finish(mut self) -> Result<TrainReport> {
+        let ev = self.eval()?;
+        self.report.test_acc = ev.test_acc;
+        self.report.cache = self.cache.stats;
+        self.report.wallclock = self.wall.elapsed().as_secs_f64();
+        Ok(self.report)
+    }
+}
+
+fn axpy(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// Stochastic uniform quantization of a row to `bits` (AdaQP numerics).
+///
+/// Returns the dequantized row and whether quantization applied. A
+/// constant row is exactly representable (scale 0) and counts as
+/// quantized; a row containing non-finite values is passed through at
+/// full precision and the caller must charge full-precision wire bytes.
+pub(crate) fn quantize(row: &[f32], bits: u8, rng: &mut Rng) -> (Vec<f32>, bool) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    let mut finite = true;
+    for &v in row {
+        if !v.is_finite() {
+            finite = false;
+            break;
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !finite {
+        return (row.to_vec(), false);
+    }
+    if hi <= lo {
+        // Constant (or empty) row: exactly representable as (lo, scale 0).
+        return (row.to_vec(), true);
+    }
+    let scale = (hi - lo) / levels;
+    let q = row
+        .iter()
+        .map(|&v| {
+            let q = (v - lo) / scale;
+            let floor = q.floor();
+            let q = if rng.f64() < (q - floor) as f64 { floor + 1.0 } else { floor };
+            lo + q * scale
+        })
+        .collect();
+    (q, true)
+}
+
+/// Charge simulated compute time for one layer on one worker.
+fn charge_layer(
+    w: &mut Worker,
+    gpu: &Gpu,
+    n_inner: usize,
+    d_in: usize,
+    d_out: usize,
+    backward: bool,
+    model: ModelKind,
+) {
+    let perf = gpu.expected();
+    // Aggregation (SpMM analog): work ∝ edges × feature dim.
+    let agg_ops = match model {
+        ModelKind::Gcn => 1.0,
+        ModelKind::Sage => 1.0,
+    } * if backward { 2.0 } else { 1.0 };
+    let agg_work = w.e_local as f64 * d_in as f64 * agg_ops;
+    w.stages.aggregation += perf.spmm * agg_work / REF_SPMM_WORK;
+    // Combination (MM): work ∝ vertices × d_in × d_out.
+    let mm_ops = match model {
+        ModelKind::Gcn => 1.0,
+        ModelKind::Sage => 2.0,
+    } * if backward { 2.0 } else { 1.0 };
+    let mm_work = n_inner as f64 * d_in as f64 * d_out as f64 * mm_ops;
+    w.stages.compute += perf.mm * mm_work / REF_MM_WORK;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::DeviceKind;
+    use crate::graph::datasets::tiny;
+    use crate::runtime::NativeBackend;
+
+    fn tiny_cfg(epochs: usize) -> TrainConfig {
+        TrainConfig {
+            hidden: 16,
+            layers: 2,
+            lr: 0.05,
+            ..TrainConfig::capgnn(epochs)
+        }
+    }
+
+    #[test]
+    fn session_runs_epochs_and_counts() {
+        let ds = tiny(1);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let mut backend = NativeBackend::new();
+        let mut s = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(5)).unwrap();
+        assert_eq!(s.epoch(), 0);
+        assert_eq!(s.num_workers(), 2);
+        let e0 = s.run_epoch().unwrap();
+        assert_eq!(e0.epoch, 0);
+        assert!(e0.loss.is_finite());
+        s.run_epochs(4).unwrap();
+        assert_eq!(s.epoch(), 5);
+        let report = s.finish().unwrap();
+        assert_eq!(report.epoch_times.len(), 5);
+    }
+
+    #[test]
+    fn eval_matches_epoch_val_acc() {
+        let ds = tiny(2);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let mut backend = NativeBackend::new();
+        let mut s = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(3)).unwrap();
+        let mut last = 0.0f32;
+        for _ in 0..3 {
+            last = s.run_epoch().unwrap().val_acc;
+        }
+        // eval() scores the same logits the last epoch scored.
+        let ev = s.eval().unwrap();
+        assert_eq!(ev.val_acc, last);
+        assert!(ev.test_acc >= 0.0 && ev.test_acc <= 1.0);
+    }
+
+    #[test]
+    fn observer_stop_halts_run() {
+        struct StopAfter(usize);
+        impl EpochObserver for StopAfter {
+            fn on_epoch(&mut self, _: &mut Session<'_>, st: &EpochStats) -> Signal {
+                if st.epoch as usize + 1 >= self.0 { Signal::Stop } else { Signal::Continue }
+            }
+        }
+        let ds = tiny(3);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let mut backend = NativeBackend::new();
+        let mut s = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(50)).unwrap();
+        let ran = s.run(50, &mut StopAfter(2)).unwrap();
+        assert_eq!(ran, 2);
+        assert_eq!(s.finish().unwrap().epoch_times.len(), 2);
+    }
+
+    #[test]
+    fn early_stopping_on_plateau() {
+        let ds = tiny(4);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let mut backend = NativeBackend::new();
+        let mut s = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(50)).unwrap();
+        // min_delta = ∞ means no epoch ever counts as an improvement, so
+        // the run must stop after exactly patience+1 epochs.
+        let mut stop = EarlyStopping::new(2, f32::INFINITY);
+        let ran = s.run(50, &mut stop).unwrap();
+        assert_eq!(ran, 3);
+        assert_eq!(stop.stopped_at, Some(2));
+    }
+
+    #[test]
+    fn request_refresh_forces_communication() {
+        let ds = tiny(8);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 3);
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(4);
+        cfg.use_rapa = false;
+        cfg.refresh_interval = 0; // never refresh on its own
+        cfg.capacity = CapacityMode::Fraction(1.0);
+        let mut s = Session::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+        let e0 = s.run_epoch().unwrap();
+        assert!(e0.bytes_moved > 0, "first epoch fills the cache");
+        let e1 = s.run_epoch().unwrap();
+        assert_eq!(e1.bytes_moved, 0, "full cache ⇒ no traffic");
+        s.request_refresh();
+        let e2 = s.run_epoch().unwrap();
+        assert!(e2.bytes_moved > 0, "forced refresh re-fetches halo rows");
+        let e3 = s.run_epoch().unwrap();
+        assert_eq!(e3.bytes_moved, 0, "refresh request is one-shot");
+    }
+
+    #[test]
+    fn periodic_refresh_observer_moves_bytes() {
+        let ds = tiny(9);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 3);
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(4);
+        cfg.use_rapa = false;
+        cfg.refresh_interval = 0;
+        cfg.capacity = CapacityMode::Fraction(1.0);
+        let mut s = Session::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+        struct Both(PeriodicRefresh, ConvergenceLog);
+        impl EpochObserver for Both {
+            fn on_epoch(&mut self, s: &mut Session<'_>, st: &EpochStats) -> Signal {
+                self.1.on_epoch(s, st);
+                self.0.on_epoch(s, st)
+            }
+        }
+        let mut obs = Both(PeriodicRefresh { every: 2 }, ConvergenceLog::default());
+        s.run(4, &mut obs).unwrap();
+        let log = obs.1;
+        // Epochs 0 (cold fill) and 2 (refresh requested after epoch 1)
+        // move bytes; epochs 1 and 3 are fully cached.
+        assert!(log.history[0].bytes_moved > 0);
+        assert_eq!(log.history[1].bytes_moved, 0);
+        assert!(log.history[2].bytes_moved > 0);
+        assert_eq!(log.history[3].bytes_moved, 0);
+    }
+
+    #[test]
+    fn quantize_constant_and_nan_rows() {
+        let mut rng = Rng::new(1);
+        // Constant row: exactly representable, counts as quantized.
+        let (q, ok) = quantize(&[2.5; 8], 8, &mut rng);
+        assert!(ok);
+        assert_eq!(q, vec![2.5; 8]);
+        // Non-finite row: passed through, flagged unquantized.
+        let (q, ok) = quantize(&[1.0, f32::NAN, 3.0], 8, &mut rng);
+        assert!(!ok);
+        assert!(q[1].is_nan());
+        let (_, ok) = quantize(&[1.0, f32::INFINITY], 8, &mut rng);
+        assert!(!ok);
+        // Normal row: within one quantization step of the input.
+        let (q, ok) = quantize(&[0.0, 1.0, 0.5], 4, &mut rng);
+        assert!(ok);
+        for (a, b) in q.iter().zip([0.0f32, 1.0, 0.5]) {
+            assert!((a - b).abs() <= 1.0 / 15.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn unquantizable_rows_charge_full_bytes() {
+        // All-NaN features ⇒ every layer-0 halo row is unquantizable and
+        // must be charged at full f32 width, not the quantized width.
+        let clean = tiny(10);
+        let mut nan = tiny(10);
+        for v in nan.data.features.iter_mut() {
+            *v = f32::NAN;
+        }
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 3);
+        let mut cfg = tiny_cfg(1);
+        cfg.use_rapa = false;
+        cfg.use_cache = false;
+        cfg.quantize_bits = Some(8);
+        cfg.quantized_row_bytes = Some(clean.data.f_dim as u64 + 8);
+        let mut full_cfg = cfg.clone();
+        full_cfg.quantize_bits = None;
+        full_cfg.quantized_row_bytes = None;
+
+        let mut backend = NativeBackend::new();
+        let r_clean = Session::train(&clean, &cluster, &mut backend, &cfg).unwrap();
+        let r_nan = Session::train(&nan, &cluster, &mut backend, &cfg).unwrap();
+        let r_full = Session::train(&nan, &cluster, &mut backend, &full_cfg).unwrap();
+        assert!(
+            r_nan.bytes_moved > r_clean.bytes_moved,
+            "NaN rows must cost more than quantized rows: {} vs {}",
+            r_nan.bytes_moved,
+            r_clean.bytes_moved
+        );
+        assert!(
+            r_nan.bytes_moved <= r_full.bytes_moved,
+            "charged bytes can never exceed full precision: {} vs {}",
+            r_nan.bytes_moved,
+            r_full.bytes_moved
+        );
+    }
+}

@@ -1,28 +1,23 @@
-//! The CaPGNN training loop (paper Fig. 7): per layer, every worker runs
-//! its fwd unit, publishes fresh halo rows, and the exchange engine fills
-//! each worker's halo slots through the two-level cache; backward mirrors
-//! the chain with cross-partition halo gradients dropped (DESIGN.md S4);
-//! gradients are all-reduced and SGD-stepped identically on all workers.
+//! Trainer configuration and the one-call `train()` entry point.
 //!
-//! Epoch/communication times are *simulated* from the Table-1 device
-//! capabilities (substitution S1); numerics are real (PJRT or native).
+//! The epoch machinery itself lives in [`crate::train::session`]: `train()`
+//! is a thin shim that wraps the legacy `(&[Gpu], &Topology)` pair into a
+//! [`Cluster`] and drives a [`Session`] for `cfg.epochs` epochs. Callers
+//! that want staged control (per-epoch stats, early stopping, eval between
+//! epochs, cache refreshes) should build the `Session` directly.
 
-use crate::cache::{cal_capacity, key_of, CapacityInput, PolicyKind, TwoLevelCache};
-use crate::comm::exchange::{ExchangeEngine, ExchangeParams};
-use crate::comm::pipeline;
+use crate::cache::PolicyKind;
 use crate::device::profile::Gpu;
-use crate::device::simclock::StageTimes;
 use crate::device::topology::Topology;
+use crate::dist::Cluster;
 use crate::graph::Dataset;
-use crate::model::{layer_stack, GnnModel, ModelKind};
-use crate::partition::halo::{build_plan, SubgraphPlan};
-use crate::partition::rapa::{self, RapaConfig};
+use crate::model::ModelKind;
+use crate::partition::rapa::RapaConfig;
 use crate::partition::Method;
 use crate::runtime::Backend;
+use crate::train::session::Session;
 use crate::train::TrainReport;
-use crate::util::Rng;
-use anyhow::{anyhow, Result};
-use std::time::Instant;
+use anyhow::Result;
 
 /// How cache capacities are chosen.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -113,30 +108,10 @@ impl TrainConfig {
     }
 }
 
-/// Per-worker training state (one simulated GPU).
-struct Worker {
-    n_pad: usize,
-    c_pad: usize,
-    a_hat: Vec<f32>,
-    y: Vec<f32>,
-    train_mask: Vec<f32>,
-    val_mask: Vec<f32>,
-    test_mask: Vec<f32>,
-    /// Activations h[0]=X … h[L]=logits, each n_pad × dims.
-    h: Vec<Vec<f32>>,
-    /// Historical halo rows per layer (skip_exchange mode).
-    halo_hist: Vec<Vec<f32>>,
-    /// Edge arcs in the local graph (for the compute-time model).
-    e_local: usize,
-    stages: StageTimes,
-    train_count: f32,
-}
-
-// Reference workloads of the Table-1 capability measurements.
-const REF_MM_WORK: f64 = 16384.0 * 16384.0 * 16384.0;
-const REF_SPMM_WORK: f64 = 0.004 * 16384.0 * 16384.0 * 16384.0;
-
 /// Run full-batch training; `gpus.len()` = number of partitions.
+///
+/// Legacy one-call path: equivalent to building a [`Cluster`] from the
+/// device list and driving a [`Session`] for `cfg.epochs` epochs.
 pub fn train(
     dataset: &Dataset,
     gpus: &[Gpu],
@@ -144,483 +119,8 @@ pub fn train(
     backend: &mut dyn Backend,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
-    let wall = Instant::now();
-    let p = gpus.len();
-    assert!(p >= 1);
-    let mut rng = Rng::new(cfg.seed);
-    let g = &dataset.graph;
-    let data = &dataset.data;
-
-    // ---- Partition (RAPA or plain) -------------------------------------
-    let (plan, rapa_pruned): (SubgraphPlan, usize) = if cfg.use_rapa {
-        let mut rcfg = cfg.rapa;
-        rcfg.f_dim = data.f_dim;
-        rcfg.layers = cfg.layers;
-        let res = rapa::run(g, gpus, &rcfg, cfg.method, &mut rng);
-        let pruned = res.pruned.iter().sum();
-        (res.plan, pruned)
-    } else {
-        let ps = cfg.method.partition(g, p, &mut rng);
-        (build_plan(g, &ps), 0)
-    };
-
-    // ---- Model ----------------------------------------------------------
-    let c_pad = if data.num_classes <= 4 { 4 } else { 16 };
-    if data.num_classes > c_pad {
-        return Err(anyhow!("num_classes {} exceeds padded bucket", data.num_classes));
-    }
-    let dims = layer_stack(data.f_dim, cfg.hidden, c_pad, cfg.layers);
-    let mut model = GnnModel::new(cfg.model, dims.clone(), &mut rng);
-
-    // ---- Workers ----------------------------------------------------------
-    let deg: Vec<f64> = (0..g.n() as u32).map(|v| g.degree(v) as f64).collect();
-    let mut workers: Vec<Worker> = Vec::with_capacity(p);
-    for sg in &plan.parts {
-        let n_local = sg.n_local();
-        let n_pad = n_local.next_power_of_two().max(256);
-        // Local normalized adjacency with *global* degrees (keeps the math
-        // identical to single-GPU full-batch training).
-        let mut a_hat = vec![0.0f32; n_pad * n_pad];
-        match cfg.model {
-            ModelKind::Gcn => {
-                for i in 0..n_local {
-                    let gi = sg.global_ids[i];
-                    let di = deg[gi as usize] + 1.0;
-                    a_hat[i * n_pad + i] = (1.0 / di) as f32;
-                    for &lj in sg.local.nbrs(i as u32) {
-                        let gjd = deg[sg.global_ids[lj as usize] as usize] + 1.0;
-                        a_hat[i * n_pad + lj as usize] = (1.0 / (di * gjd).sqrt()) as f32;
-                    }
-                }
-            }
-            ModelKind::Sage => {
-                for i in 0..n_local {
-                    let gi = sg.global_ids[i];
-                    let d = deg[gi as usize].max(1.0);
-                    for &lj in sg.local.nbrs(i as u32) {
-                        a_hat[i * n_pad + lj as usize] = (1.0 / d) as f32;
-                    }
-                }
-            }
-        }
-        // Features: inner rows owned locally; halo rows arrive by exchange.
-        let f = data.f_dim;
-        let mut x = vec![0.0f32; n_pad * f];
-        for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
-            x[i * f..(i + 1) * f].copy_from_slice(data.feature_row(v));
-        }
-        let mut y = vec![0.0f32; n_pad * c_pad];
-        let mut train_mask = vec![0.0f32; n_pad];
-        let mut val_mask = vec![0.0f32; n_pad];
-        let mut test_mask = vec![0.0f32; n_pad];
-        let mut train_count = 0.0f32;
-        for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
-            y[i * c_pad + data.labels[v as usize] as usize] = 1.0;
-            let vu = v as usize;
-            if data.train_mask[vu] {
-                train_mask[i] = 1.0;
-                train_count += 1.0;
-            }
-            if data.val_mask[vu] {
-                val_mask[i] = 1.0;
-            }
-            if data.test_mask[vu] {
-                test_mask[i] = 1.0;
-            }
-        }
-        let mut h = Vec::with_capacity(cfg.layers + 1);
-        h.push(x);
-        for d in &dims {
-            h.push(vec![0.0f32; n_pad * d.d_out]);
-        }
-        let halo_hist = dims
-            .iter()
-            .map(|d| vec![0.0f32; sg.n_halo() * d.d_out])
-            .collect();
-        workers.push(Worker {
-            n_pad,
-            c_pad,
-            a_hat,
-            y,
-            train_mask,
-            val_mask,
-            test_mask,
-            h,
-            halo_hist,
-            e_local: sg.local.arcs(),
-            stages: StageTimes::default(),
-            train_count,
-        });
-    }
-    let total_train: f32 = workers.iter().map(|w| w.train_count).sum::<f32>().max(1.0);
-
-    // ---- Cache ------------------------------------------------------------
-    let max_caps: Vec<usize> = plan.parts.iter().map(|sg| sg.n_halo()).collect();
-    let max_global: usize = {
-        let mut set = std::collections::HashSet::new();
-        for sg in &plan.parts {
-            set.extend(sg.halo_ids().iter().copied());
-        }
-        set.len()
-    };
-    // Rows are cached per layer, so scale capacities by cached layers
-    // (layer-0 features + L−1 intermediate embeddings).
-    let layers_cached = cfg.layers; // 0..L-1 representation layers
-    let (local_caps, global_cap) = match cfg.capacity {
-        CapacityMode::Adaptive => {
-            let input = CapacityInput {
-                top_k: usize::MAX,
-                gpu_mem_mib: gpus.iter().map(|g| g.memory_bytes() as f64 / (1 << 20) as f64).collect(),
-                gpu_reserved_mib: 100.0,
-                cpu_mem_mib: 768.0 * 1024.0,
-                cpu_reserved_mib: 1024.0,
-                layer_dims: dims.iter().map(|d| d.d_in).collect(),
-            };
-            let cap = cal_capacity(&plan, &input);
-            (
-                cap.gpu.iter().map(|&c| c * layers_cached).collect::<Vec<_>>(),
-                cap.cpu * layers_cached,
-            )
-        }
-        CapacityMode::Fixed { local, global } => (vec![local; p], global),
-        CapacityMode::Fraction(fr) => (
-            max_caps
-                .iter()
-                .map(|&c| ((c as f64 * fr).ceil() as usize) * layers_cached)
-                .collect(),
-            ((max_global as f64 * fr).ceil() as usize) * layers_cached,
-        ),
-    };
-    let mut cache = TwoLevelCache::new(cfg.policy, &local_caps, global_cap);
-    // JACA priorities: vertex overlap ratio, same for every layer's key.
-    let max_overlap = plan
-        .parts
-        .iter()
-        .flat_map(|sg| sg.halo_overlap.iter().copied())
-        .max()
-        .unwrap_or(1);
-    for (w, sg) in plan.parts.iter().enumerate() {
-        for (hi, &v) in sg.halo_ids().iter().enumerate() {
-            let prio = if cfg.invert_priority {
-                max_overlap + 1 - sg.halo_overlap[hi]
-            } else {
-                sg.halo_overlap[hi]
-            };
-            for l in 0..=cfg.layers as u32 {
-                cache.set_priority(w, key_of(l, v), prio);
-            }
-        }
-    }
-
-    let engine = ExchangeEngine::new(gpus, topology);
-    let f_dim = data.f_dim;
-    let mut report = TrainReport {
-        rapa_pruned,
-        worker_stages: vec![StageTimes::default(); p],
-        ..Default::default()
-    };
-    let mut qrng = rng.fork(0xC0FFEE);
-
-    // Published halo rows: (layer) -> global vertex -> row. Rebuilt per
-    // layer per epoch from owners.
-    use std::collections::HashMap;
-    let mut published: HashMap<u32, Vec<f32>> = HashMap::new();
-    // Which global vertices anyone needs at exchange time.
-    let halo_union: Vec<u32> = {
-        let mut set: std::collections::BTreeSet<u32> = Default::default();
-        for sg in &plan.parts {
-            set.extend(sg.halo_ids().iter().copied());
-        }
-        set.into_iter().collect()
-    };
-    // Owner lookup: global vertex -> (worker, local row).
-    let owner_of: HashMap<u32, (usize, usize)> = {
-        let mut m = HashMap::new();
-        for (w, sg) in plan.parts.iter().enumerate() {
-            for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
-                m.insert(v, (w, i));
-            }
-        }
-        m
-    };
-
-    for epoch in 0..cfg.epochs as u64 {
-        for w in workers.iter_mut() {
-            w.stages = StageTimes::default();
-        }
-        let refresh_epoch = cfg.refresh_interval > 0
-            && epoch > 0
-            && epoch % cfg.refresh_interval == 0;
-
-        // ---- Forward ------------------------------------------------------
-        for l in 0..=cfg.layers {
-            // Exchange halo rows of representation `l` (0 = input feats)
-            // before computing layer l (which aggregates them).
-            if l < cfg.layers {
-                let d = if l == 0 { f_dim } else { dims[l - 1].d_out };
-                let is_static = l == 0; // input features never go stale
-                let skip = cfg.skip_exchange && epoch > 0 && !refresh_epoch && !is_static;
-                if skip {
-                    // Reuse historical halo rows (charged only bookkeeping).
-                    for (wi, sg) in plan.parts.iter().enumerate() {
-                        let w = &mut workers[wi];
-                        for hi in 0..sg.n_halo() {
-                            let dst = (sg.n_inner + hi) * d;
-                            let src = hi * d;
-                            let hist = &w.halo_hist[l.max(1) - 1];
-                            let row = &hist[src..src + d];
-                            w.h[l][dst..dst + d].copy_from_slice(row);
-                        }
-                    }
-                } else {
-                    // Publish fresh rows from owners.
-                    published.clear();
-                    for &v in &halo_union {
-                        let (ow, row_idx) = owner_of[&v];
-                        let w = &workers[ow];
-                        let src = row_idx * d;
-                        published.insert(v, w.h[l][src..src + d].to_vec());
-                    }
-                    let mut params = ExchangeParams::new(l as u32, epoch, d);
-                    params.use_cache = cfg.use_cache;
-                    params.refresh = refresh_epoch && !is_static;
-                    params.comm_multiplier = cfg.comm_multiplier;
-                    if let Some(b) = cfg.quantized_row_bytes {
-                        params.bytes_per_row = b;
-                    }
-                    let bits = cfg.quantize_bits;
-                    let mut sunk: Vec<(usize, usize, Vec<f32>)> = Vec::new();
-                    let rep = engine.exchange(
-                        &plan,
-                        &mut cache,
-                        params,
-                        |v| {
-                            let row = published[&v].clone();
-                            match bits {
-                                Some(b) => quantize(&row, b, &mut qrng),
-                                None => row,
-                            }
-                        },
-                        |w, hi, row| sunk.push((w, hi, row.to_vec())),
-                    );
-                    for (wi, hi, row) in sunk {
-                        let sg = &plan.parts[wi];
-                        let w = &mut workers[wi];
-                        let dst = (sg.n_inner + hi) * d;
-                        w.h[l][dst..dst + d].copy_from_slice(&row);
-                        if l > 0 {
-                            w.halo_hist[l - 1][hi * d..hi * d + d].copy_from_slice(&row);
-                        }
-                    }
-                    for (w, st) in workers.iter_mut().zip(&rep.stages) {
-                        w.stages.add(st);
-                    }
-                    report.bytes_moved += rep.bytes_moved;
-                    report.bytes_saved += rep.bytes_saved;
-                }
-            }
-
-            if l == cfg.layers {
-                break;
-            }
-            // Compute layer l on every worker.
-            let ld = dims[l];
-            for (wi, w) in workers.iter_mut().enumerate() {
-                let n_pad = w.n_pad;
-                let out = match cfg.model {
-                    ModelKind::Gcn => backend.gcn_fwd(
-                        n_pad,
-                        ld.d_in,
-                        ld.d_out,
-                        ld.relu,
-                        &w.a_hat,
-                        &w.h[l],
-                        &model.weights[l][0],
-                    )?,
-                    ModelKind::Sage => backend.sage_fwd(
-                        n_pad,
-                        ld.d_in,
-                        ld.d_out,
-                        ld.relu,
-                        &w.a_hat,
-                        &w.h[l],
-                        &model.weights[l][0],
-                        &model.weights[l][1],
-                    )?,
-                };
-                w.h[l + 1] = out;
-                charge_layer(w, &gpus[wi], plan.parts[wi].n_inner, ld.d_in, ld.d_out, false, cfg.model);
-            }
-        }
-
-        // ---- Loss + backward -----------------------------------------------
-        let mut grads = model.zero_grads();
-        let mut loss_sum = 0.0f32;
-        let mut val_correct = 0.0f32;
-        let mut val_total = 0.0f32;
-        for (wi, w) in workers.iter_mut().enumerate() {
-            let n_pad = w.n_pad;
-            let lg = backend.ce_grad(n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.train_mask)?;
-            let weight = w.train_count / total_train;
-            loss_sum += lg.loss * weight;
-            // Validation accuracy from the same logits.
-            let vm: f32 = w.val_mask.iter().sum();
-            if vm > 0.0 {
-                let vg = backend.ce_grad(n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.val_mask)?;
-                val_correct += vg.correct;
-                val_total += vm;
-            }
-            // Backward chain.
-            let mut dh = lg.dz;
-            // Scale to global normalization.
-            for v in dh.iter_mut() {
-                *v *= weight;
-            }
-            for l in (0..cfg.layers).rev() {
-                let ld = dims[l];
-                match cfg.model {
-                    ModelKind::Gcn => {
-                        let (gw, dh_prev) = backend.gcn_bwd(
-                            n_pad,
-                            ld.d_in,
-                            ld.d_out,
-                            ld.relu,
-                            &w.a_hat,
-                            &w.h[l],
-                            &model.weights[l][0],
-                            &dh,
-                        )?;
-                        axpy(&mut grads[l][0], &gw);
-                        dh = dh_prev;
-                    }
-                    ModelKind::Sage => {
-                        let (gws, gwn, dh_prev) = backend.sage_bwd(
-                            n_pad,
-                            ld.d_in,
-                            ld.d_out,
-                            ld.relu,
-                            &w.a_hat,
-                            &w.h[l],
-                            &model.weights[l][0],
-                            &model.weights[l][1],
-                            &dh,
-                        )?;
-                        axpy(&mut grads[l][0], &gws);
-                        axpy(&mut grads[l][1], &gwn);
-                        dh = dh_prev;
-                    }
-                }
-                // Drop cross-partition halo gradients (S4).
-                let n_inner = plan.parts[wi].n_inner;
-                for r in n_inner..w.n_pad {
-                    for c in 0..ld.d_in {
-                        dh[r * ld.d_in + c] = 0.0;
-                    }
-                }
-                charge_layer(w, &gpus[wi], plan.parts[wi].n_inner, ld.d_in, ld.d_out, true, cfg.model);
-            }
-        }
-
-        // ---- Gradient all-reduce + step ------------------------------------
-        let grad_bytes = model.grad_bytes();
-        let ring_bytes = (grad_bytes as f64 * 2.0 * (p as f64 - 1.0) / p as f64) as u64;
-        for (wi, w) in workers.iter_mut().enumerate() {
-            if p > 1 {
-                let t = topology.transfer_time(gpus, wi, (wi + 1) % p, ring_bytes, p);
-                w.stages.communication += t * cfg.comm_multiplier;
-            }
-        }
-        model.sgd_step(&grads, cfg.lr);
-
-        // ---- Epoch accounting ------------------------------------------------
-        let stage_list: Vec<StageTimes> = workers.iter().map(|w| w.stages).collect();
-        let (epoch_time, comm_visible) =
-            pipeline::epoch_across_workers(&stage_list, cfg.pipeline);
-        report.epoch_times.push(epoch_time);
-        report.comm_times.push(comm_visible);
-        report.losses.push(loss_sum);
-        report
-            .val_accs
-            .push(if val_total > 0.0 { val_correct / val_total } else { 0.0 });
-        let mut mean_stage = StageTimes::default();
-        for (wi, st) in stage_list.iter().enumerate() {
-            mean_stage.add(st);
-            report.worker_stages[wi].add(st);
-        }
-        report.stage_totals.add(&mean_stage.scale(1.0 / p as f64));
-    }
-
-    // ---- Test accuracy -----------------------------------------------------
-    let mut test_correct = 0.0f32;
-    let mut test_total = 0.0f32;
-    for w in workers.iter_mut() {
-        let tm: f32 = w.test_mask.iter().sum();
-        if tm > 0.0 {
-            let tg = backend.ce_grad(w.n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.test_mask)?;
-            test_correct += tg.correct;
-            test_total += tm;
-        }
-    }
-    report.test_acc = if test_total > 0.0 { test_correct / test_total } else { 0.0 };
-    report.cache = cache.stats;
-    report.wallclock = wall.elapsed().as_secs_f64();
-    Ok(report)
-}
-
-fn axpy(acc: &mut [f32], x: &[f32]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for (a, b) in acc.iter_mut().zip(x) {
-        *a += b;
-    }
-}
-
-/// Stochastic uniform quantization of a row to `bits` (AdaQP numerics).
-fn quantize(row: &[f32], bits: u8, rng: &mut Rng) -> Vec<f32> {
-    let levels = ((1u32 << bits) - 1) as f32;
-    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
-    for &v in row {
-        lo = lo.min(v);
-        hi = hi.max(v);
-    }
-    if !lo.is_finite() || hi <= lo {
-        return row.to_vec();
-    }
-    let scale = (hi - lo) / levels;
-    row.iter()
-        .map(|&v| {
-            let q = (v - lo) / scale;
-            let floor = q.floor();
-            let q = if rng.f64() < (q - floor) as f64 { floor + 1.0 } else { floor };
-            lo + q * scale
-        })
-        .collect()
-}
-
-/// Charge simulated compute time for one layer on one worker.
-fn charge_layer(
-    w: &mut Worker,
-    gpu: &Gpu,
-    n_inner: usize,
-    d_in: usize,
-    d_out: usize,
-    backward: bool,
-    model: ModelKind,
-) {
-    let perf = gpu.expected();
-    // Aggregation (SpMM analog): work ∝ edges × feature dim.
-    let agg_ops = match model {
-        ModelKind::Gcn => 1.0,
-        ModelKind::Sage => 1.0,
-    } * if backward { 2.0 } else { 1.0 };
-    let agg_work = w.e_local as f64 * d_in as f64 * agg_ops;
-    w.stages.aggregation += perf.spmm * agg_work / REF_SPMM_WORK;
-    // Combination (MM): work ∝ vertices × d_in × d_out.
-    let mm_ops = match model {
-        ModelKind::Gcn => 1.0,
-        ModelKind::Sage => 2.0,
-    } * if backward { 2.0 } else { 1.0 };
-    let mm_work = n_inner as f64 * d_in as f64 * d_out as f64 * mm_ops;
-    w.stages.compute += perf.mm * mm_work / REF_MM_WORK;
+    let cluster = Cluster::from_parts(gpus.to_vec(), topology.clone());
+    Session::train(dataset, &cluster, backend, cfg)
 }
 
 #[cfg(test)]
@@ -629,6 +129,7 @@ mod tests {
     use crate::device::profile::DeviceKind;
     use crate::graph::datasets::tiny;
     use crate::runtime::NativeBackend;
+    use crate::util::Rng;
 
     fn gpus(n: usize) -> Vec<Gpu> {
         let mut rng = Rng::new(7);

@@ -10,7 +10,7 @@ use capgnn::graph::datasets::tiny;
 use capgnn::graph::spec_by_name;
 use capgnn::model::ModelKind;
 use capgnn::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
-use capgnn::train::{train, TrainConfig};
+use capgnn::train::{train, EarlyStopping, Session, TrainConfig};
 use capgnn::util::Rng;
 
 fn gpus(n: usize, seed: u64) -> Vec<Gpu> {
@@ -119,6 +119,50 @@ fn ablation_comm_ordering() {
         "pipeline hides comm: {comm:?}"
     );
     let _ = Ablation::Full;
+}
+
+/// The staged Session must be numerically identical to the one-call
+/// `train()` shim (same seed, same config).
+#[test]
+fn session_matches_train_shim() {
+    let ds = tiny(1);
+    let g = gpus(2, 3);
+    let topo = Topology::pcie_pairs(2);
+    let cfg = tiny_cfg(8);
+    let mut b1 = NativeBackend::new();
+    let r1 = train(&ds, &g, &topo, &mut b1, &cfg).unwrap();
+
+    let cluster = Cluster::from_parts(g.clone(), topo.clone());
+    let mut b2 = NativeBackend::new();
+    let mut session = Session::build(&ds, &cluster, &mut b2, &cfg).unwrap();
+    let mut last = None;
+    for _ in 0..cfg.epochs {
+        last = Some(session.run_epoch().unwrap());
+    }
+    let r2 = session.finish().unwrap();
+    assert_eq!(r1.losses, r2.losses);
+    assert_eq!(r1.val_accs, r2.val_accs);
+    assert_eq!(r1.bytes_moved, r2.bytes_moved);
+    assert_eq!(r1.test_acc, r2.test_acc);
+    let st = last.unwrap();
+    assert_eq!(st.epoch, 7);
+    assert_eq!(st.loss, r2.losses[7]);
+}
+
+/// Early stopping through the observer hook halts a session.
+#[test]
+fn early_stopping_halts_training() {
+    let ds = tiny(2);
+    let cluster = Cluster::from_parts(gpus(2, 4), Topology::pcie_pairs(2));
+    let mut backend = NativeBackend::new();
+    let mut session = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(50)).unwrap();
+    // min_delta = ∞ ⇒ no improvement ever counts ⇒ stop at patience+1.
+    let mut stop = EarlyStopping::new(2, f32::INFINITY);
+    let ran = session.run(50, &mut stop).unwrap();
+    assert_eq!(ran, 3);
+    assert_eq!(stop.stopped_at, Some(2));
+    let report = session.finish().unwrap();
+    assert_eq!(report.epoch_times.len(), 3);
 }
 
 /// Multi-machine cluster training composes with every preset cluster.

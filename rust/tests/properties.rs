@@ -192,14 +192,14 @@ fn prop_cache_insert_then_contains_unless_refused() {
             for _ in 0..200 {
                 let key = rng.next_below(64);
                 c.set_priority(key, (key % 5) as u32 + 1);
-                let evicted = c.insert(key);
-                if evicted != Some(key) {
+                let outcome = c.insert(key);
+                if outcome.stored() {
                     assert!(c.contains(key), "{} seed {seed}", kind.name());
+                } else {
+                    assert!(!c.contains(key), "{} seed {seed}", kind.name());
                 }
-                if let Some(victim) = evicted {
-                    if victim != key {
-                        assert!(!c.contains(victim));
-                    }
+                if let Some(victim) = outcome.victim() {
+                    assert!(!c.contains(victim));
                 }
             }
         }
