@@ -1,0 +1,129 @@
+//! PR2 bench-smoke / CI perf gate: measured wall-clock of the threaded
+//! epoch executor vs the sequential reference on a synthetic graph at
+//! 1/2/4 workers.
+//!
+//! Writes `BENCH_PR2.json` (epoch wall-clock, speedup, bytes moved) to the
+//! repo root and exits nonzero if either
+//! - the threaded executor is >10% slower than sequential at 4 workers, or
+//! - the two executors disagree on losses or bytes (bit-identity breach).
+//!
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::DatasetSpec;
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{ExecMode, Session, TrainConfig};
+use capgnn::util::bench;
+use capgnn::util::json::{arr, num, obj, s, Json};
+
+fn main() {
+    let quick = bench::quick_mode();
+    // Synthetic benchmark graph, dense enough that per-worker layer
+    // compute dominates the epoch — the measured speedup then reflects
+    // parallel execution rather than exchange bookkeeping.
+    let spec = DatasetSpec {
+        name: "bench-synth",
+        label: "Bs",
+        n: if quick { 768 } else { 2048 },
+        deg_in: 16.0,
+        deg_out: 8.0,
+        skew: 1.5,
+        classes: 8,
+        f_dim: 64,
+        orig_nodes: 0,
+        orig_edges: 0,
+    };
+    let ds = spec.build(42);
+    let epochs = if quick { 2 } else { 3 };
+    println!(
+        "pr2_exec_speedup: {} vertices, {} edges, {} epochs per run",
+        ds.graph.n(),
+        ds.graph.m(),
+        epochs
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut seq4 = 0.0f64;
+    let mut thr4 = 0.0f64;
+    let mut speedup4 = 0.0f64;
+    for &workers in &[1usize, 2, 4] {
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, workers, 7);
+        let base = TrainConfig {
+            hidden: if quick { 32 } else { 64 },
+            layers: 3,
+            lr: 0.05,
+            use_rapa: false,
+            ..TrainConfig::capgnn(epochs)
+        };
+        let run_once = |mode: ExecMode| -> (f64, Vec<f32>, u64) {
+            let mut cfg = base.clone();
+            cfg.exec = mode;
+            let mut backend = NativeBackend::new();
+            let mut session =
+                Session::build(&ds, &cluster, &mut backend, &cfg).expect("session build");
+            let t0 = std::time::Instant::now();
+            session.run_epochs(epochs).expect("epochs");
+            let wall = t0.elapsed().as_secs_f64();
+            let report = session.finish().expect("finish");
+            (wall, report.losses, report.bytes_moved)
+        };
+        // Two repetitions per mode, gating on the min: shields the CI
+        // perf gate from one-off scheduling noise on shared runners.
+        let run = |mode: ExecMode| -> (f64, Vec<f32>, u64) {
+            let (w1, losses, bytes) = run_once(mode);
+            let (w2, losses2, bytes2) = run_once(mode);
+            assert_eq!(losses, losses2, "{mode:?} must be run-to-run deterministic");
+            assert_eq!(bytes, bytes2);
+            (w1.min(w2), losses, bytes)
+        };
+        let (seq_s, seq_losses, seq_bytes) = run(ExecMode::Sequential);
+        let (thr_s, thr_losses, thr_bytes) = run(ExecMode::Threaded);
+        if seq_losses != thr_losses || seq_bytes != thr_bytes {
+            eprintln!(
+                "NUMERICS DIVERGED at {workers} workers: losses {seq_losses:?} vs {thr_losses:?}, bytes {seq_bytes} vs {thr_bytes}"
+            );
+            std::process::exit(1);
+        }
+        let speedup = seq_s / thr_s.max(1e-12);
+        println!(
+            "workers={workers}: sequential {seq_s:.3}s, threaded {thr_s:.3}s, speedup {speedup:.2}x ({seq_bytes} bytes moved)"
+        );
+        entries.push(obj(vec![
+            ("workers", num(workers as f64)),
+            ("epochs", num(epochs as f64)),
+            ("sequential_s", num(seq_s)),
+            ("threaded_s", num(thr_s)),
+            ("speedup", num(speedup)),
+            ("bytes_moved", num(seq_bytes as f64)),
+        ]));
+        if workers == 4 {
+            seq4 = seq_s;
+            thr4 = thr_s;
+            speedup4 = speedup;
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", s("pr2_exec_speedup")),
+        ("graph_n", num(ds.graph.n() as f64)),
+        ("graph_m", num(ds.graph.m() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", arr(entries)),
+        ("speedup_at_4_workers", num(speedup4)),
+    ]);
+    bench::write_json_file("BENCH_PR2.json", &doc).expect("write BENCH_PR2.json");
+    println!("wrote BENCH_PR2.json (speedup at 4 workers: {speedup4:.2}x)");
+
+    if thr4 > seq4 * 1.10 {
+        eprintln!(
+            "PERF GATE FAILED: threaded {thr4:.3}s is >10% slower than sequential {seq4:.3}s at 4 workers"
+        );
+        std::process::exit(1);
+    }
+    if speedup4 < 1.5 {
+        eprintln!(
+            "note: speedup {speedup4:.2}x is below the 1.5x target — host may be core-starved"
+        );
+    }
+}

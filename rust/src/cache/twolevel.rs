@@ -101,10 +101,19 @@ impl TwoLevelCache {
         if self.global.contains(key) {
             self.global.touch(key);
             self.stats.global_hits += 1;
-            // Promote into the local cache (prefetch H2D).
-            if let Some(row) = self.global_store.get(key).map(|r| r.to_vec()) {
-                let epoch = self.global_store.age(key, u64::MAX).unwrap_or(0);
-                self.insert_local(worker, key, row, u64::MAX - epoch);
+            // Promote into the local cache (prefetch H2D). A pending-fill
+            // key has no content yet: promote the metadata now and let
+            // `complete_fill` deliver the row into this local store too,
+            // so next-epoch lookups classify as Local exactly as they did
+            // when fills carried content immediately.
+            match self.global_store.get(key).map(|r| r.to_vec()) {
+                Some(row) => {
+                    let epoch = self.global_store.age(key, u64::MAX).unwrap_or(0);
+                    self.insert_local(worker, key, row, u64::MAX - epoch);
+                }
+                None => {
+                    self.insert_local_meta(worker, key);
+                }
             }
             return Hit::Global;
         }
@@ -137,44 +146,80 @@ impl TwoLevelCache {
         }
     }
 
-    fn insert_local(&mut self, worker: usize, key: u64, row: Vec<f32>, epoch: u64) {
+    /// Metadata-only local insert: policy state, stats and victim row
+    /// removal. Returns whether the key ended up resident.
+    fn insert_local_meta(&mut self, worker: usize, key: u64) -> bool {
         match self.locals[worker].insert(key) {
             InsertOutcome::Refused => {
                 self.stats.local_refusals += 1;
+                false
             }
             InsertOutcome::Evicted(victim) => {
                 self.stats.local_evictions += 1;
                 self.local_store[worker].remove(victim);
-                self.local_store[worker].put(key, row, epoch);
+                true
             }
-            InsertOutcome::Inserted => {
-                self.local_store[worker].put(key, row, epoch);
-            }
+            InsertOutcome::Inserted => true,
         }
     }
 
-    fn insert_global(&mut self, key: u64, row: Vec<f32>, epoch: u64) {
+    /// Metadata-only global insert (see [`Self::insert_local_meta`]).
+    fn insert_global_meta(&mut self, key: u64) -> bool {
         match self.global.insert(key) {
             InsertOutcome::Refused => {
                 self.stats.global_refusals += 1;
+                false
             }
             InsertOutcome::Evicted(victim) => {
                 self.stats.global_evictions += 1;
                 self.global_store.remove(victim);
-                self.global_store.put(key, row, epoch);
+                true
             }
-            InsertOutcome::Inserted => {
-                self.global_store.put(key, row, epoch);
-            }
+            InsertOutcome::Inserted => true,
+        }
+    }
+
+    fn insert_local(&mut self, worker: usize, key: u64, row: Vec<f32>, epoch: u64) {
+        if self.insert_local_meta(worker, key) {
+            self.local_store[worker].put(key, row, epoch);
         }
     }
 
     /// Fill after a miss (or a refresh): store the row for `worker` and
     /// publish it to the global cache for the other workers.
     pub fn fill(&mut self, worker: usize, key: u64, row: Vec<f32>, epoch: u64) {
+        self.fill_pending(worker, key);
+        self.complete_fill(key, &row, epoch);
+    }
+
+    /// Metadata half of a fill, for the plan/execute split: policy state,
+    /// eviction/refusal stats and victim row removal happen now (in the
+    /// planner's deterministic order), while the row content is *pending*
+    /// until [`TwoLevelCache::complete_fill`] delivers it. In the window
+    /// between the two, `lookup` reports the key resident but `get_row`
+    /// returns `None` — exactly the same-round window the exchange planner
+    /// covers by routing the fresh row straight from its owner to every
+    /// requester.
+    pub fn fill_pending(&mut self, worker: usize, key: u64) {
         self.stats.fills += 1;
-        self.insert_global(key, row.clone(), epoch);
-        self.insert_local(worker, key, row, epoch);
+        self.insert_global_meta(key);
+        self.insert_local_meta(worker, key);
+    }
+
+    /// Deliver the row content for a key inserted by
+    /// [`TwoLevelCache::fill_pending`]: stored wherever the key is still
+    /// metadata-resident and has no content yet. A key evicted between the
+    /// two calls is skipped — its metadata is gone, so storing content
+    /// would leak an orphan row.
+    pub fn complete_fill(&mut self, key: u64, row: &[f32], epoch: u64) {
+        if self.global.contains(key) && self.global_store.get(key).is_none() {
+            self.global_store.put(key, row.to_vec(), epoch);
+        }
+        for (w, local) in self.locals.iter().enumerate() {
+            if local.contains(key) && self.local_store[w].get(key).is_none() {
+                self.local_store[w].put(key, row.to_vec(), epoch);
+            }
+        }
     }
 
     /// Update a cached row in place wherever it is resident (lightweight
@@ -271,6 +316,62 @@ mod tests {
         // Refresh of non-resident key is a no-op.
         c.refresh(77, &[1.0], 1);
         assert_eq!(c.lookup(1, 77), Hit::Miss);
+    }
+
+    #[test]
+    fn pending_fill_hits_without_content_until_completed() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill_pending(0, 9);
+        // Metadata-resident: lookups hit, but no content yet.
+        assert_eq!(c.lookup(0, 9), Hit::Local);
+        assert!(c.get_row(0, 9).is_none());
+        assert_eq!(c.stats.fills, 1);
+        c.complete_fill(9, &[3.5, 4.5], 2);
+        assert_eq!(c.get_row(0, 9).unwrap(), &[3.5, 4.5]);
+        // Worker 1 can now pull it through the global cache.
+        assert_eq!(c.lookup(1, 9), Hit::Global);
+    }
+
+    #[test]
+    fn pending_promotion_receives_content_at_completion() {
+        // Worker 1 global-hits a key whose fill is still pending: the
+        // metadata promotes immediately, the content follows at
+        // completion — next lookup is a Local hit, exactly as when fills
+        // carried content inline.
+        let mut c = cache(PolicyKind::Lru);
+        c.fill_pending(0, 4);
+        assert_eq!(c.lookup(1, 4), Hit::Global);
+        assert!(c.get_row(1, 4).is_none());
+        c.complete_fill(4, &[8.0], 1);
+        assert_eq!(c.lookup(1, 4), Hit::Local);
+        assert_eq!(c.get_row(1, 4).unwrap(), &[8.0]);
+    }
+
+    #[test]
+    fn completion_after_eviction_is_skipped() {
+        // Local capacity 2, global 4: evict a pending key everywhere
+        // before completing it — the late content must not resurrect it.
+        let mut c = TwoLevelCache::new(PolicyKind::Lru, &[2, 2], 2);
+        c.fill_pending(0, 1);
+        c.fill_pending(0, 2);
+        c.fill_pending(0, 3); // evicts key 1 from local AND global (cap 2)
+        c.complete_fill(1, &[1.0], 0);
+        assert!(c.get_row(0, 1).is_none());
+        assert_eq!(c.lookup(0, 1), Hit::Miss);
+        // Keys still resident accept their content normally.
+        c.complete_fill(3, &[3.0], 0);
+        assert_eq!(c.get_row(0, 3).unwrap(), &[3.0]);
+    }
+
+    #[test]
+    fn fill_is_pending_plus_completion() {
+        let mut a = cache(PolicyKind::Lru);
+        a.fill(0, 5, vec![7.0], 1);
+        let mut b = cache(PolicyKind::Lru);
+        b.fill_pending(0, 5);
+        b.complete_fill(5, &[7.0], 1);
+        assert_eq!(a.get_row(0, 5), b.get_row(0, 5));
+        assert_eq!(a.stats, b.stats);
     }
 
     #[test]

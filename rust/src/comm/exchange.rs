@@ -19,6 +19,7 @@ use crate::device::profile::Gpu;
 use crate::device::simclock::StageTimes;
 use crate::device::topology::Topology;
 use crate::partition::SubgraphPlan;
+use std::collections::{HashMap, HashSet};
 
 /// Fixed bookkeeping costs of the caching strategy (seconds per op).
 /// Calibrated so check/pick stay small and flat (paper Fig. 19: the
@@ -89,6 +90,57 @@ pub struct ExchangeReport {
     pub cache: TwoLevelStats,
 }
 
+/// One owner→requesters delivery of a fresh halo row. The owner reads
+/// local (inner) row `src_row` of representation `layer`, quantizes it if
+/// configured, and every `(worker, halo_idx)` recipient aggregates it.
+/// Only the *first* requester is charged wire bytes/time (later same-round
+/// requesters would have read the just-filled cache), but all of them
+/// receive the content directly because the fill is still pending.
+#[derive(Clone, Debug)]
+pub struct SendDirective {
+    pub vertex: u32,
+    /// Owner-local inner row index of the vertex.
+    pub src_row: usize,
+    /// (requester worker, halo index) pairs to deliver to.
+    pub recipients: Vec<(usize, usize)>,
+}
+
+/// A deferred cache-content update: the metadata side already happened in
+/// the plan (`fill_pending`, or a refresh decision); the caller completes
+/// it with the authoritative row once the owner has produced it.
+#[derive(Clone, Copy, Debug)]
+pub struct FillDirective {
+    pub key: u64,
+    pub vertex: u32,
+    pub owner: usize,
+    /// Owner-local inner row index of the vertex.
+    pub src_row: usize,
+    /// true = in-place refresh of resident copies; false = pending fill.
+    pub refresh: bool,
+}
+
+/// The decision half of one exchange round. Every cache consultation,
+/// byte count and simulated-time charge happens here — deterministically,
+/// in worker-index order — while row *contents* move afterwards: serially
+/// in `ExecMode::Sequential`, or concurrently through per-worker channels
+/// in `ExecMode::Threaded`. Both executors run the same plan, which is
+/// what makes them bit-identical.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// Cached rows cloned per worker at plan time: (halo idx, row).
+    pub staged: Vec<Vec<(usize, Vec<f32>)>>,
+    /// Fresh deliveries grouped by owner worker.
+    pub sends: Vec<Vec<SendDirective>>,
+    /// Fresh rows each worker will receive (its channel recv budget).
+    pub expect: Vec<usize>,
+    /// Deferred cache-content updates for this round.
+    pub fills: Vec<FillDirective>,
+    /// Per-worker simulated stage charges for this round.
+    pub stages: Vec<StageTimes>,
+    pub bytes_moved: u64,
+    pub bytes_saved: u64,
+}
+
 /// The exchange engine: borrows the topology/devices, owns nothing.
 pub struct ExchangeEngine<'a> {
     pub gpus: &'a [Gpu],
@@ -101,25 +153,24 @@ impl<'a> ExchangeEngine<'a> {
         ExchangeEngine { gpus, topology, costs: CommCosts::default() }
     }
 
-    /// Run one halo-exchange round.
-    ///
-    /// `rows(v)` returns the authoritative row of global vertex `v` at this
-    /// layer from its owner; `sink(worker, halo_idx, row)` receives the row
-    /// each worker will aggregate with (cached — possibly stale — or
-    /// fresh).
-    pub fn exchange<R, S>(
+    /// Plan one halo-exchange round: consult the cache for every (worker,
+    /// halo vertex) in deterministic worker-index order, charge simulated
+    /// time and wire bytes, and emit the data-movement schedule — cached
+    /// rows staged by value, fresh rows as owner→requester
+    /// [`SendDirective`]s, cache-content updates as deferred
+    /// [`FillDirective`]s. No row content produced after the plan is read
+    /// here, so the caller can move contents serially or on threads.
+    pub fn plan_round(
         &self,
         plan: &SubgraphPlan,
         cache: &mut TwoLevelCache,
         p: ExchangeParams,
-        mut rows: R,
-        mut sink: S,
-    ) -> ExchangeReport
-    where
-        R: FnMut(u32) -> Vec<f32>,
-        S: FnMut(usize, usize, &[f32]),
-    {
+    ) -> RoundPlan {
         let nparts = plan.parts.len();
+        let mut staged: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); nparts];
+        let mut sends: Vec<Vec<SendDirective>> = vec![Vec::new(); nparts];
+        let mut expect = vec![0usize; nparts];
+        let mut fills: Vec<FillDirective> = Vec::new();
         let mut stages = vec![StageTimes::default(); nparts];
         let mut bytes_moved = 0u64;
         let mut bytes_saved = 0u64;
@@ -127,14 +178,30 @@ impl<'a> ExchangeEngine<'a> {
         // Rows per (src,dst) pair for contention accounting.
         let mut pair_rows: Vec<Vec<u64>> = vec![vec![0; nparts]; nparts];
         let mut h2d_rows: Vec<u64> = vec![0; nparts];
+        // key → (owner, directive idx) for this round's fetches: a hit on
+        // a key whose fill is still pending content joins the owner's
+        // recipient list instead of reading the (empty) store.
+        let mut fetched: HashMap<u64, (usize, usize)> = HashMap::new();
+        // Keys already scheduled for an in-place refresh this round.
+        let mut refreshed: HashSet<u64> = HashSet::new();
+
+        let src_row_of = |owner: usize, v: u32| -> usize {
+            plan.parts[owner]
+                .local_of(v)
+                .expect("halo owner must hold the vertex as inner")
+        };
 
         for (w, part) in plan.parts.iter().enumerate() {
             for (hi, &v) in part.halo_ids().iter().enumerate() {
                 let key = key_of(p.layer, v);
                 let owner = part.halo_owner[hi] as usize;
                 if !p.use_cache {
-                    let row = rows(v);
-                    sink(w, hi, &row);
+                    sends[owner].push(SendDirective {
+                        vertex: v,
+                        src_row: src_row_of(owner, v),
+                        recipients: vec![(w, hi)],
+                    });
+                    expect[w] += 1;
                     pair_rows[owner][w] += 1;
                     bytes_moved += row_bytes;
                     continue;
@@ -142,35 +209,70 @@ impl<'a> ExchangeEngine<'a> {
                 stages[w].check_cache += self.costs.check_per_lookup;
                 match cache.lookup(w, key) {
                     Hit::Local | Hit::Global if p.refresh => {
-                        // Bounded-staleness refresh: fetch fresh, update in
-                        // place (lightweight update — no eviction churn).
-                        let row = rows(v);
-                        cache.refresh(key, &row, p.epoch);
-                        sink(w, hi, &row);
+                        // Bounded-staleness refresh: every hit worker
+                        // refetches (each charged), resident copies are
+                        // updated in place once — no eviction churn.
+                        let src_row = src_row_of(owner, v);
+                        sends[owner].push(SendDirective {
+                            vertex: v,
+                            src_row,
+                            recipients: vec![(w, hi)],
+                        });
+                        expect[w] += 1;
+                        if refreshed.insert(key) {
+                            fills.push(FillDirective {
+                                key,
+                                vertex: v,
+                                owner,
+                                src_row,
+                                refresh: true,
+                            });
+                        }
                         pair_rows[owner][w] += 1;
                         bytes_moved += row_bytes;
                     }
                     Hit::Local => {
                         stages[w].pick_cache += self.costs.pick_per_row;
-                        bytes_saved += row_bytes;
-                        if let Some(row) = cache.get_row(w, key) {
-                            sink(w, hi, row);
+                        bytes_saved += row_bytes; // owner does not resend
+                        if let Some(&(ow, idx)) = fetched.get(&key) {
+                            // Filled earlier this round: content is still
+                            // pending, so ride the owner's delivery.
+                            sends[ow][idx].recipients.push((w, hi));
+                            expect[w] += 1;
+                        } else if let Some(row) = cache.get_row(w, key) {
+                            staged[w].push((hi, row.to_vec()));
                         }
                     }
                     Hit::Global => {
                         stages[w].pick_cache += self.costs.pick_per_row;
                         h2d_rows[w] += 1;
-                        bytes_saved += row_bytes; // owner did not resend
-                        if let Some(row) = cache.get_row(w, key) {
-                            sink(w, hi, row);
+                        bytes_saved += row_bytes; // owner does not resend
+                        if let Some(&(ow, idx)) = fetched.get(&key) {
+                            sends[ow][idx].recipients.push((w, hi));
+                            expect[w] += 1;
+                        } else if let Some(row) = cache.get_row(w, key) {
+                            staged[w].push((hi, row.to_vec()));
                         }
                     }
                     Hit::Miss => {
-                        let row = rows(v);
-                        sink(w, hi, &row);
+                        let src_row = src_row_of(owner, v);
+                        sends[owner].push(SendDirective {
+                            vertex: v,
+                            src_row,
+                            recipients: vec![(w, hi)],
+                        });
+                        expect[w] += 1;
+                        fetched.insert(key, (owner, sends[owner].len() - 1));
+                        fills.push(FillDirective {
+                            key,
+                            vertex: v,
+                            owner,
+                            src_row,
+                            refresh: false,
+                        });
+                        cache.fill_pending(w, key);
                         pair_rows[owner][w] += 1;
                         bytes_moved += row_bytes;
-                        cache.fill(w, key, row, p.epoch);
                     }
                 }
             }
@@ -218,7 +320,64 @@ impl<'a> ExchangeEngine<'a> {
             stages[dst].communication += t;
         }
 
-        ExchangeReport { stages, bytes_moved, bytes_saved, cache: cache.stats }
+        RoundPlan { staged, sends, expect, fills, stages, bytes_moved, bytes_saved }
+    }
+
+    /// Run one halo-exchange round in place (plan + serial data movement).
+    ///
+    /// `rows(v)` returns the authoritative row of global vertex `v` at this
+    /// layer from its owner; `sink(worker, halo_idx, row)` receives the row
+    /// each worker will aggregate with (cached — possibly stale — or
+    /// fresh). The staged `Session` uses [`ExchangeEngine::plan_round`]
+    /// directly; this wrapper serves callers that want the one-shot shape.
+    pub fn exchange<R, S>(
+        &self,
+        plan: &SubgraphPlan,
+        cache: &mut TwoLevelCache,
+        p: ExchangeParams,
+        mut rows: R,
+        mut sink: S,
+    ) -> ExchangeReport
+    where
+        R: FnMut(u32) -> Vec<f32>,
+        S: FnMut(usize, usize, &[f32]),
+    {
+        let rp = self.plan_round(plan, cache, p);
+        for (w, entries) in rp.staged.iter().enumerate() {
+            for (hi, row) in entries {
+                sink(w, *hi, row);
+            }
+        }
+        // One rows() call per fetched vertex (as before the plan/execute
+        // split): remember each delivered row so the fill completion
+        // reuses it instead of re-materializing.
+        let mut delivered: HashMap<u32, Vec<f32>> = HashMap::new();
+        for dirs in &rp.sends {
+            for d in dirs {
+                let row = rows(d.vertex);
+                for &(w, hi) in &d.recipients {
+                    sink(w, hi, &row);
+                }
+                delivered.insert(d.vertex, row);
+            }
+        }
+        for f in &rp.fills {
+            let row = match delivered.get(&f.vertex) {
+                Some(row) => row.clone(),
+                None => rows(f.vertex),
+            };
+            if f.refresh {
+                cache.refresh(f.key, &row, p.epoch);
+            } else {
+                cache.complete_fill(f.key, &row, p.epoch);
+            }
+        }
+        ExchangeReport {
+            stages: rp.stages,
+            bytes_moved: rp.bytes_moved,
+            bytes_saved: rp.bytes_saved,
+            cache: cache.stats,
+        }
     }
 }
 

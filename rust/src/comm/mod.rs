@@ -6,5 +6,9 @@ pub mod exchange;
 pub mod pipeline;
 pub mod queues;
 
-pub use exchange::{CommCosts, ExchangeEngine, ExchangeReport};
+pub use exchange::{
+    CommCosts, ExchangeEngine, ExchangeParams, ExchangeReport, FillDirective, RoundPlan,
+    SendDirective,
+};
 pub use pipeline::combine_epoch;
+pub use queues::{HaloInbox, RowMsg};

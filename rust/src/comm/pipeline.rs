@@ -30,18 +30,21 @@ pub fn combine_epoch(stages: &StageTimes, pipelined: bool) -> (f64, f64) {
     (epoch, visible_comm)
 }
 
-/// Epoch time across workers = the slowest worker (full-batch barrier).
+/// Epoch time across workers = the slowest worker (full-batch barrier);
+/// visible communication = the worst residue across workers. The two
+/// maxima are independent: a compute-bound worker can set the epoch time
+/// while a comm-bound worker sets the visible communication — reporting
+/// the slowest worker's comm would hide the latter (regression test
+/// below).
 pub fn epoch_across_workers(per_worker: &[StageTimes], pipelined: bool) -> (f64, f64) {
-    let mut worst = 0.0f64;
+    let mut worst_epoch = 0.0f64;
     let mut worst_comm = 0.0f64;
     for st in per_worker {
         let (e, c) = combine_epoch(st, pipelined);
-        if e > worst {
-            worst = e;
-            worst_comm = c;
-        }
+        worst_epoch = worst_epoch.max(e);
+        worst_comm = worst_comm.max(c);
     }
-    (worst, worst_comm)
+    (worst_epoch, worst_comm)
 }
 
 #[cfg(test)]
@@ -117,6 +120,24 @@ mod tests {
             epoch_across_workers(&ws, true).0,
             epoch_across_workers(&ws, false).0
         );
+    }
+
+    #[test]
+    fn epoch_and_comm_maxima_are_independent() {
+        // Worker A is compute-bound (highest epoch, tiny comm residue);
+        // worker B is comm-bound (lower epoch, dominant visible comm).
+        // The old code returned the slowest worker's comm (A's), masking
+        // B's communication entirely.
+        let a = StageTimes { compute: 10.0, communication: 0.1, ..Default::default() };
+        let b = StageTimes { compute: 0.1, communication: 5.0, ..Default::default() };
+        for pipelined in [false, true] {
+            let (ea, ca) = combine_epoch(&a, pipelined);
+            let (eb, cb) = combine_epoch(&b, pipelined);
+            assert!(ea > eb && cb > ca, "fixture must keep the maxima apart");
+            let (e, c) = epoch_across_workers(&[a, b], pipelined);
+            assert_eq!(e, ea, "epoch time is the slowest worker");
+            assert_eq!(c, cb, "visible comm is the max across workers");
+        }
     }
 
     #[test]

@@ -88,9 +88,70 @@ impl QueueSet {
     }
 }
 
+/// One fresh halo row in flight from its owner to a requesting worker
+/// (the threaded executor's owner→requester delivery). Tagged with the
+/// exchange round so a receiver can recognize rows that belong to a later
+/// round than the one it is currently gathering.
+#[derive(Clone, Debug)]
+pub struct RowMsg {
+    /// Exchange round (= representation layer) the row belongs to.
+    pub round: usize,
+    /// Destination halo index in the requester's subgraph.
+    pub hi: usize,
+    pub row: Vec<f32>,
+}
+
+/// Per-worker double-buffered inbox for the threaded executor. An owner
+/// that races ahead sends round-`l+1` rows while the receiver is still
+/// gathering round `l`; the inbox banks those early arrivals per round so
+/// senders never block and no row is ever dropped or reordered across
+/// rounds.
+#[derive(Clone, Debug)]
+pub struct HaloInbox {
+    pending: Vec<Vec<(usize, Vec<f32>)>>,
+}
+
+impl HaloInbox {
+    pub fn new(rounds: usize) -> HaloInbox {
+        HaloInbox { pending: vec![Vec::new(); rounds] }
+    }
+
+    /// Bank a row for whichever round it belongs to.
+    pub fn stash(&mut self, msg: RowMsg) {
+        self.pending[msg.round].push((msg.hi, msg.row));
+    }
+
+    /// Drain everything banked for `round` (arrivals while the worker was
+    /// busy with earlier rounds).
+    pub fn take(&mut self, round: usize) -> Vec<(usize, Vec<f32>)> {
+        std::mem::take(&mut self.pending[round])
+    }
+
+    /// Total rows currently banked across all rounds.
+    pub fn buffered(&self) -> usize {
+        self.pending.iter().map(|p| p.len()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn inbox_banks_early_arrivals_per_round() {
+        let mut inbox = HaloInbox::new(3);
+        inbox.stash(RowMsg { round: 2, hi: 0, row: vec![2.0] });
+        inbox.stash(RowMsg { round: 1, hi: 4, row: vec![1.0] });
+        inbox.stash(RowMsg { round: 2, hi: 1, row: vec![2.5] });
+        assert_eq!(inbox.buffered(), 3);
+        assert!(inbox.take(0).is_empty());
+        assert_eq!(inbox.take(1), vec![(4, vec![1.0])]);
+        let r2 = inbox.take(2);
+        assert_eq!(r2.len(), 2);
+        assert_eq!(inbox.buffered(), 0);
+        // A second take is empty (drained).
+        assert!(inbox.take(2).is_empty());
+    }
 
     #[test]
     fn push_flush_bytes() {

@@ -9,7 +9,7 @@ use crate::graph::{spec_by_name, Dataset, DatasetSpec};
 use crate::model::ModelKind;
 use crate::partition::Method;
 use crate::runtime::BackendKind;
-use crate::train::{CapacityMode, TrainConfig};
+use crate::train::{CapacityMode, ExecMode, TrainConfig};
 use crate::util::{Args, Rng};
 use anyhow::{anyhow, Result};
 
@@ -82,6 +82,26 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
         train.use_rapa = false;
     }
     train.refresh_interval = args.u64_or("refresh", train.refresh_interval);
+    // `--threads auto` runs one OS thread per worker with overlapped halo
+    // exchange; `--threads 1` (or absent) keeps the sequential reference
+    // executor. A count > 1 behaves like `auto`: the flag selects the
+    // mode, it is not a pool size — per-worker threads are structural
+    // (each worker owns a channel endpoint). Numerics are identical
+    // either way.
+    train.exec = match args.get("threads") {
+        None => ExecMode::Sequential,
+        Some("auto") => ExecMode::Threaded,
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| anyhow!("bad --threads value: {v} (use a count or 'auto')"))?;
+            if n > 1 {
+                ExecMode::Threaded
+            } else {
+                ExecMode::Sequential
+            }
+        }
+    };
     if let (Some(l), Some(g)) = (args.get("local-cap"), args.get("global-cap")) {
         train.capacity = CapacityMode::Fixed {
             local: l.parse().map_err(|_| anyhow!("bad local-cap"))?,
@@ -142,6 +162,20 @@ mod tests {
         assert!(run_spec(&args(&["--dataset", "zz"])).is_err());
         assert!(run_spec(&args(&["--group", "x99"])).is_err());
         assert!(run_spec(&args(&["--backend", "cuda"])).is_err());
+    }
+
+    #[test]
+    fn threads_flag_selects_exec_mode() {
+        let base = &["--scale", "0.1"];
+        let seq = run_spec(&args(base)).unwrap();
+        assert_eq!(seq.train.exec, ExecMode::Sequential);
+        let auto = run_spec(&args(&["--scale", "0.1", "--threads", "auto"])).unwrap();
+        assert_eq!(auto.train.exec, ExecMode::Threaded);
+        let four = run_spec(&args(&["--scale", "0.1", "--threads", "4"])).unwrap();
+        assert_eq!(four.train.exec, ExecMode::Threaded);
+        let one = run_spec(&args(&["--scale", "0.1", "--threads", "1"])).unwrap();
+        assert_eq!(one.train.exec, ExecMode::Sequential);
+        assert!(run_spec(&args(&["--scale", "0.1", "--threads", "many"])).is_err());
     }
 
     #[test]

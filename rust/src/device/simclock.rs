@@ -52,6 +52,33 @@ impl StageTimes {
     }
 }
 
+/// Measured wall-clock breakdown of one epoch (real seconds). The
+/// *simulated* [`StageTimes`] model the paper's Table-1 devices; these
+/// track what the host actually spent, so reports can show modeled and
+/// measured time side by side (threaded-executor speedups are only
+/// visible in the measured numbers).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WallStages {
+    /// Exchange planning: cache lookups/fills and simulated-time charges.
+    pub plan: f64,
+    /// Forward + backward across all workers (serial loop or threads).
+    pub execute: f64,
+    /// Gradient merge, optimizer step, deferred cache-content completion.
+    pub reduce: f64,
+}
+
+impl WallStages {
+    pub fn total(&self) -> f64 {
+        self.plan + self.execute + self.reduce
+    }
+
+    pub fn add(&mut self, other: &WallStages) {
+        self.plan += other.plan;
+        self.execute += other.execute;
+        self.reduce += other.reduce;
+    }
+}
+
 /// Simulated clock for one worker.
 #[derive(Clone, Debug)]
 pub struct SimClock {
@@ -135,6 +162,15 @@ mod tests {
         c.barrier_at(3.0);
         assert_eq!(c.now, 3.0);
         assert_eq!(c.stages.sync, 1.0);
+    }
+
+    #[test]
+    fn wall_stages_accumulate() {
+        let mut w = WallStages { plan: 0.5, execute: 2.0, reduce: 0.25 };
+        assert_eq!(w.total(), 2.75);
+        w.add(&WallStages { plan: 0.5, execute: 1.0, reduce: 0.75 });
+        assert_eq!(w.total(), 5.0);
+        assert_eq!(WallStages::default().total(), 0.0);
     }
 
     #[test]

@@ -171,11 +171,14 @@ pub struct DistReport {
     pub machines: usize,
     /// Simulated training throughput: epochs per simulated second.
     pub epochs_per_sec: f64,
+    /// *Measured* training throughput: epochs per real (wall-clock)
+    /// second — the number `ExecMode::Threaded` actually improves.
+    pub wall_epochs_per_sec: f64,
     pub report: TrainReport,
 }
 
 /// Train over a (possibly multi-machine) cluster with the staged session
-/// and report simulated throughput.
+/// and report simulated + measured throughput.
 pub fn train_distributed(
     dataset: &Dataset,
     cluster: &Cluster,
@@ -185,10 +188,12 @@ pub fn train_distributed(
     let report = Session::train(dataset, cluster, backend, cfg)?;
     let epochs = report.epoch_times.len() as f64;
     let total = report.total_time();
+    let total_wall = report.total_wall();
     Ok(DistReport {
         workers: cluster.n_workers(),
         machines: cluster.num_machines(),
         epochs_per_sec: if total > 0.0 { epochs / total } else { 0.0 },
+        wall_epochs_per_sec: if total_wall > 0.0 { epochs / total_wall } else { 0.0 },
         report,
     })
 }
@@ -281,6 +286,7 @@ mod tests {
         assert_eq!(one.workers, 4);
         assert_eq!(two.machines, 2);
         assert!(one.epochs_per_sec > 0.0 && two.epochs_per_sec > 0.0);
+        assert!(one.wall_epochs_per_sec > 0.0 && two.wall_epochs_per_sec > 0.0);
         // Same devices, same partition ⇒ same bytes; Ethernet only slows
         // the simulated clock.
         assert_eq!(one.report.bytes_moved, two.report.bytes_moved);

@@ -125,8 +125,8 @@ pub fn fig15(ctx: Ctx) {
 pub fn fig16(ctx: Ctx) {
     let ds = reddit(ctx);
     let mut table = Table::new(
-        "Fig. 16 — epoch/comm time vs cache capacity (Reddit twin, simulated seconds)",
-        &["model", "parts", "capacity", "policy", "total", "comm"],
+        "Fig. 16 — epoch/comm time vs cache capacity (Reddit twin, simulated seconds + measured wall)",
+        &["model", "parts", "capacity", "policy", "total", "comm", "wall"],
     );
     for model in [ModelKind::Gcn, ModelKind::Sage] {
         for parts in [2usize, 4] {
@@ -143,6 +143,7 @@ pub fn fig16(ctx: Ctx) {
                         policy.name().to_string(),
                         fmt_secs(r.total_time()),
                         fmt_secs(r.total_comm()),
+                        fmt_secs(r.total_wall()),
                     ]);
                     bench::record_json(obj(vec![
                         ("expt", s("fig16")),
@@ -152,6 +153,7 @@ pub fn fig16(ctx: Ctx) {
                         ("policy", s(policy.name())),
                         ("total_s", num(r.total_time())),
                         ("comm_s", num(r.total_comm())),
+                        ("wall_s", num(r.total_wall())),
                     ]));
                 }
             }

@@ -108,8 +108,8 @@ pub fn tab7(ctx: Ctx, full: bool) {
         vec!["x2", "x4", "x8"]
     };
     let mut table = Table::new(
-        "Table 7 — overall performance (simulated seconds, scaled to 200 epochs)",
-        &["dataset", "model", "group", "system", "Epoch", "Comm", "Acc"],
+        "Table 7 — overall performance (simulated seconds scaled to 200 epochs; Wall = measured)",
+        &["dataset", "model", "group", "system", "Epoch", "Comm", "Wall", "Acc"],
     );
     for ds_label in &datasets {
         let spec: &DatasetSpec = spec_by_name(ds_label).unwrap();
@@ -123,8 +123,10 @@ pub fn tab7(ctx: Ctx, full: bool) {
                         continue;
                     }
                     let row = match system.failure(spec, g.kinds.len(), model) {
-                        Some(Failure::Timeout) => ("Timeout".into(), "-".into(), "-".into()),
-                        Some(Failure::Oom) => ("OOM".into(), "-".into(), "-".into()),
+                        Some(Failure::Timeout) => {
+                            ("Timeout".into(), "-".into(), "-".into(), "-".into())
+                        }
+                        Some(Failure::Oom) => ("OOM".into(), "-".into(), "-".into(), "-".into()),
                         None => {
                             let r = run_system(ctx, &ds, &cluster, system, model);
                             let scale200 = 200.0 / ctx.epochs as f64;
@@ -136,11 +138,13 @@ pub fn tab7(ctx: Ctx, full: bool) {
                                 ("system", s(system.name())),
                                 ("epoch_s", num(r.total_time() * scale200)),
                                 ("comm_s", num(r.total_comm() * scale200)),
+                                ("wall_s", num(r.total_wall() * scale200)),
                                 ("acc", num(r.best_val_acc() as f64)),
                             ]));
                             (
                                 fmt_secs(r.total_time() * scale200),
                                 fmt_secs(r.total_comm() * scale200),
+                                fmt_secs(r.total_wall() * scale200),
                                 format!("{:.2}", r.best_val_acc() * 100.0),
                             )
                         }
@@ -153,6 +157,7 @@ pub fn tab7(ctx: Ctx, full: bool) {
                         row.0,
                         row.1,
                         row.2,
+                        row.3,
                     ]);
                 }
             }
@@ -167,8 +172,8 @@ pub fn tab8(ctx: Ctx) {
     let datasets = ["Cl", "Fr", "Cs", "Rt", "Yp", "As", "Os"];
     let cluster = Cluster::from_group(GpuGroup::by_name("x4").unwrap(), ctx.seed);
     let mut table = Table::new(
-        "Table 8 — ablation (x4 = 2×RTX3090 + 2×A40, simulated seconds scaled to 200 epochs)",
-        &["model", "arm", "dataset", "Epoch", "Comm", "Acc"],
+        "Table 8 — ablation (x4 = 2×RTX3090 + 2×A40, simulated seconds scaled to 200 epochs; Wall = measured)",
+        &["model", "arm", "dataset", "Epoch", "Comm", "Wall", "Acc"],
     );
     for model in [ModelKind::Gcn, ModelKind::Sage] {
         for arm in ABLATIONS {
@@ -185,6 +190,7 @@ pub fn tab8(ctx: Ctx) {
                     ds_label.to_string(),
                     fmt_secs(r.total_time() * scale200),
                     fmt_secs(r.total_comm() * scale200),
+                    fmt_secs(r.total_wall() * scale200),
                     format!("{:.2}", r.best_val_acc() * 100.0),
                 ]);
                 bench::record_json(obj(vec![
@@ -194,6 +200,7 @@ pub fn tab8(ctx: Ctx) {
                     ("dataset", s(ds_label)),
                     ("epoch_s", num(r.total_time() * scale200)),
                     ("comm_s", num(r.total_comm() * scale200)),
+                    ("wall_s", num(r.total_wall() * scale200)),
                     ("acc", num(r.best_val_acc() as f64)),
                 ]));
             }
@@ -206,8 +213,8 @@ pub fn tab8(ctx: Ctx) {
 /// Table 9: distributed extension (1M-4D / 2M-2D / 2M-4D on As/Os twins).
 pub fn tab9(ctx: Ctx) {
     let mut table = Table::new(
-        "Table 9 — distributed CaPGNN (simulated epochs/second)",
-        &["dataset", "cluster", "workers", "model", "Epoch/s", "Acc"],
+        "Table 9 — distributed CaPGNN (simulated and measured epochs/second)",
+        &["dataset", "cluster", "workers", "model", "Epoch/s", "Wall-Epoch/s", "Acc"],
     );
     for ds_label in ["As", "Os"] {
         let ds = spec_by_name(ds_label).unwrap().build_scaled(ctx.seed, ctx.scale * 0.5);
@@ -224,6 +231,7 @@ pub fn tab9(ctx: Ctx) {
                     r.workers.to_string(),
                     model.name().to_string(),
                     format!("{:.2}", r.epochs_per_sec),
+                    format!("{:.2}", r.wall_epochs_per_sec),
                     format!("{:.2}", r.report.best_val_acc() * 100.0),
                 ]);
                 bench::record_json(obj(vec![
@@ -232,6 +240,7 @@ pub fn tab9(ctx: Ctx) {
                     ("cluster", s(cluster_name)),
                     ("model", s(model.name())),
                     ("epochs_per_sec", num(r.epochs_per_sec)),
+                    ("wall_epochs_per_sec", num(r.wall_epochs_per_sec)),
                     ("acc", num(r.report.best_val_acc() as f64)),
                 ]));
             }

@@ -56,7 +56,13 @@ COMMANDS:
              [--policy jaca|fifo|lru --method metis|random|fennel
               --no-pipe --no-cache --no-rapa --refresh 8
               --local-cap N --global-cap N --seed 42
-              --early-stop PATIENCE]
+              --early-stop PATIENCE
+              --threads auto|1   'auto' = one OS thread per worker
+                                 (bit-identical numerics to sequential);
+                                 1 = sequential. A count N>1 behaves like
+                                 'auto' — it is a mode toggle, not a pool
+                                 size; the executor always spawns exactly
+                                 one thread per worker]
   partition  --dataset rt --group x4 --method metis [--rapa] [--hops 1]
   device     print the simulated GPU testbed (paper Table 1)
   expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
@@ -81,7 +87,7 @@ fn cmd_train(args: &Args) -> i32 {
         }
     };
     println!(
-        "training {} on {} ({} vertices, {} edges) with {} GPUs [{}], backend={}",
+        "training {} on {} ({} vertices, {} edges) with {} GPUs [{}], backend={}, exec={}",
         spec.train.model.name(),
         spec.dataset.name,
         spec.dataset.graph.n(),
@@ -89,6 +95,7 @@ fn cmd_train(args: &Args) -> i32 {
         spec.gpus.len(),
         spec.system.name(),
         backend.name(),
+        spec.train.exec.name(),
     );
     // Staged session: build once, then run epoch-by-epoch (with optional
     // early stopping on the validation curve).
@@ -136,6 +143,14 @@ fn cmd_train(args: &Args) -> i32 {
                 r.bytes_moved,
                 r.bytes_saved,
                 r.wallclock
+            );
+            println!(
+                "measured: {:.3}s/epoch wall ({:.3}s total: plan {:.3}s + execute {:.3}s + reduce {:.3}s)",
+                r.mean_epoch_wall(),
+                r.total_wall(),
+                r.wall_stages.plan,
+                r.wall_stages.execute,
+                r.wall_stages.reduce,
             );
             0
         }

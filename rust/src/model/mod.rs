@@ -59,6 +59,10 @@ pub fn layer_stack(f_dim: usize, hidden: usize, classes: usize, layers: usize) -
     dims
 }
 
+/// Gradient accumulator mirroring [`GnnModel::weights`] shapes:
+/// `grads[layer][mat]` is a row-major d_in×d_out matrix.
+pub type Grads = Vec<Vec<Vec<f32>>>;
+
 /// Model parameters.
 #[derive(Clone, Debug)]
 pub struct GnnModel {
@@ -113,11 +117,29 @@ impl GnnModel {
     }
 
     /// Zero-shaped gradient accumulator.
-    pub fn zero_grads(&self) -> Vec<Vec<Vec<f32>>> {
+    pub fn zero_grads(&self) -> Grads {
         self.weights
             .iter()
             .map(|l| l.iter().map(|m| vec![0.0; m.len()]).collect())
             .collect()
+    }
+
+    /// `acc += part`, elementwise in (layer, matrix, element) order — the
+    /// deterministic gradient all-reduce merge. Both executors fold
+    /// per-worker partials with this in worker-index order, so the f32
+    /// addition sequence (and therefore the weights) is bit-identical
+    /// whether workers ran serially or on threads.
+    pub fn merge_grads(acc: &mut Grads, part: &Grads) {
+        debug_assert_eq!(acc.len(), part.len());
+        for (la, lp) in acc.iter_mut().zip(part) {
+            debug_assert_eq!(la.len(), lp.len());
+            for (ma, mp) in la.iter_mut().zip(lp) {
+                debug_assert_eq!(ma.len(), mp.len());
+                for (a, b) in ma.iter_mut().zip(mp) {
+                    *a += b;
+                }
+            }
+        }
     }
 }
 
@@ -164,6 +186,21 @@ mod tests {
         assert_eq!(m.weights[0].len(), 2);
         assert_eq!(m.param_count(), 2 * (8 * 8) + 2 * (8 * 4));
         assert_eq!(m.grad_bytes(), (m.param_count() * 4) as u64);
+    }
+
+    #[test]
+    fn merge_grads_sums_in_place() {
+        let mut rng = Rng::new(4);
+        let m = GnnModel::new(ModelKind::Sage, layer_stack(4, 4, 2, 2), &mut rng);
+        let mut acc = m.zero_grads();
+        let mut part = m.zero_grads();
+        part[0][1][3] = 2.0;
+        part[1][0][0] = -1.0;
+        GnnModel::merge_grads(&mut acc, &part);
+        GnnModel::merge_grads(&mut acc, &part);
+        assert_eq!(acc[0][1][3], 4.0);
+        assert_eq!(acc[1][0][0], -2.0);
+        assert_eq!(acc[0][0][0], 0.0);
     }
 
     #[test]

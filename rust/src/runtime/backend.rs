@@ -48,6 +48,15 @@ pub trait Backend {
     fn ce_grad(&mut self, n: usize, c: usize,
                logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad>;
 
+    /// An independent instance for one worker thread
+    /// (`ExecMode::Threaded`). Forked instances must produce bit-identical
+    /// numerics to `self`. `None` (the default) marks a backend that
+    /// cannot be replicated — the threaded executor refuses to start
+    /// rather than share one instance across threads.
+    fn fork(&self) -> Option<Box<dyn Backend + Send>> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 

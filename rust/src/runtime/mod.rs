@@ -3,6 +3,14 @@
 
 pub mod artifacts;
 pub mod backend;
+// The real PJRT client needs the `xla` crate (not in the offline
+// registry); the default build swaps in a stub that fails at
+// construction. Enabling `xla-runtime` also requires adding an `xla`
+// dependency to Cargo.toml — see the feature's comment there.
+#[cfg(feature = "xla-runtime")]
+pub mod client;
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod native;
 

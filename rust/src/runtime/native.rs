@@ -243,6 +243,12 @@ impl Backend for NativeBackend {
         })
     }
 
+    fn fork(&self) -> Option<Box<dyn Backend + Send>> {
+        // Stateless w.r.t. outputs (scratch buffers only) — a fresh
+        // instance is bit-identical by construction.
+        Some(Box::new(NativeBackend::new()))
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }

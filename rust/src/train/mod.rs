@@ -16,4 +16,4 @@ pub use session::{
     ConvergenceLog, EarlyStopping, EpochObserver, EpochStats, EvalStats, PeriodicRefresh,
     Session, Signal,
 };
-pub use trainer::{train, CapacityMode, TrainConfig};
+pub use trainer::{train, CapacityMode, ExecMode, TrainConfig};

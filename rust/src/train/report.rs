@@ -1,7 +1,7 @@
 //! Training outcome: everything the paper's tables/figures report.
 
 use crate::cache::TwoLevelStats;
-use crate::device::simclock::StageTimes;
+use crate::device::simclock::{StageTimes, WallStages};
 
 /// Per-run record.
 #[derive(Clone, Debug, Default)]
@@ -26,6 +26,12 @@ pub struct TrainReport {
     pub bytes_saved: u64,
     /// Final cache statistics.
     pub cache: TwoLevelStats,
+    /// *Measured* wall-clock per epoch (real seconds — what the threaded
+    /// executor actually speeds up, as opposed to the simulated
+    /// `epoch_times` the paper's tables report).
+    pub epoch_wall: Vec<f64>,
+    /// Measured wall-clock phase breakdown, summed over epochs.
+    pub wall_stages: WallStages,
     /// Real wallclock of the run (perf accounting, not a paper metric).
     pub wallclock: f64,
     /// Halo replicas pruned by RAPA (0 when RAPA is off).
@@ -55,6 +61,20 @@ impl TrainReport {
             0.0
         } else {
             self.total_time() / self.epoch_times.len() as f64
+        }
+    }
+
+    /// Total *measured* epoch wall-clock (Σ epochs, real seconds).
+    pub fn total_wall(&self) -> f64 {
+        self.epoch_wall.iter().sum()
+    }
+
+    /// Mean measured epoch wall-clock.
+    pub fn mean_epoch_wall(&self) -> f64 {
+        if self.epoch_wall.is_empty() {
+            0.0
+        } else {
+            self.total_wall() / self.epoch_wall.len() as f64
         }
     }
 
@@ -93,5 +113,17 @@ mod tests {
         assert_eq!(r.mean_epoch(), 0.0);
         assert_eq!(r.overhead_ratio(), 0.0);
         assert_eq!(r.best_val_acc(), 0.0);
+        assert_eq!(r.total_wall(), 0.0);
+        assert_eq!(r.mean_epoch_wall(), 0.0);
+    }
+
+    #[test]
+    fn measured_wall_totals() {
+        let r = TrainReport {
+            epoch_wall: vec![0.25, 0.75],
+            ..Default::default()
+        };
+        assert_eq!(r.total_wall(), 1.0);
+        assert_eq!(r.mean_epoch_wall(), 0.5);
     }
 }

@@ -14,22 +14,23 @@
 //! capabilities (substitution S1); numerics are real (PJRT or native).
 
 use crate::cache::{cal_capacity, key_of, CapacityInput, TwoLevelCache, TwoLevelStats};
-use crate::comm::exchange::{ExchangeEngine, ExchangeParams};
+use crate::comm::exchange::{ExchangeEngine, ExchangeParams, FillDirective, SendDirective};
 use crate::comm::pipeline;
+use crate::comm::queues::{HaloInbox, RowMsg};
 use crate::device::profile::Gpu;
-use crate::device::simclock::StageTimes;
+use crate::device::simclock::{StageTimes, WallStages};
 use crate::dist::Cluster;
 use crate::graph::Dataset;
-use crate::model::{layer_stack, GnnModel, LayerDims, ModelKind};
-use crate::partition::halo::{build_plan, SubgraphPlan};
+use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind};
+use crate::partition::halo::{build_plan, Subgraph, SubgraphPlan};
 use crate::partition::rapa;
 use crate::runtime::Backend;
 use crate::train::report::TrainReport;
-use crate::train::trainer::{CapacityMode, TrainConfig};
+use crate::train::trainer::{CapacityMode, ExecMode, TrainConfig};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::time::Instant;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 /// Per-worker training state (one simulated GPU).
 struct Worker {
@@ -74,6 +75,9 @@ pub struct EpochStats {
     pub stages: StageTimes,
     /// Cumulative cache counters after this epoch.
     pub cache: TwoLevelStats,
+    /// *Measured* wall-clock breakdown of this epoch (real seconds; the
+    /// `time`/`comm_time` fields above are simulated/modeled).
+    pub wall: WallStages,
 }
 
 /// Accuracy snapshot from the current logits (no weight update).
@@ -186,13 +190,9 @@ pub struct Session<'a> {
     workers: Vec<Worker>,
     cache: TwoLevelCache,
     engine: ExchangeEngine<'a>,
-    /// Global vertices anyone needs at exchange time.
-    halo_union: Vec<u32>,
-    /// Global vertex -> (worker, local row) of its owner.
-    owner_of: HashMap<u32, (usize, usize)>,
-    /// Scratch: published halo rows for the current layer.
-    published: HashMap<u32, Vec<f32>>,
-    qrng: Rng,
+    /// Per-worker backend forks for `ExecMode::Threaded` (lazily built on
+    /// the first threaded epoch).
+    worker_backends: Vec<Box<dyn Backend + Send>>,
     report: TrainReport,
     epoch: u64,
     force_refresh: bool,
@@ -391,24 +391,6 @@ impl<'a> Session<'a> {
             worker_stages: vec![StageTimes::default(); p],
             ..Default::default()
         };
-        let qrng = rng.fork(0xC0FFEE);
-
-        let halo_union: Vec<u32> = {
-            let mut set: std::collections::BTreeSet<u32> = Default::default();
-            for sg in &plan.parts {
-                set.extend(sg.halo_ids().iter().copied());
-            }
-            set.into_iter().collect()
-        };
-        let owner_of: HashMap<u32, (usize, usize)> = {
-            let mut m = HashMap::new();
-            for (w, sg) in plan.parts.iter().enumerate() {
-                for (i, &v) in sg.global_ids[..sg.n_inner].iter().enumerate() {
-                    m.insert(v, (w, i));
-                }
-            }
-            m
-        };
 
         Ok(Session {
             cfg: cfg.clone(),
@@ -419,10 +401,7 @@ impl<'a> Session<'a> {
             workers,
             cache,
             engine,
-            halo_union,
-            owner_of,
-            published: HashMap::new(),
-            qrng,
+            worker_backends: Vec::new(),
             report,
             epoch: 0,
             force_refresh: false,
@@ -445,7 +424,25 @@ impl<'a> Session<'a> {
     }
 
     /// Stage 3: run one full-batch epoch and report what it did.
+    ///
+    /// An epoch is planned, executed and reduced:
+    ///
+    /// 1. **Plan** — every cache decision for every exchange round runs
+    ///    centrally, in worker-index order, producing per-worker staged
+    ///    (cached) rows and owner→requester [`SendDirective`]s. Simulated
+    ///    stage times and wire bytes are charged here.
+    /// 2. **Execute** — forward + backward per worker: serially
+    ///    ([`ExecMode::Sequential`]) or one OS thread per worker
+    ///    ([`ExecMode::Threaded`]), where each worker computes layer `l`
+    ///    while halo rows for later rounds stream into its inbox.
+    /// 3. **Reduce** — losses/gradients merge in worker-index order, the
+    ///    optimizer steps, and pending cache fills receive their content.
+    ///
+    /// Both executors run the same plan and the same per-worker op
+    /// sequence, so their numerics (and byte/time accounting) are
+    /// bit-identical.
     pub fn run_epoch(&mut self) -> Result<EpochStats> {
+        let t_plan = Instant::now();
         let Self {
             cfg,
             backend,
@@ -455,10 +452,7 @@ impl<'a> Session<'a> {
             workers,
             cache,
             engine,
-            halo_union,
-            owner_of,
-            published,
-            qrng,
+            worker_backends,
             report,
             epoch,
             force_refresh,
@@ -481,204 +475,183 @@ impl<'a> Session<'a> {
             || *force_refresh;
         *force_refresh = false;
 
-        // ---- Forward ----------------------------------------------------
-        for l in 0..=cfg.layers {
-            // Exchange halo rows of representation `l` (0 = input feats)
-            // before computing layer l (which aggregates them).
-            if l < cfg.layers {
-                let d = if l == 0 { *f_dim } else { dims[l - 1].d_out };
-                let is_static = l == 0; // input features never go stale
-                let skip =
-                    cfg.skip_exchange && epoch_now > 0 && !refresh_epoch && !is_static;
-                if skip {
-                    // Reuse historical halo rows (charged only bookkeeping).
-                    for (wi, sg) in plan.parts.iter().enumerate() {
-                        let w = &mut workers[wi];
-                        for hi in 0..sg.n_halo() {
-                            let dst = (sg.n_inner + hi) * d;
-                            let src = hi * d;
-                            let hist = &w.halo_hist[l.max(1) - 1];
-                            let row = &hist[src..src + d];
-                            w.h[l][dst..dst + d].copy_from_slice(row);
-                        }
-                    }
-                } else {
-                    // Publish fresh rows from owners.
-                    published.clear();
-                    for &v in halo_union.iter() {
-                        let (ow, row_idx) = owner_of[&v];
-                        let w = &workers[ow];
-                        let src = row_idx * d;
-                        published.insert(v, w.h[l][src..src + d].to_vec());
-                    }
-                    let mut params = ExchangeParams::new(l as u32, epoch_now, d);
-                    params.use_cache = cfg.use_cache;
-                    params.refresh = refresh_epoch && !is_static;
-                    params.comm_multiplier = cfg.comm_multiplier;
-                    if let Some(b) = cfg.quantized_row_bytes {
-                        params.bytes_per_row = b;
-                    }
-                    let bits = cfg.quantize_bits;
-                    let mut sunk: Vec<(usize, usize, Vec<f32>)> = Vec::new();
-                    let mut full_rows = 0u64;
-                    let rep = engine.exchange(
-                        plan,
-                        cache,
-                        params,
-                        |v| {
-                            let row = published[&v].clone();
-                            match bits {
-                                Some(b) => {
-                                    let (q, quantized) = quantize(&row, b, qrng);
-                                    if !quantized {
-                                        full_rows += 1;
-                                    }
-                                    q
-                                }
-                                None => row,
-                            }
-                        },
-                        |w, hi, row| sunk.push((w, hi, row.to_vec())),
-                    );
-                    for (wi, hi, row) in sunk {
-                        let sg = &plan.parts[wi];
-                        let w = &mut workers[wi];
-                        let dst = (sg.n_inner + hi) * d;
-                        w.h[l][dst..dst + d].copy_from_slice(&row);
-                        if l > 0 {
-                            w.halo_hist[l - 1][hi * d..hi * d + d].copy_from_slice(&row);
-                        }
-                    }
-                    for (w, st) in workers.iter_mut().zip(&rep.stages) {
-                        w.stages.add(st);
-                    }
-                    report.bytes_moved += rep.bytes_moved;
-                    report.bytes_saved += rep.bytes_saved;
-                    // Rows that could not be quantized traveled at full f32
-                    // precision — charge the difference so byte accounting
-                    // matches the wire.
-                    let full = (d * 4) as u64;
-                    if full_rows > 0 && full > params.bytes_per_row {
-                        report.bytes_moved += full_rows * (full - params.bytes_per_row);
-                    }
+        // ---- Plan -------------------------------------------------------
+        // Decisions depend only on cache metadata and keys, never on row
+        // contents, so all rounds can be planned before any layer
+        // computes — that is what frees the executors to move contents
+        // serially or concurrently without touching the cache. The cost
+        // is a per-epoch snapshot of the cache-hit rows (staged clones
+        // for every round at once); at this crate's scales that peak is
+        // small, and both executors sharing one delivery structure is
+        // what keeps them bit-identical.
+        let mut meta: Vec<RoundMeta> = Vec::with_capacity(cfg.layers);
+        let mut staged_by_worker: Vec<Vec<Vec<(usize, Vec<f32>)>>> =
+            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+        let mut sends_by_worker: Vec<Vec<Vec<SendDirective>>> =
+            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+        let mut expect_by_worker: Vec<Vec<usize>> =
+            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+        let mut fills: Vec<(usize, FillDirective)> = Vec::new();
+        let mut comm_stages = vec![StageTimes::default(); p];
+        for l in 0..cfg.layers {
+            let d = if l == 0 { *f_dim } else { dims[l - 1].d_out };
+            let is_static = l == 0; // input features never go stale
+            let skip = cfg.skip_exchange && epoch_now > 0 && !refresh_epoch && !is_static;
+            if skip {
+                // Reuse historical halo rows (charged only bookkeeping).
+                meta.push(RoundMeta { dim: d, skip: true });
+                for w in 0..p {
+                    staged_by_worker[w].push(Vec::new());
+                    sends_by_worker[w].push(Vec::new());
+                    expect_by_worker[w].push(0);
                 }
+                continue;
             }
+            let mut params = ExchangeParams::new(l as u32, epoch_now, d);
+            params.use_cache = cfg.use_cache;
+            params.refresh = refresh_epoch && !is_static;
+            params.comm_multiplier = cfg.comm_multiplier;
+            if let Some(b) = cfg.quantized_row_bytes {
+                params.bytes_per_row = b;
+            }
+            let mut rp = engine.plan_round(plan, cache, params);
+            for (cs, st) in comm_stages.iter_mut().zip(&rp.stages) {
+                cs.add(st);
+            }
+            report.bytes_moved += rp.bytes_moved;
+            report.bytes_saved += rp.bytes_saved;
+            fills.extend(rp.fills.drain(..).map(|f| (l, f)));
+            for w in 0..p {
+                staged_by_worker[w].push(std::mem::take(&mut rp.staged[w]));
+                sends_by_worker[w].push(std::mem::take(&mut rp.sends[w]));
+                expect_by_worker[w].push(rp.expect[w]);
+            }
+            meta.push(RoundMeta { dim: d, skip: false });
+        }
+        for (w, st) in workers.iter_mut().zip(&comm_stages) {
+            w.stages.add(st);
+        }
+        let weights: Vec<f32> =
+            workers.iter().map(|w| w.train_count / *total_train).collect();
+        let wall_plan = t_plan.elapsed().as_secs_f64();
 
-            if l == cfg.layers {
-                break;
+        // ---- Execute: forward + backward --------------------------------
+        let t_exec = Instant::now();
+        let kind = cfg.model;
+        let layers = cfg.layers;
+        let seed = cfg.seed;
+        let bits = cfg.quantize_bits;
+        let outs: Vec<WorkerOut> = match cfg.exec {
+            ExecMode::Sequential => run_epoch_sequential(
+                workers,
+                backend,
+                &plan.parts,
+                engine.gpus,
+                model,
+                dims,
+                &meta,
+                &staged_by_worker,
+                &sends_by_worker,
+                kind,
+                layers,
+                seed,
+                epoch_now,
+                bits,
+                &weights,
+            )?,
+            ExecMode::Threaded => {
+                if worker_backends.len() != p {
+                    let mut forks = Vec::with_capacity(p);
+                    for _ in 0..p {
+                        forks.push(backend.fork().ok_or_else(|| {
+                            anyhow!(
+                                "backend '{}' cannot run ExecMode::Threaded (no per-worker fork); use ExecMode::Sequential",
+                                backend.name()
+                            )
+                        })?);
+                    }
+                    *worker_backends = forks;
+                }
+                let (txs, rxs): (Vec<_>, Vec<_>) =
+                    (0..p).map(|_| mpsc::channel::<RowMsg>()).unzip();
+                let model_ref: &GnnModel = model;
+                let dims_ref: &[LayerDims] = dims;
+                let meta_ref: &[RoundMeta] = &meta;
+                let parts_ref: &[Subgraph] = &plan.parts;
+                let gpus_ref: &[Gpu] = engine.gpus;
+                let results: Vec<Result<WorkerOut>> = std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(p);
+                    let mut rx_iter = rxs.into_iter();
+                    let mut staged_iter = staged_by_worker.into_iter();
+                    let mut sends_iter = sends_by_worker.into_iter();
+                    let mut expect_iter = expect_by_worker.into_iter();
+                    let mut wb_iter = worker_backends.iter_mut();
+                    for (wi, w) in workers.iter_mut().enumerate() {
+                        let task = WorkerTask {
+                            sg: &parts_ref[wi],
+                            gpu: &gpus_ref[wi],
+                            model: model_ref,
+                            dims: dims_ref,
+                            meta: meta_ref,
+                            kind,
+                            layers,
+                            seed,
+                            epoch: epoch_now,
+                            bits,
+                            weight: weights[wi],
+                            staged: staged_iter.next().unwrap(),
+                            sends: sends_iter.next().unwrap(),
+                            expect: expect_iter.next().unwrap(),
+                            txs: txs.clone(),
+                            rx: rx_iter.next().unwrap(),
+                        };
+                        let wb = wb_iter.next().unwrap();
+                        handles
+                            .push(scope.spawn(move || worker_epoch_threaded(task, w, &mut **wb)));
+                    }
+                    drop(txs);
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("worker thread panicked"))
+                        .collect()
+                });
+                let mut outs = Vec::with_capacity(p);
+                for r in results {
+                    outs.push(r?);
+                }
+                outs
             }
-            // Compute layer l on every worker.
-            let ld = dims[l];
-            for (wi, w) in workers.iter_mut().enumerate() {
-                let n_pad = w.n_pad;
-                let out = match cfg.model {
-                    ModelKind::Gcn => backend.gcn_fwd(
-                        n_pad,
-                        ld.d_in,
-                        ld.d_out,
-                        ld.relu,
-                        &w.a_hat,
-                        &w.h[l],
-                        &model.weights[l][0],
-                    )?,
-                    ModelKind::Sage => backend.sage_fwd(
-                        n_pad,
-                        ld.d_in,
-                        ld.d_out,
-                        ld.relu,
-                        &w.a_hat,
-                        &w.h[l],
-                        &model.weights[l][0],
-                        &model.weights[l][1],
-                    )?,
-                };
-                w.h[l + 1] = out;
-                charge_layer(
-                    w,
-                    &engine.gpus[wi],
-                    plan.parts[wi].n_inner,
-                    ld.d_in,
-                    ld.d_out,
-                    false,
-                    cfg.model,
-                );
+        };
+        let wall_execute = t_exec.elapsed().as_secs_f64();
+
+        // ---- Reduce: deterministic merge in worker-index order ----------
+        let t_reduce = Instant::now();
+        // Rows that could not be quantized traveled at full f32 precision —
+        // charge the difference so byte accounting matches the wire.
+        let mut full_rows_by_round = vec![0u64; meta.len()];
+        for out in &outs {
+            for (ri, n) in out.full_rows.iter().enumerate() {
+                full_rows_by_round[ri] += n;
+            }
+        }
+        for (ri, m) in meta.iter().enumerate() {
+            let full = (m.dim * 4) as u64;
+            let bpr = cfg.quantized_row_bytes.unwrap_or(full);
+            let fr = full_rows_by_round[ri];
+            if fr > 0 && full > bpr {
+                report.bytes_moved += fr * (full - bpr);
             }
         }
 
-        // ---- Loss + backward --------------------------------------------
         let mut grads = model.zero_grads();
         let mut loss_sum = 0.0f32;
         let mut val_correct = 0.0f32;
         let mut val_total = 0.0f32;
-        for (wi, w) in workers.iter_mut().enumerate() {
-            let n_pad = w.n_pad;
-            let lg = backend.ce_grad(n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.train_mask)?;
-            let weight = w.train_count / *total_train;
-            loss_sum += lg.loss * weight;
-            // Validation accuracy from the same logits.
-            let vm: f32 = w.val_mask.iter().sum();
-            if vm > 0.0 {
-                let vg = backend.ce_grad(n_pad, w.c_pad, &w.h[cfg.layers], &w.y, &w.val_mask)?;
-                val_correct += vg.correct;
-                val_total += vm;
-            }
-            // Backward chain.
-            let mut dh = lg.dz;
-            // Scale to global normalization.
-            for v in dh.iter_mut() {
-                *v *= weight;
-            }
-            for l in (0..cfg.layers).rev() {
-                let ld = dims[l];
-                match cfg.model {
-                    ModelKind::Gcn => {
-                        let (gw, dh_prev) = backend.gcn_bwd(
-                            n_pad,
-                            ld.d_in,
-                            ld.d_out,
-                            ld.relu,
-                            &w.a_hat,
-                            &w.h[l],
-                            &model.weights[l][0],
-                            &dh,
-                        )?;
-                        axpy(&mut grads[l][0], &gw);
-                        dh = dh_prev;
-                    }
-                    ModelKind::Sage => {
-                        let (gws, gwn, dh_prev) = backend.sage_bwd(
-                            n_pad,
-                            ld.d_in,
-                            ld.d_out,
-                            ld.relu,
-                            &w.a_hat,
-                            &w.h[l],
-                            &model.weights[l][0],
-                            &model.weights[l][1],
-                            &dh,
-                        )?;
-                        axpy(&mut grads[l][0], &gws);
-                        axpy(&mut grads[l][1], &gwn);
-                        dh = dh_prev;
-                    }
-                }
-                // Drop cross-partition halo gradients (S4).
-                let n_inner = plan.parts[wi].n_inner;
-                for r in n_inner..w.n_pad {
-                    for c in 0..ld.d_in {
-                        dh[r * ld.d_in + c] = 0.0;
-                    }
-                }
-                charge_layer(
-                    w,
-                    &engine.gpus[wi],
-                    plan.parts[wi].n_inner,
-                    ld.d_in,
-                    ld.d_out,
-                    true,
-                    cfg.model,
-                );
-            }
+        for out in &outs {
+            GnnModel::merge_grads(&mut grads, &out.grads);
+            loss_sum += out.loss;
+            val_correct += out.val_correct;
+            val_total += out.val_total;
         }
 
         // ---- Gradient all-reduce + step ---------------------------------
@@ -698,6 +671,31 @@ impl<'a> Session<'a> {
         }
         model.sgd_step(&grads, cfg.lr);
 
+        // ---- Complete deferred cache fills (content now exists) ---------
+        // The wire row is re-derived from the owner's activations; the
+        // keyed rng makes this bit-identical to what the executor
+        // delivered, which keeps WorkerOut free of row payloads. Fills
+        // only occur on cold/refresh epochs, so the recompute is off the
+        // steady-state path.
+        for (ri, f) in &fills {
+            let m = meta[*ri];
+            let (row, _) = fresh_row(
+                &workers[f.owner],
+                *ri,
+                m.dim,
+                f.src_row,
+                f.vertex,
+                bits,
+                seed,
+                epoch_now,
+            );
+            if f.refresh {
+                cache.refresh(f.key, &row, epoch_now);
+            } else {
+                cache.complete_fill(f.key, &row, epoch_now);
+            }
+        }
+
         // ---- Epoch accounting -------------------------------------------
         let stage_list: Vec<StageTimes> = workers.iter().map(|w| w.stages).collect();
         let (epoch_time, comm_visible) =
@@ -714,6 +712,13 @@ impl<'a> Session<'a> {
         }
         let mean = mean_stage.scale(1.0 / p as f64);
         report.stage_totals.add(&mean);
+        let wall = WallStages {
+            plan: wall_plan,
+            execute: wall_execute,
+            reduce: t_reduce.elapsed().as_secs_f64(),
+        };
+        report.epoch_wall.push(wall.total());
+        report.wall_stages.add(&wall);
         *epoch += 1;
 
         Ok(EpochStats {
@@ -726,6 +731,7 @@ impl<'a> Session<'a> {
             bytes_saved: report.bytes_saved - bytes_saved0,
             stages: mean,
             cache: cache.stats,
+            wall,
         })
     }
 
@@ -814,6 +820,425 @@ impl<'a> Session<'a> {
         self.report.wallclock = self.wall.elapsed().as_secs_f64();
         Ok(self.report)
     }
+}
+
+/// Per-round execution metadata shared by both executors.
+#[derive(Clone, Copy)]
+struct RoundMeta {
+    /// Feature width of this round's rows.
+    dim: usize,
+    /// Skip-exchange round: reuse historical halo rows, nothing moves.
+    skip: bool,
+}
+
+/// What one worker's forward/backward pass produced. Reduced by the
+/// coordinator in worker-index order, so the merged numbers are identical
+/// however the workers were scheduled.
+struct WorkerOut {
+    grads: Grads,
+    /// Loss already scaled by the worker's train-mass weight.
+    loss: f32,
+    val_correct: f32,
+    val_total: f32,
+    /// Per-round count of owned rows that could not be quantized (the
+    /// coordinator charges them at full precision).
+    full_rows: Vec<u64>,
+}
+
+/// Everything one threaded worker needs for an epoch: shared structure by
+/// reference (immutable while the scope runs), its own schedule and
+/// channel endpoints by value.
+struct WorkerTask<'a> {
+    sg: &'a Subgraph,
+    gpu: &'a Gpu,
+    model: &'a GnnModel,
+    dims: &'a [LayerDims],
+    meta: &'a [RoundMeta],
+    kind: ModelKind,
+    layers: usize,
+    seed: u64,
+    epoch: u64,
+    bits: Option<u8>,
+    weight: f32,
+    /// Cached rows per round: (halo idx, row), cloned at plan time.
+    staged: Vec<Vec<(usize, Vec<f32>)>>,
+    /// Rows this worker owns and must deliver, per round.
+    sends: Vec<Vec<SendDirective>>,
+    /// Fresh rows this worker receives, per round.
+    expect: Vec<usize>,
+    txs: Vec<mpsc::Sender<RowMsg>>,
+    rx: mpsc::Receiver<RowMsg>,
+}
+
+/// Sentinel round tag a failing worker broadcasts so peers blocked on
+/// `recv` fail fast instead of deadlocking on rows that will never come.
+const POISON_ROUND: usize = usize::MAX;
+
+/// Write one halo row into `h[l]` (and the history buffer for l>0).
+fn place_row(w: &mut Worker, n_inner: usize, l: usize, d: usize, hi: usize, row: &[f32]) {
+    let dst = (n_inner + hi) * d;
+    w.h[l][dst..dst + d].copy_from_slice(row);
+    if l > 0 {
+        w.halo_hist[l - 1][hi * d..hi * d + d].copy_from_slice(row);
+    }
+}
+
+/// Skip-exchange round: reuse historical halo rows.
+fn reuse_hist(w: &mut Worker, n_inner: usize, n_halo: usize, l: usize, d: usize) {
+    for hi in 0..n_halo {
+        let dst = (n_inner + hi) * d;
+        let src = hi * d;
+        let hist = &w.halo_hist[l.max(1) - 1];
+        let row = &hist[src..src + d];
+        w.h[l][dst..dst + d].copy_from_slice(row);
+    }
+}
+
+/// Deterministic per-row quantization stream, keyed by (seed, epoch,
+/// layer, vertex): the noise a row receives depends neither on which
+/// worker fetched it first nor on thread interleaving — the keystone of
+/// the sequential/threaded bit-identity guarantee under AdaQP.
+fn row_rng(seed: u64, epoch: u64, layer: usize, vertex: u32) -> Rng {
+    let tag = ((layer as u64) << 32) | vertex as u64;
+    Rng::new(
+        seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ tag.wrapping_mul(0xA24B_AED4_963E_E407),
+    )
+}
+
+/// Read (and optionally quantize) the authoritative wire row of `vertex`
+/// from its owner's representation `l`. Returns the row and whether
+/// quantization applied.
+fn fresh_row(
+    owner: &Worker,
+    l: usize,
+    d: usize,
+    src_row: usize,
+    vertex: u32,
+    bits: Option<u8>,
+    seed: u64,
+    epoch: u64,
+) -> (Vec<f32>, bool) {
+    let src = src_row * d;
+    let row = &owner.h[l][src..src + d];
+    match bits {
+        Some(b) => {
+            let mut rng = row_rng(seed, epoch, l, vertex);
+            quantize(row, b, &mut rng)
+        }
+        None => (row.to_vec(), true),
+    }
+}
+
+/// Forward one layer on one worker and charge its simulated compute time.
+fn compute_layer(
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+    model: &GnnModel,
+    dims: &[LayerDims],
+    l: usize,
+    kind: ModelKind,
+    gpu: &Gpu,
+    n_inner: usize,
+) -> Result<()> {
+    let ld = dims[l];
+    let n_pad = w.n_pad;
+    let out = match kind {
+        ModelKind::Gcn => backend.gcn_fwd(
+            n_pad,
+            ld.d_in,
+            ld.d_out,
+            ld.relu,
+            &w.a_hat,
+            &w.h[l],
+            &model.weights[l][0],
+        )?,
+        ModelKind::Sage => backend.sage_fwd(
+            n_pad,
+            ld.d_in,
+            ld.d_out,
+            ld.relu,
+            &w.a_hat,
+            &w.h[l],
+            &model.weights[l][0],
+            &model.weights[l][1],
+        )?,
+    };
+    w.h[l + 1] = out;
+    charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, false, kind);
+    Ok(())
+}
+
+/// Loss + full backward chain for one worker. Returns its (weighted)
+/// gradient contribution, weighted loss and validation counts — the same
+/// op sequence whether it runs on the coordinator or a worker thread.
+fn loss_and_backward(
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+    model: &GnnModel,
+    dims: &[LayerDims],
+    layers: usize,
+    kind: ModelKind,
+    gpu: &Gpu,
+    n_inner: usize,
+    weight: f32,
+) -> Result<(Grads, f32, f32, f32)> {
+    let n_pad = w.n_pad;
+    let lg = backend.ce_grad(n_pad, w.c_pad, &w.h[layers], &w.y, &w.train_mask)?;
+    let loss = lg.loss * weight;
+    // Validation accuracy from the same logits.
+    let mut val_correct = 0.0f32;
+    let mut val_total = 0.0f32;
+    let vm: f32 = w.val_mask.iter().sum();
+    if vm > 0.0 {
+        let vg = backend.ce_grad(n_pad, w.c_pad, &w.h[layers], &w.y, &w.val_mask)?;
+        val_correct = vg.correct;
+        val_total = vm;
+    }
+    // Backward chain.
+    let mut grads = model.zero_grads();
+    let mut dh = lg.dz;
+    // Scale to global normalization.
+    for v in dh.iter_mut() {
+        *v *= weight;
+    }
+    for l in (0..layers).rev() {
+        let ld = dims[l];
+        match kind {
+            ModelKind::Gcn => {
+                let (gw, dh_prev) = backend.gcn_bwd(
+                    n_pad,
+                    ld.d_in,
+                    ld.d_out,
+                    ld.relu,
+                    &w.a_hat,
+                    &w.h[l],
+                    &model.weights[l][0],
+                    &dh,
+                )?;
+                axpy(&mut grads[l][0], &gw);
+                dh = dh_prev;
+            }
+            ModelKind::Sage => {
+                let (gws, gwn, dh_prev) = backend.sage_bwd(
+                    n_pad,
+                    ld.d_in,
+                    ld.d_out,
+                    ld.relu,
+                    &w.a_hat,
+                    &w.h[l],
+                    &model.weights[l][0],
+                    &model.weights[l][1],
+                    &dh,
+                )?;
+                axpy(&mut grads[l][0], &gws);
+                axpy(&mut grads[l][1], &gwn);
+                dh = dh_prev;
+            }
+        }
+        // Drop cross-partition halo gradients (S4).
+        for r in n_inner..w.n_pad {
+            for c in 0..ld.d_in {
+                dh[r * ld.d_in + c] = 0.0;
+            }
+        }
+        charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, true, kind);
+    }
+    Ok((grads, loss, val_correct, val_total))
+}
+
+/// The sequential executor: one thread walks rounds and workers in index
+/// order, delivering staged rows and fresh owner rows in place.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch_sequential(
+    workers: &mut [Worker],
+    backend: &mut dyn Backend,
+    parts: &[Subgraph],
+    gpus: &[Gpu],
+    model: &GnnModel,
+    dims: &[LayerDims],
+    meta: &[RoundMeta],
+    staged: &[Vec<Vec<(usize, Vec<f32>)>>],
+    sends: &[Vec<Vec<SendDirective>>],
+    kind: ModelKind,
+    layers: usize,
+    seed: u64,
+    epoch: u64,
+    bits: Option<u8>,
+    weights: &[f32],
+) -> Result<Vec<WorkerOut>> {
+    let p = workers.len();
+    let mut full_rows: Vec<Vec<u64>> = vec![vec![0u64; meta.len()]; p];
+    for l in 0..=layers {
+        if l < meta.len() {
+            let m = meta[l];
+            if m.skip {
+                for (wi, sg) in parts.iter().enumerate() {
+                    reuse_hist(&mut workers[wi], sg.n_inner, sg.n_halo(), l, m.dim);
+                }
+            } else {
+                for wi in 0..p {
+                    let n_inner = parts[wi].n_inner;
+                    for (hi, row) in &staged[wi][l] {
+                        place_row(&mut workers[wi], n_inner, l, m.dim, *hi, row);
+                    }
+                }
+                for ow in 0..p {
+                    for dct in &sends[ow][l] {
+                        let (row, quantized) = fresh_row(
+                            &workers[ow],
+                            l,
+                            m.dim,
+                            dct.src_row,
+                            dct.vertex,
+                            bits,
+                            seed,
+                            epoch,
+                        );
+                        if !quantized {
+                            full_rows[ow][l] += 1;
+                        }
+                        for &(rw, rhi) in &dct.recipients {
+                            place_row(&mut workers[rw], parts[rw].n_inner, l, m.dim, rhi, &row);
+                        }
+                    }
+                }
+            }
+        }
+        if l == layers {
+            break;
+        }
+        for (wi, w) in workers.iter_mut().enumerate() {
+            compute_layer(w, backend, model, dims, l, kind, &gpus[wi], parts[wi].n_inner)?;
+        }
+    }
+    let mut outs = Vec::with_capacity(p);
+    for (wi, w) in workers.iter_mut().enumerate() {
+        let (grads, loss, val_correct, val_total) = loss_and_backward(
+            w,
+            backend,
+            model,
+            dims,
+            layers,
+            kind,
+            &gpus[wi],
+            parts[wi].n_inner,
+            weights[wi],
+        )?;
+        outs.push(WorkerOut {
+            grads,
+            loss,
+            val_correct,
+            val_total,
+            full_rows: std::mem::take(&mut full_rows[wi]),
+        });
+    }
+    Ok(outs)
+}
+
+/// Broadcasts [`POISON_ROUND`] to every peer unless disarmed — placed on
+/// the stack of each worker thread so an error *or a panic unwind*
+/// unblocks peers waiting in `recv` instead of letting them ride out the
+/// starvation timeout.
+struct PoisonOnDrop<'a> {
+    txs: &'a [mpsc::Sender<RowMsg>],
+    armed: bool,
+}
+
+impl Drop for PoisonOnDrop<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            for tx in self.txs {
+                let _ = tx.send(RowMsg { round: POISON_ROUND, hi: 0, row: Vec::new() });
+            }
+        }
+    }
+}
+
+/// One threaded worker's epoch: send own rows as soon as each layer is
+/// computed, bank early arrivals, compute, then run loss/backward locally.
+/// On error or panic, poison every peer so no one deadlocks waiting for
+/// rows that will never come.
+fn worker_epoch_threaded(
+    task: WorkerTask<'_>,
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+) -> Result<WorkerOut> {
+    let mut guard = PoisonOnDrop { txs: &task.txs, armed: true };
+    let out = worker_epoch_body(&task, w, backend);
+    if out.is_ok() {
+        guard.armed = false;
+    }
+    out
+}
+
+fn worker_epoch_body(
+    t: &WorkerTask<'_>,
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+) -> Result<WorkerOut> {
+    let rounds = t.meta.len();
+    let n_inner = t.sg.n_inner;
+    let n_halo = t.sg.n_halo();
+    let mut inbox = HaloInbox::new(rounds);
+    let mut full_rows = vec![0u64; rounds];
+    for l in 0..=t.layers {
+        if l < rounds {
+            let m = t.meta[l];
+            if m.skip {
+                reuse_hist(w, n_inner, n_halo, l, m.dim);
+            } else {
+                // Publish this round's owned rows the moment they exist —
+                // receivers still busy with earlier layers bank them, so
+                // the halo exchange overlaps their compute.
+                for dct in &t.sends[l] {
+                    let (row, quantized) = fresh_row(
+                        w, l, m.dim, dct.src_row, dct.vertex, t.bits, t.seed, t.epoch,
+                    );
+                    if !quantized {
+                        full_rows[l] += 1;
+                    }
+                    for &(rw, rhi) in &dct.recipients {
+                        t.txs[rw]
+                            .send(RowMsg { round: l, hi: rhi, row: row.clone() })
+                            .map_err(|_| anyhow!("worker {rw} hung up mid-epoch"))?;
+                    }
+                }
+                for (hi, row) in &t.staged[l] {
+                    place_row(w, n_inner, l, m.dim, *hi, row);
+                }
+                // Gather this round's fresh rows: banked first, then live.
+                // The timeout only fires if a peer died without poisoning
+                // (e.g. a panic) — far beyond any legitimate layer time.
+                let mut got = inbox.take(l);
+                while got.len() < t.expect[l] {
+                    let msg = t
+                        .rx
+                        .recv_timeout(Duration::from_secs(600))
+                        .map_err(|e| anyhow!("halo row starved at round {l}: {e:?}"))?;
+                    if msg.round == POISON_ROUND {
+                        return Err(anyhow!("peer worker failed; aborting epoch"));
+                    }
+                    if msg.round == l {
+                        got.push((msg.hi, msg.row));
+                    } else {
+                        inbox.stash(msg);
+                    }
+                }
+                for (hi, row) in &got {
+                    place_row(w, n_inner, l, m.dim, *hi, row);
+                }
+            }
+        }
+        if l == t.layers {
+            break;
+        }
+        compute_layer(w, backend, t.model, t.dims, l, t.kind, t.gpu, n_inner)?;
+    }
+    let (grads, loss, val_correct, val_total) = loss_and_backward(
+        w, backend, t.model, t.dims, t.layers, t.kind, t.gpu, n_inner, t.weight,
+    )?;
+    Ok(WorkerOut { grads, loss, val_correct, val_total, full_rows })
 }
 
 fn axpy(acc: &mut [f32], x: &[f32]) {

@@ -19,6 +19,31 @@ use crate::train::session::Session;
 use crate::train::TrainReport;
 use anyhow::Result;
 
+/// How workers execute within an epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One OS thread walks workers in index order — the reference path.
+    #[default]
+    Sequential,
+    /// One OS thread per worker: each worker computes its layers while
+    /// halo rows for later layers stream in from their owners through
+    /// double-buffered channels. Numerically bit-identical to
+    /// [`ExecMode::Sequential`] — cache decisions are planned centrally in
+    /// worker-index order, per-row quantization noise is keyed by
+    /// (seed, epoch, layer, vertex), and gradients/losses are reduced in
+    /// worker-index order.
+    Threaded,
+}
+
+impl ExecMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Threaded => "threaded",
+        }
+    }
+}
+
 /// How cache capacities are chosen.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CapacityMode {
@@ -68,6 +93,9 @@ pub struct TrainConfig {
     /// Invert JACA priorities (prioritize *low*-overlap vertices) — the
     /// Fig. 14 control arm.
     pub invert_priority: bool,
+    /// Worker execution mode (sequential reference or one thread per
+    /// worker with overlapped halo exchange). Bit-identical numerics.
+    pub exec: ExecMode,
 }
 
 impl TrainConfig {
@@ -93,6 +121,7 @@ impl TrainConfig {
             quantize_bits: None,
             comm_multiplier: 1.0,
             invert_priority: false,
+            exec: ExecMode::Sequential,
         }
     }
 

@@ -83,6 +83,12 @@ pub fn record_json(value: Json) {
     }
 }
 
+/// Write a standalone JSON document (CI artifacts like `BENCH_PR2.json`,
+/// as opposed to the append-only `bench-results.jsonl` stream).
+pub fn write_json_file(path: &str, value: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", value.to_string()))
+}
+
 /// Standard "quick mode" check: benches honour BENCH_QUICK=1 to shrink
 /// workloads (used in CI / smoke runs).
 pub fn quick_mode() -> bool {

@@ -1,0 +1,133 @@
+//! Bit-identity contract of the threaded epoch executor: for the same
+//! seed/config, `ExecMode::Threaded` must produce exactly the same
+//! `EpochStats`/`TrainReport` numbers as the sequential reference —
+//! losses, accuracies, simulated times, byte accounting and cache
+//! counters — across worker counts, caching on/off and quantization
+//! on/off. This is what makes the threaded path a drop-in replacement.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::tiny;
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{ConvergenceLog, EarlyStopping, ExecMode, Session, TrainConfig, TrainReport};
+
+fn tiny_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn run(cfg: &TrainConfig, workers: usize, exec: ExecMode) -> TrainReport {
+    let ds = tiny(11);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, workers, 7);
+    let mut backend = NativeBackend::new();
+    let mut cfg = cfg.clone();
+    cfg.exec = exec;
+    let mut session = Session::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+    session.run_epochs(cfg.epochs).unwrap();
+    session.finish().unwrap()
+}
+
+fn assert_identical(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses");
+    assert_eq!(a.val_accs, b.val_accs, "{what}: val accs");
+    assert_eq!(a.test_acc, b.test_acc, "{what}: test acc");
+    assert_eq!(a.epoch_times, b.epoch_times, "{what}: simulated epoch times");
+    assert_eq!(a.comm_times, b.comm_times, "{what}: simulated comm times");
+    assert_eq!(a.bytes_moved, b.bytes_moved, "{what}: bytes moved");
+    assert_eq!(a.bytes_saved, b.bytes_saved, "{what}: bytes saved");
+    assert_eq!(a.cache, b.cache, "{what}: cache counters");
+}
+
+/// The satellite contract: 1/2/4 workers × 3 epochs × cache on/off ×
+/// quantization on/off, threaded ≡ sequential bit-for-bit.
+#[test]
+fn threaded_matches_sequential_bitwise() {
+    for &workers in &[1usize, 2, 4] {
+        for &(use_cache, bits) in &[
+            (true, None),
+            (false, None),
+            (true, Some(8u8)),
+            (false, Some(8u8)),
+        ] {
+            let mut cfg = tiny_cfg(3);
+            cfg.use_cache = use_cache;
+            cfg.quantize_bits = bits;
+            if bits.is_some() {
+                // tiny's f_dim is 16 → int8 row + scales.
+                cfg.quantized_row_bytes = Some(16 + 8);
+            }
+            let what = format!("workers={workers} cache={use_cache} bits={bits:?}");
+            let seq = run(&cfg, workers, ExecMode::Sequential);
+            let thr = run(&cfg, workers, ExecMode::Threaded);
+            assert_identical(&seq, &thr, &what);
+            // Sanity: training actually happened.
+            assert_eq!(seq.losses.len(), 3, "{what}");
+            assert!(seq.losses.iter().all(|l| l.is_finite()), "{what}");
+        }
+    }
+}
+
+/// Skip-exchange (historical halo reuse) and bounded-staleness refresh
+/// epochs exercise every delivery path; GraphSAGE exercises the two-matrix
+/// backward. All must stay bit-identical.
+#[test]
+fn threaded_matches_sequential_with_staleness_and_sage() {
+    let mut cfg = tiny_cfg(5);
+    cfg.skip_exchange = true;
+    cfg.refresh_interval = 2;
+    let seq = run(&cfg, 3, ExecMode::Sequential);
+    let thr = run(&cfg, 3, ExecMode::Threaded);
+    assert_identical(&seq, &thr, "skip_exchange + refresh");
+
+    let mut cfg = tiny_cfg(3);
+    cfg.model = capgnn::model::ModelKind::Sage;
+    let seq = run(&cfg, 2, ExecMode::Sequential);
+    let thr = run(&cfg, 2, ExecMode::Threaded);
+    assert_identical(&seq, &thr, "sage");
+}
+
+/// Observers (early stopping, convergence logs) see identical per-epoch
+/// stats from the threaded executor, so they stop at the same epoch.
+#[test]
+fn observers_see_identical_stats_on_threads() {
+    let ds = tiny(5);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let run_logged = |exec: ExecMode| {
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(6);
+        cfg.exec = exec;
+        let mut session = Session::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+        let mut log = ConvergenceLog::default();
+        session.run(6, &mut log).unwrap();
+        log.history
+            .iter()
+            .map(|e| (e.loss, e.val_acc, e.bytes_moved))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run_logged(ExecMode::Sequential), run_logged(ExecMode::Threaded));
+
+    // Early stopping halts at the same epoch in both modes.
+    let stopped_at = |exec: ExecMode| {
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(50);
+        cfg.exec = exec;
+        let mut session = Session::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+        let mut stop = EarlyStopping::new(2, f32::INFINITY);
+        let ran = session.run(50, &mut stop).unwrap();
+        (ran, stop.stopped_at)
+    };
+    assert_eq!(stopped_at(ExecMode::Sequential), stopped_at(ExecMode::Threaded));
+}
+
+/// The measured wall-clock side-channel is populated in both modes.
+#[test]
+fn measured_wall_clock_is_recorded() {
+    let cfg = tiny_cfg(2);
+    for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+        let r = run(&cfg, 2, exec);
+        assert_eq!(r.epoch_wall.len(), 2, "{exec:?}");
+        assert!(r.total_wall() > 0.0, "{exec:?}");
+        assert!(r.wall_stages.execute > 0.0, "{exec:?}");
+        // Measured and simulated clocks are independent quantities.
+        assert!(r.epoch_wall.iter().all(|&w| w > 0.0), "{exec:?}");
+    }
+}

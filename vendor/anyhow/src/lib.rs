@@ -1,0 +1,167 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The registry is unavailable in the hermetic build environment, so —
+//! like the hand-rolled JSON layer (serde), CLI parser (clap) and bench
+//! harness (criterion) in the main crate — the repo vendors the small
+//! slice of `anyhow` it actually uses: a message-carrying [`Error`], the
+//! [`Result`] alias, the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the
+//! [`Context`] extension trait. Semantics match upstream for this subset;
+//! error sources/backtraces are flattened into the message.
+
+use std::fmt;
+
+/// A string-backed error. Like upstream `anyhow::Error`, it deliberately
+/// does **not** implement `std::error::Error`, which is what makes the
+/// blanket `From<E: Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with higher-level context, outermost first (upstream layout).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to [`Error`], as upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::core::format_args!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::core::format_args!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to the error arm of a `Result` or to a `None`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Debug> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e:?}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e:?}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("got {x} and {}", 8);
+        assert_eq!(b.to_string(), "got 7 and 8");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn io_fail() -> Result<()> {
+            Err(std::io::Error::other("boom"))?;
+            Ok(())
+        }
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "must be ok");
+            Ok(1)
+        }
+        fn g() -> Result<u32> {
+            bail!("always {}", "fails");
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "must be ok");
+        assert_eq!(g().unwrap_err().to_string(), "always fails");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn takes<T: Send + Sync + 'static>(_: T) {}
+        takes(anyhow!("threads carry these"));
+    }
+}
