@@ -1,0 +1,127 @@
+//! PR3 CI gate: cross-machine byte accounting of the distributed
+//! executor (paper §7 / Table 9).
+//!
+//! Runs the Table-9 cluster presets on a synthetic twin and writes
+//! `BENCH_PR3.json` with the cross-machine wire bytes measured from
+//! serialized frames (machine-granularity halo dedup + hierarchical
+//! all-reduce) next to the naive per-worker baseline. Exits nonzero if
+//! - a single-machine preset reports any cross-machine bytes,
+//! - a multi-machine preset reports none,
+//! - machine dedup fails to *strictly* reduce cross-machine bytes vs the
+//!   naive path on any multi-machine preset, or
+//! - the threaded executor disagrees with the sequential reference on
+//!   losses or any byte counter (bit-identity breach).
+//!
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+use capgnn::dist::{train_distributed, Cluster};
+use capgnn::graph::DatasetSpec;
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{ExecMode, TrainConfig};
+use capgnn::util::bench;
+use capgnn::util::json::{arr, num, obj, s, Json};
+
+fn main() {
+    let quick = bench::quick_mode();
+    let spec = DatasetSpec {
+        name: "bench-dist",
+        label: "Bd",
+        n: if quick { 512 } else { 1024 },
+        deg_in: 12.0,
+        deg_out: 6.0,
+        skew: 1.4,
+        classes: 8,
+        f_dim: 32,
+        orig_nodes: 0,
+        orig_edges: 0,
+    };
+    let ds = spec.build(42);
+    let epochs = if quick { 2 } else { 3 };
+    println!(
+        "pr3_dist_bytes: {} vertices, {} edges, {} epochs per run",
+        ds.graph.n(),
+        ds.graph.m(),
+        epochs
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut failed = false;
+    for preset in ["1M-4D", "2M-2D", "2M-4D"] {
+        let cluster = Cluster::preset(preset).unwrap();
+        // Vanilla communication (cache off) keeps cross-machine traffic
+        // on every epoch, so the dedup effect is measured, not a
+        // cold-start artifact.
+        let mut cfg = TrainConfig::vanilla(epochs);
+        cfg.hidden = 32;
+        cfg.layers = 2;
+        cfg.lr = 0.05;
+        let run = |exec: ExecMode| {
+            let mut cfg = cfg.clone();
+            cfg.exec = exec;
+            let mut backend = NativeBackend::new();
+            train_distributed(&ds, &cluster, &mut backend, &cfg).expect("dist run")
+        };
+        let seq = run(ExecMode::Sequential);
+        let thr = run(ExecMode::Threaded);
+        if seq.report.losses != thr.report.losses
+            || seq.cross_machine_bytes != thr.cross_machine_bytes
+            || seq.report.bytes_moved != thr.report.bytes_moved
+        {
+            eprintln!(
+                "NUMERICS DIVERGED on {preset}: losses {:?} vs {:?}, cross {} vs {}",
+                seq.report.losses, thr.report.losses, seq.cross_machine_bytes,
+                thr.cross_machine_bytes
+            );
+            failed = true;
+        }
+        let (xb, xn) = (seq.cross_machine_bytes, seq.cross_machine_bytes_naive);
+        let savings = seq.report.cross_savings() * 100.0;
+        println!(
+            "{preset}: {} workers / {} machines — cross {} bytes (naive {}, saved {savings:.1}%)",
+            seq.workers, seq.machines, xb, xn
+        );
+        if seq.machines == 1 {
+            if xb != 0 || xn != 0 {
+                eprintln!("GATE FAILED: single machine reported cross bytes ({xb}/{xn})");
+                failed = true;
+            }
+        } else {
+            if xb == 0 {
+                eprintln!("GATE FAILED: {preset} moved no cross-machine bytes");
+                failed = true;
+            }
+            if xb >= xn {
+                eprintln!(
+                    "GATE FAILED: machine dedup did not reduce cross bytes on {preset}: {xb} >= {xn}"
+                );
+                failed = true;
+            }
+        }
+        entries.push(obj(vec![
+            ("preset", s(preset)),
+            ("workers", num(seq.workers as f64)),
+            ("machines", num(seq.machines as f64)),
+            ("epochs", num(epochs as f64)),
+            ("cross_bytes", num(xb as f64)),
+            ("cross_bytes_naive", num(xn as f64)),
+            ("savings_pct", num(savings)),
+            ("bytes_moved", num(seq.report.bytes_moved as f64)),
+            ("epochs_per_sec", num(seq.epochs_per_sec)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", s("pr3_dist_bytes")),
+        ("graph_n", num(ds.graph.n() as f64)),
+        ("graph_m", num(ds.graph.m() as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", arr(entries)),
+        ("dedup_reduces_cross_bytes", Json::Bool(!failed)),
+    ]);
+    bench::write_json_file("BENCH_PR3.json", &doc).expect("write BENCH_PR3.json");
+    println!("wrote BENCH_PR3.json");
+
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -37,6 +37,13 @@ impl JacaCache {
         *self.priorities.get(&key).unwrap_or(&1)
     }
 
+    /// Hinted keys currently tracked (bounded-growth contract: eviction
+    /// prunes the victim's hint, so long-running churn cannot grow the
+    /// map without bound).
+    pub fn hint_count(&self) -> usize {
+        self.priorities.len()
+    }
+
     fn bump(&mut self, key: u64, priority: u32) {
         self.tick += 1;
         if let Some((p, t)) = self.meta.insert(key, (priority, self.tick)) {
@@ -83,6 +90,20 @@ impl CachePolicy for JacaCache {
             }
             self.order.remove(&(vp, vt, victim));
             self.meta.remove(&victim);
+            // Prune the victim's hint: an evicted key had the minimum
+            // priority, and the resident minimum never decreases within a
+            // run, so a later re-insert is refused whether or not the
+            // hint survives — keeping it would only grow the map without
+            // bound across set_priority/evict churn. (`remove` — the
+            // abort-path purge — keeps hints: a purged pending key was
+            // never cached and must retry exactly like a fresh key.
+            // Caveat: `remove` frees a slot, and an *unhinted* key
+            // inserted into free capacity could lower the minimum below a
+            // pruned hint. The session never does this — every key it
+            // inserts is a halo key hinted at build time and those hints
+            // survive the purge — so the monotonic-minimum argument holds
+            // for all in-repo flows.)
+            self.priorities.remove(&victim);
             self.bump(key, prio);
             return InsertOutcome::Evicted(victim);
         }
@@ -178,5 +199,45 @@ mod tests {
         assert!(c.contains(42));
         c.set_priority(7, 2);
         assert_eq!(c.insert(7), InsertOutcome::Evicted(42));
+    }
+
+    #[test]
+    fn hint_map_stays_bounded_under_churn() {
+        // Regression: hints used to survive eviction forever, so a
+        // workload that keeps hinting fresh keys grew the map without
+        // bound. With eviction-time pruning it stays at
+        // residents + in-flight.
+        let mut c = JacaCache::new(4);
+        for k in 0..10_000u64 {
+            // Monotonically increasing priority ⇒ every insert evicts.
+            c.set_priority(k, k as u32 + 1);
+            let out = c.insert(k);
+            assert_ne!(out, InsertOutcome::Refused);
+            assert!(
+                c.hint_count() <= c.capacity() + 1,
+                "hint map leaked: {} hints at key {k}",
+                c.hint_count()
+            );
+        }
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn remove_keeps_hints_for_retry() {
+        // The abort-path purge removes never-filled keys via `remove`;
+        // their priority hints must survive so the retried epoch behaves
+        // like a fresh one.
+        let mut c = JacaCache::new(2);
+        c.set_priority(5, 9);
+        c.insert(5);
+        c.remove(5);
+        assert!(!c.contains(5));
+        assert_eq!(c.hint_count(), 1);
+        c.set_priority(1, 1);
+        c.insert(1);
+        c.insert(5);
+        // Key 5's hint (9) still outranks key 1 when the cache fills.
+        c.set_priority(7, 3);
+        assert_eq!(c.insert(7), InsertOutcome::Evicted(1));
     }
 }

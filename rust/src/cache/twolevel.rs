@@ -2,9 +2,16 @@
 //! device memory and one software-managed *global cache* in CPU shared
 //! memory, coordinated so that a halo row found in either level is never
 //! re-sent by its owner.
+//!
+//! On a multi-machine cluster (§7) there is one global cache *per
+//! machine* — CPU shared memory does not span Ethernet — so a worker only
+//! sees global hits for rows its own machine has fetched. Build with
+//! [`TwoLevelCache::with_machines`] to get that shape;
+//! [`TwoLevelCache::new`] keeps the single-machine behavior.
 
 use super::store::FeatureStore;
 use super::{CachePolicy, InsertOutcome, PolicyKind};
+use std::collections::HashSet;
 
 /// Where a lookup was satisfied.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,24 +56,52 @@ impl TwoLevelStats {
     }
 }
 
-/// Two-level cache over `P` workers.
+/// Two-level cache over `P` workers (and `M` machine-local global
+/// regions — one on a single box).
 pub struct TwoLevelCache {
     pub kind: PolicyKind,
     locals: Vec<Box<dyn CachePolicy>>,
-    global: Box<dyn CachePolicy>,
+    /// One global cache per machine.
+    globals: Vec<Box<dyn CachePolicy>>,
     local_store: Vec<FeatureStore>,
-    global_store: FeatureStore,
+    global_store: Vec<FeatureStore>,
+    /// Machine index of each worker (all 0 on a single box).
+    machine_of: Vec<usize>,
+    /// Keys inserted by [`TwoLevelCache::fill_pending`] whose content has
+    /// not arrived yet (cleared by `complete_fill`, or by
+    /// [`TwoLevelCache::purge_pending`] on an aborted epoch).
+    pending: HashSet<u64>,
     pub stats: TwoLevelStats,
 }
 
 impl TwoLevelCache {
     pub fn new(kind: PolicyKind, local_caps: &[usize], global_cap: usize) -> TwoLevelCache {
+        let machine_of = vec![0; local_caps.len()];
+        TwoLevelCache::with_machines(kind, local_caps, global_cap, &machine_of)
+    }
+
+    /// Multi-machine shape: each machine gets its own `global_cap`-sized
+    /// CPU global cache, visible only to the workers it hosts.
+    pub fn with_machines(
+        kind: PolicyKind,
+        local_caps: &[usize],
+        global_cap: usize,
+        machine_of: &[usize],
+    ) -> TwoLevelCache {
+        assert_eq!(
+            local_caps.len(),
+            machine_of.len(),
+            "one machine index per worker"
+        );
+        let machines = machine_of.iter().copied().max().map_or(1, |m| m + 1);
         TwoLevelCache {
             kind,
             locals: local_caps.iter().map(|&c| kind.build(c)).collect(),
-            global: kind.build(global_cap),
+            globals: (0..machines).map(|_| kind.build(global_cap)).collect(),
             local_store: local_caps.iter().map(|_| FeatureStore::new()).collect(),
-            global_store: FeatureStore::new(),
+            global_store: (0..machines).map(|_| FeatureStore::new()).collect(),
+            machine_of: machine_of.to_vec(),
+            pending: HashSet::new(),
             stats: TwoLevelStats::default(),
         }
     }
@@ -75,22 +110,29 @@ impl TwoLevelCache {
         self.locals.len()
     }
 
+    pub fn num_machines(&self) -> usize {
+        self.globals.len()
+    }
+
     pub fn local_len(&self, w: usize) -> usize {
         self.locals[w].len()
     }
 
+    /// Total resident keys across every machine's global cache.
     pub fn global_len(&self) -> usize {
-        self.global.len()
+        self.globals.iter().map(|g| g.len()).sum()
     }
 
     /// Hint JACA priorities (vertex overlap ratios) for a worker's halo.
     pub fn set_priority(&mut self, worker: usize, key: u64, priority: u32) {
         self.locals[worker].set_priority(key, priority);
-        self.global.set_priority(key, priority);
+        self.globals[self.machine_of[worker]].set_priority(key, priority);
     }
 
     /// Look `key` up for `worker`, promoting global hits into the local
-    /// cache (the prefetch path of Fig. 9).
+    /// cache (the prefetch path of Fig. 9). Only the worker's *own
+    /// machine's* global cache counts — rows another machine fetched are
+    /// across Ethernet and must be re-fetched.
     pub fn lookup(&mut self, worker: usize, key: u64) -> Hit {
         self.stats.checks += 1;
         if self.locals[worker].contains(key) {
@@ -98,17 +140,18 @@ impl TwoLevelCache {
             self.stats.local_hits += 1;
             return Hit::Local;
         }
-        if self.global.contains(key) {
-            self.global.touch(key);
+        let m = self.machine_of[worker];
+        if self.globals[m].contains(key) {
+            self.globals[m].touch(key);
             self.stats.global_hits += 1;
             // Promote into the local cache (prefetch H2D). A pending-fill
             // key has no content yet: promote the metadata now and let
             // `complete_fill` deliver the row into this local store too,
             // so next-epoch lookups classify as Local exactly as they did
             // when fills carried content immediately.
-            match self.global_store.get(key).map(|r| r.to_vec()) {
+            match self.global_store[m].get(key).map(|r| r.to_vec()) {
                 Some(row) => {
-                    let epoch = self.global_store.age(key, u64::MAX).unwrap_or(0);
+                    let epoch = self.global_store[m].age(key, u64::MAX).unwrap_or(0);
                     self.insert_local(worker, key, row, u64::MAX - epoch);
                 }
                 None => {
@@ -125,21 +168,23 @@ impl TwoLevelCache {
     /// *sender-side* dedup check: "before sending features, a worker first
     /// checks whether the vertices are already present".
     pub fn resident_anywhere(&self, worker: usize, key: u64) -> bool {
-        self.locals[worker].contains(key) || self.global.contains(key)
+        self.locals[worker].contains(key)
+            || self.globals[self.machine_of[worker]].contains(key)
     }
 
-    /// Row behind a key as seen by `worker` (local first, then global).
+    /// Row behind a key as seen by `worker` (local first, then the
+    /// worker's machine-global).
     pub fn get_row(&self, worker: usize, key: u64) -> Option<&[f32]> {
         self.local_store[worker]
             .get(key)
-            .or_else(|| self.global_store.get(key))
+            .or_else(|| self.global_store[self.machine_of[worker]].get(key))
     }
 
-    /// Age (in epochs) of the freshest cached copy.
+    /// Age (in epochs) of the freshest copy visible to `worker`.
     pub fn age(&self, worker: usize, key: u64, now: u64) -> Option<u64> {
         match (
             self.local_store[worker].age(key, now),
-            self.global_store.age(key, now),
+            self.global_store[self.machine_of[worker]].age(key, now),
         ) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -163,16 +208,17 @@ impl TwoLevelCache {
         }
     }
 
-    /// Metadata-only global insert (see [`Self::insert_local_meta`]).
-    fn insert_global_meta(&mut self, key: u64) -> bool {
-        match self.global.insert(key) {
+    /// Metadata-only global insert into one machine's region (see
+    /// [`Self::insert_local_meta`]).
+    fn insert_global_meta(&mut self, machine: usize, key: u64) -> bool {
+        match self.globals[machine].insert(key) {
             InsertOutcome::Refused => {
                 self.stats.global_refusals += 1;
                 false
             }
             InsertOutcome::Evicted(victim) => {
                 self.stats.global_evictions += 1;
-                self.global_store.remove(victim);
+                self.global_store[machine].remove(victim);
                 true
             }
             InsertOutcome::Inserted => true,
@@ -202,8 +248,9 @@ impl TwoLevelCache {
     /// requester.
     pub fn fill_pending(&mut self, worker: usize, key: u64) {
         self.stats.fills += 1;
-        self.insert_global_meta(key);
+        self.insert_global_meta(self.machine_of[worker], key);
         self.insert_local_meta(worker, key);
+        self.pending.insert(key);
     }
 
     /// Deliver the row content for a key inserted by
@@ -212,8 +259,11 @@ impl TwoLevelCache {
     /// two calls is skipped — its metadata is gone, so storing content
     /// would leak an orphan row.
     pub fn complete_fill(&mut self, key: u64, row: &[f32], epoch: u64) {
-        if self.global.contains(key) && self.global_store.get(key).is_none() {
-            self.global_store.put(key, row.to_vec(), epoch);
+        self.pending.remove(&key);
+        for (m, global) in self.globals.iter().enumerate() {
+            if global.contains(key) && self.global_store[m].get(key).is_none() {
+                self.global_store[m].put(key, row.to_vec(), epoch);
+            }
         }
         for (w, local) in self.locals.iter().enumerate() {
             if local.contains(key) && self.local_store[w].get(key).is_none() {
@@ -222,11 +272,40 @@ impl TwoLevelCache {
         }
     }
 
+    /// Abort-path cleanup: drop every pending-fill key whose content
+    /// never arrived (an epoch died between `fill_pending` and
+    /// `complete_fill`). Without this, the stale metadata classifies
+    /// next-epoch lookups as hits on rows that do not exist — wrong
+    /// counters *and* silently missing halo content. Removal bypasses the
+    /// eviction counters (nothing was cached yet) and keeps priority
+    /// hints, so a retried epoch behaves exactly like a fresh one.
+    pub fn purge_pending(&mut self) {
+        for key in std::mem::take(&mut self.pending) {
+            for (m, global) in self.globals.iter_mut().enumerate() {
+                if global.contains(key) && self.global_store[m].get(key).is_none() {
+                    global.remove(key);
+                }
+            }
+            for (w, local) in self.locals.iter_mut().enumerate() {
+                if local.contains(key) && self.local_store[w].get(key).is_none() {
+                    local.remove(key);
+                }
+            }
+        }
+    }
+
+    /// Keys currently awaiting fill content.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
     /// Update a cached row in place wherever it is resident (lightweight
     /// vertex update — no eviction churn).
     pub fn refresh(&mut self, key: u64, row: &[f32], epoch: u64) {
-        if self.global.contains(key) {
-            self.global_store.put(key, row.to_vec(), epoch);
+        for (m, global) in self.globals.iter().enumerate() {
+            if global.contains(key) {
+                self.global_store[m].put(key, row.to_vec(), epoch);
+            }
         }
         for (w, local) in self.locals.iter().enumerate() {
             if local.contains(key) {
@@ -238,13 +317,16 @@ impl TwoLevelCache {
     /// Drop everything (between runs).
     pub fn clear(&mut self) {
         let caps: Vec<usize> = self.locals.iter().map(|l| l.capacity()).collect();
-        let global_cap = self.global.capacity();
+        let global_cap = self.globals[0].capacity();
         self.locals = caps.iter().map(|&c| self.kind.build(c)).collect();
-        self.global = self.kind.build(global_cap);
+        self.globals = (0..self.globals.len()).map(|_| self.kind.build(global_cap)).collect();
         for s in &mut self.local_store {
             s.clear();
         }
-        self.global_store.clear();
+        for s in &mut self.global_store {
+            s.clear();
+        }
+        self.pending.clear();
         self.stats = TwoLevelStats::default();
     }
 }
@@ -271,6 +353,16 @@ mod tests {
         assert_eq!(c.stats.local_hits, 2);
         assert_eq!(c.stats.global_hits, 1);
         assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn zero_lookup_rates_are_finite() {
+        // Guard against NaN leaking into JSON report writers: a run with
+        // zero lookups (cache off, or an aborted first epoch) reports 0.
+        let s = TwoLevelStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.local_hit_rate(), 0.0);
+        assert!(s.hit_rate().is_finite() && s.local_hit_rate().is_finite());
     }
 
     #[test]
@@ -381,6 +473,58 @@ mod tests {
         let checks = c.stats.checks;
         assert!(c.resident_anywhere(1, 3)); // global
         assert_eq!(c.stats.checks, checks);
+    }
+
+    #[test]
+    fn machine_globals_do_not_span_ethernet() {
+        // Workers 0,1 on machine 0; workers 2,3 on machine 1.
+        let mut c = TwoLevelCache::with_machines(PolicyKind::Lru, &[2; 4], 4, &[0, 0, 1, 1]);
+        assert_eq!(c.num_machines(), 2);
+        c.fill(0, 7, vec![1.0], 0);
+        // Same machine: global hit, then promoted.
+        assert_eq!(c.lookup(1, 7), Hit::Global);
+        // Other machine: the row is across Ethernet — a miss.
+        assert_eq!(c.lookup(2, 7), Hit::Miss);
+        assert!(c.get_row(2, 7).is_none());
+        // Machine 1 fetches its own copy; both machines now serve it.
+        c.fill(2, 7, vec![1.0], 0);
+        assert_eq!(c.lookup(3, 7), Hit::Global);
+        assert_eq!(c.lookup(0, 7), Hit::Local);
+        assert_eq!(c.global_len(), 2, "one copy per machine region");
+    }
+
+    #[test]
+    fn purge_pending_clears_stale_fills() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill_pending(0, 9);
+        c.fill_pending(1, 11);
+        // Key 11 completes; key 9's worker died mid-epoch.
+        c.complete_fill(11, &[4.0], 0);
+        assert_eq!(c.pending_len(), 1);
+        c.purge_pending();
+        assert_eq!(c.pending_len(), 0);
+        // The stale key is gone — next epoch re-misses and re-fetches.
+        assert_eq!(c.lookup(0, 9), Hit::Miss);
+        assert!(c.get_row(0, 9).is_none());
+        // The completed key is untouched.
+        assert_eq!(c.lookup(1, 11), Hit::Local);
+        assert_eq!(c.get_row(1, 11).unwrap(), &[4.0]);
+        // Purging does not count as eviction (nothing was cached yet).
+        assert_eq!(c.stats.local_evictions, 0);
+        assert_eq!(c.stats.global_evictions, 0);
+    }
+
+    #[test]
+    fn purge_pending_covers_pending_promotions() {
+        // Worker 1 global-hits a pending key: the promotion plants
+        // content-less metadata in worker 1's local cache too. Purge must
+        // sweep that as well.
+        let mut c = cache(PolicyKind::Lru);
+        c.fill_pending(0, 4);
+        assert_eq!(c.lookup(1, 4), Hit::Global);
+        c.purge_pending();
+        assert_eq!(c.lookup(1, 4), Hit::Miss);
+        assert_eq!(c.lookup(0, 4), Hit::Miss);
     }
 
     #[test]

@@ -15,11 +15,12 @@
 
 use crate::cache::twolevel::{Hit, TwoLevelCache};
 use crate::cache::{key_of, TwoLevelStats};
+use crate::comm::transport::planned_frame_bytes;
 use crate::device::profile::Gpu;
 use crate::device::simclock::StageTimes;
 use crate::device::topology::Topology;
 use crate::partition::SubgraphPlan;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 /// Fixed bookkeeping costs of the caching strategy (seconds per op).
 /// Calibrated so check/pick stay small and flat (paper Fig. 19: the
@@ -86,6 +87,12 @@ pub struct ExchangeReport {
     pub bytes_moved: u64,
     /// Bytes saved by cache hits (would have moved without caching).
     pub bytes_saved: u64,
+    /// Cross-machine wire bytes (serialized frames, after
+    /// machine-granularity dedup). Zero on a single machine.
+    pub cross_bytes: u64,
+    /// Cross-machine wire bytes the naive per-worker delivery would have
+    /// cost (one frame per remote requester).
+    pub cross_bytes_naive: u64,
     /// Cache stats snapshot after the round.
     pub cache: TwoLevelStats,
 }
@@ -103,6 +110,24 @@ pub struct SendDirective {
     pub src_row: usize,
     /// (requester worker, halo index) pairs to deliver to.
     pub recipients: Vec<(usize, usize)>,
+}
+
+/// One deduplicated cross-machine delivery (the §7 optimization): the
+/// owner serializes the vertex row into a single frame per destination
+/// machine, and the destination machine fans it out locally to every
+/// co-located requester — however many workers there asked for it.
+#[derive(Clone, Debug)]
+pub struct CrossSend {
+    pub vertex: u32,
+    /// Owner-local inner row index of the vertex.
+    pub src_row: usize,
+    pub dest_machine: usize,
+    /// (requester worker, halo index) pairs — all on `dest_machine`.
+    pub recipients: Vec<(usize, usize)>,
+    /// How many plan-time `bytes_moved` charges this delivery absorbed
+    /// (source directives whose recipients all moved here). Used by the
+    /// full-precision correction for unquantizable rows.
+    pub charges: u32,
 }
 
 /// A deferred cache-content update: the metadata side already happened in
@@ -129,8 +154,13 @@ pub struct FillDirective {
 pub struct RoundPlan {
     /// Cached rows cloned per worker at plan time: (halo idx, row).
     pub staged: Vec<Vec<(usize, Vec<f32>)>>,
-    /// Fresh deliveries grouped by owner worker.
+    /// Fresh deliveries grouped by owner worker. On a multi-machine
+    /// cluster these carry only the *intra-machine* recipients;
+    /// cross-machine recipients ride [`RoundPlan::cross`] frames.
     pub sends: Vec<Vec<SendDirective>>,
+    /// Deduplicated cross-machine deliveries grouped by owner worker
+    /// (empty on a single machine).
+    pub cross: Vec<Vec<CrossSend>>,
     /// Fresh rows each worker will receive (its channel recv budget).
     pub expect: Vec<usize>,
     /// Deferred cache-content updates for this round.
@@ -139,6 +169,11 @@ pub struct RoundPlan {
     pub stages: Vec<StageTimes>,
     pub bytes_moved: u64,
     pub bytes_saved: u64,
+    /// Planned cross-machine wire bytes (one frame per vertex per
+    /// destination machine — the machine-dedup accounting).
+    pub cross_bytes: u64,
+    /// What naive per-worker delivery would have put on the wire.
+    pub cross_bytes_naive: u64,
 }
 
 /// The exchange engine: borrows the topology/devices, owns nothing.
@@ -146,11 +181,40 @@ pub struct ExchangeEngine<'a> {
     pub gpus: &'a [Gpu],
     pub topology: &'a Topology,
     pub costs: CommCosts,
+    /// Machine index per worker; `None` = everything on one machine.
+    machine_of: Option<&'a [usize]>,
 }
 
 impl<'a> ExchangeEngine<'a> {
     pub fn new(gpus: &'a [Gpu], topology: &'a Topology) -> ExchangeEngine<'a> {
-        ExchangeEngine { gpus, topology, costs: CommCosts::default() }
+        ExchangeEngine { gpus, topology, costs: CommCosts::default(), machine_of: None }
+    }
+
+    /// Machine-aware engine: cross-machine deliveries are planned as
+    /// serialized frames with machine-granularity dedup instead of
+    /// per-worker device copies.
+    pub fn with_machines(
+        gpus: &'a [Gpu],
+        topology: &'a Topology,
+        machine_of: &'a [usize],
+    ) -> ExchangeEngine<'a> {
+        ExchangeEngine {
+            gpus,
+            topology,
+            costs: CommCosts::default(),
+            machine_of: Some(machine_of),
+        }
+    }
+
+    /// The machine map, but only when it actually spans >1 machine.
+    fn active_machines(&self) -> Option<&'a [usize]> {
+        let m = self.machine_of?;
+        let first = *m.first()?;
+        if m.iter().any(|&x| x != first) {
+            Some(m)
+        } else {
+            None
+        }
     }
 
     /// Plan one halo-exchange round: consult the cache for every (worker,
@@ -278,10 +342,84 @@ impl<'a> ExchangeEngine<'a> {
             }
         }
 
+        // ---- Machine-granularity split (§7) -----------------------------
+        // On a multi-machine cluster, recipients on a different machine
+        // than the owner are moved off the device-copy path into
+        // deduplicated CrossSend frames: the owner serializes each vertex
+        // row once per destination machine, and the destination fans it
+        // out locally. Wire bytes are counted from the frame sizes
+        // (header + payload), not one device row per requester.
+        let mut cross: Vec<Vec<CrossSend>> = vec![Vec::new(); nparts];
+        let mut cross_bytes = 0u64;
+        let mut cross_bytes_naive = 0u64;
+        let frame_bytes = planned_frame_bytes(row_bytes);
+        if let Some(mof) = self.active_machines() {
+            for (ow, dirs) in sends.iter_mut().enumerate() {
+                // (vertex, dest machine) → index into cross[ow].
+                let mut dedup: HashMap<(u32, usize), usize> = HashMap::new();
+                for d in dirs.iter_mut() {
+                    let mut kept = Vec::with_capacity(d.recipients.len());
+                    let mut first_idx: Option<usize> = None;
+                    for &(rw, rhi) in &d.recipients {
+                        if mof[rw] == mof[ow] {
+                            kept.push((rw, rhi));
+                            continue;
+                        }
+                        cross_bytes_naive += frame_bytes;
+                        let m = mof[rw];
+                        let idx = *dedup.entry((d.vertex, m)).or_insert_with(|| {
+                            cross[ow].push(CrossSend {
+                                vertex: d.vertex,
+                                src_row: d.src_row,
+                                dest_machine: m,
+                                recipients: Vec::new(),
+                                charges: 0,
+                            });
+                            cross_bytes += frame_bytes;
+                            cross[ow].len() - 1
+                        });
+                        cross[ow][idx].recipients.push((rw, rhi));
+                        first_idx.get_or_insert(idx);
+                    }
+                    if kept.is_empty() {
+                        // Every recipient left for the wire: the directive
+                        // disappears, so its one bytes_moved charge moves
+                        // to the first frame it contributed to.
+                        if let Some(idx) = first_idx {
+                            cross[ow][idx].charges += 1;
+                        }
+                    }
+                    d.recipients = kept;
+                }
+                dirs.retain(|d| !d.recipients.is_empty());
+            }
+            // Cross-machine traffic no longer rides the per-pair device
+            // path; its time is charged from the frame aggregates below.
+            for s in 0..nparts {
+                for d in 0..nparts {
+                    if mof[s] != mof[d] {
+                        pair_rows[s][d] = 0;
+                    }
+                }
+            }
+        }
+        // (owner, dest machine) → (frame bytes, recipient workers).
+        let mut xagg: BTreeMap<(usize, usize), (u64, BTreeSet<usize>)> = BTreeMap::new();
+        for (ow, list) in cross.iter().enumerate() {
+            for c in list {
+                let e = xagg.entry((ow, c.dest_machine)).or_default();
+                e.0 += frame_bytes;
+                for &(rw, _) in &c.recipients {
+                    e.1.insert(rw);
+                }
+            }
+        }
+
         // Charge transfer times. Concurrency = number of active pairs
-        // (they share the PCIe complex).
+        // (they share the PCIe complex / NIC).
         let active_pairs = pair_rows.iter().flatten().filter(|&&r| r > 0).count()
-            + h2d_rows.iter().filter(|&&r| r > 0).count();
+            + h2d_rows.iter().filter(|&&r| r > 0).count()
+            + xagg.len();
         for src in 0..nparts {
             for dst in 0..nparts {
                 let r = pair_rows[src][dst];
@@ -319,8 +457,36 @@ impl<'a> ExchangeEngine<'a> {
                 * p.comm_multiplier;
             stages[dst].communication += t;
         }
+        // Ethernet frames: every co-located recipient waits for the same
+        // frame batch; the owner pays the D2H half of pushing it to the
+        // NIC. `transfer_time` applies the cross-machine link multiplier.
+        for ((ow, _m), (bytes, recips)) in &xagg {
+            let rep = *recips.iter().next().expect("frame with no recipients");
+            let t = (self.topology.transfer_time(self.gpus, *ow, rep, *bytes, active_pairs)
+                + self.costs.per_transfer_latency)
+                * p.comm_multiplier;
+            for &rw in recips.iter() {
+                stages[rw].communication += t;
+            }
+            stages[*ow].communication += self
+                .topology
+                .d2h_time(self.gpus, *ow, *bytes, active_pairs)
+                * 0.5
+                * p.comm_multiplier;
+        }
 
-        RoundPlan { staged, sends, expect, fills, stages, bytes_moved, bytes_saved }
+        RoundPlan {
+            staged,
+            sends,
+            cross,
+            expect,
+            fills,
+            stages,
+            bytes_moved,
+            bytes_saved,
+            cross_bytes,
+            cross_bytes_naive,
+        }
     }
 
     /// Run one halo-exchange round in place (plan + serial data movement).
@@ -361,6 +527,18 @@ impl<'a> ExchangeEngine<'a> {
                 delivered.insert(d.vertex, row);
             }
         }
+        for list in &rp.cross {
+            for c in list {
+                let row = match delivered.get(&c.vertex) {
+                    Some(row) => row.clone(),
+                    None => rows(c.vertex),
+                };
+                for &(w, hi) in &c.recipients {
+                    sink(w, hi, &row);
+                }
+                delivered.insert(c.vertex, row);
+            }
+        }
         for f in &rp.fills {
             let row = match delivered.get(&f.vertex) {
                 Some(row) => row.clone(),
@@ -376,6 +554,8 @@ impl<'a> ExchangeEngine<'a> {
             stages: rp.stages,
             bytes_moved: rp.bytes_moved,
             bytes_saved: rp.bytes_saved,
+            cross_bytes: rp.cross_bytes,
+            cross_bytes_naive: rp.cross_bytes_naive,
             cache: cache.stats,
         }
     }
@@ -525,6 +705,43 @@ mod tests {
         let t1 = run(1.0);
         let t2 = run(2.0);
         assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn machine_dedup_reduces_cross_bytes_and_still_delivers() {
+        let (plan, gpus, _) = setup();
+        let machine_of = [0usize, 0, 1, 1];
+        let topo = Topology::cluster(&machine_of, 10.0);
+        let eng = ExchangeEngine::with_machines(&gpus, &topo, &machine_of);
+        let mut cache = TwoLevelCache::new(PolicyKind::Lru, &[0; 4], 0);
+        let mut p = ExchangeParams::new(0, 0, 16);
+        p.use_cache = false; // every requester fetches: dedup is visible
+        let mut sunk = 0usize;
+        let r = eng.exchange(&plan, &mut cache, p, |v| row_of(v, 16, 0.25), |w, hi, row| {
+            let v = plan.parts[w].halo_ids()[hi];
+            assert_eq!(row[0], v as f32 + 0.25);
+            sunk += 1;
+        });
+        let total_halo: usize = plan.parts.iter().map(|p| p.n_halo()).sum();
+        assert_eq!(sunk, total_halo, "every halo slot is still served");
+        assert!(r.cross_bytes > 0, "cross-machine traffic exists");
+        assert!(
+            r.cross_bytes < r.cross_bytes_naive,
+            "dedup must beat per-worker frames: {} vs {}",
+            r.cross_bytes,
+            r.cross_bytes_naive
+        );
+        // Device-level byte accounting is unchanged by the split.
+        assert_eq!(r.bytes_moved, total_halo as u64 * 16 * 4);
+
+        // The same shape on one machine has no wire traffic at all.
+        let topo1 = Topology::pcie_pairs(4);
+        let eng1 = ExchangeEngine::new(&gpus, &topo1);
+        let mut cache1 = TwoLevelCache::new(PolicyKind::Lru, &[0; 4], 0);
+        let r1 = eng1.exchange(&plan, &mut cache1, p, |v| row_of(v, 16, 0.25), |_, _, _| {});
+        assert_eq!(r1.cross_bytes, 0);
+        assert_eq!(r1.cross_bytes_naive, 0);
+        assert_eq!(r1.bytes_moved, r.bytes_moved);
     }
 
     #[test]

@@ -5,10 +5,12 @@
 pub mod exchange;
 pub mod pipeline;
 pub mod queues;
+pub mod transport;
 
 pub use exchange::{
-    CommCosts, ExchangeEngine, ExchangeParams, ExchangeReport, FillDirective, RoundPlan,
-    SendDirective,
+    CommCosts, CrossSend, ExchangeEngine, ExchangeParams, ExchangeReport, FillDirective,
+    RoundPlan, SendDirective,
 };
 pub use pipeline::combine_epoch;
-pub use queues::{HaloInbox, RowMsg};
+pub use queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};
+pub use transport::{Frame, FrameKind, Payload, FRAME_HEADER_BYTES};

@@ -7,7 +7,7 @@
 //! simulated DMA transfer per pair instead of one per vertex — the
 //! "batched cache operations" optimization of §5.5.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// One queued row movement.
 #[derive(Clone, Debug, PartialEq)]
@@ -133,9 +133,65 @@ impl HaloInbox {
     }
 }
 
+/// One encoded cross-machine [`crate::comm::transport::Frame`] in flight
+/// to a destination machine's router (the threaded executor's Ethernet
+/// hop). Only bytes travel — the receiving machine decodes and fans the
+/// row out to its local workers from its [`RouteTable`].
+#[derive(Clone, Debug)]
+pub struct FrameMsg {
+    pub bytes: Vec<u8>,
+}
+
+/// Receiver-side fan-out table of one machine: which local `(worker,
+/// halo idx)` slots want the row of `(round, vertex)`. Built from the
+/// epoch plan, consumed once per frame — machine-granularity dedup means
+/// each `(round, vertex)` crosses the wire to a machine exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct RouteTable {
+    routes: HashMap<(usize, u32), Vec<(usize, usize)>>,
+}
+
+impl RouteTable {
+    pub fn new() -> RouteTable {
+        RouteTable::default()
+    }
+
+    pub fn add(&mut self, round: usize, vertex: u32, recipient: (usize, usize)) {
+        self.routes.entry((round, vertex)).or_default().push(recipient);
+    }
+
+    /// Claim the recipients of one delivered frame (None = no local
+    /// worker expects this row — a routing bug).
+    pub fn take(&mut self, round: usize, vertex: u32) -> Option<Vec<(usize, usize)>> {
+        self.routes.remove(&(round, vertex))
+    }
+
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn route_table_fans_out_once() {
+        let mut rt = RouteTable::new();
+        rt.add(0, 7, (2, 0));
+        rt.add(0, 7, (3, 4));
+        rt.add(1, 7, (2, 1));
+        assert_eq!(rt.len(), 2);
+        assert_eq!(rt.take(0, 7), Some(vec![(2, 0), (3, 4)]));
+        // Consumed: the same frame cannot be routed twice.
+        assert_eq!(rt.take(0, 7), None);
+        assert_eq!(rt.take(1, 7), Some(vec![(2, 1)]));
+        assert!(rt.is_empty());
+    }
 
     #[test]
     fn inbox_banks_early_arrivals_per_round() {

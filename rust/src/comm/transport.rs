@@ -1,0 +1,262 @@
+//! Serialized cross-machine transport (paper §7, Table 9).
+//!
+//! Within a machine, halo rows move between simulated devices as `f32`
+//! slices — shared memory is the physical reality. *Across* machines
+//! there is no shared feature memory: rows and gradients travel as
+//! encoded byte [`Frame`]s through per-machine channels, and the
+//! Ethernet byte accounting the distributed extension reports is taken
+//! from the actual encoded frame sizes (header + payload), not from a
+//! flat per-row cost multiplier.
+//!
+//! Framing is lossless: `f32 → LE bytes → f32` preserves the exact bit
+//! pattern, and the AdaQP [`Payload::Q8`] encoding ships the integer
+//! codes the quantizer produced, so `lo + code·scale` on the receiving
+//! machine reproduces the owner's dequantized row bit-for-bit. That is
+//! what lets the multi-machine execution path keep the PR 2 guarantee —
+//! threaded ≡ sequential ≡ single-wire numerics.
+
+use anyhow::{anyhow, Result};
+
+/// Fixed wire header per frame: kind (1) + payload tag (1) + layer (2,
+/// LE u16) + id (4, LE u32) + element count (4, LE u32) + reserved (4).
+pub const FRAME_HEADER_BYTES: u64 = 16;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// One halo feature/embedding row (`id` = global vertex).
+    HaloRow,
+    /// One gradient matrix of the hierarchical all-reduce (`id` = matrix
+    /// index within the layer).
+    GradChunk,
+}
+
+impl FrameKind {
+    fn tag(self) -> u8 {
+        match self {
+            FrameKind::HaloRow => 0,
+            FrameKind::GradChunk => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<FrameKind> {
+        match t {
+            0 => Ok(FrameKind::HaloRow),
+            1 => Ok(FrameKind::GradChunk),
+            other => Err(anyhow!("unknown frame kind tag {other}")),
+        }
+    }
+}
+
+/// Frame payload: full-precision values, or the AdaQP quantized wire
+/// format (`value[i] = lo + codes[i]·scale`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    Q8 { lo: f32, scale: f32, codes: Vec<u8> },
+}
+
+impl Payload {
+    /// Payload bytes on the wire (excluding the frame header).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => (v.len() * 4) as u64,
+            Payload::Q8 { codes, .. } => 8 + codes.len() as u64,
+        }
+    }
+
+    /// Number of row elements the payload encodes.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::Q8 { codes, .. } => codes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the carried row. For `Q8` this is the exact
+    /// dequantization the owner computed (`lo + code·scale` in f32).
+    pub fn values(&self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v.clone(),
+            Payload::Q8 { lo, scale, codes } => {
+                codes.iter().map(|&c| lo + (c as f32) * scale).collect()
+            }
+        }
+    }
+}
+
+/// One serialized message between machines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// Exchange round (= representation layer) for halo rows; layer
+    /// index for gradient chunks.
+    pub layer: u32,
+    /// Global vertex id (halo rows) or matrix index (gradient chunks).
+    pub id: u32,
+    pub payload: Payload,
+}
+
+impl Frame {
+    pub fn halo_row(layer: u32, vertex: u32, payload: Payload) -> Frame {
+        Frame { kind: FrameKind::HaloRow, layer, id: vertex, payload }
+    }
+
+    pub fn grad_chunk(layer: u32, mat: u32, values: &[f32]) -> Frame {
+        Frame {
+            kind: FrameKind::GradChunk,
+            layer,
+            id: mat,
+            payload: Payload::F32(values.to_vec()),
+        }
+    }
+
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        FRAME_HEADER_BYTES + self.payload.wire_bytes()
+    }
+
+    /// Encode to wire bytes. `encode().len() == wire_bytes()` always.
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.payload.len() as u32;
+        let mut out = Vec::with_capacity(self.wire_bytes() as usize);
+        out.push(self.kind.tag());
+        match &self.payload {
+            Payload::F32(_) => out.push(0u8),
+            Payload::Q8 { .. } => out.push(1u8),
+        }
+        out.extend_from_slice(&(self.layer as u16).to_le_bytes());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&n.to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]);
+        match &self.payload {
+            Payload::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::Q8 { lo, scale, codes } => {
+                out.extend_from_slice(&lo.to_le_bytes());
+                out.extend_from_slice(&scale.to_le_bytes());
+                out.extend_from_slice(codes);
+            }
+        }
+        out
+    }
+
+    /// Decode wire bytes produced by [`Frame::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        if bytes.len() < FRAME_HEADER_BYTES as usize {
+            return Err(anyhow!("frame truncated: {} header bytes", bytes.len()));
+        }
+        let kind = FrameKind::from_tag(bytes[0])?;
+        let q8 = match bytes[1] {
+            0 => false,
+            1 => true,
+            other => return Err(anyhow!("unknown payload tag {other}")),
+        };
+        let layer = u16::from_le_bytes([bytes[2], bytes[3]]) as u32;
+        let id = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        let n = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        let body = &bytes[FRAME_HEADER_BYTES as usize..];
+        let payload = if q8 {
+            if body.len() != 8 + n {
+                return Err(anyhow!("q8 payload size {} != {}", body.len(), 8 + n));
+            }
+            let lo = f32::from_le_bytes([body[0], body[1], body[2], body[3]]);
+            let scale = f32::from_le_bytes([body[4], body[5], body[6], body[7]]);
+            Payload::Q8 { lo, scale, codes: body[8..].to_vec() }
+        } else {
+            if body.len() != n * 4 {
+                return Err(anyhow!("f32 payload size {} != {}", body.len(), n * 4));
+            }
+            let mut v = Vec::with_capacity(n);
+            for c in body.chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Payload::F32(v)
+        };
+        Ok(Frame { kind, layer, id, payload })
+    }
+}
+
+/// Planned wire size of a halo-row frame whose payload occupies
+/// `bytes_per_row` bytes (full f32 width or the quantized width).
+pub fn planned_frame_bytes(bytes_per_row: u64) -> u64 {
+    FRAME_HEADER_BYTES + bytes_per_row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_is_bit_exact() {
+        let row = vec![1.5f32, -0.0, f32::NAN, f32::INFINITY, 3.0e-42];
+        let f = Frame::halo_row(2, 77, Payload::F32(row.clone()));
+        let bytes = f.encode();
+        assert_eq!(bytes.len() as u64, f.wire_bytes());
+        let back = Frame::decode(&bytes).unwrap();
+        assert_eq!(back.kind, FrameKind::HaloRow);
+        assert_eq!(back.layer, 2);
+        assert_eq!(back.id, 77);
+        let vals = back.payload.values();
+        assert_eq!(vals.len(), row.len());
+        for (a, b) in vals.iter().zip(&row) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact roundtrip");
+        }
+    }
+
+    #[test]
+    fn q8_roundtrip_matches_dequantization() {
+        let (lo, scale) = (-1.25f32, 0.03f32);
+        let codes: Vec<u8> = (0..=255).collect();
+        let f = Frame::halo_row(1, 9, Payload::Q8 { lo, scale, codes: codes.clone() });
+        let bytes = f.encode();
+        assert_eq!(bytes.len() as u64, f.wire_bytes());
+        assert_eq!(f.wire_bytes(), FRAME_HEADER_BYTES + 8 + 256);
+        let back = Frame::decode(&bytes).unwrap();
+        let vals = back.payload.values();
+        for (c, v) in codes.iter().zip(&vals) {
+            let expect = lo + (*c as f32) * scale;
+            assert_eq!(v.to_bits(), expect.to_bits());
+        }
+    }
+
+    #[test]
+    fn q8_is_smaller_than_f32() {
+        let f32_frame = Frame::halo_row(0, 1, Payload::F32(vec![0.0; 64]));
+        let q8_frame = Frame::halo_row(
+            0,
+            1,
+            Payload::Q8 { lo: 0.0, scale: 0.0, codes: vec![0; 64] },
+        );
+        assert!(q8_frame.wire_bytes() < f32_frame.wire_bytes() / 2);
+        assert_eq!(planned_frame_bytes(64 * 4), f32_frame.wire_bytes());
+        assert_eq!(planned_frame_bytes(8 + 64), q8_frame.wire_bytes());
+    }
+
+    #[test]
+    fn grad_chunk_roundtrip() {
+        let mat = vec![0.25f32; 12];
+        let f = Frame::grad_chunk(3, 1, &mat);
+        let back = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(back.kind, FrameKind::GradChunk);
+        assert_eq!(back.layer, 3);
+        assert_eq!(back.id, 1);
+        assert_eq!(back.payload.values(), mat);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Frame::decode(&[]).is_err());
+        assert!(Frame::decode(&[9u8; 16]).is_err());
+        let mut good = Frame::halo_row(0, 0, Payload::F32(vec![1.0])).encode();
+        good.pop(); // truncate payload
+        assert!(Frame::decode(&good).is_err());
+    }
+}

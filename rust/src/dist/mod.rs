@@ -8,11 +8,14 @@
 //! model the paper's Table 9 uses (PCIe ≈ 12 GB/s vs 10 GbE ≈ 1.2 GB/s).
 //!
 //! [`train_distributed`] runs the staged [`Session`] over a cluster and
-//! reports throughput as simulated epochs/second. This is a *simulation
-//! stub* of multi-machine training: the numerics are identical to the
-//! single-machine path (full-batch, exact all-reduce); only the
-//! communication cost model changes. Real multi-process transport can
-//! slot in behind the same `Cluster` surface later.
+//! reports throughput as simulated epochs/second. On a multi-machine
+//! cluster the session takes the machine-aware execution path: halo rows
+//! and gradients cross machines as *serialized byte frames*
+//! ([`crate::comm::transport`]) with machine-granularity dedup, each
+//! machine has its own CPU global cache, and the gradient all-reduce is
+//! hierarchical (intra-machine merge → inter-machine frame exchange →
+//! broadcast). [`DistReport`] carries the measured cross-machine wire
+//! bytes Table 9 reports, next to the naive per-worker baseline.
 
 use crate::device::profile::{DeviceKind, Gpu, GpuGroup};
 use crate::device::topology::Topology;
@@ -20,7 +23,7 @@ use crate::graph::Dataset;
 use crate::runtime::Backend;
 use crate::train::{Session, TrainConfig, TrainReport};
 use crate::util::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// A set of simulated workers plus their interconnect, with an optional
 /// machine assignment for multi-machine shapes.
@@ -40,10 +43,18 @@ pub const ETHER_MULT: f64 = 10.0;
 impl Cluster {
     /// Wrap an explicit device list and topology (single machine). This is
     /// the bridge from the legacy `(&[Gpu], &Topology)` call shape.
-    pub fn from_parts(gpus: Vec<Gpu>, topology: Topology) -> Cluster {
-        assert_eq!(gpus.len(), topology.n(), "topology size must match GPU count");
+    /// Errors (instead of panicking — this is a public constructor) when
+    /// the topology size does not match the device count.
+    pub fn from_parts(gpus: Vec<Gpu>, topology: Topology) -> Result<Cluster> {
+        if gpus.len() != topology.n() {
+            return Err(anyhow!(
+                "topology size {} must match GPU count {}",
+                topology.n(),
+                gpus.len()
+            ));
+        }
         let n = gpus.len();
-        Cluster { name: "custom".into(), gpus, topology, machine_of: vec![0; n] }
+        Ok(Cluster { name: "custom".into(), gpus, topology, machine_of: vec![0; n] })
     }
 
     /// `n` identical GPUs on a PCIe-pairs board.
@@ -104,20 +115,29 @@ impl Cluster {
         let mut rng = Rng::new(seed);
         let mut gpus = Vec::new();
         let mut machine_of = Vec::new();
-        for (m, kinds) in machines.iter().enumerate() {
+        let mut m = 0usize;
+        for kinds in machines.iter() {
+            // Compact away empty machine lists so machine indices are
+            // dense — the hierarchical reduce assumes every machine
+            // 0..num_machines() hosts at least one worker.
+            if kinds.is_empty() {
+                continue;
+            }
             for &k in kinds.iter() {
                 gpus.push(Gpu::new(gpus.len(), k, &mut rng));
                 machine_of.push(m);
             }
+            m += 1;
         }
         let topology = Topology::cluster(&machine_of, ether_mult);
-        let counts: Vec<usize> = machines.iter().map(|m| m.len()).collect();
+        let counts: Vec<usize> =
+            machines.iter().filter(|m| !m.is_empty()).map(|m| m.len()).collect();
         let name = if counts.windows(2).all(|w| w[0] == w[1]) {
-            format!("{}M-{}D", machines.len(), counts.first().copied().unwrap_or(0))
+            format!("{}M-{}D", counts.len(), counts.first().copied().unwrap_or(0))
         } else {
             // Asymmetric shape: spell out per-machine device counts.
             let per: Vec<String> = counts.iter().map(|c| c.to_string()).collect();
-            format!("{}M-[{}]D", machines.len(), per.join("+"))
+            format!("{}M-[{}]D", counts.len(), per.join("+"))
         };
         Cluster { name, gpus, topology, machine_of }
     }
@@ -174,6 +194,11 @@ pub struct DistReport {
     /// *Measured* training throughput: epochs per real (wall-clock)
     /// second — the number `ExecMode::Threaded` actually improves.
     pub wall_epochs_per_sec: f64,
+    /// Cross-machine wire bytes, measured from serialized frames (halo
+    /// rows with machine dedup + hierarchical all-reduce gradients).
+    pub cross_machine_bytes: u64,
+    /// The naive baseline: per-worker frames and a flat all-reduce.
+    pub cross_machine_bytes_naive: u64,
     pub report: TrainReport,
 }
 
@@ -194,6 +219,8 @@ pub fn train_distributed(
         machines: cluster.num_machines(),
         epochs_per_sec: if total > 0.0 { epochs / total } else { 0.0 },
         wall_epochs_per_sec: if total_wall > 0.0 { epochs / total_wall } else { 0.0 },
+        cross_machine_bytes: report.cross_bytes_moved,
+        cross_machine_bytes_naive: report.cross_bytes_naive,
         report,
     })
 }
@@ -246,6 +273,13 @@ mod tests {
         assert_eq!(m.name, "2M-[2+4]D");
         assert_eq!(m.n_workers(), 6);
         assert_eq!(m.num_machines(), 2);
+        // Empty machine lists are compacted away: indices stay dense so
+        // every machine 0..num_machines() hosts at least one worker.
+        let e = Cluster::multi_machine(&[&[], &[DeviceKind::Rtx3090; 2]], 10.0, 1);
+        assert_eq!(e.num_machines(), 1);
+        assert_eq!(e.n_workers(), 2);
+        assert_eq!(e.name, "1M-2D");
+        assert_eq!(e.machine_of(), &[0, 0]);
     }
 
     #[test]
@@ -287,8 +321,8 @@ mod tests {
         assert_eq!(two.machines, 2);
         assert!(one.epochs_per_sec > 0.0 && two.epochs_per_sec > 0.0);
         assert!(one.wall_epochs_per_sec > 0.0 && two.wall_epochs_per_sec > 0.0);
-        // Same devices, same partition ⇒ same bytes; Ethernet only slows
-        // the simulated clock.
+        // Same devices, same partition ⇒ same *device* bytes; Ethernet
+        // slows the simulated clock and shows up as wire frames.
         assert_eq!(one.report.bytes_moved, two.report.bytes_moved);
         assert!(
             two.report.total_comm() > one.report.total_comm(),
@@ -296,5 +330,27 @@ mod tests {
             two.report.total_comm(),
             one.report.total_comm()
         );
+        // Cross-machine bytes are measured from serialized frames: zero
+        // on one machine, positive and dedup-reduced on two.
+        assert_eq!(one.cross_machine_bytes, 0);
+        assert_eq!(one.cross_machine_bytes_naive, 0);
+        assert!(two.cross_machine_bytes > 0);
+        assert!(
+            two.cross_machine_bytes < two.cross_machine_bytes_naive,
+            "machine dedup must reduce the wire: {} vs {}",
+            two.cross_machine_bytes,
+            two.cross_machine_bytes_naive
+        );
+    }
+
+    #[test]
+    fn from_parts_validates_shape() {
+        let mut rng = Rng::new(1);
+        let gpus: Vec<Gpu> =
+            (0..2).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng)).collect();
+        assert!(Cluster::from_parts(gpus.clone(), Topology::pcie_pairs(3)).is_err());
+        let c = Cluster::from_parts(gpus, Topology::pcie_pairs(2)).unwrap();
+        assert_eq!(c.n_workers(), 2);
+        assert_eq!(c.num_machines(), 1);
     }
 }

@@ -57,6 +57,10 @@ COMMANDS:
               --no-pipe --no-cache --no-rapa --refresh 8
               --local-cap N --global-cap N --seed 42
               --early-stop PATIENCE
+              --cluster 1M-4D|2M-2D|2M-4D   multi-machine preset
+                                 (overrides --group/--parts; cross-machine
+                                 rows travel as serialized frames with
+                                 machine dedup + hierarchical all-reduce)
               --threads auto|1   'auto' = one OS thread per worker
                                  (bit-identical numerics to sequential);
                                  1 = sequential. A count N>1 behaves like
@@ -86,20 +90,36 @@ fn cmd_train(args: &Args) -> i32 {
             return 2;
         }
     };
+    let cluster = match args.get("cluster") {
+        Some(name) => match Cluster::preset(name) {
+            Some(c) => c,
+            None => {
+                eprintln!("unknown cluster preset: {name} (use 1M-4D, 2M-2D or 2M-4D)");
+                return 2;
+            }
+        },
+        None => match Cluster::from_parts(spec.gpus.clone(), spec.topology.clone()) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+    };
     println!(
-        "training {} on {} ({} vertices, {} edges) with {} GPUs [{}], backend={}, exec={}",
+        "training {} on {} ({} vertices, {} edges) with {} GPUs on {} machine(s) [{}], backend={}, exec={}",
         spec.train.model.name(),
         spec.dataset.name,
         spec.dataset.graph.n(),
         spec.dataset.graph.m(),
-        spec.gpus.len(),
+        cluster.n_workers(),
+        cluster.num_machines(),
         spec.system.name(),
         backend.name(),
         spec.train.exec.name(),
     );
     // Staged session: build once, then run epoch-by-epoch (with optional
     // early stopping on the validation curve).
-    let cluster = Cluster::from_parts(spec.gpus.clone(), spec.topology.clone());
     let run = (|| -> anyhow::Result<capgnn::train::TrainReport> {
         let mut session =
             Session::build(&spec.dataset, &cluster, backend.as_mut(), &spec.train)?;
@@ -152,6 +172,14 @@ fn cmd_train(args: &Args) -> i32 {
                 r.wall_stages.execute,
                 r.wall_stages.reduce,
             );
+            if cluster.is_multi_machine() {
+                println!(
+                    "cross-machine: {} wire bytes in serialized frames ({} naive; {:.1}% saved by machine dedup + hierarchical all-reduce)",
+                    r.cross_bytes_moved,
+                    r.cross_bytes_naive,
+                    r.cross_savings() * 100.0,
+                );
+            }
             0
         }
         Err(e) => {

@@ -57,6 +57,18 @@ pub trait Backend {
         None
     }
 
+    /// One fork per worker of a cluster (all machines — workers on other
+    /// machines are still threads of this process in the simulation).
+    /// `None` if any single fork is unavailable, so a partially-forkable
+    /// backend never starts a threaded epoch it cannot finish.
+    fn fork_workers(&self, n: usize) -> Option<Vec<Box<dyn Backend + Send>>> {
+        let mut forks = Vec::with_capacity(n);
+        for _ in 0..n {
+            forks.push(self.fork()?);
+        }
+        Some(forks)
+    }
+
     fn name(&self) -> &'static str;
 }
 

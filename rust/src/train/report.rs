@@ -24,6 +24,13 @@ pub struct TrainReport {
     /// Device bytes moved / saved by caching over the run.
     pub bytes_moved: u64,
     pub bytes_saved: u64,
+    /// Cross-machine wire bytes, measured from the serialized frames the
+    /// executors actually shipped (halo rows + hierarchical all-reduce
+    /// gradients). Zero on a single machine.
+    pub cross_bytes_moved: u64,
+    /// What naive per-worker delivery and a flat all-reduce would have
+    /// put on the Ethernet (Table 9's dedup baseline).
+    pub cross_bytes_naive: u64,
     /// Final cache statistics.
     pub cache: TwoLevelStats,
     /// *Measured* wall-clock per epoch (real seconds — what the threaded
@@ -75,6 +82,16 @@ impl TrainReport {
             0.0
         } else {
             self.total_wall() / self.epoch_wall.len() as f64
+        }
+    }
+
+    /// Fraction of cross-machine wire bytes the machine-granularity
+    /// dedup + hierarchical all-reduce saved vs the naive path.
+    pub fn cross_savings(&self) -> f64 {
+        if self.cross_bytes_naive == 0 {
+            0.0
+        } else {
+            1.0 - self.cross_bytes_moved as f64 / self.cross_bytes_naive as f64
         }
     }
 

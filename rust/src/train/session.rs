@@ -14,9 +14,12 @@
 //! capabilities (substitution S1); numerics are real (PJRT or native).
 
 use crate::cache::{cal_capacity, key_of, CapacityInput, TwoLevelCache, TwoLevelStats};
-use crate::comm::exchange::{ExchangeEngine, ExchangeParams, FillDirective, SendDirective};
+use crate::comm::exchange::{
+    CrossSend, ExchangeEngine, ExchangeParams, FillDirective, SendDirective,
+};
 use crate::comm::pipeline;
-use crate::comm::queues::{HaloInbox, RowMsg};
+use crate::comm::queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};
+use crate::comm::transport::{Frame, Payload, FRAME_HEADER_BYTES};
 use crate::device::profile::Gpu;
 use crate::device::simclock::{StageTimes, WallStages};
 use crate::dist::Cluster;
@@ -71,6 +74,9 @@ pub struct EpochStats {
     /// Device bytes moved / saved by caching during this epoch.
     pub bytes_moved: u64,
     pub bytes_saved: u64,
+    /// Cross-machine wire bytes this epoch (serialized frames: halo rows
+    /// + hierarchical all-reduce gradients). Zero on a single machine.
+    pub cross_bytes: u64,
     /// Mean per-worker stage breakdown for this epoch.
     pub stages: StageTimes,
     /// Cumulative cache counters after this epoch.
@@ -190,6 +196,8 @@ pub struct Session<'a> {
     workers: Vec<Worker>,
     cache: TwoLevelCache,
     engine: ExchangeEngine<'a>,
+    /// Machine index of each worker (all 0 on a single box).
+    machine_of: Vec<usize>,
     /// Per-worker backend forks for `ExecMode::Threaded` (lazily built on
     /// the first threaded epoch).
     worker_backends: Vec<Box<dyn Backend + Send>>,
@@ -364,7 +372,11 @@ impl<'a> Session<'a> {
                 ((max_global as f64 * fr).ceil() as usize) * layers_cached,
             ),
         };
-        let mut cache = TwoLevelCache::new(cfg.policy, &local_caps, global_cap);
+        // One global (CPU) cache region per machine: shared memory does
+        // not span Ethernet, so workers only see their own machine's
+        // global hits (§7).
+        let mut cache =
+            TwoLevelCache::with_machines(cfg.policy, &local_caps, global_cap, cluster.machine_of());
         // JACA priorities: vertex overlap ratio, same for every layer's key.
         let max_overlap = plan
             .parts
@@ -385,7 +397,7 @@ impl<'a> Session<'a> {
             }
         }
 
-        let engine = ExchangeEngine::new(gpus, topology);
+        let engine = ExchangeEngine::with_machines(gpus, topology, cluster.machine_of());
         let report = TrainReport {
             rapa_pruned,
             worker_stages: vec![StageTimes::default(); p],
@@ -401,6 +413,7 @@ impl<'a> Session<'a> {
             workers,
             cache,
             engine,
+            machine_of: cluster.machine_of().to_vec(),
             worker_backends: Vec::new(),
             report,
             epoch: 0,
@@ -452,6 +465,7 @@ impl<'a> Session<'a> {
             workers,
             cache,
             engine,
+            machine_of,
             worker_backends,
             report,
             epoch,
@@ -463,8 +477,10 @@ impl<'a> Session<'a> {
         let backend: &mut dyn Backend = &mut **backend;
         let epoch_now: u64 = *epoch;
         let p = workers.len();
+        let n_machines = machine_of.iter().copied().max().map_or(1, |m| m + 1);
         let bytes_moved0 = report.bytes_moved;
         let bytes_saved0 = report.bytes_saved;
+        let cross0 = report.cross_bytes_moved;
 
         for w in workers.iter_mut() {
             w.stages = StageTimes::default();
@@ -489,9 +505,14 @@ impl<'a> Session<'a> {
             (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
         let mut sends_by_worker: Vec<Vec<Vec<SendDirective>>> =
             (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+        let mut cross_by_worker: Vec<Vec<Vec<CrossSend>>> =
+            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
         let mut expect_by_worker: Vec<Vec<usize>> =
             (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
         let mut fills: Vec<(usize, FillDirective)> = Vec::new();
+        let mut planned_bytes_moved = 0u64;
+        let mut planned_bytes_saved = 0u64;
+        let mut planned_cross_naive = 0u64;
         let mut comm_stages = vec![StageTimes::default(); p];
         for l in 0..cfg.layers {
             let d = if l == 0 { *f_dim } else { dims[l - 1].d_out };
@@ -503,6 +524,7 @@ impl<'a> Session<'a> {
                 for w in 0..p {
                     staged_by_worker[w].push(Vec::new());
                     sends_by_worker[w].push(Vec::new());
+                    cross_by_worker[w].push(Vec::new());
                     expect_by_worker[w].push(0);
                 }
                 continue;
@@ -518,12 +540,17 @@ impl<'a> Session<'a> {
             for (cs, st) in comm_stages.iter_mut().zip(&rp.stages) {
                 cs.add(st);
             }
-            report.bytes_moved += rp.bytes_moved;
-            report.bytes_saved += rp.bytes_saved;
+            // Byte charges are committed only after the executors
+            // succeed: an aborted epoch moves nothing, so adding planned
+            // traffic here would permanently overstate the report.
+            planned_bytes_moved += rp.bytes_moved;
+            planned_bytes_saved += rp.bytes_saved;
+            planned_cross_naive += rp.cross_bytes_naive;
             fills.extend(rp.fills.drain(..).map(|f| (l, f)));
             for w in 0..p {
                 staged_by_worker[w].push(std::mem::take(&mut rp.staged[w]));
                 sends_by_worker[w].push(std::mem::take(&mut rp.sends[w]));
+                cross_by_worker[w].push(std::mem::take(&mut rp.cross[w]));
                 expect_by_worker[w].push(rp.expect[w]);
             }
             meta.push(RoundMeta { dim: d, skip: false });
@@ -541,7 +568,7 @@ impl<'a> Session<'a> {
         let layers = cfg.layers;
         let seed = cfg.seed;
         let bits = cfg.quantize_bits;
-        let outs: Vec<WorkerOut> = match cfg.exec {
+        let outs_res: Result<Vec<WorkerOut>> = match cfg.exec {
             ExecMode::Sequential => run_epoch_sequential(
                 workers,
                 backend,
@@ -552,80 +579,54 @@ impl<'a> Session<'a> {
                 &meta,
                 &staged_by_worker,
                 &sends_by_worker,
+                &cross_by_worker,
                 kind,
                 layers,
                 seed,
                 epoch_now,
                 bits,
                 &weights,
-            )?,
-            ExecMode::Threaded => {
-                if worker_backends.len() != p {
-                    let mut forks = Vec::with_capacity(p);
-                    for _ in 0..p {
-                        forks.push(backend.fork().ok_or_else(|| {
-                            anyhow!(
-                                "backend '{}' cannot run ExecMode::Threaded (no per-worker fork); use ExecMode::Sequential",
-                                backend.name()
-                            )
-                        })?);
-                    }
-                    *worker_backends = forks;
-                }
-                let (txs, rxs): (Vec<_>, Vec<_>) =
-                    (0..p).map(|_| mpsc::channel::<RowMsg>()).unzip();
-                let model_ref: &GnnModel = model;
-                let dims_ref: &[LayerDims] = dims;
-                let meta_ref: &[RoundMeta] = &meta;
-                let parts_ref: &[Subgraph] = &plan.parts;
-                let gpus_ref: &[Gpu] = engine.gpus;
-                let results: Vec<Result<WorkerOut>> = std::thread::scope(|scope| {
-                    let mut handles = Vec::with_capacity(p);
-                    let mut rx_iter = rxs.into_iter();
-                    let mut staged_iter = staged_by_worker.into_iter();
-                    let mut sends_iter = sends_by_worker.into_iter();
-                    let mut expect_iter = expect_by_worker.into_iter();
-                    let mut wb_iter = worker_backends.iter_mut();
-                    for (wi, w) in workers.iter_mut().enumerate() {
-                        let task = WorkerTask {
-                            sg: &parts_ref[wi],
-                            gpu: &gpus_ref[wi],
-                            model: model_ref,
-                            dims: dims_ref,
-                            meta: meta_ref,
-                            kind,
-                            layers,
-                            seed,
-                            epoch: epoch_now,
-                            bits,
-                            weight: weights[wi],
-                            staged: staged_iter.next().unwrap(),
-                            sends: sends_iter.next().unwrap(),
-                            expect: expect_iter.next().unwrap(),
-                            txs: txs.clone(),
-                            rx: rx_iter.next().unwrap(),
-                        };
-                        let wb = wb_iter.next().unwrap();
-                        handles
-                            .push(scope.spawn(move || worker_epoch_threaded(task, w, &mut **wb)));
-                    }
-                    drop(txs);
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("worker thread panicked"))
-                        .collect()
-                });
-                let mut outs = Vec::with_capacity(p);
-                for r in results {
-                    outs.push(r?);
-                }
-                outs
+            ),
+            ExecMode::Threaded => run_epoch_threaded(
+                workers,
+                backend,
+                worker_backends,
+                &plan.parts,
+                engine.gpus,
+                model,
+                dims,
+                &meta,
+                staged_by_worker,
+                sends_by_worker,
+                cross_by_worker,
+                expect_by_worker,
+                n_machines,
+                kind,
+                layers,
+                seed,
+                epoch_now,
+                bits,
+                &weights,
+            ),
+        };
+        let outs = match outs_res {
+            Ok(outs) => outs,
+            Err(e) => {
+                // A worker died after the plan ran `fill_pending`: sweep
+                // the content-less pending entries so the next epoch
+                // re-misses (and re-fetches) instead of hitting rows that
+                // do not exist.
+                cache.purge_pending();
+                return Err(e);
             }
         };
         let wall_execute = t_exec.elapsed().as_secs_f64();
 
         // ---- Reduce: deterministic merge in worker-index order ----------
         let t_reduce = Instant::now();
+        // The executors ran: commit the planned device-byte charges.
+        report.bytes_moved += planned_bytes_moved;
+        report.bytes_saved += planned_bytes_saved;
         // Rows that could not be quantized traveled at full f32 precision —
         // charge the difference so byte accounting matches the wire.
         let mut full_rows_by_round = vec![0u64; meta.len()];
@@ -642,31 +643,90 @@ impl<'a> Session<'a> {
                 report.bytes_moved += fr * (full - bpr);
             }
         }
+        // Cross-machine halo traffic, measured from the serialized frames
+        // the executors actually shipped (sum of u64s — order-free, so
+        // both executors agree bit-for-bit). The planned naive baseline
+        // lands together with it, keeping moved/naive epoch-consistent.
+        report.cross_bytes_moved += outs.iter().map(|o| o.cross_bytes).sum::<u64>();
+        report.cross_bytes_naive += planned_cross_naive;
 
-        let mut grads = model.zero_grads();
         let mut loss_sum = 0.0f32;
         let mut val_correct = 0.0f32;
         let mut val_total = 0.0f32;
         for out in &outs {
-            GnnModel::merge_grads(&mut grads, &out.grads);
             loss_sum += out.loss;
             val_correct += out.val_correct;
             val_total += out.val_total;
         }
 
         // ---- Gradient all-reduce + step ---------------------------------
+        // Single machine: flat merge in worker-index order (the PR 2
+        // reference numerics). Multi-machine: hierarchical — merge within
+        // each machine in worker order, ship machine partials to the root
+        // machine as serialized GradChunk frames, merge in machine order,
+        // and broadcast the reduced frames back. The optimizer steps on
+        // the *decoded* broadcast, so weights really did cross the wire.
+        let grads = if n_machines == 1 {
+            let mut grads = model.zero_grads();
+            for out in &outs {
+                GnnModel::merge_grads(&mut grads, &out.grads);
+            }
+            grads
+        } else {
+            let mut machine_grads: Vec<Grads> = Vec::with_capacity(n_machines);
+            for m in 0..n_machines {
+                let mut g = model.zero_grads();
+                for (wi, out) in outs.iter().enumerate() {
+                    if machine_of[wi] == m {
+                        GnnModel::merge_grads(&mut g, &out.grads);
+                    }
+                }
+                machine_grads.push(g);
+            }
+            let mut grads = machine_grads[0].clone();
+            let mut wire_bytes = 0u64;
+            for mg in machine_grads.iter().skip(1) {
+                let (decoded, bytes) = grads_over_wire(mg);
+                wire_bytes += bytes;
+                GnnModel::merge_grads(&mut grads, &decoded);
+            }
+            // Broadcast the reduced gradients back to every non-root
+            // machine; the step below uses the decoded copy.
+            let (decoded, down_bytes) = grads_over_wire(&grads);
+            wire_bytes += down_bytes * (n_machines as u64 - 1);
+            report.cross_bytes_moved += wire_bytes;
+            // Naive baseline: a flat all-reduce ships every non-root
+            // worker's gradients up and back down individually.
+            let off_root =
+                machine_of.iter().filter(|&&m| m != machine_of[0]).count() as u64;
+            report.cross_bytes_naive += 2 * off_root * down_bytes;
+            decoded
+        };
+
         let grad_bytes = model.grad_bytes();
-        let ring_bytes = (grad_bytes as f64 * 2.0 * (p as f64 - 1.0) / p as f64) as u64;
-        for (wi, w) in workers.iter_mut().enumerate() {
-            if p > 1 {
-                let t = engine.topology.transfer_time(
-                    engine.gpus,
-                    wi,
-                    (wi + 1) % p,
-                    ring_bytes,
-                    p,
+        if p > 1 {
+            if n_machines == 1 {
+                let ring_bytes = (grad_bytes as f64 * 2.0 * (p as f64 - 1.0) / p as f64) as u64;
+                for (wi, w) in workers.iter_mut().enumerate() {
+                    let t = engine.topology.transfer_time(
+                        engine.gpus,
+                        wi,
+                        (wi + 1) % p,
+                        ring_bytes,
+                        p,
+                    );
+                    w.stages.communication += t * cfg.comm_multiplier;
+                }
+            } else {
+                charge_hierarchical_reduce(
+                    workers,
+                    engine,
+                    machine_of,
+                    n_machines,
+                    grad_bytes,
+                    grad_wire_bytes(model),
+                    cfg.comm_multiplier,
                 );
-                w.stages.communication += t * cfg.comm_multiplier;
             }
         }
         model.sgd_step(&grads, cfg.lr);
@@ -679,7 +739,7 @@ impl<'a> Session<'a> {
         // steady-state path.
         for (ri, f) in &fills {
             let m = meta[*ri];
-            let (row, _) = fresh_row(
+            let row = fresh_row(
                 &workers[f.owner],
                 *ri,
                 m.dim,
@@ -688,7 +748,8 @@ impl<'a> Session<'a> {
                 bits,
                 seed,
                 epoch_now,
-            );
+            )
+            .values;
             if f.refresh {
                 cache.refresh(f.key, &row, epoch_now);
             } else {
@@ -729,6 +790,7 @@ impl<'a> Session<'a> {
             val_acc,
             bytes_moved: report.bytes_moved - bytes_moved0,
             bytes_saved: report.bytes_saved - bytes_saved0,
+            cross_bytes: report.cross_bytes_moved - cross0,
             stages: mean,
             cache: cache.stats,
             wall,
@@ -811,6 +873,16 @@ impl<'a> Session<'a> {
         &self.report
     }
 
+    /// Cumulative cache counters (useful between epochs — e.g. to verify
+    /// abort-path cleanup without waiting for [`Session::finish`]).
+    pub fn cache_stats(&self) -> TwoLevelStats {
+        self.cache.stats
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.machine_of.iter().copied().max().map_or(1, |m| m + 1)
+    }
+
     /// Close the run: score the test split from the final logits and
     /// return the accumulated [`TrainReport`].
     pub fn finish(mut self) -> Result<TrainReport> {
@@ -843,6 +915,9 @@ struct WorkerOut {
     /// Per-round count of owned rows that could not be quantized (the
     /// coordinator charges them at full precision).
     full_rows: Vec<u64>,
+    /// Wire bytes of the cross-machine frames this worker serialized
+    /// (measured from `Frame::wire_bytes`, not modeled).
+    cross_bytes: u64,
 }
 
 /// Everything one threaded worker needs for an epoch: shared structure by
@@ -862,11 +937,16 @@ struct WorkerTask<'a> {
     weight: f32,
     /// Cached rows per round: (halo idx, row), cloned at plan time.
     staged: Vec<Vec<(usize, Vec<f32>)>>,
-    /// Rows this worker owns and must deliver, per round.
+    /// Rows this worker owns and must deliver intra-machine, per round.
     sends: Vec<Vec<SendDirective>>,
+    /// Deduplicated cross-machine deliveries this worker owns, per round
+    /// (serialized frames to each destination machine's router).
+    cross: Vec<Vec<CrossSend>>,
     /// Fresh rows this worker receives, per round.
     expect: Vec<usize>,
     txs: Vec<mpsc::Sender<RowMsg>>,
+    /// Frame channel of each machine's router (empty on one machine).
+    frame_txs: Vec<mpsc::Sender<FrameMsg>>,
     rx: mpsc::Receiver<RowMsg>,
 }
 
@@ -906,9 +986,34 @@ fn row_rng(seed: u64, epoch: u64, layer: usize, vertex: u32) -> Rng {
     )
 }
 
+/// One authoritative wire row: the values every recipient aggregates
+/// with, plus the exact quantized codes (when AdaQP applied) so
+/// cross-machine frames can ship the int8 representation and still
+/// dequantize to the same bits.
+pub(crate) struct WireRow {
+    pub values: Vec<f32>,
+    /// False = non-finite row passed through at full precision (charged
+    /// at full f32 width by the coordinator).
+    pub quantized: bool,
+    /// (lo, scale, codes) when the row was quantized to ≤ 8 bits.
+    pub q8: Option<(f32, f32, Vec<u8>)>,
+}
+
+impl WireRow {
+    /// Frame payload for the cross-machine hop: the quantized codes when
+    /// they exist, full f32 otherwise.
+    fn payload(&self) -> Payload {
+        match &self.q8 {
+            Some((lo, scale, codes)) => {
+                Payload::Q8 { lo: *lo, scale: *scale, codes: codes.clone() }
+            }
+            None => Payload::F32(self.values.clone()),
+        }
+    }
+}
+
 /// Read (and optionally quantize) the authoritative wire row of `vertex`
-/// from its owner's representation `l`. Returns the row and whether
-/// quantization applied.
+/// from its owner's representation `l`.
 fn fresh_row(
     owner: &Worker,
     l: usize,
@@ -918,15 +1023,15 @@ fn fresh_row(
     bits: Option<u8>,
     seed: u64,
     epoch: u64,
-) -> (Vec<f32>, bool) {
+) -> WireRow {
     let src = src_row * d;
     let row = &owner.h[l][src..src + d];
     match bits {
         Some(b) => {
             let mut rng = row_rng(seed, epoch, l, vertex);
-            quantize(row, b, &mut rng)
+            quantize_wire(row, b, &mut rng)
         }
-        None => (row.to_vec(), true),
+        None => WireRow { values: row.to_vec(), quantized: true, q8: None },
     }
 }
 
@@ -1049,6 +1154,9 @@ fn loss_and_backward(
 
 /// The sequential executor: one thread walks rounds and workers in index
 /// order, delivering staged rows and fresh owner rows in place.
+/// Cross-machine deliveries take the real serialization hop — encode to a
+/// frame, count its wire bytes, decode, fan out — so byte accounting and
+/// numerics match the threaded router path exactly.
 #[allow(clippy::too_many_arguments)]
 fn run_epoch_sequential(
     workers: &mut [Worker],
@@ -1060,6 +1168,7 @@ fn run_epoch_sequential(
     meta: &[RoundMeta],
     staged: &[Vec<Vec<(usize, Vec<f32>)>>],
     sends: &[Vec<Vec<SendDirective>>],
+    cross: &[Vec<Vec<CrossSend>>],
     kind: ModelKind,
     layers: usize,
     seed: u64,
@@ -1069,6 +1178,7 @@ fn run_epoch_sequential(
 ) -> Result<Vec<WorkerOut>> {
     let p = workers.len();
     let mut full_rows: Vec<Vec<u64>> = vec![vec![0u64; meta.len()]; p];
+    let mut cross_bytes = vec![0u64; p];
     for l in 0..=layers {
         if l < meta.len() {
             let m = meta[l];
@@ -1085,7 +1195,7 @@ fn run_epoch_sequential(
                 }
                 for ow in 0..p {
                     for dct in &sends[ow][l] {
-                        let (row, quantized) = fresh_row(
+                        let wire = fresh_row(
                             &workers[ow],
                             l,
                             m.dim,
@@ -1095,10 +1205,41 @@ fn run_epoch_sequential(
                             seed,
                             epoch,
                         );
-                        if !quantized {
+                        if !wire.quantized {
                             full_rows[ow][l] += 1;
                         }
                         for &(rw, rhi) in &dct.recipients {
+                            place_row(
+                                &mut workers[rw],
+                                parts[rw].n_inner,
+                                l,
+                                m.dim,
+                                rhi,
+                                &wire.values,
+                            );
+                        }
+                    }
+                    for cs in &cross[ow][l] {
+                        let wire = fresh_row(
+                            &workers[ow],
+                            l,
+                            m.dim,
+                            cs.src_row,
+                            cs.vertex,
+                            bits,
+                            seed,
+                            epoch,
+                        );
+                        if !wire.quantized {
+                            full_rows[ow][l] += cs.charges as u64;
+                        }
+                        let frame = Frame::halo_row(l as u32, cs.vertex, wire.payload());
+                        cross_bytes[ow] += frame.wire_bytes();
+                        let row = Frame::decode(&frame.encode())
+                            .expect("halo frame roundtrip")
+                            .payload
+                            .values();
+                        for &(rw, rhi) in &cs.recipients {
                             place_row(&mut workers[rw], parts[rw].n_inner, l, m.dim, rhi, &row);
                         }
                     }
@@ -1131,6 +1272,7 @@ fn run_epoch_sequential(
             val_correct,
             val_total,
             full_rows: std::mem::take(&mut full_rows[wi]),
+            cross_bytes: cross_bytes[wi],
         });
     }
     Ok(outs)
@@ -1153,6 +1295,161 @@ impl Drop for PoisonOnDrop<'_> {
             }
         }
     }
+}
+
+/// The threaded executor: one OS thread per worker (as in PR 2) plus, on
+/// a multi-machine cluster, one *router* thread per machine. Owners push
+/// cross-machine rows as serialized frames into the destination machine's
+/// router channel; the router decodes each frame once and fans the row
+/// out to every co-located recipient from its plan-derived route table —
+/// the receive side of the §7 machine-granularity dedup.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch_threaded(
+    workers: &mut [Worker],
+    backend: &mut dyn Backend,
+    worker_backends: &mut Vec<Box<dyn Backend + Send>>,
+    parts: &[Subgraph],
+    gpus: &[Gpu],
+    model: &GnnModel,
+    dims: &[LayerDims],
+    meta: &[RoundMeta],
+    staged_by_worker: Vec<Vec<Vec<(usize, Vec<f32>)>>>,
+    sends_by_worker: Vec<Vec<Vec<SendDirective>>>,
+    cross_by_worker: Vec<Vec<Vec<CrossSend>>>,
+    expect_by_worker: Vec<Vec<usize>>,
+    n_machines: usize,
+    kind: ModelKind,
+    layers: usize,
+    seed: u64,
+    epoch: u64,
+    bits: Option<u8>,
+    weights: &[f32],
+) -> Result<Vec<WorkerOut>> {
+    let p = workers.len();
+    if worker_backends.len() != p {
+        *worker_backends = backend.fork_workers(p).ok_or_else(|| {
+            anyhow!(
+                "backend '{}' cannot run ExecMode::Threaded (no per-worker fork); use ExecMode::Sequential",
+                backend.name()
+            )
+        })?;
+    }
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| mpsc::channel::<RowMsg>()).unzip();
+    // Per-machine frame channels + receive-side route tables (only when
+    // the cluster actually spans machines).
+    let routed = n_machines > 1;
+    let (ftxs, frxs): (Vec<_>, Vec<_>) = if routed {
+        (0..n_machines).map(|_| mpsc::channel::<FrameMsg>()).unzip()
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut routes: Vec<RouteTable> = (0..if routed { n_machines } else { 0 })
+        .map(|_| RouteTable::new())
+        .collect();
+    if routed {
+        for per_round in &cross_by_worker {
+            for (l, list) in per_round.iter().enumerate() {
+                for c in list {
+                    for &(rw, rhi) in &c.recipients {
+                        routes[c.dest_machine].add(l, c.vertex, (rw, rhi));
+                    }
+                }
+            }
+        }
+    }
+    let (results, router_results) = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        let mut rx_iter = rxs.into_iter();
+        let mut staged_iter = staged_by_worker.into_iter();
+        let mut sends_iter = sends_by_worker.into_iter();
+        let mut cross_iter = cross_by_worker.into_iter();
+        let mut expect_iter = expect_by_worker.into_iter();
+        let mut wb_iter = worker_backends.iter_mut();
+        for (wi, w) in workers.iter_mut().enumerate() {
+            let task = WorkerTask {
+                sg: &parts[wi],
+                gpu: &gpus[wi],
+                model,
+                dims,
+                meta,
+                kind,
+                layers,
+                seed,
+                epoch,
+                bits,
+                weight: weights[wi],
+                staged: staged_iter.next().unwrap(),
+                sends: sends_iter.next().unwrap(),
+                cross: cross_iter.next().unwrap(),
+                expect: expect_iter.next().unwrap(),
+                txs: txs.clone(),
+                frame_txs: ftxs.clone(),
+                rx: rx_iter.next().unwrap(),
+            };
+            let wb = wb_iter.next().unwrap();
+            handles.push(scope.spawn(move || worker_epoch_threaded(task, w, &mut **wb)));
+        }
+        let mut router_handles = Vec::with_capacity(routes.len());
+        let mut frx_iter = frxs.into_iter();
+        for rt in routes.drain(..) {
+            let frx = frx_iter.next().unwrap();
+            let row_txs = txs.clone();
+            router_handles.push(scope.spawn(move || machine_router(frx, rt, &row_txs)));
+        }
+        drop(txs);
+        drop(ftxs);
+        // Workers first: once they are done (or dead), every frame sender
+        // is dropped and the routers drain out.
+        let results: Vec<Result<WorkerOut>> = handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect();
+        let router_results: Vec<Result<()>> = router_handles
+            .into_iter()
+            .map(|h| h.join().expect("router thread panicked"))
+            .collect();
+        (results, router_results)
+    });
+    let mut outs = Vec::with_capacity(p);
+    for r in results {
+        outs.push(r?);
+    }
+    for r in router_results {
+        r?;
+    }
+    Ok(outs)
+}
+
+/// One machine's frame router: decode each inbound frame once, fan the
+/// row out to the local recipients the plan registered. Exits when every
+/// owner has dropped its frame sender; poisons local workers if routing
+/// fails so nobody deadlocks.
+fn machine_router(
+    rx: mpsc::Receiver<FrameMsg>,
+    mut routes: RouteTable,
+    row_txs: &[mpsc::Sender<RowMsg>],
+) -> Result<()> {
+    let mut guard = PoisonOnDrop { txs: row_txs, armed: true };
+    let res = (|| -> Result<()> {
+        while let Ok(msg) = rx.recv() {
+            let frame = Frame::decode(&msg.bytes)?;
+            let round = frame.layer as usize;
+            let row = frame.payload.values();
+            let recipients = routes.take(round, frame.id).ok_or_else(|| {
+                anyhow!("no route for round {round} vertex {} on this machine", frame.id)
+            })?;
+            for (w, hi) in recipients {
+                row_txs[w]
+                    .send(RowMsg { round, hi, row: row.clone() })
+                    .map_err(|_| anyhow!("worker {w} hung up (frame fan-out)"))?;
+            }
+        }
+        Ok(())
+    })();
+    if res.is_ok() {
+        guard.armed = false;
+    }
+    res
 }
 
 /// One threaded worker's epoch: send own rows as soon as each layer is
@@ -1182,6 +1479,7 @@ fn worker_epoch_body(
     let n_halo = t.sg.n_halo();
     let mut inbox = HaloInbox::new(rounds);
     let mut full_rows = vec![0u64; rounds];
+    let mut cross_bytes = 0u64;
     for l in 0..=t.layers {
         if l < rounds {
             let m = t.meta[l];
@@ -1192,17 +1490,34 @@ fn worker_epoch_body(
                 // receivers still busy with earlier layers bank them, so
                 // the halo exchange overlaps their compute.
                 for dct in &t.sends[l] {
-                    let (row, quantized) = fresh_row(
+                    let wire = fresh_row(
                         w, l, m.dim, dct.src_row, dct.vertex, t.bits, t.seed, t.epoch,
                     );
-                    if !quantized {
+                    if !wire.quantized {
                         full_rows[l] += 1;
                     }
                     for &(rw, rhi) in &dct.recipients {
                         t.txs[rw]
-                            .send(RowMsg { round: l, hi: rhi, row: row.clone() })
+                            .send(RowMsg { round: l, hi: rhi, row: wire.values.clone() })
                             .map_err(|_| anyhow!("worker {rw} hung up mid-epoch"))?;
                     }
+                }
+                // Cross-machine rows leave as one serialized frame per
+                // destination machine; the router fans them out there.
+                for cs in &t.cross[l] {
+                    let wire = fresh_row(
+                        w, l, m.dim, cs.src_row, cs.vertex, t.bits, t.seed, t.epoch,
+                    );
+                    if !wire.quantized {
+                        full_rows[l] += cs.charges as u64;
+                    }
+                    let frame = Frame::halo_row(l as u32, cs.vertex, wire.payload());
+                    cross_bytes += frame.wire_bytes();
+                    t.frame_txs[cs.dest_machine]
+                        .send(FrameMsg { bytes: frame.encode() })
+                        .map_err(|_| {
+                            anyhow!("machine {} router hung up mid-epoch", cs.dest_machine)
+                        })?;
                 }
                 for (hi, row) in &t.staged[l] {
                     place_row(w, n_inner, l, m.dim, *hi, row);
@@ -1238,7 +1553,86 @@ fn worker_epoch_body(
     let (grads, loss, val_correct, val_total) = loss_and_backward(
         w, backend, t.model, t.dims, t.layers, t.kind, t.gpu, n_inner, t.weight,
     )?;
-    Ok(WorkerOut { grads, loss, val_correct, val_total, full_rows })
+    Ok(WorkerOut { grads, loss, val_correct, val_total, full_rows, cross_bytes })
+}
+
+/// Serialize gradient matrices into GradChunk frames and decode them
+/// back — the Ethernet hop of the hierarchical all-reduce. Returns the
+/// decoded gradients (bit-identical: f32 ↔ LE bytes is lossless) and the
+/// measured wire bytes.
+fn grads_over_wire(grads: &Grads) -> (Grads, u64) {
+    let mut bytes = 0u64;
+    let decoded: Grads = grads
+        .iter()
+        .enumerate()
+        .map(|(l, mats)| {
+            mats.iter()
+                .enumerate()
+                .map(|(mi, mat)| {
+                    let frame = Frame::grad_chunk(l as u32, mi as u32, mat);
+                    bytes += frame.wire_bytes();
+                    Frame::decode(&frame.encode())
+                        .expect("grad frame roundtrip")
+                        .payload
+                        .values()
+                })
+                .collect()
+        })
+        .collect();
+    (decoded, bytes)
+}
+
+/// Wire size of one machine's gradient partial (every matrix framed).
+fn grad_wire_bytes(model: &GnnModel) -> u64 {
+    model
+        .weights
+        .iter()
+        .flat_map(|l| l.iter().map(|m| FRAME_HEADER_BYTES + (m.len() * 4) as u64))
+        .sum()
+}
+
+/// Simulated time of the hierarchical all-reduce: a ring among each
+/// machine's workers over PCIe, then a leader ring between machines over
+/// Ethernet carrying the framed machine partials.
+fn charge_hierarchical_reduce(
+    workers: &mut [Worker],
+    engine: &ExchangeEngine<'_>,
+    machine_of: &[usize],
+    n_machines: usize,
+    grad_bytes: u64,
+    grad_frames: u64,
+    comm_multiplier: f64,
+) {
+    for m in 0..n_machines {
+        let peers: Vec<usize> = (0..machine_of.len()).filter(|&w| machine_of[w] == m).collect();
+        let k = peers.len();
+        if k > 1 {
+            let ring = (grad_bytes as f64 * 2.0 * (k as f64 - 1.0) / k as f64) as u64;
+            for (i, &wi) in peers.iter().enumerate() {
+                let next = peers[(i + 1) % k];
+                let t = engine.topology.transfer_time(engine.gpus, wi, next, ring, k);
+                workers[wi].stages.communication += t * comm_multiplier;
+            }
+        }
+    }
+    // Machine leaders exchange framed partials over Ethernet (the
+    // cross-machine link multiplier lives in transfer_time). A machine
+    // index with no workers simply has no leader (Cluster constructors
+    // compact those away, but stay panic-free regardless).
+    let leaders: Vec<usize> = (0..n_machines)
+        .filter_map(|m| (0..machine_of.len()).find(|&w| machine_of[w] == m))
+        .collect();
+    if leaders.len() > 1 {
+        let mm = n_machines as f64;
+        let ring = (grad_frames as f64 * 2.0 * (mm - 1.0) / mm) as u64;
+        for (i, &wi) in leaders.iter().enumerate() {
+            let next = leaders[(i + 1) % leaders.len()];
+            let t = engine
+                .topology
+                .transfer_time(engine.gpus, wi, next, ring, leaders.len());
+            workers[wi].stages.communication += t * comm_multiplier;
+        }
+    }
 }
 
 fn axpy(acc: &mut [f32], x: &[f32]) {
@@ -1250,11 +1644,13 @@ fn axpy(acc: &mut [f32], x: &[f32]) {
 
 /// Stochastic uniform quantization of a row to `bits` (AdaQP numerics).
 ///
-/// Returns the dequantized row and whether quantization applied. A
+/// Returns the dequantized values plus — for rows quantized to ≤ 8
+/// bits — the integer wire codes, so that a serialized frame's
+/// `lo + code·scale` dequantization reproduces the same f32 bits. A
 /// constant row is exactly representable (scale 0) and counts as
 /// quantized; a row containing non-finite values is passed through at
 /// full precision and the caller must charge full-precision wire bytes.
-pub(crate) fn quantize(row: &[f32], bits: u8, rng: &mut Rng) -> (Vec<f32>, bool) {
+pub(crate) fn quantize_wire(row: &[f32], bits: u8, rng: &mut Rng) -> WireRow {
     let levels = ((1u32 << bits) - 1) as f32;
     let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
     let mut finite = true;
@@ -1267,23 +1663,41 @@ pub(crate) fn quantize(row: &[f32], bits: u8, rng: &mut Rng) -> (Vec<f32>, bool)
         hi = hi.max(v);
     }
     if !finite {
-        return (row.to_vec(), false);
+        return WireRow { values: row.to_vec(), quantized: false, q8: None };
     }
+    let codes_fit = bits <= 8;
     if hi <= lo {
         // Constant (or empty) row: exactly representable as (lo, scale 0).
-        return (row.to_vec(), true);
+        let q8 = codes_fit.then(|| (lo, 0.0f32, vec![0u8; row.len()]));
+        return WireRow { values: row.to_vec(), quantized: true, q8 };
     }
     let scale = (hi - lo) / levels;
-    let q = row
+    let mut codes = codes_fit.then(|| Vec::with_capacity(row.len()));
+    let values = row
         .iter()
         .map(|&v| {
             let q = (v - lo) / scale;
             let floor = q.floor();
             let q = if rng.f64() < (q - floor) as f64 { floor + 1.0 } else { floor };
+            // (v-lo)/scale can exceed `levels` by a rounding hair for
+            // v == hi; clamp so the u8 wire code and the dequantized
+            // value stay the same level — cross-machine frames must
+            // decode to the exact f32 co-located recipients got.
+            let q = q.min(levels);
+            if let Some(c) = codes.as_mut() {
+                c.push(q as u8);
+            }
             lo + q * scale
         })
         .collect();
-    (q, true)
+    WireRow { values, quantized: true, q8: codes.map(|c| (lo, scale, c)) }
+}
+
+/// Back-compat shape of [`quantize_wire`]: (dequantized row, quantized?).
+#[cfg(test)]
+pub(crate) fn quantize(row: &[f32], bits: u8, rng: &mut Rng) -> (Vec<f32>, bool) {
+    let w = quantize_wire(row, bits, rng);
+    (w.values, w.quantized)
 }
 
 /// Charge simulated compute time for one layer on one worker.
@@ -1440,6 +1854,172 @@ mod tests {
         assert_eq!(log.history[1].bytes_moved, 0);
         assert!(log.history[2].bytes_moved > 0);
         assert_eq!(log.history[3].bytes_moved, 0);
+    }
+
+    use crate::runtime::backend::LossGrad;
+
+    /// Backend whose chosen fork fails its first compute call — the
+    /// "worker killed mid-epoch" harness for the pending-fill purge.
+    struct FlakyBackend {
+        inner: NativeBackend,
+        forks: std::cell::Cell<usize>,
+        fail_fork: usize,
+    }
+
+    struct FlakyFork {
+        inner: NativeBackend,
+        fail_remaining: usize,
+    }
+
+    impl Backend for FlakyFork {
+        fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                   a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+            if self.fail_remaining > 0 {
+                self.fail_remaining -= 1;
+                return Err(anyhow!("injected worker fault"));
+            }
+            self.inner.gcn_fwd(n, d_in, d_out, relu, a, h, w)
+        }
+        fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                   a: &[f32], h: &[f32], w: &[f32], g: &[f32])
+                   -> Result<(Vec<f32>, Vec<f32>)> {
+            self.inner.gcn_bwd(n, d_in, d_out, relu, a, h, w, g)
+        }
+        fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32]) -> Result<Vec<f32>> {
+            self.inner.sage_fwd(n, d_in, d_out, relu, a, h, ws, wn)
+        }
+        fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32], g: &[f32])
+                    -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            self.inner.sage_bwd(n, d_in, d_out, relu, a, h, ws, wn, g)
+        }
+        fn ce_grad(&mut self, n: usize, c: usize,
+                   logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {
+            self.inner.ce_grad(n, c, logits, y, mask)
+        }
+        fn name(&self) -> &'static str {
+            "flaky-fork"
+        }
+    }
+
+    impl Backend for FlakyBackend {
+        fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                   a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+            self.inner.gcn_fwd(n, d_in, d_out, relu, a, h, w)
+        }
+        fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                   a: &[f32], h: &[f32], w: &[f32], g: &[f32])
+                   -> Result<(Vec<f32>, Vec<f32>)> {
+            self.inner.gcn_bwd(n, d_in, d_out, relu, a, h, w, g)
+        }
+        fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32]) -> Result<Vec<f32>> {
+            self.inner.sage_fwd(n, d_in, d_out, relu, a, h, ws, wn)
+        }
+        fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32], g: &[f32])
+                    -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            self.inner.sage_bwd(n, d_in, d_out, relu, a, h, ws, wn, g)
+        }
+        fn ce_grad(&mut self, n: usize, c: usize,
+                   logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {
+            self.inner.ce_grad(n, c, logits, y, mask)
+        }
+        fn fork(&self) -> Option<Box<dyn Backend + Send>> {
+            let idx = self.forks.get();
+            self.forks.set(idx + 1);
+            Some(Box::new(FlakyFork {
+                inner: NativeBackend::new(),
+                fail_remaining: usize::from(idx == self.fail_fork),
+            }))
+        }
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+    }
+
+    #[test]
+    fn killed_worker_purges_pending_fills() {
+        // Regression: a worker that dies after the plan ran fill_pending
+        // used to leave content-less cache entries behind; the next epoch
+        // then "hit" rows that did not exist, skewing counters and
+        // dropping halo content. After the purge, a retried epoch must be
+        // indistinguishable from a fresh first epoch.
+        let ds = tiny(12);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let mut cfg = tiny_cfg(3);
+        cfg.exec = ExecMode::Threaded;
+        cfg.capacity = CapacityMode::Fraction(1.0);
+        let mut flaky = FlakyBackend {
+            inner: NativeBackend::new(),
+            forks: std::cell::Cell::new(0),
+            fail_fork: 1,
+        };
+        let mut s = Session::build(&ds, &cluster, &mut flaky, &cfg).unwrap();
+        assert!(s.run_epoch().is_err(), "injected fault must abort the epoch");
+        let after_fail = s.cache_stats();
+        // The one-shot fault is spent: the retry runs — and must match a
+        // fresh run bit-for-bit (loss, bytes, cache-counter deltas).
+        let retry = s.run_epoch().unwrap();
+        let mut fresh_backend = NativeBackend::new();
+        let mut fresh = Session::build(&ds, &cluster, &mut fresh_backend, &cfg).unwrap();
+        let f0 = fresh.run_epoch().unwrap();
+        assert_eq!(retry.loss, f0.loss, "retried epoch must match a fresh epoch 0");
+        assert_eq!(retry.bytes_moved, f0.bytes_moved);
+        assert_eq!(retry.cache.checks - after_fail.checks, f0.cache.checks);
+        assert_eq!(retry.cache.misses - after_fail.misses, f0.cache.misses);
+        assert_eq!(retry.cache.local_hits - after_fail.local_hits, f0.cache.local_hits);
+        assert_eq!(retry.cache.global_hits - after_fail.global_hits, f0.cache.global_hits);
+        assert_eq!(retry.cache.fills - after_fail.fills, f0.cache.fills);
+    }
+
+    #[test]
+    fn multi_machine_session_measures_cross_bytes() {
+        let ds = tiny(13);
+        let cluster = Cluster::preset("2M-2D").unwrap();
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(2);
+        cfg.use_cache = false; // vanilla: cross traffic repeats every epoch
+        let mut s = Session::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+        assert_eq!(s.num_machines(), 2);
+        let e0 = s.run_epoch().unwrap();
+        assert!(e0.cross_bytes > 0, "halo + grad frames crossed the wire");
+        s.run_epochs(1).unwrap();
+        let report = s.finish().unwrap();
+        assert!(report.cross_bytes_moved > 0);
+        assert!(
+            report.cross_bytes_moved < report.cross_bytes_naive,
+            "machine dedup + hierarchical reduce must beat the naive path: {} vs {}",
+            report.cross_bytes_moved,
+            report.cross_bytes_naive
+        );
+        assert!(report.cross_savings() > 0.0);
+
+        // A single machine has no Ethernet traffic at all.
+        let mut b1 = NativeBackend::new();
+        let one = Cluster::preset("1M-4D").unwrap();
+        let r1 = Session::train(&ds, &one, &mut b1, &tiny_cfg(2)).unwrap();
+        assert_eq!(r1.cross_bytes_moved, 0);
+        assert_eq!(r1.cross_bytes_naive, 0);
+    }
+
+    #[test]
+    fn quantized_wire_codes_dequantize_bit_exact() {
+        let row = [0.1f32, 0.9, 0.5, -0.3, 2.0];
+        let mut rng = Rng::new(3);
+        let w = quantize_wire(&row, 8, &mut rng);
+        assert!(w.quantized);
+        let (lo, scale, codes) = w.q8.clone().unwrap();
+        assert_eq!(codes.len(), row.len());
+        for (c, v) in codes.iter().zip(&w.values) {
+            let decoded = lo + (*c as f32) * scale;
+            assert_eq!(decoded.to_bits(), v.to_bits(), "wire codes must dequantize exactly");
+        }
+        // Non-finite rows carry no codes (they ship at full precision).
+        let w = quantize_wire(&[1.0, f32::NAN], 8, &mut rng);
+        assert!(!w.quantized);
+        assert!(w.q8.is_none());
     }
 
     #[test]

@@ -148,7 +148,7 @@ pub fn train(
     backend: &mut dyn Backend,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
-    let cluster = Cluster::from_parts(gpus.to_vec(), topology.clone());
+    let cluster = Cluster::from_parts(gpus.to_vec(), topology.clone())?;
     Session::train(dataset, &cluster, backend, cfg)
 }
 

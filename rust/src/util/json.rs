@@ -64,7 +64,15 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting one
+                    // (`write!("{n}")` would print "NaN"/"inf") corrupts
+                    // every report file downstream. Finitize to null —
+                    // the reader's as_f64() then reports the value as
+                    // absent instead of the whole document failing to
+                    // parse.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -355,5 +363,22 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""Ab""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "Ab");
+    }
+
+    #[test]
+    fn non_finite_numbers_stay_valid_json() {
+        // A NaN hit rate (or ±inf ratio) must not corrupt report files.
+        let v = obj(vec![
+            ("nan", num(f64::NAN)),
+            ("inf", num(f64::INFINITY)),
+            ("ninf", num(f64::NEG_INFINITY)),
+            ("ok", num(0.5)),
+        ]);
+        let text = v.to_string();
+        assert_eq!(text, r#"{"inf":null,"nan":null,"ninf":null,"ok":0.5}"#);
+        // The document still parses; the poisoned fields read as absent.
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("nan"), Some(&Json::Null));
+        assert_eq!(back.get("ok").unwrap().as_f64(), Some(0.5));
     }
 }

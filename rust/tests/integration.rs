@@ -132,7 +132,7 @@ fn session_matches_train_shim() {
     let mut b1 = NativeBackend::new();
     let r1 = train(&ds, &g, &topo, &mut b1, &cfg).unwrap();
 
-    let cluster = Cluster::from_parts(g.clone(), topo.clone());
+    let cluster = Cluster::from_parts(g.clone(), topo.clone()).unwrap();
     let mut b2 = NativeBackend::new();
     let mut session = Session::build(&ds, &cluster, &mut b2, &cfg).unwrap();
     let mut last = None;
@@ -153,7 +153,7 @@ fn session_matches_train_shim() {
 #[test]
 fn early_stopping_halts_training() {
     let ds = tiny(2);
-    let cluster = Cluster::from_parts(gpus(2, 4), Topology::pcie_pairs(2));
+    let cluster = Cluster::from_parts(gpus(2, 4), Topology::pcie_pairs(2)).unwrap();
     let mut backend = NativeBackend::new();
     let mut session = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(50)).unwrap();
     // min_delta = ∞ ⇒ no improvement ever counts ⇒ stop at patience+1.
