@@ -8,10 +8,10 @@ use capgnn::cache::{PolicyKind, TwoLevelCache};
 use capgnn::comm::exchange::{ExchangeEngine, ExchangeParams};
 use capgnn::device::profile::{DeviceKind, Gpu};
 use capgnn::device::topology::Topology;
-use capgnn::graph::spec_by_name;
+use capgnn::graph::{spec_by_name, Graph, SparseAdj};
 use capgnn::partition::halo::build_plan;
 use capgnn::partition::Method;
-use capgnn::runtime::native::matmul;
+use capgnn::runtime::native::{matmul, spmm};
 use capgnn::runtime::{Backend, NativeBackend};
 use capgnn::train::{train, TrainConfig};
 use capgnn::util::bench::run_bench;
@@ -44,6 +44,28 @@ fn main() {
         let mut out = vec![0.0f32; n * 64];
         run_bench("native_aggregation_sparse_1pct_1024", || {
             matmul(n, n, 64, &a, &h, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // SpMM kernels (PR4): CSR aggregation at trainer shapes — forward,
+    // transposed (backward) and row-block parallel variants. Compare with
+    // the dense zero-skipping aggregation above.
+    {
+        let n = 4096usize;
+        let g = Graph::random(n, 4 * n, &mut rng);
+        let adj = SparseAdj::gcn_normalized(&g, n);
+        let h: Vec<f32> = (0..n * 64).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; n * 64];
+        for threads in [1usize, 2, 4] {
+            run_bench(&format!("spmm_gcn_{n}x64_t{threads}"), || {
+                spmm(adj.fwd(), 64, &h, &mut out, threads);
+                std::hint::black_box(&out);
+            });
+        }
+        let t = adj.transpose();
+        run_bench(&format!("spmm_t_gcn_{n}x64"), || {
+            spmm(t, 64, &h, &mut out, 1);
             std::hint::black_box(&out);
         });
     }

@@ -1,0 +1,177 @@
+//! PR4 bench / CI perf gate: CSR SpMM aggregation vs the seed dense path.
+//!
+//! For three graph sizes, runs one GCN "epoch analog" (forward + backward
+//! through the layer kernels) on both backends over the *same* operator:
+//! - sparse: the production `NativeBackend` (CSR SpMM, scratch arena);
+//! - dense:  the seed loops kept verbatim in `dense_oracle`, over the
+//!   materialized n_pad×n_pad Â.
+//!
+//! Writes `BENCH_PR4.json` (epoch times, speedups, adjacency bytes) to
+//! the repo root, then exits nonzero if at the largest size either
+//! - the sparse path is not ≥5× faster than the dense path, or
+//! - the sparse operator does not fit the O(n + nnz) memory bound, or
+//! - sparse and dense outputs disagree on a single bit.
+//!
+//! `BENCH_QUICK=1` shrinks the sizes for smoke runs (the 5× gate is
+//! skipped there: at toy sizes the O(n²) dense scan has not yet pulled
+//! away from the shared O(n·d²) transform cost).
+
+use capgnn::graph::{Graph, SparseAdj};
+use capgnn::runtime::native::dense_oracle;
+use capgnn::runtime::{Backend, NativeBackend};
+use capgnn::util::bench;
+use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::Rng;
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    // (vertices, sampled edges): avg degree ≈ 8 at every size.
+    let sizes: &[(usize, usize)] = if quick {
+        &[(512, 2048), (1024, 4096), (2048, 8192)]
+    } else {
+        &[(2048, 8192), (8192, 32768), (16384, 65536)]
+    };
+    let (d_in, d_out) = (32usize, 32usize);
+    let reps = if quick { 2 } else { 3 };
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut last_speedup = 0.0f64;
+    let mut last_sparse_bytes = 0usize;
+    let mut last_dense_bytes = 0usize;
+    let mut last_shape = (0usize, 0usize); // (n_pad, nnz)
+    for &(n, m) in sizes {
+        let mut rng = Rng::new(7);
+        let g = Graph::random(n, m, &mut rng);
+        let n_pad = n.next_power_of_two();
+        let adj = SparseAdj::gcn_normalized(&g, n_pad);
+        let h: Vec<f32> = (0..n_pad * d_in).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() as f32).collect();
+        let dgrad: Vec<f32> = (0..n_pad * d_out).map(|_| rng.normal() as f32).collect();
+
+        // Sparse epoch analog (1 aggregation thread — the per-worker
+        // serial hot loop).
+        let mut be = NativeBackend::new();
+        let mut out = Vec::new();
+        let (mut g_w, mut d_h) = (Vec::new(), Vec::new());
+        let sparse = bench::measure(
+            || {
+                be.gcn_fwd(n_pad, d_in, d_out, true, &adj, &h, &w, &mut out).unwrap();
+                be.gcn_bwd(n_pad, d_in, d_out, true, &adj, &h, &w, &dgrad, &mut g_w,
+                           &mut d_h)
+                    .unwrap();
+                std::hint::black_box((&out, &d_h));
+            },
+            1,
+            reps,
+        );
+        // 4 aggregation threads (reported, not gated — the gate must not
+        // depend on CI core counts).
+        let mut be4 = NativeBackend::with_threads(4);
+        let mut out4 = Vec::new();
+        let (mut g_w4, mut d_h4) = (Vec::new(), Vec::new());
+        let sparse4 = bench::measure(
+            || {
+                be4.gcn_fwd(n_pad, d_in, d_out, true, &adj, &h, &w, &mut out4).unwrap();
+                be4.gcn_bwd(n_pad, d_in, d_out, true, &adj, &h, &w, &dgrad, &mut g_w4,
+                            &mut d_h4)
+                    .unwrap();
+                std::hint::black_box((&out4, &d_h4));
+            },
+            1,
+            reps,
+        );
+
+        // Dense epoch analog: the seed path over the materialized Â.
+        let a = adj.to_dense();
+        let mut dense_out = Vec::new();
+        let mut dense_dh = Vec::new();
+        let dense = bench::measure(
+            || {
+                dense_out = dense_oracle::gcn_fwd(n_pad, d_in, d_out, true, &a, &h, &w);
+                let (gw, dh) =
+                    dense_oracle::gcn_bwd(n_pad, d_in, d_out, true, &a, &h, &w, &dgrad);
+                std::hint::black_box(&gw);
+                dense_dh = dh;
+            },
+            1,
+            reps,
+        );
+        if !bits_eq(&out, &dense_out) || !bits_eq(&d_h, &dense_dh)
+            || !bits_eq(&out, &out4) || !bits_eq(&d_h, &d_h4)
+        {
+            eprintln!("PARITY BREACH at n={n}: sparse and dense outputs differ");
+            std::process::exit(1);
+        }
+
+        let dense_bytes = n_pad * n_pad * 4;
+        let sparse_bytes = adj.mem_bytes(); // fwd + transpose (built by bwd)
+        let speedup = dense.mean / sparse.mean.max(1e-12);
+        println!(
+            "n={n} (pad {n_pad}, nnz {}): dense {:.4}s, sparse {:.4}s (t4 {:.4}s) — {:.1}x; \
+             adjacency {dense_bytes} B dense vs {sparse_bytes} B sparse",
+            adj.nnz(),
+            dense.mean,
+            sparse.mean,
+            sparse4.mean,
+            speedup
+        );
+        entries.push(obj(vec![
+            ("n", num(n as f64)),
+            ("n_pad", num(n_pad as f64)),
+            ("nnz", num(adj.nnz() as f64)),
+            ("dense_epoch_s", num(dense.mean)),
+            ("sparse_epoch_s", num(sparse.mean)),
+            ("sparse_epoch_s_t4", num(sparse4.mean)),
+            ("speedup", num(speedup)),
+            ("dense_adj_bytes", num(dense_bytes as f64)),
+            ("sparse_adj_bytes", num(sparse_bytes as f64)),
+        ]));
+        last_speedup = speedup;
+        last_sparse_bytes = sparse_bytes;
+        last_dense_bytes = dense_bytes;
+        last_shape = (n_pad, adj.nnz());
+    }
+
+    let doc = obj(vec![
+        ("bench", s("pr4_spmm")),
+        ("quick", Json::Bool(quick)),
+        ("d_in", num(d_in as f64)),
+        ("d_out", num(d_out as f64)),
+        ("results", arr(entries)),
+        ("speedup_at_largest", num(last_speedup)),
+        (
+            "mem_ratio_at_largest",
+            num(last_dense_bytes as f64 / last_sparse_bytes.max(1) as f64),
+        ),
+    ]);
+    bench::write_json_file("BENCH_PR4.json", &doc).expect("write BENCH_PR4.json");
+    println!(
+        "wrote BENCH_PR4.json (largest size: {last_speedup:.1}x speedup, {}x less adjacency memory)",
+        last_dense_bytes / last_sparse_bytes.max(1)
+    );
+
+    // O(n + nnz) memory gate: both CSR halves are ≤ 8 B per row pointer
+    // + 8 B per stored entry; allow slack for allocator rounding.
+    let (n_pad, nnz) = last_shape;
+    let linear_bound = 16 * (n_pad + 1) + 24 * nnz;
+    if last_sparse_bytes > linear_bound {
+        eprintln!(
+            "MEM GATE FAILED: sparse adjacency {last_sparse_bytes} B exceeds the \
+             O(n + nnz) bound {linear_bound} B"
+        );
+        std::process::exit(1);
+    }
+    if quick {
+        println!("quick mode: 5x speedup gate skipped (toy sizes)");
+    } else if last_speedup < 5.0 {
+        eprintln!(
+            "PERF GATE FAILED: sparse aggregation is only {last_speedup:.2}x faster than \
+             the dense path at the largest size (need >= 5x)"
+        );
+        std::process::exit(1);
+    }
+}

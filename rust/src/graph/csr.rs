@@ -150,6 +150,10 @@ impl Graph {
     /// Symmetric-normalized dense adjacency with self loops:
     /// Â = D̃^{-1/2} (A + I) D̃^{-1/2}, row-major `n×n`.
     /// This is the GCN propagation operator (Kipf & Welling).
+    ///
+    /// **Test oracle only** — the trainer aggregates through
+    /// [`crate::graph::SparseAdj`] (O(n + nnz)); this O(n²) form exists
+    /// to cross-check the sparse kernels bit for bit.
     pub fn normalized_dense_adj(&self) -> Vec<f32> {
         let n = self.n();
         let mut dtilde = vec![0.0f64; n];
@@ -170,6 +174,8 @@ impl Graph {
     /// Row-normalized (mean-aggregator) dense adjacency without self
     /// loops — the GraphSAGE mean aggregation operator. Isolated vertices
     /// get an all-zero row.
+    ///
+    /// **Test oracle only** — see [`Graph::normalized_dense_adj`].
     pub fn mean_dense_adj(&self) -> Vec<f32> {
         let n = self.n();
         let mut a = vec![0.0f32; n * n];

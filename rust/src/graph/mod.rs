@@ -6,7 +6,9 @@ pub mod datasets;
 pub mod features;
 pub mod generator;
 pub mod reorder;
+pub mod sparse;
 
 pub use csr::Graph;
 pub use datasets::{spec_by_name, Dataset, DatasetSpec, SPECS};
 pub use features::NodeData;
+pub use sparse::{CsrMat, SparseAdj};

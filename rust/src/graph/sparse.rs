@@ -1,0 +1,287 @@
+//! Sparse adjacency storage for the compute backends.
+//!
+//! The trainer aggregates over edges, not vertex pairs: every per-layer
+//! Â·H product is a sparse-matrix × dense-matrix (SpMM) product, so the
+//! per-worker propagation operator lives here as CSR — O(n + nnz) memory
+//! instead of the O(n²) dense matrix the backends used to consume. The
+//! dense builders ([`crate::graph::Graph::normalized_dense_adj`] /
+//! [`mean_dense_adj`](crate::graph::Graph::mean_dense_adj)) survive as
+//! *test oracles only*.
+//!
+//! Bit-exactness contract: a CSR row stores its columns in strictly
+//! ascending order, which is exactly the order the dense zero-skipping
+//! matmul visited the same nonzeros in — so an SpMM that walks each row
+//! front-to-back reproduces the dense kernel's f32 accumulation sequence
+//! bit for bit. The lazily built transpose keeps entries of each
+//! transposed row sorted by *source* row, matching the dense `matmul_tn`
+//! traversal the backward pass used.
+
+use crate::graph::Graph;
+use std::sync::OnceLock;
+
+/// One CSR matrix: `indptr[r]..indptr[r+1]` indexes `indices`/`values`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrMat {
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMat {
+    /// Number of rows.
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Heap bytes of the three arrays.
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * 4 + self.indices.len() * 4 + self.values.len() * 4
+    }
+}
+
+/// A square n×n propagation operator in CSR, with a lazily built
+/// transpose for the backward pass (Âᵀ·G). Rows past the last populated
+/// vertex (padding rows) simply hold no entries.
+#[derive(Debug)]
+pub struct SparseAdj {
+    n: usize,
+    fwd: CsrMat,
+    /// Built on the first backward call; `OnceLock` so a `&SparseAdj`
+    /// shared with worker threads stays safely initializable.
+    transpose: OnceLock<CsrMat>,
+}
+
+impl Clone for SparseAdj {
+    fn clone(&self) -> SparseAdj {
+        // The transpose is a cache — the clone rebuilds it on demand.
+        SparseAdj {
+            n: self.n,
+            fwd: self.fwd.clone(),
+            transpose: OnceLock::new(),
+        }
+    }
+}
+
+impl SparseAdj {
+    /// Build from (row, col, value) entries. Entries are sorted by
+    /// (row, col); each (row, col) pair must appear at most once.
+    pub fn from_entries(n: usize, mut entries: Vec<(u32, u32, f32)>) -> SparseAdj {
+        assert!(entries.len() < u32::MAX as usize, "nnz overflows u32 indptr");
+        entries.sort_unstable_by_key(|e| (e.0, e.1));
+        debug_assert!(
+            entries.windows(2).all(|w| (w[0].0, w[0].1) != (w[1].0, w[1].1)),
+            "duplicate (row, col) entry"
+        );
+        let mut indptr = vec![0u32; n + 1];
+        let mut indices = Vec::with_capacity(entries.len());
+        let mut values = Vec::with_capacity(entries.len());
+        for &(r, c, v) in &entries {
+            debug_assert!((r as usize) < n && (c as usize) < n);
+            indptr[r as usize + 1] += 1;
+            indices.push(c);
+            values.push(v);
+        }
+        for r in 0..n {
+            indptr[r + 1] += indptr[r];
+        }
+        SparseAdj {
+            n,
+            fwd: CsrMat { indptr, indices, values },
+            transpose: OnceLock::new(),
+        }
+    }
+
+    /// GCN operator Â = D̃^{-1/2}(A+I)D̃^{-1/2} over `g`, padded to
+    /// `n_pad` rows/cols. Entry values match
+    /// [`Graph::normalized_dense_adj`] bit for bit.
+    pub fn gcn_normalized(g: &Graph, n_pad: usize) -> SparseAdj {
+        let n = g.n();
+        assert!(n_pad >= n);
+        let inv_sqrt: Vec<f64> =
+            (0..n).map(|v| 1.0 / (g.degree(v as u32) as f64 + 1.0).sqrt()).collect();
+        let mut entries = Vec::with_capacity(g.arcs() + n);
+        for v in 0..n {
+            entries.push((v as u32, v as u32, (inv_sqrt[v] * inv_sqrt[v]) as f32));
+            for &u in g.nbrs(v as u32) {
+                entries.push((v as u32, u, (inv_sqrt[v] * inv_sqrt[u as usize]) as f32));
+            }
+        }
+        SparseAdj::from_entries(n_pad, entries)
+    }
+
+    /// GraphSAGE mean operator Ā (row-normalized, no self loops) over
+    /// `g`, padded to `n_pad`. Values match [`Graph::mean_dense_adj`].
+    pub fn sage_mean(g: &Graph, n_pad: usize) -> SparseAdj {
+        let n = g.n();
+        assert!(n_pad >= n);
+        let mut entries = Vec::with_capacity(g.arcs());
+        for v in 0..n {
+            let d = g.degree(v as u32);
+            if d == 0 {
+                continue;
+            }
+            let w = 1.0 / d as f32;
+            for &u in g.nbrs(v as u32) {
+                entries.push((v as u32, u, w));
+            }
+        }
+        SparseAdj::from_entries(n_pad, entries)
+    }
+
+    /// Padded dimension (rows == cols).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.fwd.nnz()
+    }
+
+    /// The forward (row-major) CSR.
+    pub fn fwd(&self) -> &CsrMat {
+        &self.fwd
+    }
+
+    /// The transposed CSR, built on first use. Entries of transposed row
+    /// `c` are sorted by source row — the same order `matmul_tn` visited
+    /// column `c`'s nonzeros in, so transposed SpMM is bit-exact against
+    /// the dense backward oracle.
+    pub fn transpose(&self) -> &CsrMat {
+        self.transpose.get_or_init(|| {
+            let n = self.n;
+            let fwd = &self.fwd;
+            let mut indptr = vec![0u32; n + 1];
+            for &c in &fwd.indices {
+                indptr[c as usize + 1] += 1;
+            }
+            for r in 0..n {
+                indptr[r + 1] += indptr[r];
+            }
+            let mut next: Vec<u32> = indptr[..n].to_vec();
+            let mut indices = vec![0u32; fwd.nnz()];
+            let mut values = vec![0.0f32; fwd.nnz()];
+            for r in 0..n {
+                let (s, e) = (fwd.indptr[r] as usize, fwd.indptr[r + 1] as usize);
+                for k in s..e {
+                    let c = fwd.indices[k] as usize;
+                    let dst = next[c] as usize;
+                    next[c] += 1;
+                    indices[dst] = r as u32;
+                    values[dst] = fwd.values[k];
+                }
+            }
+            CsrMat { indptr, indices, values }
+        })
+    }
+
+    /// Heap bytes of the operator (transpose counted only once built) —
+    /// the O(n + nnz) footprint the benches report against the dense
+    /// n²·4 baseline.
+    pub fn mem_bytes(&self) -> usize {
+        self.fwd.mem_bytes() + self.transpose.get().map_or(0, |t| t.mem_bytes())
+    }
+
+    /// Materialize the dense row-major n×n matrix (test oracles and the
+    /// dense-only XLA artifact path; O(n²) — never on the trainer path).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let n = self.n;
+        let mut a = vec![0.0f32; n * n];
+        for r in 0..n {
+            let (s, e) = (self.fwd.indptr[r] as usize, self.fwd.indptr[r + 1] as usize);
+            for k in s..e {
+                a[r * n + self.fwd.indices[k] as usize] = self.fwd.values[k];
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn gcn_matches_dense_oracle_bitwise() {
+        let g = path4();
+        let adj = SparseAdj::gcn_normalized(&g, 4);
+        assert_eq!(adj.to_dense(), g.normalized_dense_adj());
+        // Padded build: the top-left block is identical, the rest zero.
+        let padded = SparseAdj::gcn_normalized(&g, 8);
+        let dense = padded.to_dense();
+        let oracle = g.normalized_dense_adj();
+        for r in 0..8 {
+            for c in 0..8 {
+                let want = if r < 4 && c < 4 { oracle[r * 4 + c] } else { 0.0 };
+                assert_eq!(dense[r * 8 + c].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sage_matches_dense_oracle_bitwise() {
+        let mut rng = Rng::new(5);
+        let g = Graph::random(37, 140, &mut rng);
+        let adj = SparseAdj::sage_mean(&g, 37);
+        assert_eq!(adj.to_dense(), g.mean_dense_adj());
+    }
+
+    #[test]
+    fn rows_sorted_and_transpose_roundtrips() {
+        let mut rng = Rng::new(7);
+        let g = Graph::random(64, 300, &mut rng);
+        let adj = SparseAdj::gcn_normalized(&g, 64);
+        let fwd = adj.fwd();
+        for r in 0..64 {
+            let row = &fwd.indices[fwd.indptr[r] as usize..fwd.indptr[r + 1] as usize];
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row {r} not sorted");
+        }
+        let t = adj.transpose();
+        assert_eq!(t.nnz(), adj.nnz());
+        // Transposing the transpose by hand recovers the dense forward.
+        let mut dense_t = vec![0.0f32; 64 * 64];
+        for r in 0..64 {
+            for k in t.indptr[r] as usize..t.indptr[r + 1] as usize {
+                dense_t[t.indices[k] as usize * 64 + r] = t.values[k];
+            }
+        }
+        assert_eq!(dense_t, adj.to_dense());
+        // Transposed rows are sorted by source row (the matmul_tn order).
+        for r in 0..64 {
+            let row = &t.indices[t.indptr[r] as usize..t.indptr[r + 1] as usize];
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "t row {r} not sorted");
+        }
+    }
+
+    #[test]
+    fn memory_is_linear_in_n_plus_nnz() {
+        let mut rng = Rng::new(9);
+        let g = Graph::random(256, 1024, &mut rng);
+        let adj = SparseAdj::gcn_normalized(&g, 256);
+        let _ = adj.transpose(); // count both halves
+        let bound = 8 * (256 + 1) + 16 * adj.nnz();
+        assert!(adj.mem_bytes() <= bound, "{} > {}", adj.mem_bytes(), bound);
+        // vs the dense footprint it replaces:
+        assert!(adj.mem_bytes() < 256 * 256 * 4 / 4);
+    }
+
+    #[test]
+    fn clone_rebuilds_transpose_lazily() {
+        let g = path4();
+        let adj = SparseAdj::gcn_normalized(&g, 4);
+        let _ = adj.transpose();
+        let c = adj.clone();
+        assert_eq!(c.to_dense(), adj.to_dense());
+        assert_eq!(c.transpose(), adj.transpose());
+    }
+}

@@ -66,7 +66,10 @@ COMMANDS:
                                  1 = sequential. A count N>1 behaves like
                                  'auto' — it is a mode toggle, not a pool
                                  size; the executor always spawns exactly
-                                 one thread per worker]
+                                 one thread per worker
+              --agg-threads N    intra-worker SpMM row-block threads of
+                                 the native backend (default 1); any N is
+                                 bit-identical — rows are independent]
   partition  --dataset rt --group x4 --method metis [--rapa] [--hops 1]
   device     print the simulated GPU testbed (paper Table 1)
   expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
@@ -83,7 +86,8 @@ fn cmd_train(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut backend = match spec.backend.build() {
+    let agg_threads = args.usize_or("agg-threads", 1);
+    let mut backend = match spec.backend.build_with_agg_threads(agg_threads) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("backend error: {e}");

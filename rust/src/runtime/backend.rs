@@ -6,9 +6,14 @@
 //! - [`crate::runtime::NativeBackend`] — pure-rust mirror of the same
 //!   per-layer math (hermetic tests + cross-check oracle).
 //!
-//! All matrices are row-major `f32` slices with explicit dims; `n` is the
-//! *padded* local vertex count.
+//! All dense matrices are row-major `f32` slices with explicit dims; `n`
+//! is the *padded* local vertex count. The propagation operator travels
+//! as a [`SparseAdj`] (CSR, O(n + nnz)) — never as a dense n×n matrix —
+//! and every layer op writes into a caller-owned output `Vec` so a warm
+//! backend allocates nothing in steady state (the vectors are resized
+//! once, then reused epoch after epoch).
 
+use crate::graph::SparseAdj;
 use anyhow::Result;
 
 /// Output of the loss unit.
@@ -22,27 +27,31 @@ pub struct LossGrad {
 }
 
 pub trait Backend {
-    /// act(Â·H·W): `a` is n×n, `h` n×d_in, `w` d_in×d_out.
+    /// out = act(Â·H·W): `adj` is the n×n operator, `h` n×d_in,
+    /// `w` d_in×d_out. `out` is resized to n×d_out and overwritten.
+    #[allow(clippy::too_many_arguments)]
     fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-               a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>>;
+               adj: &SparseAdj, h: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()>;
 
-    /// Returns (gW [d_in×d_out], dH_in [n×d_in]).
+    /// Writes gW [d_in×d_out] and dH_in [n×d_in] (each resized and
+    /// overwritten).
     #[allow(clippy::too_many_arguments)]
     fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-               a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
-               -> Result<(Vec<f32>, Vec<f32>)>;
+               adj: &SparseAdj, h: &[f32], w: &[f32], d_out_grad: &[f32],
+               g_w: &mut Vec<f32>, d_h: &mut Vec<f32>) -> Result<()>;
 
-    /// act(H·Wself + (Ā·H)·Wneigh).
+    /// out = act(H·Wself + (Ā·H)·Wneigh).
     #[allow(clippy::too_many_arguments)]
     fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32])
-                -> Result<Vec<f32>>;
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                out: &mut Vec<f32>) -> Result<()>;
 
-    /// Returns (gWself, gWneigh, dH_in).
+    /// Writes gWself, gWneigh [d_in×d_out each] and dH_in [n×d_in].
     #[allow(clippy::too_many_arguments)]
     fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
-                d_out_grad: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32], g_w_self: &mut Vec<f32>, g_w_neigh: &mut Vec<f32>,
+                d_h: &mut Vec<f32>) -> Result<()>;
 
     /// Masked CE loss/grad; `logits`/`y` are n×c, `mask` n.
     fn ce_grad(&mut self, n: usize, c: usize,
@@ -83,9 +92,19 @@ pub enum BackendKind {
 
 impl BackendKind {
     pub fn build(self) -> Result<Box<dyn Backend>> {
+        self.build_with_agg_threads(1)
+    }
+
+    /// Build with an explicit intra-worker SpMM thread count (native
+    /// backend only; the XLA path parallelizes inside the artifact).
+    /// Aggregation output rows are independent, so the result is
+    /// bit-identical for any `threads` ≥ 1.
+    pub fn build_with_agg_threads(self, threads: usize) -> Result<Box<dyn Backend>> {
         match self {
             BackendKind::Xla => Ok(Box::new(crate::runtime::XlaBackend::from_default_dir()?)),
-            BackendKind::Native => Ok(Box::new(crate::runtime::NativeBackend::new())),
+            BackendKind::Native => {
+                Ok(Box::new(crate::runtime::NativeBackend::with_threads(threads)))
+            }
         }
     }
 }

@@ -5,6 +5,7 @@
 
 use super::artifacts::{Manifest, UnitKey, UnitKind};
 use super::backend::{Backend, LossGrad};
+use crate::graph::SparseAdj;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 
@@ -23,18 +24,29 @@ pub struct XlaBackend {
     pub executions: std::cell::Cell<usize>,
 }
 
-/// FNV-1a over the dimensions and a strided sample of the matrix — enough
-/// to distinguish the per-worker adjacency matrices of one process.
-fn fingerprint(data: &[f32]) -> u64 {
+/// FNV-1a over the dimensions and a strided sample of the CSR arrays —
+/// enough to distinguish the per-worker adjacency operators of one
+/// process without touching a dense materialization.
+fn fingerprint(adj: &SparseAdj) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     let mut mix = |x: u64| {
         h ^= x;
         h = h.wrapping_mul(0x100000001b3);
     };
-    mix(data.len() as u64);
-    let stride = (data.len() / 64).max(1);
-    for i in (0..data.len()).step_by(stride) {
-        mix(data[i].to_bits() as u64 ^ (i as u64) << 32);
+    let m = adj.fwd();
+    mix(adj.n() as u64);
+    mix(m.nnz() as u64);
+    let stride = (m.nnz() / 64).max(1);
+    for i in (0..m.nnz()).step_by(stride) {
+        // Mix the sample position too, so permuted-but-equal (value,
+        // column) multisets in different rows still hash apart.
+        mix(m.values[i].to_bits() as u64 ^ (m.indices[i] as u64) << 32 ^ (i as u64) << 1);
+    }
+    // Row structure: indptr distinguishes operators whose entry arrays
+    // coincide at the sampled points but split rows differently.
+    let rstride = (adj.n() / 64).max(1);
+    for r in (0..=adj.n()).step_by(rstride) {
+        mix(m.indptr[r] as u64 ^ (r as u64) << 32);
     }
     h
 }
@@ -83,11 +95,16 @@ impl XlaBackend {
         Ok(())
     }
 
-    /// Device buffer for the (constant) adjacency operand, cached.
-    fn adj_buf(&mut self, a: &[f32], n: usize) -> Result<(usize, u64)> {
-        let key = (n, fingerprint(a));
+    /// Device buffer for the (constant) adjacency operand, cached. The
+    /// AOT artifacts consume a dense n×n operand, so the CSR operator is
+    /// densified once per distinct operator — on a cache hit the O(n²)
+    /// materialization (and the host→device copy) is skipped entirely.
+    fn adj_buf(&mut self, adj: &SparseAdj, n: usize) -> Result<(usize, u64)> {
+        debug_assert_eq!(adj.n(), n);
+        let key = (n, fingerprint(adj));
         if !self.adj_cache.contains_key(&key) {
-            let buf = self.buf2(a, n, n)?;
+            let dense = adj.to_dense();
+            let buf = self.buf2(&dense, n, n)?;
             self.adj_cache.insert(key, buf);
         }
         Ok(key)
@@ -130,58 +147,62 @@ impl XlaBackend {
 
 impl Backend for XlaBackend {
     fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-               a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+               adj: &SparseAdj, h: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()> {
         let key = UnitKey { kind: UnitKind::GcnFwd, n, d_in, d_out, relu };
         self.ensure_executable(key)?;
-        let adj = self.adj_buf(a, n)?;
+        let ak = self.adj_buf(adj, n)?;
         let bh = self.buf2(h, n, d_in)?;
         let bw = self.buf2(w, d_in, d_out)?;
-        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bw])?;
-        Self::vec_of(&out[0])
+        let res = self.run(key, &[&self.adj_cache[&ak], &bh, &bw])?;
+        *out = Self::vec_of(&res[0])?;
+        Ok(())
     }
 
     fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-               a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
-               -> Result<(Vec<f32>, Vec<f32>)> {
+               adj: &SparseAdj, h: &[f32], w: &[f32], d_out_grad: &[f32],
+               g_w: &mut Vec<f32>, d_h: &mut Vec<f32>) -> Result<()> {
         let key = UnitKey { kind: UnitKind::GcnBwd, n, d_in, d_out, relu };
         self.ensure_executable(key)?;
-        let adj = self.adj_buf(a, n)?;
+        let ak = self.adj_buf(adj, n)?;
         let bh = self.buf2(h, n, d_in)?;
         let bw = self.buf2(w, d_in, d_out)?;
         let bd = self.buf2(d_out_grad, n, d_out)?;
-        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bw, &bd])?;
-        Ok((Self::vec_of(&out[0])?, Self::vec_of(&out[1])?))
+        let res = self.run(key, &[&self.adj_cache[&ak], &bh, &bw, &bd])?;
+        *g_w = Self::vec_of(&res[0])?;
+        *d_h = Self::vec_of(&res[1])?;
+        Ok(())
     }
 
     fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32])
-                -> Result<Vec<f32>> {
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                out: &mut Vec<f32>) -> Result<()> {
         let key = UnitKey { kind: UnitKind::SageFwd, n, d_in, d_out, relu };
         self.ensure_executable(key)?;
-        let adj = self.adj_buf(a, n)?;
+        let ak = self.adj_buf(adj, n)?;
         let bh = self.buf2(h, n, d_in)?;
         let bs = self.buf2(w_self, d_in, d_out)?;
         let bn = self.buf2(w_neigh, d_in, d_out)?;
-        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bs, &bn])?;
-        Self::vec_of(&out[0])
+        let res = self.run(key, &[&self.adj_cache[&ak], &bh, &bs, &bn])?;
+        *out = Self::vec_of(&res[0])?;
+        Ok(())
     }
 
     fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
-                d_out_grad: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32], g_w_self: &mut Vec<f32>, g_w_neigh: &mut Vec<f32>,
+                d_h: &mut Vec<f32>) -> Result<()> {
         let key = UnitKey { kind: UnitKind::SageBwd, n, d_in, d_out, relu };
         self.ensure_executable(key)?;
-        let adj = self.adj_buf(a, n)?;
+        let ak = self.adj_buf(adj, n)?;
         let bh = self.buf2(h, n, d_in)?;
         let bs = self.buf2(w_self, d_in, d_out)?;
         let bn = self.buf2(w_neigh, d_in, d_out)?;
         let bd = self.buf2(d_out_grad, n, d_out)?;
-        let out = self.run(key, &[&self.adj_cache[&adj], &bh, &bs, &bn, &bd])?;
-        Ok((
-            Self::vec_of(&out[0])?,
-            Self::vec_of(&out[1])?,
-            Self::vec_of(&out[2])?,
-        ))
+        let res = self.run(key, &[&self.adj_cache[&ak], &bh, &bs, &bn, &bd])?;
+        *g_w_self = Self::vec_of(&res[0])?;
+        *g_w_neigh = Self::vec_of(&res[1])?;
+        *d_h = Self::vec_of(&res[2])?;
+        Ok(())
     }
 
     fn ce_grad(&mut self, n: usize, c: usize,
@@ -215,6 +236,7 @@ impl Backend for XlaBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Graph;
     use crate::runtime::native::NativeBackend;
     use crate::util::Rng;
 
@@ -224,14 +246,6 @@ mod tests {
 
     fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
         (0..len).map(|_| rng.normal() as f32).collect()
-    }
-
-    fn rand_adj(rng: &mut Rng, n: usize) -> Vec<f32> {
-        let mut a = rand_vec(rng, n * n);
-        for v in a.iter_mut() {
-            *v = v.abs() / n as f32;
-        }
-        a
     }
 
     /// The central cross-check: XLA artifact ≡ native backend on every unit.
@@ -245,7 +259,8 @@ mod tests {
         let mut nat = NativeBackend::new();
         let mut rng = Rng::new(5);
         let (n, di, do_) = (256, 16, 16);
-        let a = rand_adj(&mut rng, n);
+        let g = Graph::random(n, 2048, &mut rng);
+        let a = SparseAdj::gcn_normalized(&g, n);
         let h = rand_vec(&mut rng, n * di);
         let w = rand_vec(&mut rng, di * do_);
         let w2 = rand_vec(&mut rng, di * do_);
@@ -266,22 +281,30 @@ mod tests {
             let (di2, do2) = if relu { (16, 16) } else { (16, 4) };
             let wd = rand_vec(&mut rng, di2 * do2);
             let dd = rand_vec(&mut rng, n * do2);
-            let xf = xla.gcn_fwd(n, di2, do2, relu, &a, &h, &wd).unwrap();
-            let nf = nat.gcn_fwd(n, di2, do2, relu, &a, &h, &wd).unwrap();
+            let (mut xf, mut nf) = (Vec::new(), Vec::new());
+            xla.gcn_fwd(n, di2, do2, relu, &a, &h, &wd, &mut xf).unwrap();
+            nat.gcn_fwd(n, di2, do2, relu, &a, &h, &wd, &mut nf).unwrap();
             close(&xf, &nf, 2e-3, "gcn_fwd");
-            let (xgw, xdh) = xla.gcn_bwd(n, di2, do2, relu, &a, &h, &wd, &dd).unwrap();
-            let (ngw, ndh) = nat.gcn_bwd(n, di2, do2, relu, &a, &h, &wd, &dd).unwrap();
+            let (mut xgw, mut xdh) = (Vec::new(), Vec::new());
+            let (mut ngw, mut ndh) = (Vec::new(), Vec::new());
+            xla.gcn_bwd(n, di2, do2, relu, &a, &h, &wd, &dd, &mut xgw, &mut xdh).unwrap();
+            nat.gcn_bwd(n, di2, do2, relu, &a, &h, &wd, &dd, &mut ngw, &mut ndh).unwrap();
             close(&xgw, &ngw, 2e-3, "gcn_bwd gW");
             close(&xdh, &ndh, 2e-3, "gcn_bwd dH");
         }
 
-        let xs = xla.sage_fwd(n, di, do_, true, &a, &h, &w, &w2).unwrap();
-        let ns = nat.sage_fwd(n, di, do_, true, &a, &h, &w, &w2).unwrap();
+        let (mut xs, mut ns) = (Vec::new(), Vec::new());
+        xla.sage_fwd(n, di, do_, true, &a, &h, &w, &w2, &mut xs).unwrap();
+        nat.sage_fwd(n, di, do_, true, &a, &h, &w, &w2, &mut ns).unwrap();
         close(&xs, &ns, 2e-3, "sage_fwd");
-        let (xg1, xg2, xdh) =
-            xla.sage_bwd(n, di, do_, true, &a, &h, &w, &w2, &d_out).unwrap();
-        let (ng1, ng2, ndh) =
-            nat.sage_bwd(n, di, do_, true, &a, &h, &w, &w2, &d_out).unwrap();
+        let (mut xg1, mut xg2, mut xdh) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut ng1, mut ng2, mut ndh) = (Vec::new(), Vec::new(), Vec::new());
+        xla.sage_bwd(n, di, do_, true, &a, &h, &w, &w2, &d_out, &mut xg1, &mut xg2,
+                     &mut xdh)
+            .unwrap();
+        nat.sage_bwd(n, di, do_, true, &a, &h, &w, &w2, &d_out, &mut ng1, &mut ng2,
+                     &mut ndh)
+            .unwrap();
         close(&xg1, &ng1, 2e-3, "sage gWs");
         close(&xg2, &ng2, 2e-3, "sage gWn");
         close(&xdh, &ndh, 2e-3, "sage dH");
@@ -302,7 +325,8 @@ mod tests {
 
         // Executable cache: re-running compiles nothing new.
         let before = xla.compiles;
-        let _ = xla.gcn_fwd(n, 16, 16, true, &a, &h, &w).unwrap();
+        let mut out = Vec::new();
+        xla.gcn_fwd(n, 16, 16, true, &a, &h, &w, &mut out).unwrap();
         assert_eq!(xla.compiles, before);
     }
 }

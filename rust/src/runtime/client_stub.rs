@@ -8,6 +8,7 @@
 
 use super::artifacts::Manifest;
 use super::backend::{Backend, LossGrad};
+use crate::graph::SparseAdj;
 use anyhow::{anyhow, Result};
 
 /// Placeholder for the PJRT-backed compute client. The introspection
@@ -44,10 +45,11 @@ impl Backend for XlaBackend {
         _d_in: usize,
         _d_out: usize,
         _relu: bool,
-        _a: &[f32],
+        _adj: &SparseAdj,
         _h: &[f32],
         _w: &[f32],
-    ) -> Result<Vec<f32>> {
+        _out: &mut Vec<f32>,
+    ) -> Result<()> {
         Err(unavailable())
     }
 
@@ -57,11 +59,13 @@ impl Backend for XlaBackend {
         _d_in: usize,
         _d_out: usize,
         _relu: bool,
-        _a: &[f32],
+        _adj: &SparseAdj,
         _h: &[f32],
         _w: &[f32],
         _d_out_grad: &[f32],
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        _g_w: &mut Vec<f32>,
+        _d_h: &mut Vec<f32>,
+    ) -> Result<()> {
         Err(unavailable())
     }
 
@@ -71,11 +75,12 @@ impl Backend for XlaBackend {
         _d_in: usize,
         _d_out: usize,
         _relu: bool,
-        _a: &[f32],
+        _adj: &SparseAdj,
         _h: &[f32],
         _w_self: &[f32],
         _w_neigh: &[f32],
-    ) -> Result<Vec<f32>> {
+        _out: &mut Vec<f32>,
+    ) -> Result<()> {
         Err(unavailable())
     }
 
@@ -85,12 +90,15 @@ impl Backend for XlaBackend {
         _d_in: usize,
         _d_out: usize,
         _relu: bool,
-        _a: &[f32],
+        _adj: &SparseAdj,
         _h: &[f32],
         _w_self: &[f32],
         _w_neigh: &[f32],
         _d_out_grad: &[f32],
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        _g_w_self: &mut Vec<f32>,
+        _g_w_neigh: &mut Vec<f32>,
+        _d_h: &mut Vec<f32>,
+    ) -> Result<()> {
         Err(unavailable())
     }
 

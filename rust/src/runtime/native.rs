@@ -2,8 +2,25 @@
 //! per-layer math (after the Pallas kernel and the jnp oracle). Used for
 //! hermetic `cargo test` runs and as the cross-check oracle against the
 //! XLA artifacts.
+//!
+//! Aggregation (Â·H forward, Âᵀ·G backward) runs as CSR SpMM over a
+//! [`SparseAdj`] — O(nnz·d) work and O(n + nnz) operator memory, where
+//! the pre-PR4 dense path did O(n²) of both. Each output row's neighbor
+//! sum walks the CSR row front-to-back (ascending index), which is the
+//! exact order the dense zero-skipping matmul visited the same nonzeros
+//! in, so the sparse kernels are **bit-exact** against the
+//! [`dense_oracle`] reference. Output rows are independent, so SpMM
+//! optionally splits rows into contiguous blocks across scoped worker
+//! threads (the PR 2 threading style) — bit-identical for any thread
+//! count.
+//!
+//! The backend owns a scratch arena (aggregates, pre-activations, masked
+//! gradients, transposed weights) and writes results into caller-owned
+//! vectors: after warmup, a training epoch performs **zero** backend
+//! allocations (asserted by `tests/alloc_steady.rs`).
 
 use super::backend::{Backend, LossGrad};
+use crate::graph::{CsrMat, SparseAdj};
 use anyhow::Result;
 
 /// Row-major matmul: out[m×n] = x[m×k] · y[k×n].
@@ -19,7 +36,7 @@ pub fn matmul(m: usize, k: usize, n: usize, x: &[f32], y: &[f32], out: &mut [f32
         for kk in 0..k {
             let xv = x[i * k + kk];
             if xv == 0.0 {
-                continue; // Â rows are sparse-ish after padding
+                continue; // relu/mask zeros are common in the operands
             }
             let yrow = &y[kk * n..(kk + 1) * n];
             for j in 0..n {
@@ -51,6 +68,51 @@ pub fn matmul_tn(m: usize, k: usize, n: usize, x: &[f32], y: &[f32], out: &mut [
     }
 }
 
+/// SpMM rows `rows.start..rows.start + block.len()/d` of out = M·H, where
+/// `M` is CSR and `H` is row-major n×d. Each output row is zeroed then
+/// accumulated in ascending CSR index order — the dense zero-skip order.
+fn spmm_rows(mat: &CsrMat, d: usize, h: &[f32], start: usize, block: &mut [f32]) {
+    for (i, orow) in block.chunks_exact_mut(d).enumerate() {
+        let r = start + i;
+        orow.fill(0.0);
+        let (s, e) = (mat.indptr[r] as usize, mat.indptr[r + 1] as usize);
+        for k in s..e {
+            let v = mat.values[k];
+            if v == 0.0 {
+                continue; // mirror the dense kernel's zero skip exactly
+            }
+            let hrow = &h[mat.indices[k] as usize * d..mat.indices[k] as usize * d + d];
+            for j in 0..d {
+                orow[j] += v * hrow[j];
+            }
+        }
+    }
+}
+
+/// Sparse-matrix × dense-matrix product: out[n×d] = M·H with `M` in CSR.
+///
+/// `threads` > 1 splits output rows into contiguous blocks across scoped
+/// OS threads writing disjoint slices in place. Every row's accumulation
+/// is a fixed serial walk of its CSR entries, so the result is
+/// bit-identical for any thread count. Pass the forward CSR for Â·H and
+/// [`SparseAdj::transpose`] for Âᵀ·G.
+pub fn spmm(mat: &CsrMat, d: usize, h: &[f32], out: &mut [f32], threads: usize) {
+    let n = mat.n_rows();
+    assert_eq!(out.len(), n * d);
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 {
+        spmm_rows(mat, d, h, 0, out);
+        return;
+    }
+    let rows_per = n.div_ceil(t);
+    std::thread::scope(|scope| {
+        for (ci, block) in out.chunks_mut(rows_per * d).enumerate() {
+            let start = ci * rows_per;
+            scope.spawn(move || spmm_rows(mat, d, h, start, block));
+        }
+    });
+}
+
 fn relu_inplace(z: &mut [f32]) {
     for v in z.iter_mut() {
         if *v < 0.0 {
@@ -59,11 +121,39 @@ fn relu_inplace(z: &mut [f32]) {
     }
 }
 
+/// out = wᵀ (d_out×d_in) from w (d_in×d_out) — materialized so the
+/// dz·Wᵀ products run through the vectorized i-k-j [`matmul`] instead of
+/// the old scalar i-j-k loop. For a fixed output element the term order
+/// (ascending d_out) is unchanged, so results stay bit-identical.
+fn transpose_into(w: &[f32], d_in: usize, d_out: usize, out: &mut Vec<f32>) {
+    out.resize(d_out * d_in, 0.0);
+    for di in 0..d_in {
+        for dj in 0..d_out {
+            out[dj * d_in + di] = w[di * d_out + dj];
+        }
+    }
+}
+
 pub struct NativeBackend {
-    // Scratch buffers reused across calls (no allocation in the hot loop —
-    // §Perf L3).
-    scratch: Vec<f32>,
-    scratch2: Vec<f32>,
+    /// SpMM row-block threads (1 = serial; any value is bit-identical).
+    threads: usize,
+    // Scratch arena reused across calls — zero allocations in steady
+    // state (§Perf L3 + PR 4).
+    /// Â·H (n × d_in).
+    ah: Vec<f32>,
+    /// Pre-activation / neighbor term (n × d_out).
+    z: Vec<f32>,
+    /// Second pre-activation accumulator (SAGE recompute; n × d_out).
+    z2: Vec<f32>,
+    /// Relu-masked upstream gradient (n × d_out).
+    dz: Vec<f32>,
+    /// dz·Wᵀ (n × d_in).
+    dzw: Vec<f32>,
+    /// dz·Wneighᵀ for SAGE (n × d_in).
+    dzw2: Vec<f32>,
+    /// Transposed weight matrices (d_out × d_in each).
+    wt: Vec<f32>,
+    wt2: Vec<f32>,
 }
 
 impl Default for NativeBackend {
@@ -74,130 +164,145 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend { scratch: Vec::new(), scratch2: Vec::new() }
+        NativeBackend::with_threads(1)
     }
 
-    fn buf(&mut self, len: usize) -> &mut Vec<f32> {
-        self.scratch.resize(len, 0.0);
-        &mut self.scratch
+    /// Backend with `threads` SpMM row-block threads. Bit-identical to
+    /// `threads = 1`; pick ≈ cores / workers (see README "Compute
+    /// backend") — more threads only help once local partitions hold
+    /// hundreds of thousands of edges.
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend {
+            threads: threads.max(1),
+            ah: Vec::new(),
+            z: Vec::new(),
+            z2: Vec::new(),
+            dz: Vec::new(),
+            dzw: Vec::new(),
+            dzw2: Vec::new(),
+            wt: Vec::new(),
+            wt2: Vec::new(),
+        }
+    }
+
+    /// Configured SpMM thread count.
+    pub fn agg_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// dz = d_out_grad masked by relu'(z) — no allocation once warm.
+    fn mask_dz(&mut self, d_out_grad: &[f32], z: &[f32], relu: bool) {
+        self.dz.clear();
+        self.dz.extend_from_slice(d_out_grad);
+        if relu {
+            for (dzv, &zv) in self.dz.iter_mut().zip(z.iter()) {
+                if zv <= 0.0 {
+                    *dzv = 0.0;
+                }
+            }
+        }
     }
 }
 
 impl Backend for NativeBackend {
     fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-               a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
-        let ah = {
-            let b = self.buf(n * d_in);
-            matmul(n, n, d_in, a, h, b);
-            b.clone()
-        };
-        let mut z = vec![0.0f32; n * d_out];
-        matmul(n, d_in, d_out, &ah, w, &mut z);
+               adj: &SparseAdj, h: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        debug_assert_eq!(adj.n(), n);
+        self.ah.resize(n * d_in, 0.0);
+        spmm(adj.fwd(), d_in, h, &mut self.ah, self.threads);
+        out.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, &self.ah, w, out);
         if relu {
-            relu_inplace(&mut z);
+            relu_inplace(out);
         }
-        Ok(z)
+        Ok(())
     }
 
     fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-               a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
-               -> Result<(Vec<f32>, Vec<f32>)> {
-        // ah = A·H ; z = ah·W
-        self.scratch.resize(n * d_in, 0.0);
-        matmul(n, n, d_in, a, h, &mut self.scratch);
-        let ah = self.scratch.clone();
-        self.scratch2.resize(n * d_out, 0.0);
-        matmul(n, d_in, d_out, &ah, w, &mut self.scratch2);
-        // dz = d_out_grad ⊙ relu'(z)
-        let mut dz = d_out_grad.to_vec();
-        if relu {
-            for (dzv, &zv) in dz.iter_mut().zip(self.scratch2.iter()) {
-                if zv <= 0.0 {
-                    *dzv = 0.0;
-                }
-            }
-        }
+               adj: &SparseAdj, h: &[f32], w: &[f32], d_out_grad: &[f32],
+               g_w: &mut Vec<f32>, d_h: &mut Vec<f32>) -> Result<()> {
+        debug_assert_eq!(adj.n(), n);
+        // ah = Â·H ; z = ah·W (recomputed for the relu mask).
+        self.ah.resize(n * d_in, 0.0);
+        spmm(adj.fwd(), d_in, h, &mut self.ah, self.threads);
+        self.z.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, &self.ah, w, &mut self.z);
+        let z = std::mem::take(&mut self.z);
+        self.mask_dz(d_out_grad, &z, relu);
+        self.z = z;
         // gW = ahᵀ·dz
-        let mut g_w = vec![0.0f32; d_in * d_out];
-        matmul_tn(n, d_in, d_out, &ah, &dz, &mut g_w);
-        // dH = Aᵀ·(dz·Wᵀ); W is d_in×d_out so dz·Wᵀ is n×d_in.
-        let mut dzw = vec![0.0f32; n * d_in];
-        // dz[n×d_out]·Wᵀ[d_out×d_in] — computed as matmul with transposed W:
-        for i in 0..n {
-            for di in 0..d_in {
-                let mut acc = 0.0f32;
-                for dj in 0..d_out {
-                    acc += dz[i * d_out + dj] * w[di * d_out + dj];
-                }
-                dzw[i * d_in + di] = acc;
-            }
-        }
-        let mut d_h = vec![0.0f32; n * d_in];
-        matmul_tn(n, n, d_in, a, &dzw, &mut d_h); // Aᵀ·dzw
-        Ok((g_w, d_h))
+        g_w.resize(d_in * d_out, 0.0);
+        matmul_tn(n, d_in, d_out, &self.ah, &self.dz, g_w);
+        // dH = Âᵀ·(dz·Wᵀ); W is d_in×d_out so dz·Wᵀ is n×d_in.
+        let mut wt = std::mem::take(&mut self.wt);
+        transpose_into(w, d_in, d_out, &mut wt);
+        self.dzw.resize(n * d_in, 0.0);
+        matmul(n, d_out, d_in, &self.dz, &wt, &mut self.dzw);
+        self.wt = wt;
+        d_h.resize(n * d_in, 0.0);
+        spmm(adj.transpose(), d_in, &self.dzw, d_h, self.threads);
+        Ok(())
     }
 
     fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32])
-                -> Result<Vec<f32>> {
-        let mut z = vec![0.0f32; n * d_out];
-        matmul(n, d_in, d_out, h, w_self, &mut z);
-        self.scratch.resize(n * d_in, 0.0);
-        matmul(n, n, d_in, a, h, &mut self.scratch);
-        let ah = self.scratch.clone();
-        self.scratch2.resize(n * d_out, 0.0);
-        matmul(n, d_in, d_out, &ah, w_neigh, &mut self.scratch2);
-        for (zv, &nv) in z.iter_mut().zip(self.scratch2.iter()) {
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                out: &mut Vec<f32>) -> Result<()> {
+        debug_assert_eq!(adj.n(), n);
+        out.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, h, w_self, out);
+        self.ah.resize(n * d_in, 0.0);
+        spmm(adj.fwd(), d_in, h, &mut self.ah, self.threads);
+        self.z.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, &self.ah, w_neigh, &mut self.z);
+        for (zv, &nv) in out.iter_mut().zip(self.z.iter()) {
             *zv += nv;
         }
         if relu {
-            relu_inplace(&mut z);
+            relu_inplace(out);
         }
-        Ok(z)
+        Ok(())
     }
 
     fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
-                d_out_grad: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        // Recompute z for relu mask.
-        let z = self.sage_fwd(n, d_in, d_out, false, a, h, w_self, w_neigh)?;
-        let mut dz = d_out_grad.to_vec();
-        if relu {
-            for (dzv, &zv) in dz.iter_mut().zip(z.iter()) {
-                if zv <= 0.0 {
-                    *dzv = 0.0;
-                }
-            }
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32], g_w_self: &mut Vec<f32>, g_w_neigh: &mut Vec<f32>,
+                d_h: &mut Vec<f32>) -> Result<()> {
+        debug_assert_eq!(adj.n(), n);
+        // Recompute z = H·Wself + (Ā·H)·Wneigh for the relu mask, in the
+        // same op order as sage_fwd.
+        self.z2.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, h, w_self, &mut self.z2);
+        self.ah.resize(n * d_in, 0.0);
+        spmm(adj.fwd(), d_in, h, &mut self.ah, self.threads);
+        self.z.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, &self.ah, w_neigh, &mut self.z);
+        for (zv, &nv) in self.z2.iter_mut().zip(self.z.iter()) {
+            *zv += nv;
         }
-        // ah = A·H
-        let mut ah = vec![0.0f32; n * d_in];
-        matmul(n, n, d_in, a, h, &mut ah);
-        let mut g_ws = vec![0.0f32; d_in * d_out];
-        matmul_tn(n, d_in, d_out, h, &dz, &mut g_ws);
-        let mut g_wn = vec![0.0f32; d_in * d_out];
-        matmul_tn(n, d_in, d_out, &ah, &dz, &mut g_wn);
-        // dH = dz·Wselfᵀ + Aᵀ·(dz·Wneighᵀ)
-        let mut dzs = vec![0.0f32; n * d_in];
-        let mut dzn = vec![0.0f32; n * d_in];
-        for i in 0..n {
-            for di in 0..d_in {
-                let mut acc_s = 0.0f32;
-                let mut acc_n = 0.0f32;
-                for dj in 0..d_out {
-                    let d = dz[i * d_out + dj];
-                    acc_s += d * w_self[di * d_out + dj];
-                    acc_n += d * w_neigh[di * d_out + dj];
-                }
-                dzs[i * d_in + di] = acc_s;
-                dzn[i * d_in + di] = acc_n;
-            }
-        }
-        let mut d_h = vec![0.0f32; n * d_in];
-        matmul_tn(n, n, d_in, a, &dzn, &mut d_h);
-        for (dh, &s) in d_h.iter_mut().zip(dzs.iter()) {
+        let z = std::mem::take(&mut self.z2);
+        self.mask_dz(d_out_grad, &z, relu);
+        self.z2 = z;
+        g_w_self.resize(d_in * d_out, 0.0);
+        matmul_tn(n, d_in, d_out, h, &self.dz, g_w_self);
+        g_w_neigh.resize(d_in * d_out, 0.0);
+        matmul_tn(n, d_in, d_out, &self.ah, &self.dz, g_w_neigh);
+        // dH = dz·Wselfᵀ + Āᵀ·(dz·Wneighᵀ)
+        let mut wt = std::mem::take(&mut self.wt);
+        transpose_into(w_self, d_in, d_out, &mut wt);
+        self.dzw.resize(n * d_in, 0.0);
+        matmul(n, d_out, d_in, &self.dz, &wt, &mut self.dzw);
+        self.wt = wt;
+        let mut wt2 = std::mem::take(&mut self.wt2);
+        transpose_into(w_neigh, d_in, d_out, &mut wt2);
+        self.dzw2.resize(n * d_in, 0.0);
+        matmul(n, d_out, d_in, &self.dz, &wt2, &mut self.dzw2);
+        self.wt2 = wt2;
+        d_h.resize(n * d_in, 0.0);
+        spmm(adj.transpose(), d_in, &self.dzw2, d_h, self.threads);
+        for (dh, &s) in d_h.iter_mut().zip(self.dzw.iter()) {
             *dh += s;
         }
-        Ok((g_ws, g_wn, d_h))
+        Ok(())
     }
 
     fn ce_grad(&mut self, n: usize, c: usize,
@@ -245,8 +350,9 @@ impl Backend for NativeBackend {
 
     fn fork(&self) -> Option<Box<dyn Backend + Send>> {
         // Stateless w.r.t. outputs (scratch buffers only) — a fresh
-        // instance is bit-identical by construction.
-        Some(Box::new(NativeBackend::new()))
+        // instance with the same thread count is bit-identical by
+        // construction.
+        Some(Box::new(NativeBackend::with_threads(self.threads)))
     }
 
     fn name(&self) -> &'static str {
@@ -254,13 +360,144 @@ impl Backend for NativeBackend {
     }
 }
 
+/// The seed repo's dense compute path, kept *verbatim* as the bit-exact
+/// oracle the sparse backend is tested and benchmarked against. O(n²)
+/// memory and compute — tests and benches only, never the trainer.
+pub mod dense_oracle {
+    use super::{matmul, matmul_tn, relu_inplace};
+
+    /// act(Â·H·W) over a dense row-major n×n operator.
+    pub fn gcn_fwd(n: usize, d_in: usize, d_out: usize, relu: bool,
+                   a: &[f32], h: &[f32], w: &[f32]) -> Vec<f32> {
+        let mut ah = vec![0.0f32; n * d_in];
+        matmul(n, n, d_in, a, h, &mut ah);
+        let mut z = vec![0.0f32; n * d_out];
+        matmul(n, d_in, d_out, &ah, w, &mut z);
+        if relu {
+            relu_inplace(&mut z);
+        }
+        z
+    }
+
+    /// Returns (gW, dH) — the seed's loops, including the scalar i-j-k
+    /// dz·Wᵀ accumulation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gcn_bwd(n: usize, d_in: usize, d_out: usize, relu: bool,
+                   a: &[f32], h: &[f32], w: &[f32], d_out_grad: &[f32])
+                   -> (Vec<f32>, Vec<f32>) {
+        let mut ah = vec![0.0f32; n * d_in];
+        matmul(n, n, d_in, a, h, &mut ah);
+        let mut z = vec![0.0f32; n * d_out];
+        matmul(n, d_in, d_out, &ah, w, &mut z);
+        let mut dz = d_out_grad.to_vec();
+        if relu {
+            for (dzv, &zv) in dz.iter_mut().zip(z.iter()) {
+                if zv <= 0.0 {
+                    *dzv = 0.0;
+                }
+            }
+        }
+        let mut g_w = vec![0.0f32; d_in * d_out];
+        matmul_tn(n, d_in, d_out, &ah, &dz, &mut g_w);
+        let mut dzw = vec![0.0f32; n * d_in];
+        for i in 0..n {
+            for di in 0..d_in {
+                let mut acc = 0.0f32;
+                for dj in 0..d_out {
+                    acc += dz[i * d_out + dj] * w[di * d_out + dj];
+                }
+                dzw[i * d_in + di] = acc;
+            }
+        }
+        let mut d_h = vec![0.0f32; n * d_in];
+        matmul_tn(n, n, d_in, a, &dzw, &mut d_h); // Âᵀ·dzw
+        (g_w, d_h)
+    }
+
+    /// act(H·Wself + (Ā·H)·Wneigh) over a dense operator.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sage_fwd(n: usize, d_in: usize, d_out: usize, relu: bool,
+                    a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32]) -> Vec<f32> {
+        let mut z = vec![0.0f32; n * d_out];
+        matmul(n, d_in, d_out, h, w_self, &mut z);
+        let mut ah = vec![0.0f32; n * d_in];
+        matmul(n, n, d_in, a, h, &mut ah);
+        let mut zn = vec![0.0f32; n * d_out];
+        matmul(n, d_in, d_out, &ah, w_neigh, &mut zn);
+        for (zv, &nv) in z.iter_mut().zip(zn.iter()) {
+            *zv += nv;
+        }
+        if relu {
+            relu_inplace(&mut z);
+        }
+        z
+    }
+
+    /// Returns (gWself, gWneigh, dH).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sage_bwd(n: usize, d_in: usize, d_out: usize, relu: bool,
+                    a: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                    d_out_grad: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let z = sage_fwd(n, d_in, d_out, false, a, h, w_self, w_neigh);
+        let mut dz = d_out_grad.to_vec();
+        if relu {
+            for (dzv, &zv) in dz.iter_mut().zip(z.iter()) {
+                if zv <= 0.0 {
+                    *dzv = 0.0;
+                }
+            }
+        }
+        let mut ah = vec![0.0f32; n * d_in];
+        matmul(n, n, d_in, a, h, &mut ah);
+        let mut g_ws = vec![0.0f32; d_in * d_out];
+        matmul_tn(n, d_in, d_out, h, &dz, &mut g_ws);
+        let mut g_wn = vec![0.0f32; d_in * d_out];
+        matmul_tn(n, d_in, d_out, &ah, &dz, &mut g_wn);
+        let mut dzs = vec![0.0f32; n * d_in];
+        let mut dzn = vec![0.0f32; n * d_in];
+        for i in 0..n {
+            for di in 0..d_in {
+                let mut acc_s = 0.0f32;
+                let mut acc_n = 0.0f32;
+                for dj in 0..d_out {
+                    let d = dz[i * d_out + dj];
+                    acc_s += d * w_self[di * d_out + dj];
+                    acc_n += d * w_neigh[di * d_out + dj];
+                }
+                dzs[i * d_in + di] = acc_s;
+                dzn[i * d_in + di] = acc_n;
+            }
+        }
+        let mut d_h = vec![0.0f32; n * d_in];
+        matmul_tn(n, n, d_in, a, &dzn, &mut d_h);
+        for (dh, &s) in d_h.iter_mut().zip(dzs.iter()) {
+            *dh += s;
+        }
+        (g_ws, g_wn, d_h)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Graph;
     use crate::util::Rng;
 
     fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
         (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// A dense-in-CSR random operator (every (i, j) stored) — stresses
+    /// the kernels on the least sparse case.
+    fn rand_full_adj(rng: &mut Rng, n: usize) -> SparseAdj {
+        let mut entries = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let v = rng.normal() as f32;
+                entries.push((i as u32, j as u32, v.abs() / n as f32));
+            }
+        }
+        SparseAdj::from_entries(n, entries)
     }
 
     #[test]
@@ -295,17 +532,59 @@ mod tests {
         }
     }
 
+    /// SpMM ≡ dense matmul bit for bit, across thread counts — the
+    /// kernel-level half of the PR 4 parity contract.
+    #[test]
+    fn spmm_bit_exact_vs_dense_matmul() {
+        let mut rng = Rng::new(11);
+        let g = Graph::random(100, 400, &mut rng);
+        let n_pad = 128;
+        let d = 17; // deliberately not a power of two
+        let adj = SparseAdj::gcn_normalized(&g, n_pad);
+        let dense = adj.to_dense();
+        let h = rand_vec(&mut rng, n_pad * d);
+        let mut want = vec![0.0f32; n_pad * d];
+        matmul(n_pad, n_pad, d, &dense, &h, &mut want);
+        for threads in [1usize, 2, 4, 7] {
+            let mut got = vec![f32::NAN; n_pad * d];
+            spmm(adj.fwd(), d, &h, &mut got, threads);
+            for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} idx={i}");
+            }
+        }
+    }
+
+    /// Transposed SpMM ≡ dense matmul_tn bit for bit.
+    #[test]
+    fn spmm_transpose_bit_exact_vs_matmul_tn() {
+        let mut rng = Rng::new(12);
+        let g = Graph::random(90, 500, &mut rng);
+        let n_pad = 128;
+        let d = 9;
+        let adj = SparseAdj::sage_mean(&g, n_pad);
+        let dense = adj.to_dense();
+        let y = rand_vec(&mut rng, n_pad * d);
+        let mut want = vec![0.0f32; n_pad * d];
+        matmul_tn(n_pad, n_pad, d, &dense, &y, &mut want);
+        for threads in [1usize, 3] {
+            let mut got = vec![f32::NAN; n_pad * d];
+            spmm(adj.transpose(), d, &y, &mut got, threads);
+            for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} idx={i}");
+            }
+        }
+    }
+
     #[test]
     fn gcn_fwd_identity_adj() {
         let mut b = NativeBackend::new();
         let n = 4;
-        let mut a = vec![0.0f32; n * n];
-        for i in 0..n {
-            a[i * n + i] = 1.0;
-        }
+        let entries: Vec<(u32, u32, f32)> = (0..n as u32).map(|i| (i, i, 1.0)).collect();
+        let adj = SparseAdj::from_entries(n, entries);
         let h = vec![1.0f32; n * 2];
         let w = vec![1.0, -1.0, 1.0, -1.0]; // 2×2
-        let out = b.gcn_fwd(n, 2, 2, true, &a, &h, &w).unwrap();
+        let mut out = Vec::new();
+        b.gcn_fwd(n, 2, 2, true, &adj, &h, &w, &mut out).unwrap();
         // z = h@w = [2,-2] per row → relu → [2,0]
         for i in 0..n {
             assert_eq!(out[i * 2], 2.0);
@@ -319,17 +598,16 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut b = NativeBackend::new();
         let (n, di, do_) = (6, 4, 3);
-        let mut a = rand_vec(&mut rng, n * n);
-        for v in a.iter_mut() {
-            *v = v.abs() / n as f32;
-        }
+        let adj = rand_full_adj(&mut rng, n);
         let h = rand_vec(&mut rng, n * di);
         let w = rand_vec(&mut rng, di * do_);
         let d_out = rand_vec(&mut rng, n * do_);
 
-        let (g_w, _) = b.gcn_bwd(n, di, do_, true, &a, &h, &w, &d_out).unwrap();
+        let (mut g_w, mut d_h) = (Vec::new(), Vec::new());
+        b.gcn_bwd(n, di, do_, true, &adj, &h, &w, &d_out, &mut g_w, &mut d_h).unwrap();
         let f = |b: &mut NativeBackend, w: &[f32]| -> f32 {
-            let out = b.gcn_fwd(n, di, do_, true, &a, &h, w).unwrap();
+            let mut out = Vec::new();
+            b.gcn_fwd(n, di, do_, true, &adj, &h, w, &mut out).unwrap();
             out.iter().zip(d_out.iter()).map(|(o, d)| o * d).sum()
         };
         let eps = 1e-3;
@@ -352,18 +630,18 @@ mod tests {
         let mut rng = Rng::new(3);
         let mut b = NativeBackend::new();
         let (n, di, do_) = (5, 3, 3);
-        let mut a = rand_vec(&mut rng, n * n);
-        for v in a.iter_mut() {
-            *v = v.abs() / n as f32;
-        }
+        let adj = rand_full_adj(&mut rng, n);
         let h = rand_vec(&mut rng, n * di);
         let ws = rand_vec(&mut rng, di * do_);
         let wn = rand_vec(&mut rng, di * do_);
         let d_out = rand_vec(&mut rng, n * do_);
-        let (g_ws, g_wn, _) =
-            b.sage_bwd(n, di, do_, true, &a, &h, &ws, &wn, &d_out).unwrap();
+        let (mut g_ws, mut g_wn, mut d_h) = (Vec::new(), Vec::new(), Vec::new());
+        b.sage_bwd(n, di, do_, true, &adj, &h, &ws, &wn, &d_out, &mut g_ws, &mut g_wn,
+                   &mut d_h)
+            .unwrap();
         let f = |b: &mut NativeBackend, ws: &[f32], wn: &[f32]| -> f32 {
-            let out = b.sage_fwd(n, di, do_, true, &a, &h, ws, wn).unwrap();
+            let mut out = Vec::new();
+            b.sage_fwd(n, di, do_, true, &adj, &h, ws, wn, &mut out).unwrap();
             out.iter().zip(d_out.iter()).map(|(o, d)| o * d).sum()
         };
         let eps = 1e-3;
@@ -381,6 +659,14 @@ mod tests {
             let fd = (f(&mut b, &ws, &p) - f(&mut b, &ws, &m)) / (2.0 * eps);
             assert!((fd - g_wn[idx]).abs() < 2e-2 * (1.0 + fd.abs()));
         }
+    }
+
+    #[test]
+    fn forked_backend_keeps_thread_count() {
+        let b = NativeBackend::with_threads(4);
+        assert_eq!(b.agg_threads(), 4);
+        let f = b.fork().unwrap();
+        assert_eq!(f.name(), "native");
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::comm::transport::{Frame, Payload, FRAME_HEADER_BYTES};
 use crate::device::profile::Gpu;
 use crate::device::simclock::{StageTimes, WallStages};
 use crate::dist::Cluster;
-use crate::graph::Dataset;
+use crate::graph::{Dataset, SparseAdj};
 use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind};
 use crate::partition::halo::{build_plan, Subgraph, SubgraphPlan};
 use crate::partition::rapa;
@@ -39,7 +39,10 @@ use std::time::{Duration, Instant};
 struct Worker {
     n_pad: usize,
     c_pad: usize,
-    a_hat: Vec<f32>,
+    /// Local propagation operator in CSR — O(n + nnz), built once at
+    /// partition time (the dense n_pad×n_pad matrix it replaced was the
+    /// per-worker memory ceiling).
+    adj: SparseAdj,
     y: Vec<f32>,
     train_mask: Vec<f32>,
     val_mask: Vec<f32>,
@@ -256,17 +259,22 @@ impl<'a> Session<'a> {
             let n_local = sg.n_local();
             let n_pad = n_local.next_power_of_two().max(256);
             // Local normalized adjacency with *global* degrees (keeps the
-            // math identical to single-GPU full-batch training).
-            let mut a_hat = vec![0.0f32; n_pad * n_pad];
+            // math identical to single-GPU full-batch training). Stored
+            // directly in CSR: entry values are computed exactly as the
+            // dense build did, and `from_entries` keeps each row's
+            // columns ascending — the dense kernels' zero-skip order —
+            // so the SpMM backend reproduces the dense path bit for bit.
+            let mut entries: Vec<(u32, u32, f32)> =
+                Vec::with_capacity(sg.local.arcs() + n_local);
             match cfg.model {
                 ModelKind::Gcn => {
                     for i in 0..n_local {
                         let gi = sg.global_ids[i];
                         let di = deg[gi as usize] + 1.0;
-                        a_hat[i * n_pad + i] = (1.0 / di) as f32;
+                        entries.push((i as u32, i as u32, (1.0 / di) as f32));
                         for &lj in sg.local.nbrs(i as u32) {
                             let gjd = deg[sg.global_ids[lj as usize] as usize] + 1.0;
-                            a_hat[i * n_pad + lj as usize] = (1.0 / (di * gjd).sqrt()) as f32;
+                            entries.push((i as u32, lj, (1.0 / (di * gjd).sqrt()) as f32));
                         }
                     }
                 }
@@ -275,11 +283,12 @@ impl<'a> Session<'a> {
                         let gi = sg.global_ids[i];
                         let d = deg[gi as usize].max(1.0);
                         for &lj in sg.local.nbrs(i as u32) {
-                            a_hat[i * n_pad + lj as usize] = (1.0 / d) as f32;
+                            entries.push((i as u32, lj, (1.0 / d) as f32));
                         }
                     }
                 }
             }
+            let adj = SparseAdj::from_entries(n_pad, entries);
             // Features: inner rows owned locally; halo rows arrive by
             // exchange.
             let f = data.f_dim;
@@ -318,7 +327,7 @@ impl<'a> Session<'a> {
             workers.push(Worker {
                 n_pad,
                 c_pad,
-                a_hat,
+                adj,
                 y,
                 train_mask,
                 val_mask,
@@ -1036,6 +1045,7 @@ fn fresh_row(
 }
 
 /// Forward one layer on one worker and charge its simulated compute time.
+/// The backend writes `h[l+1]` in place — no per-layer allocation.
 fn compute_layer(
     w: &mut Worker,
     backend: &mut dyn Backend,
@@ -1048,28 +1058,34 @@ fn compute_layer(
 ) -> Result<()> {
     let ld = dims[l];
     let n_pad = w.n_pad;
-    let out = match kind {
-        ModelKind::Gcn => backend.gcn_fwd(
-            n_pad,
-            ld.d_in,
-            ld.d_out,
-            ld.relu,
-            &w.a_hat,
-            &w.h[l],
-            &model.weights[l][0],
-        )?,
-        ModelKind::Sage => backend.sage_fwd(
-            n_pad,
-            ld.d_in,
-            ld.d_out,
-            ld.relu,
-            &w.a_hat,
-            &w.h[l],
-            &model.weights[l][0],
-            &model.weights[l][1],
-        )?,
-    };
-    w.h[l + 1] = out;
+    {
+        let (head, tail) = w.h.split_at_mut(l + 1);
+        let h_in = &head[l];
+        let h_out = &mut tail[0];
+        match kind {
+            ModelKind::Gcn => backend.gcn_fwd(
+                n_pad,
+                ld.d_in,
+                ld.d_out,
+                ld.relu,
+                &w.adj,
+                h_in,
+                &model.weights[l][0],
+                h_out,
+            )?,
+            ModelKind::Sage => backend.sage_fwd(
+                n_pad,
+                ld.d_in,
+                ld.d_out,
+                ld.relu,
+                &w.adj,
+                h_in,
+                &model.weights[l][0],
+                &model.weights[l][1],
+                h_out,
+            )?,
+        }
+    }
     charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, false, kind);
     Ok(())
 }
@@ -1100,47 +1116,53 @@ fn loss_and_backward(
         val_correct = vg.correct;
         val_total = vm;
     }
-    // Backward chain.
+    // Backward chain. The backend writes each layer's weight gradients
+    // straight into the (zeroed) accumulator and the upstream dH into a
+    // swap buffer — overwrite semantics, so the merged numbers are the
+    // same the old accumulate-into-zero path produced.
     let mut grads = model.zero_grads();
     let mut dh = lg.dz;
     // Scale to global normalization.
     for v in dh.iter_mut() {
         *v *= weight;
     }
+    let mut dh_prev: Vec<f32> = Vec::new();
     for l in (0..layers).rev() {
         let ld = dims[l];
         match kind {
             ModelKind::Gcn => {
-                let (gw, dh_prev) = backend.gcn_bwd(
+                backend.gcn_bwd(
                     n_pad,
                     ld.d_in,
                     ld.d_out,
                     ld.relu,
-                    &w.a_hat,
+                    &w.adj,
                     &w.h[l],
                     &model.weights[l][0],
                     &dh,
+                    &mut grads[l][0],
+                    &mut dh_prev,
                 )?;
-                axpy(&mut grads[l][0], &gw);
-                dh = dh_prev;
             }
             ModelKind::Sage => {
-                let (gws, gwn, dh_prev) = backend.sage_bwd(
+                let (g_self, g_neigh) = grads[l].split_at_mut(1);
+                backend.sage_bwd(
                     n_pad,
                     ld.d_in,
                     ld.d_out,
                     ld.relu,
-                    &w.a_hat,
+                    &w.adj,
                     &w.h[l],
                     &model.weights[l][0],
                     &model.weights[l][1],
                     &dh,
+                    &mut g_self[0],
+                    &mut g_neigh[0],
+                    &mut dh_prev,
                 )?;
-                axpy(&mut grads[l][0], &gws);
-                axpy(&mut grads[l][1], &gwn);
-                dh = dh_prev;
             }
         }
+        std::mem::swap(&mut dh, &mut dh_prev);
         // Drop cross-partition halo gradients (S4).
         for r in n_inner..w.n_pad {
             for c in 0..ld.d_in {
@@ -1635,13 +1657,6 @@ fn charge_hierarchical_reduce(
     }
 }
 
-fn axpy(acc: &mut [f32], x: &[f32]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for (a, b) in acc.iter_mut().zip(x) {
-        *a += b;
-    }
-}
-
 /// Stochastic uniform quantization of a row to `bits` (AdaQP numerics).
 ///
 /// Returns the dequantized values plus — for rows quantized to ≤ 8
@@ -1873,26 +1888,28 @@ mod tests {
 
     impl Backend for FlakyFork {
         fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                   a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+                   a: &SparseAdj, h: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()> {
             if self.fail_remaining > 0 {
                 self.fail_remaining -= 1;
                 return Err(anyhow!("injected worker fault"));
             }
-            self.inner.gcn_fwd(n, d_in, d_out, relu, a, h, w)
+            self.inner.gcn_fwd(n, d_in, d_out, relu, a, h, w, out)
         }
         fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                   a: &[f32], h: &[f32], w: &[f32], g: &[f32])
-                   -> Result<(Vec<f32>, Vec<f32>)> {
-            self.inner.gcn_bwd(n, d_in, d_out, relu, a, h, w, g)
+                   a: &SparseAdj, h: &[f32], w: &[f32], g: &[f32],
+                   g_w: &mut Vec<f32>, d_h: &mut Vec<f32>) -> Result<()> {
+            self.inner.gcn_bwd(n, d_in, d_out, relu, a, h, w, g, g_w, d_h)
         }
         fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32]) -> Result<Vec<f32>> {
-            self.inner.sage_fwd(n, d_in, d_out, relu, a, h, ws, wn)
+                    a: &SparseAdj, h: &[f32], ws: &[f32], wn: &[f32],
+                    out: &mut Vec<f32>) -> Result<()> {
+            self.inner.sage_fwd(n, d_in, d_out, relu, a, h, ws, wn, out)
         }
         fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32], g: &[f32])
-                    -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-            self.inner.sage_bwd(n, d_in, d_out, relu, a, h, ws, wn, g)
+                    a: &SparseAdj, h: &[f32], ws: &[f32], wn: &[f32], g: &[f32],
+                    g_ws: &mut Vec<f32>, g_wn: &mut Vec<f32>, d_h: &mut Vec<f32>)
+                    -> Result<()> {
+            self.inner.sage_bwd(n, d_in, d_out, relu, a, h, ws, wn, g, g_ws, g_wn, d_h)
         }
         fn ce_grad(&mut self, n: usize, c: usize,
                    logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {
@@ -1905,22 +1922,24 @@ mod tests {
 
     impl Backend for FlakyBackend {
         fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                   a: &[f32], h: &[f32], w: &[f32]) -> Result<Vec<f32>> {
-            self.inner.gcn_fwd(n, d_in, d_out, relu, a, h, w)
+                   a: &SparseAdj, h: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()> {
+            self.inner.gcn_fwd(n, d_in, d_out, relu, a, h, w, out)
         }
         fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                   a: &[f32], h: &[f32], w: &[f32], g: &[f32])
-                   -> Result<(Vec<f32>, Vec<f32>)> {
-            self.inner.gcn_bwd(n, d_in, d_out, relu, a, h, w, g)
+                   a: &SparseAdj, h: &[f32], w: &[f32], g: &[f32],
+                   g_w: &mut Vec<f32>, d_h: &mut Vec<f32>) -> Result<()> {
+            self.inner.gcn_bwd(n, d_in, d_out, relu, a, h, w, g, g_w, d_h)
         }
         fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32]) -> Result<Vec<f32>> {
-            self.inner.sage_fwd(n, d_in, d_out, relu, a, h, ws, wn)
+                    a: &SparseAdj, h: &[f32], ws: &[f32], wn: &[f32],
+                    out: &mut Vec<f32>) -> Result<()> {
+            self.inner.sage_fwd(n, d_in, d_out, relu, a, h, ws, wn, out)
         }
         fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
-                    a: &[f32], h: &[f32], ws: &[f32], wn: &[f32], g: &[f32])
-                    -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-            self.inner.sage_bwd(n, d_in, d_out, relu, a, h, ws, wn, g)
+                    a: &SparseAdj, h: &[f32], ws: &[f32], wn: &[f32], g: &[f32],
+                    g_ws: &mut Vec<f32>, g_wn: &mut Vec<f32>, d_h: &mut Vec<f32>)
+                    -> Result<()> {
+            self.inner.sage_bwd(n, d_in, d_out, relu, a, h, ws, wn, g, g_ws, g_wn, d_h)
         }
         fn ce_grad(&mut self, n: usize, c: usize,
                    logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {

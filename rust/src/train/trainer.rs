@@ -20,6 +20,12 @@ use crate::train::TrainReport;
 use anyhow::Result;
 
 /// How workers execute within an epoch.
+///
+/// Orthogonal to this mode, the *native backend* can also parallelize
+/// inside a worker: `NativeBackend::with_threads(t)` (CLI
+/// `--agg-threads N`) splits each SpMM's output rows across `t` scoped
+/// threads. Both knobs are bit-identity-preserving, so
+/// `workers × agg_threads` can be sized to the host freely.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ExecMode {
     /// One OS thread walks workers in index order — the reference path.

@@ -1,0 +1,109 @@
+//! Zero-allocation contract of the native backend's hot loop.
+//!
+//! PR 4 replaced the per-call `scratch.clone()` / `d_out_grad.to_vec()` /
+//! fresh `vec![]` pattern with a persistent scratch arena and caller-owned
+//! output vectors. This binary holds exactly one test (so no sibling test
+//! thread pollutes the counter) and wraps the global allocator in an
+//! allocation counter: after a warmup pass sizes every buffer (and builds
+//! the lazy CSR transpose), repeated `gcn_fwd/gcn_bwd/sage_fwd/sage_bwd`
+//! calls must perform **zero** allocations.
+//!
+//! `ce_grad` is excluded: it returns a fresh `LossGrad` by design (one
+//! small allocation per epoch per worker, not per layer).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use capgnn::graph::{Graph, SparseAdj};
+use capgnn::runtime::{Backend, NativeBackend};
+use capgnn::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn backend_steady_state_allocates_nothing() {
+    let mut rng = Rng::new(21);
+    let g = Graph::random(300, 1800, &mut rng);
+    let n_pad = 512;
+    let gcn_adj = SparseAdj::gcn_normalized(&g, n_pad);
+    let sage_adj = SparseAdj::sage_mean(&g, n_pad);
+    let (d_in, d_out) = (24usize, 24usize);
+    let h: Vec<f32> = (0..n_pad * d_in).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() as f32).collect();
+    let w2: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() as f32).collect();
+    let dgrad: Vec<f32> = (0..n_pad * d_out).map(|_| rng.normal() as f32).collect();
+
+    // Single-threaded SpMM: the scoped-thread dispatch of threads > 1
+    // necessarily allocates per call (thread stacks); the arena contract
+    // is about the serial hot loop every worker thread runs.
+    let mut be = NativeBackend::new();
+    let mut out = Vec::new();
+    let (mut g_w, mut d_h) = (Vec::new(), Vec::new());
+    let (mut g_ws, mut g_wn, mut sd_h) = (Vec::new(), Vec::new(), Vec::new());
+
+    let pass = |be: &mut NativeBackend,
+                    out: &mut Vec<f32>,
+                    g_w: &mut Vec<f32>,
+                    d_h: &mut Vec<f32>,
+                    g_ws: &mut Vec<f32>,
+                    g_wn: &mut Vec<f32>,
+                    sd_h: &mut Vec<f32>| {
+        for relu in [true, false] {
+            be.gcn_fwd(n_pad, d_in, d_out, relu, &gcn_adj, &h, &w, out).unwrap();
+            be.gcn_bwd(n_pad, d_in, d_out, relu, &gcn_adj, &h, &w, &dgrad, g_w, d_h)
+                .unwrap();
+            be.sage_fwd(n_pad, d_in, d_out, relu, &sage_adj, &h, &w, &w2, out).unwrap();
+            be.sage_bwd(n_pad, d_in, d_out, relu, &sage_adj, &h, &w, &w2, &dgrad, g_ws,
+                        g_wn, sd_h)
+                .unwrap();
+        }
+    };
+
+    // Warmup: sizes the arena and the output vectors, builds both lazy
+    // transposes.
+    for _ in 0..3 {
+        pass(&mut be, &mut out, &mut g_w, &mut d_h, &mut g_ws, &mut g_wn, &mut sd_h);
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..10 {
+        pass(&mut be, &mut out, &mut g_w, &mut d_h, &mut g_ws, &mut g_wn, &mut sd_h);
+    }
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "native backend must not allocate in steady state ({} allocations in 10 passes)",
+        after - before
+    );
+    // The outputs are still real numbers, not stale garbage.
+    assert!(out.iter().all(|v| v.is_finite()));
+    assert!(d_h.iter().all(|v| v.is_finite()));
+    assert!(sd_h.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,215 @@
+//! PR 4 parity contract: the CSR SpMM backend is **bit-exact** against
+//! the seed repo's dense compute path.
+//!
+//! Two layers of evidence:
+//! 1. Kernel parity — `gcn_fwd/gcn_bwd/sage_fwd/sage_bwd` on random
+//!    graphs match [`dense_oracle`] (the seed loops kept verbatim) to the
+//!    bit, across 1/2/4 aggregation threads × GCN/SAGE × relu on/off.
+//! 2. End-to-end — a full threaded training run on the 2M-2D preset
+//!    produces exactly the seed losses: a `DenseOracleBackend` that
+//!    densifies the operator and replays the seed math epoch for epoch
+//!    must agree with the sparse backend on every loss, at any
+//!    aggregation thread count.
+
+use capgnn::dist::Cluster;
+use capgnn::graph::{Graph, SparseAdj};
+use capgnn::model::ModelKind;
+use capgnn::runtime::backend::LossGrad;
+use capgnn::runtime::native::dense_oracle;
+use capgnn::runtime::{Backend, NativeBackend};
+use capgnn::train::{ExecMode, Session, TrainConfig};
+use capgnn::util::Rng;
+use anyhow::Result;
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}[{i}]: sparse {a} vs dense {b}");
+    }
+}
+
+/// The satellite matrix: 1/2/4 aggregation threads × gcn/sage × relu
+/// on/off, all four backend ops, zero tolerance.
+#[test]
+fn backend_ops_bit_exact_vs_dense_oracle() {
+    let mut rng = Rng::new(42);
+    for &(n, m) in &[(60usize, 240usize), (173, 1200)] {
+        let g = Graph::random(n, m, &mut rng);
+        let n_pad = n.next_power_of_two(); // non-trivial padded tail rows
+        let gcn_adj = SparseAdj::gcn_normalized(&g, n_pad);
+        let sage_adj = SparseAdj::sage_mean(&g, n_pad);
+        let gcn_dense = gcn_adj.to_dense();
+        let sage_dense = sage_adj.to_dense();
+        let (di, do_) = (13usize, 7usize);
+        let h = rand_vec(&mut rng, n_pad * di);
+        let w = rand_vec(&mut rng, di * do_);
+        let w2 = rand_vec(&mut rng, di * do_);
+        let dgrad = rand_vec(&mut rng, n_pad * do_);
+        for relu in [true, false] {
+            // The oracle is thread-oblivious: compute it once per case.
+            let want_gf = dense_oracle::gcn_fwd(n_pad, di, do_, relu, &gcn_dense, &h, &w);
+            let (want_gw, want_gdh) =
+                dense_oracle::gcn_bwd(n_pad, di, do_, relu, &gcn_dense, &h, &w, &dgrad);
+            let want_sf =
+                dense_oracle::sage_fwd(n_pad, di, do_, relu, &sage_dense, &h, &w, &w2);
+            let (want_sws, want_swn, want_sdh) = dense_oracle::sage_bwd(
+                n_pad, di, do_, relu, &sage_dense, &h, &w, &w2, &dgrad,
+            );
+            for threads in [1usize, 2, 4] {
+                let what = format!("n={n} relu={relu} threads={threads}");
+                let mut be = NativeBackend::with_threads(threads);
+                let mut out = Vec::new();
+                be.gcn_fwd(n_pad, di, do_, relu, &gcn_adj, &h, &w, &mut out).unwrap();
+                assert_bits(&out, &want_gf, &format!("gcn_fwd {what}"));
+                let (mut g_w, mut d_h) = (Vec::new(), Vec::new());
+                be.gcn_bwd(n_pad, di, do_, relu, &gcn_adj, &h, &w, &dgrad, &mut g_w,
+                           &mut d_h)
+                    .unwrap();
+                assert_bits(&g_w, &want_gw, &format!("gcn_bwd gW {what}"));
+                assert_bits(&d_h, &want_gdh, &format!("gcn_bwd dH {what}"));
+                let mut sout = Vec::new();
+                be.sage_fwd(n_pad, di, do_, relu, &sage_adj, &h, &w, &w2, &mut sout)
+                    .unwrap();
+                assert_bits(&sout, &want_sf, &format!("sage_fwd {what}"));
+                let (mut g_ws, mut g_wn, mut sd_h) = (Vec::new(), Vec::new(), Vec::new());
+                be.sage_bwd(n_pad, di, do_, relu, &sage_adj, &h, &w, &w2, &dgrad,
+                            &mut g_ws, &mut g_wn, &mut sd_h)
+                    .unwrap();
+                assert_bits(&g_ws, &want_sws, &format!("sage_bwd gWs {what}"));
+                assert_bits(&g_wn, &want_swn, &format!("sage_bwd gWn {what}"));
+                assert_bits(&sd_h, &want_sdh, &format!("sage_bwd dH {what}"));
+            }
+        }
+    }
+}
+
+/// The seed repo's dense backend, reconstructed: densify the operator
+/// and replay the exact pre-PR4 per-layer loops. Slow and O(n²) — it
+/// exists so end-to-end runs can be checked against seed numerics.
+struct DenseOracleBackend {
+    /// ce_grad is unchanged from the seed — reuse the native one.
+    inner: NativeBackend,
+}
+
+impl DenseOracleBackend {
+    fn new() -> DenseOracleBackend {
+        DenseOracleBackend { inner: NativeBackend::new() }
+    }
+}
+
+impl Backend for DenseOracleBackend {
+    fn gcn_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               adj: &SparseAdj, h: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let a = adj.to_dense();
+        *out = dense_oracle::gcn_fwd(n, d_in, d_out, relu, &a, h, w);
+        Ok(())
+    }
+
+    fn gcn_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+               adj: &SparseAdj, h: &[f32], w: &[f32], d_out_grad: &[f32],
+               g_w: &mut Vec<f32>, d_h: &mut Vec<f32>) -> Result<()> {
+        let a = adj.to_dense();
+        let (gw, dh) = dense_oracle::gcn_bwd(n, d_in, d_out, relu, &a, h, w, d_out_grad);
+        *g_w = gw;
+        *d_h = dh;
+        Ok(())
+    }
+
+    fn sage_fwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                out: &mut Vec<f32>) -> Result<()> {
+        let a = adj.to_dense();
+        *out = dense_oracle::sage_fwd(n, d_in, d_out, relu, &a, h, w_self, w_neigh);
+        Ok(())
+    }
+
+    fn sage_bwd(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                adj: &SparseAdj, h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                d_out_grad: &[f32], g_w_self: &mut Vec<f32>, g_w_neigh: &mut Vec<f32>,
+                d_h: &mut Vec<f32>) -> Result<()> {
+        let a = adj.to_dense();
+        let (gs, gn, dh) =
+            dense_oracle::sage_bwd(n, d_in, d_out, relu, &a, h, w_self, w_neigh, d_out_grad);
+        *g_w_self = gs;
+        *g_w_neigh = gn;
+        *d_h = dh;
+        Ok(())
+    }
+
+    fn ce_grad(&mut self, n: usize, c: usize,
+               logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad> {
+        self.inner.ce_grad(n, c, logits, y, mask)
+    }
+
+    fn fork(&self) -> Option<Box<dyn Backend + Send>> {
+        Some(Box::new(DenseOracleBackend::new()))
+    }
+
+    fn name(&self) -> &'static str {
+        "dense-oracle"
+    }
+}
+
+fn tiny_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn run_report(
+    backend: &mut dyn Backend,
+    cluster: &Cluster,
+    cfg: &TrainConfig,
+) -> capgnn::train::TrainReport {
+    let ds = capgnn::graph::datasets::tiny(11);
+    let mut session = Session::build(&ds, cluster, backend, cfg).unwrap();
+    session.run_epochs(cfg.epochs).unwrap();
+    session.finish().unwrap()
+}
+
+/// End-to-end seed check: `ExecMode::Threaded` on the 2M-2D preset
+/// produces losses bit-identical to the dense seed path — the sparse
+/// refactor changed the representation, not one bit of the training
+/// trajectory. Aggregation threads don't change it either.
+#[test]
+fn threaded_2m2d_losses_unchanged_from_seed() {
+    let cluster = Cluster::preset("2M-2D").unwrap();
+    let mut cfg = tiny_cfg(3);
+    cfg.exec = ExecMode::Threaded;
+
+    let mut seed = DenseOracleBackend::new();
+    let want = run_report(&mut seed, &cluster, &cfg);
+
+    let mut sparse = NativeBackend::new();
+    let got = run_report(&mut sparse, &cluster, &cfg);
+    assert_eq!(got.losses, want.losses, "sparse vs seed losses (threaded, 2M-2D)");
+    assert_eq!(got.val_accs, want.val_accs);
+    assert_eq!(got.test_acc, want.test_acc);
+    assert_eq!(got.bytes_moved, want.bytes_moved);
+    assert_eq!(got.cross_bytes_moved, want.cross_bytes_moved);
+
+    let mut sparse4 = NativeBackend::with_threads(4);
+    let got4 = run_report(&mut sparse4, &cluster, &cfg);
+    assert_eq!(got4.losses, want.losses, "agg threads must not change losses");
+    assert_eq!(got4.test_acc, want.test_acc);
+}
+
+/// Same contract for GraphSAGE (two-matrix backward) on a single-machine
+/// cluster, sequential executor.
+#[test]
+fn sage_session_matches_seed_dense_path() {
+    use capgnn::device::profile::DeviceKind;
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let mut cfg = tiny_cfg(3);
+    cfg.model = ModelKind::Sage;
+
+    let mut seed = DenseOracleBackend::new();
+    let want = run_report(&mut seed, &cluster, &cfg);
+    let mut sparse = NativeBackend::with_threads(2);
+    let got = run_report(&mut sparse, &cluster, &cfg);
+    assert_eq!(got.losses, want.losses, "sage sparse vs seed losses");
+    assert_eq!(got.val_accs, want.val_accs);
+    assert_eq!(got.test_acc, want.test_acc);
+}
