@@ -6,7 +6,7 @@ use capgnn::expt::{self, Ctx};
 use capgnn::util::bench::run_expt_bench;
 
 fn main() {
-    let ctx = if capgnn::util::bench::quick_mode() { Ctx::quick() } else { Ctx { scale: 0.3, epochs: 6, seed: 42 } };
+    let ctx = if capgnn::util::bench::quick_mode() { Ctx::quick() } else { Ctx { scale: 0.3, epochs: 6, seed: 42, dataset: None } };
     run_expt_bench("fig16", || {
         expt::cache_expts::fig16(ctx);
     });

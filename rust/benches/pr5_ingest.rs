@@ -1,0 +1,155 @@
+//! PR5 bench / CI gate: edge-list ingestion and parallel CSR assembly.
+//!
+//! For three graph sizes, generates a text edge list and measures
+//! - parse throughput (`read_edge_list`, streaming line parser);
+//! - CSR build throughput (`build_csr` two-pass counting sort) at 1, 2
+//!   and 4 row-block threads.
+//!
+//! Writes `BENCH_PR5.json` (per-size times + edges/sec) to the repo
+//! root, then exits nonzero if at the largest size either
+//! - the 2-thread build is slower than single-threaded (>10% tolerance —
+//!   2 threads so the gate holds on 2-core CI runners; the 4-thread
+//!   time is reported, not gated), or
+//! - the parallel CSR differs from the single-threaded CSR in any bit, or
+//! - a save → load `.cgr` round-trip is not bit-exact.
+//!
+//! `BENCH_QUICK=1` shrinks the sizes for smoke runs (the speed gate is
+//! skipped there: at toy sizes thread spawn overhead dominates).
+
+use capgnn::graph::io::{build_csr, load_cgr, read_edge_list, save_cgr, write_edge_list};
+use capgnn::util::bench;
+use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::Rng;
+
+fn main() {
+    let quick = bench::quick_mode();
+    // (vertices, edge records): avg degree ≈ 8 at every size.
+    let sizes: &[(usize, usize)] = if quick {
+        &[(1024, 4096), (2048, 8192), (4096, 16384)]
+    } else {
+        &[(16384, 65536), (65536, 262144), (131072, 524288)]
+    };
+    let reps = if quick { 2 } else { 3 };
+    let _ = std::fs::create_dir_all("target");
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut last_build1 = 0.0f64;
+    let mut last_build2 = 0.0f64;
+    for &(n, m) in sizes {
+        let mut rng = Rng::new(42);
+        let edges: Vec<(u32, u32)> =
+            (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+        let mut text: Vec<u8> = Vec::with_capacity(m * 12);
+        write_edge_list(&mut text, &edges).unwrap();
+
+        // Parse throughput (streaming line parser over the in-memory file
+        // image — no disk noise in the number).
+        let mut parsed = None;
+        let parse = bench::measure(
+            || {
+                parsed = Some(read_edge_list(text.as_slice(), Some(n)).unwrap());
+            },
+            1,
+            reps,
+        );
+        let list = parsed.expect("parsed edge list");
+
+        // CSR build: single-threaded reference, then row-block parallel.
+        let mut g1 = None;
+        let build1 = bench::measure(
+            || {
+                g1 = Some(build_csr(n, &list.edges, 1).unwrap().0);
+            },
+            1,
+            reps,
+        );
+        let mut g2 = None;
+        let build2 = bench::measure(
+            || {
+                g2 = Some(build_csr(n, &list.edges, 2).unwrap().0);
+            },
+            1,
+            reps,
+        );
+        let mut g4 = None;
+        let build4 = bench::measure(
+            || {
+                g4 = Some(build_csr(n, &list.edges, 4).unwrap().0);
+            },
+            1,
+            reps,
+        );
+        let (g1, g2, g4) = (g1.unwrap(), g2.unwrap(), g4.unwrap());
+        if g2 != g1 || g4 != g1 {
+            eprintln!("DETERMINISM BREACH at n={n}: parallel CSR differs from single-threaded");
+            std::process::exit(1);
+        }
+
+        println!(
+            "n={n} m={m} ({} bytes of text): parse {:.4}s ({:.2}M edges/s), \
+             build t1 {:.4}s, t2 {:.4}s, t4 {:.4}s ({:.2}x at t2)",
+            text.len(),
+            parse.mean,
+            m as f64 / parse.mean.max(1e-12) / 1e6,
+            build1.mean,
+            build2.mean,
+            build4.mean,
+            build1.mean / build2.mean.max(1e-12),
+        );
+        entries.push(obj(vec![
+            ("n", num(n as f64)),
+            ("m", num(m as f64)),
+            ("text_bytes", num(text.len() as f64)),
+            ("parse_s", num(parse.mean)),
+            ("parse_edges_per_s", num(m as f64 / parse.mean.max(1e-12))),
+            ("build_s_t1", num(build1.mean)),
+            ("build_s_t2", num(build2.mean)),
+            ("build_s_t4", num(build4.mean)),
+            ("build_edges_per_s_t1", num(m as f64 / build1.mean.max(1e-12))),
+            ("build_edges_per_s_t2", num(m as f64 / build2.mean.max(1e-12))),
+            ("parallel_speedup_t2", num(build1.mean / build2.mean.max(1e-12))),
+        ]));
+        last_build1 = build1.mean;
+        last_build2 = build2.mean;
+    }
+
+    // Round-trip gate at the largest size: ingest → save → load must be
+    // bit-exact (Graph stores no floats; exact equality is the bar).
+    let (n, m) = *sizes.last().unwrap();
+    let mut rng = Rng::new(42);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let (g, _) = build_csr(n, &edges, 4).unwrap();
+    let path = "target/pr5_ingest.cgr";
+    save_cgr(std::path::Path::new(path), &g, None).unwrap();
+    let back = load_cgr(std::path::Path::new(path)).unwrap();
+    let roundtrip_ok = back.graph == g;
+    if !roundtrip_ok {
+        eprintln!("ROUND-TRIP BREACH at n={n}: .cgr load differs from the saved graph");
+        std::process::exit(1);
+    }
+
+    let parallel_ratio = last_build2 / last_build1.max(1e-12);
+    let doc = obj(vec![
+        ("bench", s("pr5_ingest")),
+        ("quick", Json::Bool(quick)),
+        ("results", arr(entries)),
+        ("parallel_ratio_t2_at_largest", num(parallel_ratio)),
+        ("roundtrip_bit_exact", Json::Bool(roundtrip_ok)),
+    ]);
+    bench::write_json_file("BENCH_PR5.json", &doc).expect("write BENCH_PR5.json");
+    println!(
+        "wrote BENCH_PR5.json (largest size: t2/t1 build ratio {parallel_ratio:.2}, round-trip bit-exact)"
+    );
+
+    if quick {
+        println!("quick mode: parallel speed gate skipped (toy sizes)");
+    } else if parallel_ratio > 1.10 {
+        eprintln!(
+            "PERF GATE FAILED: 2-thread CSR build is {:.0}% slower than single-threaded \
+             at the largest size (must be no slower, 10% tolerance)",
+            (parallel_ratio - 1.0) * 100.0
+        );
+        std::process::exit(1);
+    }
+}

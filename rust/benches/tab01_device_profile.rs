@@ -6,7 +6,7 @@ use capgnn::expt::{self, Ctx};
 use capgnn::util::bench::run_expt_bench;
 
 fn main() {
-    let ctx = if capgnn::util::bench::quick_mode() { Ctx::quick() } else { Ctx { scale: 1.0, epochs: 1, seed: 42 } };
+    let ctx = if capgnn::util::bench::quick_mode() { Ctx::quick() } else { Ctx { scale: 1.0, epochs: 1, seed: 42, dataset: None } };
     run_expt_bench("tab1", || {
         expt::device_tab::tab1(ctx);
     });

@@ -19,13 +19,19 @@ use anyhow::Result;
 /// The five compared systems.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum System {
+    /// SANCUS DistGCN: 2D split, staleness-based broadcast skipping.
     DistGcn,
+    /// SANCUS CachedGCN: DistGCN plus a block embedding cache.
     CachedGcn,
+    /// Plain partition + full per-layer communication.
     Vanilla,
+    /// AdaQP: METIS + pipeline + stochastic int8 quantization.
     AdaQp,
+    /// The full system under study (JACA + RAPA + pipeline).
     CaPGnn,
 }
 
+/// Every compared system, in the paper's Table 7 column order.
 pub const ALL_SYSTEMS: [System; 5] = [
     System::DistGcn,
     System::CachedGcn,
@@ -37,11 +43,14 @@ pub const ALL_SYSTEMS: [System; 5] = [
 /// Why a run did not produce numbers (paper Table 7 markers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Failure {
+    /// The run exceeded the time budget (AdaQP's bit-width ILP).
     Timeout,
+    /// The run exceeded device memory.
     Oom,
 }
 
 impl System {
+    /// Display name (Table 6/7 row label).
     pub fn name(self) -> &'static str {
         match self {
             System::DistGcn => "DistGCN",
@@ -52,6 +61,7 @@ impl System {
         }
     }
 
+    /// Parse a CLI `--system` name (case-insensitive).
     pub fn from_name(s: &str) -> Option<System> {
         match s.to_ascii_lowercase().as_str() {
             "distgcn" => Some(System::DistGcn),
@@ -191,13 +201,19 @@ pub fn original_f_dim(spec: &DatasetSpec) -> usize {
 /// Ablation arms of Table 8.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Ablation {
+    /// No CaPGNN feature enabled.
     Vanilla,
+    /// JACA caching only.
     Jaca,
+    /// RAPA partitioning only.
     Rapa,
+    /// JACA + RAPA, no pipeline.
     JacaRapa,
+    /// JACA + RAPA + pipeline (the full system).
     Full,
 }
 
+/// Every ablation arm, in the paper's Table 8 row order.
 pub const ABLATIONS: [Ablation; 5] = [
     Ablation::Vanilla,
     Ablation::Jaca,
@@ -207,6 +223,7 @@ pub const ABLATIONS: [Ablation; 5] = [
 ];
 
 impl Ablation {
+    /// Table 8 row label.
     pub fn name(self) -> &'static str {
         match self {
             Ablation::Vanilla => "Vanilla",
@@ -217,6 +234,7 @@ impl Ablation {
         }
     }
 
+    /// The trainer preset of this arm.
     pub fn config(self, epochs: usize) -> TrainConfig {
         let base = TrainConfig::capgnn(epochs);
         match self {

@@ -3,6 +3,7 @@
 use super::{CachePolicy, InsertOutcome};
 use std::collections::{HashSet, VecDeque};
 
+/// First-in-first-out replacement over u64 keys.
 pub struct FifoCache {
     capacity: usize,
     queue: VecDeque<u64>,
@@ -10,6 +11,7 @@ pub struct FifoCache {
 }
 
 impl FifoCache {
+    /// Empty cache holding at most `capacity` keys.
     pub fn new(capacity: usize) -> FifoCache {
         FifoCache {
             capacity,

@@ -11,6 +11,8 @@
 use super::{CachePolicy, InsertOutcome};
 use std::collections::{BTreeSet, HashMap};
 
+/// The JACA replacement policy: overlap-ratio priority with recency
+/// tiebreak.
 pub struct JacaCache {
     capacity: usize,
     /// key → (priority, recency tick)
@@ -23,6 +25,7 @@ pub struct JacaCache {
 }
 
 impl JacaCache {
+    /// Empty cache holding at most `capacity` keys.
     pub fn new(capacity: usize) -> JacaCache {
         JacaCache {
             capacity,

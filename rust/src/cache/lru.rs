@@ -3,6 +3,7 @@
 use super::{CachePolicy, InsertOutcome};
 use std::collections::{BTreeSet, HashMap};
 
+/// Least-recently-used replacement over u64 keys.
 pub struct LruCache {
     capacity: usize,
     /// key → last-use tick
@@ -13,6 +14,7 @@ pub struct LruCache {
 }
 
 impl LruCache {
+    /// Empty cache holding at most `capacity` keys.
     pub fn new(capacity: usize) -> LruCache {
         LruCache {
             capacity,

@@ -46,6 +46,7 @@ impl InsertOutcome {
 
 /// Cache replacement policy over u64 keys.
 pub trait CachePolicy: Send {
+    /// Display name of the policy.
     fn name(&self) -> &'static str;
     /// Is `key` resident? Does not mutate recency (use [`Self::touch`]).
     fn contains(&self, key: u64) -> bool;
@@ -56,8 +57,11 @@ pub trait CachePolicy: Send {
     fn insert(&mut self, key: u64) -> InsertOutcome;
     /// Remove a key if resident.
     fn remove(&mut self, key: u64);
+    /// Number of resident keys.
     fn len(&self) -> usize;
+    /// Maximum resident keys.
     fn capacity(&self) -> usize;
+    /// True when nothing is resident.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -69,12 +73,16 @@ pub trait CachePolicy: Send {
 /// Which policy to instantiate (benches sweep this).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
+    /// Overlap-ratio priority with recency tiebreak (§4.2).
     Jaca,
+    /// First-in-first-out baseline.
     Fifo,
+    /// Least-recently-used baseline.
     Lru,
 }
 
 impl PolicyKind {
+    /// Instantiate the policy with the given capacity.
     pub fn build(self, capacity: usize) -> Box<dyn CachePolicy> {
         match self {
             PolicyKind::Jaca => Box::new(jaca::JacaCache::new(capacity)),
@@ -83,6 +91,7 @@ impl PolicyKind {
         }
     }
 
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             PolicyKind::Jaca => "JACA",
@@ -91,6 +100,7 @@ impl PolicyKind {
         }
     }
 
+    /// Parse a CLI `--policy` name (case-insensitive).
     pub fn from_name(s: &str) -> Option<PolicyKind> {
         match s.to_ascii_lowercase().as_str() {
             "jaca" => Some(PolicyKind::Jaca),

@@ -20,10 +20,13 @@ pub struct FeatureStore {
 }
 
 impl FeatureStore {
+    /// An empty store.
     pub fn new() -> FeatureStore {
         FeatureStore::default()
     }
 
+    /// Store (or overwrite) the row behind `key`, stamped with the
+    /// writing epoch.
     pub fn put(&mut self, key: u64, row: Vec<f32>, epoch: u64) {
         self.bytes += row.len() * 4;
         if let Some(old) = self.rows.insert(key, row) {
@@ -32,6 +35,7 @@ impl FeatureStore {
         self.written_at.insert(key, epoch);
     }
 
+    /// The stored row, if present.
     pub fn get(&self, key: u64) -> Option<&[f32]> {
         self.rows.get(&key).map(|r| r.as_slice())
     }
@@ -41,6 +45,7 @@ impl FeatureStore {
         self.written_at.get(&key).map(|&w| now.saturating_sub(w))
     }
 
+    /// Drop a row (byte accounting follows).
     pub fn remove(&mut self, key: u64) {
         if let Some(old) = self.rows.remove(&key) {
             self.bytes -= old.len() * 4;
@@ -48,18 +53,22 @@ impl FeatureStore {
         self.written_at.remove(&key);
     }
 
+    /// Number of stored rows.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// True when no rows are stored.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Total stored bytes (4 per f32).
     pub fn bytes(&self) -> usize {
         self.bytes
     }
 
+    /// Drop everything.
     pub fn clear(&mut self) {
         self.rows.clear();
         self.written_at.clear();
@@ -74,13 +83,17 @@ impl FeatureStore {
 pub struct MemoryRegions {
     /// Pinned region bytes per GPU.
     pub pinned: Vec<usize>,
+    /// Per-GPU pinned-region byte limit.
     pub pinned_limit: usize,
     /// Shared (global cache) bytes.
     pub shared: usize,
+    /// Shared-region byte limit.
     pub shared_limit: usize,
 }
 
 impl MemoryRegions {
+    /// Empty accounting over `num_gpus` pinned regions plus one shared
+    /// region.
     pub fn new(num_gpus: usize, pinned_limit: usize, shared_limit: usize) -> MemoryRegions {
         MemoryRegions {
             pinned: vec![0; num_gpus],
@@ -101,10 +114,12 @@ impl MemoryRegions {
         }
     }
 
+    /// Return pinned bytes to `gpu`'s region.
     pub fn release_pinned(&mut self, gpu: usize, bytes: usize) {
         self.pinned[gpu] = self.pinned[gpu].saturating_sub(bytes);
     }
 
+    /// Try to reserve shared bytes; false if the region is full.
     pub fn reserve_shared(&mut self, bytes: usize) -> bool {
         if self.shared + bytes <= self.shared_limit {
             self.shared += bytes;
@@ -114,6 +129,7 @@ impl MemoryRegions {
         }
     }
 
+    /// Return bytes to the shared region.
     pub fn release_shared(&mut self, bytes: usize) {
         self.shared = self.shared.saturating_sub(bytes);
     }

@@ -27,14 +27,23 @@ pub enum Hit {
 /// Counters the cache experiments report.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TwoLevelStats {
+    /// Residency checks performed.
     pub checks: u64,
+    /// Hits in a worker's GPU-local cache.
     pub local_hits: u64,
+    /// Hits in a machine's CPU global cache.
     pub global_hits: u64,
+    /// Checks that hit neither level.
     pub misses: u64,
+    /// Evictions from local caches.
     pub local_evictions: u64,
+    /// Evictions from global caches.
     pub global_evictions: u64,
+    /// Inserts the local policy refused.
     pub local_refusals: u64,
+    /// Inserts a global policy refused.
     pub global_refusals: u64,
+    /// Rows newly written into a cache.
     pub fills: u64,
 }
 
@@ -47,6 +56,7 @@ impl TwoLevelStats {
             (self.local_hits + self.global_hits) as f64 / self.checks as f64
         }
     }
+    /// Hit rate of the GPU-local level alone.
     pub fn local_hit_rate(&self) -> f64 {
         if self.checks == 0 {
             0.0
@@ -59,6 +69,7 @@ impl TwoLevelStats {
 /// Two-level cache over `P` workers (and `M` machine-local global
 /// regions — one on a single box).
 pub struct TwoLevelCache {
+    /// Replacement policy both levels run.
     pub kind: PolicyKind,
     locals: Vec<Box<dyn CachePolicy>>,
     /// One global cache per machine.
@@ -71,10 +82,13 @@ pub struct TwoLevelCache {
     /// not arrived yet (cleared by `complete_fill`, or by
     /// [`TwoLevelCache::purge_pending`] on an aborted epoch).
     pending: HashSet<u64>,
+    /// Cumulative counters.
     pub stats: TwoLevelStats,
 }
 
 impl TwoLevelCache {
+    /// Single-machine cache: one local cache per worker plus one shared
+    /// CPU global cache.
     pub fn new(kind: PolicyKind, local_caps: &[usize], global_cap: usize) -> TwoLevelCache {
         let machine_of = vec![0; local_caps.len()];
         TwoLevelCache::with_machines(kind, local_caps, global_cap, &machine_of)
@@ -106,14 +120,17 @@ impl TwoLevelCache {
         }
     }
 
+    /// Number of worker-local caches.
     pub fn num_workers(&self) -> usize {
         self.locals.len()
     }
 
+    /// Number of machine-local global caches.
     pub fn num_machines(&self) -> usize {
         self.globals.len()
     }
 
+    /// Resident keys in worker `w`'s local cache.
     pub fn local_len(&self, w: usize) -> usize {
         self.locals[w].len()
     }

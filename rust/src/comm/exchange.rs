@@ -65,6 +65,8 @@ pub struct ExchangeParams {
 }
 
 impl ExchangeParams {
+    /// Default parameters for exchanging `f_dim`-wide rows of `layer` at
+    /// `epoch` (cache on, no refresh, f32 wire width).
     pub fn new(layer: u32, epoch: u64, f_dim: usize) -> ExchangeParams {
         ExchangeParams {
             layer,
@@ -105,6 +107,7 @@ pub struct ExchangeReport {
 /// receive the content directly because the fill is still pending.
 #[derive(Clone, Debug)]
 pub struct SendDirective {
+    /// Global id of the vertex being delivered.
     pub vertex: u32,
     /// Owner-local inner row index of the vertex.
     pub src_row: usize,
@@ -118,9 +121,11 @@ pub struct SendDirective {
 /// co-located requester — however many workers there asked for it.
 #[derive(Clone, Debug)]
 pub struct CrossSend {
+    /// Global id of the vertex being delivered.
     pub vertex: u32,
     /// Owner-local inner row index of the vertex.
     pub src_row: usize,
+    /// Machine whose router receives the one serialized frame.
     pub dest_machine: usize,
     /// (requester worker, halo index) pairs — all on `dest_machine`.
     pub recipients: Vec<(usize, usize)>,
@@ -135,8 +140,11 @@ pub struct CrossSend {
 /// it with the authoritative row once the owner has produced it.
 #[derive(Clone, Copy, Debug)]
 pub struct FillDirective {
+    /// Cache key ((layer, vertex) encoded).
     pub key: u64,
+    /// Global id of the vertex.
     pub vertex: u32,
+    /// Worker that owns the vertex (source of the content).
     pub owner: usize,
     /// Owner-local inner row index of the vertex.
     pub src_row: usize,
@@ -167,7 +175,9 @@ pub struct RoundPlan {
     pub fills: Vec<FillDirective>,
     /// Per-worker simulated stage charges for this round.
     pub stages: Vec<StageTimes>,
+    /// Device bytes this round moves.
     pub bytes_moved: u64,
+    /// Device bytes cache hits saved this round.
     pub bytes_saved: u64,
     /// Planned cross-machine wire bytes (one frame per vertex per
     /// destination machine — the machine-dedup accounting).
@@ -178,14 +188,18 @@ pub struct RoundPlan {
 
 /// The exchange engine: borrows the topology/devices, owns nothing.
 pub struct ExchangeEngine<'a> {
+    /// The simulated devices, in worker order.
     pub gpus: &'a [Gpu],
+    /// Interconnect between the devices.
     pub topology: &'a Topology,
+    /// Bookkeeping cost constants.
     pub costs: CommCosts,
     /// Machine index per worker; `None` = everything on one machine.
     machine_of: Option<&'a [usize]>,
 }
 
 impl<'a> ExchangeEngine<'a> {
+    /// Single-machine engine over a device list and its topology.
     pub fn new(gpus: &'a [Gpu], topology: &'a Topology) -> ExchangeEngine<'a> {
         ExchangeEngine { gpus, topology, costs: CommCosts::default(), machine_of: None }
     }

@@ -12,7 +12,9 @@ use std::collections::{HashMap, VecDeque};
 /// One queued row movement.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QueueItem {
+    /// Cache key of the row.
     pub key: u64,
+    /// The feature row itself.
     pub row: Vec<f32>,
     /// Epoch the row was produced.
     pub epoch: u64,
@@ -26,10 +28,12 @@ pub struct TransferQueue {
 }
 
 impl TransferQueue {
+    /// An empty queue.
     pub fn new() -> TransferQueue {
         TransferQueue::default()
     }
 
+    /// Enqueue one row movement.
     pub fn push(&mut self, item: QueueItem) {
         self.bytes += (item.row.len() * 4) as u64;
         self.items.push_back(item);
@@ -42,14 +46,17 @@ impl TransferQueue {
         (self.items.drain(..).collect(), bytes)
     }
 
+    /// Queued items.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
+    /// Bytes currently queued.
     pub fn bytes(&self) -> u64 {
         self.bytes
     }
@@ -67,6 +74,7 @@ pub struct QueueSet {
 }
 
 impl QueueSet {
+    /// Empty queues for `p` workers.
     pub fn new(p: usize) -> QueueSet {
         QueueSet {
             local: (0..p).map(|_| TransferQueue::new()).collect(),
@@ -77,6 +85,7 @@ impl QueueSet {
         }
     }
 
+    /// Bytes waiting across every queue.
     pub fn total_pending_bytes(&self) -> u64 {
         self.local.iter().map(|q| q.bytes()).sum::<u64>()
             + self.global.bytes()
@@ -98,6 +107,7 @@ pub struct RowMsg {
     pub round: usize,
     /// Destination halo index in the requester's subgraph.
     pub hi: usize,
+    /// The feature row (already quantized/dequantized by the owner).
     pub row: Vec<f32>,
 }
 
@@ -112,6 +122,7 @@ pub struct HaloInbox {
 }
 
 impl HaloInbox {
+    /// An inbox banking arrivals for `rounds` exchange rounds.
     pub fn new(rounds: usize) -> HaloInbox {
         HaloInbox { pending: vec![Vec::new(); rounds] }
     }
@@ -139,6 +150,7 @@ impl HaloInbox {
 /// row out to its local workers from its [`RouteTable`].
 #[derive(Clone, Debug)]
 pub struct FrameMsg {
+    /// The encoded frame, exactly as it crosses the wire.
     pub bytes: Vec<u8>,
 }
 
@@ -152,10 +164,12 @@ pub struct RouteTable {
 }
 
 impl RouteTable {
+    /// An empty table.
     pub fn new() -> RouteTable {
         RouteTable::default()
     }
 
+    /// Register a local recipient for `(round, vertex)`.
     pub fn add(&mut self, round: usize, vertex: u32, recipient: (usize, usize)) {
         self.routes.entry((round, vertex)).or_default().push(recipient);
     }
@@ -166,10 +180,12 @@ impl RouteTable {
         self.routes.remove(&(round, vertex))
     }
 
+    /// Distinct `(round, vertex)` entries still unclaimed.
     pub fn len(&self) -> usize {
         self.routes.len()
     }
 
+    /// True when every entry has been claimed.
     pub fn is_empty(&self) -> bool {
         self.routes.is_empty()
     }

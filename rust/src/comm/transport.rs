@@ -52,8 +52,17 @@ impl FrameKind {
 /// format (`value[i] = lo + codes[i]·scale`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
+    /// Full-precision f32 values (raw LE bits on the wire).
     F32(Vec<f32>),
-    Q8 { lo: f32, scale: f32, codes: Vec<u8> },
+    /// AdaQP quantized row: `value[i] = lo + codes[i]·scale`.
+    Q8 {
+        /// Dequantization offset.
+        lo: f32,
+        /// Dequantization step.
+        scale: f32,
+        /// One quantized code per element.
+        codes: Vec<u8>,
+    },
 }
 
 impl Payload {
@@ -73,6 +82,7 @@ impl Payload {
         }
     }
 
+    /// True for a zero-element payload.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -92,20 +102,24 @@ impl Payload {
 /// One serialized message between machines.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Frame {
+    /// What the frame carries.
     pub kind: FrameKind,
     /// Exchange round (= representation layer) for halo rows; layer
     /// index for gradient chunks.
     pub layer: u32,
     /// Global vertex id (halo rows) or matrix index (gradient chunks).
     pub id: u32,
+    /// The carried values.
     pub payload: Payload,
 }
 
 impl Frame {
+    /// A halo-row frame for `vertex`'s representation at `layer`.
     pub fn halo_row(layer: u32, vertex: u32, payload: Payload) -> Frame {
         Frame { kind: FrameKind::HaloRow, layer, id: vertex, payload }
     }
 
+    /// A gradient-matrix frame of the hierarchical all-reduce.
     pub fn grad_chunk(layer: u32, mat: u32, values: &[f32]) -> Frame {
         Frame {
             kind: FrameKind::GradChunk,

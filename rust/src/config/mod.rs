@@ -5,7 +5,7 @@ use crate::baselines::System;
 use crate::cache::PolicyKind;
 use crate::device::profile::{Gpu, GpuGroup};
 use crate::device::topology::Topology;
-use crate::graph::{spec_by_name, Dataset, DatasetSpec};
+use crate::graph::{Dataset, DatasetSource};
 use crate::model::ModelKind;
 use crate::partition::Method;
 use crate::runtime::BackendKind;
@@ -15,26 +15,37 @@ use anyhow::{anyhow, Result};
 
 /// Everything needed to launch one training run.
 pub struct RunSpec {
+    /// The materialized dataset (synthetic twin or loaded file).
     pub dataset: Dataset,
-    pub spec: &'static DatasetSpec,
+    /// Where the dataset came from (registry entry).
+    pub source: DatasetSource,
+    /// Simulated devices, one per partition.
     pub gpus: Vec<Gpu>,
+    /// Interconnect between the devices.
     pub topology: Topology,
+    /// Trainer configuration (model, policies, execution mode, …).
     pub train: TrainConfig,
+    /// Compute backend selection.
     pub backend: BackendKind,
+    /// Baseline system whose policy preset seeds `train`.
     pub system: System,
 }
 
 /// Parse a [`RunSpec`] from CLI options. Recognized options:
-/// `--dataset rt --group x4|--parts 4 --system capgnn --model gcn
-///  --epochs 200 --policy jaca --method metis --backend xla|native
-///  --scale 1.0 --seed 42 --local-cap N --global-cap N --no-pipe
-///  --refresh 8 --lr 0.02 --hidden 64 --layers 3`
+/// `--dataset rt|file:<graph.cgr> --group x4|--parts 4 --system capgnn
+///  --model gcn --epochs 200 --policy jaca --method metis
+///  --backend xla|native --scale 1.0 --seed 42 --local-cap N
+///  --global-cap N --no-pipe --refresh 8 --lr 0.02 --hidden 64
+///  --layers 3`
+///
+/// `--dataset` goes through the [`DatasetSource`] registry, so every
+/// consumer of the spec accepts a synthetic twin and an ingested on-disk
+/// graph interchangeably.
 pub fn run_spec(args: &Args) -> Result<RunSpec> {
-    let spec = spec_by_name(&args.get_or("dataset", "rt"))
-        .ok_or_else(|| anyhow!("unknown dataset (try Cl/Fr/Cs/Rt/Yp/As/Os)"))?;
+    let source = DatasetSource::parse(&args.get_or("dataset", "rt"))?;
     let seed = args.u64_or("seed", 42);
     let scale = args.f64_or("scale", 1.0);
-    let dataset = spec.build_scaled(seed, scale);
+    let dataset = source.build(seed, scale)?;
 
     let mut rng = Rng::new(seed ^ 0x6b8b4567);
     let gpus: Vec<Gpu> = if let Some(group) = args.get("group") {
@@ -58,7 +69,7 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
     let system = System::from_name(&args.get_or("system", "capgnn"))
         .ok_or_else(|| anyhow!("unknown system"))?;
     let epochs = args.usize_or("epochs", 200);
-    let mut train = system.config(epochs, spec.f_dim);
+    let mut train = system.config(epochs, dataset.data.f_dim);
 
     train.model = ModelKind::from_name(&args.get_or("model", "gcn"))
         .ok_or_else(|| anyhow!("unknown model (gcn/sage)"))?;
@@ -115,7 +126,7 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
         other => return Err(anyhow!("unknown backend {other}")),
     };
 
-    Ok(RunSpec { dataset, spec, gpus, topology, train, backend, system })
+    Ok(RunSpec { dataset, source, gpus, topology, train, backend, system })
 }
 
 #[cfg(test)]
@@ -129,7 +140,7 @@ mod tests {
     #[test]
     fn defaults() {
         let spec = run_spec(&args(&["--scale", "0.1", "--epochs", "5"])).unwrap();
-        assert_eq!(spec.spec.label, "Rt");
+        assert!(matches!(spec.source, DatasetSource::Synthetic(s) if s.label == "Rt"));
         assert_eq!(spec.gpus.len(), 4);
         assert_eq!(spec.train.epochs, 5);
         assert!(spec.train.use_cache);
@@ -162,6 +173,8 @@ mod tests {
         assert!(run_spec(&args(&["--dataset", "zz"])).is_err());
         assert!(run_spec(&args(&["--group", "x99"])).is_err());
         assert!(run_spec(&args(&["--backend", "cuda"])).is_err());
+        // A file: source that does not exist is a load error, not a panic.
+        assert!(run_spec(&args(&["--dataset", "file:/no/such/graph.cgr"])).is_err());
     }
 
     #[test]

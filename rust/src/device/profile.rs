@@ -5,11 +5,17 @@ use crate::util::{Rng, Summary};
 /// GPU models used in the paper's testbed (Table 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DeviceKind {
+    /// NVIDIA RTX 3090 (24 GiB).
     Rtx3090,
+    /// NVIDIA Tesla A40 (48 GiB).
     TeslaA40,
+    /// NVIDIA RTX 3060 (12 GiB).
     Rtx3060,
+    /// NVIDIA RTX 2060 (6 GiB).
     Rtx2060,
+    /// NVIDIA GTX 1660 Ti (6 GiB).
     Gtx1660Ti,
+    /// NVIDIA GTX 1650 (4 GiB).
     Gtx1650,
 }
 
@@ -26,6 +32,7 @@ impl DeviceKind {
         }
     }
 
+    /// Full marketing name.
     pub fn name(self) -> &'static str {
         match self {
             DeviceKind::Rtx3090 => "RTX 3090",
@@ -74,7 +81,9 @@ impl DeviceKind {
 /// Obs. 3).
 #[derive(Clone, Debug)]
 pub struct Gpu {
+    /// Worker index this device backs.
     pub id: usize,
+    /// Hardware model.
     pub kind: DeviceKind,
     /// Per-instance multiplicative bias on compute times (≈±1%).
     bias: f64,
@@ -83,14 +92,21 @@ pub struct Gpu {
 /// One measurement of all five tasks (a row of Table 1).
 #[derive(Clone, Copy, Debug)]
 pub struct PerfSample {
+    /// Dense matmul time (s).
     pub mm: f64,
+    /// Sparse matmul time (s).
     pub spmm: f64,
+    /// Host→device copy time (s).
     pub h2d: f64,
+    /// Device→host copy time (s).
     pub d2h: f64,
+    /// Inter-device transfer time (s).
     pub idt: f64,
 }
 
 impl Gpu {
+    /// Instantiate a device with a stable per-instance bias drawn from
+    /// `rng`.
     pub fn new(id: usize, kind: DeviceKind, rng: &mut Rng) -> Gpu {
         Gpu { id, kind, bias: 1.0 + rng.normal() * 0.008 }
     }
@@ -122,6 +138,7 @@ impl Gpu {
         }
     }
 
+    /// Device memory in bytes.
     pub fn memory_bytes(&self) -> u64 {
         (self.kind.memory_gib() * (1u64 << 30) as f64) as u64
     }
@@ -151,7 +168,9 @@ pub fn benchmark_device(gpu: &Gpu, reps: usize, rng: &mut Rng) -> [Summary; 5] {
 /// A named GPU group (paper Table 4): x2 … x8.
 #[derive(Clone, Debug)]
 pub struct GpuGroup {
+    /// Group name ("x2" … "x8").
     pub name: &'static str,
+    /// Device models in worker order.
     pub kinds: &'static [DeviceKind],
 }
 

@@ -11,9 +11,13 @@ use std::time::Instant;
 /// Per-stage simulated time breakdown (paper §5.5 stages).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StageTimes {
+    /// Cache residency checks.
     pub check_cache: f64,
+    /// Cache victim selection / insertion decisions.
     pub pick_cache: f64,
+    /// Halo feature transfers.
     pub communication: f64,
+    /// Sparse neighbor aggregation.
     pub aggregation: f64,
     /// Everything else (dense compute, loss, optimizer).
     pub compute: f64,
@@ -22,6 +26,7 @@ pub struct StageTimes {
 }
 
 impl StageTimes {
+    /// Sum of all stages.
     pub fn total(&self) -> f64 {
         self.check_cache
             + self.pick_cache
@@ -31,6 +36,7 @@ impl StageTimes {
             + self.sync
     }
 
+    /// Accumulate another breakdown into this one, stage by stage.
     pub fn add(&mut self, other: &StageTimes) {
         self.check_cache += other.check_cache;
         self.pick_cache += other.pick_cache;
@@ -40,6 +46,7 @@ impl StageTimes {
         self.sync += other.sync;
     }
 
+    /// Every stage multiplied by `k` (e.g. to average over workers).
     pub fn scale(&self, k: f64) -> StageTimes {
         StageTimes {
             check_cache: self.check_cache * k,
@@ -68,10 +75,12 @@ pub struct WallStages {
 }
 
 impl WallStages {
+    /// Sum of the three phases.
     pub fn total(&self) -> f64 {
         self.plan + self.execute + self.reduce
     }
 
+    /// Accumulate another epoch's breakdown into this one.
     pub fn add(&mut self, other: &WallStages) {
         self.plan += other.plan;
         self.execute += other.execute;
@@ -84,6 +93,7 @@ impl WallStages {
 pub struct SimClock {
     /// Simulated seconds since epoch start.
     pub now: f64,
+    /// Per-stage breakdown of `now`.
     pub stages: StageTimes,
     wall_start: Instant,
 }
@@ -95,32 +105,39 @@ impl Default for SimClock {
 }
 
 impl SimClock {
+    /// A clock at simulated time zero.
     pub fn new() -> SimClock {
         SimClock { now: 0.0, stages: StageTimes::default(), wall_start: Instant::now() }
     }
 
+    /// Rewind to time zero (start of a new epoch).
     pub fn reset(&mut self) {
         self.now = 0.0;
         self.stages = StageTimes::default();
         self.wall_start = Instant::now();
     }
 
+    /// Charge simulated seconds to the cache-check stage.
     pub fn charge_check_cache(&mut self, secs: f64) {
         self.now += secs;
         self.stages.check_cache += secs;
     }
+    /// Charge simulated seconds to the cache-pick stage.
     pub fn charge_pick_cache(&mut self, secs: f64) {
         self.now += secs;
         self.stages.pick_cache += secs;
     }
+    /// Charge simulated seconds to communication.
     pub fn charge_comm(&mut self, secs: f64) {
         self.now += secs;
         self.stages.communication += secs;
     }
+    /// Charge simulated seconds to aggregation.
     pub fn charge_aggregation(&mut self, secs: f64) {
         self.now += secs;
         self.stages.aggregation += secs;
     }
+    /// Charge simulated seconds to dense compute.
     pub fn charge_compute(&mut self, secs: f64) {
         self.now += secs;
         self.stages.compute += secs;
@@ -133,6 +150,7 @@ impl SimClock {
         }
     }
 
+    /// Real seconds since construction/reset.
     pub fn wallclock(&self) -> f64 {
         self.wall_start.elapsed().as_secs_f64()
     }

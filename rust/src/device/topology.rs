@@ -74,6 +74,7 @@ impl Topology {
         t
     }
 
+    /// Number of endpoints (GPUs) this topology spans.
     pub fn n(&self) -> usize {
         self.p2p.len()
     }

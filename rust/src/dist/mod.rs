@@ -159,26 +159,32 @@ impl Cluster {
         Some(c)
     }
 
+    /// Number of workers (one per simulated GPU).
     pub fn n_workers(&self) -> usize {
         self.gpus.len()
     }
 
+    /// The simulated devices, in worker order.
     pub fn gpus(&self) -> &[Gpu] {
         &self.gpus
     }
 
+    /// The interconnect between the devices.
     pub fn topology(&self) -> &Topology {
         &self.topology
     }
 
+    /// Machine index of each worker (all 0 on a single box).
     pub fn machine_of(&self) -> &[usize] {
         &self.machine_of
     }
 
+    /// Number of machines in the cluster (0 only for an empty cluster).
     pub fn num_machines(&self) -> usize {
         self.machine_of.iter().copied().max().map_or(0, |m| m + 1)
     }
 
+    /// Does any pair of workers sit on different machines?
     pub fn is_multi_machine(&self) -> bool {
         self.num_machines() > 1
     }
@@ -187,7 +193,9 @@ impl Cluster {
 /// Outcome of a distributed run (Table 9's columns).
 #[derive(Clone, Debug)]
 pub struct DistReport {
+    /// Workers trained with.
     pub workers: usize,
+    /// Machines the workers were spread over.
     pub machines: usize,
     /// Simulated training throughput: epochs per simulated second.
     pub epochs_per_sec: f64,
@@ -199,6 +207,7 @@ pub struct DistReport {
     pub cross_machine_bytes: u64,
     /// The naive baseline: per-worker frames and a flat all-reduce.
     pub cross_machine_bytes_naive: u64,
+    /// The full per-run record behind the summary columns.
     pub report: TrainReport,
 }
 

@@ -4,7 +4,7 @@ use super::Ctx;
 use crate::cache::PolicyKind;
 use crate::device::profile::DeviceKind;
 use crate::dist::Cluster;
-use crate::graph::{spec_by_name, Dataset};
+use crate::graph::Dataset;
 use crate::model::ModelKind;
 use crate::runtime::NativeBackend;
 use crate::train::{CapacityMode, Session, TrainConfig, TrainReport};
@@ -12,7 +12,8 @@ use crate::util::json::{num, obj, s};
 use crate::util::{bench, table::fmt_secs, Rng, Table};
 
 fn reddit(ctx: Ctx) -> Dataset {
-    spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale)
+    // Reddit twin by default; `--dataset` (incl. `file:`) overrides.
+    ctx.dataset_or("Rt")
 }
 
 fn base_cfg(ctx: Ctx, model: ModelKind) -> TrainConfig {
@@ -257,7 +258,7 @@ mod tests {
     use super::*;
 
     fn tiny_ctx() -> Ctx {
-        Ctx { scale: 0.1, epochs: 4, seed: 7 }
+        Ctx { scale: 0.1, epochs: 4, seed: 7, dataset: None }
     }
 
     #[test]
@@ -288,7 +289,7 @@ mod tests {
         // low-overlap one serves a single partition. Local lookups are
         // uniform over each worker's halo, so the signal is in
         // global_hits, with many partitions to create overlap.
-        let ctx = Ctx { scale: 0.3, epochs: 6, seed: 7 };
+        let ctx = Ctx { scale: 0.3, epochs: 6, seed: 7, dataset: None };
         let ds = reddit(ctx);
         let mut hi = base_cfg(ctx, ModelKind::Gcn);
         hi.capacity = CapacityMode::Fraction(0.2);

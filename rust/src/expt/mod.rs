@@ -9,6 +9,7 @@ pub mod motivation;
 pub mod overall;
 pub mod rapa_expts;
 
+use crate::graph::{spec_by_name, Dataset, DatasetSource};
 use crate::util::Args;
 use anyhow::{anyhow, Result};
 
@@ -19,27 +20,59 @@ pub struct Ctx {
     pub scale: f64,
     /// Training epochs for experiments that train.
     pub epochs: usize,
+    /// Seed for every stochastic component of the experiment.
     pub seed: u64,
+    /// Dataset override for the single-dataset experiments
+    /// (`capgnn expt <id> --dataset rt|file:<graph.cgr>`). The
+    /// multi-dataset tables (tab7, fig22, …) keep iterating the full
+    /// twin suite regardless.
+    pub dataset: Option<&'static Dataset>,
 }
 
 impl Ctx {
+    /// Build from CLI options, honouring `--quick`/`BENCH_QUICK=1`
+    /// workload shrinking. The `--dataset` override is resolved (and its
+    /// errors surfaced) by [`run`], not here.
     pub fn from_args(args: &Args) -> Ctx {
         let quick = crate::util::bench::quick_mode() || args.has_flag("quick");
         Ctx {
             scale: args.f64_or("scale", if quick { 0.25 } else { 1.0 }),
             epochs: args.usize_or("epochs", if quick { 8 } else { 40 }),
             seed: args.u64_or("seed", 42),
+            dataset: None,
         }
     }
 
+    /// The fixed quick-mode context benches use.
     pub fn quick() -> Ctx {
-        Ctx { scale: 0.25, epochs: 8, seed: 42 }
+        Ctx { scale: 0.25, epochs: 8, seed: 42, dataset: None }
+    }
+
+    /// Dataset for a single-dataset experiment: the `--dataset` override
+    /// when present, else the twin named by `default_label` built at
+    /// this context's seed/scale.
+    pub fn dataset_or(&self, default_label: &str) -> Dataset {
+        match self.dataset {
+            Some(ds) => ds.clone(),
+            None => spec_by_name(default_label)
+                .expect("known twin label")
+                .build_scaled(self.seed, self.scale),
+        }
     }
 }
 
 /// Dispatch an experiment by id ("fig4" … "tab9").
 pub fn run(id: &str, args: &Args) -> Result<()> {
-    let ctx = Ctx::from_args(args);
+    let mut ctx = Ctx::from_args(args);
+    if let Some(src) = args.get("dataset") {
+        // Resolve the override once, up front, so a bad name or an
+        // unreadable file is a typed error here instead of a panic deep
+        // inside a driver. Experiments run once per process; leaking the
+        // one override keeps `Ctx: Copy`.
+        let source = DatasetSource::parse(src)?;
+        let ds = source.build(ctx.seed, ctx.scale)?;
+        ctx.dataset = Some(&*Box::leak(Box::new(ds)));
+    }
     match id {
         "fig4" => motivation::fig4(ctx),
         "fig5" => motivation::fig5(ctx),
@@ -61,6 +94,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Every experiment id `capgnn expt` accepts.
 pub const ALL_IDS: [&str; 15] = [
     "fig4", "fig5", "fig6", "tab1", "fig14", "fig15", "fig16", "fig17",
     "fig19", "fig20", "fig21", "fig22", "tab7", "tab8", "tab9",

@@ -145,13 +145,13 @@ mod tests {
 
     #[test]
     fn fig4_runs_quick() {
-        fig4(Ctx { scale: 0.1, epochs: 1, seed: 1 });
+        fig4(Ctx { scale: 0.1, epochs: 1, seed: 1, dataset: None });
     }
 
     #[test]
     fn fig5_correlation_positive() {
         // The motivating claim itself, as a test.
-        let ctx = Ctx { scale: 0.15, epochs: 1, seed: 2 };
+        let ctx = Ctx { scale: 0.15, epochs: 1, seed: 2, dataset: None };
         let mut rng = Rng::new(ctx.seed);
         let mut cuts = Vec::new();
         let mut halos = Vec::new();
@@ -168,7 +168,7 @@ mod tests {
 
     #[test]
     fn obs1_halo_exceeds_inner_on_dense_twin() {
-        let ctx = Ctx { scale: 0.25, epochs: 1, seed: 3 };
+        let ctx = Ctx { scale: 0.25, epochs: 1, seed: 3, dataset: None };
         let ds = crate::graph::spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
         let mut rng = Rng::new(3);
         let ps = Method::Random.partition(&ds.graph, 8, &mut rng);

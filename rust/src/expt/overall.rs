@@ -275,7 +275,7 @@ mod tests {
 
     #[test]
     fn capgnn_beats_vanilla_on_twin() {
-        let ctx = Ctx { scale: 0.12, epochs: 6, seed: 3 };
+        let ctx = Ctx { scale: 0.12, epochs: 6, seed: 3, dataset: None };
         let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
         let cluster = Cluster::from_group(GpuGroup::by_name("x4").unwrap(), ctx.seed);
         let cap = run_system(ctx, &ds, &cluster, System::CaPGnn, ModelKind::Gcn);

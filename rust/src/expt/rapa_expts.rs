@@ -5,7 +5,6 @@ use super::Ctx;
 use crate::baselines::{run_preset, System};
 use crate::device::profile::{DeviceKind, GpuGroup};
 use crate::dist::Cluster;
-use crate::graph::spec_by_name;
 use crate::model::ModelKind;
 use crate::partition::rapa::{self, RapaConfig};
 use crate::partition::Method;
@@ -16,7 +15,7 @@ use crate::util::{bench, stats, table::fmt_secs, Rng, Table};
 /// Fig. 20: evolution of nodes/edges/score per subgraph across RAPA
 /// iterations for x2..x5 groups.
 pub fn fig20(ctx: Ctx) {
-    let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+    let ds = ctx.dataset_or("Rt");
     let mut table = Table::new(
         "Fig. 20 — RAPA iteration traces (Reddit twin)",
         &["group", "iter", "part", "nodes", "edges", "lambda", "std(lambda)"],
@@ -75,7 +74,7 @@ fn hetero_groups() -> Vec<(&'static str, Vec<DeviceKind>)> {
 /// Fig. 21: total/comm/aggregation time under heterogeneous GPU settings,
 /// with per-worker aggregation variance as the balance signal.
 pub fn fig21(ctx: Ctx) {
-    let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+    let ds = ctx.dataset_or("Rt");
     let mut table = Table::new(
         "Fig. 21 — robustness under heterogeneous GPUs (Reddit twin, GCN, simulated seconds)",
         &["gpus", "system", "total", "comm", "agg", "agg_std_across_workers"],
@@ -118,8 +117,8 @@ mod tests {
 
     #[test]
     fn rapa_balances_hetero_pair_better_than_vanilla() {
-        let ctx = Ctx { scale: 0.15, epochs: 4, seed: 5 };
-        let ds = spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
+        let ctx = Ctx { scale: 0.15, epochs: 4, seed: 5, dataset: None };
+        let ds = crate::graph::spec_by_name("Rt").unwrap().build_scaled(ctx.seed, ctx.scale);
         let mut rng = Rng::new(5);
         use DeviceKind::*;
         let gpus: Vec<Gpu> = [Gtx1660Ti, Rtx3090]

@@ -10,22 +10,32 @@
 use super::csr::Graph;
 use super::features::{split_masks, synth_features, NodeData};
 use super::generator::skewed_sbm;
+use super::io::{self, CgrFile};
 use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
 
 /// A dataset twin: graph + node data + provenance.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Dataset name (a twin's spec name, or an ingested file's stem).
     pub name: &'static str,
-    /// Two-letter label the paper uses (Cl, Fr, Cs, Rt, Yp, As, Os).
+    /// Two-letter label the paper uses (Cl, Fr, Cs, Rt, Yp, As, Os); the
+    /// label `Fi` marks an on-disk dataset loaded through
+    /// [`DatasetSource::File`].
     pub label: &'static str,
+    /// The undirected CSR graph.
     pub graph: Graph,
+    /// Features, labels and split masks over `graph`'s vertices.
     pub data: NodeData,
 }
 
 /// Static description of a twin (what `build` generates).
 #[derive(Clone, Copy, Debug)]
 pub struct DatasetSpec {
+    /// Full dataset name ("reddit", …).
     pub name: &'static str,
+    /// Two-letter paper label ("Rt", …).
     pub label: &'static str,
     /// Vertices in the twin.
     pub n: usize,
@@ -35,10 +45,13 @@ pub struct DatasetSpec {
     pub deg_out: f64,
     /// Power-law skew (1.0 = uniform).
     pub skew: f64,
+    /// Number of label classes.
     pub classes: usize,
+    /// Feature width.
     pub f_dim: usize,
-    /// Paper-reported original sizes, for reporting.
+    /// Paper-reported original vertex count, for reporting.
     pub orig_nodes: usize,
+    /// Paper-reported original edge count, for reporting.
     pub orig_edges: usize,
 }
 
@@ -180,6 +193,114 @@ impl DatasetSpec {
     }
 }
 
+/// Feature width synthesized for on-disk graphs that carry no node-data
+/// section (see [`synthetic_node_data`]).
+pub const FILE_F_DIM: usize = 16;
+/// Class count synthesized for on-disk graphs that carry no node-data
+/// section.
+pub const FILE_CLASSES: usize = 4;
+
+/// One entry of the dataset registry: where a [`Dataset`] comes from.
+///
+/// This is the single seam every consumer goes through — `Session::build`
+/// (via [`crate::config::run_spec`]), the partitioners, the baselines and
+/// the experiment tables all operate on the [`Dataset`] this produces, so
+/// a synthetic twin and an ingested on-disk graph are interchangeable
+/// everywhere.
+#[derive(Clone, Debug)]
+pub enum DatasetSource {
+    /// One of the seven scaled-down paper twins (plus test variants),
+    /// generated deterministically from a seed.
+    Synthetic(&'static DatasetSpec),
+    /// An on-disk graph: a binary `.cgr` file (see [`crate::graph::io`])
+    /// or a text edge list, selected by extension.
+    File(PathBuf),
+}
+
+impl DatasetSource {
+    /// Parse a CLI dataset argument: a twin name/label (`rt`, `Cl`, …) or
+    /// `file:<path>` for an on-disk graph.
+    pub fn parse(s: &str) -> Result<DatasetSource> {
+        if let Some(p) = s.strip_prefix("file:") {
+            if p.is_empty() {
+                return Err(anyhow!("empty path in \"file:\" dataset source"));
+            }
+            return Ok(DatasetSource::File(PathBuf::from(p)));
+        }
+        spec_by_name(s).map(DatasetSource::Synthetic).ok_or_else(|| {
+            anyhow!("unknown dataset {s:?} (try Cl/Fr/Cs/Rt/Yp/As/Os or file:<graph.cgr>)")
+        })
+    }
+
+    /// Short human-readable description ("reddit twin", "file graph.cgr").
+    pub fn describe(&self) -> String {
+        match self {
+            DatasetSource::Synthetic(spec) => format!("{} twin", spec.name),
+            DatasetSource::File(p) => format!("file {}", p.display()),
+        }
+    }
+
+    /// Materialize the dataset. `scale` applies to synthetic twins only
+    /// (an on-disk graph is loaded as-is); `seed` drives twin generation
+    /// and, for graph-only files, the synthesized node data.
+    pub fn build(&self, seed: u64, scale: f64) -> Result<Dataset> {
+        match self {
+            DatasetSource::Synthetic(spec) => Ok(spec.build_scaled(seed, scale)),
+            DatasetSource::File(path) => load_file_dataset(path, seed),
+        }
+    }
+}
+
+/// Deterministic node data for a graph that arrived without any: random
+/// (seeded) labels, class-conditional features smoothed one hop over the
+/// topology, and a 60/20/20 split.
+///
+/// The function of `(graph, classes, f_dim, seed)` is pure, which is
+/// what makes training on an ingested graph bit-identical to training on
+/// the equivalent in-memory [`Graph`]: both sides synthesize the exact
+/// same rows.
+pub fn synthetic_node_data(graph: &Graph, classes: usize, f_dim: usize, seed: u64) -> NodeData {
+    let n = graph.n();
+    let mut rng = Rng::new(seed ^ fxhash("file-node-data"));
+    let labels: Vec<u32> = (0..n).map(|_| rng.index(classes) as u32).collect();
+    let features = synth_features(graph, &labels, classes, f_dim, 0.8, 0.2, &mut rng);
+    let (train_mask, val_mask, test_mask) = split_masks(n, 0.6, 0.2, &mut rng);
+    NodeData {
+        features,
+        f_dim,
+        labels,
+        num_classes: classes,
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
+/// Load a [`Dataset`] from a `.cgr` file or text edge list. Files without
+/// a node-data section get [`synthetic_node_data`] with the
+/// [`FILE_CLASSES`]/[`FILE_F_DIM`] defaults.
+pub fn load_file_dataset(path: &Path, seed: u64) -> Result<Dataset> {
+    let CgrFile { graph, data } =
+        io::load_graph_file(path).map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+    if graph.n() == 0 {
+        return Err(anyhow!("{}: graph has no vertices", path.display()));
+    }
+    let data = match data {
+        Some(d) => d,
+        None => synthetic_node_data(&graph, FILE_CLASSES, FILE_F_DIM, seed),
+    };
+    let stem = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("file")
+        .to_string();
+    // `Dataset::name` is `&'static str` across the whole crate (the twins
+    // are compile-time specs); one small leak per loaded file keeps that
+    // contract without threading a lifetime through every report.
+    let name: &'static str = Box::leak(stem.into_boxed_str());
+    Ok(Dataset { name, label: "Fi", graph, data })
+}
+
 /// Tiny dataset for unit/integration tests: 4-class SBM, 256 vertices.
 pub fn tiny(seed: u64) -> Dataset {
     let spec = DatasetSpec {
@@ -244,6 +365,38 @@ mod tests {
         let d = tiny(3);
         assert_eq!(d.graph.n(), 256);
         assert_eq!(d.data.num_classes, 4);
+    }
+
+    #[test]
+    fn source_parses_names_and_files() {
+        assert!(matches!(
+            DatasetSource::parse("rt").unwrap(),
+            DatasetSource::Synthetic(s) if s.label == "Rt"
+        ));
+        assert!(matches!(
+            DatasetSource::parse("file:some/graph.cgr").unwrap(),
+            DatasetSource::File(p) if p == PathBuf::from("some/graph.cgr")
+        ));
+        assert!(DatasetSource::parse("nope").is_err());
+        assert!(DatasetSource::parse("file:").is_err());
+    }
+
+    #[test]
+    fn synthetic_node_data_is_deterministic() {
+        let mut rng = Rng::new(4);
+        let g = Graph::random(60, 200, &mut rng);
+        let a = synthetic_node_data(&g, 4, 8, 9);
+        let b = synthetic_node_data(&g, 4, 8, 9);
+        assert_eq!(a.labels, b.labels);
+        assert!(a
+            .features
+            .iter()
+            .zip(&b.features)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(a.train_mask, b.train_mask);
+        // A different seed gives a different draw.
+        let c = synthetic_node_data(&g, 4, 8, 10);
+        assert_ne!(a.labels, c.labels);
     }
 
     #[test]

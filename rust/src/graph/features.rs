@@ -13,17 +13,22 @@ use crate::util::Rng;
 pub struct NodeData {
     /// Row-major `n × f` feature matrix.
     pub features: Vec<f32>,
+    /// Feature width `f`.
     pub f_dim: usize,
     /// Class label per vertex.
     pub labels: Vec<u32>,
+    /// Number of label classes.
     pub num_classes: usize,
-    /// Split masks (disjoint).
+    /// Training-split mask (splits are disjoint).
     pub train_mask: Vec<bool>,
+    /// Validation-split mask.
     pub val_mask: Vec<bool>,
+    /// Test-split mask.
     pub test_mask: Vec<bool>,
 }
 
 impl NodeData {
+    /// Number of vertices covered.
     pub fn n(&self) -> usize {
         self.labels.len()
     }
@@ -39,6 +44,7 @@ impl NodeData {
         y
     }
 
+    /// The feature row of vertex `v`.
     pub fn feature_row(&self, v: u32) -> &[f32] {
         let f = self.f_dim;
         &self.features[v as usize * f..(v as usize + 1) * f]

@@ -1,0 +1,724 @@
+//! Graph ingestion: the on-disk binary CSR format (`.cgr`) and the
+//! streaming edge-list pipeline.
+//!
+//! Everything upstream of this module synthesizes its graphs
+//! ([`crate::graph::datasets`]); this module is how the repo loads a
+//! graph it *didn't* generate. Two representations are supported:
+//!
+//! - **`.cgr`** — a versioned little-endian binary dump of the in-memory
+//!   CSR ([`Graph`]) with an optional node-data section
+//!   (features/labels/split masks, [`NodeData`]). [`save_cgr`] /
+//!   [`load_cgr`] round-trip bit-exactly: every `f32` is stored as its
+//!   raw LE bit pattern, so a graph trained from disk produces the same
+//!   losses as its in-memory twin, bit for bit.
+//! - **text edge lists** — one edge per line, whitespace- or
+//!   comma-separated vertex ids (`#`/`%`/`//` comment lines ignored),
+//!   streamed line by line through [`read_edge_list`] and assembled into
+//!   CSR by [`build_csr`].
+//!
+//! [`build_csr`] is a two-pass counting sort: a degree-count pass and a
+//! scatter pass, both parallelized over contiguous *row blocks* on
+//! scoped threads — the same discipline as `runtime::native::spmm`. Each
+//! thread scans the full arc array and touches only the rows of its own
+//! block, so a row's entries always land in arc-array order regardless
+//! of the thread count; the per-row sort + dedup that follows is then
+//! bit-deterministic for **any** number of threads and identical to
+//! [`Graph::from_edges`]. Duplicate edges, self-loops, isolated
+//! vertices and out-of-range ids are all handled explicitly — every
+//! failure is a typed [`IoError`], never a panic.
+//!
+//! All multi-byte fields are little-endian. Layout of a `.cgr` file:
+//!
+//! ```text
+//! offset  size          field
+//! 0       4             magic "CGRF"
+//! 4       2             format version (currently 1), u16
+//! 6       2             flags, u16 (bit 0: node-data section present)
+//! 8       8             n  (vertices), u64
+//! 16      8             arcs (directed arcs = 2·edges), u64
+//! 24      (n+1)·8       CSR row offsets, u64 each
+//! …       arcs·4        CSR column indices (sorted per row), u32 each
+//! --- node-data section (only when flags bit 0 is set) ---
+//! …       4             f_dim, u32
+//! …       4             num_classes, u32
+//! …       n·f_dim·4     features, raw f32 bits
+//! …       n·4           labels, u32 each (each < num_classes)
+//! …       n·1           split masks, one byte per vertex
+//!                       (bit 0 train, bit 1 val, bit 2 test)
+//! ```
+
+use super::csr::Graph;
+use super::features::NodeData;
+use std::fmt;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// The four magic bytes every `.cgr` file starts with.
+pub const CGR_MAGIC: [u8; 4] = *b"CGRF";
+/// Current `.cgr` format version (bumped on any layout change).
+pub const CGR_VERSION: u16 = 1;
+/// Header flag bit: a node-data section follows the CSR arrays.
+const FLAG_NODE_DATA: u16 = 1;
+/// Fixed-size `.cgr` header: magic + version + flags + n + arcs.
+const HEADER_BYTES: usize = 4 + 2 + 2 + 8 + 8;
+
+/// Everything that can go wrong while ingesting or loading a graph.
+/// Every variant is a recoverable, typed error — the ingestion paths
+/// never panic on malformed input.
+#[derive(Debug)]
+pub enum IoError {
+    /// Underlying filesystem/stream error.
+    Io(std::io::Error),
+    /// The file does not start with [`CGR_MAGIC`].
+    BadMagic {
+        /// The four bytes actually found at offset 0.
+        found: [u8; 4],
+    },
+    /// The file's version field is newer than this build understands.
+    UnsupportedVersion(u16),
+    /// The file ended before a section it promised was complete.
+    Truncated {
+        /// What was being read when the bytes ran out.
+        section: &'static str,
+        /// Bytes the section needed.
+        expected: u64,
+        /// Bytes actually available.
+        actual: u64,
+    },
+    /// Structurally invalid content (non-monotone offsets, label out of
+    /// class range, unknown flag bits, …).
+    Corrupt(String),
+    /// A line of an edge list that could not be parsed as two vertex ids.
+    Parse {
+        /// 1-based line number.
+        line: u64,
+        /// The offending token or line fragment.
+        token: String,
+    },
+    /// A vertex id at or beyond the declared vertex count.
+    VertexOutOfRange {
+        /// The offending vertex id.
+        vertex: u64,
+        /// The declared vertex count.
+        n: usize,
+        /// 1-based edge-list line, when the id came from text input.
+        line: Option<u64>,
+    },
+    /// The edge list contained no edges at all (empty file, or only
+    /// comments/blank lines) and no vertex count was declared.
+    Empty,
+}
+
+impl fmt::Display for IoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "i/o error: {e}"),
+            IoError::BadMagic { found } => write!(
+                f,
+                "not a .cgr file: magic {:?} (expected {:?})",
+                String::from_utf8_lossy(found),
+                String::from_utf8_lossy(&CGR_MAGIC)
+            ),
+            IoError::UnsupportedVersion(v) => {
+                write!(f, "unsupported .cgr version {v} (this build reads <= {CGR_VERSION})")
+            }
+            IoError::Truncated { section, expected, actual } => write!(
+                f,
+                "truncated .cgr file: {section} needs {expected} bytes, only {actual} available"
+            ),
+            IoError::Corrupt(msg) => write!(f, "corrupt graph file: {msg}"),
+            IoError::Parse { line, token } => {
+                write!(f, "edge list line {line}: cannot parse vertex id from {token:?}")
+            }
+            IoError::VertexOutOfRange { vertex, n, line } => match line {
+                Some(l) => write!(
+                    f,
+                    "edge list line {l}: vertex {vertex} out of range (declared {n} vertices)"
+                ),
+                None => write!(f, "vertex {vertex} out of range (graph has {n} vertices)"),
+            },
+            IoError::Empty => write!(f, "edge list is empty (no edges, no declared vertex count)"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            IoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> IoError {
+        IoError::Io(e)
+    }
+}
+
+/// What the edge-list parser read, before CSR assembly.
+#[derive(Clone, Debug)]
+pub struct EdgeList {
+    /// Vertex count: declared by the caller, or `max id + 1`.
+    pub n: usize,
+    /// Raw undirected edge records in file order (self-loops and
+    /// duplicates still present — [`build_csr`] removes and counts them).
+    pub edges: Vec<(u32, u32)>,
+    /// Data lines parsed.
+    pub lines: u64,
+    /// Comment/blank lines skipped.
+    pub comments: u64,
+}
+
+/// Counters from one [`build_csr`] run (reported by `capgnn ingest`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CsrBuildStats {
+    /// Self-loop records dropped.
+    pub self_loops: u64,
+    /// Duplicate undirected edges dropped (beyond the first occurrence).
+    pub duplicates: u64,
+    /// Vertices with no surviving edge (isolated), including trailing
+    /// declared-but-never-mentioned ids.
+    pub isolated: usize,
+}
+
+/// Parse a text edge list from any buffered reader.
+///
+/// Each data line holds two vertex ids separated by whitespace and/or a
+/// comma; extra fields (e.g. edge weights) are ignored. Lines starting
+/// with `#`, `%` or `//` and blank lines are skipped. When `declared_n`
+/// is given, ids are range-checked against it (allowing trailing
+/// isolated vertices the edges never mention); otherwise the vertex
+/// count is inferred as `max id + 1`.
+pub fn read_edge_list<R: BufRead>(mut r: R, declared_n: Option<usize>) -> Result<EdgeList, IoError> {
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut line = String::new();
+    let mut lineno = 0u64;
+    let mut lines = 0u64;
+    let mut comments = 0u64;
+    let mut max_id = 0u64;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let body = line.trim();
+        if body.is_empty() || body.starts_with('#') || body.starts_with('%') || body.starts_with("//")
+        {
+            comments += 1;
+            continue;
+        }
+        lines += 1;
+        let mut fields = body.split(|c: char| c.is_whitespace() || c == ',').filter(|t| !t.is_empty());
+        let u = parse_id(fields.next(), body, lineno, declared_n)?;
+        let v = parse_id(fields.next(), body, lineno, declared_n)?;
+        max_id = max_id.max(u as u64).max(v as u64);
+        edges.push((u, v));
+    }
+    let n = match declared_n {
+        Some(n) => n,
+        None => {
+            if edges.is_empty() {
+                return Err(IoError::Empty);
+            }
+            (max_id + 1) as usize
+        }
+    };
+    Ok(EdgeList { n, edges, lines, comments })
+}
+
+/// Parse one vertex-id token, with range checking against a declared
+/// vertex count.
+fn parse_id(
+    tok: Option<&str>,
+    body: &str,
+    lineno: u64,
+    declared_n: Option<usize>,
+) -> Result<u32, IoError> {
+    let tok = tok.ok_or_else(|| IoError::Parse { line: lineno, token: body.to_string() })?;
+    let id: u64 = tok
+        .parse()
+        .map_err(|_| IoError::Parse { line: lineno, token: tok.to_string() })?;
+    if let Some(n) = declared_n {
+        if id >= n as u64 {
+            return Err(IoError::VertexOutOfRange { vertex: id, n, line: Some(lineno) });
+        }
+    }
+    if id > u32::MAX as u64 - 1 {
+        return Err(IoError::Parse { line: lineno, token: tok.to_string() });
+    }
+    Ok(id as u32)
+}
+
+/// Parse a text edge list from a file path.
+pub fn read_edge_list_path(path: &Path, declared_n: Option<usize>) -> Result<EdgeList, IoError> {
+    let f = std::fs::File::open(path)?;
+    read_edge_list(BufReader::new(f), declared_n)
+}
+
+/// Assemble an undirected CSR [`Graph`] from raw edge records via a
+/// two-pass counting sort, parallelized over contiguous row blocks.
+///
+/// Self-loops are dropped, duplicate edges collapse to one, both
+/// directions are materialized and every row comes out strictly sorted —
+/// exactly the [`Graph::from_edges`] contract, but O(n + arcs) instead
+/// of a global comparison sort, and with out-of-range ids reported as a
+/// typed error instead of a debug assertion.
+///
+/// Determinism: in both passes each scoped thread owns a contiguous row
+/// block (a disjoint `&mut` slice) and scans the *whole* arc array in
+/// order, so a row's entries land in arc-array order no matter how many
+/// threads run; the per-row sort + dedup that follows makes the output
+/// bit-identical for any `threads` value (asserted in
+/// `rust/tests/ingest.rs`).
+pub fn build_csr(
+    n: usize,
+    edges: &[(u32, u32)],
+    threads: usize,
+) -> Result<(Graph, CsrBuildStats), IoError> {
+    let mut stats = CsrBuildStats::default();
+    if n == 0 {
+        if let Some(&(u, v)) = edges.first() {
+            return Err(IoError::VertexOutOfRange { vertex: u.max(v) as u64, n, line: None });
+        }
+        return Ok((Graph { offsets: vec![0], neighbors: Vec::new() }, stats));
+    }
+    // Materialize both directions; drop self-loops, range-check ids.
+    let mut arcs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+    for &(u, v) in edges {
+        if u as usize >= n || v as usize >= n {
+            return Err(IoError::VertexOutOfRange { vertex: u.max(v) as u64, n, line: None });
+        }
+        if u == v {
+            stats.self_loops += 1;
+            continue;
+        }
+        arcs.push((u, v));
+        arcs.push((v, u));
+    }
+    let t = threads.max(1).min(n);
+    let rows_per = n.div_ceil(t);
+
+    // ---- Pass 1: degree count, one contiguous row block per thread.
+    let mut deg = vec![0u32; n];
+    std::thread::scope(|scope| {
+        for (bi, block) in deg.chunks_mut(rows_per).enumerate() {
+            let arcs = &arcs;
+            let start = bi * rows_per;
+            scope.spawn(move || {
+                let end = start + block.len();
+                for &(u, _) in arcs {
+                    let r = u as usize;
+                    if r >= start && r < end {
+                        block[r - start] += 1;
+                    }
+                }
+            });
+        }
+    });
+    let mut off = vec![0u64; n + 1];
+    for r in 0..n {
+        off[r + 1] = off[r] + deg[r] as u64;
+    }
+
+    // ---- Pass 2: scatter + per-row sort/dedup, same row blocks. Each
+    // block's output region off[start]..off[end] is one contiguous slice,
+    // so the blocks split the scatter buffer without overlap.
+    let mut scatter = vec![0u32; arcs.len()];
+    let mut row_lens = vec![0u32; n];
+    std::thread::scope(|scope| {
+        let mut rest: &mut [u32] = &mut scatter;
+        let mut lens_rest: &mut [u32] = &mut row_lens;
+        let n_blocks = n.div_ceil(rows_per);
+        for bi in 0..n_blocks {
+            let start = bi * rows_per;
+            let end = ((bi + 1) * rows_per).min(n);
+            let width = (off[end] - off[start]) as usize;
+            let (slice, tail) = rest.split_at_mut(width);
+            rest = tail;
+            let (lens, ltail) = lens_rest.split_at_mut(end - start);
+            lens_rest = ltail;
+            let arcs = &arcs;
+            let off = &off;
+            scope.spawn(move || {
+                let base = off[start];
+                let mut cursor: Vec<usize> =
+                    (start..end).map(|r| (off[r] - base) as usize).collect();
+                for &(u, v) in arcs {
+                    let r = u as usize;
+                    if r >= start && r < end {
+                        slice[cursor[r - start]] = v;
+                        cursor[r - start] += 1;
+                    }
+                }
+                for r in start..end {
+                    let s = (off[r] - base) as usize;
+                    let e = (off[r + 1] - base) as usize;
+                    let row = &mut slice[s..e];
+                    row.sort_unstable();
+                    let mut w = 0usize;
+                    for i in 0..row.len() {
+                        if w == 0 || row[i] != row[w - 1] {
+                            row[w] = row[i];
+                            w += 1;
+                        }
+                    }
+                    lens[r - start] = w as u32;
+                }
+            });
+        }
+    });
+
+    // ---- Compact the dedup'd rows into the final CSR.
+    let mut offsets = vec![0u64; n + 1];
+    for r in 0..n {
+        offsets[r + 1] = offsets[r] + row_lens[r] as u64;
+    }
+    let mut neighbors = vec![0u32; offsets[n] as usize];
+    for r in 0..n {
+        let len = row_lens[r] as usize;
+        let src = off[r] as usize;
+        let dst = offsets[r] as usize;
+        neighbors[dst..dst + len].copy_from_slice(&scatter[src..src + len]);
+    }
+    // Each duplicate undirected edge left one redundant arc in each
+    // endpoint's row, so dropped arcs always come in pairs.
+    stats.duplicates = ((arcs.len() - neighbors.len()) / 2) as u64;
+    let graph = Graph { offsets, neighbors };
+    stats.isolated = (0..n as u32).filter(|&v| graph.degree(v) == 0).count();
+    Ok((graph, stats))
+}
+
+/// One-call text→CSR ingestion: [`read_edge_list_path`] + [`build_csr`].
+pub fn ingest_edge_list(
+    path: &Path,
+    declared_n: Option<usize>,
+    threads: usize,
+) -> Result<(Graph, EdgeList, CsrBuildStats), IoError> {
+    let list = read_edge_list_path(path, declared_n)?;
+    let (graph, stats) = build_csr(list.n, &list.edges, threads)?;
+    Ok((graph, list, stats))
+}
+
+/// A loaded `.cgr` file: the graph plus its optional node-data section.
+#[derive(Clone, Debug)]
+pub struct CgrFile {
+    /// The CSR graph.
+    pub graph: Graph,
+    /// Features/labels/masks, when the file carries them.
+    pub data: Option<NodeData>,
+}
+
+/// Write `graph` (and, when given, `data`) to `path` in the `.cgr`
+/// format. The round-trip through [`load_cgr`] is bit-exact: offsets,
+/// indices, labels, masks and every `f32` feature bit come back
+/// identical.
+pub fn save_cgr(path: &Path, graph: &Graph, data: Option<&NodeData>) -> Result<(), IoError> {
+    if let Some(d) = data {
+        if d.n() != graph.n() {
+            return Err(IoError::Corrupt(format!(
+                "node data covers {} vertices but the graph has {}",
+                d.n(),
+                graph.n()
+            )));
+        }
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&CGR_MAGIC)?;
+    w.write_all(&CGR_VERSION.to_le_bytes())?;
+    let flags: u16 = if data.is_some() { FLAG_NODE_DATA } else { 0 };
+    w.write_all(&flags.to_le_bytes())?;
+    w.write_all(&(graph.n() as u64).to_le_bytes())?;
+    w.write_all(&(graph.arcs() as u64).to_le_bytes())?;
+    for &o in &graph.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &c in &graph.neighbors {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    if let Some(d) = data {
+        w.write_all(&(d.f_dim as u32).to_le_bytes())?;
+        w.write_all(&(d.num_classes as u32).to_le_bytes())?;
+        for &x in &d.features {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        for &l in &d.labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+        for v in 0..d.n() {
+            let b = (d.train_mask[v] as u8) | ((d.val_mask[v] as u8) << 1) | ((d.test_mask[v] as u8) << 2);
+            w.write_all(&[b])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Sequential byte reader over an in-memory `.cgr` image, reporting
+/// typed truncation errors with the section that ran dry.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, len: usize, section: &'static str) -> Result<&'a [u8], IoError> {
+        let avail = self.bytes.len() - self.pos;
+        if avail < len {
+            return Err(IoError::Truncated {
+                section,
+                expected: len as u64,
+                actual: avail as u64,
+            });
+        }
+        let s = &self.bytes[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u16(&mut self, section: &'static str) -> Result<u16, IoError> {
+        let b = self.take(2, section)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, section: &'static str) -> Result<u32, IoError> {
+        let b = self.take(4, section)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, section: &'static str) -> Result<u64, IoError> {
+        let b = self.take(8, section)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn u32_vec(&mut self, count: usize, section: &'static str) -> Result<Vec<u32>, IoError> {
+        let b = self.take(count * 4, section)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Read a `.cgr` file and validate its structure (magic, version, flag
+/// bits, section lengths, offset monotonicity, index/label ranges). See
+/// the module docs for the layout.
+pub fn load_cgr(path: &Path) -> Result<CgrFile, IoError> {
+    let bytes = std::fs::read(path)?;
+    load_cgr_bytes(&bytes)
+}
+
+/// [`load_cgr`] over an in-memory byte image (tests, streams).
+pub fn load_cgr_bytes(bytes: &[u8]) -> Result<CgrFile, IoError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(IoError::Truncated {
+            section: "header",
+            expected: HEADER_BYTES as u64,
+            actual: bytes.len() as u64,
+        });
+    }
+    let mut c = Cursor { bytes, pos: 0 };
+    let magic = c.take(4, "header")?;
+    if magic != CGR_MAGIC {
+        return Err(IoError::BadMagic { found: [magic[0], magic[1], magic[2], magic[3]] });
+    }
+    let version = c.u16("header")?;
+    if version == 0 || version > CGR_VERSION {
+        return Err(IoError::UnsupportedVersion(version));
+    }
+    let flags = c.u16("header")?;
+    if flags & !FLAG_NODE_DATA != 0 {
+        return Err(IoError::Corrupt(format!("unknown header flags {flags:#06x}")));
+    }
+    let n64 = c.u64("header")?;
+    let arcs64 = c.u64("header")?;
+    // Reject implausible counts before any size arithmetic: both arrays
+    // must fit in the file, so their lengths are bounded by it.
+    if n64 >= u64::MAX / 8 || arcs64 >= u64::MAX / 4 {
+        return Err(IoError::Corrupt(format!(
+            "implausible header counts: n={n64}, arcs={arcs64}"
+        )));
+    }
+    let n = n64 as usize;
+    let arcs = arcs64 as usize;
+
+    let off_bytes = c.take((n + 1).saturating_mul(8), "row offsets")?;
+    let offsets: Vec<u64> = off_bytes
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+        .collect();
+    if offsets[0] != 0 {
+        return Err(IoError::Corrupt("offsets[0] != 0".into()));
+    }
+    for r in 0..n {
+        if offsets[r] > offsets[r + 1] {
+            return Err(IoError::Corrupt(format!("offsets not monotone at row {r}")));
+        }
+    }
+    if offsets[n] != arcs as u64 {
+        return Err(IoError::Corrupt(format!(
+            "offsets end {} does not match header arc count {arcs}",
+            offsets[n]
+        )));
+    }
+    let neighbors = c.u32_vec(arcs, "column indices")?;
+    if let Some(&bad) = neighbors.iter().find(|&&v| v as usize >= n) {
+        return Err(IoError::VertexOutOfRange { vertex: bad as u64, n, line: None });
+    }
+    let graph = Graph { offsets, neighbors };
+    // The crate-wide CSR invariants (strictly sorted rows, symmetric
+    // arcs, no self-loops) are what every consumer assumes. Enforce them
+    // at this trust boundary: an externally produced file that stores
+    // edges one-directionally or unsorted must fail here, not train
+    // silently wrong.
+    graph.check_invariants().map_err(IoError::Corrupt)?;
+
+    let data = if flags & FLAG_NODE_DATA != 0 {
+        let f_dim = c.u32("node data header")? as usize;
+        let num_classes = c.u32("node data header")? as usize;
+        if num_classes == 0 {
+            return Err(IoError::Corrupt("node data with zero classes".into()));
+        }
+        if f_dim == 0 {
+            return Err(IoError::Corrupt("node data with zero-width features".into()));
+        }
+        let feat_bytes = c.take(n.saturating_mul(f_dim).saturating_mul(4), "features")?;
+        let features: Vec<f32> = feat_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let labels = c.u32_vec(n, "labels")?;
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= num_classes) {
+            return Err(IoError::Corrupt(format!(
+                "label {bad} out of class range {num_classes}"
+            )));
+        }
+        let mask_bytes = c.take(n, "split masks")?;
+        if let Some(&bad) = mask_bytes.iter().find(|&&b| b & !0b111 != 0) {
+            return Err(IoError::Corrupt(format!("unknown split-mask bits {bad:#04x}")));
+        }
+        let train_mask = mask_bytes.iter().map(|&b| b & 1 != 0).collect();
+        let val_mask = mask_bytes.iter().map(|&b| b & 2 != 0).collect();
+        let test_mask = mask_bytes.iter().map(|&b| b & 4 != 0).collect();
+        Some(NodeData {
+            features,
+            f_dim,
+            labels,
+            num_classes,
+            train_mask,
+            val_mask,
+            test_mask,
+        })
+    } else {
+        None
+    };
+    if c.pos != bytes.len() {
+        return Err(IoError::Corrupt(format!(
+            "{} trailing bytes after the last section",
+            bytes.len() - c.pos
+        )));
+    }
+    Ok(CgrFile { graph, data })
+}
+
+/// Load a graph file by extension: `.cgr` → [`load_cgr`], anything else
+/// is treated as a text edge list (node data absent, single-threaded
+/// CSR build).
+pub fn load_graph_file(path: &Path) -> Result<CgrFile, IoError> {
+    let is_cgr = path.extension().map(|e| e.eq_ignore_ascii_case("cgr")).unwrap_or(false);
+    if is_cgr {
+        load_cgr(path)
+    } else {
+        let list = read_edge_list_path(path, None)?;
+        let (graph, _) = build_csr(list.n, &list.edges, 1)?;
+        Ok(CgrFile { graph, data: None })
+    }
+}
+
+/// Write `edges` (one `u v` line per undirected edge) — the inverse of
+/// [`read_edge_list`], used by benches and tests to generate fixture
+/// files.
+pub fn write_edge_list<W: Write>(mut w: W, edges: &[(u32, u32)]) -> Result<(), IoError> {
+    for &(u, v) in edges {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn edge_list_parses_whitespace_csv_and_comments() {
+        let text = "# a comment\n0 1\n1,2\n% another\n  2\t3  \n\n// last\n3, 0\n";
+        let list = read_edge_list(text.as_bytes(), None).unwrap();
+        assert_eq!(list.n, 4);
+        assert_eq!(list.edges, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert_eq!(list.lines, 4);
+        assert_eq!(list.comments, 4);
+    }
+
+    #[test]
+    fn bad_token_is_a_parse_error_with_line_number() {
+        let err = read_edge_list("0 1\n2 x\n".as_bytes(), None).unwrap_err();
+        match err {
+            IoError::Parse { line, token } => {
+                assert_eq!(line, 2);
+                assert_eq!(token, "x");
+            }
+            other => panic!("expected Parse, got {other:?}"),
+        }
+        // A one-field line is also a parse error.
+        assert!(matches!(
+            read_edge_list("7\n".as_bytes(), None),
+            Err(IoError::Parse { line: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn build_matches_from_edges_for_any_thread_count() {
+        let mut rng = Rng::new(31);
+        for n in [1usize, 7, 64, 300] {
+            let m = n * 4;
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.index(n) as u32, rng.index(n) as u32))
+                .collect();
+            let want = Graph::from_edges(
+                n,
+                &edges.iter().copied().filter(|&(u, v)| u != v).collect::<Vec<_>>(),
+            );
+            for t in [1usize, 2, 4, 7] {
+                let (got, _) = build_csr(n, &edges, t).unwrap();
+                assert_eq!(got, want, "n={n} threads={t}");
+                got.check_invariants().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_self_loops_duplicates_isolated() {
+        let edges = [(0u32, 1u32), (1, 0), (0, 1), (2, 2), (0, 3)];
+        let (g, st) = build_csr(5, &edges, 2).unwrap();
+        assert_eq!(g.m(), 2); // {0,1}, {0,3}
+        assert_eq!(st.self_loops, 1);
+        assert_eq!(st.duplicates, 2); // (1,0) and the repeated (0,1)
+        assert_eq!(st.isolated, 2); // vertices 2 and 4
+        assert_eq!(g.degree(4), 0); // declared trailing isolated vertex
+    }
+
+    #[test]
+    fn cgr_roundtrip_graph_only() {
+        let mut rng = Rng::new(5);
+        let g = Graph::random(40, 160, &mut rng);
+        let path = std::env::temp_dir().join(format!("capgnn-io-unit-{}.cgr", std::process::id()));
+        save_cgr(&path, &g, None).unwrap();
+        let back = load_cgr(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.graph, g);
+        assert!(back.data.is_none());
+    }
+}

@@ -1,14 +1,17 @@
 //! Graph substrate: CSR storage, synthetic generators, the dataset-twin
-//! suite (substitution S2), feature synthesis and reordering.
+//! suite (substitution S2), on-disk ingestion (`.cgr` + edge lists),
+//! feature synthesis and reordering.
 
 pub mod csr;
 pub mod datasets;
 pub mod features;
 pub mod generator;
+pub mod io;
 pub mod reorder;
 pub mod sparse;
 
 pub use csr::Graph;
-pub use datasets::{spec_by_name, Dataset, DatasetSpec, SPECS};
+pub use datasets::{spec_by_name, Dataset, DatasetSource, DatasetSpec, SPECS};
 pub use features::NodeData;
+pub use io::{CgrFile, IoError};
 pub use sparse::{CsrMat, SparseAdj};

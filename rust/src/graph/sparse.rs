@@ -22,8 +22,11 @@ use std::sync::OnceLock;
 /// One CSR matrix: `indptr[r]..indptr[r+1]` indexes `indices`/`values`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CsrMat {
+    /// Row pointer (length rows+1).
     pub indptr: Vec<u32>,
+    /// Column index of each stored entry.
     pub indices: Vec<u32>,
+    /// Value of each stored entry.
     pub values: Vec<f32>,
 }
 

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train      run one training configuration and print the report
 //!   partition  run a partitioner (+ optional RAPA) and print halo stats
+//!   ingest     build a binary .cgr graph from a text edge list
+//!   inspect    print and validate a .cgr file's header and stats
 //!   device     print the simulated-testbed Table 1
 //!   expt <id>  run a paper experiment (fig4…tab9; see DESIGN.md)
 //!   info       datasets, artifact status, experiment ids
@@ -11,6 +13,8 @@ use capgnn::baselines::System;
 use capgnn::device::profile::GpuGroup;
 use capgnn::dist::Cluster;
 use capgnn::expt;
+use capgnn::graph::datasets::{synthetic_node_data, FILE_CLASSES, FILE_F_DIM};
+use capgnn::graph::io;
 use capgnn::graph::SPECS;
 use capgnn::partition::halo::halo_stats;
 use capgnn::partition::rapa::{self, RapaConfig};
@@ -25,6 +29,8 @@ fn main() {
     let code = match cmd {
         "train" => cmd_train(&args),
         "partition" => cmd_partition(&args),
+        "ingest" => cmd_ingest(&args),
+        "inspect" => cmd_inspect(&args),
         "device" => {
             expt::device_tab::tab1(expt::Ctx::from_args(&args));
             0
@@ -51,7 +57,8 @@ fn print_help() {
 USAGE: capgnn <command> [options]
 
 COMMANDS:
-  train      --dataset rt --group x4 --system capgnn --model gcn
+  train      --dataset rt|file:<graph.cgr|edges.txt>
+             --group x4 --system capgnn --model gcn
              --epochs 200 --backend native|xla --scale 1.0
              [--policy jaca|fifo|lru --method metis|random|fennel
               --no-pipe --no-cache --no-rapa --refresh 8
@@ -70,10 +77,23 @@ COMMANDS:
               --agg-threads N    intra-worker SpMM row-block threads of
                                  the native backend (default 1); any N is
                                  bit-identical — rows are independent]
-  partition  --dataset rt --group x4 --method metis [--rapa] [--hops 1]
+  partition  --dataset rt|file:<path> --group x4 --method metis
+             [--rapa] [--hops 1]
+  ingest     <edges.txt> -o <graph.cgr>
+             [--nodes N         declare the vertex count (allows trailing
+                                isolated vertices; ids are range-checked)
+              --threads N       row-block threads for the CSR build
+                                (default 4; any N is bit-identical)
+              --with-node-data  embed deterministic synthetic features/
+                                labels/masks (--seed) so the file is
+                                self-contained]
+  inspect    <graph.cgr>        print header, sizes, degree stats and
+                                validate the CSR invariants
   device     print the simulated GPU testbed (paper Table 1)
   expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
              fig21 fig22 tab7 [--full] tab8 tab9   [--quick]
+             [--dataset rt|file:<path>   override the dataset of the
+                                single-dataset experiments]
   info       list datasets, artifacts, experiments"
     );
 }
@@ -241,6 +261,148 @@ fn cmd_partition(args: &Args) -> i32 {
         );
     }
     0
+}
+
+/// `capgnn ingest <edges.txt> -o <graph.cgr>`: stream a text edge list
+/// into the on-disk binary CSR format.
+fn cmd_ingest(args: &Args) -> i32 {
+    // Positionals look like ["ingest", input, "-o", output]; accept
+    // `--out <path>` as the long-form spelling.
+    let mut input: Option<&str> = None;
+    let mut output: Option<String> = args.get("out").map(|s| s.to_string());
+    let mut i = 1;
+    while i < args.positional.len() {
+        let tok = args.positional[i].as_str();
+        if tok == "-o" {
+            match args.positional.get(i + 1) {
+                Some(v) => {
+                    output = Some(v.clone());
+                    i += 2;
+                    continue;
+                }
+                None => {
+                    eprintln!("error: -o needs an output path");
+                    return 2;
+                }
+            }
+        }
+        if input.is_none() {
+            input = Some(tok);
+        } else {
+            eprintln!("error: unexpected argument {tok:?}");
+            return 2;
+        }
+        i += 1;
+    }
+    let (Some(input), Some(output)) = (input, output) else {
+        eprintln!("usage: capgnn ingest <edges.txt> -o <graph.cgr> [--nodes N] [--threads N] [--with-node-data]");
+        return 2;
+    };
+    let declared_n = args.get("nodes").map(|v| v.parse::<usize>());
+    let declared_n = match declared_n {
+        None => None,
+        Some(Ok(n)) => Some(n),
+        Some(Err(_)) => {
+            eprintln!("error: bad --nodes value");
+            return 2;
+        }
+    };
+    let threads = args.usize_or("threads", 4);
+    let t0 = std::time::Instant::now();
+    let (graph, list, stats) =
+        match io::ingest_edge_list(std::path::Path::new(input), declared_n, threads) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("ingest failed: {e}");
+                return 1;
+            }
+        };
+    let data = if args.has_flag("with-node-data") {
+        let seed = args.u64_or("seed", 42);
+        Some(synthetic_node_data(&graph, FILE_CLASSES, FILE_F_DIM, seed))
+    } else {
+        None
+    };
+    if let Err(e) = io::save_cgr(std::path::Path::new(&output), &graph, data.as_ref()) {
+        eprintln!("writing {output}: {e}");
+        return 1;
+    }
+    let bytes = std::fs::metadata(&output).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "ingested {input}: {} data lines ({} comments) -> {} vertices, {} edges \
+         ({} self-loops and {} duplicates dropped, {} isolated) in {:.3}s [{threads} threads]",
+        list.lines,
+        list.comments,
+        graph.n(),
+        graph.m(),
+        stats.self_loops,
+        stats.duplicates,
+        stats.isolated,
+        t0.elapsed().as_secs_f64(),
+    );
+    println!(
+        "wrote {output}: {bytes} bytes{}",
+        if data.is_some() {
+            format!(" (with synthetic node data: {FILE_F_DIM} features, {FILE_CLASSES} classes)")
+        } else {
+            String::new()
+        }
+    );
+    0
+}
+
+/// `capgnn inspect <graph.cgr>`: print the header and structural stats,
+/// and validate the CSR invariants.
+fn cmd_inspect(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: capgnn inspect <graph.cgr>");
+        return 2;
+    };
+    let file = match io::load_cgr(std::path::Path::new(path)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("inspect failed: {e}");
+            return 1;
+        }
+    };
+    let g = &file.graph;
+    println!(
+        "{path}: cgr v{} | {} vertices, {} edges ({} arcs)",
+        io::CGR_VERSION,
+        g.n(),
+        g.m(),
+        g.arcs()
+    );
+    println!(
+        "degrees: avg {:.2}, max {} | isolated {}",
+        g.avg_degree(),
+        g.max_degree(),
+        (0..g.n() as u32).filter(|&v| g.degree(v) == 0).count()
+    );
+    match &file.data {
+        Some(d) => {
+            let (tr, va, te) = (
+                d.train_mask.iter().filter(|&&b| b).count(),
+                d.val_mask.iter().filter(|&&b| b).count(),
+                d.test_mask.iter().filter(|&&b| b).count(),
+            );
+            println!(
+                "node data: {} features/vertex, {} classes | split {tr}/{va}/{te}",
+                d.f_dim, d.num_classes
+            );
+        }
+        None => println!("node data: none (train synthesizes deterministic features from --seed)"),
+    }
+    match g.check_invariants() {
+        Ok(()) => {
+            println!("invariants: OK (sorted rows, symmetric edges, no self-loops)");
+            0
+        }
+        Err(e) => {
+            eprintln!("invariants: FAILED — {e}");
+            1
+        }
+    }
 }
 
 fn cmd_expt(args: &Args) -> i32 {

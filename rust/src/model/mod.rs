@@ -9,11 +9,14 @@ use crate::util::Rng;
 /// Which architecture (paper evaluates GCN and GraphSAGE).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {
+    /// Graph Convolutional Network (Kipf & Welling).
     Gcn,
+    /// GraphSAGE with the mean aggregator.
     Sage,
 }
 
 impl ModelKind {
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             ModelKind::Gcn => "GCN",
@@ -21,6 +24,7 @@ impl ModelKind {
         }
     }
 
+    /// Parse a CLI `--model` name (case-insensitive).
     pub fn from_name(s: &str) -> Option<ModelKind> {
         match s.to_ascii_lowercase().as_str() {
             "gcn" => Some(ModelKind::Gcn),
@@ -41,8 +45,11 @@ impl ModelKind {
 /// One layer's shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerDims {
+    /// Input feature width.
     pub d_in: usize,
+    /// Output feature width.
     pub d_out: usize,
+    /// Apply ReLU after this layer?
     pub relu: bool,
 }
 
@@ -66,7 +73,9 @@ pub type Grads = Vec<Vec<Vec<f32>>>;
 /// Model parameters.
 #[derive(Clone, Debug)]
 pub struct GnnModel {
+    /// Which architecture these weights parameterize.
     pub kind: ModelKind,
+    /// Per-layer shapes.
     pub dims: Vec<LayerDims>,
     /// weights[layer][mat] — row-major d_in×d_out.
     pub weights: Vec<Vec<Vec<f32>>>,
@@ -86,6 +95,7 @@ impl GnnModel {
         GnnModel { kind, dims, weights }
     }
 
+    /// Number of layers.
     pub fn layers(&self) -> usize {
         self.dims.len()
     }

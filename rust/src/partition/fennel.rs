@@ -13,6 +13,8 @@ const GAMMA: f64 = 1.5;
 /// Hard cap on part size relative to perfect balance.
 const SLACK: f64 = 1.1;
 
+/// Partition `g` into `parts` by one Fennel pass over a shuffled
+/// vertex stream.
 pub fn partition(g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
     let n = g.n();
     let m = g.m().max(1);

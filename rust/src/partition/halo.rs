@@ -35,6 +35,7 @@ pub fn expand_halo(g: &Graph, ps: &PartitionSet, p: u32, hops: usize) -> Vec<u32
 /// the quantities Figs. 4–6 plot.
 #[derive(Clone, Debug)]
 pub struct HaloStats {
+    /// Halo expansion depth the stats were computed at.
     pub hops: usize,
     /// Inner vertex count per part.
     pub inner: Vec<usize>,
@@ -122,9 +123,11 @@ pub struct Subgraph {
 }
 
 impl Subgraph {
+    /// Total local vertices (inner + halo).
     pub fn n_local(&self) -> usize {
         self.global_ids.len()
     }
+    /// Halo vertex count.
     pub fn n_halo(&self) -> usize {
         self.global_ids.len() - self.n_inner
     }
@@ -148,6 +151,7 @@ impl Subgraph {
 /// exchange granularity of per-layer training).
 #[derive(Clone, Debug)]
 pub struct SubgraphPlan {
+    /// One subgraph per part, in worker order.
     pub parts: Vec<Subgraph>,
     /// Global overlap ratio (1-hop) used by JACA.
     pub overlap: Vec<u32>,

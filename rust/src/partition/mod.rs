@@ -16,11 +16,14 @@ use crate::util::Rng;
 /// A vertex-centric partitioning: `assignment[v] = part`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PartitionSet {
+    /// Number of parts.
     pub num_parts: usize,
+    /// Part id per vertex.
     pub assignment: Vec<u32>,
 }
 
 impl PartitionSet {
+    /// Wrap an assignment (debug-checked against `num_parts`).
     pub fn new(num_parts: usize, assignment: Vec<u32>) -> PartitionSet {
         debug_assert!(assignment.iter().all(|&p| (p as usize) < num_parts));
         PartitionSet { num_parts, assignment }
@@ -96,6 +99,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Run the partitioner.
     pub fn partition(self, g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
         match self {
             Method::Metis => metis::partition(g, parts, rng),
@@ -104,6 +108,7 @@ impl Method {
         }
     }
 
+    /// CLI name.
     pub fn name(self) -> &'static str {
         match self {
             Method::Metis => "metis",
@@ -112,6 +117,7 @@ impl Method {
         }
     }
 
+    /// Parse a CLI `--method` name (case-insensitive).
     pub fn from_name(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "metis" => Some(Method::Metis),

@@ -6,6 +6,8 @@ use super::PartitionSet;
 use crate::graph::Graph;
 use crate::util::Rng;
 
+/// Assign vertices round-robin over a shuffled order (balanced by
+/// construction).
 pub fn partition(g: &Graph, parts: usize, rng: &mut Rng) -> PartitionSet {
     let n = g.n();
     let mut order: Vec<u32> = (0..n as u32).collect();

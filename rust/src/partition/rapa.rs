@@ -64,17 +64,22 @@ struct PartState {
 /// Snapshot of one adjustment iteration (Fig. 20 series).
 #[derive(Clone, Debug)]
 pub struct IterSnapshot {
+    /// Adjustment iteration index (0 = before any adjustment).
     pub iter: usize,
     /// Per part: (local nodes, local edges, λᵢ).
     pub parts: Vec<(usize, usize, f64)>,
+    /// Standard deviation of λ across parts (balance signal).
     pub lambda_std: f64,
+    /// Largest per-part λ (the straggler).
     pub lambda_max: f64,
 }
 
 /// RAPA output.
 #[derive(Clone, Debug)]
 pub struct RapaResult {
+    /// The adjusted per-worker plan the trainer consumes.
     pub plan: SubgraphPlan,
+    /// Final vertex→part assignment.
     pub assignment: PartitionSet,
     /// Which GPU each part landed on (identity here: part i → gpu i).
     pub trace: Vec<IterSnapshot>,

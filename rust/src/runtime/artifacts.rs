@@ -8,14 +8,20 @@ use std::path::{Path, PathBuf};
 /// The per-layer unit kinds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum UnitKind {
+    /// GCN layer forward.
     GcnFwd,
+    /// GCN layer backward.
     GcnBwd,
+    /// GraphSAGE layer forward.
     SageFwd,
+    /// GraphSAGE layer backward.
     SageBwd,
+    /// Masked cross-entropy loss + gradient.
     CeGrad,
 }
 
 impl UnitKind {
+    /// Parse a manifest kind string ("gcn_fwd", …).
     pub fn from_str(s: &str) -> Option<UnitKind> {
         match s {
             "gcn_fwd" => Some(UnitKind::GcnFwd),
@@ -31,18 +37,26 @@ impl UnitKind {
 /// Identity of one compiled unit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct UnitKey {
+    /// Which op the unit computes.
     pub kind: UnitKind,
+    /// Padded vertex-count bucket.
     pub n: usize,
+    /// Input feature width.
     pub d_in: usize,
+    /// Output feature width.
     pub d_out: usize,
+    /// Whether the unit applies ReLU.
     pub relu: bool,
 }
 
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the artifacts live in.
     pub dir: PathBuf,
-    pub units: BTreeMap<UnitKey, String>, // key -> file name
+    /// Unit key → HLO file name.
+    pub units: BTreeMap<UnitKey, String>,
+    /// Padded vertex-count buckets the AOT step compiled.
     pub n_buckets: Vec<usize>,
 }
 
@@ -101,6 +115,7 @@ impl Manifest {
         self.units.get(key).map(|f| self.dir.join(f))
     }
 
+    /// Was this unit compiled?
     pub fn has(&self, key: &UnitKey) -> bool {
         self.units.contains_key(key)
     }

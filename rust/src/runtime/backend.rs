@@ -19,6 +19,7 @@ use anyhow::Result;
 /// Output of the loss unit.
 #[derive(Clone, Debug)]
 pub struct LossGrad {
+    /// Mean masked cross-entropy loss.
     pub loss: f32,
     /// Correct predictions over the mask.
     pub correct: f32,
@@ -26,6 +27,8 @@ pub struct LossGrad {
     pub dz: Vec<f32>,
 }
 
+/// The per-layer compute interface (see the module docs for the memory
+/// and determinism contracts).
 pub trait Backend {
     /// out = act(Â·H·W): `adj` is the n×n operator, `h` n×d_in,
     /// `w` d_in×d_out. `out` is resized to n×d_out and overwritten.
@@ -78,6 +81,7 @@ pub trait Backend {
         Some(forks)
     }
 
+    /// Display name of the backend ("native", "xla").
     fn name(&self) -> &'static str;
 }
 
@@ -91,6 +95,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Build with the default single aggregation thread.
     pub fn build(self) -> Result<Box<dyn Backend>> {
         self.build_with_agg_threads(1)
     }

@@ -28,6 +28,7 @@ fn unavailable() -> anyhow::Error {
 }
 
 impl XlaBackend {
+    /// Always fails: the `xla` crate is not compiled in.
     pub fn new(_manifest: Manifest) -> Result<XlaBackend> {
         Err(unavailable())
     }

@@ -134,6 +134,8 @@ fn transpose_into(w: &[f32], d_in: usize, d_out: usize, out: &mut Vec<f32>) {
     }
 }
 
+/// The pure-rust [`Backend`]: CSR SpMM aggregation plus row-major
+/// matmul kernels over a reusable scratch arena.
 pub struct NativeBackend {
     /// SpMM row-block threads (1 = serial; any value is bit-identical).
     threads: usize,
@@ -163,6 +165,7 @@ impl Default for NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend with a single aggregation thread.
     pub fn new() -> NativeBackend {
         NativeBackend::with_threads(1)
     }

@@ -21,8 +21,9 @@ pub struct TrainReport {
     /// Per-worker stage breakdown, summed over epochs (load-balance
     /// analysis — Fig. 21 variance).
     pub worker_stages: Vec<StageTimes>,
-    /// Device bytes moved / saved by caching over the run.
+    /// Device bytes moved over the run (halo rows shipped to requesters).
     pub bytes_moved: u64,
+    /// Device bytes the cache saved (hits that avoided a transfer).
     pub bytes_saved: u64,
     /// Cross-machine wire bytes, measured from the serialized frames the
     /// executors actually shipped (halo rows + hierarchical all-reduce

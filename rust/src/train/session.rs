@@ -74,8 +74,9 @@ pub struct EpochStats {
     pub loss: f32,
     /// Validation accuracy from this epoch's logits.
     pub val_acc: f32,
-    /// Device bytes moved / saved by caching during this epoch.
+    /// Device bytes moved during this epoch.
     pub bytes_moved: u64,
+    /// Device bytes the cache saved during this epoch.
     pub bytes_saved: u64,
     /// Cross-machine wire bytes this epoch (serialized frames: halo rows
     /// + hierarchical all-reduce gradients). Zero on a single machine.
@@ -92,20 +93,27 @@ pub struct EpochStats {
 /// Accuracy snapshot from the current logits (no weight update).
 #[derive(Clone, Copy, Debug)]
 pub struct EvalStats {
+    /// Validation-split accuracy (fraction).
     pub val_acc: f32,
+    /// Test-split accuracy (fraction).
     pub test_acc: f32,
 }
 
 /// Verdict an observer returns after each epoch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Signal {
+    /// Keep training.
     Continue,
+    /// End the run after this epoch.
     Stop,
 }
 
 /// Between-epoch hook: convergence logging, early stopping, cache
 /// refreshes — anything that watches or steers a running session.
 pub trait EpochObserver {
+    /// Called after every epoch with that epoch's stats; may steer the
+    /// session (e.g. request a cache refresh) and decide whether to
+    /// continue.
     fn on_epoch(&mut self, session: &mut Session<'_>, stats: &EpochStats) -> Signal;
 }
 
@@ -120,7 +128,9 @@ impl EpochObserver for () {
 /// than `patience` consecutive epochs.
 #[derive(Clone, Debug)]
 pub struct EarlyStopping {
+    /// Epochs without improvement tolerated before stopping.
     pub patience: usize,
+    /// Minimum val-accuracy gain that counts as an improvement.
     pub min_delta: f32,
     best: f32,
     since_best: usize,
@@ -129,6 +139,8 @@ pub struct EarlyStopping {
 }
 
 impl EarlyStopping {
+    /// Observer that stops after `patience` epochs without a
+    /// `min_delta` validation-accuracy improvement.
     pub fn new(patience: usize, min_delta: f32) -> EarlyStopping {
         EarlyStopping {
             patience,
@@ -139,6 +151,7 @@ impl EarlyStopping {
         }
     }
 
+    /// Best validation accuracy seen so far.
     pub fn best_val_acc(&self) -> f32 {
         self.best
     }
@@ -163,6 +176,7 @@ impl EpochObserver for EarlyStopping {
 /// Record every epoch's stats (streaming convergence curves — Fig. 22).
 #[derive(Clone, Debug, Default)]
 pub struct ConvergenceLog {
+    /// One entry per completed epoch, in order.
     pub history: Vec<EpochStats>,
 }
 
@@ -177,6 +191,7 @@ impl EpochObserver for ConvergenceLog {
 /// variant of `TrainConfig::refresh_interval`.
 #[derive(Clone, Copy, Debug)]
 pub struct PeriodicRefresh {
+    /// Refresh period in epochs (0 = never).
     pub every: u64,
 }
 
@@ -869,10 +884,12 @@ impl<'a> Session<'a> {
         self.epoch
     }
 
+    /// Number of workers (simulated GPUs) in this session.
     pub fn num_workers(&self) -> usize {
         self.workers.len()
     }
 
+    /// The configuration this session was built with.
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
     }
@@ -888,6 +905,8 @@ impl<'a> Session<'a> {
         self.cache.stats
     }
 
+    /// Number of machines the workers are spread over (1 on a single
+    /// box).
     pub fn num_machines(&self) -> usize {
         self.machine_of.iter().copied().max().map_or(1, |m| m + 1)
     }

@@ -42,6 +42,7 @@ pub enum ExecMode {
 }
 
 impl ExecMode {
+    /// Short name for reports ("sequential" / "threaded").
     pub fn name(self) -> &'static str {
         match self {
             ExecMode::Sequential => "sequential",
@@ -66,20 +67,29 @@ pub enum CapacityMode {
 /// [`crate::baselines`].
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Architecture (GCN or GraphSAGE).
     pub model: ModelKind,
+    /// Hidden layer width.
     pub hidden: usize,
+    /// Number of GNN layers.
     pub layers: usize,
+    /// SGD learning rate.
     pub lr: f32,
+    /// Epochs a full run trains for.
     pub epochs: usize,
+    /// Seed for every stochastic component of the run.
     pub seed: u64,
     /// Pre-partitioner.
     pub method: Method,
     /// Apply RAPA's halo adjustment after pre-partitioning.
     pub use_rapa: bool,
+    /// RAPA iteration/threshold knobs (Eq. 13–16).
     pub rapa: RapaConfig,
     /// JACA on/off (off = Vanilla communication).
     pub use_cache: bool,
+    /// Cache replacement policy (JACA or a baseline).
     pub policy: PolicyKind,
+    /// How local/global cache capacities are chosen.
     pub capacity: CapacityMode,
     /// Overlap communication with computation.
     pub pipeline: bool,

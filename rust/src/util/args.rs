@@ -8,8 +8,12 @@ use std::collections::BTreeMap;
 /// Parsed command line: positionals plus `--key value` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Arguments that are not `--key value` options or `--flag`s, in
+    /// order (subcommand first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -22,11 +26,7 @@ impl Args {
             if let Some(body) = a.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
+                } else if iter.peek().map(|n| is_value_token(n)).unwrap_or(false) {
                     let v = iter.next().unwrap();
                     out.options.insert(body.to_string(), v);
                 } else {
@@ -39,36 +39,57 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
+}
 
+/// Can `tok` be consumed as the value of a preceding `--key`?
+/// Option-looking tokens (`--x`, short options like `-o`) cannot — a
+/// bare `--flag` followed by one must stay a flag — but negative
+/// numbers (`-3`, `-0.5`) can.
+fn is_value_token(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        None => true,
+        Some(rest) => matches!(rest.chars().next(), Some(c) if c.is_ascii_digit() || c == '.'),
+    }
+}
+
+impl Args {
+    /// The value of option `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// The value of option `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Parse option `--key` as `usize`, falling back to `default` when
+    /// absent or unparseable.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// Parse option `--key` as `u64`, falling back to `default`.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// Parse option `--key` as `f64`, falling back to `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// Was the bare switch `--name` given?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -116,6 +137,17 @@ mod tests {
     fn flag_at_end() {
         let a = parse(&["--pipe"]);
         assert!(a.has_flag("pipe"));
+    }
+
+    #[test]
+    fn flag_does_not_swallow_short_options_but_takes_negative_numbers() {
+        // `ingest ... --with-node-data -o out.cgr`: the flag must stay a
+        // flag and `-o out.cgr` must stay positional.
+        let a = parse(&["--with-node-data", "-o", "out.cgr", "--bias", "-0.5", "--n", "-3"]);
+        assert!(a.has_flag("with-node-data"));
+        assert_eq!(a.positional, vec!["-o", "out.cgr"]);
+        assert_eq!(a.get("bias"), Some("-0.5"));
+        assert_eq!(a.get("n"), Some("-3"));
     }
 
     #[test]

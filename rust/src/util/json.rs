@@ -12,42 +12,54 @@ use std::fmt::Write as _;
 /// integers and floats).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null` (also what non-finite numbers serialize to).
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always carried as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The number value, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The string value, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The items, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key → value map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
             _ => None,
         }
     }
+    /// Object field lookup (`None` for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
@@ -139,12 +151,15 @@ fn write_escaped(out: &mut String, s: &str) {
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
+/// Build a [`Json::Arr`].
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }
+/// Build a [`Json::Num`].
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// Build a [`Json::Str`] from a string slice.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

@@ -1,3 +1,9 @@
+//! Offline-registry shims and small shared utilities: CLI parsing
+//! ([`Args`], in place of clap), the bench harness ([`bench`], in place
+//! of criterion), JSON reading/writing ([`json`], in place of serde),
+//! the deterministic PRNG ([`Rng`]), summary statistics and ASCII
+//! tables.
+
 pub mod args;
 pub mod bench;
 pub mod json;

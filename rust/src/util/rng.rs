@@ -31,6 +31,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

@@ -71,14 +71,20 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 /// Summary of repeated measurements (the shape criterion reports).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Arithmetic mean of the samples.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Sample count.
     pub n: usize,
 }
 
 impl Summary {
+    /// Summarize a series of measurements.
     pub fn of(xs: &[f64]) -> Summary {
         Summary {
             mean: mean(xs),

@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -17,6 +18,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -27,10 +29,12 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// True when no rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render title, header rule and aligned rows into one string.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -62,6 +66,7 @@ impl Table {
         out
     }
 
+    /// Print [`Table::render`] to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -1,0 +1,361 @@
+//! Ingestion tests: edge-list parsing and parallel CSR assembly edge
+//! cases (typed errors, never panics), `.cgr` round-trip bit-exactness,
+//! and the PR 5 acceptance path — training on an ingested on-disk graph
+//! is bit-identical to training on the equivalent in-memory graph.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::{load_file_dataset, synthetic_node_data, DatasetSource};
+use capgnn::graph::io::{
+    build_csr, load_cgr, load_cgr_bytes, read_edge_list, save_cgr, write_edge_list, IoError,
+};
+use capgnn::graph::{Graph, NodeData};
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{Session, TrainConfig};
+use capgnn::util::Rng;
+use std::path::PathBuf;
+
+/// Unique temp path per test (the suite may run tests concurrently).
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("capgnn-ingest-{}-{tag}", std::process::id()))
+}
+
+fn rand_edges(rng: &mut Rng, n: usize, m: usize) -> Vec<(u32, u32)> {
+    (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect()
+}
+
+// ---------------------------------------------------------------- errors
+
+#[test]
+fn empty_file_is_a_typed_error() {
+    assert!(matches!(read_edge_list("".as_bytes(), None), Err(IoError::Empty)));
+    // Comments and blank lines only: still no edges.
+    assert!(matches!(
+        read_edge_list("# nothing\n\n% here\n".as_bytes(), None),
+        Err(IoError::Empty)
+    ));
+    // But an empty list with a declared vertex count is a valid
+    // all-isolated graph.
+    let list = read_edge_list("".as_bytes(), Some(5)).unwrap();
+    let (g, st) = build_csr(list.n, &list.edges, 2).unwrap();
+    assert_eq!(g.n(), 5);
+    assert_eq!(g.m(), 0);
+    assert_eq!(st.isolated, 5);
+}
+
+#[test]
+fn out_of_range_ids_are_typed_errors() {
+    // At parse time, with the offending line.
+    let err = read_edge_list("0 1\n1 7\n".as_bytes(), Some(4)).unwrap_err();
+    match err {
+        IoError::VertexOutOfRange { vertex, n, line } => {
+            assert_eq!(vertex, 7);
+            assert_eq!(n, 4);
+            assert_eq!(line, Some(2));
+        }
+        other => panic!("expected VertexOutOfRange, got {other:?}"),
+    }
+    // At build time, without a line.
+    let err = build_csr(3, &[(0, 1), (2, 9)], 1).unwrap_err();
+    assert!(matches!(err, IoError::VertexOutOfRange { vertex: 9, n: 3, line: None }));
+}
+
+#[test]
+fn truncated_and_corrupt_cgr_are_typed_errors() {
+    let mut rng = Rng::new(3);
+    let g = Graph::random(30, 120, &mut rng);
+    let path = tmp("trunc.cgr");
+    save_cgr(&path, &g, None).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Truncate at various depths: header, offsets, indices.
+    for cut in [0usize, 3, 10, 24, 40, bytes.len() - 1] {
+        let err = load_cgr_bytes(&bytes[..cut]).unwrap_err();
+        assert!(
+            matches!(err, IoError::Truncated { .. }),
+            "cut at {cut}: expected Truncated, got {err:?}"
+        );
+    }
+
+    // Wrong magic.
+    let mut bad = bytes.clone();
+    bad[0] = b'X';
+    assert!(matches!(load_cgr_bytes(&bad), Err(IoError::BadMagic { .. })));
+
+    // Future version.
+    let mut bad = bytes.clone();
+    bad[4] = 0xFF;
+    bad[5] = 0xFF;
+    assert!(matches!(load_cgr_bytes(&bad), Err(IoError::UnsupportedVersion(0xFFFF))));
+
+    // Unknown flag bits.
+    let mut bad = bytes.clone();
+    bad[6] = 0xF0;
+    assert!(matches!(load_cgr_bytes(&bad), Err(IoError::Corrupt(_))));
+
+    // Trailing garbage.
+    let mut bad = bytes.clone();
+    bad.extend_from_slice(&[0, 1, 2]);
+    assert!(matches!(load_cgr_bytes(&bad), Err(IoError::Corrupt(_))));
+
+    // Non-monotone offsets (offsets start at byte 24; swap two rows).
+    let mut bad = bytes.clone();
+    bad[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+    let err = load_cgr_bytes(&bad).unwrap_err();
+    assert!(matches!(err, IoError::Corrupt(_)), "got {err:?}");
+
+    // A missing file is an Io error, not a panic.
+    assert!(matches!(load_cgr(&tmp("never-written.cgr")), Err(IoError::Io(_))));
+}
+
+/// A structurally plausible file that breaks the crate-wide CSR
+/// invariants (here: a one-directional edge) is rejected at load — it
+/// must not flow into training.
+#[test]
+fn asymmetric_cgr_is_rejected() {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"CGRF");
+    bytes.extend_from_slice(&1u16.to_le_bytes()); // version
+    bytes.extend_from_slice(&0u16.to_le_bytes()); // flags
+    bytes.extend_from_slice(&2u64.to_le_bytes()); // n
+    bytes.extend_from_slice(&1u64.to_le_bytes()); // arcs
+    for o in [0u64, 1, 1] {
+        bytes.extend_from_slice(&o.to_le_bytes()); // offsets
+    }
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // lone arc 0→1
+    assert!(matches!(load_cgr_bytes(&bytes), Err(IoError::Corrupt(_))));
+}
+
+/// Zero-width features in the node-data section are corrupt, not a
+/// degenerate-but-trainable dataset.
+#[test]
+fn zero_f_dim_node_data_is_rejected() {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"CGRF");
+    bytes.extend_from_slice(&1u16.to_le_bytes()); // version
+    bytes.extend_from_slice(&1u16.to_le_bytes()); // flags: node data
+    bytes.extend_from_slice(&1u64.to_le_bytes()); // n
+    bytes.extend_from_slice(&0u64.to_le_bytes()); // arcs
+    for o in [0u64, 0] {
+        bytes.extend_from_slice(&o.to_le_bytes()); // offsets
+    }
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // f_dim = 0
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // num_classes
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // label of vertex 0
+    bytes.push(0b001); // mask byte
+    assert!(matches!(load_cgr_bytes(&bytes), Err(IoError::Corrupt(_))));
+}
+
+// ------------------------------------------------------ CSR construction
+
+#[test]
+fn duplicates_self_loops_and_isolated_vertices() {
+    let text = "0 1\n1 0\n0 1\n2 2\n0 3\n";
+    let list = read_edge_list(text.as_bytes(), Some(6)).unwrap();
+    let (g, st) = build_csr(list.n, &list.edges, 3).unwrap();
+    assert_eq!(g.n(), 6);
+    assert_eq!(g.m(), 2); // {0,1} and {0,3}
+    assert_eq!(st.self_loops, 1);
+    assert_eq!(st.duplicates, 2);
+    // 2 (self-loop only), 4 and 5 (declared, never mentioned).
+    assert_eq!(st.isolated, 3);
+    assert_eq!(g.degree(5), 0);
+    g.check_invariants().unwrap();
+}
+
+/// The property the parallel build stands on: for any thread count the
+/// CSR is bit-identical to the single-threaded order, which in turn
+/// matches `Graph::from_edges`.
+#[test]
+fn parallel_build_matches_single_threaded() {
+    let mut rng = Rng::new(77);
+    for (n, m) in [(1usize, 8usize), (13, 40), (100, 450), (513, 2000)] {
+        let edges = rand_edges(&mut rng, n, m);
+        let (single, _) = build_csr(n, &edges, 1).unwrap();
+        let want = Graph::from_edges(n, &edges);
+        assert_eq!(single, want, "n={n} single-thread vs from_edges");
+        for threads in [2usize, 3, 4, 8] {
+            let (par, st) = build_csr(n, &edges, threads).unwrap();
+            assert_eq!(par, single, "n={n} threads={threads}");
+            let (_, st1) = build_csr(n, &edges, 1).unwrap();
+            assert_eq!(st, st1, "stats must not depend on threads");
+        }
+    }
+}
+
+// ----------------------------------------------------------- round-trips
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// ingest → save → load round-trips bit-exactly, across sizes and with
+/// and without a node-data section.
+#[test]
+fn cgr_roundtrip_is_bit_exact() {
+    let mut rng = Rng::new(9);
+    for (i, (n, m)) in [(1usize, 2usize), (37, 150), (256, 1500)].iter().enumerate() {
+        let edges = rand_edges(&mut rng, *n, *m);
+        let (g, _) = build_csr(*n, &edges, 2).unwrap();
+        let data = synthetic_node_data(&g, 4, 8, 5);
+        let path = tmp(&format!("rt{i}.cgr"));
+
+        // Graph only.
+        save_cgr(&path, &g, None).unwrap();
+        let back = load_cgr(&path).unwrap();
+        assert_eq!(back.graph, g);
+        assert!(back.data.is_none());
+
+        // Graph + node data.
+        save_cgr(&path, &g, Some(&data)).unwrap();
+        let back = load_cgr(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.graph, g);
+        let d = back.data.expect("node data section");
+        assert!(bits_eq(&d.features, &data.features), "feature bits must round-trip");
+        assert_eq!(d.f_dim, data.f_dim);
+        assert_eq!(d.labels, data.labels);
+        assert_eq!(d.num_classes, data.num_classes);
+        assert_eq!(d.train_mask, data.train_mask);
+        assert_eq!(d.val_mask, data.val_mask);
+        assert_eq!(d.test_mask, data.test_mask);
+    }
+}
+
+/// Text edge list → `build_csr` → `.cgr` → text again is the identity on
+/// the graph.
+#[test]
+fn edge_list_roundtrips_through_cgr() {
+    let mut rng = Rng::new(21);
+    let g = Graph::random(80, 300, &mut rng);
+    // Dump the undirected edges (u < v once each).
+    let mut edges = Vec::new();
+    for u in 0..g.n() as u32 {
+        for &v in g.nbrs(u) {
+            if u < v {
+                edges.push((u, v));
+            }
+        }
+    }
+    let mut text = Vec::new();
+    write_edge_list(&mut text, &edges).unwrap();
+    let list = read_edge_list(text.as_slice(), Some(g.n())).unwrap();
+    let (back, st) = build_csr(list.n, &list.edges, 4).unwrap();
+    assert_eq!(back, g);
+    assert_eq!(st.duplicates, 0);
+    assert_eq!(st.self_loops, 0);
+}
+
+// ------------------------------------------- end-to-end training parity
+
+/// The acceptance criterion: `capgnn ingest` + `train --dataset file:…`
+/// produces losses bit-identical to training on the equivalent in-memory
+/// graph. This is that path at the library level: same graph, same
+/// (deterministic) node data, one side routed through the `.cgr` file.
+#[test]
+fn file_dataset_trains_bit_identical_to_in_memory() {
+    let mut rng = Rng::new(55);
+    let n = 120;
+    let edges = rand_edges(&mut rng, n, 600);
+    let (graph, _) = build_csr(n, &edges, 2).unwrap();
+
+    // In-memory side: the equivalent Graph + deterministic node data.
+    let seed = 42u64;
+    let in_mem = capgnn::graph::Dataset {
+        name: "inmem",
+        label: "Ty",
+        graph: graph.clone(),
+        data: synthetic_node_data(&graph, 4, 16, seed),
+    };
+
+    // On-disk side: graph-only .cgr; loading synthesizes the same rows.
+    let path = tmp("e2e.cgr");
+    save_cgr(&path, &graph, None).unwrap();
+    let from_file = load_file_dataset(&path, seed).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(from_file.graph, in_mem.graph);
+    assert!(bits_eq(&from_file.data.features, &in_mem.data.features));
+
+    let cfg = TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(5) };
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let mut b1 = NativeBackend::new();
+    let r_mem = Session::train(&in_mem, &cluster, &mut b1, &cfg).unwrap();
+    let mut b2 = NativeBackend::new();
+    let r_file = Session::train(&from_file, &cluster, &mut b2, &cfg).unwrap();
+
+    assert_eq!(r_mem.losses, r_file.losses, "losses must be bit-identical");
+    assert_eq!(r_mem.val_accs, r_file.val_accs);
+    assert_eq!(r_mem.test_acc, r_file.test_acc);
+    assert_eq!(r_mem.bytes_moved, r_file.bytes_moved);
+}
+
+/// A `.cgr` with an embedded node-data section trains bit-identically to
+/// the in-memory dataset it was saved from (the self-contained variant).
+#[test]
+fn embedded_node_data_trains_bit_identical() {
+    let ds = capgnn::graph::datasets::tiny(42);
+    let path = tmp("tiny.cgr");
+    save_cgr(&path, &ds.graph, Some(&ds.data)).unwrap();
+    let from_file = load_file_dataset(&path, 999).unwrap(); // seed unused: data embedded
+    std::fs::remove_file(&path).ok();
+
+    let cfg = TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(4) };
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 3);
+    let mut b1 = NativeBackend::new();
+    let r_a = Session::train(&ds, &cluster, &mut b1, &cfg).unwrap();
+    let mut b2 = NativeBackend::new();
+    let r_b = Session::train(&from_file, &cluster, &mut b2, &cfg).unwrap();
+    assert_eq!(r_a.losses, r_b.losses);
+    assert_eq!(r_a.val_accs, r_b.val_accs);
+}
+
+/// `--dataset file:<path>` resolves through the registry and the full
+/// `config::run_spec` path.
+#[test]
+fn run_spec_accepts_file_sources() {
+    let mut rng = Rng::new(13);
+    let g = Graph::random(64, 256, &mut rng);
+    let path = tmp("spec.cgr");
+    save_cgr(&path, &g, None).unwrap();
+
+    let arg = format!("file:{}", path.display());
+    let source = DatasetSource::parse(&arg).unwrap();
+    let ds = source.build(42, 1.0).unwrap();
+    assert_eq!(ds.graph, g);
+    assert_eq!(ds.label, "Fi");
+
+    let args = capgnn::util::Args::parse(
+        ["--dataset", arg.as_str(), "--parts", "2", "--epochs", "3"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    let spec = capgnn::config::run_spec(&args).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(spec.dataset.graph, g);
+    assert!(matches!(spec.source, DatasetSource::File(_)));
+    assert_eq!(spec.gpus.len(), 2);
+}
+
+/// NodeData invariants survive the mask byte-packing (a vertex in no
+/// split and overlapping splits both round-trip).
+#[test]
+fn mask_packing_handles_partial_splits() {
+    let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+    let data = NodeData {
+        features: vec![0.5; 3 * 2],
+        f_dim: 2,
+        labels: vec![0, 1, 0],
+        num_classes: 2,
+        train_mask: vec![true, false, false],
+        val_mask: vec![false, false, false],
+        test_mask: vec![false, false, true], // vertex 1 is in no split
+    };
+    let path = tmp("masks.cgr");
+    save_cgr(&path, &g, Some(&data)).unwrap();
+    let back = load_cgr(&path).unwrap().data.unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.train_mask, data.train_mask);
+    assert_eq!(back.val_mask, data.val_mask);
+    assert_eq!(back.test_mask, data.test_mask);
+}
