@@ -1,0 +1,186 @@
+//! PR6 bench / CI gate: mini-batch neighbor-sampled training vs the
+//! full-batch trainer.
+//!
+//! For three graph sizes × two batch sizes (2 workers, 2 layers, fanout
+//! 8,4) it measures the sampled per-epoch wall time against the
+//! full-batch epoch on the same graph, and records the sampled path's
+//! memory story: peak resident subgraph size (vertices and bytes) and
+//! the per-epoch touched-vertex count.
+//!
+//! Writes `BENCH_PR6.json` to the repo root, then exits nonzero if
+//! - at the largest size with the smallest batch, the peak resident
+//!   block reaches the full graph (sampling must bound the working set
+//!   below |V|), or
+//! - the per-epoch touched-vertex metric is missing/out of range, or
+//! - two fresh same-seed sampled runs differ in any loss bit
+//!   (the determinism contract the tests assert, re-checked here on a
+//!   bench-scale graph).
+//!
+//! `BENCH_QUICK=1` shrinks the sizes for smoke runs.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::synthetic_node_data;
+use capgnn::graph::{Dataset, Graph};
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{SampledSession, Session, TrainConfig, TrainMode, TrainReport};
+use capgnn::util::bench;
+use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::Rng;
+
+/// Random graph (avg degree ≈ 8) with synthetic labeled features.
+fn make_dataset(n: usize, seed: u64) -> Dataset {
+    let m = n * 8;
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 8, 32, seed);
+    Dataset { name: "bench", label: "Bn", graph, data }
+}
+
+fn sampled_cfg(batch_size: usize) -> TrainConfig {
+    TrainConfig {
+        hidden: 32,
+        layers: 2,
+        lr: 0.05,
+        mode: TrainMode::Sampled,
+        batch_size,
+        fanout: vec![8, 4],
+        ..TrainConfig::capgnn(4)
+    }
+}
+
+fn full_cfg() -> TrainConfig {
+    TrainConfig { hidden: 32, layers: 2, lr: 0.05, ..TrainConfig::capgnn(4) }
+}
+
+/// Train `epochs` sampled epochs from scratch and return the report.
+fn run_sampled(ds: &Dataset, cl: &Cluster, batch_size: usize, epochs: usize) -> TrainReport {
+    let mut backend = NativeBackend::new();
+    let cfg = sampled_cfg(batch_size);
+    let mut session = SampledSession::build(ds, cl, &mut backend, &cfg).unwrap();
+    session.run_epochs(epochs).unwrap();
+    session.finish().unwrap()
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let sizes: &[usize] = if quick { &[1024, 2048, 4096] } else { &[8192, 16384, 32768] };
+    let batch_sizes: &[usize] = &[64, 256];
+    let reps = if quick { 1 } else { 2 };
+    let cl = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut gate_peak_ok = true;
+    let mut gate_touched_ok = true;
+    for &n in sizes {
+        let ds = make_dataset(n, 42);
+
+        // Full-batch reference epoch on the same graph (one config — the
+        // batch size does not exist there).
+        let mut backend = NativeBackend::new();
+        let cfg = full_cfg();
+        let mut full = Session::build(&ds, &cl, &mut backend, &cfg).unwrap();
+        let full_epoch = bench::measure(
+            || {
+                full.run_epoch().unwrap();
+            },
+            0,
+            reps,
+        );
+
+        for &bs in batch_sizes {
+            let mut backend = NativeBackend::new();
+            let cfg = sampled_cfg(bs);
+            let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+            let sampled_epoch = bench::measure(
+                || {
+                    session.run_epoch().unwrap();
+                },
+                0,
+                reps,
+            );
+            let r = session.finish().unwrap();
+
+            let touched_mean = r.epoch_touched.iter().sum::<u64>() as f64
+                / r.epoch_touched.len().max(1) as f64;
+            // The sampled working set must stay below the full graph at
+            // the largest size with the smallest batch — otherwise
+            // mini-batching buys no memory headroom.
+            if n == *sizes.last().unwrap() && bs == batch_sizes[0] && r.peak_block_vertices >= n {
+                gate_peak_ok = false;
+            }
+            if r.epoch_touched.is_empty()
+                || r.epoch_touched.iter().any(|&t| t == 0 || t > n as u64)
+            {
+                gate_touched_ok = false;
+            }
+
+            println!(
+                "n={n} bs={bs}: sampled epoch {:.4}s ({} batches, peak block {} vertices, \
+                 {:.2} MiB resident, touched/epoch {:.0} of {n}) vs full-batch {:.4}s",
+                sampled_epoch.mean,
+                r.batches_per_epoch,
+                r.peak_block_vertices,
+                r.peak_block_bytes as f64 / (1024.0 * 1024.0),
+                touched_mean,
+                full_epoch.mean,
+            );
+            entries.push(obj(vec![
+                ("n", num(n as f64)),
+                ("batch_size", num(bs as f64)),
+                ("sampled_epoch_s", num(sampled_epoch.mean)),
+                ("full_epoch_s", num(full_epoch.mean)),
+                ("batches_per_epoch", num(r.batches_per_epoch as f64)),
+                ("peak_block_vertices", num(r.peak_block_vertices as f64)),
+                ("peak_block_bytes", num(r.peak_block_bytes as f64)),
+                ("epoch_touched_mean", num(touched_mean)),
+                ("sampled_vertices_total", num(r.sampled_vertices as f64)),
+                ("cache_hit_rate", num(r.cache.hit_rate())),
+            ]));
+        }
+    }
+
+    // Determinism gate: two fresh same-seed sampled runs on the smallest
+    // bench graph must agree on every loss bit.
+    let ds = make_dataset(sizes[0], 42);
+    let a = run_sampled(&ds, &cl, batch_sizes[0], 2);
+    let b = run_sampled(&ds, &cl, batch_sizes[0], 2);
+    let stable = a.losses == b.losses && a.val_accs == b.val_accs;
+    if !stable {
+        eprintln!(
+            "DETERMINISM BREACH: same-seed sampled runs differ ({:?} vs {:?})",
+            a.losses, b.losses
+        );
+    }
+
+    let doc = obj(vec![
+        ("bench", s("pr6_sample")),
+        ("quick", Json::Bool(quick)),
+        ("results", arr(entries)),
+        ("peak_block_below_full_graph", Json::Bool(gate_peak_ok)),
+        ("epoch_touched_in_range", Json::Bool(gate_touched_ok)),
+        ("bit_stable_across_runs", Json::Bool(stable)),
+    ]);
+    bench::write_json_file("BENCH_PR6.json", &doc).expect("write BENCH_PR6.json");
+    println!(
+        "wrote BENCH_PR6.json (peak-block gate {}, touched gate {}, bit-stable {})",
+        gate_peak_ok, gate_touched_ok, stable
+    );
+
+    if !gate_peak_ok {
+        eprintln!(
+            "SUBGRAPH GATE FAILED: peak resident block reached the full graph at the \
+             largest size with the smallest batch — sampling must bound the working set"
+        );
+        std::process::exit(1);
+    }
+    if !gate_touched_ok {
+        eprintln!("TOUCHED GATE FAILED: per-epoch touched-vertex metric missing or out of range");
+        std::process::exit(1);
+    }
+    if !stable {
+        std::process::exit(1);
+    }
+}

@@ -152,6 +152,36 @@ pub struct FillDirective {
     pub refresh: bool,
 }
 
+/// A pending cache fill left behind by [`ExchangeEngine::plan_gather`]:
+/// the metadata side already happened (`fill_pending`); the caller
+/// completes it with the authoritative row content.
+#[derive(Clone, Copy, Debug)]
+pub struct GatherFill {
+    /// Cache key ((layer, vertex) encoded).
+    pub key: u64,
+    /// Global id of the vertex.
+    pub vertex: u32,
+}
+
+/// Result of planning one single-requester gather
+/// ([`ExchangeEngine::plan_gather`]): cache-served contents, deferred
+/// fills, and the round's simulated-time/byte charges.
+#[derive(Clone, Debug)]
+pub struct GatherPlan {
+    /// Per request, in request order: `Some(row)` when the cache served
+    /// it, `None` when the owner ships it fresh (charged above).
+    pub rows: Vec<Option<Vec<f32>>>,
+    /// Pending fills the caller must complete with authoritative rows.
+    pub fills: Vec<GatherFill>,
+    /// Per-worker simulated stage charges (requester pays
+    /// check/pick/receive; owners pay the D2H half of CPU-routed sends).
+    pub stages: Vec<StageTimes>,
+    /// Device bytes this gather moves.
+    pub bytes_moved: u64,
+    /// Device bytes cache hits saved.
+    pub bytes_saved: u64,
+}
+
 /// The decision half of one exchange round. Every cache consultation,
 /// byte count and simulated-time charge happens here — deterministically,
 /// in worker-index order — while row *contents* move afterwards: serially
@@ -503,6 +533,111 @@ impl<'a> ExchangeEngine<'a> {
         }
     }
 
+    /// Plan a single-requester gather of remote feature rows — the
+    /// sampled trainer's per-batch analogue of [`ExchangeEngine::plan_round`].
+    ///
+    /// `requests` lists `(vertex, owner)` pairs the requesting worker
+    /// needs but does not own, in ascending vertex order (one entry per
+    /// distinct vertex). Cache discipline, byte accounting and simulated
+    /// time charges match `plan_round`: hits stage the cached row and
+    /// save wire bytes, misses charge an owner→requester transfer (P2P,
+    /// or D2H+H2D through the CPU; `transfer_time` applies the
+    /// cross-machine link multiplier on cluster topologies), global hits
+    /// charge one H2D batch, and every miss leaves a pending fill the
+    /// caller must complete via
+    /// [`TwoLevelCache::complete_fill`] before the next gather.
+    ///
+    /// Unlike `plan_round` there is no refresh path: sampled gathers move
+    /// layer-0 features, which are immutable, so cached rows never go
+    /// stale.
+    pub fn plan_gather(
+        &self,
+        cache: &mut TwoLevelCache,
+        requester: usize,
+        requests: &[(u32, usize)],
+        p: ExchangeParams,
+    ) -> GatherPlan {
+        let nparts = self.gpus.len();
+        let mut rows: Vec<Option<Vec<f32>>> = Vec::with_capacity(requests.len());
+        let mut fills: Vec<GatherFill> = Vec::new();
+        let mut stages = vec![StageTimes::default(); nparts];
+        let mut bytes_moved = 0u64;
+        let mut bytes_saved = 0u64;
+        let row_bytes = p.bytes_per_row;
+        let mut pair_rows: Vec<u64> = vec![0; nparts]; // per owner → requester
+        let mut h2d_rows = 0u64;
+
+        for &(v, owner) in requests {
+            let key = key_of(p.layer, v);
+            if !p.use_cache {
+                rows.push(None);
+                pair_rows[owner] += 1;
+                bytes_moved += row_bytes;
+                continue;
+            }
+            stages[requester].check_cache += self.costs.check_per_lookup;
+            match cache.lookup(requester, key) {
+                Hit::Local | Hit::Global if cache.get_row(requester, key).is_none() => {
+                    // Defensive: a hit whose content is still pending
+                    // (shouldn't occur — fills complete per batch) is
+                    // treated as a fetch, without doubling the fill.
+                    rows.push(None);
+                    pair_rows[owner] += 1;
+                    bytes_moved += row_bytes;
+                }
+                hit @ (Hit::Local | Hit::Global) => {
+                    stages[requester].pick_cache += self.costs.pick_per_row;
+                    bytes_saved += row_bytes;
+                    if matches!(hit, Hit::Global) {
+                        h2d_rows += 1;
+                    }
+                    rows.push(cache.get_row(requester, key).map(|r| r.to_vec()));
+                }
+                Hit::Miss => {
+                    rows.push(None);
+                    fills.push(GatherFill { key, vertex: v });
+                    cache.fill_pending(requester, key);
+                    pair_rows[owner] += 1;
+                    bytes_moved += row_bytes;
+                }
+            }
+        }
+
+        let active_pairs =
+            pair_rows.iter().filter(|&&r| r > 0).count() + usize::from(h2d_rows > 0);
+        for (src, &r) in pair_rows.iter().enumerate() {
+            if r == 0 {
+                continue;
+            }
+            let t = (self.topology.transfer_time(
+                self.gpus,
+                src,
+                requester,
+                r * row_bytes,
+                active_pairs,
+            ) + self.costs.per_transfer_latency)
+                * p.comm_multiplier;
+            stages[requester].communication += t;
+            if !self.topology.p2p[src][requester] {
+                stages[src].communication += self
+                    .topology
+                    .d2h_time(self.gpus, src, r * row_bytes, active_pairs)
+                    * 0.5
+                    * p.comm_multiplier;
+            }
+        }
+        if h2d_rows > 0 {
+            let t = (self
+                .topology
+                .h2d_time(self.gpus, requester, h2d_rows * row_bytes, active_pairs)
+                + self.costs.per_transfer_latency)
+                * p.comm_multiplier;
+            stages[requester].communication += t;
+        }
+
+        GatherPlan { rows, fills, stages, bytes_moved, bytes_saved }
+    }
+
     /// Run one halo-exchange round in place (plan + serial data movement).
     ///
     /// `rows(v)` returns the authoritative row of global vertex `v` at this
@@ -756,6 +891,41 @@ mod tests {
         assert_eq!(r1.cross_bytes, 0);
         assert_eq!(r1.cross_bytes_naive, 0);
         assert_eq!(r1.bytes_moved, r.bytes_moved);
+    }
+
+    #[test]
+    fn plan_gather_miss_then_hit_with_exact_bytes() {
+        let (_, gpus, topo) = setup();
+        let eng = ExchangeEngine::new(&gpus, &topo);
+        let mut cache = TwoLevelCache::new(PolicyKind::Lru, &[4; 4], 16);
+        let f = 16;
+        let p = ExchangeParams::new(0, 0, f);
+        let requests = vec![(10u32, 1usize), (11, 1), (12, 2)];
+
+        let g1 = eng.plan_gather(&mut cache, 0, &requests, p);
+        assert!(g1.rows.iter().all(|r| r.is_none()), "cold cache: all fetched");
+        assert_eq!(g1.fills.len(), 3);
+        assert_eq!(g1.bytes_moved, 3 * f as u64 * 4);
+        assert_eq!(g1.bytes_saved, 0);
+        assert!(g1.stages[0].communication > 0.0, "requester waits for rows");
+        for fl in &g1.fills {
+            cache.complete_fill(fl.key, &row_of(fl.vertex, f, 0.5), 0);
+        }
+
+        let g2 = eng.plan_gather(&mut cache, 0, &requests, p);
+        assert_eq!(g2.bytes_moved, 0);
+        assert_eq!(g2.bytes_saved, 3 * f as u64 * 4);
+        assert!(g2.fills.is_empty());
+        for (i, r) in g2.rows.iter().enumerate() {
+            assert_eq!(r.as_ref().expect("cached")[0], requests[i].0 as f32 + 0.5);
+        }
+
+        // Vanilla (cache off) always charges and never stages.
+        let mut pv = p;
+        pv.use_cache = false;
+        let g3 = eng.plan_gather(&mut cache, 0, &requests, pv);
+        assert_eq!(g3.bytes_moved, 3 * f as u64 * 4);
+        assert!(g3.rows.iter().all(|r| r.is_none()));
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod transport;
 
 pub use exchange::{
     CommCosts, CrossSend, ExchangeEngine, ExchangeParams, ExchangeReport, FillDirective,
-    RoundPlan, SendDirective,
+    GatherFill, GatherPlan, RoundPlan, SendDirective,
 };
 pub use pipeline::combine_epoch;
 pub use queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};

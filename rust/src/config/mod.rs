@@ -9,7 +9,8 @@ use crate::graph::{Dataset, DatasetSource};
 use crate::model::ModelKind;
 use crate::partition::Method;
 use crate::runtime::BackendKind;
-use crate::train::{CapacityMode, ExecMode, TrainConfig};
+use crate::sample::Fanout;
+use crate::train::{CapacityMode, ExecMode, TrainConfig, TrainMode};
 use crate::util::{Args, Rng};
 use anyhow::{anyhow, Result};
 
@@ -36,7 +37,7 @@ pub struct RunSpec {
 ///  --model gcn --epochs 200 --policy jaca --method metis
 ///  --backend xla|native --scale 1.0 --seed 42 --local-cap N
 ///  --global-cap N --no-pipe --refresh 8 --lr 0.02 --hidden 64
-///  --layers 3`
+///  --layers 3 --mode full|sampled --batch-size 64 --fanout 10,5`
 ///
 /// `--dataset` goes through the [`DatasetSource`] registry, so every
 /// consumer of the spec accepts a synthetic twin and an ingested on-disk
@@ -113,6 +114,52 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
             }
         }
     };
+    // `--mode sampled` switches to the mini-batch neighbor-sampled
+    // trainer; `--batch-size`/`--fanout` only exist there, so in
+    // full-batch mode they are rejected rather than silently ignored.
+    train.mode = match args.get("mode") {
+        None => TrainMode::FullBatch,
+        Some(m) => TrainMode::from_name(m)
+            .ok_or_else(|| anyhow!("unknown --mode {m} (use 'full' or 'sampled')"))?,
+    };
+    match train.mode {
+        TrainMode::FullBatch => {
+            if args.get("batch-size").is_some() {
+                return Err(anyhow!(
+                    "--batch-size only applies to sampled training; add --mode sampled"
+                ));
+            }
+            if args.get("fanout").is_some() {
+                return Err(anyhow!(
+                    "--fanout only applies to sampled training; add --mode sampled"
+                ));
+            }
+        }
+        TrainMode::Sampled => {
+            train.batch_size = match args.get("batch-size") {
+                None => 64,
+                Some(v) => v
+                    .parse()
+                    .ok()
+                    .filter(|&b| b >= 1)
+                    .ok_or_else(|| anyhow!("bad --batch-size {v} (want an integer >= 1)"))?,
+            };
+            train.fanout = match args.get("fanout") {
+                None => vec![10; train.layers],
+                Some(v) => {
+                    let f = Fanout::parse(v).map_err(|e| anyhow!("bad --fanout: {e}"))?;
+                    if f.0.len() != train.layers {
+                        return Err(anyhow!(
+                            "--fanout needs one entry per layer ({} layers), got {}",
+                            train.layers,
+                            f.0.len()
+                        ));
+                    }
+                    f.0
+                }
+            };
+        }
+    }
     if let (Some(l), Some(g)) = (args.get("local-cap"), args.get("global-cap")) {
         train.capacity = CapacityMode::Fixed {
             local: l.parse().map_err(|_| anyhow!("bad local-cap"))?,
@@ -189,6 +236,60 @@ mod tests {
         let one = run_spec(&args(&["--scale", "0.1", "--threads", "1"])).unwrap();
         assert_eq!(one.train.exec, ExecMode::Sequential);
         assert!(run_spec(&args(&["--scale", "0.1", "--threads", "many"])).is_err());
+    }
+
+    #[test]
+    fn mode_defaults_to_full_batch() {
+        let spec = run_spec(&args(&["--scale", "0.1"])).unwrap();
+        assert_eq!(spec.train.mode, TrainMode::FullBatch);
+        assert_eq!(spec.train.batch_size, 0);
+        assert!(spec.train.fanout.is_empty());
+    }
+
+    #[test]
+    fn sampled_mode_parses_batch_and_fanout() {
+        let spec = run_spec(&args(&[
+            "--scale", "0.1", "--mode", "sampled", "--batch-size", "32",
+            "--layers", "2", "--fanout", "10,5",
+        ]))
+        .unwrap();
+        assert_eq!(spec.train.mode, TrainMode::Sampled);
+        assert_eq!(spec.train.batch_size, 32);
+        assert_eq!(spec.train.fanout, vec![10, 5]);
+        // Defaults: batch size 64, fanout 10 per layer.
+        let d = run_spec(&args(&["--scale", "0.1", "--mode", "sampled"])).unwrap();
+        assert_eq!(d.train.batch_size, 64);
+        assert_eq!(d.train.fanout, vec![10; d.train.layers]);
+    }
+
+    #[test]
+    fn sampling_knobs_rejected_in_full_batch_mode() {
+        // Dead knobs error out instead of being silently ignored.
+        assert!(run_spec(&args(&["--scale", "0.1", "--batch-size", "32"])).is_err());
+        assert!(run_spec(&args(&["--scale", "0.1", "--fanout", "10,5"])).is_err());
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--mode", "full", "--batch-size", "32",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn sampled_mode_validates_values() {
+        assert!(run_spec(&args(&["--scale", "0.1", "--mode", "nope"])).is_err());
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--mode", "sampled", "--batch-size", "0",
+        ]))
+        .is_err());
+        // Fanout length must match --layers.
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--mode", "sampled", "--layers", "3", "--fanout", "10,5",
+        ]))
+        .is_err());
+        // Zero fanout entries are rejected.
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--mode", "sampled", "--layers", "2", "--fanout", "10,0",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -107,5 +107,6 @@ pub mod graph;
 pub mod model;
 pub mod partition;
 pub mod runtime;
+pub mod sample;
 pub mod train;
 pub mod util;

@@ -19,7 +19,7 @@ use capgnn::graph::SPECS;
 use capgnn::partition::halo::halo_stats;
 use capgnn::partition::rapa::{self, RapaConfig};
 use capgnn::runtime::Manifest;
-use capgnn::train::{EarlyStopping, Session};
+use capgnn::train::{EarlyStopping, SampledSession, Session, TrainMode};
 use capgnn::util::table::fmt_secs;
 use capgnn::util::{Args, Rng, Table};
 
@@ -64,6 +64,13 @@ COMMANDS:
               --no-pipe --no-cache --no-rapa --refresh 8
               --local-cap N --global-cap N --seed 42
               --early-stop PATIENCE
+              --mode full|sampled  'sampled' = mini-batch neighbor-sampled
+                                 training (losses bit-identical across
+                                 worker counts at a fixed seed)
+              --batch-size 64    seeds per mini-batch (sampled mode only)
+              --fanout 10,5      neighbors sampled per layer, one entry
+                                 per --layers (sampled mode only; see
+                                 `inspect` degree percentiles for guidance)
               --cluster 1M-4D|2M-2D|2M-4D   multi-machine preset
                                  (overrides --group/--parts; cross-machine
                                  rows travel as serialized frames with
@@ -87,8 +94,10 @@ COMMANDS:
               --with-node-data  embed deterministic synthetic features/
                                 labels/masks (--seed) so the file is
                                 self-contained]
-  inspect    <graph.cgr>        print header, sizes, degree stats and
-                                validate the CSR invariants
+  inspect    <graph.cgr>        print header, sizes, degree stats with
+                                out-degree percentiles (fanout guidance
+                                for sampled training) and validate the
+                                CSR invariants
   device     print the simulated GPU testbed (paper Table 1)
   expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
              fig21 fig22 tab7 [--full] tab8 tab9   [--quick]
@@ -131,7 +140,7 @@ fn cmd_train(args: &Args) -> i32 {
         },
     };
     println!(
-        "training {} on {} ({} vertices, {} edges) with {} GPUs on {} machine(s) [{}], backend={}, exec={}",
+        "training {} on {} ({} vertices, {} edges) with {} GPUs on {} machine(s) [{}], backend={}, exec={}, mode={}",
         spec.train.model.name(),
         spec.dataset.name,
         spec.dataset.graph.n(),
@@ -141,17 +150,48 @@ fn cmd_train(args: &Args) -> i32 {
         spec.system.name(),
         backend.name(),
         spec.train.exec.name(),
+        spec.train.mode.name(),
     );
     // Staged session: build once, then run epoch-by-epoch (with optional
     // early stopping on the validation curve).
     let run = (|| -> anyhow::Result<capgnn::train::TrainReport> {
+        let patience: Option<usize> = match args.get("early-stop") {
+            Some(v) => Some(
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("bad --early-stop value: {v}"))?,
+            ),
+            None => None,
+        };
+        if spec.train.mode == TrainMode::Sampled {
+            let mut session =
+                SampledSession::build(&spec.dataset, &cluster, backend.as_mut(), &spec.train)?;
+            // Inline patience loop with EarlyStopping's semantics (the
+            // observer trait is tied to the full-batch Session type).
+            let (mut best, mut since_best) = (f32::NEG_INFINITY, 0usize);
+            for _ in 0..spec.train.epochs {
+                let stats = session.run_epoch()?;
+                let Some(p) = patience else { continue };
+                if stats.val_acc > best + 1e-4 {
+                    best = stats.val_acc;
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best > p {
+                        println!(
+                            "early stop: no val-acc improvement in the last {} epochs (stopped after epoch {})",
+                            p + 1,
+                            stats.epoch + 1
+                        );
+                        break;
+                    }
+                }
+            }
+            return session.finish();
+        }
         let mut session =
             Session::build(&spec.dataset, &cluster, backend.as_mut(), &spec.train)?;
-        match args.get("early-stop") {
-            Some(v) => {
-                let patience: usize = v
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad --early-stop value: {v}"))?;
+        match patience {
+            Some(patience) => {
                 let mut stop = EarlyStopping::new(patience, 1e-4);
                 session.run(spec.train.epochs, &mut stop)?;
                 if let Some(e) = stop.stopped_at {
@@ -188,6 +228,19 @@ fn cmd_train(args: &Args) -> i32 {
                 r.bytes_saved,
                 r.wallclock
             );
+            if spec.train.mode == TrainMode::Sampled {
+                let epochs = r.epoch_touched.len().max(1) as f64;
+                let mean_touched = r.epoch_touched.iter().sum::<u64>() as f64 / epochs;
+                println!(
+                    "sampled: {} batches/epoch, {} block vertices total | peak block {} vertices ({:.2} MiB resident) | mean touched/epoch {:.0} of {}",
+                    r.batches_per_epoch,
+                    r.sampled_vertices,
+                    r.peak_block_vertices,
+                    r.peak_block_bytes as f64 / (1u64 << 20) as f64,
+                    mean_touched,
+                    spec.dataset.graph.n(),
+                );
+            }
             println!(
                 "measured: {:.3}s/epoch wall ({:.3}s total: plan {:.3}s + execute {:.3}s + reduce {:.3}s)",
                 r.mean_epoch_wall(),
@@ -373,11 +426,30 @@ fn cmd_inspect(args: &Args) -> i32 {
         g.m(),
         g.arcs()
     );
+    // Out-degree distribution (nearest-rank percentiles): a fanout at or
+    // above p90 keeps most vertices' neighborhoods intact under sampled
+    // training; one below p50 subsamples the typical vertex.
+    let mut degs: Vec<usize> = (0..g.n() as u32).map(|v| g.degree(v)).collect();
+    degs.sort_unstable();
+    let pct = |q: usize| -> usize {
+        if degs.is_empty() {
+            return 0;
+        }
+        degs[(q * (degs.len() - 1)) / 100]
+    };
     println!(
-        "degrees: avg {:.2}, max {} | isolated {}",
+        "degrees: avg {:.2}, min {} p50 {} p90 {} max {} | isolated {}",
         g.avg_degree(),
+        degs.first().copied().unwrap_or(0),
+        pct(50),
+        pct(90),
         g.max_degree(),
-        (0..g.n() as u32).filter(|&v| g.degree(v) == 0).count()
+        degs.iter().filter(|&&d| d == 0).count()
+    );
+    println!(
+        "fanout guidance (--mode sampled): --fanout {} keeps the typical vertex intact, --fanout {} nearly all",
+        pct(50).max(1),
+        pct(90).max(1)
     );
     match &file.data {
         Some(d) => {

@@ -1,0 +1,121 @@
+//! Seeded shuffling batch schedule over the train vertices.
+
+use crate::util::rng::Rng;
+
+/// Domain tag separating the epoch-shuffle stream from every other
+/// consumer of the user seed (partitioning starts from `Rng::new(seed)`).
+const SHUFFLE_TAG: u64 = 0x9E6C_5A0B_53C8_F0D1;
+/// Domain tag for the per-batch sampling stream.
+const BATCH_TAG: u64 = 0xB5C0_FBCF_EC4C_E50B;
+/// Weyl-style increment mixing the epoch into a stream key.
+const EPOCH_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+/// Multiplier mixing the batch index into a stream key.
+const INDEX_MIX: u64 = 0xA24B_AED4_963E_E407;
+
+/// The RNG that shuffles the train-vertex order for one epoch. Keyed by
+/// `(seed, epoch)` only, so the schedule is invariant to worker count.
+pub fn epoch_rng(seed: u64, epoch: u64) -> Rng {
+    Rng::new(seed ^ SHUFFLE_TAG ^ epoch.wrapping_mul(EPOCH_MIX))
+}
+
+/// The RNG that drives neighbor sampling for one batch. Keyed by
+/// `(seed, epoch, batch)`, so block extraction is independent of which
+/// worker or thread performs it.
+pub fn batch_rng(seed: u64, epoch: u64, batch: u64) -> Rng {
+    Rng::new(
+        seed ^ BATCH_TAG
+            ^ epoch.wrapping_mul(EPOCH_MIX)
+            ^ batch.wrapping_add(1).wrapping_mul(INDEX_MIX),
+    )
+}
+
+/// One epoch's shuffled train order, chunked into mini-batches.
+///
+/// The shuffle covers every train vertex exactly once per epoch; the last
+/// batch is partial when the train-set size is not a multiple of the batch
+/// size, and a batch size larger than the train set yields one batch.
+#[derive(Clone, Debug)]
+pub struct BatchSchedule {
+    order: Vec<u32>,
+    batch_size: usize,
+}
+
+impl BatchSchedule {
+    /// Shuffle `train_ids` with [`epoch_rng`] and chunk by `batch_size`.
+    pub fn new(train_ids: &[u32], batch_size: usize, seed: u64, epoch: u64) -> BatchSchedule {
+        assert!(batch_size > 0, "batch_size must be >= 1");
+        let mut order = train_ids.to_vec();
+        epoch_rng(seed, epoch).shuffle(&mut order);
+        BatchSchedule { order, batch_size }
+    }
+
+    /// Number of batches this epoch (⌈|train| / batch_size⌉).
+    pub fn n_batches(&self) -> usize {
+        self.order.len().div_ceil(self.batch_size)
+    }
+
+    /// Seed vertices of batch `b` (global ids, shuffled order).
+    pub fn batch(&self, b: usize) -> &[u32] {
+        let lo = b * self.batch_size;
+        let hi = (lo + self.batch_size).min(self.order.len());
+        &self.order[lo..hi]
+    }
+
+    /// Total train vertices covered by the schedule.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    /// True when there are no train vertices at all.
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_seed_once_with_partial_tail() {
+        let ids: Vec<u32> = (0..10).collect();
+        let s = BatchSchedule::new(&ids, 4, 7, 0);
+        assert_eq!(s.n_batches(), 3);
+        assert_eq!(s.batch(0).len(), 4);
+        assert_eq!(s.batch(1).len(), 4);
+        assert_eq!(s.batch(2).len(), 2);
+        let mut all: Vec<u32> = (0..3).flat_map(|b| s.batch(b).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, ids);
+    }
+
+    #[test]
+    fn shuffle_varies_by_epoch_but_not_by_call() {
+        let ids: Vec<u32> = (0..64).collect();
+        let a = BatchSchedule::new(&ids, 16, 42, 0);
+        let b = BatchSchedule::new(&ids, 16, 42, 0);
+        let c = BatchSchedule::new(&ids, 16, 42, 1);
+        assert_eq!(a.order, b.order);
+        assert_ne!(a.order, c.order);
+    }
+
+    #[test]
+    fn oversized_batch_is_single() {
+        let ids: Vec<u32> = (0..5).collect();
+        let s = BatchSchedule::new(&ids, 1000, 1, 3);
+        assert_eq!(s.n_batches(), 1);
+        assert_eq!(s.batch(0).len(), 5);
+    }
+
+    #[test]
+    fn rng_streams_are_distinct() {
+        // epoch/batch/user streams must diverge even at epoch 0.
+        let mut a = epoch_rng(42, 0);
+        let mut b = batch_rng(42, 0, 0);
+        let mut c = Rng::new(42);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+        assert_ne!(y, z);
+    }
+}

@@ -1,0 +1,246 @@
+//! Fanout neighbor sampling: per-batch subgraph ("block") extraction.
+
+use crate::graph::{Graph, SparseAdj};
+use crate::model::ModelKind;
+use crate::util::rng::Rng;
+
+/// Per-depth neighbor fanout, e.g. `--fanout 10,5`: each seed samples up
+/// to 10 neighbors, each of those samples up to 5. One entry per GNN
+/// layer; [`Fanout::full`] takes every neighbor at every depth (used for
+/// full-neighborhood evaluation, which consumes no RNG).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fanout(pub Vec<usize>);
+
+impl Fanout {
+    /// Parse a comma-separated list like `"10,5"`. Every entry must be a
+    /// positive integer.
+    pub fn parse(s: &str) -> Result<Fanout, String> {
+        let mut out = Vec::new();
+        for tok in s.split(',') {
+            match tok.trim().parse::<usize>() {
+                Ok(k) if k > 0 => out.push(k),
+                _ => return Err(format!("bad fanout entry '{tok}' (want positive integers)")),
+            }
+        }
+        Ok(Fanout(out))
+    }
+
+    /// Full-neighborhood fanout for `layers` depths (never samples, so
+    /// extraction with it consumes no RNG).
+    pub fn full(layers: usize) -> Fanout {
+        Fanout(vec![usize::MAX; layers])
+    }
+}
+
+impl std::fmt::Display for Fanout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, k) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            if *k == usize::MAX {
+                write!(f, "full")?;
+            } else {
+                write!(f, "{k}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One mini-batch's materialized subgraph.
+///
+/// The block is the union of the seeds and their sampled multi-hop
+/// neighborhood, with a single propagation operator applied at every
+/// layer (GraphSAINT-style union block, rather than per-layer message
+/// flow graphs) — so the existing `Backend` SpMM kernels run on it
+/// unchanged. Rows are indexed by block-local id; `vertices` maps local
+/// to global id and is sorted ascending, which fixes the SpMM
+/// accumulation order independently of partition shape.
+#[derive(Clone, Debug)]
+pub struct SampledBlock {
+    /// Sorted global ids of every block vertex (local id = position).
+    pub vertices: Vec<u32>,
+    /// Block-local rows of the seed vertices (loss is masked to these).
+    pub seed_rows: Vec<usize>,
+    /// Entries in the block operator (sampled arcs + GCN self-loops).
+    pub arcs: usize,
+    /// Block propagation operator, `n×n` CSR with `n = vertices.len()`.
+    pub adj: SparseAdj,
+}
+
+impl SampledBlock {
+    /// Block size in vertices.
+    pub fn n(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// Block-local row of global vertex `v`, if present.
+    pub fn local_of(&self, v: u32) -> Option<usize> {
+        self.vertices.binary_search(&v).ok()
+    }
+}
+
+/// Extract the sampled block for one batch of seed vertices.
+///
+/// Frontier expansion: depth `d` expands every vertex first reached at
+/// depth `d` (seeds are depth 0), sampling up to `fanout.0[d]` of its
+/// neighbors. Each vertex is expanded exactly once. Determinism: the
+/// frontier is iterated in ascending global id, and a vertex whose degree
+/// is at or under the fanout takes all neighbors without touching `rng`,
+/// so the draw sequence is a pure function of `(graph, seeds, fanout)`
+/// and the RNG key.
+///
+/// Operator values use *global* degrees, matching the full-batch session:
+/// GCN rows get a self-loop `1/(deg+1)` and arcs `1/√((deg_v+1)(deg_u+1))`;
+/// GraphSAGE rows average their sampled neighbors (`1/|sampled|`, no
+/// self-loop — zero-degree rows aggregate to zero and lean on the self
+/// weight matrix).
+pub fn extract_block(
+    g: &Graph,
+    seeds: &[u32],
+    fanout: &Fanout,
+    kind: ModelKind,
+    rng: &mut Rng,
+) -> SampledBlock {
+    let mut seed_sorted: Vec<u32> = seeds.to_vec();
+    seed_sorted.sort_unstable();
+    seed_sorted.dedup();
+
+    let mut visited: std::collections::HashSet<u32> = seed_sorted.iter().copied().collect();
+    let mut frontier = seed_sorted.clone();
+    // Directed arcs (dst, src): dst aggregates from the sampled src.
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+
+    for &k in &fanout.0 {
+        let mut next: Vec<u32> = Vec::new();
+        for &v in &frontier {
+            let nbrs = g.nbrs(v);
+            if nbrs.is_empty() {
+                continue;
+            }
+            if nbrs.len() <= k {
+                for &u in nbrs {
+                    edges.push((v, u));
+                    if visited.insert(u) {
+                        next.push(u);
+                    }
+                }
+            } else {
+                let mut idx = rng.sample_indices(nbrs.len(), k);
+                idx.sort_unstable();
+                for i in idx {
+                    let u = nbrs[i];
+                    edges.push((v, u));
+                    if visited.insert(u) {
+                        next.push(u);
+                    }
+                }
+            }
+        }
+        next.sort_unstable();
+        frontier = next;
+    }
+
+    let mut vertices: Vec<u32> = visited.into_iter().collect();
+    vertices.sort_unstable();
+    let local = |v: u32| vertices.binary_search(&v).unwrap() as u32;
+    let seed_rows: Vec<usize> = seed_sorted.iter().map(|&v| local(v) as usize).collect();
+
+    let mut entries: Vec<(u32, u32, f32)> = Vec::with_capacity(edges.len() + vertices.len());
+    match kind {
+        ModelKind::Gcn => {
+            for (i, &v) in vertices.iter().enumerate() {
+                let d = g.degree(v) as f32 + 1.0;
+                entries.push((i as u32, i as u32, 1.0 / d));
+            }
+            for &(v, u) in &edges {
+                let dv = g.degree(v) as f32 + 1.0;
+                let du = g.degree(u) as f32 + 1.0;
+                entries.push((local(v), local(u), 1.0 / (dv * du).sqrt()));
+            }
+        }
+        ModelKind::Sage => {
+            let mut cnt = vec![0u32; vertices.len()];
+            for &(v, _) in &edges {
+                cnt[local(v) as usize] += 1;
+            }
+            for &(v, u) in &edges {
+                entries.push((local(v), local(u), 1.0 / cnt[local(v) as usize] as f32));
+            }
+        }
+    }
+
+    let n = vertices.len();
+    let arcs = entries.len();
+    SampledBlock { vertices, seed_rows, arcs, adj: SparseAdj::from_entries(n, entries) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn fanout_parse_and_display() {
+        assert_eq!(Fanout::parse("10,5").unwrap(), Fanout(vec![10, 5]));
+        assert!(Fanout::parse("10,0").is_err());
+        assert!(Fanout::parse("a,b").is_err());
+        assert_eq!(Fanout(vec![10, 5]).to_string(), "10,5");
+        assert_eq!(Fanout::full(2).to_string(), "full,full");
+    }
+
+    #[test]
+    fn full_fanout_consumes_no_rng() {
+        let g = path_graph(8);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999);
+        let a = extract_block(&g, &[3], &Fanout::full(2), ModelKind::Gcn, &mut r1);
+        let b = extract_block(&g, &[3], &Fanout::full(2), ModelKind::Gcn, &mut r2);
+        assert_eq!(a.vertices, b.vertices);
+        assert_eq!(a.arcs, b.arcs);
+        // 2-hop neighborhood of vertex 3 on a path: {1,2,3,4,5}.
+        assert_eq!(a.vertices, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn sampling_is_a_function_of_the_rng_key() {
+        // Star graph: center 0 with 32 leaves, fanout 4 → real sampling.
+        let edges: Vec<(u32, u32)> = (1..=32).map(|i| (0u32, i)).collect();
+        let g = Graph::from_edges(33, &edges);
+        let fo = Fanout(vec![4]);
+        let a = extract_block(&g, &[0], &fo, ModelKind::Gcn, &mut Rng::new(5));
+        let b = extract_block(&g, &[0], &fo, ModelKind::Gcn, &mut Rng::new(5));
+        let c = extract_block(&g, &[0], &fo, ModelKind::Gcn, &mut Rng::new(6));
+        assert_eq!(a.vertices, b.vertices);
+        assert_eq!(a.vertices.len(), 5); // center + 4 sampled leaves
+        assert_ne!(a.vertices, c.vertices);
+    }
+
+    #[test]
+    fn zero_degree_seed_yields_self_loop_block() {
+        // Vertex 4 is isolated.
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2)]);
+        let b = extract_block(&g, &[4], &Fanout(vec![3, 3]), ModelKind::Gcn, &mut Rng::new(1));
+        assert_eq!(b.vertices, vec![4]);
+        assert_eq!(b.seed_rows, vec![0]);
+        assert_eq!(b.arcs, 1); // just the GCN self-loop
+        let s = extract_block(&g, &[4], &Fanout(vec![3, 3]), ModelKind::Sage, &mut Rng::new(1));
+        assert_eq!(s.arcs, 0); // SAGE: empty aggregation row
+    }
+
+    #[test]
+    fn seed_rows_map_back_to_seeds() {
+        let g = path_graph(16);
+        let b = extract_block(&g, &[9, 2], &Fanout(vec![2, 2]), ModelKind::Gcn, &mut Rng::new(3));
+        assert_eq!(b.seed_rows.len(), 2);
+        let back: Vec<u32> = b.seed_rows.iter().map(|&r| b.vertices[r]).collect();
+        assert_eq!(back, vec![2, 9]); // seeds sorted ascending
+        assert_eq!(b.local_of(2), Some(b.seed_rows[0]));
+        assert_eq!(b.local_of(100), None);
+    }
+}

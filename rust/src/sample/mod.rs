@@ -1,0 +1,36 @@
+//! Mini-batch neighbor sampling (PR 6).
+//!
+//! Full-batch training (the [`crate::train::Session`] path) touches every
+//! vertex every epoch, which caps graph size at device memory. This module
+//! provides the building blocks for the sampled alternative driven by
+//! [`crate::train::SampledSession`]:
+//!
+//! - [`BatchSchedule`] — a seeded, shuffling iterator over the train
+//!   vertices, chunked into mini-batches (last batch may be partial).
+//! - [`extract_block`] — a per-layer fanout neighbor sampler over the
+//!   global CSR that materializes one batch's [`SampledBlock`]: the sorted
+//!   local→global id map plus a block-local [`crate::graph::SparseAdj`]
+//!   that feeds the existing `Backend` SpMM kernels unchanged.
+//!
+//! # Determinism
+//!
+//! Every stochastic draw is keyed by *structural* identity, never by
+//! execution schedule:
+//!
+//! - the epoch shuffle draws from [`epoch_rng`]`(seed, epoch)`;
+//! - block extraction for batch `b` draws from [`batch_rng`]`(seed,
+//!   epoch, b)`, consumed in canonical order (frontier vertices are
+//!   visited in ascending global id, and a vertex whose degree is at or
+//!   under the fanout takes all neighbors *without consuming the RNG*).
+//!
+//! Consequently the blocks — and everything downstream of them — are
+//! bit-identical regardless of worker count, thread count, or cache
+//! state. The RNG streams carry distinct domain tags so they can never
+//! collide with the partitioning, feature-synthesis, or quantization
+//! streams that share the user seed.
+
+pub mod batch;
+pub mod block;
+
+pub use batch::{batch_rng, epoch_rng, BatchSchedule};
+pub use block::{extract_block, Fanout, SampledBlock};

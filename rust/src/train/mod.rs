@@ -5,15 +5,19 @@
 //!
 //! - [`Session`] — the staged API: build once (Partition → Cache), then
 //!   `run_epoch()` / `eval()` / observers.
+//! - [`SampledSession`] — the mini-batch neighbor-sampled counterpart
+//!   (`--mode sampled`), built over [`crate::sample`].
 //! - [`train`] — the legacy one-call shim over a `Session`.
 
 pub mod report;
+pub mod sampled;
 pub mod session;
 pub mod trainer;
 
 pub use report::TrainReport;
+pub use sampled::SampledSession;
 pub use session::{
     ConvergenceLog, EarlyStopping, EpochObserver, EpochStats, EvalStats, PeriodicRefresh,
     Session, Signal,
 };
-pub use trainer::{train, CapacityMode, ExecMode, TrainConfig};
+pub use trainer::{train, CapacityMode, ExecMode, TrainConfig, TrainMode};

@@ -44,6 +44,19 @@ pub struct TrainReport {
     pub wallclock: f64,
     /// Halo replicas pruned by RAPA (0 when RAPA is off).
     pub rapa_pruned: usize,
+    /// Mini-batches per epoch (0 in full-batch mode).
+    pub batches_per_epoch: usize,
+    /// Total block vertices materialized across all sampled batches of
+    /// the run (0 in full-batch mode).
+    pub sampled_vertices: u64,
+    /// Distinct vertices touched per epoch by the sampled trainer
+    /// (union over the epoch's blocks; empty in full-batch mode).
+    pub epoch_touched: Vec<u64>,
+    /// Largest single resident block, in vertices (0 in full-batch mode).
+    pub peak_block_vertices: usize,
+    /// Modeled bytes of the largest resident block: features +
+    /// activations + block CSR (0 in full-batch mode).
+    pub peak_block_bytes: u64,
 }
 
 impl TrainReport {

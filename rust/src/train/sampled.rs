@@ -1,0 +1,774 @@
+//! The mini-batch neighbor-sampled training session (PR 6).
+//!
+//! [`SampledSession`] is the sampled counterpart of the full-batch
+//! [`crate::train::Session`]: each epoch shuffles the train vertices with
+//! an epoch-keyed RNG, chunks them into batches, extracts one
+//! [`SampledBlock`] per batch (fanout neighbor sampling over the global
+//! CSR), gathers the block's remote layer-0 feature rows through the
+//! [`ExchangeEngine`] + [`TwoLevelCache`] pair, runs forward/backward on
+//! the block with the unchanged `Backend` SpMM kernels, and applies one
+//! SGD step per batch (batch-mean gradient), in batch order.
+//!
+//! # Worker-count-invariant numerics
+//!
+//! Unlike the full-batch path — where each worker computes a partition
+//! and gradients are reduced across workers — a sampled batch is
+//! processed *whole* by one worker (`batch % p`). Splitting one batch's
+//! block across partitions would make the f32 accumulation order (and so
+//! the losses) depend on the partition shape. With whole-batch ownership
+//! the worker count only decides *where* compute is charged and how the
+//! caches behave (simulated times and bytes), never the numerics; losses
+//! are bit-identical across 1/2/4 workers at a fixed seed. Three more
+//! invariants make that hold end to end:
+//!
+//! - model weights draw from a dedicated `seed`-keyed stream (the
+//!   partitioners consume a partition-count-dependent amount of the main
+//!   stream);
+//! - sampling RNG is keyed by `(seed, epoch, batch)` and consumed in
+//!   canonical order (see [`crate::sample`]);
+//! - when AdaQP quantization is on, **every** block row — local or
+//!   remote — is quantized with a vertex-keyed, epoch-free RNG, so a
+//!   row's bits never depend on which worker fetched it, on cache state,
+//!   or on the epoch. The cache stores exactly these wire rows, which is
+//!   why serving a row from cache is bit-identical to fetching it fresh.
+//!
+//! Simulated time is honest about serialization: one SGD step per batch
+//! means batches run back to back, so the epoch time is the *sum* of
+//! per-batch compute plus visible communication (with `pipeline` on, a
+//! batch's gather overlaps the previous batch's compute) — there is no
+//! worker-count speedup, unlike the full-batch barrier model.
+
+use crate::cache::{cal_capacity, key_of, CapacityInput, TwoLevelCache};
+use crate::comm::exchange::{ExchangeEngine, ExchangeParams};
+use crate::device::simclock::{StageTimes, WallStages};
+use crate::dist::Cluster;
+use crate::graph::{Dataset, Graph, NodeData};
+use crate::model::{layer_stack, GnnModel, LayerDims, ModelKind};
+use crate::partition::halo::{build_plan, SubgraphPlan};
+use crate::partition::rapa;
+use crate::runtime::Backend;
+use crate::sample::{batch_rng, extract_block, BatchSchedule, Fanout, SampledBlock};
+use crate::train::report::TrainReport;
+use crate::train::session::{charge_compute, quantize_wire, EpochStats, EvalStats, WireRow};
+use crate::train::trainer::{CapacityMode, ExecMode, TrainConfig};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::HashSet;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Domain tag of the model-init stream (see module docs).
+const MODEL_TAG: u64 = 0xD6E8_FEB8_6659_FD93;
+/// Domain tag of the per-vertex feature wire stream.
+const FEATURE_TAG: u64 = 0x94D0_49BB_1331_11EB;
+/// Multiplier mixing a vertex id into a stream key.
+const INDEX_MIX: u64 = 0xA24B_AED4_963E_E407;
+
+fn model_rng(seed: u64) -> Rng {
+    Rng::new(seed ^ MODEL_TAG)
+}
+
+fn feature_rng(seed: u64, v: u32) -> Rng {
+    Rng::new(seed ^ FEATURE_TAG ^ (v as u64).wrapping_mul(INDEX_MIX))
+}
+
+/// The wire form of vertex `v`'s feature row: raw f32, or stochastically
+/// quantized with the vertex-keyed stream when AdaQP is on. A pure
+/// function of `(seed, v)` — never of partition, cache state, or epoch.
+fn feature_wire(data: &NodeData, v: u32, bits: Option<u8>, seed: u64) -> WireRow {
+    let row = data.feature_row(v);
+    match bits {
+        Some(b) => quantize_wire(row, b, &mut feature_rng(seed, v)),
+        None => WireRow { values: row.to_vec(), quantized: true, q8: None },
+    }
+}
+
+/// Per-epoch accumulators of the batch loop.
+struct EpochAcc {
+    loss: f32,
+    epoch_time: f64,
+    comm_time: f64,
+    /// Previous batch's owner-side work (pipeline overlap window).
+    prev_work: f64,
+    bytes_moved: u64,
+    bytes_saved: u64,
+    sampled_vertices: u64,
+    touched: HashSet<u32>,
+    peak_block_vertices: usize,
+    peak_block_bytes: u64,
+    stages: Vec<StageTimes>,
+    batches: usize,
+}
+
+impl EpochAcc {
+    fn new(p: usize) -> EpochAcc {
+        EpochAcc {
+            loss: 0.0,
+            epoch_time: 0.0,
+            comm_time: 0.0,
+            prev_work: 0.0,
+            bytes_moved: 0,
+            bytes_saved: 0,
+            sampled_vertices: 0,
+            touched: HashSet::new(),
+            peak_block_vertices: 0,
+            peak_block_bytes: 0,
+            stages: vec![StageTimes::default(); p],
+            batches: 0,
+        }
+    }
+}
+
+/// A materialized sampled-training run: Partition → Cache → Epoch… →
+/// finish, mirroring the full-batch [`crate::train::Session`] lifecycle.
+pub struct SampledSession<'a> {
+    cfg: TrainConfig,
+    backend: &'a mut dyn Backend,
+    graph: &'a Graph,
+    data: &'a NodeData,
+    plan: SubgraphPlan,
+    /// Owning worker of every global vertex.
+    owner_of: Vec<u32>,
+    model: GnnModel,
+    dims: Vec<LayerDims>,
+    c_pad: usize,
+    fanout: Fanout,
+    train_ids: Vec<u32>,
+    val_ids: Vec<u32>,
+    test_ids: Vec<u32>,
+    cache: TwoLevelCache,
+    engine: ExchangeEngine<'a>,
+    report: TrainReport,
+    epoch: u64,
+    total_train: f32,
+    wall: Instant,
+}
+
+impl<'a> SampledSession<'a> {
+    /// Partition the graph over the cluster's devices (the partition
+    /// decides halo *ownership* and cache shape — compute ownership is
+    /// per batch), size the layer-0 feature cache, and wire the exchange
+    /// engine. No epochs run yet.
+    pub fn build(
+        dataset: &'a Dataset,
+        cluster: &'a Cluster,
+        backend: &'a mut dyn Backend,
+        cfg: &TrainConfig,
+    ) -> Result<SampledSession<'a>> {
+        let wall = Instant::now();
+        let gpus = cluster.gpus();
+        let topology = cluster.topology();
+        let p = gpus.len();
+        assert!(p >= 1);
+        let g = &dataset.graph;
+        let data = &dataset.data;
+
+        if cfg.batch_size == 0 {
+            return Err(anyhow!("sampled mode needs a batch size >= 1"));
+        }
+        if cfg.fanout.len() != cfg.layers {
+            return Err(anyhow!(
+                "sampled mode needs one fanout entry per layer ({} layers), got {}",
+                cfg.layers,
+                cfg.fanout.len()
+            ));
+        }
+        if cfg.fanout.contains(&0) {
+            return Err(anyhow!("fanout entries must be >= 1"));
+        }
+
+        // ---- Partition (RAPA or plain) ---------------------------------
+        let mut rng = Rng::new(cfg.seed);
+        let (plan, rapa_pruned): (SubgraphPlan, usize) = if cfg.use_rapa {
+            let mut rcfg = cfg.rapa;
+            rcfg.f_dim = data.f_dim;
+            rcfg.layers = cfg.layers;
+            let res = rapa::run(g, gpus, &rcfg, cfg.method, &mut rng);
+            let pruned = res.pruned.iter().sum();
+            (res.plan, pruned)
+        } else {
+            let ps = cfg.method.partition(g, p, &mut rng);
+            (build_plan(g, &ps), 0)
+        };
+
+        // ---- Model (dedicated stream — see module docs) -----------------
+        let c_pad = if data.num_classes <= 4 { 4 } else { 16 };
+        if data.num_classes > c_pad {
+            return Err(anyhow!("num_classes {} exceeds padded bucket", data.num_classes));
+        }
+        let dims = layer_stack(data.f_dim, cfg.hidden, c_pad, cfg.layers);
+        let model = GnnModel::new(cfg.model, dims.clone(), &mut model_rng(cfg.seed));
+
+        // ---- Ownership + splits ----------------------------------------
+        let mut owner_of = vec![0u32; g.n()];
+        for (w, sg) in plan.parts.iter().enumerate() {
+            for &v in &sg.global_ids[..sg.n_inner] {
+                owner_of[v as usize] = w as u32;
+            }
+        }
+        let ids_of = |mask: &[bool]| -> Vec<u32> {
+            mask.iter()
+                .enumerate()
+                .filter(|&(_, &m)| m)
+                .map(|(v, _)| v as u32)
+                .collect()
+        };
+        let train_ids = ids_of(&data.train_mask);
+        let val_ids = ids_of(&data.val_mask);
+        let test_ids = ids_of(&data.test_mask);
+        let total_train = (train_ids.len() as f32).max(1.0);
+
+        // ---- Cache: layer-0 feature rows only --------------------------
+        // The sampled path never caches intermediate embeddings (blocks
+        // change every batch), so capacities scale by one cached layer.
+        let max_caps: Vec<usize> = plan.parts.iter().map(|sg| sg.n_halo()).collect();
+        let max_global: usize = {
+            let mut set = HashSet::new();
+            for sg in &plan.parts {
+                set.extend(sg.halo_ids().iter().copied());
+            }
+            set.len()
+        };
+        let (local_caps, global_cap) = match cfg.capacity {
+            CapacityMode::Adaptive => {
+                let input = CapacityInput {
+                    top_k: usize::MAX,
+                    gpu_mem_mib: gpus
+                        .iter()
+                        .map(|g| g.memory_bytes() as f64 / (1 << 20) as f64)
+                        .collect(),
+                    gpu_reserved_mib: 100.0,
+                    cpu_mem_mib: 768.0 * 1024.0,
+                    cpu_reserved_mib: 1024.0,
+                    layer_dims: vec![data.f_dim],
+                };
+                let cap = cal_capacity(&plan, &input);
+                (cap.gpu.clone(), cap.cpu)
+            }
+            CapacityMode::Fixed { local, global } => (vec![local; p], global),
+            CapacityMode::Fraction(fr) => (
+                max_caps.iter().map(|&c| (c as f64 * fr).ceil() as usize).collect(),
+                (max_global as f64 * fr).ceil() as usize,
+            ),
+        };
+        let mut cache =
+            TwoLevelCache::with_machines(cfg.policy, &local_caps, global_cap, cluster.machine_of());
+        // JACA priorities from the partition plan's halo overlap: sampled
+        // batches keep re-requesting exactly those hot 1-hop halo rows.
+        // Multi-hop block vertices outside the plan's halo sets default to
+        // priority 0 — a deliberately bounded hint memory.
+        let max_overlap = plan
+            .parts
+            .iter()
+            .flat_map(|sg| sg.halo_overlap.iter().copied())
+            .max()
+            .unwrap_or(1);
+        for (w, sg) in plan.parts.iter().enumerate() {
+            for (hi, &v) in sg.halo_ids().iter().enumerate() {
+                let prio = if cfg.invert_priority {
+                    max_overlap + 1 - sg.halo_overlap[hi]
+                } else {
+                    sg.halo_overlap[hi]
+                };
+                cache.set_priority(w, key_of(0, v), prio);
+            }
+        }
+
+        let engine = ExchangeEngine::with_machines(gpus, topology, cluster.machine_of());
+        let batch_size = cfg.batch_size;
+        let report = TrainReport {
+            rapa_pruned,
+            worker_stages: vec![StageTimes::default(); p],
+            batches_per_epoch: train_ids.len().div_ceil(batch_size),
+            ..Default::default()
+        };
+
+        Ok(SampledSession {
+            cfg: cfg.clone(),
+            backend,
+            graph: g,
+            data,
+            plan,
+            owner_of,
+            model,
+            dims,
+            c_pad,
+            fanout: Fanout(cfg.fanout.clone()),
+            train_ids,
+            val_ids,
+            test_ids,
+            cache,
+            engine,
+            report,
+            epoch: 0,
+            total_train,
+            wall,
+        })
+    }
+
+    /// One-shot convenience: build, run `cfg.epochs` epochs, finish.
+    pub fn train(
+        dataset: &Dataset,
+        cluster: &Cluster,
+        backend: &mut dyn Backend,
+        cfg: &TrainConfig,
+    ) -> Result<TrainReport> {
+        let mut session = SampledSession::build(dataset, cluster, backend, cfg)?;
+        session.run_epochs(cfg.epochs)?;
+        session.finish()
+    }
+
+    /// Run one sampled epoch: shuffle → extract blocks → per-batch
+    /// gather/forward/backward/step in batch order, then a
+    /// full-neighborhood validation pass.
+    ///
+    /// In [`ExecMode::Threaded`], `min(p, batches)` sampler threads
+    /// pre-extract blocks for the batches they own (`b ≡ t mod threads`)
+    /// through bounded channels while the main thread consumes them in
+    /// batch order — a sampling pipeline. Block extraction is a pure
+    /// function of the batch's RNG key, so this is bit-identical to
+    /// [`ExecMode::Sequential`], including every stat.
+    pub fn run_epoch(&mut self) -> Result<EpochStats> {
+        let t0 = Instant::now();
+        let p = self.plan.parts.len();
+        let Self {
+            cfg,
+            backend,
+            graph,
+            data,
+            owner_of,
+            model,
+            dims,
+            c_pad,
+            fanout,
+            train_ids,
+            val_ids,
+            cache,
+            engine,
+            report,
+            total_train,
+            epoch: epoch_ref,
+            ..
+        } = self;
+        let backend: &mut dyn Backend = &mut **backend;
+        let epoch = *epoch_ref;
+        let schedule = BatchSchedule::new(train_ids, cfg.batch_size, cfg.seed, epoch);
+        let nb = schedule.n_batches();
+        let wall_plan = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let mut acc = EpochAcc::new(p);
+        let run_res: Result<()> = match cfg.exec {
+            ExecMode::Sequential => {
+                let mut res = Ok(());
+                for b in 0..nb {
+                    let mut rng = batch_rng(cfg.seed, epoch, b as u64);
+                    let block =
+                        extract_block(graph, schedule.batch(b), fanout, cfg.model, &mut rng);
+                    if let Err(e) = process_batch(
+                        &block, b % p, cfg, data, owner_of, model, dims, *c_pad, backend, cache,
+                        engine, epoch, *total_train, &mut acc,
+                    ) {
+                        res = Err(e);
+                        break;
+                    }
+                }
+                res
+            }
+            ExecMode::Threaded => {
+                let g: &Graph = graph;
+                let threads = p.min(nb).max(1);
+                let seed = cfg.seed;
+                let kind = cfg.model;
+                let fo = fanout.clone();
+                let sched = &schedule;
+                std::thread::scope(|scope| -> Result<()> {
+                    let mut rxs = Vec::with_capacity(threads);
+                    for t in 0..threads {
+                        let (tx, rx) = mpsc::sync_channel::<SampledBlock>(1);
+                        rxs.push(rx);
+                        let fo = fo.clone();
+                        scope.spawn(move || {
+                            for b in (t..nb).step_by(threads) {
+                                let mut rng = batch_rng(seed, epoch, b as u64);
+                                let block = extract_block(g, sched.batch(b), &fo, kind, &mut rng);
+                                if tx.send(block).is_err() {
+                                    break;
+                                }
+                            }
+                        });
+                    }
+                    for b in 0..nb {
+                        let block = rxs[b % threads]
+                            .recv()
+                            .map_err(|_| anyhow!("sampler thread died"))?;
+                        process_batch(
+                            &block, b % p, cfg, data, owner_of, model, dims, *c_pad, backend,
+                            cache, engine, epoch, *total_train, &mut acc,
+                        )?;
+                    }
+                    Ok(())
+                })
+            }
+        };
+        if run_res.is_err() {
+            cache.purge_pending();
+        }
+        run_res?;
+        let wall_execute = t1.elapsed().as_secs_f64();
+
+        // ---- Validation: full-neighborhood inference --------------------
+        let t2 = Instant::now();
+        let val_acc = split_accuracy(val_ids, cfg, graph, data, model, dims, *c_pad, backend)?;
+
+        // ---- Epoch accounting -------------------------------------------
+        let mut mean = StageTimes::default();
+        for (w, s) in acc.stages.iter().enumerate() {
+            mean.add(s);
+            report.worker_stages[w].add(s);
+        }
+        let mean = mean.scale(1.0 / p as f64);
+        report.stage_totals.add(&mean);
+        report.epoch_times.push(acc.epoch_time);
+        report.comm_times.push(acc.comm_time);
+        report.losses.push(acc.loss);
+        report.val_accs.push(val_acc);
+        report.bytes_moved += acc.bytes_moved;
+        report.bytes_saved += acc.bytes_saved;
+        report.sampled_vertices += acc.sampled_vertices;
+        report.epoch_touched.push(acc.touched.len() as u64);
+        report.peak_block_vertices = report.peak_block_vertices.max(acc.peak_block_vertices);
+        report.peak_block_bytes = report.peak_block_bytes.max(acc.peak_block_bytes);
+        let wall = WallStages {
+            plan: wall_plan,
+            execute: wall_execute,
+            reduce: t2.elapsed().as_secs_f64(),
+        };
+        report.epoch_wall.push(wall.total());
+        report.wall_stages.add(&wall);
+        *epoch_ref += 1;
+
+        Ok(EpochStats {
+            epoch,
+            time: acc.epoch_time,
+            comm_time: acc.comm_time,
+            loss: acc.loss,
+            val_acc,
+            bytes_moved: acc.bytes_moved,
+            bytes_saved: acc.bytes_saved,
+            cross_bytes: 0,
+            stages: mean,
+            cache: cache.stats,
+            batches: acc.batches,
+            sampled_vertices: acc.sampled_vertices,
+            wall,
+        })
+    }
+
+    /// Run `n` epochs back to back.
+    pub fn run_epochs(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.run_epoch()?;
+        }
+        Ok(())
+    }
+
+    /// Full-neighborhood accuracy on the validation and test splits.
+    /// Evaluation bypasses the cache and charges no simulated time; with
+    /// full fanout the extraction consumes no RNG, so eval is exactly
+    /// reproducible and worker-count-invariant too.
+    pub fn eval(&mut self) -> Result<EvalStats> {
+        let Self { cfg, backend, graph, data, model, dims, c_pad, val_ids, test_ids, .. } = self;
+        let backend: &mut dyn Backend = &mut **backend;
+        let val_acc = split_accuracy(val_ids, cfg, graph, data, model, dims, *c_pad, backend)?;
+        let test_acc = split_accuracy(test_ids, cfg, graph, data, model, dims, *c_pad, backend)?;
+        Ok(EvalStats { val_acc, test_acc })
+    }
+
+    /// Close the run: final test accuracy, cache stats, wallclock.
+    pub fn finish(mut self) -> Result<TrainReport> {
+        let ev = self.eval()?;
+        self.report.test_acc = ev.test_acc;
+        self.report.cache = self.cache.stats;
+        self.report.wallclock = self.wall.elapsed().as_secs_f64();
+        Ok(self.report)
+    }
+
+    /// Epochs completed so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// Forward through all layers on a block; returns the activations
+/// (`h[0] = X_block … h[L] = logits`). `charge` receives per-layer
+/// simulated compute when training (None for eval).
+#[allow(clippy::too_many_arguments)]
+fn forward_block(
+    block: &SampledBlock,
+    h0: Vec<f32>,
+    cfg: &TrainConfig,
+    model: &GnnModel,
+    dims: &[LayerDims],
+    backend: &mut dyn Backend,
+) -> Result<Vec<Vec<f32>>> {
+    let n = block.n();
+    let mut h: Vec<Vec<f32>> = Vec::with_capacity(dims.len() + 1);
+    h.push(h0);
+    for d in dims {
+        h.push(vec![0.0f32; n * d.d_out]);
+    }
+    for (l, d) in dims.iter().enumerate() {
+        let (head, tail) = h.split_at_mut(l + 1);
+        let h_in = &head[l];
+        let h_out = &mut tail[0];
+        match cfg.model {
+            ModelKind::Gcn => backend.gcn_fwd(
+                n,
+                d.d_in,
+                d.d_out,
+                d.relu,
+                &block.adj,
+                h_in,
+                &model.weights[l][0],
+                h_out,
+            )?,
+            ModelKind::Sage => backend.sage_fwd(
+                n,
+                d.d_in,
+                d.d_out,
+                d.relu,
+                &block.adj,
+                h_in,
+                &model.weights[l][0],
+                &model.weights[l][1],
+                h_out,
+            )?,
+        }
+    }
+    Ok(h)
+}
+
+/// Labels (one-hot, padded) and a seed-row mask for a block.
+fn block_targets(
+    block: &SampledBlock,
+    data: &NodeData,
+    c_pad: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = block.n();
+    let mut y = vec![0.0f32; n * c_pad];
+    for (i, &v) in block.vertices.iter().enumerate() {
+        y[i * c_pad + data.labels[v as usize] as usize] = 1.0;
+    }
+    let mut mask = vec![0.0f32; n];
+    for &r in &block.seed_rows {
+        mask[r] = 1.0;
+    }
+    (y, mask)
+}
+
+/// Process one training batch end to end: gather remote layer-0 rows
+/// (cache-checked, byte/time-charged), forward, seed-masked loss,
+/// backward (the whole block is the computation graph — no halo-gradient
+/// zeroing), and one SGD step with the batch-mean gradient.
+#[allow(clippy::too_many_arguments)]
+fn process_batch(
+    block: &SampledBlock,
+    owner_w: usize,
+    cfg: &TrainConfig,
+    data: &NodeData,
+    owner_of: &[u32],
+    model: &mut GnnModel,
+    dims: &[LayerDims],
+    c_pad: usize,
+    backend: &mut dyn Backend,
+    cache: &mut TwoLevelCache,
+    engine: &ExchangeEngine<'_>,
+    epoch: u64,
+    total_train: f32,
+    acc: &mut EpochAcc,
+) -> Result<()> {
+    let n = block.n();
+    let f = data.f_dim;
+    let layers = dims.len();
+    let bits = cfg.quantize_bits;
+
+    // ---- Gather remote layer-0 rows through the cache ------------------
+    let requests: Vec<(u32, usize)> = block
+        .vertices
+        .iter()
+        .filter_map(|&v| {
+            let o = owner_of[v as usize] as usize;
+            (o != owner_w).then_some((v, o))
+        })
+        .collect();
+    let mut params = ExchangeParams::new(0, epoch, f);
+    params.use_cache = cfg.use_cache;
+    params.comm_multiplier = cfg.comm_multiplier;
+    if let Some(bpr) = cfg.quantized_row_bytes {
+        params.bytes_per_row = bpr;
+    }
+    let gather = engine.plan_gather(cache, owner_w, &requests, params);
+    // Complete fills immediately: features are static, and the wire row
+    // is a pure function of (seed, vertex) — so pending entries never
+    // outlive the batch, and cached content is bit-identical to fresh.
+    for fl in &gather.fills {
+        let wire = feature_wire(data, fl.vertex, bits, cfg.seed);
+        cache.complete_fill(fl.key, &wire.values, epoch);
+    }
+
+    // ---- Assemble block features ---------------------------------------
+    let mut h0 = vec![0.0f32; n * f];
+    let mut ri = 0usize;
+    let mut full_rows = 0u64; // fetched rows that resisted quantization
+    for (i, &v) in block.vertices.iter().enumerate() {
+        let remote = owner_of[v as usize] as usize != owner_w;
+        let served = if remote {
+            let s = gather.rows[ri].as_deref();
+            ri += 1;
+            s
+        } else {
+            None
+        };
+        match served {
+            Some(row) => h0[i * f..(i + 1) * f].copy_from_slice(row),
+            None => {
+                let wire = feature_wire(data, v, bits, cfg.seed);
+                if remote && !wire.quantized {
+                    full_rows += 1;
+                }
+                h0[i * f..(i + 1) * f].copy_from_slice(&wire.values);
+            }
+        }
+    }
+
+    // ---- Forward + loss -------------------------------------------------
+    let gpu = &engine.gpus[owner_w];
+    let mut bstage = StageTimes::default();
+    let h = forward_block(block, h0, cfg, model, dims, backend)?;
+    for d in dims {
+        charge_compute(&mut bstage, gpu, block.arcs, n, d.d_in, d.d_out, false, cfg.model);
+    }
+    let (y, mask) = block_targets(block, data, c_pad);
+    let lg = backend.ce_grad(n, c_pad, &h[layers], &y, &mask)?;
+
+    // ---- Backward + step ------------------------------------------------
+    let mut grads = model.zero_grads();
+    let mut dh = lg.dz;
+    let mut dh_prev: Vec<f32> = Vec::new();
+    for l in (0..layers).rev() {
+        let d = &dims[l];
+        match cfg.model {
+            ModelKind::Gcn => backend.gcn_bwd(
+                n,
+                d.d_in,
+                d.d_out,
+                d.relu,
+                &block.adj,
+                &h[l],
+                &model.weights[l][0],
+                &dh,
+                &mut grads[l][0],
+                &mut dh_prev,
+            )?,
+            ModelKind::Sage => {
+                let (gs, gn) = grads[l].split_at_mut(1);
+                backend.sage_bwd(
+                    n,
+                    d.d_in,
+                    d.d_out,
+                    d.relu,
+                    &block.adj,
+                    &h[l],
+                    &model.weights[l][0],
+                    &model.weights[l][1],
+                    &dh,
+                    &mut gs[0],
+                    &mut gn[0],
+                    &mut dh_prev,
+                )?;
+            }
+        }
+        std::mem::swap(&mut dh, &mut dh_prev);
+        charge_compute(&mut bstage, gpu, block.arcs, n, d.d_in, d.d_out, true, cfg.model);
+    }
+    model.sgd_step(&grads, cfg.lr);
+
+    // ---- Accounting -----------------------------------------------------
+    let weight = block.seed_rows.len() as f32 / total_train;
+    acc.loss += lg.loss * weight;
+    for (w, s) in gather.stages.iter().enumerate() {
+        acc.stages[w].add(s);
+    }
+    acc.stages[owner_w].add(&bstage);
+    let comm_b: f64 = gather.stages.iter().map(|s| s.communication).sum();
+    let work_b =
+        bstage.total() + gather.stages[owner_w].check_cache + gather.stages[owner_w].pick_cache;
+    // With pipelining, a batch's gather overlaps the previous batch's
+    // compute (prefetch); only the overhang is visible.
+    let visible = if cfg.pipeline { (comm_b - acc.prev_work).max(0.0) } else { comm_b };
+    acc.epoch_time += work_b + visible;
+    acc.comm_time += visible;
+    acc.prev_work = work_b;
+
+    let mut moved = gather.bytes_moved;
+    if let Some(bpr) = cfg.quantized_row_bytes {
+        let full = (f * 4) as u64;
+        if full > bpr {
+            // Unquantizable (non-finite) fetched rows crossed at full f32.
+            moved += full_rows * (full - bpr);
+        }
+    }
+    acc.bytes_moved += moved;
+    acc.bytes_saved += gather.bytes_saved;
+
+    acc.sampled_vertices += n as u64;
+    acc.touched.extend(block.vertices.iter().copied());
+    acc.peak_block_vertices = acc.peak_block_vertices.max(n);
+    let act_bytes: u64 =
+        (n * f) as u64 * 4 + dims.iter().map(|d| (n * d.d_out) as u64 * 4).sum::<u64>();
+    let adj_bytes = block.arcs as u64 * 8 + (n as u64 + 1) * 4;
+    acc.peak_block_bytes = acc.peak_block_bytes.max(act_bytes + adj_bytes);
+    acc.batches += 1;
+    Ok(())
+}
+
+/// Accuracy of the current model on a vertex split, via batched
+/// full-neighborhood inference (no sampling, no cache, no time charges).
+#[allow(clippy::too_many_arguments)]
+fn split_accuracy(
+    ids: &[u32],
+    cfg: &TrainConfig,
+    graph: &Graph,
+    data: &NodeData,
+    model: &GnnModel,
+    dims: &[LayerDims],
+    c_pad: usize,
+    backend: &mut dyn Backend,
+) -> Result<f32> {
+    if ids.is_empty() {
+        return Ok(0.0);
+    }
+    let layers = dims.len();
+    let full = Fanout::full(layers);
+    let bits = cfg.quantize_bits;
+    let f = data.f_dim;
+    let (mut correct, mut total) = (0.0f32, 0.0f32);
+    for chunk in ids.chunks(cfg.batch_size.max(1)) {
+        // Full fanout never samples, so the RNG is never consumed.
+        let mut rng = Rng::new(0);
+        let block = extract_block(graph, chunk, &full, cfg.model, &mut rng);
+        let n = block.n();
+        let mut h0 = vec![0.0f32; n * f];
+        for (i, &v) in block.vertices.iter().enumerate() {
+            let wire = feature_wire(data, v, bits, cfg.seed);
+            h0[i * f..(i + 1) * f].copy_from_slice(&wire.values);
+        }
+        let h = forward_block(&block, h0, cfg, model, dims, backend)?;
+        let (y, mask) = block_targets(&block, data, c_pad);
+        let lg = backend.ce_grad(n, c_pad, &h[layers], &y, &mask)?;
+        correct += lg.correct;
+        total += block.seed_rows.len() as f32;
+    }
+    Ok(if total > 0.0 { correct / total } else { 0.0 })
+}

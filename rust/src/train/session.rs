@@ -85,6 +85,12 @@ pub struct EpochStats {
     pub stages: StageTimes,
     /// Cumulative cache counters after this epoch.
     pub cache: TwoLevelStats,
+    /// Mini-batches executed this epoch (0 in full-batch mode; the
+    /// sampled trainer reports its per-epoch batch count here).
+    pub batches: usize,
+    /// Total block vertices the sampled trainer materialized across this
+    /// epoch's batches (0 in full-batch mode).
+    pub sampled_vertices: u64,
     /// *Measured* wall-clock breakdown of this epoch (real seconds; the
     /// `time`/`comm_time` fields above are simulated/modeled).
     pub wall: WallStages,
@@ -817,6 +823,8 @@ impl<'a> Session<'a> {
             cross_bytes: report.cross_bytes_moved - cross0,
             stages: mean,
             cache: cache.stats,
+            batches: 0,
+            sampled_vertices: 0,
             wall,
         })
     }
@@ -1744,21 +1752,38 @@ fn charge_layer(
     backward: bool,
     model: ModelKind,
 ) {
+    charge_compute(&mut w.stages, gpu, w.e_local, n_inner, d_in, d_out, backward, model);
+}
+
+/// Simulated compute charge of one layer over `n_rows` vertices and
+/// `e_local` adjacency arcs — the Table-1 capability model shared by the
+/// full-batch session and the sampled trainer (per-batch blocks charge
+/// the same way with their own arc/row counts).
+pub(crate) fn charge_compute(
+    stages: &mut StageTimes,
+    gpu: &Gpu,
+    e_local: usize,
+    n_rows: usize,
+    d_in: usize,
+    d_out: usize,
+    backward: bool,
+    model: ModelKind,
+) {
     let perf = gpu.expected();
     // Aggregation (SpMM analog): work ∝ edges × feature dim.
     let agg_ops = match model {
         ModelKind::Gcn => 1.0,
         ModelKind::Sage => 1.0,
     } * if backward { 2.0 } else { 1.0 };
-    let agg_work = w.e_local as f64 * d_in as f64 * agg_ops;
-    w.stages.aggregation += perf.spmm * agg_work / REF_SPMM_WORK;
+    let agg_work = e_local as f64 * d_in as f64 * agg_ops;
+    stages.aggregation += perf.spmm * agg_work / REF_SPMM_WORK;
     // Combination (MM): work ∝ vertices × d_in × d_out.
     let mm_ops = match model {
         ModelKind::Gcn => 1.0,
         ModelKind::Sage => 2.0,
     } * if backward { 2.0 } else { 1.0 };
-    let mm_work = n_inner as f64 * d_in as f64 * d_out as f64 * mm_ops;
-    w.stages.compute += perf.mm * mm_work / REF_MM_WORK;
+    let mm_work = n_rows as f64 * d_in as f64 * d_out as f64 * mm_ops;
+    stages.compute += perf.mm * mm_work / REF_MM_WORK;
 }
 
 #[cfg(test)]

@@ -51,6 +51,37 @@ impl ExecMode {
     }
 }
 
+/// Which training path a run uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Every epoch touches every vertex (the [`Session`] path).
+    #[default]
+    FullBatch,
+    /// Mini-batch fanout neighbor sampling over shuffled seed batches
+    /// (the [`crate::train::SampledSession`] path; requires `batch_size`
+    /// and a per-layer `fanout`).
+    Sampled,
+}
+
+impl TrainMode {
+    /// Short name for reports/CLI ("full" / "sampled").
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainMode::FullBatch => "full",
+            TrainMode::Sampled => "sampled",
+        }
+    }
+
+    /// Parse a CLI name (`full` | `sampled`).
+    pub fn from_name(s: &str) -> Option<TrainMode> {
+        match s {
+            "full" | "full-batch" | "fullbatch" => Some(TrainMode::FullBatch),
+            "sampled" | "sample" => Some(TrainMode::Sampled),
+            _ => None,
+        }
+    }
+}
+
 /// How cache capacities are chosen.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CapacityMode {
@@ -112,6 +143,13 @@ pub struct TrainConfig {
     /// Worker execution mode (sequential reference or one thread per
     /// worker with overlapped halo exchange). Bit-identical numerics.
     pub exec: ExecMode,
+    /// Full-batch (default) or mini-batch neighbor-sampled training.
+    pub mode: TrainMode,
+    /// Seeds per mini-batch (sampled mode only; 0 = unset).
+    pub batch_size: usize,
+    /// Per-layer neighbor fanout (sampled mode only; one entry per GNN
+    /// layer, empty = unset).
+    pub fanout: Vec<usize>,
 }
 
 impl TrainConfig {
@@ -138,6 +176,9 @@ impl TrainConfig {
             comm_multiplier: 1.0,
             invert_priority: false,
             exec: ExecMode::Sequential,
+            mode: TrainMode::FullBatch,
+            batch_size: 0,
+            fanout: Vec::new(),
         }
     }
 

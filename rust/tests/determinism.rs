@@ -9,10 +9,33 @@ use capgnn::device::profile::DeviceKind;
 use capgnn::dist::Cluster;
 use capgnn::graph::datasets::tiny;
 use capgnn::runtime::NativeBackend;
-use capgnn::train::{ConvergenceLog, EarlyStopping, ExecMode, Session, TrainConfig, TrainReport};
+use capgnn::train::{
+    ConvergenceLog, EarlyStopping, ExecMode, SampledSession, Session, TrainConfig, TrainMode,
+    TrainReport,
+};
 
 fn tiny_cfg(epochs: usize) -> TrainConfig {
     TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn sampled_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        mode: TrainMode::Sampled,
+        batch_size: 32,
+        fanout: vec![4, 3],
+        ..tiny_cfg(epochs)
+    }
+}
+
+fn run_sampled(cfg: &TrainConfig, workers: usize, exec: ExecMode) -> TrainReport {
+    let ds = tiny(11);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, workers, 7);
+    let mut backend = NativeBackend::new();
+    let mut cfg = cfg.clone();
+    cfg.exec = exec;
+    let mut session = SampledSession::build(&ds, &cluster, &mut backend, &cfg).unwrap();
+    session.run_epochs(cfg.epochs).unwrap();
+    session.finish().unwrap()
 }
 
 fn run_on(cfg: &TrainConfig, cluster: &Cluster, exec: ExecMode) -> TrainReport {
@@ -160,6 +183,59 @@ fn observers_see_identical_stats_on_threads() {
         (ran, stop.stopped_at)
     };
     assert_eq!(stopped_at(ExecMode::Sequential), stopped_at(ExecMode::Threaded));
+}
+
+/// Sampled mode, same contract as full-batch: the threaded executor (a
+/// sampler pipeline feeding the batch loop) is bit-identical to the
+/// sequential reference across worker counts × cache on/off × AdaQP
+/// on/off — including simulated times, byte accounting and cache
+/// counters.
+#[test]
+fn sampled_threaded_matches_sequential_bitwise() {
+    for &workers in &[1usize, 2, 4] {
+        for &(use_cache, bits) in &[(true, None), (false, None), (true, Some(8u8))] {
+            let mut cfg = sampled_cfg(3);
+            cfg.use_cache = use_cache;
+            cfg.quantize_bits = bits;
+            if bits.is_some() {
+                cfg.quantized_row_bytes = Some(16 + 8);
+            }
+            let what = format!("sampled workers={workers} cache={use_cache} bits={bits:?}");
+            let seq = run_sampled(&cfg, workers, ExecMode::Sequential);
+            let thr = run_sampled(&cfg, workers, ExecMode::Threaded);
+            assert_identical(&seq, &thr, &what);
+            assert_eq!(seq.losses.len(), 3, "{what}");
+            assert!(seq.losses.iter().all(|l| l.is_finite()), "{what}");
+        }
+    }
+}
+
+/// The sampled trainer's headline guarantee: a batch is processed whole
+/// by one worker, so the *numerics* — losses, accuracies — are
+/// bit-identical across 1/2/4 workers at a fixed seed. (Accounting
+/// fields like bytes and simulated times legitimately differ with the
+/// partition shape.) Holds with and without AdaQP quantization, because
+/// wire rows are quantized with a vertex-keyed RNG.
+#[test]
+fn sampled_losses_invariant_across_worker_counts() {
+    for &bits in &[None, Some(8u8)] {
+        let mut cfg = sampled_cfg(3);
+        cfg.quantize_bits = bits;
+        if bits.is_some() {
+            cfg.quantized_row_bytes = Some(16 + 8);
+        }
+        let what = format!("sampled bits={bits:?}");
+        let p1 = run_sampled(&cfg, 1, ExecMode::Sequential);
+        let p2 = run_sampled(&cfg, 2, ExecMode::Sequential);
+        let p4 = run_sampled(&cfg, 4, ExecMode::Threaded);
+        assert_eq!(p1.losses, p2.losses, "{what}: losses p1 vs p2");
+        assert_eq!(p1.losses, p4.losses, "{what}: losses p1 vs p4");
+        assert_eq!(p1.val_accs, p2.val_accs, "{what}: val accs p1 vs p2");
+        assert_eq!(p1.val_accs, p4.val_accs, "{what}: val accs p1 vs p4");
+        assert_eq!(p1.test_acc, p2.test_acc, "{what}: test acc p1 vs p2");
+        assert_eq!(p1.test_acc, p4.test_acc, "{what}: test acc p1 vs p4");
+        assert!(p1.losses.iter().all(|l| l.is_finite()), "{what}");
+    }
 }
 
 /// The measured wall-clock side-channel is populated in both modes.

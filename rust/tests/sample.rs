@@ -1,0 +1,221 @@
+//! Behavioral contract of the mini-batch neighbor-sampled trainer:
+//! batch-schedule edge cases (partial tail, oversized batch), fanout
+//! edge cases (fanout above the max degree, zero-degree seeds), cache
+//! reuse across batches, and the `.cgr` round-trip acceptance path with
+//! worker-count-invariant losses.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::tiny;
+use capgnn::graph::{io, Dataset, DatasetSource, Graph, NodeData};
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{SampledSession, TrainConfig, TrainMode};
+use capgnn::util::Rng;
+
+fn sampled_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        hidden: 16,
+        layers: 2,
+        lr: 0.05,
+        mode: TrainMode::Sampled,
+        batch_size: 32,
+        fanout: vec![4, 3],
+        ..TrainConfig::capgnn(epochs)
+    }
+}
+
+fn cluster(workers: usize) -> Cluster {
+    Cluster::homogeneous(DeviceKind::Rtx3090, workers, 7)
+}
+
+/// tiny(256 vertices) has a 60% train split → 154 train vertices; with
+/// batch size 32 that is 4 full batches plus a partial tail of 26, and
+/// every epoch reports the same batch count.
+#[test]
+fn partial_tail_batch_is_counted() {
+    let ds = tiny(11);
+    let n_train = ds.data.train_mask.iter().filter(|&&m| m).count();
+    let mut cfg = sampled_cfg(2);
+    if n_train % cfg.batch_size == 0 {
+        cfg.batch_size -= 1; // force a partial tail whatever the split count
+    }
+    let expect = n_train.div_ceil(cfg.batch_size);
+    assert!(n_train % cfg.batch_size != 0, "want a partial tail for this test");
+
+    let cl = cluster(2);
+    let mut backend = NativeBackend::new();
+    let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+    for _ in 0..cfg.epochs {
+        let stats = session.run_epoch().unwrap();
+        assert_eq!(stats.batches, expect);
+        assert!(stats.loss.is_finite());
+        assert!(stats.sampled_vertices > 0);
+    }
+    let report = session.finish().unwrap();
+    assert_eq!(report.batches_per_epoch, expect);
+    assert_eq!(report.epoch_touched.len(), cfg.epochs);
+}
+
+/// A batch size larger than the train set degenerates to one batch per
+/// epoch — sampled full-batch — and still trains.
+#[test]
+fn oversized_batch_is_one_batch_per_epoch() {
+    let ds = tiny(11);
+    let n_train = ds.data.train_mask.iter().filter(|&&m| m).count();
+    let mut cfg = sampled_cfg(2);
+    cfg.batch_size = n_train * 10;
+
+    let cl = cluster(2);
+    let mut backend = NativeBackend::new();
+    let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+    let stats = session.run_epoch().unwrap();
+    assert_eq!(stats.batches, 1);
+    assert!(stats.loss.is_finite());
+    let report = session.finish().unwrap();
+    assert_eq!(report.batches_per_epoch, 1);
+}
+
+/// Fanout above the max degree: every vertex takes all of its neighbors
+/// (without consuming RNG), so sampling degenerates to the full
+/// neighborhood and still trains deterministically.
+#[test]
+fn fanout_above_max_degree_trains() {
+    let ds = tiny(11);
+    let max_deg = (0..ds.graph.n() as u32).map(|v| ds.graph.degree(v)).max().unwrap();
+    let mut cfg = sampled_cfg(2);
+    cfg.fanout = vec![max_deg + 7; cfg.layers];
+
+    let cl = cluster(2);
+    let mut backend = NativeBackend::new();
+    let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+    let a = session.run_epoch().unwrap();
+    assert!(a.loss.is_finite());
+    assert!(a.sampled_vertices > 0);
+
+    // Same config twice from scratch → bit-identical epoch.
+    let mut backend2 = NativeBackend::new();
+    let mut session2 = SampledSession::build(&ds, &cl, &mut backend2, &cfg).unwrap();
+    let b = session2.run_epoch().unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.sampled_vertices, b.sampled_vertices);
+}
+
+/// Zero-degree (isolated) seed vertices: their block is just themselves
+/// (GCN keeps a self-loop; the loss stays finite) and training proceeds.
+#[test]
+fn zero_degree_seeds_train_with_finite_loss() {
+    // 12 vertices: a 6-cycle plus 6 isolated vertices; every vertex is a
+    // train vertex so batches hit the isolated ones.
+    let n = 12usize;
+    let edges: Vec<(u32, u32)> = (0..6u32).map(|i| (i, (i + 1) % 6)).collect();
+    let graph = Graph::from_edges(n, &edges);
+    let f_dim = 8usize;
+    let mut rng = Rng::new(3);
+    let features: Vec<f32> = (0..n * f_dim).map(|_| rng.f64() as f32 - 0.5).collect();
+    let data = NodeData {
+        features,
+        f_dim,
+        labels: (0..n as u32).map(|v| v % 4).collect(),
+        num_classes: 4,
+        train_mask: vec![true; n],
+        val_mask: vec![false; n],
+        test_mask: vec![false; n],
+    };
+    let ds = Dataset { name: "isolated", label: "Ty", graph, data };
+
+    let mut cfg = sampled_cfg(3);
+    cfg.batch_size = 4;
+    cfg.fanout = vec![2, 2];
+    let cl = cluster(2);
+    let mut backend = NativeBackend::new();
+    let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+    for _ in 0..cfg.epochs {
+        let stats = session.run_epoch().unwrap();
+        assert!(stats.loss.is_finite(), "isolated seeds must not NaN the loss");
+        assert_eq!(stats.batches, 3);
+    }
+    let report = session.finish().unwrap();
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+}
+
+/// JACA reuse across batches: hot halo vertices recur batch to batch, so
+/// after the cold first touches the cache serves repeats — the hit rate
+/// and saved bytes are strictly positive with more than one worker.
+#[test]
+fn cache_hit_rate_is_positive_across_batches() {
+    let ds = tiny(11);
+    let cfg = sampled_cfg(3);
+    let cl = cluster(2);
+    let mut backend = NativeBackend::new();
+    let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+    session.run_epochs(cfg.epochs).unwrap();
+    let report = session.finish().unwrap();
+    assert!(
+        report.cache.hit_rate() > 0.0,
+        "expected cache hits on recurring halo vertices, got {:?}",
+        report.cache
+    );
+    assert!(report.bytes_saved > 0, "cache hits must save wire bytes");
+    assert!(report.bytes_moved > 0, "cold misses must move wire bytes");
+}
+
+/// Acceptance path: ingest a `.cgr` dataset from disk and train sampled
+/// end-to-end on 1/2/4 workers — losses and accuracies bit-identical at a
+/// fixed seed regardless of worker count, with a nonzero cache hit rate
+/// when workers exchange halo rows.
+#[test]
+fn cgr_round_trip_trains_identically_across_workers() {
+    let dir = std::path::Path::new("target/test_sample");
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join("sampled_roundtrip.cgr");
+    let twin = tiny(11);
+    io::save_cgr(&path, &twin.graph, Some(&twin.data)).unwrap();
+
+    let source = DatasetSource::parse(&format!("file:{}", path.display())).unwrap();
+    let ds = source.build(42, 1.0).unwrap();
+    assert_eq!(ds.graph.n(), twin.graph.n());
+
+    let cfg = sampled_cfg(3);
+    let mut reports = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let cl = cluster(workers);
+        let mut backend = NativeBackend::new();
+        let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
+        session.run_epochs(cfg.epochs).unwrap();
+        let report = session.finish().unwrap();
+        assert!(report.losses.iter().all(|l| l.is_finite()), "workers={workers}");
+        if workers > 1 {
+            assert!(
+                report.cache.hit_rate() > 0.0,
+                "workers={workers}: sampled halo rows must hit the cache"
+            );
+        }
+        reports.push(report);
+    }
+    for r in &reports[1..] {
+        assert_eq!(reports[0].losses, r.losses, "losses must not depend on worker count");
+        assert_eq!(reports[0].val_accs, r.val_accs);
+        assert_eq!(reports[0].test_acc, r.test_acc);
+    }
+}
+
+/// Config validation at build time: bad batch size or fanout shape is a
+/// clear error, not a panic mid-epoch.
+#[test]
+fn build_rejects_bad_sampling_config() {
+    let ds = tiny(11);
+    let cl = cluster(2);
+    let mut backend = NativeBackend::new();
+
+    let mut cfg = sampled_cfg(1);
+    cfg.batch_size = 0;
+    assert!(SampledSession::build(&ds, &cl, &mut backend, &cfg).is_err());
+
+    let mut cfg = sampled_cfg(1);
+    cfg.fanout = vec![4]; // one entry for two layers
+    assert!(SampledSession::build(&ds, &cl, &mut backend, &cfg).is_err());
+
+    let mut cfg = sampled_cfg(1);
+    cfg.fanout = vec![4, 0];
+    assert!(SampledSession::build(&ds, &cl, &mut backend, &cfg).is_err());
+}
