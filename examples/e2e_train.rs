@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    let report = session.finish()?;
+    let report = session.finish()?.0;
     println!(
         "\nfinal: loss {:.4} | best val acc {:.2}% | test acc {:.2}%",
         report.losses.last().unwrap(),

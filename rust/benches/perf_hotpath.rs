@@ -13,7 +13,7 @@ use capgnn::partition::halo::build_plan;
 use capgnn::partition::Method;
 use capgnn::runtime::native::{matmul, spmm};
 use capgnn::runtime::{Backend, NativeBackend};
-use capgnn::train::{train, TrainConfig};
+use capgnn::train::{run, TrainConfig};
 use capgnn::util::bench::run_bench;
 use capgnn::util::Rng;
 
@@ -128,9 +128,10 @@ fn main() {
         };
         let topo = Topology::pcie_pairs(4);
         let cfg = TrainConfig { epochs: 1, ..TrainConfig::capgnn(1) };
+        let cluster = capgnn::dist::Cluster::from_parts(gpus, topo).unwrap();
         let mut backend = NativeBackend::new();
         run_bench("train_epoch_rt_x4_native", || {
-            let rep = train(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
+            let rep = run(&ds, &cluster, &mut backend, &cfg).unwrap().0;
             std::hint::black_box(rep.total_time());
         });
         let _ = backend.name();

@@ -65,7 +65,7 @@ fn main() {
             let t0 = std::time::Instant::now();
             session.run_epochs(epochs).expect("epochs");
             let wall = t0.elapsed().as_secs_f64();
-            let report = session.finish().expect("finish");
+            let report = session.finish().expect("finish").0;
             (wall, report.losses, report.bytes_moved)
         };
         // Two repetitions per mode, gating on the min: shields the CI

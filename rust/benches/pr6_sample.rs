@@ -61,7 +61,7 @@ fn run_sampled(ds: &Dataset, cl: &Cluster, batch_size: usize, epochs: usize) -> 
     let cfg = sampled_cfg(batch_size);
     let mut session = SampledSession::build(ds, cl, &mut backend, &cfg).unwrap();
     session.run_epochs(epochs).unwrap();
-    session.finish().unwrap()
+    session.finish().unwrap().0
 }
 
 fn main() {
@@ -101,7 +101,7 @@ fn main() {
                 0,
                 reps,
             );
-            let r = session.finish().unwrap();
+            let r = session.finish().unwrap().0;
 
             let touched_mean = r.epoch_touched.iter().sum::<u64>() as f64
                 / r.epoch_touched.len().max(1) as f64;

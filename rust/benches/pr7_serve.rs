@@ -1,0 +1,177 @@
+//! PR7 bench / CI gate: online serving latency and throughput.
+//!
+//! Trains a small model through the unified `train::run` facade, then
+//! replays a Zipfian request stream (`s = 1.1` over the degree-hottest
+//! vertices) against a live server at 2 offered request rates × 2
+//! micro-batch ceilings, recording p50/p99 queue-to-response latency,
+//! sustained QPS, and the cross-request cache hit rate.
+//!
+//! Writes `BENCH_PR7.json` to the repo root, then exits nonzero if
+//! - any configuration sees zero cross-request cache hits (the warmed
+//!   JACA cache must absorb part of a Zipfian mix), or
+//! - any configuration's p99 latency exceeds 500 ms, or
+//! - any response set is internally inconsistent (two responses for the
+//!   same vertex differ in a bit), or
+//! - two fresh same-seed runs of the first configuration produce
+//!   different output digests (serving determinism across processes'
+//!   worth of state: new server, new cache, new workers).
+//!
+//! `BENCH_QUICK=1` shrinks the graph and stream for smoke runs.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::synthetic_node_data;
+use capgnn::graph::{Dataset, Graph};
+use capgnn::model::TrainedModel;
+use capgnn::runtime::NativeBackend;
+use capgnn::sample::Fanout;
+use capgnn::serve::{
+    run_driver, zipf_workload, DriverReport, Pacing, ServeConfig, Server, WorkloadConfig,
+};
+use capgnn::train::{run, TrainConfig};
+use capgnn::util::bench;
+use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::Rng;
+
+/// Random graph (avg degree ≈ 8) with synthetic labeled features.
+fn make_dataset(n: usize, seed: u64) -> Dataset {
+    let m = n * 8;
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 8, 32, seed);
+    Dataset { name: "bench", label: "Bn", graph, data }
+}
+
+fn train_model(ds: &Dataset) -> TrainedModel {
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let cfg = TrainConfig { hidden: 32, layers: 2, lr: 0.05, ..TrainConfig::capgnn(2) };
+    let mut backend = NativeBackend::new();
+    run(ds, &cluster, &mut backend, &cfg).expect("training failed").1
+}
+
+/// One serving run: fresh server, fresh cache, fresh workers.
+fn serve_once(
+    ds: &Dataset,
+    model: &TrainedModel,
+    workload: &[u32],
+    max_batch: usize,
+    cache: usize,
+    qps: f64,
+) -> DriverReport {
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait_us: 1000,
+        workers: 2,
+        fanout: Fanout(vec![6, 4]),
+        cache_capacity: cache,
+        prepopulate: cache / 2,
+        seed: 42,
+    };
+    let mut handle = Server::start(ds, model.clone(), &cfg).expect("server start");
+    let rep = run_driver(&mut handle, workload, Pacing::Open { qps }).expect("driver");
+    handle.shutdown().expect("shutdown");
+    rep
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let n = if quick { 2048 } else { 16384 };
+    let rates: &[f64] = if quick { &[500.0, 2000.0] } else { &[1000.0, 4000.0] };
+    let batch_ceilings: &[usize] = &[8, 64];
+    let cache = if quick { 512 } else { 2048 };
+    let requests = if quick { 1500 } else { 6000 };
+
+    let ds = make_dataset(n, 42);
+    let model = train_model(&ds);
+    let workload = zipf_workload(
+        &ds.graph,
+        &WorkloadConfig { requests, zipf_s: 1.1, hot_ranks: cache, seed: 7 },
+    );
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut gate_hits_ok = true;
+    let mut gate_p99_ok = true;
+    let mut gate_consistent = true;
+    for &qps in rates {
+        for &mb in batch_ceilings {
+            let r = serve_once(&ds, &model, &workload, mb, cache, qps);
+            if r.cache_hits == 0 {
+                gate_hits_ok = false;
+            }
+            if r.p99_us > 500_000 {
+                gate_p99_ok = false;
+            }
+            if !r.consistent || r.received != r.sent {
+                gate_consistent = false;
+            }
+            println!(
+                "qps={qps} max_batch={mb}: p50 {}µs p99 {}µs mean {:.0}µs, sustained {:.0} rps, \
+                 hit rate {:.3} ({} of {} hits)",
+                r.p50_us,
+                r.p99_us,
+                r.mean_us,
+                r.sustained_qps,
+                r.hit_rate,
+                r.cache_hits,
+                r.received,
+            );
+            entries.push(obj(vec![
+                ("offered_qps", num(qps)),
+                ("max_batch", num(mb as f64)),
+                ("requests", num(r.sent as f64)),
+                ("p50_us", num(r.p50_us as f64)),
+                ("p99_us", num(r.p99_us as f64)),
+                ("mean_us", num(r.mean_us)),
+                ("max_us", num(r.max_us as f64)),
+                ("sustained_qps", num(r.sustained_qps)),
+                ("cache_hits", num(r.cache_hits as f64)),
+                ("cache_hit_rate", num(r.hit_rate)),
+                ("consistent", Json::Bool(r.consistent)),
+            ]));
+        }
+    }
+
+    // Determinism gate: the same stream against two fresh servers (new
+    // cache, new workers, new batching timing) must produce bit-equal
+    // result sets.
+    let a = serve_once(&ds, &model, &workload, batch_ceilings[0], cache, rates[0]);
+    let b = serve_once(&ds, &model, &workload, batch_ceilings[0], cache, rates[0]);
+    let stable = a.consistent && b.consistent && a.output_digest == b.output_digest;
+    if !stable {
+        eprintln!(
+            "DETERMINISM BREACH: same-seed serving runs differ (digests {:#x} vs {:#x})",
+            a.output_digest, b.output_digest
+        );
+    }
+
+    let doc = obj(vec![
+        ("bench", s("pr7_serve")),
+        ("quick", Json::Bool(quick)),
+        ("n", num(n as f64)),
+        ("zipf_s", num(1.1)),
+        ("results", arr(entries)),
+        ("cache_hits_positive", Json::Bool(gate_hits_ok)),
+        ("p99_under_500ms", Json::Bool(gate_p99_ok)),
+        ("responses_consistent", Json::Bool(gate_consistent)),
+        ("bit_stable_across_runs", Json::Bool(stable)),
+    ]);
+    bench::write_json_file("BENCH_PR7.json", &doc).expect("write BENCH_PR7.json");
+    println!(
+        "wrote BENCH_PR7.json (hits gate {gate_hits_ok}, p99 gate {gate_p99_ok}, \
+         consistent {gate_consistent}, bit-stable {stable})"
+    );
+
+    if !gate_hits_ok {
+        eprintln!("CACHE GATE FAILED: a configuration saw zero cross-request cache hits");
+        std::process::exit(1);
+    }
+    if !gate_p99_ok {
+        eprintln!("LATENCY GATE FAILED: p99 exceeded 500ms");
+        std::process::exit(1);
+    }
+    if !gate_consistent || !stable {
+        std::process::exit(1);
+    }
+}

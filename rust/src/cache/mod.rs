@@ -10,10 +10,12 @@ pub mod capacity;
 pub mod fifo;
 pub mod jaca;
 pub mod lru;
+pub mod serve;
 pub mod store;
 pub mod twolevel;
 
 pub use capacity::{cal_capacity, CacheCapacity, CapacityInput};
+pub use serve::{ServeCache, ServeCacheStats};
 pub use store::FeatureStore;
 pub use twolevel::{TwoLevelCache, TwoLevelStats};
 

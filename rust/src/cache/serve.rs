@@ -1,0 +1,220 @@
+//! Cross-request serving cache (PR 7).
+//!
+//! Training's [`crate::cache::TwoLevelCache`] amortizes halo traffic
+//! *across epochs*; serving amortizes aggregation *across requests*: the
+//! cache maps a vertex to its finished per-vertex output row (the padded
+//! logits the serving forward pass produced), so a repeated hot vertex
+//! is answered without touching the graph at all.
+//!
+//! [`ServeCache`] composes an arbitrary [`CachePolicy`] (JACA by
+//! default, so admission is priority-aware) with the existing
+//! [`FeatureStore`] row storage. Priorities are the vertex's out-degree
+//! ("heat"): under a Zipfian request mix the hottest vertices are the
+//! high-degree ones the pre-population pass already computed, and JACA
+//! refuses to displace them with one-off cold vertices.
+//!
+//! Correctness does not depend on the cache: a served row is the *exact*
+//! output [`crate::serve::serve_output`] would recompute (a pure
+//! function of `(model, graph, fanout, serve seed, vertex)`), so hits
+//! and misses are bit-identical by construction.
+
+use super::store::FeatureStore;
+use super::{key_of, CachePolicy, InsertOutcome, PolicyKind};
+
+/// Cumulative [`ServeCache`] counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeCacheStats {
+    /// Lookups answered from cache.
+    pub hits: u64,
+    /// Lookups that missed (caller recomputes and may re-admit).
+    pub misses: u64,
+    /// Rows stored (including pre-populated ones).
+    pub inserted: u64,
+    /// Residents displaced to make room.
+    pub evicted: u64,
+    /// Admissions the policy refused (e.g. JACA: colder than everything
+    /// resident).
+    pub refused: u64,
+    /// Rows stored by the startup heat pass (subset of `inserted`).
+    pub prepopulated: u64,
+}
+
+impl ServeCacheStats {
+    /// Hits over lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Request-level output cache: policy decides *which* vertices stay
+/// resident, the store holds their output rows.
+pub struct ServeCache {
+    policy: Box<dyn CachePolicy>,
+    store: FeatureStore,
+    /// Cumulative counters (snapshotted into the serve report).
+    pub stats: ServeCacheStats,
+}
+
+impl ServeCache {
+    /// Build with the given policy and capacity (rows).
+    pub fn new(kind: PolicyKind, capacity: usize) -> ServeCache {
+        ServeCache {
+            policy: kind.build(capacity),
+            store: FeatureStore::new(),
+            stats: ServeCacheStats::default(),
+        }
+    }
+
+    /// Look a vertex up, counting a hit or a miss.
+    pub fn lookup(&mut self, v: u32) -> Option<&[f32]> {
+        let key = key_of(0, v);
+        let hit = self.policy.contains(key) && self.store.get(key).is_some();
+        if hit {
+            self.policy.touch(key);
+            self.stats.hits += 1;
+            self.store.get(key)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Offer a freshly computed row for residency with priority `heat`
+    /// (out-degree). The policy may refuse; an eviction drops the
+    /// victim's row from the store so policy and store never disagree.
+    pub fn admit(&mut self, v: u32, heat: u32, row: Vec<f32>) -> InsertOutcome {
+        let key = key_of(0, v);
+        if self.policy.contains(key) {
+            // Already resident (two workers raced on the same cold
+            // vertex): both computed identical bits, refresh is a no-op
+            // content-wise.
+            self.policy.touch(key);
+            self.store.put(key, row, 0);
+            return InsertOutcome::Inserted;
+        }
+        self.policy.set_priority(key, heat);
+        let out = self.policy.insert(key);
+        match out {
+            InsertOutcome::Inserted => {
+                self.store.put(key, row, 0);
+                self.stats.inserted += 1;
+            }
+            InsertOutcome::Evicted(victim) => {
+                self.store.remove(victim);
+                self.store.put(key, row, 0);
+                self.stats.inserted += 1;
+                self.stats.evicted += 1;
+            }
+            InsertOutcome::Refused => self.stats.refused += 1,
+        }
+        out
+    }
+
+    /// Startup heat pass: [`ServeCache::admit`] plus the `prepopulated`
+    /// counter, so reports can separate warmed rows from demand fills.
+    pub fn prepopulate(&mut self, v: u32, heat: u32, row: Vec<f32>) -> bool {
+        let stored = self.admit(v, heat, row).stored();
+        if stored {
+            self.stats.prepopulated += 1;
+        }
+        stored
+    }
+
+    /// Resident rows.
+    pub fn len(&self) -> usize {
+        self.policy.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.policy.is_empty()
+    }
+
+    /// Maximum resident rows.
+    pub fn capacity(&self) -> usize {
+        self.policy.capacity()
+    }
+
+    /// Bytes held by resident rows.
+    pub fn bytes(&self) -> usize {
+        self.store.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: u32) -> Vec<f32> {
+        vec![v as f32, v as f32 + 0.5]
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut c = ServeCache::new(PolicyKind::Jaca, 4);
+        assert!(c.lookup(1).is_none());
+        assert!(c.admit(1, 10, row(1)).stored());
+        assert_eq!(c.lookup(1).unwrap(), &row(1)[..]);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+        assert!(c.stats.hit_rate() > 0.49 && c.stats.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn eviction_keeps_policy_and_store_in_sync() {
+        let mut c = ServeCache::new(PolicyKind::Lru, 2);
+        c.admit(1, 1, row(1));
+        c.admit(2, 1, row(2));
+        let out = c.admit(3, 1, row(3));
+        assert!(matches!(out, InsertOutcome::Evicted(_)));
+        assert_eq!(c.len(), 2);
+        // Exactly the resident keys have rows.
+        let resident = [1u32, 2, 3]
+            .iter()
+            .filter(|&&v| c.lookup(v).is_some())
+            .count();
+        assert_eq!(resident, 2);
+        assert_eq!(c.bytes(), 2 * 2 * 4);
+    }
+
+    #[test]
+    fn jaca_heat_admission_protects_hot_rows() {
+        let mut c = ServeCache::new(PolicyKind::Jaca, 2);
+        assert!(c.prepopulate(10, 100, row(10)));
+        assert!(c.prepopulate(11, 90, row(11)));
+        assert_eq!(c.stats.prepopulated, 2);
+        // A colder vertex cannot displace the hot residents…
+        assert_eq!(c.admit(12, 1, row(12)), InsertOutcome::Refused);
+        assert_eq!(c.stats.refused, 1);
+        assert!(c.lookup(10).is_some() && c.lookup(11).is_some());
+        // …but a hotter one can.
+        assert!(c.admit(13, 200, row(13)).stored());
+        assert!(c.lookup(13).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = ServeCache::new(PolicyKind::Jaca, 0);
+        assert!(!c.prepopulate(1, 5, row(1)));
+        assert_eq!(c.admit(2, 5, row(2)), InsertOutcome::Refused);
+        assert!(c.is_empty());
+        assert_eq!(c.capacity(), 0);
+        assert!(c.lookup(1).is_none() && c.lookup(2).is_none());
+    }
+
+    #[test]
+    fn racing_admit_refreshes_in_place() {
+        let mut c = ServeCache::new(PolicyKind::Jaca, 2);
+        assert!(c.admit(1, 5, row(1)).stored());
+        // Second admit of the same vertex (worker race): still resident,
+        // no phantom eviction, count stays.
+        assert_eq!(c.admit(1, 5, row(1)), InsertOutcome::Inserted);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.evicted, 0);
+    }
+}

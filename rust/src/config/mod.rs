@@ -6,13 +6,54 @@ use crate::cache::PolicyKind;
 use crate::device::profile::{Gpu, GpuGroup};
 use crate::device::topology::Topology;
 use crate::graph::{Dataset, DatasetSource};
-use crate::model::ModelKind;
+use crate::model::{ModelKind, TrainedModel};
 use crate::partition::Method;
 use crate::runtime::BackendKind;
 use crate::sample::Fanout;
+use crate::serve::{Pacing, ServeConfig, WorkloadConfig};
 use crate::train::{CapacityMode, ExecMode, TrainConfig, TrainMode};
 use crate::util::{Args, Rng};
 use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Options that only the serving path reads; train modes reject them so
+/// a typo'd invocation fails loudly instead of silently ignoring knobs.
+const SERVE_ONLY_OPTS: &[&str] = &[
+    "max-batch",
+    "max-wait-us",
+    "qps",
+    "closed",
+    "requests",
+    "zipf",
+    "serve-workers",
+    "serve-cache",
+    "prepopulate",
+    "hot-ranks",
+];
+
+/// Options that only training reads; `capgnn serve` rejects them.
+const TRAIN_ONLY_OPTS: &[&str] = &[
+    "epochs",
+    "lr",
+    "hidden",
+    "layers",
+    "system",
+    "method",
+    "policy",
+    "refresh",
+    "local-cap",
+    "global-cap",
+    "batch-size",
+    "mode",
+    "threads",
+    "group",
+    "parts",
+    "backend",
+    "save-model",
+];
+
+/// Boolean flags that only training reads; `capgnn serve` rejects them.
+const TRAIN_ONLY_FLAGS: &[&str] = &["no-pipe", "no-cache", "no-rapa"];
 
 /// Everything needed to launch one training run.
 pub struct RunSpec {
@@ -43,6 +84,13 @@ pub struct RunSpec {
 /// consumer of the spec accepts a synthetic twin and an ingested on-disk
 /// graph interchangeably.
 pub fn run_spec(args: &Args) -> Result<RunSpec> {
+    // Serving-only knobs are dead here: reject, don't ignore (the same
+    // treatment --batch-size/--fanout get in full-batch mode below).
+    for k in SERVE_ONLY_OPTS {
+        if args.get(k).is_some() {
+            return Err(anyhow!("--{k} only applies to serving; use `capgnn serve`"));
+        }
+    }
     let source = DatasetSource::parse(&args.get_or("dataset", "rt"))?;
     let seed = args.u64_or("seed", 42);
     let scale = args.f64_or("scale", 1.0);
@@ -72,8 +120,18 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
     let epochs = args.usize_or("epochs", 200);
     let mut train = system.config(epochs, dataset.data.f_dim);
 
-    train.model = ModelKind::from_name(&args.get_or("model", "gcn"))
-        .ok_or_else(|| anyhow!("unknown model (gcn/sage)"))?;
+    let model_name = args.get_or("model", "gcn");
+    train.model = ModelKind::from_name(&model_name).ok_or_else(|| {
+        if model_name.ends_with(".cgm") {
+            anyhow!(
+                "--model {model_name} is a trained artifact; in train mode --model \
+                 picks the architecture (gcn/sage). Serve the artifact with \
+                 `capgnn serve --model {model_name}`"
+            )
+        } else {
+            anyhow!("unknown model (gcn/sage)")
+        }
+    })?;
     train.hidden = args.usize_or("hidden", 64);
     train.layers = args.usize_or("layers", 3);
     train.lr = args.f64_or("lr", 0.02) as f32;
@@ -174,6 +232,117 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
     };
 
     Ok(RunSpec { dataset, source, gpus, topology, train, backend, system })
+}
+
+/// Everything needed to launch one serving run.
+pub struct ServeSpec {
+    /// The materialized dataset (synthetic twin or loaded file).
+    pub dataset: Dataset,
+    /// Where the dataset came from (registry entry).
+    pub source: DatasetSource,
+    /// Path the model artifact was loaded from (for display).
+    pub model_path: String,
+    /// The loaded `.cgm` artifact.
+    pub model: TrainedModel,
+    /// Server knobs (batching, workers, cache, fanout).
+    pub serve: ServeConfig,
+    /// Request-stream shape for the built-in driver.
+    pub workload: WorkloadConfig,
+    /// Open-loop rate or closed-loop concurrency.
+    pub pacing: Pacing,
+}
+
+/// Parse a [`ServeSpec`] from CLI options. Recognized options:
+/// `--model model.cgm --dataset rt|file:<graph.cgr> --scale 1.0
+///  --seed 42 --fanout 10,5 --serve-cache 1024 --prepopulate 512
+///  --max-batch 32 --max-wait-us 1000 --serve-workers 2
+///  --requests 2000 --zipf 1.1 --hot-ranks 1024 --qps 500|--closed 16`
+///
+/// Training-only options (`--epochs`, `--lr`, `--mode`, …) are rejected
+/// here exactly as serving-only options are rejected by [`run_spec`]:
+/// a knob that cannot take effect is an error, never a silent no-op.
+pub fn serve_spec(args: &Args) -> Result<ServeSpec> {
+    for k in TRAIN_ONLY_OPTS {
+        if args.get(k).is_some() {
+            return Err(anyhow!("--{k} only applies to training; use `capgnn train`"));
+        }
+    }
+    for f in TRAIN_ONLY_FLAGS {
+        if args.has_flag(f) {
+            return Err(anyhow!("--{f} only applies to training; use `capgnn train`"));
+        }
+    }
+
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| {
+            anyhow!(
+                "serve needs --model <model.cgm>; produce one with \
+                 `capgnn train --save-model model.cgm`"
+            )
+        })?
+        .to_string();
+    let model = TrainedModel::load(Path::new(&model_path))
+        .map_err(|e| anyhow!("loading {model_path}: {e}"))?;
+
+    let source = DatasetSource::parse(&args.get_or("dataset", "rt"))?;
+    let seed = args.u64_or("seed", 42);
+    let scale = args.f64_or("scale", 1.0);
+    let dataset = source.build(seed, scale)?;
+
+    let mut serve = ServeConfig::new(model.layers());
+    serve.seed = seed;
+    serve.cache_capacity = args.usize_or("serve-cache", 1024);
+    serve.prepopulate = args.usize_or("prepopulate", serve.cache_capacity / 2);
+    serve.max_batch = args.usize_or("max-batch", 32);
+    serve.max_wait_us = args.u64_or("max-wait-us", 1000);
+    serve.workers = args.usize_or("serve-workers", 2);
+    if let Some(v) = args.get("fanout") {
+        let f = Fanout::parse(v).map_err(|e| anyhow!("bad --fanout: {e}"))?;
+        if f.0.len() != model.layers() {
+            return Err(anyhow!(
+                "--fanout needs one entry per model layer ({} layers), got {}",
+                model.layers(),
+                f.0.len()
+            ));
+        }
+        serve.fanout = f;
+    }
+    serve.validate(&model, &dataset.data)?;
+
+    let workload = WorkloadConfig {
+        requests: args.usize_or("requests", 2000),
+        zipf_s: args.f64_or("zipf", 1.1),
+        hot_ranks: args.usize_or("hot-ranks", 1024),
+        seed,
+    };
+
+    let pacing = match (args.get("qps"), args.get("closed")) {
+        (Some(_), Some(_)) => {
+            return Err(anyhow!(
+                "--qps (open loop) and --closed (closed loop) are mutually exclusive"
+            ))
+        }
+        (Some(q), None) => {
+            let qps: f64 = q
+                .parse()
+                .ok()
+                .filter(|&x: &f64| x > 0.0)
+                .ok_or_else(|| anyhow!("bad --qps {q} (want a positive rate)"))?;
+            Pacing::Open { qps }
+        }
+        (None, Some(c)) => {
+            let n: usize = c
+                .parse()
+                .ok()
+                .filter(|&x| x >= 1)
+                .ok_or_else(|| anyhow!("bad --closed {c} (want outstanding requests >= 1)"))?;
+            Pacing::Closed { concurrency: n }
+        }
+        (None, None) => Pacing::Closed { concurrency: 16 },
+    };
+
+    Ok(ServeSpec { dataset, source, model_path, model, serve, workload, pacing })
 }
 
 #[cfg(test)]
@@ -302,5 +471,98 @@ mod tests {
             spec.train.capacity,
             CapacityMode::Fixed { local: 100, global: 400 }
         );
+    }
+
+    #[test]
+    fn serving_knobs_rejected_in_train_modes() {
+        for bad in [
+            vec!["--scale", "0.1", "--max-wait-us", "500"],
+            vec!["--scale", "0.1", "--qps", "100"],
+            vec!["--scale", "0.1", "--serve-cache", "64"],
+            vec!["--scale", "0.1", "--mode", "sampled", "--max-batch", "8"],
+        ] {
+            let err = run_spec(&args(&bad)).unwrap_err().to_string();
+            assert!(err.contains("serve"), "unhelpful error: {err}");
+        }
+    }
+
+    #[test]
+    fn train_model_flag_hints_at_cgm_artifacts() {
+        let err = run_spec(&args(&["--scale", "0.1", "--model", "m.cgm"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("capgnn serve"), "no hint: {err}");
+    }
+
+    #[test]
+    fn training_knobs_rejected_in_serve_mode() {
+        // Rejection fires before any model/dataset work, so no artifact
+        // is needed.
+        for bad in [
+            vec!["--epochs", "5"],
+            vec!["--mode", "sampled"],
+            vec!["--lr", "0.1"],
+            vec!["--save-model", "out.cgm"],
+            vec!["--no-cache"],
+        ] {
+            let err = serve_spec(&args(&bad)).unwrap_err().to_string();
+            assert!(err.contains("train"), "unhelpful error: {err}");
+        }
+    }
+
+    #[test]
+    fn serve_requires_a_model_artifact() {
+        let err = serve_spec(&args(&["--scale", "0.1"])).unwrap_err().to_string();
+        assert!(err.contains("--save-model"), "no pointer to training: {err}");
+        // A missing file is a load error naming the path.
+        let err = serve_spec(&args(&["--model", "/no/such/m.cgm"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/no/such/m.cgm"), "{err}");
+    }
+
+    #[test]
+    fn serve_spec_parses_knobs_and_pacing() {
+        use crate::model::{layer_stack, GnnModel};
+
+        let source = DatasetSource::parse("rt").unwrap();
+        let ds = source.build(42, 0.05).unwrap();
+        let dims = layer_stack(ds.data.f_dim, 8, 4, 2);
+        let gm = GnnModel::new(ModelKind::Gcn, dims, &mut Rng::new(3));
+        let tm = TrainedModel::new(gm, 42);
+        let path =
+            std::env::temp_dir().join(format!("capgnn_spec_{}.cgm", std::process::id()));
+        tm.save(&path).unwrap();
+        let p = path.to_str().unwrap();
+
+        let spec = serve_spec(&args(&[
+            "--dataset", "rt", "--scale", "0.05", "--model", p,
+            "--serve-cache", "64", "--max-batch", "8", "--qps", "500",
+            "--fanout", "4,4", "--requests", "100",
+        ]))
+        .unwrap();
+        assert_eq!(spec.serve.cache_capacity, 64);
+        assert_eq!(spec.serve.prepopulate, 32, "defaults to half the cache");
+        assert_eq!(spec.serve.max_batch, 8);
+        assert_eq!(spec.serve.fanout.0, vec![4, 4]);
+        assert_eq!(spec.workload.requests, 100);
+        assert!(matches!(spec.pacing, Pacing::Open { qps } if qps == 500.0));
+        assert_eq!(spec.model.layers(), 2);
+
+        // Closed loop is the default; both pacing knobs together error.
+        let d = serve_spec(&args(&["--dataset", "rt", "--scale", "0.05", "--model", p]))
+            .unwrap();
+        assert!(matches!(d.pacing, Pacing::Closed { concurrency: 16 }));
+        assert!(serve_spec(&args(&[
+            "--dataset", "rt", "--scale", "0.05", "--model", p, "--qps", "10",
+            "--closed", "4",
+        ]))
+        .is_err());
+        // Fanout depth must match the artifact's layer count.
+        assert!(serve_spec(&args(&[
+            "--dataset", "rt", "--scale", "0.05", "--model", p, "--fanout", "4",
+        ]))
+        .is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -113,7 +113,7 @@ mod tests {
     use super::*;
     use crate::device::profile::Gpu;
     use crate::device::topology::Topology;
-    use crate::train::{train, TrainConfig};
+    use crate::train::{run, TrainConfig};
 
     #[test]
     fn rapa_balances_hetero_pair_better_than_vanilla() {
@@ -130,8 +130,9 @@ mod tests {
         let mut backend = NativeBackend::new();
         let cap = TrainConfig::capgnn(ctx.epochs);
         let van = TrainConfig::vanilla(ctx.epochs);
-        let rc = train(&ds, &gpus, &topo, &mut backend, &cap).unwrap();
-        let rv = train(&ds, &gpus, &topo, &mut backend, &van).unwrap();
+        let cl = Cluster::from_parts(gpus, topo).unwrap();
+        let rc = run(&ds, &cl, &mut backend, &cap).unwrap().0;
+        let rv = run(&ds, &cl, &mut backend, &van).unwrap().0;
         // CaPGNN (RAPA) shifts load off the weak GPU: aggregation spread
         // across workers should not be larger than Vanilla's.
         let spread = |r: &crate::train::TrainReport| {

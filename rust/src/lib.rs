@@ -30,7 +30,19 @@
 //!   ([`train::EarlyStopping`]), streaming convergence curves
 //!   ([`train::ConvergenceLog`]), on-demand cache refresh
 //!   ([`train::PeriodicRefresh`]).
-//! - [`train::train`] is the legacy one-call shim over the same session.
+//! - [`train::run`] is the unified one-call entry: it dispatches on
+//!   [`train::TrainConfig::mode`] (full-batch or sampled), drives the
+//!   session, and returns the [`train::TrainReport`] together with the
+//!   [`model::TrainedModel`] artifact that `capgnn serve` consumes.
+//!   (`train::train` is the deprecated report-only shim.)
+//!
+//! ## Serving
+//!
+//! [`serve`] turns a [`model::TrainedModel`] (saved/loaded as a `.cgm`
+//! artifact) plus a graph into an online inference server: a
+//! deadline-based micro-batcher, a worker pool reusing the sampled
+//! forward kernels, and a cross-request JACA cache pre-populated by
+//! vertex degree. Responses are bit-deterministic per vertex.
 //!
 //! ## Datasets
 //!
@@ -78,9 +90,10 @@
 //!         assert!(stats.loss.is_finite());
 //!     }
 //!
-//!     // Close the run into the report the paper's tables read.
+//!     // Close the run into the report the paper's tables read, plus
+//!     // the serveable model artifact.
 //!     let eval = session.eval()?;
-//!     let report = session.finish()?;
+//!     let (report, _model) = session.finish()?;
 //!     assert_eq!(report.epoch_times.len(), cfg.epochs);
 //!     assert!(report.losses.iter().all(|l| l.is_finite()));
 //!     assert!(eval.val_acc >= 0.0);
@@ -108,5 +121,6 @@ pub mod model;
 pub mod partition;
 pub mod runtime;
 pub mod sample;
+pub mod serve;
 pub mod train;
 pub mod util;

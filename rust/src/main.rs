@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train      run one training configuration and print the report
+//!   serve      answer online inference requests over a trained .cgm model
 //!   partition  run a partitioner (+ optional RAPA) and print halo stats
 //!   ingest     build a binary .cgr graph from a text edge list
 //!   inspect    print and validate a .cgr file's header and stats
@@ -19,7 +20,8 @@ use capgnn::graph::SPECS;
 use capgnn::partition::halo::halo_stats;
 use capgnn::partition::rapa::{self, RapaConfig};
 use capgnn::runtime::Manifest;
-use capgnn::train::{EarlyStopping, SampledSession, Session, TrainMode};
+use capgnn::serve::{run_driver, zipf_workload, Server};
+use capgnn::train::{RunOptions, TrainMode};
 use capgnn::util::table::fmt_secs;
 use capgnn::util::{Args, Rng, Table};
 
@@ -28,6 +30,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "partition" => cmd_partition(&args),
         "ingest" => cmd_ingest(&args),
         "inspect" => cmd_inspect(&args),
@@ -83,7 +86,27 @@ COMMANDS:
                                  one thread per worker
               --agg-threads N    intra-worker SpMM row-block threads of
                                  the native backend (default 1); any N is
-                                 bit-identical — rows are independent]
+                                 bit-identical — rows are independent
+              --save-model M.cgm write the trained weights as a versioned
+                                 artifact for `capgnn serve`]
+  serve      --model m.cgm      trained artifact (from train --save-model)
+             --dataset rt|file:<path> --scale 1.0 --seed 42
+             [--fanout 10,5     neighbors per layer (default 10 each;
+                                must match the artifact's layer count)
+              --serve-cache N   cross-request cache rows (default 1024)
+              --prepopulate N   hottest vertices precomputed into the
+                                cache at startup (default cache/2)
+              --max-batch N     micro-batch flush size (default 32)
+              --max-wait-us N   micro-batch deadline (default 1000)
+              --serve-workers N compute threads (default 2)
+              --requests N      driver workload length (default 2000)
+              --zipf S          workload skew exponent (default 1.1)
+              --hot-ranks N     distinct popular vertices (default 1024)
+              --qps R | --closed C   open-loop rate or closed-loop
+                                outstanding requests (default closed 16)
+              --histogram       print the log2 latency histogram]
+             Responses are bit-deterministic per vertex: same id, same
+             output, regardless of batching, worker, or cache hits.
   partition  --dataset rt|file:<path> --group x4 --method metis
              [--rapa] [--hops 1]
   ingest     <edges.txt> -o <graph.cgr>
@@ -152,64 +175,36 @@ fn cmd_train(args: &Args) -> i32 {
         spec.train.exec.name(),
         spec.train.mode.name(),
     );
-    // Staged session: build once, then run epoch-by-epoch (with optional
-    // early stopping on the validation curve).
-    let run = (|| -> anyhow::Result<capgnn::train::TrainReport> {
-        let patience: Option<usize> = match args.get("early-stop") {
-            Some(v) => Some(
-                v.parse()
-                    .map_err(|_| anyhow::anyhow!("bad --early-stop value: {v}"))?,
-            ),
-            None => None,
-        };
-        if spec.train.mode == TrainMode::Sampled {
-            let mut session =
-                SampledSession::build(&spec.dataset, &cluster, backend.as_mut(), &spec.train)?;
-            // Inline patience loop with EarlyStopping's semantics (the
-            // observer trait is tied to the full-batch Session type).
-            let (mut best, mut since_best) = (f32::NEG_INFINITY, 0usize);
-            for _ in 0..spec.train.epochs {
-                let stats = session.run_epoch()?;
-                let Some(p) = patience else { continue };
-                if stats.val_acc > best + 1e-4 {
-                    best = stats.val_acc;
-                    since_best = 0;
-                } else {
-                    since_best += 1;
-                    if since_best > p {
-                        println!(
-                            "early stop: no val-acc improvement in the last {} epochs (stopped after epoch {})",
-                            p + 1,
-                            stats.epoch + 1
-                        );
-                        break;
-                    }
-                }
+    // Unified facade: `train::run_with` dispatches on the configured
+    // mode (full-batch or sampled), drives the session with optional
+    // early stopping, and hands back the report plus the model artifact.
+    let patience: Option<usize> = match args.get("early-stop") {
+        Some(v) => match v.parse() {
+            Ok(p) => Some(p),
+            Err(_) => {
+                eprintln!("error: bad --early-stop value: {v}");
+                return 2;
             }
-            return session.finish();
-        }
-        let mut session =
-            Session::build(&spec.dataset, &cluster, backend.as_mut(), &spec.train)?;
-        match patience {
-            Some(patience) => {
-                let mut stop = EarlyStopping::new(patience, 1e-4);
-                session.run(spec.train.epochs, &mut stop)?;
-                if let Some(e) = stop.stopped_at {
-                    println!(
-                        "early stop: no val-acc improvement in the last {} epochs (stopped after epoch {})",
-                        patience + 1,
-                        e + 1
-                    );
-                }
-            }
-            None => {
-                session.run_epochs(spec.train.epochs)?;
-            }
-        }
-        session.finish()
-    })();
+        },
+        None => None,
+    };
+    let run = capgnn::train::run_with(
+        &spec.dataset,
+        &cluster,
+        backend.as_mut(),
+        &spec.train,
+        RunOptions { patience },
+    );
     match run {
-        Ok(r) => {
+        Ok(out) => {
+            if let (Some(p), Some(e)) = (patience, out.stopped_at) {
+                println!(
+                    "early stop: no val-acc improvement in the last {} epochs (stopped after epoch {})",
+                    p + 1,
+                    e + 1
+                );
+            }
+            let r = out.report;
             println!(
                 "epochs={} total={}s comm={}s (sim) | loss {:.4} -> {:.4} | best val acc {:.2}% | test acc {:.2}%",
                 r.epoch_times.len(),
@@ -257,6 +252,19 @@ fn cmd_train(args: &Args) -> i32 {
                     r.cross_savings() * 100.0,
                 );
             }
+            if let Some(path) = args.get("save-model") {
+                match out.model.save(std::path::Path::new(path)) {
+                    Ok(()) => println!(
+                        "saved model artifact to {path} ({} layers, {} params); serve it with `capgnn serve --model {path}`",
+                        out.model.layers(),
+                        out.model.model.param_count(),
+                    ),
+                    Err(e) => {
+                        eprintln!("saving {path}: {e}");
+                        return 1;
+                    }
+                }
+            }
             0
         }
         Err(e) => {
@@ -264,6 +272,108 @@ fn cmd_train(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `capgnn serve --model m.cgm`: load a trained artifact plus a graph,
+/// start the micro-batched worker pool, replay the built-in Zipfian
+/// workload through the driver, and print latency/cache/batch metrics.
+fn cmd_serve(args: &Args) -> i32 {
+    let spec = match capgnn::config::serve_spec(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "serving {} [{}] ({} layers, {} -> {} dims, {} params) over {} ({} vertices, {} edges)",
+        spec.model_path,
+        spec.model.model.kind.name(),
+        spec.model.layers(),
+        spec.model.f_dim(),
+        spec.model.out_dim(),
+        spec.model.model.param_count(),
+        spec.dataset.name,
+        spec.dataset.graph.n(),
+        spec.dataset.graph.m(),
+    );
+    println!(
+        "config: {} workers | batch <= {} or {} us | fanout {} | cache {} rows (prepopulate {}) | {}",
+        spec.serve.workers,
+        spec.serve.max_batch,
+        spec.serve.max_wait_us,
+        spec.serve.fanout,
+        spec.serve.cache_capacity,
+        spec.serve.prepopulate,
+        match spec.pacing {
+            capgnn::serve::Pacing::Open { qps } => format!("open loop @ {qps} qps"),
+            capgnn::serve::Pacing::Closed { concurrency } =>
+                format!("closed loop, {concurrency} outstanding"),
+        },
+    );
+    let workload = zipf_workload(&spec.dataset.graph, &spec.workload);
+    let mut handle = match Server::start(&spec.dataset, spec.model, &spec.serve) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("serve startup failed: {e}");
+            return 1;
+        }
+    };
+    let drep = match run_driver(&mut handle, &workload, spec.pacing) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("serving failed: {e}");
+            return 1;
+        }
+    };
+    let srep = match handle.shutdown() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shutdown failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "requests {} -> responses {} ({} compute errors) | latency p50 {}us p99 {}us mean {:.0}us max {}us | sustained {:.0} qps",
+        srep.requests,
+        srep.responses,
+        srep.compute_errors,
+        drep.p50_us,
+        drep.p99_us,
+        drep.mean_us,
+        drep.max_us,
+        drep.sustained_qps,
+    );
+    println!(
+        "cache: {:.1}% hit rate ({} hits / {} misses) | {} prepopulated, {} resident of {} | {} recomputed",
+        srep.cache.hit_rate() * 100.0,
+        srep.cache.hits,
+        srep.cache.misses,
+        srep.cache.prepopulated,
+        srep.cache_len,
+        srep.cache_capacity,
+        srep.computed,
+    );
+    println!(
+        "batches: {} ({} full, {} deadline; largest {}) | per-worker responses {:?}",
+        srep.batches,
+        srep.full_flushes,
+        srep.deadline_flushes,
+        srep.max_batch_seen,
+        srep.worker_served,
+    );
+    if args.has_flag("histogram") {
+        for b in &srep.latency_histogram {
+            println!("  [{:>9} us, {:>9} us): {}", b.lo_us, b.hi_us, b.count);
+        }
+    }
+    if !drep.consistent {
+        eprintln!(
+            "DETERMINISM VIOLATION: a vertex produced differing outputs across responses"
+        );
+        return 1;
+    }
+    0
 }
 
 fn cmd_partition(args: &Args) -> i32 {

@@ -1,0 +1,346 @@
+//! Trained-model artifact: versioned `.cgm` save/load (PR 7).
+//!
+//! A [`TrainedModel`] is what a finished training session hands to the
+//! serving path: the weights plus the provenance needed to reproduce
+//! them. The on-disk format mirrors the `.cgr` discipline in
+//! [`crate::graph::io`] — little-endian fields, a magic/version header,
+//! typed [`IoError`]s for every malformed input, and a bit-exact
+//! round-trip (weights are stored as raw f32 bits, never re-encoded).
+//!
+//! # `.cgm` layout (version 1)
+//!
+//! | offset | size | field |
+//! |--------|------|-------|
+//! | 0      | 4    | magic `"CGMF"` |
+//! | 4      | 2    | format version (u16, = 1) |
+//! | 6      | 1    | model kind (0 = GCN, 1 = GraphSAGE) |
+//! | 7      | 1    | flags (must be 0 in v1) |
+//! | 8      | 8    | training seed (u64) |
+//! | 16     | 4    | layer count `L` (u32) |
+//! | 20     | 9·L  | per layer: d_in (u32), d_out (u32), relu (u8) |
+//! | …      | —    | weight matrices, raw f32 LE |
+//!
+//! Weights follow in layer-major, matrix-major order: for each layer,
+//! `kind.mats_per_layer()` row-major `d_in × d_out` matrices (GCN: W;
+//! SAGE: W_self then W_neigh). The reader rejects trailing bytes, so a
+//! file is either exactly a model or an error — never "probably fine".
+
+use super::{GnnModel, LayerDims, ModelKind};
+use crate::graph::io::IoError;
+use std::io::Write;
+use std::path::Path;
+
+/// First four bytes of every `.cgm` file.
+pub const CGM_MAGIC: [u8; 4] = *b"CGMF";
+
+/// Newest `.cgm` format version this build writes and understands.
+pub const CGM_VERSION: u16 = 1;
+
+/// Sanity bound on the layer count a `.cgm` header may declare — far
+/// above any real stack, small enough to reject garbage before the
+/// reader trusts a corrupt length field.
+const MAX_LAYERS: u32 = 1024;
+
+/// Sanity bound on a single layer dimension (same role as
+/// [`MAX_LAYERS`]).
+const MAX_DIM: u32 = 1 << 24;
+
+/// A trained model plus the provenance serving needs: the seed the run
+/// trained under (recorded for reproducibility; serving picks its own
+/// request-stream seed independently).
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    /// The trained weights (architecture, shapes, parameters).
+    pub model: GnnModel,
+    /// Seed of the training run that produced these weights.
+    pub seed: u64,
+}
+
+impl TrainedModel {
+    /// Wrap freshly trained weights with their run's seed.
+    pub fn new(model: GnnModel, seed: u64) -> TrainedModel {
+        TrainedModel { model, seed }
+    }
+
+    /// Number of GNN layers.
+    pub fn layers(&self) -> usize {
+        self.model.layers()
+    }
+
+    /// Input feature width the model was trained for.
+    pub fn f_dim(&self) -> usize {
+        self.model.dims.first().map(|d| d.d_in).unwrap_or(0)
+    }
+
+    /// Output width of the last layer (padded class logits).
+    pub fn out_dim(&self) -> usize {
+        self.model.dims.last().map(|d| d.d_out).unwrap_or(0)
+    }
+
+    /// Serialize to the `.cgm` byte layout (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let m = &self.model;
+        let mut out = Vec::with_capacity(20 + 9 * m.dims.len() + 4 * m.param_count());
+        out.extend_from_slice(&CGM_MAGIC);
+        out.extend_from_slice(&CGM_VERSION.to_le_bytes());
+        out.push(kind_code(m.kind));
+        out.push(0); // flags
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(m.dims.len() as u32).to_le_bytes());
+        for d in &m.dims {
+            out.extend_from_slice(&(d.d_in as u32).to_le_bytes());
+            out.extend_from_slice(&(d.d_out as u32).to_le_bytes());
+            out.push(d.relu as u8);
+        }
+        for layer in &m.weights {
+            for mat in layer {
+                for &w in mat {
+                    out.extend_from_slice(&w.to_bits().to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Write the artifact to `path` (`capgnn train --save-model`).
+    pub fn save(&self, path: &Path) -> Result<(), IoError> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&self.to_bytes())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read an artifact back; bit-exact inverse of [`TrainedModel::save`].
+    pub fn load(path: &Path) -> Result<TrainedModel, IoError> {
+        TrainedModel::from_bytes(&std::fs::read(path)?)
+    }
+
+    /// Parse the `.cgm` byte layout, validating every header field and
+    /// the exact byte length (trailing bytes are [`IoError::Corrupt`]).
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainedModel, IoError> {
+        let mut c = Cur { bytes, pos: 0 };
+        let magic = c.take(4, "magic")?;
+        if magic != CGM_MAGIC {
+            return Err(IoError::BadMagic { found: [magic[0], magic[1], magic[2], magic[3]] });
+        }
+        let version = c.u16("version")?;
+        if version == 0 || version > CGM_VERSION {
+            return Err(IoError::UnsupportedVersion(version));
+        }
+        let kind = match c.u8("kind")? {
+            0 => ModelKind::Gcn,
+            1 => ModelKind::Sage,
+            k => return Err(IoError::Corrupt(format!("unknown model kind byte {k}"))),
+        };
+        let flags = c.u8("flags")?;
+        if flags != 0 {
+            return Err(IoError::Corrupt(format!("unknown flag bits {flags:#04x}")));
+        }
+        let seed = c.u64("seed")?;
+        let layers = c.u32("layer count")?;
+        if layers == 0 || layers > MAX_LAYERS {
+            return Err(IoError::Corrupt(format!("implausible layer count {layers}")));
+        }
+        let mut dims = Vec::with_capacity(layers as usize);
+        for l in 0..layers {
+            let d_in = c.u32("layer dims")?;
+            let d_out = c.u32("layer dims")?;
+            let relu = match c.u8("layer dims")? {
+                0 => false,
+                1 => true,
+                b => return Err(IoError::Corrupt(format!("layer {l}: bad relu byte {b}"))),
+            };
+            if d_in == 0 || d_out == 0 || d_in > MAX_DIM || d_out > MAX_DIM {
+                return Err(IoError::Corrupt(format!(
+                    "layer {l}: implausible dims {d_in}x{d_out}"
+                )));
+            }
+            dims.push(LayerDims { d_in: d_in as usize, d_out: d_out as usize, relu });
+        }
+        for w in dims.windows(2) {
+            if w[0].d_out != w[1].d_in {
+                return Err(IoError::Corrupt(format!(
+                    "layer widths do not chain: d_out {} feeds d_in {}",
+                    w[0].d_out, w[1].d_in
+                )));
+            }
+        }
+        let mut weights: Vec<Vec<Vec<f32>>> = Vec::with_capacity(dims.len());
+        for d in &dims {
+            let mut layer = Vec::with_capacity(kind.mats_per_layer());
+            for _ in 0..kind.mats_per_layer() {
+                layer.push(c.f32_vec(d.d_in * d.d_out, "weights")?);
+            }
+            weights.push(layer);
+        }
+        if c.pos != bytes.len() {
+            return Err(IoError::Corrupt(format!(
+                "{} trailing bytes after the last weight matrix",
+                bytes.len() - c.pos
+            )));
+        }
+        Ok(TrainedModel { model: GnnModel { kind, dims, weights }, seed })
+    }
+}
+
+/// Kind byte of the v1 header.
+fn kind_code(kind: ModelKind) -> u8 {
+    match kind {
+        ModelKind::Gcn => 0,
+        ModelKind::Sage => 1,
+    }
+}
+
+/// Bounds-checked little-endian reader (same shape as the `.cgr`
+/// reader's cursor — every short read is a typed `Truncated`).
+struct Cur<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, len: usize, section: &'static str) -> Result<&'a [u8], IoError> {
+        let end = self.pos.checked_add(len).ok_or(IoError::Truncated {
+            section,
+            expected: len as u64,
+            actual: 0,
+        })?;
+        if end > self.bytes.len() {
+            return Err(IoError::Truncated {
+                section,
+                expected: len as u64,
+                actual: (self.bytes.len() - self.pos) as u64,
+            });
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, section: &'static str) -> Result<u8, IoError> {
+        Ok(self.take(1, section)?[0])
+    }
+
+    fn u16(&mut self, section: &'static str) -> Result<u16, IoError> {
+        let b = self.take(2, section)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, section: &'static str) -> Result<u32, IoError> {
+        let b = self.take(4, section)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, section: &'static str) -> Result<u64, IoError> {
+        let b = self.take(8, section)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32_vec(&mut self, count: usize, section: &'static str) -> Result<Vec<f32>, IoError> {
+        let b = self.take(count * 4, section)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer_stack;
+    use crate::util::Rng;
+
+    fn fresh(kind: ModelKind, seed: u64) -> TrainedModel {
+        let dims = layer_stack(8, 6, 4, 3);
+        TrainedModel::new(GnnModel::new(kind, dims, &mut Rng::new(seed)), seed)
+    }
+
+    fn weight_bits(m: &GnnModel) -> Vec<u32> {
+        m.weights
+            .iter()
+            .flat_map(|l| l.iter().flat_map(|mat| mat.iter().map(|w| w.to_bits())))
+            .collect()
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("capgnn_cgm_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        for (kind, tag) in [(ModelKind::Gcn, "gcn"), (ModelKind::Sage, "sage")] {
+            let orig = fresh(kind, 11);
+            let path = tmp(tag);
+            orig.save(&path).unwrap();
+            let back = TrainedModel::load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(back.seed, orig.seed);
+            assert_eq!(back.model.kind, orig.model.kind);
+            assert_eq!(back.model.dims, orig.model.dims);
+            assert_eq!(weight_bits(&back.model), weight_bits(&orig.model));
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = fresh(ModelKind::Gcn, 1).to_bytes();
+        bytes[0] = b'X';
+        assert!(matches!(
+            TrainedModel::from_bytes(&bytes),
+            Err(IoError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let mut bytes = fresh(ModelKind::Gcn, 1).to_bytes();
+        bytes[4..6].copy_from_slice(&99u16.to_le_bytes());
+        assert!(matches!(
+            TrainedModel::from_bytes(&bytes),
+            Err(IoError::UnsupportedVersion(99))
+        ));
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_rejected() {
+        let bytes = fresh(ModelKind::Sage, 2).to_bytes();
+        let cut = &bytes[..bytes.len() - 3];
+        assert!(matches!(
+            TrainedModel::from_bytes(cut),
+            Err(IoError::Truncated { .. })
+        ));
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(matches!(
+            TrainedModel::from_bytes(&extra),
+            Err(IoError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn bad_kind_and_flags_are_corrupt() {
+        let bytes = fresh(ModelKind::Gcn, 3).to_bytes();
+        let mut bad_kind = bytes.clone();
+        bad_kind[6] = 7;
+        assert!(matches!(
+            TrainedModel::from_bytes(&bad_kind),
+            Err(IoError::Corrupt(_))
+        ));
+        let mut bad_flags = bytes;
+        bad_flags[7] = 1;
+        assert!(matches!(
+            TrainedModel::from_bytes(&bad_flags),
+            Err(IoError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn dims_accessors() {
+        let m = fresh(ModelKind::Gcn, 4);
+        assert_eq!(m.layers(), 3);
+        assert_eq!(m.f_dim(), 8);
+        assert_eq!(m.out_dim(), 4);
+    }
+}

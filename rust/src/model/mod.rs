@@ -6,6 +6,10 @@
 
 use crate::util::Rng;
 
+pub mod artifact;
+
+pub use artifact::{TrainedModel, CGM_MAGIC, CGM_VERSION};
+
 /// Which architecture (paper evaluates GCN and GraphSAGE).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {

@@ -21,7 +21,11 @@
 //! - block extraction for batch `b` draws from [`batch_rng`]`(seed,
 //!   epoch, b)`, consumed in canonical order (frontier vertices are
 //!   visited in ascending global id, and a vertex whose degree is at or
-//!   under the fanout takes all neighbors *without consuming the RNG*).
+//!   under the fanout takes all neighbors *without consuming the RNG*);
+//! - serving-time extraction ([`extract_vertex_block`]) draws from
+//!   [`serve_rng`]`(seed, vertex)` — keyed by the vertex alone, so a
+//!   response is a pure function of the vertex id, independent of
+//!   micro-batch composition, worker id, or cache state (PR 7).
 //!
 //! Consequently the blocks — and everything downstream of them — are
 //! bit-identical regardless of worker count, thread count, or cache
@@ -33,4 +37,4 @@ pub mod batch;
 pub mod block;
 
 pub use batch::{batch_rng, epoch_rng, BatchSchedule};
-pub use block::{extract_block, Fanout, SampledBlock};
+pub use block::{extract_block, extract_vertex_block, serve_rng, Fanout, SampledBlock};

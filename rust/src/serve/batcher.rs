@@ -1,0 +1,171 @@
+//! Deadline-based request micro-batcher.
+//!
+//! Incoming requests are coalesced into [`Batch`]es under two knobs:
+//! `max_batch` (flush as soon as that many requests are pending) and
+//! `max_wait` (flush whatever is pending once the *oldest* pending
+//! request has waited that long). The deadline is armed when the first
+//! request of a batch arrives, so a single straggler is answered within
+//! `max_wait` even if nothing else ever shows up, while a burst larger
+//! than `max_batch` is split into back-to-back full batches with no
+//! deadline stalls in between.
+//!
+//! Shutdown is structural: when every request sender is dropped,
+//! `recv` fails, the batcher flushes its final partial batch and exits,
+//! and dropping its batch sender in turn winds down the worker pool.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// One enqueued inference request.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    /// Caller-visible request id (echoed in the response).
+    pub id: u64,
+    /// Vertex whose output is requested.
+    pub vertex: u32,
+    /// When the request entered the queue (latency clock origin).
+    pub enqueued: Instant,
+}
+
+/// A micro-batch of requests handed to one worker.
+#[derive(Debug)]
+pub struct Batch {
+    /// Monotone batch sequence number (for observability in responses).
+    pub seq: u64,
+    /// The coalesced requests, in arrival order.
+    pub requests: Vec<Request>,
+}
+
+/// What the batcher did over its lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    /// Batches emitted.
+    pub batches: u64,
+    /// Batches flushed because the oldest request hit its deadline.
+    pub deadline_flushes: u64,
+    /// Batches flushed because they reached `max_batch`.
+    pub full_flushes: u64,
+    /// Partial batches flushed by sender-side shutdown.
+    pub shutdown_flushes: u64,
+    /// Requests passed through.
+    pub requests: u64,
+    /// Largest batch emitted.
+    pub max_batch: usize,
+}
+
+/// Coalesce `rx` into batches on `tx`; returns stats when the request
+/// side shuts down (all senders dropped) or the workers stop reading.
+pub(crate) fn batcher_loop(
+    rx: Receiver<Request>,
+    tx: Sender<Batch>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> BatcherStats {
+    let max_batch = max_batch.max(1);
+    let mut stats = BatcherStats::default();
+    let mut seq = 0u64;
+    loop {
+        // Block for the first request of the next batch; an error means
+        // every submitter hung up and nothing is pending.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut pending = vec![first];
+        let mut timed_out = false;
+        let mut disconnected = false;
+        while pending.len() < max_batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                timed_out = true;
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    timed_out = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if pending.len() >= max_batch {
+            stats.full_flushes += 1;
+        } else if timed_out {
+            stats.deadline_flushes += 1;
+        } else {
+            stats.shutdown_flushes += 1;
+        }
+        stats.batches += 1;
+        stats.requests += pending.len() as u64;
+        stats.max_batch = stats.max_batch.max(pending.len());
+        seq += 1;
+        if tx.send(Batch { seq, requests: pending }).is_err() {
+            break; // workers are gone; nobody left to serve
+        }
+        if disconnected {
+            break;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        Request { id, vertex: id as u32, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn oversized_burst_splits_into_full_batches() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (batch_tx, batch_rx) = mpsc::channel();
+        for i in 0..10 {
+            req_tx.send(req(i)).unwrap();
+        }
+        drop(req_tx);
+        let stats = batcher_loop(req_rx, batch_tx, 4, Duration::from_secs(5));
+        let sizes: Vec<usize> = batch_rx.iter().map(|b| b.requests.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(stats.batches, 3);
+        assert_eq!(stats.requests, 10);
+        assert_eq!(stats.full_flushes, 2);
+        assert_eq!(stats.max_batch, 4);
+        // Order and ids survive coalescing.
+        assert_eq!(stats.deadline_flushes, 0);
+    }
+
+    #[test]
+    fn single_straggler_is_flushed_at_the_deadline() {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (batch_tx, batch_rx) = mpsc::channel();
+        let t = std::thread::spawn(move || {
+            batcher_loop(req_rx, batch_tx, 64, Duration::from_millis(20))
+        });
+        req_tx.send(req(7)).unwrap();
+        // Well under max_batch: only the deadline can flush it.
+        let b = batch_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.requests[0].id, 7);
+        drop(req_tx);
+        let stats = t.join().unwrap();
+        assert!(stats.deadline_flushes >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn shutdown_with_empty_queue_emits_nothing() {
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel();
+        drop(req_tx);
+        let stats = batcher_loop(req_rx, batch_tx, 8, Duration::from_millis(5));
+        assert_eq!(stats.batches, 0);
+        assert!(batch_rx.iter().next().is_none());
+    }
+}

@@ -1,0 +1,321 @@
+//! Workload generation and the benchmark driver.
+//!
+//! [`zipf_workload`] draws a request stream whose vertex popularity
+//! follows a Zipf distribution over the *degree-hottest* vertices of the
+//! graph (rank 1 = highest degree), which is the regime the
+//! cross-request cache is built for: a small hot set absorbs most
+//! requests. [`run_driver`] replays such a stream against a live
+//! [`ServerHandle`] under either open-loop pacing (a target request
+//! rate, queueing delay included in latency) or closed-loop pacing (a
+//! fixed number of outstanding requests), and verifies on the fly that
+//! every response for a given vertex is bit-identical — the serving
+//! determinism contract, checked across batches, workers, and cache
+//! hits.
+
+use crate::graph::Graph;
+use crate::serve::engine::{hot_vertices, Response, ServerHandle};
+use crate::serve::metrics::LatencyStats;
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// How the driver paces submissions.
+#[derive(Clone, Copy, Debug)]
+pub enum Pacing {
+    /// Open loop: submit at `qps` requests/second regardless of
+    /// completions (measures latency under a fixed offered load).
+    Open {
+        /// Offered request rate per second.
+        qps: f64,
+    },
+    /// Closed loop: keep `concurrency` requests outstanding (measures
+    /// sustained throughput).
+    Closed {
+        /// Outstanding requests to maintain.
+        concurrency: usize,
+    },
+}
+
+/// Zipfian request-stream parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Requests to generate.
+    pub requests: usize,
+    /// Zipf skew exponent `s` (≈1.1 is web-like; larger = hotter head).
+    pub zipf_s: f64,
+    /// Popularity ranks to draw from (top-k hottest vertices).
+    pub hot_ranks: usize,
+    /// Workload RNG seed (domain-separated from model/serve seeds).
+    pub seed: u64,
+}
+
+/// Domain tag for the workload RNG stream.
+const ZIPF_TAG: u64 = 0x51E9_7A02_C8D4_3B6F;
+
+/// Draw a Zipf-distributed vertex stream: rank `r` (0-based over the
+/// degree-hottest `hot_ranks` vertices) is chosen with probability
+/// proportional to `(r+1)^-s`.
+pub fn zipf_workload(graph: &Graph, cfg: &WorkloadConfig) -> Vec<u32> {
+    let ranks = cfg.hot_ranks.max(1).min(graph.n().max(1));
+    let hot = hot_vertices(graph);
+    let weights: Vec<f64> = (0..ranks).map(|r| 1.0 / ((r + 1) as f64).powf(cfg.zipf_s)).collect();
+    let mut cdf = Vec::with_capacity(ranks);
+    let mut acc = 0.0f64;
+    for w in &weights {
+        acc += w;
+        cdf.push(acc);
+    }
+    let total = acc;
+    let mut rng = Rng::new(cfg.seed ^ ZIPF_TAG);
+    (0..cfg.requests)
+        .map(|_| {
+            let x = rng.f64() * total;
+            let r = cdf.partition_point(|&c| c < x).min(ranks - 1);
+            hot[r]
+        })
+        .collect()
+}
+
+/// What one driver run measured.
+#[derive(Clone, Debug)]
+pub struct DriverReport {
+    /// Requests submitted.
+    pub sent: u64,
+    /// Responses received by the driver.
+    pub received: u64,
+    /// Median response latency (µs).
+    pub p50_us: u64,
+    /// 99th-percentile response latency (µs).
+    pub p99_us: u64,
+    /// Mean response latency (µs).
+    pub mean_us: f64,
+    /// Worst response latency (µs).
+    pub max_us: u64,
+    /// The rate the driver tried to offer (0 for closed loop).
+    pub offered_qps: f64,
+    /// Responses per second actually sustained.
+    pub sustained_qps: f64,
+    /// Responses answered from the cross-request cache.
+    pub cache_hits: u64,
+    /// `cache_hits / received` (0 when nothing was received).
+    pub hit_rate: f64,
+    /// True iff every vertex's responses were bit-identical.
+    pub consistent: bool,
+    /// FNV-1a digest over the sorted `(vertex, output bits)` pairs —
+    /// equal digests mean bit-equal result sets.
+    pub output_digest: u64,
+    /// Driver wall-clock seconds.
+    pub elapsed_s: f64,
+}
+
+/// Accumulates responses and checks per-vertex bit-stability.
+#[derive(Default)]
+struct Collector {
+    outputs: HashMap<u32, Vec<u32>>,
+    lat: LatencyStats,
+    received: u64,
+    cache_hits: u64,
+    consistent: bool,
+}
+
+impl Collector {
+    fn new() -> Collector {
+        Collector { consistent: true, ..Collector::default() }
+    }
+
+    fn absorb(&mut self, r: Response) {
+        self.received += 1;
+        if r.cache_hit {
+            self.cache_hits += 1;
+        }
+        self.lat.record(r.latency_us);
+        let bits: Vec<u32> = r.output.iter().map(|x| x.to_bits()).collect();
+        if let Some(prev) = self.outputs.get(&r.vertex) {
+            if *prev != bits {
+                self.consistent = false;
+            }
+        } else {
+            self.outputs.insert(r.vertex, bits);
+        }
+    }
+
+    /// Order-independent digest of the distinct per-vertex outputs.
+    fn digest(&self) -> u64 {
+        let mut keys: Vec<u32> = self.outputs.keys().copied().collect();
+        keys.sort_unstable();
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        let mix = |h: &mut u64, b: u64| {
+            for byte in b.to_le_bytes() {
+                *h ^= byte as u64;
+                *h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a prime
+            }
+        };
+        for v in keys {
+            mix(&mut h, v as u64);
+            for &b in &self.outputs[&v] {
+                mix(&mut h, b as u64);
+            }
+        }
+        h
+    }
+}
+
+/// Replay `workload` against `handle` under `pacing`; drains every
+/// response before returning. The handle stays alive — call
+/// [`ServerHandle::shutdown`] afterwards for the server-side report.
+pub fn run_driver(
+    handle: &mut ServerHandle,
+    workload: &[u32],
+    pacing: Pacing,
+) -> Result<DriverReport> {
+    let start = Instant::now();
+    let mut col = Collector::new();
+    let mut sent = 0u64;
+    match pacing {
+        Pacing::Open { qps } => {
+            if qps <= 0.0 {
+                return Err(anyhow!("open-loop qps must be positive"));
+            }
+            for (i, &v) in workload.iter().enumerate() {
+                let target = start + Duration::from_secs_f64(i as f64 / qps);
+                loop {
+                    // Drain while we wait so the response queue stays
+                    // short and latency reflects serving, not the driver.
+                    while let Some(r) = handle.try_recv() {
+                        col.absorb(r);
+                    }
+                    let now = Instant::now();
+                    if now >= target {
+                        break;
+                    }
+                    let nap = target.saturating_duration_since(now);
+                    std::thread::sleep(nap.min(Duration::from_micros(200)));
+                }
+                handle.submit(v)?;
+                sent += 1;
+            }
+        }
+        Pacing::Closed { concurrency } => {
+            if concurrency == 0 {
+                return Err(anyhow!("closed-loop concurrency must be positive"));
+            }
+            let mut next = 0usize;
+            // Prime the window, then one-in-one-out.
+            while next < workload.len() && next < concurrency {
+                handle.submit(workload[next])?;
+                next += 1;
+                sent += 1;
+            }
+            let mut outstanding = next as u64;
+            while outstanding > 0 {
+                let r = handle
+                    .recv_timeout(Duration::from_secs(30))
+                    .ok_or_else(|| anyhow!("server stalled: no response within 30s"))?;
+                col.absorb(r);
+                outstanding -= 1;
+                if next < workload.len() {
+                    handle.submit(workload[next])?;
+                    next += 1;
+                    sent += 1;
+                    outstanding += 1;
+                }
+            }
+        }
+    }
+    // Final drain: everything submitted must come back (compute errors
+    // excepted, which the server reports separately).
+    while col.received < sent {
+        match handle.recv_timeout(Duration::from_secs(30)) {
+            Some(r) => col.absorb(r),
+            None => break,
+        }
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let offered_qps = match pacing {
+        Pacing::Open { qps } => qps,
+        Pacing::Closed { .. } => 0.0,
+    };
+    Ok(DriverReport {
+        sent,
+        received: col.received,
+        p50_us: col.lat.percentile(50.0),
+        p99_us: col.lat.percentile(99.0),
+        mean_us: col.lat.mean_us(),
+        max_us: col.lat.max_us(),
+        offered_qps,
+        sustained_qps: if elapsed_s > 0.0 { col.received as f64 / elapsed_s } else { 0.0 },
+        cache_hits: col.cache_hits,
+        hit_rate: if col.received > 0 { col.cache_hits as f64 / col.received as f64 } else { 0.0 },
+        consistent: col.consistent,
+        output_digest: col.digest(),
+        elapsed_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_graph(n: usize) -> Graph {
+        let mut edges = Vec::new();
+        for v in 1..n as u32 {
+            edges.push((v - 1, v));
+        }
+        // Make vertex 0 the clear degree leader.
+        for v in 2..(n as u32).min(12) {
+            edges.push((0, v));
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn zipf_workload_is_deterministic_and_head_heavy() {
+        let g = chain_graph(64);
+        let cfg = WorkloadConfig { requests: 4000, zipf_s: 1.1, hot_ranks: 32, seed: 5 };
+        let a = zipf_workload(&g, &cfg);
+        let b = zipf_workload(&g, &cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4000);
+        let hottest = hot_vertices(&g)[0];
+        let head = a.iter().filter(|&&v| v == hottest).count();
+        // Rank 1 under s=1.1 over 32 ranks carries >20% of the mass.
+        assert!(head > 4000 / 10, "head got {head}");
+        for &v in &a {
+            assert!((v as usize) < 64);
+        }
+    }
+
+    #[test]
+    fn zipf_hot_ranks_clamps_to_graph_size() {
+        let g = chain_graph(8);
+        let cfg = WorkloadConfig { requests: 100, zipf_s: 1.5, hot_ranks: 1000, seed: 1 };
+        let w = zipf_workload(&g, &cfg);
+        assert!(w.iter().all(|&v| (v as usize) < 8));
+    }
+
+    #[test]
+    fn collector_flags_inconsistent_outputs_and_digests_stably() {
+        let mk = |v: u32, out: Vec<f32>, hit: bool| Response {
+            id: 0,
+            vertex: v,
+            output: out,
+            cache_hit: hit,
+            batch: 1,
+            worker: 0,
+            latency_us: 10,
+        };
+        let mut a = Collector::new();
+        a.absorb(mk(3, vec![1.0, 2.0], false));
+        a.absorb(mk(3, vec![1.0, 2.0], true));
+        assert!(a.consistent);
+        assert_eq!(a.cache_hits, 1);
+        let mut b = Collector::new();
+        b.absorb(mk(3, vec![1.0, 2.0], true));
+        assert_eq!(a.digest(), b.digest(), "digest ignores duplicates/order");
+        let mut c = Collector::new();
+        c.absorb(mk(3, vec![1.0, 2.0], false));
+        c.absorb(mk(3, vec![1.0, 2.5], false));
+        assert!(!c.consistent);
+    }
+}

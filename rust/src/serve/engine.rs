@@ -1,0 +1,539 @@
+//! The serving engine: worker pool, request-level cache, response path.
+//!
+//! [`Server::start`] spins up one micro-batcher thread (see
+//! [`crate::serve::batcher`]) and `workers` compute threads sharing a
+//! single batch queue. Each worker owns its own
+//! [`NativeBackend`], probes the shared [`ServeCache`] per request, and
+//! on a miss recomputes the vertex's output via [`serve_output`] — the
+//! pure function `(model, graph, fanout, serve seed, vertex) → row` —
+//! then offers the row back to the cache with the vertex's degree as
+//! admission heat.
+//!
+//! # Determinism
+//!
+//! Everything that could vary at runtime is excluded from the output's
+//! inputs: block extraction draws from [`crate::sample::serve_rng`]`(seed,
+//! v)` (never the micro-batch composition, the worker id, or arrival
+//! order), input rows are the raw `f32` features (serving does no wire
+//! quantization), and the forward pass runs the same `Backend` kernels
+//! with a fixed accumulation order. A cached row is byte-for-byte the
+//! row a recompute would produce, so hit-vs-miss, batch boundaries, and
+//! worker counts are all unobservable in the responses.
+
+use crate::cache::{PolicyKind, ServeCache, ServeCacheStats};
+use crate::graph::{Dataset, Graph, NodeData};
+use crate::model::{GnnModel, TrainedModel};
+use crate::runtime::{Backend, NativeBackend};
+use crate::sample::{extract_vertex_block, Fanout};
+use crate::serve::batcher::{batcher_loop, Batch, BatcherStats, Request};
+use crate::serve::metrics::{LatencyBucket, LatencyStats, LatencySummary};
+use crate::train::sampled::forward_block;
+use anyhow::{anyhow, Result};
+use std::cmp::Reverse;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Flush a micro-batch at this many requests.
+    pub max_batch: usize,
+    /// Flush a partial micro-batch once its oldest request has waited
+    /// this many microseconds.
+    pub max_wait_us: u64,
+    /// Compute worker threads.
+    pub workers: usize,
+    /// Per-layer neighbor fanout for the sampled forward pass.
+    pub fanout: Fanout,
+    /// Cross-request cache capacity in rows (0 disables caching).
+    pub cache_capacity: usize,
+    /// Hottest vertices to pre-compute into the cache at startup.
+    pub prepopulate: usize,
+    /// Serve seed: keys per-vertex block extraction (see
+    /// [`crate::sample::serve_rng`]).
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// Defaults for a model with `layers` GNN layers: batch 32, 1 ms
+    /// deadline, 2 workers, fanout 10 per layer, 1024-row cache with the
+    /// 512 hottest vertices pre-populated.
+    pub fn new(layers: usize) -> ServeConfig {
+        ServeConfig {
+            max_batch: 32,
+            max_wait_us: 1000,
+            workers: 2,
+            fanout: Fanout(vec![10; layers]),
+            cache_capacity: 1024,
+            prepopulate: 512,
+            seed: 42,
+        }
+    }
+
+    /// Check the knobs against the model and feature table they will
+    /// serve.
+    pub fn validate(&self, model: &TrainedModel, data: &NodeData) -> Result<()> {
+        if self.max_batch < 1 {
+            return Err(anyhow!("--max-batch must be at least 1"));
+        }
+        if self.workers < 1 {
+            return Err(anyhow!("--serve-workers must be at least 1"));
+        }
+        if self.fanout.0.len() != model.layers() {
+            return Err(anyhow!(
+                "fanout has {} entries but the model has {} layers",
+                self.fanout.0.len(),
+                model.layers()
+            ));
+        }
+        if self.fanout.0.iter().any(|&k| k == 0) {
+            return Err(anyhow!("fanout entries must be positive"));
+        }
+        if model.f_dim() != data.f_dim {
+            return Err(anyhow!(
+                "model expects {}-wide features but the dataset has width {}",
+                model.f_dim(),
+                data.f_dim
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Compute one vertex's served output row — the pure function behind
+/// every response, cache fill, and pre-population pass.
+///
+/// Extracts the vertex's sampled block under [`crate::sample::serve_rng`],
+/// assembles raw (unquantized) feature rows, runs the `Backend` forward
+/// kernels, and returns the vertex's final-layer row (`out_dim` wide,
+/// i.e. padded class logits for a classifier).
+pub fn serve_output(
+    graph: &Graph,
+    data: &NodeData,
+    model: &GnnModel,
+    fanout: &Fanout,
+    seed: u64,
+    v: u32,
+    backend: &mut dyn Backend,
+) -> Result<Vec<f32>> {
+    if (v as usize) >= graph.n() {
+        return Err(anyhow!("vertex {v} out of range (graph has {} vertices)", graph.n()));
+    }
+    let block = extract_vertex_block(graph, v, fanout, model.kind, seed);
+    let n = block.n();
+    let f = data.f_dim;
+    let mut h0 = vec![0.0f32; n * f];
+    for (i, &u) in block.vertices.iter().enumerate() {
+        h0[i * f..(i + 1) * f].copy_from_slice(data.feature_row(u));
+    }
+    let h = forward_block(&block, h0, model, backend)?;
+    let layers = model.dims.len();
+    let d_out = model.dims[layers - 1].d_out;
+    let r = block.seed_rows[0];
+    Ok(h[layers][r * d_out..(r + 1) * d_out].to_vec())
+}
+
+/// Vertices sorted hottest-first: by descending degree, ties by
+/// ascending id. The prefix of this order is what pre-population warms
+/// and what a Zipfian workload hammers.
+pub fn hot_vertices(g: &Graph) -> Vec<u32> {
+    let mut vs: Vec<u32> = (0..g.n() as u32).collect();
+    vs.sort_by_key(|&v| (Reverse(g.degree(v)), v));
+    vs
+}
+
+/// Immutable inputs every worker shares.
+struct ServeState {
+    graph: Graph,
+    data: NodeData,
+    model: TrainedModel,
+    fanout: Fanout,
+    seed: u64,
+}
+
+/// Shared mutable serving state (cache + latency recorder).
+struct Shared {
+    state: ServeState,
+    cache: Mutex<ServeCache>,
+    lat: Mutex<LatencyStats>,
+}
+
+/// Per-worker counters, summed into the [`ServeReport`] at shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerStats {
+    served: u64,
+    computed: u64,
+    errors: u64,
+}
+
+/// One answered request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id from [`ServerHandle::submit`].
+    pub id: u64,
+    /// The requested vertex.
+    pub vertex: u32,
+    /// The served output row (`out_dim` wide).
+    pub output: Vec<f32>,
+    /// True when answered from the cross-request cache.
+    pub cache_hit: bool,
+    /// Micro-batch sequence number the request rode in.
+    pub batch: u64,
+    /// Worker that produced the response.
+    pub worker: usize,
+    /// Queue-to-response latency in microseconds.
+    pub latency_us: u64,
+}
+
+/// End-of-run serving metrics, produced by [`ServerHandle::shutdown`].
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests submitted.
+    pub requests: u64,
+    /// Responses produced.
+    pub responses: u64,
+    /// Responses that required a forward pass (cache misses).
+    pub computed: u64,
+    /// Requests dropped by compute errors.
+    pub compute_errors: u64,
+    /// Micro-batches emitted.
+    pub batches: u64,
+    /// Batches flushed at `max_batch`.
+    pub full_flushes: u64,
+    /// Batches flushed by the wait deadline.
+    pub deadline_flushes: u64,
+    /// Largest micro-batch observed.
+    pub max_batch_seen: usize,
+    /// Responses per worker (length = worker count).
+    pub worker_served: Vec<u64>,
+    /// Cross-request cache counters.
+    pub cache: ServeCacheStats,
+    /// Rows resident at shutdown.
+    pub cache_len: usize,
+    /// Cache capacity in rows.
+    pub cache_capacity: usize,
+    /// Latency headline numbers (queue-to-response).
+    pub latency: LatencySummary,
+    /// Non-empty log2 latency buckets.
+    pub latency_histogram: Vec<LatencyBucket>,
+    /// Wall-clock seconds from start to shutdown.
+    pub elapsed_s: f64,
+    /// Sustained responses per second over the server's lifetime.
+    pub qps: f64,
+}
+
+/// The serving subsystem; [`Server::start`] is the only entry point.
+pub struct Server;
+
+impl Server {
+    /// Validate, pre-populate the cache with the hottest vertices, and
+    /// launch the batcher plus `cfg.workers` compute threads. The
+    /// returned handle owns the request and response endpoints.
+    pub fn start(
+        dataset: &Dataset,
+        model: TrainedModel,
+        cfg: &ServeConfig,
+    ) -> Result<ServerHandle> {
+        cfg.validate(&model, &dataset.data)?;
+        let state = ServeState {
+            graph: dataset.graph.clone(),
+            data: dataset.data.clone(),
+            model,
+            fanout: cfg.fanout.clone(),
+            seed: cfg.seed,
+        };
+
+        // Heat pass: pre-compute the highest-degree vertices so a
+        // Zipfian mix hits from the first request.
+        let mut cache = ServeCache::new(PolicyKind::Jaca, cfg.cache_capacity);
+        let warm = cfg.prepopulate.min(cfg.cache_capacity).min(state.graph.n());
+        if warm > 0 {
+            let hot = hot_vertices(&state.graph);
+            let mut backend = NativeBackend::new();
+            for &v in &hot[..warm] {
+                let row = serve_output(
+                    &state.graph,
+                    &state.data,
+                    &state.model.model,
+                    &state.fanout,
+                    state.seed,
+                    v,
+                    &mut backend,
+                )?;
+                let heat = (state.graph.degree(v) + 1).min(u32::MAX as usize) as u32;
+                cache.prepopulate(v, heat, row);
+            }
+        }
+
+        let shared = Arc::new(Shared {
+            state,
+            cache: Mutex::new(cache),
+            lat: Mutex::new(LatencyStats::new()),
+        });
+
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+
+        let max_batch = cfg.max_batch;
+        let max_wait = Duration::from_micros(cfg.max_wait_us);
+        let batcher =
+            std::thread::spawn(move || batcher_loop(req_rx, batch_tx, max_batch, max_wait));
+
+        let queue = Arc::new(Mutex::new(batch_rx));
+        let n_vertices = shared.state.graph.n();
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let queue = Arc::clone(&queue);
+            let resp_tx = resp_tx.clone();
+            workers.push(std::thread::spawn(move || worker_loop(wid, shared, queue, resp_tx)));
+        }
+        drop(resp_tx); // workers hold the only senders now
+
+        Ok(ServerHandle {
+            req_tx: Some(req_tx),
+            resp_rx,
+            batcher: Some(batcher),
+            workers,
+            shared,
+            n_vertices,
+            next_id: 0,
+            submitted: 0,
+            started: Instant::now(),
+        })
+    }
+}
+
+/// One worker: pull a batch, answer each request (cache probe, else
+/// recompute + admit), record latency, emit responses.
+fn worker_loop(
+    wid: usize,
+    shared: Arc<Shared>,
+    queue: Arc<Mutex<Receiver<Batch>>>,
+    resp_tx: Sender<Response>,
+) -> WorkerStats {
+    let mut backend = NativeBackend::new();
+    let mut stats = WorkerStats::default();
+    let st = &shared.state;
+    loop {
+        // Hold the queue lock only for the dequeue, not the compute.
+        let batch = match queue.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => break, // batcher exited and the queue drained
+        };
+        let seq = batch.seq;
+        for req in batch.requests {
+            let cached: Option<Vec<f32>> = {
+                let mut c = shared.cache.lock().unwrap();
+                c.lookup(req.vertex).map(|row| row.to_vec())
+            };
+            let (output, cache_hit) = match cached {
+                Some(row) => (row, true),
+                None => {
+                    let row = match serve_output(
+                        &st.graph,
+                        &st.data,
+                        &st.model.model,
+                        &st.fanout,
+                        st.seed,
+                        req.vertex,
+                        &mut backend,
+                    ) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            stats.errors += 1;
+                            continue;
+                        }
+                    };
+                    stats.computed += 1;
+                    let heat = (st.graph.degree(req.vertex) + 1).min(u32::MAX as usize) as u32;
+                    let mut c = shared.cache.lock().unwrap();
+                    c.admit(req.vertex, heat, row.clone());
+                    (row, false)
+                }
+            };
+            let latency_us = req.enqueued.elapsed().as_micros() as u64;
+            shared.lat.lock().unwrap().record(latency_us);
+            stats.served += 1;
+            let resp = Response {
+                id: req.id,
+                vertex: req.vertex,
+                output,
+                cache_hit,
+                batch: seq,
+                worker: wid,
+                latency_us,
+            };
+            if resp_tx.send(resp).is_err() {
+                return stats; // receiver gone: stop serving
+            }
+        }
+    }
+    stats
+}
+
+/// Live handle to a running server: submit requests, drain responses,
+/// then [`ServerHandle::shutdown`] for the report.
+pub struct ServerHandle {
+    req_tx: Option<Sender<Request>>,
+    resp_rx: Receiver<Response>,
+    batcher: Option<JoinHandle<BatcherStats>>,
+    workers: Vec<JoinHandle<WorkerStats>>,
+    shared: Arc<Shared>,
+    n_vertices: usize,
+    next_id: u64,
+    submitted: u64,
+    started: Instant,
+}
+
+impl ServerHandle {
+    /// Enqueue a request for `vertex`; returns its request id.
+    pub fn submit(&mut self, vertex: u32) -> Result<u64> {
+        if (vertex as usize) >= self.n_vertices {
+            return Err(anyhow!(
+                "vertex {vertex} out of range (graph has {} vertices)",
+                self.n_vertices
+            ));
+        }
+        let id = self.next_id;
+        let req = Request { id, vertex, enqueued: Instant::now() };
+        self.req_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server is shutting down"))?
+            .send(req)
+            .map_err(|_| anyhow!("request queue closed"))?;
+        self.next_id += 1;
+        self.submitted += 1;
+        Ok(id)
+    }
+
+    /// Non-blocking response poll.
+    pub fn try_recv(&self) -> Option<Response> {
+        self.resp_rx.try_recv().ok()
+    }
+
+    /// Blocking response poll with a deadline.
+    pub fn recv_timeout(&self, d: Duration) -> Option<Response> {
+        self.resp_rx.recv_timeout(d).ok()
+    }
+
+    /// Close the request side, let the pipeline drain, join every
+    /// thread, and assemble the end-of-run report. Undrained responses
+    /// still count (latency is recorded at the worker).
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        drop(self.req_tx.take());
+        let bstats: BatcherStats = self
+            .batcher
+            .take()
+            .expect("shutdown runs once")
+            .join()
+            .map_err(|_| anyhow!("batcher thread panicked"))?;
+        let mut worker_served = Vec::with_capacity(self.workers.len());
+        let mut computed = 0u64;
+        let mut errors = 0u64;
+        let mut responses = 0u64;
+        for h in self.workers.drain(..) {
+            let w = h.join().map_err(|_| anyhow!("worker thread panicked"))?;
+            worker_served.push(w.served);
+            responses += w.served;
+            computed += w.computed;
+            errors += w.errors;
+        }
+        let elapsed_s = self.started.elapsed().as_secs_f64();
+        let lat = self.shared.lat.lock().unwrap();
+        let cache = self.shared.cache.lock().unwrap();
+        Ok(ServeReport {
+            requests: self.submitted,
+            responses,
+            computed,
+            compute_errors: errors,
+            batches: bstats.batches,
+            full_flushes: bstats.full_flushes,
+            deadline_flushes: bstats.deadline_flushes,
+            max_batch_seen: bstats.max_batch,
+            worker_served,
+            cache: cache.stats,
+            cache_len: cache.len(),
+            cache_capacity: cache.capacity(),
+            latency: lat.summary(),
+            latency_histogram: lat.histogram(),
+            elapsed_s,
+            qps: if elapsed_s > 0.0 { responses as f64 / elapsed_s } else { 0.0 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::synthetic_node_data;
+
+    fn tiny_dataset(n: usize, seed: u64) -> Dataset {
+        let mut edges = Vec::new();
+        for v in 1..n as u32 {
+            edges.push((0u32, v)); // star: vertex 0 is hottest
+            edges.push((v, (v % 7) + 1));
+        }
+        let graph = Graph::from_edges(n, &edges);
+        let data = synthetic_node_data(&graph, 6, 4, seed);
+        Dataset { name: "serve-tiny", label: "St", graph, data }
+    }
+
+    fn tiny_model(data: &NodeData, seed: u64) -> TrainedModel {
+        let dims = crate::model::layer_stack(data.f_dim, 8, data.num_classes.max(2), 2);
+        let mut rng = crate::util::Rng::new(seed);
+        let model = GnnModel::new(crate::model::ModelKind::Gcn, dims, &mut rng);
+        TrainedModel::new(model, seed)
+    }
+
+    #[test]
+    fn serve_output_is_deterministic_and_out_dim_wide() {
+        let ds = tiny_dataset(40, 3);
+        let tm = tiny_model(&ds.data, 9);
+        let mut be = NativeBackend::new();
+        let fo = tm_fanout(&tm);
+        let a = serve_output(&ds.graph, &ds.data, &tm.model, &fo, 7, 5, &mut be).unwrap();
+        let b = serve_output(&ds.graph, &ds.data, &tm.model, &fo, 7, 5, &mut be).unwrap();
+        assert_eq!(a.len(), tm.out_dim());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        // Out-of-range vertex is rejected, not panicked on.
+        assert!(serve_output(&ds.graph, &ds.data, &tm.model, &fo, 7, 40, &mut be).is_err());
+    }
+
+    fn tm_fanout(tm: &TrainedModel) -> Fanout {
+        Fanout(vec![4; tm.layers()])
+    }
+
+    #[test]
+    fn hot_vertices_orders_by_degree_then_id() {
+        let ds = tiny_dataset(30, 1);
+        let hot = hot_vertices(&ds.graph);
+        assert_eq!(hot.len(), 30);
+        assert_eq!(hot[0], 0, "star center is hottest");
+        for w in hot.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (da, db) = (ds.graph.degree(a), ds.graph.degree(b));
+            assert!(da > db || (da == db && a < b), "order broken at {a}->{b}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let ds = tiny_dataset(20, 2);
+        let tm = tiny_model(&ds.data, 4);
+        let mut cfg = ServeConfig::new(tm.layers());
+        assert!(cfg.validate(&tm, &ds.data).is_ok());
+        cfg.max_batch = 0;
+        assert!(cfg.validate(&tm, &ds.data).is_err());
+        cfg.max_batch = 8;
+        cfg.workers = 0;
+        assert!(cfg.validate(&tm, &ds.data).is_err());
+        cfg.workers = 1;
+        cfg.fanout = Fanout(vec![4]); // wrong depth for a 2-layer model
+        assert!(cfg.validate(&tm, &ds.data).is_err());
+    }
+}

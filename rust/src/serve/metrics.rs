@@ -1,0 +1,170 @@
+//! Request-latency accounting for the serving path.
+//!
+//! Latencies are recorded in whole microseconds, queue-to-response (the
+//! clock starts when [`crate::serve::ServerHandle::submit`] enqueues the
+//! request, so batching wait, cache probing, and compute are all
+//! included). Percentiles are exact — the full sample vector is kept and
+//! sorted on demand — which is fine at bench scale (tens of thousands of
+//! requests, 8 bytes each) and keeps p99 trustworthy for the gate.
+
+/// Exact latency recorder (one `u64` per request).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<u64>,
+    sum: u64,
+    max: u64,
+}
+
+/// Snapshot of the headline latency numbers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    /// Requests recorded.
+    pub count: u64,
+    /// Mean latency in microseconds.
+    pub mean_us: f64,
+    /// Median latency in microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile latency in microseconds.
+    pub p99_us: u64,
+    /// Worst observed latency in microseconds.
+    pub max_us: u64,
+}
+
+/// One bar of the log2 latency histogram: `lo_us <= latency < hi_us`.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyBucket {
+    /// Inclusive lower bound (µs).
+    pub lo_us: u64,
+    /// Exclusive upper bound (µs).
+    pub hi_us: u64,
+    /// Requests that landed in this bucket.
+    pub count: u64,
+}
+
+impl LatencyStats {
+    /// Empty recorder.
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    /// Record one request's latency in microseconds.
+    pub fn record(&mut self, us: u64) {
+        self.samples.push(us);
+        self.sum += us;
+        self.max = self.max.max(us);
+    }
+
+    /// Requests recorded.
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// Mean latency (µs); 0 when empty.
+    pub fn mean_us(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum as f64 / self.samples.len() as f64
+        }
+    }
+
+    /// Worst latency (µs).
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact percentile by nearest-rank interpolation index; 0 when
+    /// empty. `pct` is in `[0, 100]`.
+    pub fn percentile(&self, pct: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let idx = ((pct / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Headline numbers in one struct.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile(50.0),
+            p99_us: self.percentile(99.0),
+            max_us: self.max_us(),
+        }
+    }
+
+    /// Non-empty log2 buckets: `[0,1) [1,2) [2,4) [4,8) …` µs.
+    pub fn histogram(&self) -> Vec<LatencyBucket> {
+        // Bucket index: 0 for latency 0, else 1 + floor(log2(us)).
+        let mut counts = [0u64; 65];
+        for &us in &self.samples {
+            let b = if us == 0 { 0 } else { 64 - (us.leading_zeros() as usize) };
+            counts[b] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| LatencyBucket {
+                lo_us: if b == 0 { 0 } else { 1u64 << (b - 1) },
+                hi_us: if b >= 64 { u64::MAX } else { 1u64 << b },
+                count: c,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats_report_zeros() {
+        let l = LatencyStats::new();
+        assert_eq!(l.count(), 0);
+        assert_eq!(l.mean_us(), 0.0);
+        assert_eq!(l.percentile(50.0), 0);
+        assert_eq!(l.percentile(99.0), 0);
+        assert!(l.histogram().is_empty());
+    }
+
+    #[test]
+    fn percentiles_are_exact_on_known_data() {
+        let mut l = LatencyStats::new();
+        for us in 1..=100u64 {
+            l.record(us);
+        }
+        assert_eq!(l.count(), 100);
+        assert_eq!(l.max_us(), 100);
+        assert_eq!(l.percentile(0.0), 1);
+        assert_eq!(l.percentile(100.0), 100);
+        let p50 = l.percentile(50.0);
+        assert!((50..=51).contains(&p50), "p50 {p50}");
+        let p99 = l.percentile(99.0);
+        assert!((99..=100).contains(&p99), "p99 {p99}");
+        assert!((l.mean_us() - 50.5).abs() < 1e-9);
+        let s = l.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p99_us, p99);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_and_cover_all_samples() {
+        let mut l = LatencyStats::new();
+        for us in [0u64, 1, 3, 5, 6, 7, 1000] {
+            l.record(us);
+        }
+        let h = l.histogram();
+        let total: u64 = h.iter().map(|b| b.count).sum();
+        assert_eq!(total, 7);
+        for b in &h {
+            assert!(b.lo_us < b.hi_us);
+        }
+        // 3 lands in [2,4); 5,6,7 land in [4,8); 1000 in [512,1024).
+        assert!(h.iter().any(|b| b.lo_us == 4 && b.hi_us == 8 && b.count == 3));
+        assert!(h.iter().any(|b| b.lo_us == 512 && b.hi_us == 1024 && b.count == 1));
+    }
+}

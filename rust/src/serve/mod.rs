@@ -1,0 +1,56 @@
+//! Online inference serving (PR 7): answer per-vertex embedding /
+//! classification requests over a trained model and a loaded graph.
+//!
+//! # Request lifecycle
+//!
+//! 1. A client calls [`ServerHandle::submit`]`(v)`; the request is
+//!    stamped with its enqueue time (the latency clock) and dropped on
+//!    the request channel.
+//! 2. The **micro-batcher** thread ([`batcher`]) coalesces requests
+//!    under two knobs — flush at `max_batch` requests, or when the
+//!    oldest pending request has waited `max_wait_us` — so a burst is
+//!    split into full batches while a lone straggler is still answered
+//!    within the deadline.
+//! 3. A **worker** (one of `workers` threads, each owning its own
+//!    [`crate::runtime::NativeBackend`]) picks the batch up. Per
+//!    request it probes the shared cross-request [`crate::cache::ServeCache`];
+//!    on a miss it recomputes via [`serve_output`] — sampled block
+//!    extraction ([`crate::sample::extract_vertex_block`]) plus the
+//!    shared `Backend` forward kernels — and offers the row back with
+//!    the vertex's degree as JACA admission heat.
+//! 4. The response (output row, hit flag, batch/worker provenance,
+//!    latency) returns on the response channel; shutdown drains the
+//!    pipeline and folds batcher, worker, cache, and latency counters
+//!    into a [`ServeReport`].
+//!
+//! # Determinism
+//!
+//! A response is a pure function of `(model, graph, fanout, serve seed,
+//! vertex)`: block extraction draws from [`crate::sample::serve_rng`],
+//! which is keyed only by `(seed, vertex)` — never by micro-batch
+//! composition, worker id, or arrival order — and serving feeds raw
+//! `f32` features (no wire quantization) through fixed-order kernels.
+//! The cache stores exactly that pure function's output, so cache
+//! hit-vs-miss is unobservable bit-for-bit. [`run_driver`] re-verifies
+//! the contract on every run and reports any violation.
+//!
+//! # Cache pre-population
+//!
+//! At startup the server computes the `prepopulate` highest-degree
+//! vertices ([`hot_vertices`]) into the cache. Under the Zipfian
+//! request mixes serving sees in practice (and that [`zipf_workload`]
+//! generates), popularity tracks degree, so the very first wave of hot
+//! requests already hits — and JACA's priority admission keeps one-off
+//! cold vertices from displacing the warmed head.
+
+pub mod batcher;
+pub mod driver;
+pub mod engine;
+pub mod metrics;
+
+pub use batcher::{Batch, BatcherStats, Request};
+pub use driver::{run_driver, zipf_workload, DriverReport, Pacing, WorkloadConfig};
+pub use engine::{
+    hot_vertices, serve_output, Response, ServeConfig, ServeReport, Server, ServerHandle,
+};
+pub use metrics::{LatencyBucket, LatencyStats, LatencySummary};

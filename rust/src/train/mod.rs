@@ -1,13 +1,16 @@
-//! The full-batch multi-worker trainer, staged as a session: composes
-//! partitioning (RAPA or a baseline partitioner), the two-level JACA
-//! cache, the exchange engine, the pipeline model, and a compute backend
-//! into the paper's training loop.
+//! The multi-worker trainer, staged as a session: composes partitioning
+//! (RAPA or a baseline partitioner), the two-level JACA cache, the
+//! exchange engine, the pipeline model, and a compute backend into the
+//! paper's training loop.
 //!
-//! - [`Session`] — the staged API: build once (Partition → Cache), then
-//!   `run_epoch()` / `eval()` / observers.
+//! - [`run`] / [`run_with`] — the unified entry: dispatch on
+//!   [`TrainConfig::mode`], drive the session, return the
+//!   [`TrainReport`] plus the [`crate::model::TrainedModel`] artifact.
+//! - [`Session`] — the staged full-batch API: build once (Partition →
+//!   Cache), then `run_epoch()` / `eval()` / observers.
 //! - [`SampledSession`] — the mini-batch neighbor-sampled counterpart
 //!   (`--mode sampled`), built over [`crate::sample`].
-//! - [`train`] — the legacy one-call shim over a `Session`.
+//! - [`train`] — the deprecated legacy one-call shim (use [`run`]).
 
 pub mod report;
 pub mod sampled;
@@ -20,4 +23,8 @@ pub use session::{
     ConvergenceLog, EarlyStopping, EpochObserver, EpochStats, EvalStats, PeriodicRefresh,
     Session, Signal,
 };
-pub use trainer::{train, CapacityMode, ExecMode, TrainConfig, TrainMode};
+#[allow(deprecated)]
+pub use trainer::train;
+pub use trainer::{
+    run, run_with, CapacityMode, ExecMode, RunOptions, RunOutcome, TrainConfig, TrainMode,
+};

@@ -43,7 +43,7 @@ use crate::comm::exchange::{ExchangeEngine, ExchangeParams};
 use crate::device::simclock::{StageTimes, WallStages};
 use crate::dist::Cluster;
 use crate::graph::{Dataset, Graph, NodeData};
-use crate::model::{layer_stack, GnnModel, LayerDims, ModelKind};
+use crate::model::{layer_stack, GnnModel, LayerDims, ModelKind, TrainedModel};
 use crate::partition::halo::{build_plan, SubgraphPlan};
 use crate::partition::rapa;
 use crate::runtime::Backend;
@@ -315,7 +315,7 @@ impl<'a> SampledSession<'a> {
     ) -> Result<TrainReport> {
         let mut session = SampledSession::build(dataset, cluster, backend, cfg)?;
         session.run_epochs(cfg.epochs)?;
-        session.finish()
+        Ok(session.finish()?.0)
     }
 
     /// Run one sampled epoch: shuffle → extract blocks → per-batch
@@ -485,13 +485,16 @@ impl<'a> SampledSession<'a> {
         Ok(EvalStats { val_acc, test_acc })
     }
 
-    /// Close the run: final test accuracy, cache stats, wallclock.
-    pub fn finish(mut self) -> Result<TrainReport> {
+    /// Close the run: final test accuracy, cache stats, wallclock — plus
+    /// the trained weights as a [`TrainedModel`] artifact ready for
+    /// `.cgm` export and `capgnn serve`.
+    pub fn finish(mut self) -> Result<(TrainReport, TrainedModel)> {
         let ev = self.eval()?;
         self.report.test_acc = ev.test_acc;
         self.report.cache = self.cache.stats;
         self.report.wallclock = self.wall.elapsed().as_secs_f64();
-        Ok(self.report)
+        let SampledSession { cfg, model, report, .. } = self;
+        Ok((report, TrainedModel::new(model, cfg.seed)))
     }
 
     /// Epochs completed so far.
@@ -501,18 +504,18 @@ impl<'a> SampledSession<'a> {
 }
 
 /// Forward through all layers on a block; returns the activations
-/// (`h[0] = X_block … h[L] = logits`). `charge` receives per-layer
-/// simulated compute when training (None for eval).
-#[allow(clippy::too_many_arguments)]
-fn forward_block(
+/// (`h[0] = X_block … h[L] = logits`). Shared by sampled training, eval,
+/// and the serving path (`crate::serve`): it only reads the block and
+/// the model, so identical inputs produce bit-identical activations
+/// wherever it runs.
+pub(crate) fn forward_block(
     block: &SampledBlock,
     h0: Vec<f32>,
-    cfg: &TrainConfig,
     model: &GnnModel,
-    dims: &[LayerDims],
     backend: &mut dyn Backend,
 ) -> Result<Vec<Vec<f32>>> {
     let n = block.n();
+    let dims = &model.dims;
     let mut h: Vec<Vec<f32>> = Vec::with_capacity(dims.len() + 1);
     h.push(h0);
     for d in dims {
@@ -522,7 +525,7 @@ fn forward_block(
         let (head, tail) = h.split_at_mut(l + 1);
         let h_in = &head[l];
         let h_out = &mut tail[0];
-        match cfg.model {
+        match model.kind {
             ModelKind::Gcn => backend.gcn_fwd(
                 n,
                 d.d_in,
@@ -645,7 +648,7 @@ fn process_batch(
     // ---- Forward + loss -------------------------------------------------
     let gpu = &engine.gpus[owner_w];
     let mut bstage = StageTimes::default();
-    let h = forward_block(block, h0, cfg, model, dims, backend)?;
+    let h = forward_block(block, h0, model, backend)?;
     for d in dims {
         charge_compute(&mut bstage, gpu, block.arcs, n, d.d_in, d.d_out, false, cfg.model);
     }
@@ -764,7 +767,7 @@ fn split_accuracy(
             let wire = feature_wire(data, v, bits, cfg.seed);
             h0[i * f..(i + 1) * f].copy_from_slice(&wire.values);
         }
-        let h = forward_block(&block, h0, cfg, model, dims, backend)?;
+        let h = forward_block(&block, h0, model, backend)?;
         let (y, mask) = block_targets(&block, data, c_pad);
         let lg = backend.ce_grad(n, c_pad, &h[layers], &y, &mask)?;
         correct += lg.correct;

@@ -24,7 +24,7 @@ use crate::device::profile::Gpu;
 use crate::device::simclock::{StageTimes, WallStages};
 use crate::dist::Cluster;
 use crate::graph::{Dataset, SparseAdj};
-use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind};
+use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind, TrainedModel};
 use crate::partition::halo::{build_plan, Subgraph, SubgraphPlan};
 use crate::partition::rapa;
 use crate::runtime::Backend;
@@ -463,7 +463,7 @@ impl<'a> Session<'a> {
     ) -> Result<TrainReport> {
         let mut session = Session::build(dataset, cluster, backend, cfg)?;
         session.run_epochs(cfg.epochs)?;
-        session.finish()
+        Ok(session.finish()?.0)
     }
 
     /// Stage 3: run one full-batch epoch and report what it did.
@@ -920,13 +920,16 @@ impl<'a> Session<'a> {
     }
 
     /// Close the run: score the test split from the final logits and
-    /// return the accumulated [`TrainReport`].
-    pub fn finish(mut self) -> Result<TrainReport> {
+    /// return the accumulated [`TrainReport`] together with the trained
+    /// weights as a [`TrainedModel`] artifact (ready for `.cgm` export
+    /// and `capgnn serve`).
+    pub fn finish(mut self) -> Result<(TrainReport, TrainedModel)> {
         let ev = self.eval()?;
         self.report.test_acc = ev.test_acc;
         self.report.cache = self.cache.stats;
         self.report.wallclock = self.wall.elapsed().as_secs_f64();
-        Ok(self.report)
+        let Session { cfg, model, report, .. } = self;
+        Ok((report, TrainedModel::new(model, cfg.seed)))
     }
 }
 
@@ -1815,8 +1818,10 @@ mod tests {
         assert!(e0.loss.is_finite());
         s.run_epochs(4).unwrap();
         assert_eq!(s.epoch(), 5);
-        let report = s.finish().unwrap();
+        let (report, model) = s.finish().unwrap();
         assert_eq!(report.epoch_times.len(), 5);
+        assert_eq!(model.layers(), 2);
+        assert_eq!(model.seed, tiny_cfg(5).seed);
     }
 
     #[test]
@@ -1849,7 +1854,7 @@ mod tests {
         let mut s = Session::build(&ds, &cluster, &mut backend, &tiny_cfg(50)).unwrap();
         let ran = s.run(50, &mut StopAfter(2)).unwrap();
         assert_eq!(ran, 2);
-        assert_eq!(s.finish().unwrap().epoch_times.len(), 2);
+        assert_eq!(s.finish().unwrap().0.epoch_times.len(), 2);
     }
 
     #[test]
@@ -2049,7 +2054,7 @@ mod tests {
         let e0 = s.run_epoch().unwrap();
         assert!(e0.cross_bytes > 0, "halo + grad frames crossed the wire");
         s.run_epochs(1).unwrap();
-        let report = s.finish().unwrap();
+        let report = s.finish().unwrap().0;
         assert!(report.cross_bytes_moved > 0);
         assert!(
             report.cross_bytes_moved < report.cross_bytes_naive,

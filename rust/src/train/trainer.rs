@@ -1,21 +1,25 @@
-//! Trainer configuration and the one-call `train()` entry point.
+//! Trainer configuration and the unified [`run`] entry point.
 //!
-//! The epoch machinery itself lives in [`crate::train::session`]: `train()`
-//! is a thin shim that wraps the legacy `(&[Gpu], &Topology)` pair into a
-//! [`Cluster`] and drives a [`Session`] for `cfg.epochs` epochs. Callers
-//! that want staged control (per-epoch stats, early stopping, eval between
-//! epochs, cache refreshes) should build the `Session` directly.
+//! The epoch machinery itself lives in [`crate::train::session`] (full
+//! batch) and [`crate::train::sampled`] (mini-batch): [`run`] /
+//! [`run_with`] dispatch on [`TrainConfig::mode`], drive the session for
+//! `cfg.epochs` epochs (optionally with early stopping), and return both
+//! the [`TrainReport`] and the [`crate::model::TrainedModel`] artifact.
+//! Callers that want staged control (per-epoch stats, eval between
+//! epochs, cache refreshes) should build the session directly; the
+//! legacy `(&[Gpu], &Topology)` [`train`] shim is deprecated.
 
 use crate::cache::PolicyKind;
 use crate::device::profile::Gpu;
 use crate::device::topology::Topology;
 use crate::dist::Cluster;
 use crate::graph::Dataset;
-use crate::model::ModelKind;
+use crate::model::{ModelKind, TrainedModel};
 use crate::partition::rapa::RapaConfig;
 use crate::partition::Method;
 use crate::runtime::Backend;
-use crate::train::session::Session;
+use crate::train::sampled::SampledSession;
+use crate::train::session::{EpochStats, Session};
 use crate::train::TrainReport;
 use anyhow::Result;
 
@@ -194,10 +198,98 @@ impl TrainConfig {
     }
 }
 
-/// Run full-batch training; `gpus.len()` = number of partitions.
+/// Options steering [`run_with`] beyond the [`TrainConfig`] itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOptions {
+    /// Early-stop patience: stop once validation accuracy has failed to
+    /// improve by 1e-4 for more than this many consecutive epochs
+    /// (`None` = always run all `cfg.epochs`).
+    pub patience: Option<usize>,
+}
+
+/// What a unified training run produced.
+#[derive(Debug)]
+pub struct RunOutcome {
+    /// The accumulated per-epoch report (losses, times, cache stats, …).
+    pub report: TrainReport,
+    /// The trained weights, ready for `.cgm` export and `capgnn serve`.
+    pub model: TrainedModel,
+    /// Epoch index early stopping fired at (`None` = ran to completion).
+    pub stopped_at: Option<u64>,
+}
+
+/// Unified trainer entry: dispatch on [`TrainConfig::mode`] to the
+/// full-batch [`Session`] or the mini-batch [`SampledSession`], run
+/// `cfg.epochs` epochs, and return the report together with the
+/// [`TrainedModel`] artifact. One call site replaces the mode `match`
+/// that `main`, the benches, and `expt` each used to duplicate.
+pub fn run(
+    dataset: &Dataset,
+    cluster: &Cluster,
+    backend: &mut dyn Backend,
+    cfg: &TrainConfig,
+) -> Result<(TrainReport, TrainedModel)> {
+    let out = run_with(dataset, cluster, backend, cfg, RunOptions::default())?;
+    Ok((out.report, out.model))
+}
+
+/// [`run`] with options — currently early stopping, applied identically
+/// in both modes (the full-batch `EarlyStopping` observer and the old
+/// inline sampled-mode loop had the same semantics; this is that logic,
+/// once).
+pub fn run_with(
+    dataset: &Dataset,
+    cluster: &Cluster,
+    backend: &mut dyn Backend,
+    cfg: &TrainConfig,
+    opts: RunOptions,
+) -> Result<RunOutcome> {
+    match cfg.mode {
+        TrainMode::FullBatch => {
+            let mut session = Session::build(dataset, cluster, backend, cfg)?;
+            let stopped_at = drive_epochs(cfg.epochs, opts.patience, || session.run_epoch())?;
+            let (report, model) = session.finish()?;
+            Ok(RunOutcome { report, model, stopped_at })
+        }
+        TrainMode::Sampled => {
+            let mut session = SampledSession::build(dataset, cluster, backend, cfg)?;
+            let stopped_at = drive_epochs(cfg.epochs, opts.patience, || session.run_epoch())?;
+            let (report, model) = session.finish()?;
+            Ok(RunOutcome { report, model, stopped_at })
+        }
+    }
+}
+
+/// Shared epoch loop: run up to `epochs` steps, stopping early when
+/// `patience` is set and the validation accuracy plateaus. Returns the
+/// epoch index the stop fired at, if it did.
+fn drive_epochs<F>(epochs: usize, patience: Option<usize>, mut step: F) -> Result<Option<u64>>
+where
+    F: FnMut() -> Result<EpochStats>,
+{
+    let (mut best, mut since_best) = (f32::NEG_INFINITY, 0usize);
+    for _ in 0..epochs {
+        let stats = step()?;
+        let Some(p) = patience else { continue };
+        if stats.val_acc > best + 1e-4 {
+            best = stats.val_acc;
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best > p {
+                return Ok(Some(stats.epoch));
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Run training; `gpus.len()` = number of partitions.
 ///
-/// Legacy one-call path: equivalent to building a [`Cluster`] from the
-/// device list and driving a [`Session`] for `cfg.epochs` epochs.
+/// Legacy one-call path, kept for source compatibility: wraps the device
+/// list into a [`Cluster`] and defers to [`run`], discarding the
+/// [`TrainedModel`] artifact.
+#[deprecated(note = "use `train::run`, which also returns the `TrainedModel` artifact")]
 pub fn train(
     dataset: &Dataset,
     gpus: &[Gpu],
@@ -206,7 +298,7 @@ pub fn train(
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
     let cluster = Cluster::from_parts(gpus.to_vec(), topology.clone())?;
-    Session::train(dataset, &cluster, backend, cfg)
+    Ok(run(dataset, &cluster, backend, cfg)?.0)
 }
 
 #[cfg(test)]
@@ -231,6 +323,19 @@ mod tests {
         }
     }
 
+    /// Test shim over the unified entry: same call shape the legacy
+    /// `train()` had, report only.
+    fn run_report(
+        ds: &Dataset,
+        gpus: &[Gpu],
+        topo: &Topology,
+        backend: &mut dyn Backend,
+        cfg: &TrainConfig,
+    ) -> Result<TrainReport> {
+        let cluster = Cluster::from_parts(gpus.to_vec(), topo.clone())?;
+        Ok(run(ds, &cluster, backend, cfg)?.0)
+    }
+
     #[test]
     fn capgnn_learns_tiny_dataset() {
         let ds = tiny(1);
@@ -238,7 +343,7 @@ mod tests {
         let topo = Topology::pcie_pairs(2);
         let mut backend = NativeBackend::new();
         let cfg = tiny_cfg(60);
-        let rep = train(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
+        let rep = run_report(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
         assert_eq!(rep.epoch_times.len(), 60);
         // Loss decreases.
         assert!(
@@ -263,8 +368,8 @@ mod tests {
         cap.pipeline = false;
         let mut van = cap.clone();
         van.use_cache = false;
-        let rep_c = train(&ds, &gpus, &topo, &mut backend, &cap).unwrap();
-        let rep_v = train(&ds, &gpus, &topo, &mut backend, &van).unwrap();
+        let rep_c = run_report(&ds, &gpus, &topo, &mut backend, &cap).unwrap();
+        let rep_v = run_report(&ds, &gpus, &topo, &mut backend, &van).unwrap();
         assert!(rep_c.total_comm() < rep_v.total_comm() * 0.6,
             "cached {} vanilla {}", rep_c.total_comm(), rep_v.total_comm());
         assert!(rep_c.bytes_moved < rep_v.bytes_moved);
@@ -282,8 +387,8 @@ mod tests {
         van.use_cache = false;
         van.use_rapa = false;
         van.pipeline = false;
-        let rep_c = train(&ds, &gpus, &topo, &mut backend, &cap).unwrap();
-        let rep_v = train(&ds, &gpus, &topo, &mut backend, &van).unwrap();
+        let rep_c = run_report(&ds, &gpus, &topo, &mut backend, &cap).unwrap();
+        let rep_v = run_report(&ds, &gpus, &topo, &mut backend, &van).unwrap();
         assert!(
             (rep_c.best_val_acc() - rep_v.best_val_acc()).abs() < 0.15,
             "capgnn {} vanilla {}",
@@ -303,8 +408,8 @@ mod tests {
         on.use_rapa = false;
         let mut off = on.clone();
         off.pipeline = false;
-        let rep_on = train(&ds, &gpus, &topo, &mut backend, &on).unwrap();
-        let rep_off = train(&ds, &gpus, &topo, &mut backend, &off).unwrap();
+        let rep_on = run_report(&ds, &gpus, &topo, &mut backend, &on).unwrap();
+        let rep_off = run_report(&ds, &gpus, &topo, &mut backend, &off).unwrap();
         assert!(rep_on.total_time() < rep_off.total_time());
     }
 
@@ -315,7 +420,7 @@ mod tests {
         let topo = Topology::pcie_pairs(1);
         let mut backend = NativeBackend::new();
         let cfg = tiny_cfg(10);
-        let rep = train(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
+        let rep = run_report(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
         assert_eq!(rep.bytes_moved, 0);
         assert!(rep.losses[9] < rep.losses[0]);
     }
@@ -334,8 +439,8 @@ mod tests {
         let mut full = q.clone();
         full.quantize_bits = None;
         full.quantized_row_bytes = None;
-        let rq = train(&ds, &gpus, &topo, &mut backend, &q).unwrap();
-        let rf = train(&ds, &gpus, &topo, &mut backend, &full).unwrap();
+        let rq = run_report(&ds, &gpus, &topo, &mut backend, &q).unwrap();
+        let rf = run_report(&ds, &gpus, &topo, &mut backend, &full).unwrap();
         assert!(rq.bytes_moved < rf.bytes_moved / 2);
         assert!(rq.best_val_acc() > 0.4, "quantized acc {}", rq.best_val_acc());
     }
@@ -354,8 +459,71 @@ mod tests {
         let mut full = skip.clone();
         full.skip_exchange = false;
         full.refresh_interval = 1;
-        let rs = train(&ds, &gpus, &topo, &mut backend, &skip).unwrap();
-        let rf = train(&ds, &gpus, &topo, &mut backend, &full).unwrap();
+        let rs = run_report(&ds, &gpus, &topo, &mut backend, &skip).unwrap();
+        let rf = run_report(&ds, &gpus, &topo, &mut backend, &full).unwrap();
         assert!(rs.bytes_moved < rf.bytes_moved);
+    }
+
+    #[test]
+    fn deprecated_shim_matches_run() {
+        let ds = tiny(9);
+        let gpus = gpus(2);
+        let topo = Topology::pcie_pairs(2);
+        let mut backend = NativeBackend::new();
+        let cfg = tiny_cfg(3);
+        #[allow(deprecated)]
+        let legacy = train(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
+        let unified = run_report(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
+        assert_eq!(legacy.losses, unified.losses);
+        assert_eq!(legacy.val_accs, unified.val_accs);
+    }
+
+    #[test]
+    fn run_dispatches_sampled_mode_and_returns_the_model() {
+        let ds = tiny(10);
+        let cluster =
+            Cluster::from_parts(gpus(2), Topology::pcie_pairs(2)).unwrap();
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(3);
+        cfg.mode = TrainMode::Sampled;
+        cfg.batch_size = 16;
+        cfg.fanout = vec![4, 4];
+        let (report, model) = run(&ds, &cluster, &mut backend, &cfg).unwrap();
+        assert!(report.batches_per_epoch > 0, "sampled path did not run");
+        assert_eq!(model.layers(), cfg.layers);
+        assert_eq!(model.model.kind, cfg.model);
+        assert_eq!(model.seed, cfg.seed);
+        // Same seed, fresh run → bit-identical weights (the artifact is
+        // as deterministic as the report).
+        let mut b2 = NativeBackend::new();
+        let (_, m2) = run(&ds, &cluster, &mut b2, &cfg).unwrap();
+        for (a, b) in model.model.weights.iter().zip(&m2.model.weights) {
+            for (ma, mb) in a.iter().zip(b) {
+                assert!(ma.iter().zip(mb).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn run_with_patience_reports_where_it_stopped() {
+        let ds = tiny(11);
+        let cluster =
+            Cluster::from_parts(gpus(2), Topology::pcie_pairs(2)).unwrap();
+        let mut backend = NativeBackend::new();
+        let cfg = tiny_cfg(40);
+        let out = run_with(&ds, &cluster, &mut backend, &cfg,
+            RunOptions { patience: Some(1) }).unwrap();
+        // Whether or not the curve plateaued, the report length and the
+        // stop marker must agree.
+        match out.stopped_at {
+            Some(e) => assert_eq!(out.report.epoch_times.len() as u64, e + 1),
+            None => assert_eq!(out.report.epoch_times.len(), cfg.epochs),
+        }
+        // No patience → always the full run, never a stop marker.
+        let mut b2 = NativeBackend::new();
+        let full = run_with(&ds, &cluster, &mut b2, &tiny_cfg(4),
+            RunOptions::default()).unwrap();
+        assert!(full.stopped_at.is_none());
+        assert_eq!(full.report.epoch_times.len(), 4);
     }
 }

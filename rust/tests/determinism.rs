@@ -35,7 +35,7 @@ fn run_sampled(cfg: &TrainConfig, workers: usize, exec: ExecMode) -> TrainReport
     cfg.exec = exec;
     let mut session = SampledSession::build(&ds, &cluster, &mut backend, &cfg).unwrap();
     session.run_epochs(cfg.epochs).unwrap();
-    session.finish().unwrap()
+    session.finish().unwrap().0
 }
 
 fn run_on(cfg: &TrainConfig, cluster: &Cluster, exec: ExecMode) -> TrainReport {
@@ -45,7 +45,7 @@ fn run_on(cfg: &TrainConfig, cluster: &Cluster, exec: ExecMode) -> TrainReport {
     cfg.exec = exec;
     let mut session = Session::build(&ds, cluster, &mut backend, &cfg).unwrap();
     session.run_epochs(cfg.epochs).unwrap();
-    session.finish().unwrap()
+    session.finish().unwrap().0
 }
 
 fn run(cfg: &TrainConfig, workers: usize, exec: ExecMode) -> TrainReport {

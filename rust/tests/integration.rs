@@ -10,12 +10,25 @@ use capgnn::graph::datasets::tiny;
 use capgnn::graph::spec_by_name;
 use capgnn::model::ModelKind;
 use capgnn::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
-use capgnn::train::{train, EarlyStopping, Session, TrainConfig};
+use capgnn::train::{run, EarlyStopping, Session, TrainConfig, TrainReport};
 use capgnn::util::Rng;
 
 fn gpus(n: usize, seed: u64) -> Vec<Gpu> {
     let mut rng = Rng::new(seed);
     (0..n).map(|i| Gpu::new(i, DeviceKind::Rtx3090, &mut rng)).collect()
+}
+
+/// One-call training through the unified `train::run` facade (the
+/// report half; the model artifact is exercised in `serve.rs`).
+fn run_report(
+    ds: &capgnn::graph::Dataset,
+    gpus: &[Gpu],
+    topo: &Topology,
+    backend: &mut dyn Backend,
+    cfg: &TrainConfig,
+) -> anyhow::Result<TrainReport> {
+    let cluster = Cluster::from_parts(gpus.to_vec(), topo.clone())?;
+    Ok(run(ds, &cluster, backend, cfg)?.0)
 }
 
 fn tiny_cfg(epochs: usize) -> TrainConfig {
@@ -35,8 +48,8 @@ fn training_is_deterministic() {
     let cfg = tiny_cfg(8);
     let mut b1 = NativeBackend::new();
     let mut b2 = NativeBackend::new();
-    let r1 = train(&ds, &g, &topo, &mut b1, &cfg).unwrap();
-    let r2 = train(&ds, &g, &topo, &mut b2, &cfg).unwrap();
+    let r1 = run_report(&ds, &g, &topo, &mut b1, &cfg).unwrap();
+    let r2 = run_report(&ds, &g, &topo, &mut b2, &cfg).unwrap();
     assert_eq!(r1.losses, r2.losses);
     assert_eq!(r1.val_accs, r2.val_accs);
     assert_eq!(r1.bytes_moved, r2.bytes_moved);
@@ -56,8 +69,8 @@ fn xla_and_native_backends_agree() {
     let cfg = tiny_cfg(6);
     let mut nat = NativeBackend::new();
     let mut xla = XlaBackend::from_default_dir().unwrap();
-    let rn = train(&ds, &g, &topo, &mut nat, &cfg).unwrap();
-    let rx = train(&ds, &g, &topo, &mut xla, &cfg).unwrap();
+    let rn = run_report(&ds, &g, &topo, &mut nat, &cfg).unwrap();
+    let rx = run_report(&ds, &g, &topo, &mut xla, &cfg).unwrap();
     for (i, (a, b)) in rn.losses.iter().zip(&rx.losses).enumerate() {
         assert!(
             (a - b).abs() < 5e-3 * (1.0 + a.abs()),
@@ -85,7 +98,7 @@ fn all_systems_run_both_models() {
             cfg.hidden = 16;
             cfg.layers = 2;
             let mut backend = NativeBackend::new();
-            let r = train(&ds, &g, &topo, &mut backend, &cfg)
+            let r = run_report(&ds, &g, &topo, &mut backend, &cfg)
                 .unwrap_or_else(|e| panic!("{} {} failed: {e}", system.name(), model.name()));
             assert_eq!(r.epoch_times.len(), 4);
             assert!(r.losses.iter().all(|l| l.is_finite()));
@@ -104,7 +117,7 @@ fn ablation_comm_ordering() {
     for arm in capgnn::baselines::ABLATIONS {
         let cfg = arm.config(6);
         let mut backend = NativeBackend::new();
-        let r = train(&ds, &g, &topo, &mut backend, &cfg).unwrap();
+        let r = run_report(&ds, &g, &topo, &mut backend, &cfg).unwrap();
         comm.insert(arm.name(), r.total_comm());
     }
     let vanilla = comm["Vanilla"];
@@ -122,7 +135,7 @@ fn ablation_comm_ordering() {
 }
 
 /// The staged Session must be numerically identical to the one-call
-/// `train()` shim (same seed, same config).
+/// `train::run` facade (same seed, same config).
 #[test]
 fn session_matches_train_shim() {
     let ds = tiny(1);
@@ -130,7 +143,7 @@ fn session_matches_train_shim() {
     let topo = Topology::pcie_pairs(2);
     let cfg = tiny_cfg(8);
     let mut b1 = NativeBackend::new();
-    let r1 = train(&ds, &g, &topo, &mut b1, &cfg).unwrap();
+    let r1 = run_report(&ds, &g, &topo, &mut b1, &cfg).unwrap();
 
     let cluster = Cluster::from_parts(g.clone(), topo.clone()).unwrap();
     let mut b2 = NativeBackend::new();
@@ -139,7 +152,7 @@ fn session_matches_train_shim() {
     for _ in 0..cfg.epochs {
         last = Some(session.run_epoch().unwrap());
     }
-    let r2 = session.finish().unwrap();
+    let r2 = session.finish().unwrap().0;
     assert_eq!(r1.losses, r2.losses);
     assert_eq!(r1.val_accs, r2.val_accs);
     assert_eq!(r1.bytes_moved, r2.bytes_moved);
@@ -161,7 +174,7 @@ fn early_stopping_halts_training() {
     let ran = session.run(50, &mut stop).unwrap();
     assert_eq!(ran, 3);
     assert_eq!(stop.stopped_at, Some(2));
-    let report = session.finish().unwrap();
+    let report = session.finish().unwrap().0;
     assert_eq!(report.epoch_times.len(), 3);
 }
 
@@ -190,7 +203,7 @@ fn degenerate_inputs_survive() {
     let topo = Topology::pcie_pairs(1);
     let cfg = tiny_cfg(3);
     let mut backend = NativeBackend::new();
-    let r = train(&ds, &g, &topo, &mut backend, &cfg).unwrap();
+    let r = run_report(&ds, &g, &topo, &mut backend, &cfg).unwrap();
     assert_eq!(r.bytes_moved, 0);
 
     // Zero cache capacity with caching "on" — works, just never hits.
@@ -198,14 +211,14 @@ fn degenerate_inputs_survive() {
     let topo2 = Topology::pcie_pairs(2);
     let mut cfg2 = tiny_cfg(3);
     cfg2.capacity = capgnn::train::CapacityMode::Fixed { local: 0, global: 0 };
-    let r2 = train(&ds, &g2, &topo2, &mut backend, &cfg2).unwrap();
+    let r2 = run_report(&ds, &g2, &topo2, &mut backend, &cfg2).unwrap();
     assert_eq!(r2.cache.local_hits + r2.cache.global_hits, 0);
     assert!(r2.losses.iter().all(|l| l.is_finite()));
 
     // More partitions than sensible (8 workers on 256 vertices).
     let g3 = gpus(8, 9);
     let topo3 = Topology::pcie_pairs(8);
-    let r3 = train(&ds, &g3, &topo3, &mut backend, &tiny_cfg(2)).unwrap();
+    let r3 = run_report(&ds, &g3, &topo3, &mut backend, &tiny_cfg(2)).unwrap();
     assert!(r3.losses[1].is_finite());
     ds.name = "tiny";
     let _ = System::CaPGnn;
@@ -223,7 +236,7 @@ fn staleness_bounded_convergence() {
     let mut stale = tiny_cfg(40);
     stale.refresh_interval = 10; // halo embeddings up to 10 epochs old
     let mut backend = NativeBackend::new();
-    let r = train(&ds, &g, &topo, &mut backend, &stale).unwrap();
+    let r = run_report(&ds, &g, &topo, &mut backend, &stale).unwrap();
     assert!(
         r.losses.last().unwrap() < &(r.losses[0] * 0.7),
         "stale training must still converge: {:?} -> {:?}",
@@ -239,8 +252,8 @@ fn staleness_bounded_convergence() {
     fresh.refresh_interval = 1;
     let mut vanilla = tiny_cfg(5);
     vanilla.use_cache = false;
-    let rf = train(&ds, &g, &topo, &mut backend, &fresh).unwrap();
-    let rv = train(&ds, &g, &topo, &mut backend, &vanilla).unwrap();
+    let rf = run_report(&ds, &g, &topo, &mut backend, &fresh).unwrap();
+    let rv = run_report(&ds, &g, &topo, &mut backend, &vanilla).unwrap();
     for (a, b) in rf.losses.iter().zip(&rv.losses) {
         assert!((a - b).abs() < 1e-6, "fresh {a} vanilla {b}");
     }

@@ -51,7 +51,7 @@ fn partial_tail_batch_is_counted() {
         assert!(stats.loss.is_finite());
         assert!(stats.sampled_vertices > 0);
     }
-    let report = session.finish().unwrap();
+    let report = session.finish().unwrap().0;
     assert_eq!(report.batches_per_epoch, expect);
     assert_eq!(report.epoch_touched.len(), cfg.epochs);
 }
@@ -71,7 +71,7 @@ fn oversized_batch_is_one_batch_per_epoch() {
     let stats = session.run_epoch().unwrap();
     assert_eq!(stats.batches, 1);
     assert!(stats.loss.is_finite());
-    let report = session.finish().unwrap();
+    let report = session.finish().unwrap().0;
     assert_eq!(report.batches_per_epoch, 1);
 }
 
@@ -134,7 +134,7 @@ fn zero_degree_seeds_train_with_finite_loss() {
         assert!(stats.loss.is_finite(), "isolated seeds must not NaN the loss");
         assert_eq!(stats.batches, 3);
     }
-    let report = session.finish().unwrap();
+    let report = session.finish().unwrap().0;
     assert!(report.losses.iter().all(|l| l.is_finite()));
 }
 
@@ -149,7 +149,7 @@ fn cache_hit_rate_is_positive_across_batches() {
     let mut backend = NativeBackend::new();
     let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
     session.run_epochs(cfg.epochs).unwrap();
-    let report = session.finish().unwrap();
+    let report = session.finish().unwrap().0;
     assert!(
         report.cache.hit_rate() > 0.0,
         "expected cache hits on recurring halo vertices, got {:?}",
@@ -182,7 +182,7 @@ fn cgr_round_trip_trains_identically_across_workers() {
         let mut backend = NativeBackend::new();
         let mut session = SampledSession::build(&ds, &cl, &mut backend, &cfg).unwrap();
         session.run_epochs(cfg.epochs).unwrap();
-        let report = session.finish().unwrap();
+        let report = session.finish().unwrap().0;
         assert!(report.losses.iter().all(|l| l.is_finite()), "workers={workers}");
         if workers > 1 {
             assert!(

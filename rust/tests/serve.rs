@@ -1,0 +1,259 @@
+//! Serving-path integration tests: the determinism contract (same
+//! vertex ⇒ bit-identical output across batches, workers, and cache
+//! hit-vs-miss), micro-batcher flush behaviour, shutdown, and the
+//! `.cgm` artifact round trip.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::synthetic_node_data;
+use capgnn::graph::{Dataset, Graph};
+use capgnn::model::TrainedModel;
+use capgnn::runtime::NativeBackend;
+use capgnn::sample::Fanout;
+use capgnn::serve::{
+    run_driver, serve_output, zipf_workload, Pacing, Response, ServeConfig, Server,
+    ServerHandle, WorkloadConfig,
+};
+use capgnn::train::{run, TrainConfig};
+use capgnn::util::Rng;
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn make_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for v in 1..n as u32 {
+        edges.push((v - 1, v));
+    }
+    for _ in 0..n * 4 {
+        let a = rng.index(n) as u32;
+        let b = rng.index(n) as u32;
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 6, 8, seed);
+    Dataset { name: "serve-it", label: "Sv", graph, data }
+}
+
+/// Train a small model on the dataset through the unified facade.
+fn trained(ds: &Dataset) -> TrainedModel {
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let cfg = TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(3) };
+    let mut backend = NativeBackend::new();
+    let (_report, model) = run(ds, &cluster, &mut backend, &cfg).unwrap();
+    model
+}
+
+fn serve_cfg(cache: usize, prepopulate: usize) -> ServeConfig {
+    ServeConfig {
+        fanout: Fanout(vec![4, 4]),
+        cache_capacity: cache,
+        prepopulate,
+        ..ServeConfig::new(2)
+    }
+}
+
+fn drain(handle: &ServerHandle, n: usize) -> Vec<Response> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        match handle.recv_timeout(Duration::from_secs(30)) {
+            Some(r) => out.push(r),
+            None => panic!("timed out waiting for {n} responses (got {})", out.len()),
+        }
+    }
+    out
+}
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Cache miss then cache hit must produce the same bytes.
+#[test]
+fn miss_then_hit_is_bit_identical() {
+    let ds = make_dataset(128, 11);
+    let model = trained(&ds);
+    let mut cfg = serve_cfg(64, 0); // nothing warmed: first touch misses
+    cfg.workers = 1;
+    let mut h = Server::start(&ds, model, &cfg).unwrap();
+    h.submit(5).unwrap();
+    let first = drain(&h, 1).remove(0);
+    h.submit(5).unwrap();
+    let second = drain(&h, 1).remove(0);
+    assert!(!first.cache_hit, "cold cache must miss");
+    assert!(second.cache_hit, "second request must hit");
+    assert_eq!(bits(&first.output), bits(&second.output));
+    let rep = h.shutdown().unwrap();
+    assert_eq!(rep.responses, 2);
+    assert_eq!(rep.cache.hits, 1);
+}
+
+/// Worker count is unobservable in the outputs.
+#[test]
+fn outputs_identical_across_worker_counts() {
+    let ds = make_dataset(128, 12);
+    let model = trained(&ds);
+    let vertices: Vec<u32> = (0..40u32).collect();
+    let mut per_count: Vec<HashMap<u32, Vec<u32>>> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut cfg = serve_cfg(32, 16);
+        cfg.workers = workers;
+        let mut h = Server::start(&ds, model.clone(), &cfg).unwrap();
+        for &v in &vertices {
+            h.submit(v).unwrap();
+        }
+        let resps = drain(&h, vertices.len());
+        let mut by_vertex = HashMap::new();
+        for r in resps {
+            by_vertex.insert(r.vertex, bits(&r.output));
+        }
+        h.shutdown().unwrap();
+        per_count.push(by_vertex);
+    }
+    for other in &per_count[1..] {
+        assert_eq!(&per_count[0], other, "outputs changed with worker count");
+    }
+}
+
+/// Caching (and pre-population) is unobservable in the outputs, and the
+/// warmed cache actually hits.
+#[test]
+fn cache_is_unobservable_but_hits() {
+    let ds = make_dataset(128, 13);
+    let model = trained(&ds);
+    let workload = zipf_workload(
+        &ds.graph,
+        &WorkloadConfig { requests: 200, zipf_s: 1.2, hot_ranks: 32, seed: 9 },
+    );
+
+    let mut uncached = Server::start(&ds, model.clone(), &serve_cfg(0, 0)).unwrap();
+    let a = run_driver(&mut uncached, &workload, Pacing::Closed { concurrency: 8 }).unwrap();
+    let ra = uncached.shutdown().unwrap();
+    assert_eq!(ra.cache.hits, 0, "zero-capacity cache cannot hit");
+
+    let mut cached = Server::start(&ds, model, &serve_cfg(64, 32)).unwrap();
+    let b = run_driver(&mut cached, &workload, Pacing::Closed { concurrency: 8 }).unwrap();
+    let rb = cached.shutdown().unwrap();
+
+    assert!(a.consistent && b.consistent);
+    assert_eq!(a.output_digest, b.output_digest, "cache changed the answers");
+    assert!(b.hit_rate > 0.0, "warmed cache never hit: {b:?}");
+    assert!(rb.cache.prepopulated > 0);
+}
+
+/// A single straggler is flushed by the deadline, not stuck waiting for
+/// a full batch.
+#[test]
+fn deadline_flushes_a_single_straggler() {
+    let ds = make_dataset(64, 14);
+    let model = trained(&ds);
+    let mut cfg = serve_cfg(0, 0);
+    cfg.max_batch = 64;
+    cfg.max_wait_us = 10_000;
+    let mut h = Server::start(&ds, model, &cfg).unwrap();
+    h.submit(3).unwrap();
+    let r = h
+        .recv_timeout(Duration::from_secs(10))
+        .expect("straggler must be answered within the deadline");
+    assert_eq!(r.vertex, 3);
+    let rep = h.shutdown().unwrap();
+    assert!(rep.deadline_flushes >= 1, "{rep:?}");
+    assert_eq!(rep.max_batch_seen, 1);
+}
+
+/// A burst larger than max_batch splits into several full batches.
+#[test]
+fn oversized_burst_splits_into_bounded_batches() {
+    let ds = make_dataset(64, 15);
+    let model = trained(&ds);
+    let mut cfg = serve_cfg(0, 0);
+    cfg.max_batch = 8;
+    cfg.workers = 2;
+    let mut h = Server::start(&ds, model, &cfg).unwrap();
+    for i in 0..50u32 {
+        h.submit(i % 64).unwrap();
+    }
+    let resps = drain(&h, 50);
+    let mut per_batch: HashMap<u64, usize> = HashMap::new();
+    for r in &resps {
+        *per_batch.entry(r.batch).or_insert(0) += 1;
+    }
+    for (batch, count) in &per_batch {
+        assert!(*count <= 8, "batch {batch} carried {count} > max_batch requests");
+    }
+    let rep = h.shutdown().unwrap();
+    assert_eq!(rep.responses, 50);
+    assert!(rep.max_batch_seen <= 8);
+    assert!(rep.batches >= 7, "50 requests need at least ceil(50/8) batches");
+}
+
+/// Shutting down an idle server terminates cleanly with zero traffic.
+#[test]
+fn empty_queue_shutdown_is_clean() {
+    let ds = make_dataset(64, 16);
+    let model = trained(&ds);
+    let h = Server::start(&ds, model, &serve_cfg(16, 4)).unwrap();
+    let rep = h.shutdown().unwrap();
+    assert_eq!(rep.requests, 0);
+    assert_eq!(rep.responses, 0);
+    assert_eq!(rep.batches, 0);
+    assert!(rep.cache.prepopulated > 0, "warmup still ran");
+}
+
+/// Saving and reloading the artifact must not change a single bit of
+/// any served output.
+#[test]
+fn cgm_round_trip_serves_identically() {
+    let ds = make_dataset(96, 17);
+    let model = trained(&ds);
+    let path = std::env::temp_dir()
+        .join(format!("capgnn_serve_rt_{}.cgm", std::process::id()));
+    model.save(&path).unwrap();
+    let loaded = TrainedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.seed, model.seed);
+
+    let fan = Fanout(vec![4, 4]);
+    let mut be = NativeBackend::new();
+    for v in 0..10u32 {
+        let a = serve_output(&ds.graph, &ds.data, &model.model, &fan, 42, v, &mut be).unwrap();
+        let b = serve_output(&ds.graph, &ds.data, &loaded.model, &fan, 42, v, &mut be).unwrap();
+        assert_eq!(bits(&a), bits(&b), "vertex {v} differs after round trip");
+    }
+}
+
+/// Out-of-range vertices are rejected at submit time.
+#[test]
+fn submit_rejects_out_of_range_vertices() {
+    let ds = make_dataset(64, 18);
+    let model = trained(&ds);
+    let mut h = Server::start(&ds, model, &serve_cfg(0, 0)).unwrap();
+    assert!(h.submit(64).is_err());
+    assert!(h.submit(63).is_ok());
+    drain(&h, 1);
+    let rep = h.shutdown().unwrap();
+    assert_eq!(rep.requests, 1, "rejected submits are not counted");
+}
+
+/// The closed-loop driver completes a Zipfian stream with consistent
+/// outputs and a strictly positive cross-request hit rate.
+#[test]
+fn closed_loop_driver_is_consistent_with_hits() {
+    let ds = make_dataset(192, 19);
+    let model = trained(&ds);
+    let workload = zipf_workload(
+        &ds.graph,
+        &WorkloadConfig { requests: 300, zipf_s: 1.1, hot_ranks: 48, seed: 4 },
+    );
+    let mut h = Server::start(&ds, model, &serve_cfg(96, 48)).unwrap();
+    let d = run_driver(&mut h, &workload, Pacing::Closed { concurrency: 12 }).unwrap();
+    let rep = h.shutdown().unwrap();
+    assert!(d.consistent, "determinism violated");
+    assert_eq!(d.sent, 300);
+    assert_eq!(d.received, 300);
+    assert!(d.hit_rate > 0.0, "no cross-request hits: {d:?}");
+    assert_eq!(rep.compute_errors, 0);
+    assert_eq!(rep.responses, 300);
+}

@@ -166,7 +166,7 @@ fn run_report(
     let ds = capgnn::graph::datasets::tiny(11);
     let mut session = Session::build(&ds, cluster, backend, cfg).unwrap();
     session.run_epochs(cfg.epochs).unwrap();
-    session.finish().unwrap()
+    session.finish().unwrap().0
 }
 
 /// End-to-end seed check: `ExecMode::Threaded` on the 2M-2D preset
