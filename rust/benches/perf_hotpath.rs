@@ -17,6 +17,11 @@ use capgnn::train::{run, TrainConfig};
 use capgnn::util::bench::run_bench;
 use capgnn::util::Rng;
 
+/// FLOP throughput of `flops` useful floating-point ops in `secs`.
+fn gflops(flops: usize, secs: f64) -> f64 {
+    flops as f64 / secs.max(1e-12) / 1e9
+}
+
 fn main() {
     let mut rng = Rng::new(1);
 
@@ -25,10 +30,11 @@ fn main() {
         let x: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
         let y: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
         let mut out = vec![0.0f32; n * m];
-        run_bench(&format!("native_matmul_{n}x{k}x{m}"), || {
+        let sum = run_bench(&format!("native_matmul_{n}x{k}x{m}"), || {
             matmul(n, k, m, &x, &y, &mut out);
             std::hint::black_box(&out);
         });
+        println!("  throughput: {:.2} GFLOP/s", gflops(2 * n * k * m, sum.mean));
     }
 
     // Sparse-style matmul (zero-skipping path) at adjacency density ~1%.
@@ -42,10 +48,14 @@ fn main() {
         }
         let h: Vec<f32> = (0..n * 64).map(|_| rng.normal() as f32).collect();
         let mut out = vec![0.0f32; n * 64];
-        run_bench("native_aggregation_sparse_1pct_1024", || {
+        let nnz = a.iter().filter(|&&v| v != 0.0).count();
+        let sum = run_bench("native_aggregation_sparse_1pct_1024", || {
             matmul(n, n, 64, &a, &h, &mut out);
             std::hint::black_box(&out);
         });
+        // Effective FLOPs only — the zero-skipping path does no work on
+        // the ~99% empty entries, so the useful rate is over nnz.
+        println!("  throughput: {:.2} GFLOP/s effective", gflops(2 * nnz * 64, sum.mean));
     }
 
     // SpMM kernels (PR4): CSR aggregation at trainer shapes — forward,
@@ -58,16 +68,18 @@ fn main() {
         let h: Vec<f32> = (0..n * 64).map(|_| rng.normal() as f32).collect();
         let mut out = vec![0.0f32; n * 64];
         for threads in [1usize, 2, 4] {
-            run_bench(&format!("spmm_gcn_{n}x64_t{threads}"), || {
+            let sum = run_bench(&format!("spmm_gcn_{n}x64_t{threads}"), || {
                 spmm(adj.fwd(), 64, &h, &mut out, threads);
                 std::hint::black_box(&out);
             });
+            println!("  throughput: {:.2} GFLOP/s", gflops(2 * adj.nnz() * 64, sum.mean));
         }
         let t = adj.transpose();
-        run_bench(&format!("spmm_t_gcn_{n}x64"), || {
+        let sum = run_bench(&format!("spmm_t_gcn_{n}x64"), || {
             spmm(t, 64, &h, &mut out, 1);
             std::hint::black_box(&out);
         });
+        println!("  throughput: {:.2} GFLOP/s", gflops(2 * adj.nnz() * 64, sum.mean));
     }
 
     // Cache throughput.

@@ -15,7 +15,8 @@ use capgnn::graph::DatasetSpec;
 use capgnn::runtime::NativeBackend;
 use capgnn::train::{ExecMode, Session, TrainConfig};
 use capgnn::util::bench;
-use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{arr, num, obj, Json};
 
 fn main() {
     let quick = bench::quick_mode();
@@ -104,26 +105,22 @@ fn main() {
         }
     }
 
-    let doc = obj(vec![
-        ("bench", s("pr2_exec_speedup")),
-        ("graph_n", num(ds.graph.n() as f64)),
-        ("graph_m", num(ds.graph.m() as f64)),
-        ("quick", Json::Bool(quick)),
-        ("results", arr(entries)),
-        ("speedup_at_4_workers", num(speedup4)),
-    ]);
-    bench::write_json_file("BENCH_PR2.json", &doc).expect("write BENCH_PR2.json");
-    println!("wrote BENCH_PR2.json (speedup at 4 workers: {speedup4:.2}x)");
-
-    if thr4 > seq4 * 1.10 {
-        eprintln!(
+    let mut doc = BenchDoc::new("pr2_exec_speedup", "BENCH_PR2.json");
+    doc.field("graph_n", num(ds.graph.n() as f64));
+    doc.field("graph_m", num(ds.graph.m() as f64));
+    doc.field("results", arr(entries));
+    doc.field("speedup_at_4_workers", num(speedup4));
+    doc.gate(
+        "threaded_not_slower",
+        thr4 <= seq4 * 1.10,
+        &format!(
             "PERF GATE FAILED: threaded {thr4:.3}s is >10% slower than sequential {seq4:.3}s at 4 workers"
-        );
-        std::process::exit(1);
-    }
+        ),
+    );
     if speedup4 < 1.5 {
         eprintln!(
             "note: speedup {speedup4:.2}x is below the 1.5x target — host may be core-starved"
         );
     }
+    doc.finish();
 }

@@ -19,6 +19,7 @@ use capgnn::graph::DatasetSpec;
 use capgnn::runtime::NativeBackend;
 use capgnn::train::{ExecMode, TrainConfig};
 use capgnn::util::bench;
+use capgnn::util::bench_json::BenchDoc;
 use capgnn::util::json::{arr, num, obj, s, Json};
 
 fn main() {
@@ -110,18 +111,14 @@ fn main() {
         ]));
     }
 
-    let doc = obj(vec![
-        ("bench", s("pr3_dist_bytes")),
-        ("graph_n", num(ds.graph.n() as f64)),
-        ("graph_m", num(ds.graph.m() as f64)),
-        ("quick", Json::Bool(quick)),
-        ("results", arr(entries)),
-        ("dedup_reduces_cross_bytes", Json::Bool(!failed)),
-    ]);
-    bench::write_json_file("BENCH_PR3.json", &doc).expect("write BENCH_PR3.json");
-    println!("wrote BENCH_PR3.json");
-
-    if failed {
-        std::process::exit(1);
-    }
+    let mut doc = BenchDoc::new("pr3_dist_bytes", "BENCH_PR3.json");
+    doc.field("graph_n", num(ds.graph.n() as f64));
+    doc.field("graph_m", num(ds.graph.m() as f64));
+    doc.field("results", arr(entries));
+    doc.gate(
+        "dedup_reduces_cross_bytes",
+        !failed,
+        "BYTE GATES FAILED: see the messages above",
+    );
+    doc.finish();
 }

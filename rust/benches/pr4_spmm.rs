@@ -20,7 +20,8 @@ use capgnn::graph::{Graph, SparseAdj};
 use capgnn::runtime::native::dense_oracle;
 use capgnn::runtime::{Backend, NativeBackend};
 use capgnn::util::bench;
-use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{arr, num, obj, Json};
 use capgnn::util::Rng;
 
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
@@ -136,21 +137,17 @@ fn main() {
         last_shape = (n_pad, adj.nnz());
     }
 
-    let doc = obj(vec![
-        ("bench", s("pr4_spmm")),
-        ("quick", Json::Bool(quick)),
-        ("d_in", num(d_in as f64)),
-        ("d_out", num(d_out as f64)),
-        ("results", arr(entries)),
-        ("speedup_at_largest", num(last_speedup)),
-        (
-            "mem_ratio_at_largest",
-            num(last_dense_bytes as f64 / last_sparse_bytes.max(1) as f64),
-        ),
-    ]);
-    bench::write_json_file("BENCH_PR4.json", &doc).expect("write BENCH_PR4.json");
+    let mut doc = BenchDoc::new("pr4_spmm", "BENCH_PR4.json");
+    doc.field("d_in", num(d_in as f64));
+    doc.field("d_out", num(d_out as f64));
+    doc.field("results", arr(entries));
+    doc.field("speedup_at_largest", num(last_speedup));
+    doc.field(
+        "mem_ratio_at_largest",
+        num(last_dense_bytes as f64 / last_sparse_bytes.max(1) as f64),
+    );
     println!(
-        "wrote BENCH_PR4.json (largest size: {last_speedup:.1}x speedup, {}x less adjacency memory)",
+        "largest size: {last_speedup:.1}x speedup, {}x less adjacency memory",
         last_dense_bytes / last_sparse_bytes.max(1)
     );
 
@@ -158,20 +155,25 @@ fn main() {
     // + 8 B per stored entry; allow slack for allocator rounding.
     let (n_pad, nnz) = last_shape;
     let linear_bound = 16 * (n_pad + 1) + 24 * nnz;
-    if last_sparse_bytes > linear_bound {
-        eprintln!(
+    doc.gate(
+        "adjacency_memory_linear",
+        last_sparse_bytes <= linear_bound,
+        &format!(
             "MEM GATE FAILED: sparse adjacency {last_sparse_bytes} B exceeds the \
              O(n + nnz) bound {linear_bound} B"
-        );
-        std::process::exit(1);
-    }
+        ),
+    );
     if quick {
         println!("quick mode: 5x speedup gate skipped (toy sizes)");
-    } else if last_speedup < 5.0 {
-        eprintln!(
-            "PERF GATE FAILED: sparse aggregation is only {last_speedup:.2}x faster than \
-             the dense path at the largest size (need >= 5x)"
+    } else {
+        doc.gate(
+            "sparse_5x_faster",
+            last_speedup >= 5.0,
+            &format!(
+                "PERF GATE FAILED: sparse aggregation is only {last_speedup:.2}x faster than \
+                 the dense path at the largest size (need >= 5x)"
+            ),
         );
-        std::process::exit(1);
     }
+    doc.finish();
 }

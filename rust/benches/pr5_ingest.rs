@@ -18,7 +18,8 @@
 
 use capgnn::graph::io::{build_csr, load_cgr, read_edge_list, save_cgr, write_edge_list};
 use capgnn::util::bench;
-use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{arr, num, obj, Json};
 use capgnn::util::Rng;
 
 fn main() {
@@ -124,32 +125,27 @@ fn main() {
     save_cgr(std::path::Path::new(path), &g, None).unwrap();
     let back = load_cgr(std::path::Path::new(path)).unwrap();
     let roundtrip_ok = back.graph == g;
-    if !roundtrip_ok {
-        eprintln!("ROUND-TRIP BREACH at n={n}: .cgr load differs from the saved graph");
-        std::process::exit(1);
-    }
-
     let parallel_ratio = last_build2 / last_build1.max(1e-12);
-    let doc = obj(vec![
-        ("bench", s("pr5_ingest")),
-        ("quick", Json::Bool(quick)),
-        ("results", arr(entries)),
-        ("parallel_ratio_t2_at_largest", num(parallel_ratio)),
-        ("roundtrip_bit_exact", Json::Bool(roundtrip_ok)),
-    ]);
-    bench::write_json_file("BENCH_PR5.json", &doc).expect("write BENCH_PR5.json");
-    println!(
-        "wrote BENCH_PR5.json (largest size: t2/t1 build ratio {parallel_ratio:.2}, round-trip bit-exact)"
+    let mut doc = BenchDoc::new("pr5_ingest", "BENCH_PR5.json");
+    doc.field("results", arr(entries));
+    doc.field("parallel_ratio_t2_at_largest", num(parallel_ratio));
+    doc.gate(
+        "roundtrip_bit_exact",
+        roundtrip_ok,
+        &format!("ROUND-TRIP BREACH at n={n}: .cgr load differs from the saved graph"),
     );
-
     if quick {
         println!("quick mode: parallel speed gate skipped (toy sizes)");
-    } else if parallel_ratio > 1.10 {
-        eprintln!(
-            "PERF GATE FAILED: 2-thread CSR build is {:.0}% slower than single-threaded \
-             at the largest size (must be no slower, 10% tolerance)",
-            (parallel_ratio - 1.0) * 100.0
+    } else {
+        doc.gate(
+            "parallel_no_slower_t2",
+            parallel_ratio <= 1.10,
+            &format!(
+                "PERF GATE FAILED: 2-thread CSR build is {:.0}% slower than single-threaded \
+                 at the largest size (must be no slower, 10% tolerance)",
+                (parallel_ratio - 1.0) * 100.0
+            ),
         );
-        std::process::exit(1);
     }
+    doc.finish();
 }

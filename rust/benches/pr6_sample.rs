@@ -25,7 +25,8 @@ use capgnn::graph::{Dataset, Graph};
 use capgnn::runtime::NativeBackend;
 use capgnn::train::{SampledSession, Session, TrainConfig, TrainMode, TrainReport};
 use capgnn::util::bench;
-use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{arr, num, obj, Json};
 use capgnn::util::Rng;
 
 /// Random graph (avg degree ≈ 8) with synthetic labeled features.
@@ -155,32 +156,23 @@ fn main() {
         );
     }
 
-    let doc = obj(vec![
-        ("bench", s("pr6_sample")),
-        ("quick", Json::Bool(quick)),
-        ("results", arr(entries)),
-        ("peak_block_below_full_graph", Json::Bool(gate_peak_ok)),
-        ("epoch_touched_in_range", Json::Bool(gate_touched_ok)),
-        ("bit_stable_across_runs", Json::Bool(stable)),
-    ]);
-    bench::write_json_file("BENCH_PR6.json", &doc).expect("write BENCH_PR6.json");
-    println!(
-        "wrote BENCH_PR6.json (peak-block gate {}, touched gate {}, bit-stable {})",
-        gate_peak_ok, gate_touched_ok, stable
+    let mut doc = BenchDoc::new("pr6_sample", "BENCH_PR6.json");
+    doc.field("results", arr(entries));
+    doc.gate(
+        "peak_block_below_full_graph",
+        gate_peak_ok,
+        "SUBGRAPH GATE FAILED: peak resident block reached the full graph at the \
+         largest size with the smallest batch — sampling must bound the working set",
     );
-
-    if !gate_peak_ok {
-        eprintln!(
-            "SUBGRAPH GATE FAILED: peak resident block reached the full graph at the \
-             largest size with the smallest batch — sampling must bound the working set"
-        );
-        std::process::exit(1);
-    }
-    if !gate_touched_ok {
-        eprintln!("TOUCHED GATE FAILED: per-epoch touched-vertex metric missing or out of range");
-        std::process::exit(1);
-    }
-    if !stable {
-        std::process::exit(1);
-    }
+    doc.gate(
+        "epoch_touched_in_range",
+        gate_touched_ok,
+        "TOUCHED GATE FAILED: per-epoch touched-vertex metric missing or out of range",
+    );
+    doc.gate(
+        "bit_stable_across_runs",
+        stable,
+        "DETERMINISM GATE FAILED: same-seed sampled runs disagreed on a loss bit",
+    );
+    doc.finish();
 }

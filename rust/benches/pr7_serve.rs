@@ -30,7 +30,8 @@ use capgnn::serve::{
 };
 use capgnn::train::{run, TrainConfig};
 use capgnn::util::bench;
-use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{arr, num, obj, Json};
 use capgnn::util::Rng;
 
 /// Random graph (avg degree ≈ 8) with synthetic labeled features.
@@ -146,32 +147,25 @@ fn main() {
         );
     }
 
-    let doc = obj(vec![
-        ("bench", s("pr7_serve")),
-        ("quick", Json::Bool(quick)),
-        ("n", num(n as f64)),
-        ("zipf_s", num(1.1)),
-        ("results", arr(entries)),
-        ("cache_hits_positive", Json::Bool(gate_hits_ok)),
-        ("p99_under_500ms", Json::Bool(gate_p99_ok)),
-        ("responses_consistent", Json::Bool(gate_consistent)),
-        ("bit_stable_across_runs", Json::Bool(stable)),
-    ]);
-    bench::write_json_file("BENCH_PR7.json", &doc).expect("write BENCH_PR7.json");
-    println!(
-        "wrote BENCH_PR7.json (hits gate {gate_hits_ok}, p99 gate {gate_p99_ok}, \
-         consistent {gate_consistent}, bit-stable {stable})"
+    let mut doc = BenchDoc::new("pr7_serve", "BENCH_PR7.json");
+    doc.field("n", num(n as f64));
+    doc.field("zipf_s", num(1.1));
+    doc.field("results", arr(entries));
+    doc.gate(
+        "cache_hits_positive",
+        gate_hits_ok,
+        "CACHE GATE FAILED: a configuration saw zero cross-request cache hits",
     );
-
-    if !gate_hits_ok {
-        eprintln!("CACHE GATE FAILED: a configuration saw zero cross-request cache hits");
-        std::process::exit(1);
-    }
-    if !gate_p99_ok {
-        eprintln!("LATENCY GATE FAILED: p99 exceeded 500ms");
-        std::process::exit(1);
-    }
-    if !gate_consistent || !stable {
-        std::process::exit(1);
-    }
+    doc.gate("p99_under_500ms", gate_p99_ok, "LATENCY GATE FAILED: p99 exceeded 500ms");
+    doc.gate(
+        "responses_consistent",
+        gate_consistent,
+        "CONSISTENCY GATE FAILED: two responses for one vertex differed in a bit",
+    );
+    doc.gate(
+        "bit_stable_across_runs",
+        stable,
+        "DETERMINISM GATE FAILED: same-seed serving runs produced different digests",
+    );
+    doc.finish();
 }

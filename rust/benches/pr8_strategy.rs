@@ -1,0 +1,152 @@
+//! PR8 bench / CI gate: halo exchange vs the CAGNET-style 1.5D block
+//! strategy (`--strategy 1.5d`) on the multi-machine cluster presets.
+//!
+//! For three graph sizes × the 2M-2D and 2M-4D presets it trains the
+//! same configuration under both strategies (vanilla communication —
+//! cache off — so the raw communication patterns are compared on every
+//! epoch, not a cold-start artifact) and records per-strategy epoch
+//! time, device bytes, and cross-machine wire bytes. The crossover
+//! story: halo traffic scales with the edge cut, 1.5D traffic with the
+//! replication factor, so on a dense graph whole-block broadcasts
+//! undercut naive per-row delivery.
+//!
+//! Writes `BENCH_PR8.json` to the repo root, then exits nonzero if
+//! - the two strategies disagree on any loss/accuracy bit anywhere
+//!   (including a Threaded 1.5D run at the smallest size), or
+//! - at the densest size of either preset, 1.5D cross-machine bytes do
+//!   not beat the halo-naive (no-dedup) bytes.
+//!
+//! `BENCH_QUICK=1` shrinks the sizes for smoke runs.
+
+use capgnn::dist::{train_distributed, Cluster, DistReport};
+use capgnn::graph::datasets::synthetic_node_data;
+use capgnn::graph::{Dataset, Graph};
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{ExecMode, StrategyKind, TrainConfig};
+use capgnn::util::bench;
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{arr, num, obj, s, Json};
+use capgnn::util::Rng;
+
+/// Random graph (avg degree ≈ 8) with synthetic labeled features.
+fn make_dataset(n: usize, seed: u64) -> Dataset {
+    let m = n * 8;
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 8, 32, seed);
+    Dataset { name: "bench", label: "Bn", graph, data }
+}
+
+fn run_strategy(
+    ds: &Dataset,
+    cluster: &Cluster,
+    epochs: usize,
+    strategy: StrategyKind,
+    exec: ExecMode,
+) -> DistReport {
+    // Vanilla communication: cache off keeps cross-machine traffic on
+    // every epoch, so the strategies' steady-state volumes are compared.
+    let mut cfg = TrainConfig::vanilla(epochs);
+    cfg.hidden = 32;
+    cfg.layers = 2;
+    cfg.lr = 0.05;
+    cfg.exec = exec;
+    cfg.strategy = strategy;
+    if strategy == StrategyKind::OneHalfD {
+        cfg.replication = 2;
+    }
+    let mut backend = NativeBackend::new();
+    train_distributed(ds, cluster, &mut backend, &cfg).expect("distributed run")
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let sizes: &[usize] = if quick { &[512, 1024, 2048] } else { &[2048, 4096, 8192] };
+    let epochs = if quick { 2 } else { 3 };
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut bitwise_ok = true;
+    let mut crossover_ok = true;
+    for preset in ["2M-2D", "2M-4D"] {
+        let cluster = Cluster::preset(preset).unwrap();
+        for &n in sizes {
+            let ds = make_dataset(n, 42);
+            let halo = run_strategy(&ds, &cluster, epochs, StrategyKind::Halo,
+                                    ExecMode::Sequential);
+            let od = run_strategy(&ds, &cluster, epochs, StrategyKind::OneHalfD,
+                                  ExecMode::Sequential);
+            if halo.report.losses != od.report.losses
+                || halo.report.val_accs != od.report.val_accs
+                || halo.report.test_acc.to_bits() != od.report.test_acc.to_bits()
+            {
+                eprintln!(
+                    "NUMERICS DIVERGED on {preset} n={n}: halo losses {:?} vs 1.5d {:?}",
+                    halo.report.losses, od.report.losses
+                );
+                bitwise_ok = false;
+            }
+            // The threaded executor must run the block path bit-identically
+            // too; one size per preset keeps the bench fast.
+            if n == sizes[0] {
+                let odt = run_strategy(&ds, &cluster, epochs, StrategyKind::OneHalfD,
+                                       ExecMode::Threaded);
+                if odt.report.losses != halo.report.losses {
+                    eprintln!("NUMERICS DIVERGED on {preset} n={n}: threaded 1.5d differs");
+                    bitwise_ok = false;
+                }
+            }
+            let densest = n == *sizes.last().unwrap();
+            if densest && od.cross_machine_bytes >= halo.cross_machine_bytes_naive {
+                eprintln!(
+                    "CROSSOVER GATE FAILED on {preset} n={n}: 1.5d cross bytes {} do not \
+                     beat halo-naive {}",
+                    od.cross_machine_bytes, halo.cross_machine_bytes_naive
+                );
+                crossover_ok = false;
+            }
+            println!(
+                "{preset} n={n}: halo epoch {:.4}s sim / cross {} B (naive {} B) vs \
+                 1.5d epoch {:.4}s sim / cross {} B ({} B broadcast)",
+                halo.report.mean_epoch(),
+                halo.cross_machine_bytes,
+                halo.cross_machine_bytes_naive,
+                od.report.mean_epoch(),
+                od.cross_machine_bytes,
+                od.report.broadcast_bytes,
+            );
+            entries.push(obj(vec![
+                ("preset", s(preset)),
+                ("n", num(n as f64)),
+                ("workers", num(halo.workers as f64)),
+                ("machines", num(halo.machines as f64)),
+                ("epochs", num(epochs as f64)),
+                ("replication", num(2.0)),
+                ("halo_epoch_s", num(halo.report.mean_epoch())),
+                ("one_half_d_epoch_s", num(od.report.mean_epoch())),
+                ("halo_bytes_moved", num(halo.report.bytes_moved as f64)),
+                ("one_half_d_bytes_moved", num(od.report.bytes_moved as f64)),
+                ("one_half_d_broadcast_bytes", num(od.report.broadcast_bytes as f64)),
+                ("halo_cross_bytes", num(halo.cross_machine_bytes as f64)),
+                ("halo_cross_bytes_naive", num(halo.cross_machine_bytes_naive as f64)),
+                ("one_half_d_cross_bytes", num(od.cross_machine_bytes as f64)),
+            ]));
+        }
+    }
+
+    let mut doc = BenchDoc::new("pr8_strategy", "BENCH_PR8.json");
+    doc.field("results", arr(entries));
+    doc.gate(
+        "losses_bitwise_equal",
+        bitwise_ok,
+        "STRATEGY GATE FAILED: 1.5d diverged from halo in a loss/accuracy bit",
+    );
+    doc.gate(
+        "one_half_d_beats_naive_at_densest",
+        crossover_ok,
+        "CROSSOVER GATE FAILED: 1.5d cross-machine bytes did not beat halo-naive \
+         bytes at the densest size",
+    );
+    doc.finish();
+}

@@ -62,11 +62,20 @@ pub struct ExchangeParams {
     /// Extra multiplier on communication time (baselines with costlier
     /// comm patterns, e.g. DistGCN's 2D broadcasts).
     pub comm_multiplier: f64,
+    /// Charge per-row transfer bytes/time for fresh deliveries (the halo
+    /// transport model). `false` keeps the full plan *structure* and the
+    /// cache bookkeeping charges (check/pick, H2D hits, bytes saved, the
+    /// naive cross-machine baseline) but skips the per-row `bytes_moved`
+    /// and owner→requester transfer-time charges — used by the 1.5D
+    /// strategy, which replaces row-granular transport with block
+    /// broadcasts it charges itself.
+    pub charge_transfers: bool,
 }
 
 impl ExchangeParams {
     /// Default parameters for exchanging `f_dim`-wide rows of `layer` at
-    /// `epoch` (cache on, no refresh, f32 wire width).
+    /// `epoch` (cache on, no refresh, f32 wire width, halo transport
+    /// charges on).
     pub fn new(layer: u32, epoch: u64, f_dim: usize) -> ExchangeParams {
         ExchangeParams {
             layer,
@@ -75,6 +84,7 @@ impl ExchangeParams {
             use_cache: true,
             refresh: false,
             comm_multiplier: 1.0,
+            charge_transfers: true,
         }
     }
 }
@@ -311,7 +321,9 @@ impl<'a> ExchangeEngine<'a> {
                     });
                     expect[w] += 1;
                     pair_rows[owner][w] += 1;
-                    bytes_moved += row_bytes;
+                    if p.charge_transfers {
+                        bytes_moved += row_bytes;
+                    }
                     continue;
                 }
                 stages[w].check_cache += self.costs.check_per_lookup;
@@ -337,7 +349,9 @@ impl<'a> ExchangeEngine<'a> {
                             });
                         }
                         pair_rows[owner][w] += 1;
-                        bytes_moved += row_bytes;
+                        if p.charge_transfers {
+                            bytes_moved += row_bytes;
+                        }
                     }
                     Hit::Local => {
                         stages[w].pick_cache += self.costs.pick_per_row;
@@ -380,7 +394,9 @@ impl<'a> ExchangeEngine<'a> {
                         });
                         cache.fill_pending(w, key);
                         pair_rows[owner][w] += 1;
-                        bytes_moved += row_bytes;
+                        if p.charge_transfers {
+                            bytes_moved += row_bytes;
+                        }
                     }
                 }
             }
@@ -464,29 +480,31 @@ impl<'a> ExchangeEngine<'a> {
         let active_pairs = pair_rows.iter().flatten().filter(|&&r| r > 0).count()
             + h2d_rows.iter().filter(|&&r| r > 0).count()
             + xagg.len();
-        for src in 0..nparts {
-            for dst in 0..nparts {
-                let r = pair_rows[src][dst];
-                if r == 0 {
-                    continue;
-                }
-                let t = (self.topology.transfer_time(
-                    self.gpus,
-                    src,
-                    dst,
-                    r * row_bytes,
-                    active_pairs,
-                ) + self.costs.per_transfer_latency)
-                    * p.comm_multiplier;
-                // Receiver waits for the transfer; sender charges D2H half
-                // when routed through the CPU.
-                stages[dst].communication += t;
-                if !self.topology.p2p[src][dst] {
-                    stages[src].communication += self
-                        .topology
-                        .d2h_time(self.gpus, src, r * row_bytes, active_pairs)
-                        * 0.5
+        if p.charge_transfers {
+            for src in 0..nparts {
+                for dst in 0..nparts {
+                    let r = pair_rows[src][dst];
+                    if r == 0 {
+                        continue;
+                    }
+                    let t = (self.topology.transfer_time(
+                        self.gpus,
+                        src,
+                        dst,
+                        r * row_bytes,
+                        active_pairs,
+                    ) + self.costs.per_transfer_latency)
                         * p.comm_multiplier;
+                    // Receiver waits for the transfer; sender charges D2H
+                    // half when routed through the CPU.
+                    stages[dst].communication += t;
+                    if !self.topology.p2p[src][dst] {
+                        stages[src].communication += self
+                            .topology
+                            .d2h_time(self.gpus, src, r * row_bytes, active_pairs)
+                            * 0.5
+                            * p.comm_multiplier;
+                    }
                 }
             }
         }
@@ -504,19 +522,23 @@ impl<'a> ExchangeEngine<'a> {
         // Ethernet frames: every co-located recipient waits for the same
         // frame batch; the owner pays the D2H half of pushing it to the
         // NIC. `transfer_time` applies the cross-machine link multiplier.
-        for ((ow, _m), (bytes, recips)) in &xagg {
-            let rep = *recips.iter().next().expect("frame with no recipients");
-            let t = (self.topology.transfer_time(self.gpus, *ow, rep, *bytes, active_pairs)
-                + self.costs.per_transfer_latency)
-                * p.comm_multiplier;
-            for &rw in recips.iter() {
-                stages[rw].communication += t;
+        if p.charge_transfers {
+            for ((ow, _m), (bytes, recips)) in &xagg {
+                let rep = *recips.iter().next().expect("frame with no recipients");
+                let t = (self
+                    .topology
+                    .transfer_time(self.gpus, *ow, rep, *bytes, active_pairs)
+                    + self.costs.per_transfer_latency)
+                    * p.comm_multiplier;
+                for &rw in recips.iter() {
+                    stages[rw].communication += t;
+                }
+                stages[*ow].communication += self
+                    .topology
+                    .d2h_time(self.gpus, *ow, *bytes, active_pairs)
+                    * 0.5
+                    * p.comm_multiplier;
             }
-            stages[*ow].communication += self
-                .topology
-                .d2h_time(self.gpus, *ow, *bytes, active_pairs)
-                * 0.5
-                * p.comm_multiplier;
         }
 
         RoundPlan {
@@ -891,6 +913,40 @@ mod tests {
         assert_eq!(r1.cross_bytes, 0);
         assert_eq!(r1.cross_bytes_naive, 0);
         assert_eq!(r1.bytes_moved, r.bytes_moved);
+    }
+
+    /// `charge_transfers = false` keeps the plan structure (staged /
+    /// sends / cross / expect / fills) and the cache-side charges but
+    /// drops the per-row transport bytes and owner→requester times —
+    /// the seam the 1.5D strategy charges its block broadcasts through.
+    #[test]
+    fn uncharged_plan_keeps_structure_and_drops_transport() {
+        let (plan, gpus, _) = setup();
+        let machine_of = [0usize, 0, 1, 1];
+        let topo = Topology::cluster(&machine_of, 10.0);
+        let eng = ExchangeEngine::with_machines(&gpus, &topo, &machine_of);
+        let mut p = ExchangeParams::new(0, 0, 16);
+        p.use_cache = false;
+        let mut c1 = TwoLevelCache::new(PolicyKind::Lru, &[0; 4], 0);
+        let charged = eng.plan_round(&plan, &mut c1, p);
+        p.charge_transfers = false;
+        let mut c2 = TwoLevelCache::new(PolicyKind::Lru, &[0; 4], 0);
+        let free = eng.plan_round(&plan, &mut c2, p);
+        // Identical movement schedule…
+        assert_eq!(free.expect, charged.expect);
+        assert_eq!(free.sends.len(), charged.sends.len());
+        for (a, b) in free.sends.iter().zip(&charged.sends) {
+            assert_eq!(a.len(), b.len());
+        }
+        for (a, b) in free.cross.iter().zip(&charged.cross) {
+            assert_eq!(a.len(), b.len());
+        }
+        assert_eq!(free.cross_bytes_naive, charged.cross_bytes_naive);
+        // …with no per-row transport charged.
+        assert_eq!(free.bytes_moved, 0);
+        assert!(charged.bytes_moved > 0);
+        assert!(free.stages.iter().all(|s| s.communication == 0.0));
+        assert!(charged.stages.iter().map(|s| s.communication).sum::<f64>() > 0.0);
     }
 
     #[test]

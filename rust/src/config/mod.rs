@@ -11,7 +11,7 @@ use crate::partition::Method;
 use crate::runtime::BackendKind;
 use crate::sample::Fanout;
 use crate::serve::{Pacing, ServeConfig, WorkloadConfig};
-use crate::train::{CapacityMode, ExecMode, TrainConfig, TrainMode};
+use crate::train::{CapacityMode, ExecMode, StrategyKind, TrainConfig, TrainMode};
 use crate::util::{Args, Rng};
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -50,6 +50,8 @@ const TRAIN_ONLY_OPTS: &[&str] = &[
     "parts",
     "backend",
     "save-model",
+    "strategy",
+    "replication",
 ];
 
 /// Boolean flags that only training reads; `capgnn serve` rejects them.
@@ -78,7 +80,8 @@ pub struct RunSpec {
 ///  --model gcn --epochs 200 --policy jaca --method metis
 ///  --backend xla|native --scale 1.0 --seed 42 --local-cap N
 ///  --global-cap N --no-pipe --refresh 8 --lr 0.02 --hidden 64
-///  --layers 3 --mode full|sampled --batch-size 64 --fanout 10,5`
+///  --layers 3 --mode full|sampled --batch-size 64 --fanout 10,5
+///  --strategy halo|1.5d --replication 2`
 ///
 /// `--dataset` goes through the [`DatasetSource`] registry, so every
 /// consumer of the spec accepts a synthetic twin and an ingested on-disk
@@ -218,6 +221,34 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
             };
         }
     }
+    // `--strategy` picks the epoch-execution strategy: the paper's halo
+    // exchange (default) or the CAGNET-style 1.5D block broadcast, which
+    // is full-batch-only. `--replication` is the 1.5D replication factor
+    // c — a dead knob under any other strategy, so it errors there.
+    train.strategy = match args.get("strategy") {
+        None => StrategyKind::Halo,
+        Some(s) => StrategyKind::from_name(s)
+            .ok_or_else(|| anyhow!("unknown --strategy {s} (use 'halo' or '1.5d')"))?,
+    };
+    if train.strategy == StrategyKind::OneHalfD && train.mode == TrainMode::Sampled {
+        return Err(anyhow!(
+            "the 1.5d strategy supports full-batch training only; use --strategy halo"
+        ));
+    }
+    train.replication = match args.get("replication") {
+        None => 1,
+        Some(v) => {
+            if train.strategy != StrategyKind::OneHalfD {
+                return Err(anyhow!(
+                    "--replication only applies to the 1.5d strategy; add --strategy 1.5d"
+                ));
+            }
+            v.parse()
+                .ok()
+                .filter(|&c| c >= 1)
+                .ok_or_else(|| anyhow!("bad --replication {v} (want an integer >= 1)"))?
+        }
+    };
     if let (Some(l), Some(g)) = (args.get("local-cap"), args.get("global-cap")) {
         train.capacity = CapacityMode::Fixed {
             local: l.parse().map_err(|_| anyhow!("bad local-cap"))?,
@@ -459,6 +490,46 @@ mod tests {
             "--scale", "0.1", "--mode", "sampled", "--layers", "2", "--fanout", "10,0",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn strategy_flag_parses_and_defaults() {
+        let d = run_spec(&args(&["--scale", "0.1"])).unwrap();
+        assert_eq!(d.train.strategy, StrategyKind::Halo);
+        assert_eq!(d.train.replication, 1);
+        let s = run_spec(&args(&[
+            "--scale", "0.1", "--strategy", "1.5d", "--replication", "2",
+        ]))
+        .unwrap();
+        assert_eq!(s.train.strategy, StrategyKind::OneHalfD);
+        assert_eq!(s.train.replication, 2);
+        assert!(run_spec(&args(&["--scale", "0.1", "--strategy", "2d"])).is_err());
+    }
+
+    #[test]
+    fn strategy_dead_knobs_rejected() {
+        // --replication without the 1.5d strategy is dead: error, no no-op.
+        let err = run_spec(&args(&["--scale", "0.1", "--replication", "2"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--strategy 1.5d"), "unhelpful error: {err}");
+        // The 1.5d strategy is full-batch only.
+        let err = run_spec(&args(&[
+            "--scale", "0.1", "--mode", "sampled", "--strategy", "1.5d",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("full-batch"), "unhelpful error: {err}");
+        // Replication must be a positive count.
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--strategy", "1.5d", "--replication", "0",
+        ]))
+        .is_err());
+        // Serving rejects both knobs as training-only.
+        for bad in [vec!["--strategy", "1.5d"], vec!["--replication", "2"]] {
+            let err = serve_spec(&args(&bad)).unwrap_err().to_string();
+            assert!(err.contains("train"), "unhelpful error: {err}");
+        }
     }
 
     #[test]

@@ -190,6 +190,54 @@ impl SparseAdj {
         self.fwd.mem_bytes() + self.transpose.get().map_or(0, |t| t.mem_bytes())
     }
 
+    /// Contiguous column ranges splitting `[0, n)` into `k` near-equal
+    /// blocks (the CAGNET 1.5D round structure). Ranges are ascending and
+    /// cover every column exactly once; `k` is clamped to `[1, n]`.
+    pub fn col_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+        let k = k.clamp(1, n.max(1));
+        let per = n.div_ceil(k);
+        (0..k)
+            .map(|b| (b * per, ((b + 1) * per).min(n)))
+            .filter(|(lo, hi)| lo < hi || n == 0)
+            .collect()
+    }
+
+    /// The sub-matrix keeping only entries with column in `[c0, c1)`.
+    /// Rows keep their absolute column indices (the block multiplies the
+    /// *full-width* H), and within each row entries stay in ascending
+    /// column order — so accumulating the blocks of
+    /// [`col_blocks`](SparseAdj::col_blocks) in ascending block order
+    /// replays the exact f32 accumulation sequence of the fused walk,
+    /// bit for bit.
+    pub fn col_slice(&self, c0: usize, c1: usize) -> CsrMat {
+        assert!(c0 <= c1 && c1 <= self.n);
+        let fwd = &self.fwd;
+        let mut indptr = vec![0u32; self.n + 1];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..self.n {
+            let (s, e) = (fwd.indptr[r] as usize, fwd.indptr[r + 1] as usize);
+            let row = &fwd.indices[s..e];
+            // Rows are sorted ascending: the block is one contiguous run.
+            let lo = s + row.partition_point(|&c| (c as usize) < c0);
+            let hi = s + row.partition_point(|&c| (c as usize) < c1);
+            indices.extend_from_slice(&fwd.indices[lo..hi]);
+            values.extend_from_slice(&fwd.values[lo..hi]);
+            indptr[r + 1] = indices.len() as u32;
+        }
+        CsrMat { indptr, indices, values }
+    }
+
+    /// Split the operator into `k` ascending contiguous column blocks
+    /// (see [`col_slice`](SparseAdj::col_slice) for the bit-exactness
+    /// contract). Block nnz sums to the full nnz.
+    pub fn col_blocks(&self, k: usize) -> Vec<CsrMat> {
+        SparseAdj::col_ranges(self.n, k)
+            .into_iter()
+            .map(|(c0, c1)| self.col_slice(c0, c1))
+            .collect()
+    }
+
     /// Materialize the dense row-major n×n matrix (test oracles and the
     /// dense-only XLA artifact path; O(n²) — never on the trainer path).
     pub fn to_dense(&self) -> Vec<f32> {
@@ -276,6 +324,57 @@ mod tests {
         assert!(adj.mem_bytes() <= bound, "{} > {}", adj.mem_bytes(), bound);
         // vs the dense footprint it replaces:
         assert!(adj.mem_bytes() < 256 * 256 * 4 / 4);
+    }
+
+    #[test]
+    fn col_ranges_cover_and_clamp() {
+        assert_eq!(SparseAdj::col_ranges(10, 3), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(SparseAdj::col_ranges(4, 1), vec![(0, 4)]);
+        // k > n clamps to one column per block.
+        let r = SparseAdj::col_ranges(3, 8);
+        assert_eq!(r, vec![(0, 1), (1, 2), (2, 3)]);
+        // Full coverage, ascending, disjoint.
+        for k in 1..=6 {
+            let r = SparseAdj::col_ranges(17, k);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, 17);
+            assert!(r.windows(2).all(|w| w[0].1 == w[1].0));
+        }
+    }
+
+    #[test]
+    fn col_blocks_partition_the_nnz_exactly() {
+        let mut rng = Rng::new(11);
+        let g = Graph::random(48, 200, &mut rng);
+        let adj = SparseAdj::gcn_normalized(&g, 64);
+        for k in [1usize, 2, 3, 5] {
+            let blocks = adj.col_blocks(k);
+            let ranges = SparseAdj::col_ranges(64, k);
+            assert_eq!(blocks.len(), ranges.len());
+            let total: usize = blocks.iter().map(|b| b.nnz()).sum();
+            assert_eq!(total, adj.nnz(), "k={k}: nnz not partitioned");
+            // Concatenating each row across ascending blocks recovers the
+            // fused row walk exactly (indices and bit-identical values).
+            let fwd = adj.fwd();
+            for r in 0..64 {
+                let mut idx = Vec::new();
+                let mut val = Vec::new();
+                for (b, (c0, c1)) in blocks.iter().zip(&ranges) {
+                    let (s, e) = (b.indptr[r] as usize, b.indptr[r + 1] as usize);
+                    assert!(b.indices[s..e]
+                        .iter()
+                        .all(|&c| (*c0..*c1).contains(&(c as usize))));
+                    idx.extend_from_slice(&b.indices[s..e]);
+                    val.extend_from_slice(&b.values[s..e]);
+                }
+                let (s, e) = (fwd.indptr[r] as usize, fwd.indptr[r + 1] as usize);
+                assert_eq!(idx, fwd.indices[s..e], "row {r} order");
+                assert!(val
+                    .iter()
+                    .zip(&fwd.values[s..e])
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+        }
     }
 
     #[test]

@@ -34,7 +34,10 @@
 //!   [`train::TrainConfig::mode`] (full-batch or sampled), drives the
 //!   session, and returns the [`train::TrainReport`] together with the
 //!   [`model::TrainedModel`] artifact that `capgnn serve` consumes.
-//!   (`train::train` is the deprecated report-only shim.)
+//! - [`train::CommStrategy`] selects how an epoch communicates
+//!   (`--strategy halo|1.5d`): the paper's halo exchange, or a
+//!   CAGNET-style 1.5D block broadcast with replication factor
+//!   `--replication` — bit-identical losses either way.
 //!
 //! ## Serving
 //!

@@ -87,6 +87,14 @@ COMMANDS:
               --agg-threads N    intra-worker SpMM row-block threads of
                                  the native backend (default 1); any N is
                                  bit-identical — rows are independent
+              --strategy halo|1.5d  epoch communication: per-row halo
+                                 exchange (default) or CAGNET-style 1.5D
+                                 whole-block broadcasts over ascending
+                                 column blocks (full-batch only; losses
+                                 bit-identical to halo)
+              --replication C    1.5D replication factor: one block copy
+                                 serves C consecutive workers per machine
+                                 (requires --strategy 1.5d)
               --save-model M.cgm write the trained weights as a versioned
                                  artifact for `capgnn serve`]
   serve      --model m.cgm      trained artifact (from train --save-model)
@@ -163,7 +171,7 @@ fn cmd_train(args: &Args) -> i32 {
         },
     };
     println!(
-        "training {} on {} ({} vertices, {} edges) with {} GPUs on {} machine(s) [{}], backend={}, exec={}, mode={}",
+        "training {} on {} ({} vertices, {} edges) with {} GPUs on {} machine(s) [{}], backend={}, exec={}, mode={}, strategy={}",
         spec.train.model.name(),
         spec.dataset.name,
         spec.dataset.graph.n(),
@@ -174,6 +182,7 @@ fn cmd_train(args: &Args) -> i32 {
         backend.name(),
         spec.train.exec.name(),
         spec.train.mode.name(),
+        spec.train.strategy.name(),
     );
     // Unified facade: `train::run_with` dispatches on the configured
     // mode (full-batch or sampled), drives the session with optional
@@ -223,6 +232,12 @@ fn cmd_train(args: &Args) -> i32 {
                 r.bytes_saved,
                 r.wallclock
             );
+            if r.broadcast_bytes > 0 {
+                println!(
+                    "1.5d: {} bytes of whole-block broadcasts (of {} total moved)",
+                    r.broadcast_bytes, r.bytes_moved,
+                );
+            }
             if spec.train.mode == TrainMode::Sampled {
                 let epochs = r.epoch_touched.len().max(1) as f64;
                 let mean_touched = r.epoch_touched.iter().sum::<u64>() as f64 / epochs;

@@ -13,8 +13,8 @@
 //! backend allocates nothing in steady state (the vectors are resized
 //! once, then reused epoch after epoch).
 
-use crate::graph::SparseAdj;
-use anyhow::Result;
+use crate::graph::{CsrMat, SparseAdj};
+use anyhow::{anyhow, Result};
 
 /// Output of the loss unit.
 #[derive(Clone, Debug)]
@@ -59,6 +59,35 @@ pub trait Backend {
     /// Masked CE loss/grad; `logits`/`y` are n×c, `mask` n.
     fn ce_grad(&mut self, n: usize, c: usize,
                logits: &[f32], y: &[f32], mask: &[f32]) -> Result<LossGrad>;
+
+    /// Partial aggregation for the 1.5D block strategy: accumulate
+    /// `block`·H into `acc` (resized to n×d and zeroed when `first`).
+    /// Feeding ascending contiguous column blocks reproduces the fused
+    /// SpMM's per-element accumulation order bit for bit. The default
+    /// marks a backend without block support — the 1.5D strategy refuses
+    /// to run on it.
+    fn spmm_block(&mut self, _n: usize, _d: usize, _block: &CsrMat, _h: &[f32],
+                  _acc: &mut Vec<f32>, _first: bool) -> Result<()> {
+        Err(anyhow!("backend '{}' does not support the 1.5d strategy", self.name()))
+    }
+
+    /// GCN tail over a precomputed aggregate: out = act(ah·W), the exact
+    /// post-SpMM op sequence of [`Backend::gcn_fwd`].
+    #[allow(clippy::too_many_arguments)]
+    fn gcn_combine(&mut self, _n: usize, _d_in: usize, _d_out: usize, _relu: bool,
+                   _ah: &[f32], _w: &[f32], _out: &mut Vec<f32>) -> Result<()> {
+        Err(anyhow!("backend '{}' does not support the 1.5d strategy", self.name()))
+    }
+
+    /// GraphSAGE tail over a precomputed aggregate:
+    /// out = act(H·Wself + ah·Wneigh), the exact post-SpMM op sequence of
+    /// [`Backend::sage_fwd`].
+    #[allow(clippy::too_many_arguments)]
+    fn sage_combine(&mut self, _n: usize, _d_in: usize, _d_out: usize, _relu: bool,
+                    _ah: &[f32], _h: &[f32], _w_self: &[f32], _w_neigh: &[f32],
+                    _out: &mut Vec<f32>) -> Result<()> {
+        Err(anyhow!("backend '{}' does not support the 1.5d strategy", self.name()))
+    }
 
     /// An independent instance for one worker thread
     /// (`ExecMode::Threaded`). Forked instances must produce bit-identical

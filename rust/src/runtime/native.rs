@@ -68,13 +68,43 @@ pub fn matmul_tn(m: usize, k: usize, n: usize, x: &[f32], y: &[f32], out: &mut [
     }
 }
 
+/// Feature-dimension tile width of the SpMM inner loop. A fixed-width
+/// inner block lets the compiler emit one vectorized body instead of a
+/// variable-trip-count loop; per-element the op sequence
+/// (`orow[j] += v * hrow[j]` in ascending `j`) is unchanged, so tiled
+/// and untiled results are bit-identical (asserted in tests).
+const SPMM_TILE: usize = 8;
+
+/// `orow += v * hrow` with the fixed-width tiled inner loop — the shared
+/// axpy of both SpMM (forward, Â·H) and SpMM-T (backward, Âᵀ·G, which
+/// runs the same kernel over the transposed CSR).
+#[inline]
+fn axpy_row(v: f32, hrow: &[f32], orow: &mut [f32]) {
+    let d = orow.len();
+    let dt = d - d % SPMM_TILE;
+    let (hl, hr) = hrow.split_at(dt);
+    let (ol, or) = orow.split_at_mut(dt);
+    for (oc, hc) in ol.chunks_exact_mut(SPMM_TILE).zip(hl.chunks_exact(SPMM_TILE)) {
+        for t in 0..SPMM_TILE {
+            oc[t] += v * hc[t];
+        }
+    }
+    for (o, hv) in or.iter_mut().zip(hr) {
+        *o += v * hv;
+    }
+}
+
 /// SpMM rows `rows.start..rows.start + block.len()/d` of out = M·H, where
-/// `M` is CSR and `H` is row-major n×d. Each output row is zeroed then
-/// accumulated in ascending CSR index order — the dense zero-skip order.
-fn spmm_rows(mat: &CsrMat, d: usize, h: &[f32], start: usize, block: &mut [f32]) {
+/// `M` is CSR and `H` is row-major n×d. When `zero`, each output row is
+/// zeroed first; either way it is accumulated in ascending CSR index
+/// order — the dense zero-skip order. `zero = false` is the partial
+/// accumulation the 1.5D column-block strategy stacks blocks with.
+fn spmm_rows(mat: &CsrMat, d: usize, h: &[f32], start: usize, block: &mut [f32], zero: bool) {
     for (i, orow) in block.chunks_exact_mut(d).enumerate() {
         let r = start + i;
-        orow.fill(0.0);
+        if zero {
+            orow.fill(0.0);
+        }
         let (s, e) = (mat.indptr[r] as usize, mat.indptr[r + 1] as usize);
         for k in s..e {
             let v = mat.values[k];
@@ -82,9 +112,7 @@ fn spmm_rows(mat: &CsrMat, d: usize, h: &[f32], start: usize, block: &mut [f32])
                 continue; // mirror the dense kernel's zero skip exactly
             }
             let hrow = &h[mat.indices[k] as usize * d..mat.indices[k] as usize * d + d];
-            for j in 0..d {
-                orow[j] += v * hrow[j];
-            }
+            axpy_row(v, hrow, orow);
         }
     }
 }
@@ -97,18 +125,25 @@ fn spmm_rows(mat: &CsrMat, d: usize, h: &[f32], start: usize, block: &mut [f32])
 /// bit-identical for any thread count. Pass the forward CSR for Â·H and
 /// [`SparseAdj::transpose`] for Âᵀ·G.
 pub fn spmm(mat: &CsrMat, d: usize, h: &[f32], out: &mut [f32], threads: usize) {
+    spmm_acc(mat, d, h, out, threads, true);
+}
+
+/// [`spmm`] with an explicit `zero` switch: `zero = false` accumulates
+/// `M·H` *into* `out` instead of overwriting it, which is how the 1.5D
+/// strategy stacks ascending column blocks into one aggregate.
+pub fn spmm_acc(mat: &CsrMat, d: usize, h: &[f32], out: &mut [f32], threads: usize, zero: bool) {
     let n = mat.n_rows();
     assert_eq!(out.len(), n * d);
     let t = threads.max(1).min(n.max(1));
     if t <= 1 {
-        spmm_rows(mat, d, h, 0, out);
+        spmm_rows(mat, d, h, 0, out, zero);
         return;
     }
     let rows_per = n.div_ceil(t);
     std::thread::scope(|scope| {
         for (ci, block) in out.chunks_mut(rows_per * d).enumerate() {
             let start = ci * rows_per;
-            scope.spawn(move || spmm_rows(mat, d, h, start, block));
+            scope.spawn(move || spmm_rows(mat, d, h, start, block, zero));
         }
     });
 }
@@ -349,6 +384,44 @@ impl Backend for NativeBackend {
             correct,
             dz,
         })
+    }
+
+    fn spmm_block(&mut self, n: usize, d: usize, block: &CsrMat, h: &[f32],
+                  acc: &mut Vec<f32>, first: bool) -> Result<()> {
+        debug_assert_eq!(block.n_rows(), n);
+        if first {
+            acc.resize(n * d, 0.0);
+        }
+        spmm_acc(block, d, h, acc, self.threads, first);
+        Ok(())
+    }
+
+    fn gcn_combine(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                   ah: &[f32], w: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        // The exact tail of gcn_fwd, with Â·H supplied by the caller.
+        out.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, ah, w, out);
+        if relu {
+            relu_inplace(out);
+        }
+        Ok(())
+    }
+
+    fn sage_combine(&mut self, n: usize, d_in: usize, d_out: usize, relu: bool,
+                    ah: &[f32], h: &[f32], w_self: &[f32], w_neigh: &[f32],
+                    out: &mut Vec<f32>) -> Result<()> {
+        // The exact tail of sage_fwd, with Ā·H supplied by the caller.
+        out.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, h, w_self, out);
+        self.z.resize(n * d_out, 0.0);
+        matmul(n, d_in, d_out, ah, w_neigh, &mut self.z);
+        for (zv, &nv) in out.iter_mut().zip(self.z.iter()) {
+            *zv += nv;
+        }
+        if relu {
+            relu_inplace(out);
+        }
+        Ok(())
     }
 
     fn fork(&self) -> Option<Box<dyn Backend + Send>> {
@@ -688,6 +761,97 @@ mod tests {
         for i in 0..n {
             let s: f32 = lg.dz[i * c..(i + 1) * c].iter().sum();
             assert!(s.abs() < 1e-6);
+        }
+    }
+
+    /// The tiled axpy (feature-dimension tiling of the SpMM inner loop)
+    /// is bit-identical to the plain `for j in 0..d` walk — same
+    /// per-element op sequence, only the loop shape changed.
+    #[test]
+    fn tiled_spmm_inner_loop_matches_untiled_bitwise() {
+        let mut rng = Rng::new(21);
+        for d in [1usize, 7, 8, 9, 16, 17, 33] {
+            let hrow = rand_vec(&mut rng, d);
+            let mut tiled = rand_vec(&mut rng, d);
+            let mut plain = tiled.clone();
+            let v = rng.normal() as f32;
+            axpy_row(v, &hrow, &mut tiled);
+            for j in 0..d {
+                plain[j] += v * hrow[j];
+            }
+            for (a, b) in tiled.iter().zip(&plain) {
+                assert_eq!(a.to_bits(), b.to_bits(), "d={d}");
+            }
+        }
+    }
+
+    /// Ascending column blocks accumulated via spmm_block reproduce the
+    /// fused SpMM bit for bit — the kernel half of the 1.5D determinism
+    /// argument (contiguous blocks concatenate to the fused CSR walk).
+    #[test]
+    fn spmm_block_ascending_accumulation_matches_fused_bitwise() {
+        let mut rng = Rng::new(22);
+        let g = Graph::random(100, 450, &mut rng);
+        let n_pad = 128;
+        let d = 19;
+        let adj = SparseAdj::gcn_normalized(&g, n_pad);
+        let h = rand_vec(&mut rng, n_pad * d);
+        let mut want = vec![0.0f32; n_pad * d];
+        spmm(adj.fwd(), d, &h, &mut want, 1);
+        for k in [1usize, 2, 3, 4] {
+            for threads in [1usize, 3] {
+                let mut b = NativeBackend::with_threads(threads);
+                let mut acc = vec![f32::NAN; 3]; // wrong-size garbage: first must reset
+                for (bi, blk) in adj.col_blocks(k).iter().enumerate() {
+                    b.spmm_block(n_pad, d, blk, &h, &mut acc, bi == 0).unwrap();
+                }
+                for (i, (a, w)) in acc.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), w.to_bits(), "k={k} threads={threads} idx={i}");
+                }
+            }
+        }
+    }
+
+    /// gcn_combine / sage_combine over a precomputed aggregate match the
+    /// fused forward passes bit for bit.
+    #[test]
+    fn combine_tails_match_fused_forward_bitwise() {
+        let mut rng = Rng::new(23);
+        let g = Graph::random(60, 280, &mut rng);
+        let n_pad = 64;
+        let (di, do_) = (11, 5);
+        let h = rand_vec(&mut rng, n_pad * di);
+        let w = rand_vec(&mut rng, di * do_);
+        let wn = rand_vec(&mut rng, di * do_);
+        for relu in [false, true] {
+            // GCN.
+            let adj = SparseAdj::gcn_normalized(&g, n_pad);
+            let mut fused = NativeBackend::new();
+            let mut want = Vec::new();
+            fused.gcn_fwd(n_pad, di, do_, relu, &adj, &h, &w, &mut want).unwrap();
+            let mut b = NativeBackend::new();
+            let mut agg = Vec::new();
+            for (bi, blk) in adj.col_blocks(3).iter().enumerate() {
+                b.spmm_block(n_pad, di, blk, &h, &mut agg, bi == 0).unwrap();
+            }
+            let mut got = Vec::new();
+            b.gcn_combine(n_pad, di, do_, relu, &agg, &w, &mut got).unwrap();
+            assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+            // SAGE.
+            let adj = SparseAdj::sage_mean(&g, n_pad);
+            let mut fused = NativeBackend::new();
+            let mut want = Vec::new();
+            fused
+                .sage_fwd(n_pad, di, do_, relu, &adj, &h, &w, &wn, &mut want)
+                .unwrap();
+            let mut b = NativeBackend::new();
+            let mut agg = Vec::new();
+            for (bi, blk) in adj.col_blocks(2).iter().enumerate() {
+                b.spmm_block(n_pad, di, blk, &h, &mut agg, bi == 0).unwrap();
+            }
+            let mut got = Vec::new();
+            b.sage_combine(n_pad, di, do_, relu, &agg, &h, &w, &wn, &mut got).unwrap();
+            assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
     }
 

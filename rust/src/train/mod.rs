@@ -10,11 +10,14 @@
 //!   Cache), then `run_epoch()` / `eval()` / observers.
 //! - [`SampledSession`] — the mini-batch neighbor-sampled counterpart
 //!   (`--mode sampled`), built over [`crate::sample`].
-//! - [`train`] — the deprecated legacy one-call shim (use [`run`]).
+//! - [`CommStrategy`] — the pluggable epoch-execution seam
+//!   (`--strategy halo|1.5d`): [`HaloStrategy`] is the paper's halo
+//!   exchange, [`OneHalfDStrategy`] the CAGNET-style 1.5D block SpMM.
 
 pub mod report;
 pub mod sampled;
 pub mod session;
+pub mod strategy;
 pub mod trainer;
 
 pub use report::TrainReport;
@@ -23,8 +26,7 @@ pub use session::{
     ConvergenceLog, EarlyStopping, EpochObserver, EpochStats, EvalStats, PeriodicRefresh,
     Session, Signal,
 };
-#[allow(deprecated)]
-pub use trainer::train;
+pub use strategy::{CommStrategy, HaloStrategy, OneHalfDStrategy, StrategyKind};
 pub use trainer::{
     run, run_with, CapacityMode, ExecMode, RunOptions, RunOutcome, TrainConfig, TrainMode,
 };

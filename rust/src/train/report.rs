@@ -21,8 +21,13 @@ pub struct TrainReport {
     /// Per-worker stage breakdown, summed over epochs (load-balance
     /// analysis — Fig. 21 variance).
     pub worker_stages: Vec<StageTimes>,
+    /// Execution strategy that produced this run (`"halo"` or `"1.5d"`).
+    pub strategy: String,
     /// Device bytes moved over the run (halo rows shipped to requesters).
     pub bytes_moved: u64,
+    /// Device bytes of whole-block H broadcasts under the 1.5D strategy
+    /// (already included in `bytes_moved`; 0 under halo).
+    pub broadcast_bytes: u64,
     /// Device bytes the cache saved (hits that avoided a transfer).
     pub bytes_saved: u64,
     /// Cross-machine wire bytes, measured from the serialized frames the

@@ -50,6 +50,7 @@ use crate::runtime::Backend;
 use crate::sample::{batch_rng, extract_block, BatchSchedule, Fanout, SampledBlock};
 use crate::train::report::TrainReport;
 use crate::train::session::{charge_compute, quantize_wire, EpochStats, EvalStats, WireRow};
+use crate::train::strategy::StrategyKind;
 use crate::train::trainer::{CapacityMode, ExecMode, TrainConfig};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
@@ -166,6 +167,11 @@ impl<'a> SampledSession<'a> {
         if cfg.batch_size == 0 {
             return Err(anyhow!("sampled mode needs a batch size >= 1"));
         }
+        if cfg.strategy == StrategyKind::OneHalfD {
+            return Err(anyhow!(
+                "the 1.5d strategy supports full-batch training only; use --strategy halo"
+            ));
+        }
         if cfg.fanout.len() != cfg.layers {
             return Err(anyhow!(
                 "sampled mode needs one fanout entry per layer ({} layers), got {}",
@@ -277,6 +283,7 @@ impl<'a> SampledSession<'a> {
         let engine = ExchangeEngine::with_machines(gpus, topology, cluster.machine_of());
         let batch_size = cfg.batch_size;
         let report = TrainReport {
+            strategy: cfg.strategy.name().to_string(),
             rapa_pruned,
             worker_stages: vec![StageTimes::default(); p],
             batches_per_epoch: train_ids.len().div_ceil(batch_size),

@@ -14,47 +14,49 @@
 //! capabilities (substitution S1); numerics are real (PJRT or native).
 
 use crate::cache::{cal_capacity, key_of, CapacityInput, TwoLevelCache, TwoLevelStats};
-use crate::comm::exchange::{
-    CrossSend, ExchangeEngine, ExchangeParams, FillDirective, SendDirective,
-};
+use crate::comm::exchange::ExchangeEngine;
 use crate::comm::pipeline;
-use crate::comm::queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};
 use crate::comm::transport::{Frame, Payload, FRAME_HEADER_BYTES};
 use crate::device::profile::Gpu;
 use crate::device::simclock::{StageTimes, WallStages};
 use crate::dist::Cluster;
 use crate::graph::{Dataset, SparseAdj};
 use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind, TrainedModel};
-use crate::partition::halo::{build_plan, Subgraph, SubgraphPlan};
+use crate::partition::halo::{build_plan, SubgraphPlan};
 use crate::partition::rapa;
 use crate::runtime::Backend;
 use crate::train::report::TrainReport;
-use crate::train::trainer::{CapacityMode, ExecMode, TrainConfig};
+use crate::train::strategy::exec::fresh_row;
+use crate::train::strategy::{
+    CommStrategy, EpochCtx, EpochOutcome, HaloStrategy, OneHalfDStrategy, StrategyKind,
+};
+use crate::train::trainer::{CapacityMode, TrainConfig};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-/// Per-worker training state (one simulated GPU).
-struct Worker {
-    n_pad: usize,
-    c_pad: usize,
+/// Per-worker training state (one simulated GPU). `pub(crate)` because
+/// the execution strategies ([`crate::train::strategy`]) mutate workers
+/// in place through [`EpochCtx`].
+pub(crate) struct Worker {
+    pub(crate) n_pad: usize,
+    pub(crate) c_pad: usize,
     /// Local propagation operator in CSR — O(n + nnz), built once at
     /// partition time (the dense n_pad×n_pad matrix it replaced was the
     /// per-worker memory ceiling).
-    adj: SparseAdj,
-    y: Vec<f32>,
-    train_mask: Vec<f32>,
-    val_mask: Vec<f32>,
-    test_mask: Vec<f32>,
+    pub(crate) adj: SparseAdj,
+    pub(crate) y: Vec<f32>,
+    pub(crate) train_mask: Vec<f32>,
+    pub(crate) val_mask: Vec<f32>,
+    pub(crate) test_mask: Vec<f32>,
     /// Activations h[0]=X … h[L]=logits, each n_pad × dims.
-    h: Vec<Vec<f32>>,
+    pub(crate) h: Vec<Vec<f32>>,
     /// Historical halo rows per layer (skip_exchange mode).
-    halo_hist: Vec<Vec<f32>>,
+    pub(crate) halo_hist: Vec<Vec<f32>>,
     /// Edge arcs in the local graph (for the compute-time model).
-    e_local: usize,
-    stages: StageTimes,
-    train_count: f32,
+    pub(crate) e_local: usize,
+    pub(crate) stages: StageTimes,
+    pub(crate) train_count: f32,
 }
 
 // Reference workloads of the Table-1 capability measurements.
@@ -225,6 +227,8 @@ pub struct Session<'a> {
     /// Per-worker backend forks for `ExecMode::Threaded` (lazily built on
     /// the first threaded epoch).
     worker_backends: Vec<Box<dyn Backend + Send>>,
+    /// Pluggable epoch-execution strategy (`--strategy halo|1.5d`).
+    strategy: Box<dyn CommStrategy>,
     report: TrainReport,
     epoch: u64,
     force_refresh: bool,
@@ -248,6 +252,11 @@ impl<'a> Session<'a> {
         let topology = cluster.topology();
         let p = gpus.len();
         assert!(p >= 1);
+        if cfg.replication > 1 && cfg.strategy != StrategyKind::OneHalfD {
+            return Err(anyhow!(
+                "replication only applies to the 1.5d strategy; set strategy=1.5d"
+            ));
+        }
         let mut rng = Rng::new(cfg.seed);
         let g = &dataset.graph;
         let data = &dataset.data;
@@ -362,6 +371,19 @@ impl<'a> Session<'a> {
         }
         let total_train: f32 = workers.iter().map(|w| w.train_count).sum::<f32>().max(1.0);
 
+        // ---- Execution strategy ----------------------------------------
+        let strategy: Box<dyn CommStrategy> = match cfg.strategy {
+            StrategyKind::Halo => Box::new(HaloStrategy),
+            StrategyKind::OneHalfD => {
+                // Ascending column blocks of each local operator, built
+                // once: contiguous ascending splits keep the blocked
+                // aggregation bit-identical to the fused CSR walk.
+                let c = cfg.replication.clamp(1, p);
+                let blocks = workers.iter().map(|w| w.adj.col_blocks(c)).collect();
+                Box::new(OneHalfDStrategy::new(c, blocks))
+            }
+        };
+
         // ---- Cache ------------------------------------------------------
         let max_caps: Vec<usize> = plan.parts.iter().map(|sg| sg.n_halo()).collect();
         let max_global: usize = {
@@ -430,6 +452,7 @@ impl<'a> Session<'a> {
         let engine = ExchangeEngine::with_machines(gpus, topology, cluster.machine_of());
         let report = TrainReport {
             rapa_pruned,
+            strategy: cfg.strategy.name().to_string(),
             worker_stages: vec![StageTimes::default(); p],
             ..Default::default()
         };
@@ -445,6 +468,7 @@ impl<'a> Session<'a> {
             engine,
             machine_of: cluster.machine_of().to_vec(),
             worker_backends: Vec::new(),
+            strategy,
             report,
             epoch: 0,
             force_refresh: false,
@@ -470,22 +494,21 @@ impl<'a> Session<'a> {
     ///
     /// An epoch is planned, executed and reduced:
     ///
-    /// 1. **Plan** — every cache decision for every exchange round runs
-    ///    centrally, in worker-index order, producing per-worker staged
-    ///    (cached) rows and owner→requester [`SendDirective`]s. Simulated
-    ///    stage times and wire bytes are charged here.
-    /// 2. **Execute** — forward + backward per worker: serially
-    ///    ([`ExecMode::Sequential`]) or one OS thread per worker
-    ///    ([`ExecMode::Threaded`]), where each worker computes layer `l`
-    ///    while halo rows for later rounds stream into its inbox.
-    /// 3. **Reduce** — losses/gradients merge in worker-index order, the
+    /// 1. **Plan + Execute** — delegated to the session's
+    ///    [`CommStrategy`]: planning the exchange rounds (every cache
+    ///    decision centrally, in worker-index order), moving halo
+    ///    content, and running forward + backward per worker — serially
+    ///    ([`crate::train::ExecMode::Sequential`]) or one OS thread per
+    ///    worker ([`crate::train::ExecMode::Threaded`]).
+    /// 2. **Reduce** — losses/gradients merge in worker-index order, the
     ///    optimizer steps, and pending cache fills receive their content.
+    ///    This phase is strategy-independent, so every strategy shares
+    ///    its numerics bit-for-bit.
     ///
     /// Both executors run the same plan and the same per-worker op
     /// sequence, so their numerics (and byte/time accounting) are
     /// bit-identical.
     pub fn run_epoch(&mut self) -> Result<EpochStats> {
-        let t_plan = Instant::now();
         let Self {
             cfg,
             backend,
@@ -497,6 +520,7 @@ impl<'a> Session<'a> {
             engine,
             machine_of,
             worker_backends,
+            strategy,
             report,
             epoch,
             force_refresh,
@@ -504,7 +528,6 @@ impl<'a> Session<'a> {
             f_dim,
             ..
         } = self;
-        let backend: &mut dyn Backend = &mut **backend;
         let epoch_now: u64 = *epoch;
         let p = workers.len();
         let n_machines = machine_of.iter().copied().max().map_or(1, |m| m + 1);
@@ -520,127 +543,32 @@ impl<'a> Session<'a> {
             && epoch_now % cfg.refresh_interval == 0)
             || *force_refresh;
         *force_refresh = false;
-
-        // ---- Plan -------------------------------------------------------
-        // Decisions depend only on cache metadata and keys, never on row
-        // contents, so all rounds can be planned before any layer
-        // computes — that is what frees the executors to move contents
-        // serially or concurrently without touching the cache. The cost
-        // is a per-epoch snapshot of the cache-hit rows (staged clones
-        // for every round at once); at this crate's scales that peak is
-        // small, and both executors sharing one delivery structure is
-        // what keeps them bit-identical.
-        let mut meta: Vec<RoundMeta> = Vec::with_capacity(cfg.layers);
-        let mut staged_by_worker: Vec<Vec<Vec<(usize, Vec<f32>)>>> =
-            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
-        let mut sends_by_worker: Vec<Vec<Vec<SendDirective>>> =
-            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
-        let mut cross_by_worker: Vec<Vec<Vec<CrossSend>>> =
-            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
-        let mut expect_by_worker: Vec<Vec<usize>> =
-            (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
-        let mut fills: Vec<(usize, FillDirective)> = Vec::new();
-        let mut planned_bytes_moved = 0u64;
-        let mut planned_bytes_saved = 0u64;
-        let mut planned_cross_naive = 0u64;
-        let mut comm_stages = vec![StageTimes::default(); p];
-        for l in 0..cfg.layers {
-            let d = if l == 0 { *f_dim } else { dims[l - 1].d_out };
-            let is_static = l == 0; // input features never go stale
-            let skip = cfg.skip_exchange && epoch_now > 0 && !refresh_epoch && !is_static;
-            if skip {
-                // Reuse historical halo rows (charged only bookkeeping).
-                meta.push(RoundMeta { dim: d, skip: true });
-                for w in 0..p {
-                    staged_by_worker[w].push(Vec::new());
-                    sends_by_worker[w].push(Vec::new());
-                    cross_by_worker[w].push(Vec::new());
-                    expect_by_worker[w].push(0);
-                }
-                continue;
-            }
-            let mut params = ExchangeParams::new(l as u32, epoch_now, d);
-            params.use_cache = cfg.use_cache;
-            params.refresh = refresh_epoch && !is_static;
-            params.comm_multiplier = cfg.comm_multiplier;
-            if let Some(b) = cfg.quantized_row_bytes {
-                params.bytes_per_row = b;
-            }
-            let mut rp = engine.plan_round(plan, cache, params);
-            for (cs, st) in comm_stages.iter_mut().zip(&rp.stages) {
-                cs.add(st);
-            }
-            // Byte charges are committed only after the executors
-            // succeed: an aborted epoch moves nothing, so adding planned
-            // traffic here would permanently overstate the report.
-            planned_bytes_moved += rp.bytes_moved;
-            planned_bytes_saved += rp.bytes_saved;
-            planned_cross_naive += rp.cross_bytes_naive;
-            fills.extend(rp.fills.drain(..).map(|f| (l, f)));
-            for w in 0..p {
-                staged_by_worker[w].push(std::mem::take(&mut rp.staged[w]));
-                sends_by_worker[w].push(std::mem::take(&mut rp.sends[w]));
-                cross_by_worker[w].push(std::mem::take(&mut rp.cross[w]));
-                expect_by_worker[w].push(rp.expect[w]);
-            }
-            meta.push(RoundMeta { dim: d, skip: false });
-        }
-        for (w, st) in workers.iter_mut().zip(&comm_stages) {
-            w.stages.add(st);
-        }
         let weights: Vec<f32> =
             workers.iter().map(|w| w.train_count / *total_train).collect();
-        let wall_plan = t_plan.elapsed().as_secs_f64();
 
-        // ---- Execute: forward + backward --------------------------------
-        let t_exec = Instant::now();
-        let kind = cfg.model;
-        let layers = cfg.layers;
-        let seed = cfg.seed;
-        let bits = cfg.quantize_bits;
-        let outs_res: Result<Vec<WorkerOut>> = match cfg.exec {
-            ExecMode::Sequential => run_epoch_sequential(
-                workers,
-                backend,
-                &plan.parts,
-                engine.gpus,
-                model,
-                dims,
-                &meta,
-                &staged_by_worker,
-                &sends_by_worker,
-                &cross_by_worker,
-                kind,
-                layers,
-                seed,
-                epoch_now,
-                bits,
-                &weights,
-            ),
-            ExecMode::Threaded => run_epoch_threaded(
-                workers,
-                backend,
+        // ---- Plan + Execute (delegated to the strategy) -----------------
+        let outcome = {
+            let mut ctx = EpochCtx {
+                cfg,
+                backend: &mut **backend,
                 worker_backends,
-                &plan.parts,
-                engine.gpus,
+                plan,
                 model,
                 dims,
-                &meta,
-                staged_by_worker,
-                sends_by_worker,
-                cross_by_worker,
-                expect_by_worker,
+                workers: &mut workers[..],
+                cache,
+                engine: &*engine,
+                machine_of,
                 n_machines,
-                kind,
-                layers,
-                seed,
-                epoch_now,
-                bits,
-                &weights,
-            ),
+                epoch: epoch_now,
+                refresh_epoch,
+                f_dim: *f_dim,
+                weights: &weights,
+            };
+            strategy.run_epoch(&mut ctx)
         };
-        let outs = match outs_res {
-            Ok(outs) => outs,
+        let outcome = match outcome {
+            Ok(o) => o,
             Err(e) => {
                 // A worker died after the plan ran `fill_pending`: sweep
                 // the content-less pending entries so the next epoch
@@ -650,13 +578,28 @@ impl<'a> Session<'a> {
                 return Err(e);
             }
         };
-        let wall_execute = t_exec.elapsed().as_secs_f64();
+        let EpochOutcome {
+            outs,
+            meta,
+            fills,
+            bytes_moved: planned_bytes_moved,
+            bytes_saved: planned_bytes_saved,
+            cross_naive: planned_cross_naive,
+            broadcast_bytes,
+            wall_plan,
+            wall_execute,
+        } = outcome;
+        let seed = cfg.seed;
+        let bits = cfg.quantize_bits;
 
         // ---- Reduce: deterministic merge in worker-index order ----------
         let t_reduce = Instant::now();
-        // The executors ran: commit the planned device-byte charges.
+        // The executors ran: commit the planned device-byte charges
+        // (for the 1.5d strategy `bytes_moved` already includes its
+        // whole-block broadcasts, reported separately too).
         report.bytes_moved += planned_bytes_moved;
         report.bytes_saved += planned_bytes_saved;
+        report.broadcast_bytes += broadcast_bytes;
         // Rows that could not be quantized traveled at full f32 precision —
         // charge the difference so byte accounting matches the wire.
         let mut full_rows_by_round = vec![0u64; meta.len()];
@@ -933,98 +876,6 @@ impl<'a> Session<'a> {
     }
 }
 
-/// Per-round execution metadata shared by both executors.
-#[derive(Clone, Copy)]
-struct RoundMeta {
-    /// Feature width of this round's rows.
-    dim: usize,
-    /// Skip-exchange round: reuse historical halo rows, nothing moves.
-    skip: bool,
-}
-
-/// What one worker's forward/backward pass produced. Reduced by the
-/// coordinator in worker-index order, so the merged numbers are identical
-/// however the workers were scheduled.
-struct WorkerOut {
-    grads: Grads,
-    /// Loss already scaled by the worker's train-mass weight.
-    loss: f32,
-    val_correct: f32,
-    val_total: f32,
-    /// Per-round count of owned rows that could not be quantized (the
-    /// coordinator charges them at full precision).
-    full_rows: Vec<u64>,
-    /// Wire bytes of the cross-machine frames this worker serialized
-    /// (measured from `Frame::wire_bytes`, not modeled).
-    cross_bytes: u64,
-}
-
-/// Everything one threaded worker needs for an epoch: shared structure by
-/// reference (immutable while the scope runs), its own schedule and
-/// channel endpoints by value.
-struct WorkerTask<'a> {
-    sg: &'a Subgraph,
-    gpu: &'a Gpu,
-    model: &'a GnnModel,
-    dims: &'a [LayerDims],
-    meta: &'a [RoundMeta],
-    kind: ModelKind,
-    layers: usize,
-    seed: u64,
-    epoch: u64,
-    bits: Option<u8>,
-    weight: f32,
-    /// Cached rows per round: (halo idx, row), cloned at plan time.
-    staged: Vec<Vec<(usize, Vec<f32>)>>,
-    /// Rows this worker owns and must deliver intra-machine, per round.
-    sends: Vec<Vec<SendDirective>>,
-    /// Deduplicated cross-machine deliveries this worker owns, per round
-    /// (serialized frames to each destination machine's router).
-    cross: Vec<Vec<CrossSend>>,
-    /// Fresh rows this worker receives, per round.
-    expect: Vec<usize>,
-    txs: Vec<mpsc::Sender<RowMsg>>,
-    /// Frame channel of each machine's router (empty on one machine).
-    frame_txs: Vec<mpsc::Sender<FrameMsg>>,
-    rx: mpsc::Receiver<RowMsg>,
-}
-
-/// Sentinel round tag a failing worker broadcasts so peers blocked on
-/// `recv` fail fast instead of deadlocking on rows that will never come.
-const POISON_ROUND: usize = usize::MAX;
-
-/// Write one halo row into `h[l]` (and the history buffer for l>0).
-fn place_row(w: &mut Worker, n_inner: usize, l: usize, d: usize, hi: usize, row: &[f32]) {
-    let dst = (n_inner + hi) * d;
-    w.h[l][dst..dst + d].copy_from_slice(row);
-    if l > 0 {
-        w.halo_hist[l - 1][hi * d..hi * d + d].copy_from_slice(row);
-    }
-}
-
-/// Skip-exchange round: reuse historical halo rows.
-fn reuse_hist(w: &mut Worker, n_inner: usize, n_halo: usize, l: usize, d: usize) {
-    for hi in 0..n_halo {
-        let dst = (n_inner + hi) * d;
-        let src = hi * d;
-        let hist = &w.halo_hist[l.max(1) - 1];
-        let row = &hist[src..src + d];
-        w.h[l][dst..dst + d].copy_from_slice(row);
-    }
-}
-
-/// Deterministic per-row quantization stream, keyed by (seed, epoch,
-/// layer, vertex): the noise a row receives depends neither on which
-/// worker fetched it first nor on thread interleaving — the keystone of
-/// the sequential/threaded bit-identity guarantee under AdaQP.
-fn row_rng(seed: u64, epoch: u64, layer: usize, vertex: u32) -> Rng {
-    let tag = ((layer as u64) << 32) | vertex as u64;
-    Rng::new(
-        seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            ^ tag.wrapping_mul(0xA24B_AED4_963E_E407),
-    )
-}
-
 /// One authoritative wire row: the values every recipient aggregates
 /// with, plus the exact quantized codes (when AdaQP applied) so
 /// cross-machine frames can ship the int8 representation and still
@@ -1041,7 +892,7 @@ pub(crate) struct WireRow {
 impl WireRow {
     /// Frame payload for the cross-machine hop: the quantized codes when
     /// they exist, full f32 otherwise.
-    fn payload(&self) -> Payload {
+    pub(crate) fn payload(&self) -> Payload {
         match &self.q8 {
             Some((lo, scale, codes)) => {
                 Payload::Q8 { lo: *lo, scale: *scale, codes: codes.clone() }
@@ -1049,563 +900,6 @@ impl WireRow {
             None => Payload::F32(self.values.clone()),
         }
     }
-}
-
-/// Read (and optionally quantize) the authoritative wire row of `vertex`
-/// from its owner's representation `l`.
-fn fresh_row(
-    owner: &Worker,
-    l: usize,
-    d: usize,
-    src_row: usize,
-    vertex: u32,
-    bits: Option<u8>,
-    seed: u64,
-    epoch: u64,
-) -> WireRow {
-    let src = src_row * d;
-    let row = &owner.h[l][src..src + d];
-    match bits {
-        Some(b) => {
-            let mut rng = row_rng(seed, epoch, l, vertex);
-            quantize_wire(row, b, &mut rng)
-        }
-        None => WireRow { values: row.to_vec(), quantized: true, q8: None },
-    }
-}
-
-/// Forward one layer on one worker and charge its simulated compute time.
-/// The backend writes `h[l+1]` in place — no per-layer allocation.
-fn compute_layer(
-    w: &mut Worker,
-    backend: &mut dyn Backend,
-    model: &GnnModel,
-    dims: &[LayerDims],
-    l: usize,
-    kind: ModelKind,
-    gpu: &Gpu,
-    n_inner: usize,
-) -> Result<()> {
-    let ld = dims[l];
-    let n_pad = w.n_pad;
-    {
-        let (head, tail) = w.h.split_at_mut(l + 1);
-        let h_in = &head[l];
-        let h_out = &mut tail[0];
-        match kind {
-            ModelKind::Gcn => backend.gcn_fwd(
-                n_pad,
-                ld.d_in,
-                ld.d_out,
-                ld.relu,
-                &w.adj,
-                h_in,
-                &model.weights[l][0],
-                h_out,
-            )?,
-            ModelKind::Sage => backend.sage_fwd(
-                n_pad,
-                ld.d_in,
-                ld.d_out,
-                ld.relu,
-                &w.adj,
-                h_in,
-                &model.weights[l][0],
-                &model.weights[l][1],
-                h_out,
-            )?,
-        }
-    }
-    charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, false, kind);
-    Ok(())
-}
-
-/// Loss + full backward chain for one worker. Returns its (weighted)
-/// gradient contribution, weighted loss and validation counts — the same
-/// op sequence whether it runs on the coordinator or a worker thread.
-fn loss_and_backward(
-    w: &mut Worker,
-    backend: &mut dyn Backend,
-    model: &GnnModel,
-    dims: &[LayerDims],
-    layers: usize,
-    kind: ModelKind,
-    gpu: &Gpu,
-    n_inner: usize,
-    weight: f32,
-) -> Result<(Grads, f32, f32, f32)> {
-    let n_pad = w.n_pad;
-    let lg = backend.ce_grad(n_pad, w.c_pad, &w.h[layers], &w.y, &w.train_mask)?;
-    let loss = lg.loss * weight;
-    // Validation accuracy from the same logits.
-    let mut val_correct = 0.0f32;
-    let mut val_total = 0.0f32;
-    let vm: f32 = w.val_mask.iter().sum();
-    if vm > 0.0 {
-        let vg = backend.ce_grad(n_pad, w.c_pad, &w.h[layers], &w.y, &w.val_mask)?;
-        val_correct = vg.correct;
-        val_total = vm;
-    }
-    // Backward chain. The backend writes each layer's weight gradients
-    // straight into the (zeroed) accumulator and the upstream dH into a
-    // swap buffer — overwrite semantics, so the merged numbers are the
-    // same the old accumulate-into-zero path produced.
-    let mut grads = model.zero_grads();
-    let mut dh = lg.dz;
-    // Scale to global normalization.
-    for v in dh.iter_mut() {
-        *v *= weight;
-    }
-    let mut dh_prev: Vec<f32> = Vec::new();
-    for l in (0..layers).rev() {
-        let ld = dims[l];
-        match kind {
-            ModelKind::Gcn => {
-                backend.gcn_bwd(
-                    n_pad,
-                    ld.d_in,
-                    ld.d_out,
-                    ld.relu,
-                    &w.adj,
-                    &w.h[l],
-                    &model.weights[l][0],
-                    &dh,
-                    &mut grads[l][0],
-                    &mut dh_prev,
-                )?;
-            }
-            ModelKind::Sage => {
-                let (g_self, g_neigh) = grads[l].split_at_mut(1);
-                backend.sage_bwd(
-                    n_pad,
-                    ld.d_in,
-                    ld.d_out,
-                    ld.relu,
-                    &w.adj,
-                    &w.h[l],
-                    &model.weights[l][0],
-                    &model.weights[l][1],
-                    &dh,
-                    &mut g_self[0],
-                    &mut g_neigh[0],
-                    &mut dh_prev,
-                )?;
-            }
-        }
-        std::mem::swap(&mut dh, &mut dh_prev);
-        // Drop cross-partition halo gradients (S4).
-        for r in n_inner..w.n_pad {
-            for c in 0..ld.d_in {
-                dh[r * ld.d_in + c] = 0.0;
-            }
-        }
-        charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, true, kind);
-    }
-    Ok((grads, loss, val_correct, val_total))
-}
-
-/// The sequential executor: one thread walks rounds and workers in index
-/// order, delivering staged rows and fresh owner rows in place.
-/// Cross-machine deliveries take the real serialization hop — encode to a
-/// frame, count its wire bytes, decode, fan out — so byte accounting and
-/// numerics match the threaded router path exactly.
-#[allow(clippy::too_many_arguments)]
-fn run_epoch_sequential(
-    workers: &mut [Worker],
-    backend: &mut dyn Backend,
-    parts: &[Subgraph],
-    gpus: &[Gpu],
-    model: &GnnModel,
-    dims: &[LayerDims],
-    meta: &[RoundMeta],
-    staged: &[Vec<Vec<(usize, Vec<f32>)>>],
-    sends: &[Vec<Vec<SendDirective>>],
-    cross: &[Vec<Vec<CrossSend>>],
-    kind: ModelKind,
-    layers: usize,
-    seed: u64,
-    epoch: u64,
-    bits: Option<u8>,
-    weights: &[f32],
-) -> Result<Vec<WorkerOut>> {
-    let p = workers.len();
-    let mut full_rows: Vec<Vec<u64>> = vec![vec![0u64; meta.len()]; p];
-    let mut cross_bytes = vec![0u64; p];
-    for l in 0..=layers {
-        if l < meta.len() {
-            let m = meta[l];
-            if m.skip {
-                for (wi, sg) in parts.iter().enumerate() {
-                    reuse_hist(&mut workers[wi], sg.n_inner, sg.n_halo(), l, m.dim);
-                }
-            } else {
-                for wi in 0..p {
-                    let n_inner = parts[wi].n_inner;
-                    for (hi, row) in &staged[wi][l] {
-                        place_row(&mut workers[wi], n_inner, l, m.dim, *hi, row);
-                    }
-                }
-                for ow in 0..p {
-                    for dct in &sends[ow][l] {
-                        let wire = fresh_row(
-                            &workers[ow],
-                            l,
-                            m.dim,
-                            dct.src_row,
-                            dct.vertex,
-                            bits,
-                            seed,
-                            epoch,
-                        );
-                        if !wire.quantized {
-                            full_rows[ow][l] += 1;
-                        }
-                        for &(rw, rhi) in &dct.recipients {
-                            place_row(
-                                &mut workers[rw],
-                                parts[rw].n_inner,
-                                l,
-                                m.dim,
-                                rhi,
-                                &wire.values,
-                            );
-                        }
-                    }
-                    for cs in &cross[ow][l] {
-                        let wire = fresh_row(
-                            &workers[ow],
-                            l,
-                            m.dim,
-                            cs.src_row,
-                            cs.vertex,
-                            bits,
-                            seed,
-                            epoch,
-                        );
-                        if !wire.quantized {
-                            full_rows[ow][l] += cs.charges as u64;
-                        }
-                        let frame = Frame::halo_row(l as u32, cs.vertex, wire.payload());
-                        cross_bytes[ow] += frame.wire_bytes();
-                        let row = Frame::decode(&frame.encode())
-                            .expect("halo frame roundtrip")
-                            .payload
-                            .values();
-                        for &(rw, rhi) in &cs.recipients {
-                            place_row(&mut workers[rw], parts[rw].n_inner, l, m.dim, rhi, &row);
-                        }
-                    }
-                }
-            }
-        }
-        if l == layers {
-            break;
-        }
-        for (wi, w) in workers.iter_mut().enumerate() {
-            compute_layer(w, backend, model, dims, l, kind, &gpus[wi], parts[wi].n_inner)?;
-        }
-    }
-    let mut outs = Vec::with_capacity(p);
-    for (wi, w) in workers.iter_mut().enumerate() {
-        let (grads, loss, val_correct, val_total) = loss_and_backward(
-            w,
-            backend,
-            model,
-            dims,
-            layers,
-            kind,
-            &gpus[wi],
-            parts[wi].n_inner,
-            weights[wi],
-        )?;
-        outs.push(WorkerOut {
-            grads,
-            loss,
-            val_correct,
-            val_total,
-            full_rows: std::mem::take(&mut full_rows[wi]),
-            cross_bytes: cross_bytes[wi],
-        });
-    }
-    Ok(outs)
-}
-
-/// Broadcasts [`POISON_ROUND`] to every peer unless disarmed — placed on
-/// the stack of each worker thread so an error *or a panic unwind*
-/// unblocks peers waiting in `recv` instead of letting them ride out the
-/// starvation timeout.
-struct PoisonOnDrop<'a> {
-    txs: &'a [mpsc::Sender<RowMsg>],
-    armed: bool,
-}
-
-impl Drop for PoisonOnDrop<'_> {
-    fn drop(&mut self) {
-        if self.armed {
-            for tx in self.txs {
-                let _ = tx.send(RowMsg { round: POISON_ROUND, hi: 0, row: Vec::new() });
-            }
-        }
-    }
-}
-
-/// The threaded executor: one OS thread per worker (as in PR 2) plus, on
-/// a multi-machine cluster, one *router* thread per machine. Owners push
-/// cross-machine rows as serialized frames into the destination machine's
-/// router channel; the router decodes each frame once and fans the row
-/// out to every co-located recipient from its plan-derived route table —
-/// the receive side of the §7 machine-granularity dedup.
-#[allow(clippy::too_many_arguments)]
-fn run_epoch_threaded(
-    workers: &mut [Worker],
-    backend: &mut dyn Backend,
-    worker_backends: &mut Vec<Box<dyn Backend + Send>>,
-    parts: &[Subgraph],
-    gpus: &[Gpu],
-    model: &GnnModel,
-    dims: &[LayerDims],
-    meta: &[RoundMeta],
-    staged_by_worker: Vec<Vec<Vec<(usize, Vec<f32>)>>>,
-    sends_by_worker: Vec<Vec<Vec<SendDirective>>>,
-    cross_by_worker: Vec<Vec<Vec<CrossSend>>>,
-    expect_by_worker: Vec<Vec<usize>>,
-    n_machines: usize,
-    kind: ModelKind,
-    layers: usize,
-    seed: u64,
-    epoch: u64,
-    bits: Option<u8>,
-    weights: &[f32],
-) -> Result<Vec<WorkerOut>> {
-    let p = workers.len();
-    if worker_backends.len() != p {
-        *worker_backends = backend.fork_workers(p).ok_or_else(|| {
-            anyhow!(
-                "backend '{}' cannot run ExecMode::Threaded (no per-worker fork); use ExecMode::Sequential",
-                backend.name()
-            )
-        })?;
-    }
-    let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| mpsc::channel::<RowMsg>()).unzip();
-    // Per-machine frame channels + receive-side route tables (only when
-    // the cluster actually spans machines).
-    let routed = n_machines > 1;
-    let (ftxs, frxs): (Vec<_>, Vec<_>) = if routed {
-        (0..n_machines).map(|_| mpsc::channel::<FrameMsg>()).unzip()
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    let mut routes: Vec<RouteTable> = (0..if routed { n_machines } else { 0 })
-        .map(|_| RouteTable::new())
-        .collect();
-    if routed {
-        for per_round in &cross_by_worker {
-            for (l, list) in per_round.iter().enumerate() {
-                for c in list {
-                    for &(rw, rhi) in &c.recipients {
-                        routes[c.dest_machine].add(l, c.vertex, (rw, rhi));
-                    }
-                }
-            }
-        }
-    }
-    let (results, router_results) = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(p);
-        let mut rx_iter = rxs.into_iter();
-        let mut staged_iter = staged_by_worker.into_iter();
-        let mut sends_iter = sends_by_worker.into_iter();
-        let mut cross_iter = cross_by_worker.into_iter();
-        let mut expect_iter = expect_by_worker.into_iter();
-        let mut wb_iter = worker_backends.iter_mut();
-        for (wi, w) in workers.iter_mut().enumerate() {
-            let task = WorkerTask {
-                sg: &parts[wi],
-                gpu: &gpus[wi],
-                model,
-                dims,
-                meta,
-                kind,
-                layers,
-                seed,
-                epoch,
-                bits,
-                weight: weights[wi],
-                staged: staged_iter.next().unwrap(),
-                sends: sends_iter.next().unwrap(),
-                cross: cross_iter.next().unwrap(),
-                expect: expect_iter.next().unwrap(),
-                txs: txs.clone(),
-                frame_txs: ftxs.clone(),
-                rx: rx_iter.next().unwrap(),
-            };
-            let wb = wb_iter.next().unwrap();
-            handles.push(scope.spawn(move || worker_epoch_threaded(task, w, &mut **wb)));
-        }
-        let mut router_handles = Vec::with_capacity(routes.len());
-        let mut frx_iter = frxs.into_iter();
-        for rt in routes.drain(..) {
-            let frx = frx_iter.next().unwrap();
-            let row_txs = txs.clone();
-            router_handles.push(scope.spawn(move || machine_router(frx, rt, &row_txs)));
-        }
-        drop(txs);
-        drop(ftxs);
-        // Workers first: once they are done (or dead), every frame sender
-        // is dropped and the routers drain out.
-        let results: Vec<Result<WorkerOut>> = handles
-            .into_iter()
-            .map(|h| h.join().expect("worker thread panicked"))
-            .collect();
-        let router_results: Vec<Result<()>> = router_handles
-            .into_iter()
-            .map(|h| h.join().expect("router thread panicked"))
-            .collect();
-        (results, router_results)
-    });
-    let mut outs = Vec::with_capacity(p);
-    for r in results {
-        outs.push(r?);
-    }
-    for r in router_results {
-        r?;
-    }
-    Ok(outs)
-}
-
-/// One machine's frame router: decode each inbound frame once, fan the
-/// row out to the local recipients the plan registered. Exits when every
-/// owner has dropped its frame sender; poisons local workers if routing
-/// fails so nobody deadlocks.
-fn machine_router(
-    rx: mpsc::Receiver<FrameMsg>,
-    mut routes: RouteTable,
-    row_txs: &[mpsc::Sender<RowMsg>],
-) -> Result<()> {
-    let mut guard = PoisonOnDrop { txs: row_txs, armed: true };
-    let res = (|| -> Result<()> {
-        while let Ok(msg) = rx.recv() {
-            let frame = Frame::decode(&msg.bytes)?;
-            let round = frame.layer as usize;
-            let row = frame.payload.values();
-            let recipients = routes.take(round, frame.id).ok_or_else(|| {
-                anyhow!("no route for round {round} vertex {} on this machine", frame.id)
-            })?;
-            for (w, hi) in recipients {
-                row_txs[w]
-                    .send(RowMsg { round, hi, row: row.clone() })
-                    .map_err(|_| anyhow!("worker {w} hung up (frame fan-out)"))?;
-            }
-        }
-        Ok(())
-    })();
-    if res.is_ok() {
-        guard.armed = false;
-    }
-    res
-}
-
-/// One threaded worker's epoch: send own rows as soon as each layer is
-/// computed, bank early arrivals, compute, then run loss/backward locally.
-/// On error or panic, poison every peer so no one deadlocks waiting for
-/// rows that will never come.
-fn worker_epoch_threaded(
-    task: WorkerTask<'_>,
-    w: &mut Worker,
-    backend: &mut dyn Backend,
-) -> Result<WorkerOut> {
-    let mut guard = PoisonOnDrop { txs: &task.txs, armed: true };
-    let out = worker_epoch_body(&task, w, backend);
-    if out.is_ok() {
-        guard.armed = false;
-    }
-    out
-}
-
-fn worker_epoch_body(
-    t: &WorkerTask<'_>,
-    w: &mut Worker,
-    backend: &mut dyn Backend,
-) -> Result<WorkerOut> {
-    let rounds = t.meta.len();
-    let n_inner = t.sg.n_inner;
-    let n_halo = t.sg.n_halo();
-    let mut inbox = HaloInbox::new(rounds);
-    let mut full_rows = vec![0u64; rounds];
-    let mut cross_bytes = 0u64;
-    for l in 0..=t.layers {
-        if l < rounds {
-            let m = t.meta[l];
-            if m.skip {
-                reuse_hist(w, n_inner, n_halo, l, m.dim);
-            } else {
-                // Publish this round's owned rows the moment they exist —
-                // receivers still busy with earlier layers bank them, so
-                // the halo exchange overlaps their compute.
-                for dct in &t.sends[l] {
-                    let wire = fresh_row(
-                        w, l, m.dim, dct.src_row, dct.vertex, t.bits, t.seed, t.epoch,
-                    );
-                    if !wire.quantized {
-                        full_rows[l] += 1;
-                    }
-                    for &(rw, rhi) in &dct.recipients {
-                        t.txs[rw]
-                            .send(RowMsg { round: l, hi: rhi, row: wire.values.clone() })
-                            .map_err(|_| anyhow!("worker {rw} hung up mid-epoch"))?;
-                    }
-                }
-                // Cross-machine rows leave as one serialized frame per
-                // destination machine; the router fans them out there.
-                for cs in &t.cross[l] {
-                    let wire = fresh_row(
-                        w, l, m.dim, cs.src_row, cs.vertex, t.bits, t.seed, t.epoch,
-                    );
-                    if !wire.quantized {
-                        full_rows[l] += cs.charges as u64;
-                    }
-                    let frame = Frame::halo_row(l as u32, cs.vertex, wire.payload());
-                    cross_bytes += frame.wire_bytes();
-                    t.frame_txs[cs.dest_machine]
-                        .send(FrameMsg { bytes: frame.encode() })
-                        .map_err(|_| {
-                            anyhow!("machine {} router hung up mid-epoch", cs.dest_machine)
-                        })?;
-                }
-                for (hi, row) in &t.staged[l] {
-                    place_row(w, n_inner, l, m.dim, *hi, row);
-                }
-                // Gather this round's fresh rows: banked first, then live.
-                // The timeout only fires if a peer died without poisoning
-                // (e.g. a panic) — far beyond any legitimate layer time.
-                let mut got = inbox.take(l);
-                while got.len() < t.expect[l] {
-                    let msg = t
-                        .rx
-                        .recv_timeout(Duration::from_secs(600))
-                        .map_err(|e| anyhow!("halo row starved at round {l}: {e:?}"))?;
-                    if msg.round == POISON_ROUND {
-                        return Err(anyhow!("peer worker failed; aborting epoch"));
-                    }
-                    if msg.round == l {
-                        got.push((msg.hi, msg.row));
-                    } else {
-                        inbox.stash(msg);
-                    }
-                }
-                for (hi, row) in &got {
-                    place_row(w, n_inner, l, m.dim, *hi, row);
-                }
-            }
-        }
-        if l == t.layers {
-            break;
-        }
-        compute_layer(w, backend, t.model, t.dims, l, t.kind, t.gpu, n_inner)?;
-    }
-    let (grads, loss, val_correct, val_total) = loss_and_backward(
-        w, backend, t.model, t.dims, t.layers, t.kind, t.gpu, n_inner, t.weight,
-    )?;
-    Ok(WorkerOut { grads, loss, val_correct, val_total, full_rows, cross_bytes })
 }
 
 /// Serialize gradient matrices into GradChunk frames and decode them
@@ -1745,19 +1039,6 @@ pub(crate) fn quantize(row: &[f32], bits: u8, rng: &mut Rng) -> (Vec<f32>, bool)
     (w.values, w.quantized)
 }
 
-/// Charge simulated compute time for one layer on one worker.
-fn charge_layer(
-    w: &mut Worker,
-    gpu: &Gpu,
-    n_inner: usize,
-    d_in: usize,
-    d_out: usize,
-    backward: bool,
-    model: ModelKind,
-) {
-    charge_compute(&mut w.stages, gpu, w.e_local, n_inner, d_in, d_out, backward, model);
-}
-
 /// Simulated compute charge of one layer over `n_rows` vertices and
 /// `e_local` adjacency arcs — the Table-1 capability model shared by the
 /// full-batch session and the sampled trainer (per-batch blocks charge
@@ -1795,6 +1076,7 @@ mod tests {
     use crate::device::profile::DeviceKind;
     use crate::graph::datasets::tiny;
     use crate::runtime::NativeBackend;
+    use crate::train::trainer::ExecMode;
 
     fn tiny_cfg(epochs: usize) -> TrainConfig {
         TrainConfig {

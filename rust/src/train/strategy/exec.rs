@@ -1,0 +1,916 @@
+//! The shared epoch-execution core both strategies drive: the central
+//! round planner (every cache decision in worker-index order) and the
+//! two executors (sequential reference walk, or one OS thread per worker
+//! with router threads for cross-machine frames).
+//!
+//! Strategies parameterize the core through [`ExecOpts`]: the halo
+//! strategy runs it as-is (fused SpMM, per-row frame accounting); the
+//! 1.5D strategy swaps in ascending column-block aggregation and
+//! whole-block broadcast accounting while keeping every delivered row
+//! value bit-identical.
+
+use crate::comm::exchange::{CrossSend, ExchangeParams, FillDirective, SendDirective};
+use crate::comm::queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};
+use crate::comm::transport::{Frame, Payload};
+use crate::device::profile::Gpu;
+use crate::device::simclock::StageTimes;
+use crate::graph::CsrMat;
+use crate::model::{GnnModel, Grads, LayerDims, ModelKind};
+use crate::partition::halo::Subgraph;
+use crate::runtime::Backend;
+use crate::train::session::{charge_compute, quantize_wire, Worker, WireRow};
+use crate::train::strategy::EpochCtx;
+use crate::train::trainer::ExecMode;
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Per-round execution metadata shared by both executors.
+#[derive(Clone, Copy)]
+pub(crate) struct RoundMeta {
+    /// Feature width of this round's rows.
+    pub(crate) dim: usize,
+    /// Skip-exchange round: reuse historical halo rows, nothing moves.
+    pub(crate) skip: bool,
+}
+
+/// What one worker's forward/backward pass produced. Reduced by the
+/// coordinator in worker-index order, so the merged numbers are identical
+/// however the workers were scheduled.
+pub(crate) struct WorkerOut {
+    pub(crate) grads: Grads,
+    /// Loss already scaled by the worker's train-mass weight.
+    pub(crate) loss: f32,
+    pub(crate) val_correct: f32,
+    pub(crate) val_total: f32,
+    /// Per-round count of owned rows that could not be quantized (the
+    /// coordinator charges them at full precision).
+    pub(crate) full_rows: Vec<u64>,
+    /// Wire bytes of the cross-machine frames this worker serialized
+    /// (measured from `Frame::wire_bytes`, not modeled).
+    pub(crate) cross_bytes: u64,
+}
+
+/// Everything one epoch's plan phase produced: per-round metadata, the
+/// per-worker delivery schedule, deferred cache fills, and the byte/time
+/// charges the session commits after the executors succeed.
+pub(crate) struct Planned {
+    pub(crate) meta: Vec<RoundMeta>,
+    pub(crate) staged: Vec<Vec<Vec<(usize, Vec<f32>)>>>,
+    pub(crate) sends: Vec<Vec<Vec<SendDirective>>>,
+    pub(crate) cross: Vec<Vec<Vec<CrossSend>>>,
+    pub(crate) expect: Vec<Vec<usize>>,
+    pub(crate) fills: Vec<(usize, FillDirective)>,
+    pub(crate) bytes_moved: u64,
+    pub(crate) bytes_saved: u64,
+    pub(crate) cross_naive: u64,
+    /// Simulated per-worker stage charges of the plan (check/pick, H2D,
+    /// and — when transfers are charged — the per-row transport time).
+    pub(crate) comm_stages: Vec<StageTimes>,
+}
+
+/// Plan every exchange round of one epoch centrally. Decisions depend
+/// only on cache metadata and keys, never on row contents, so all rounds
+/// can be planned before any layer computes — that is what frees the
+/// executors to move contents serially or concurrently without touching
+/// the cache. The cost is a per-epoch snapshot of the cache-hit rows
+/// (staged clones for every round at once); at this crate's scales that
+/// peak is small, and both executors sharing one delivery structure is
+/// what keeps them bit-identical.
+///
+/// `charge_transfers = false` (the 1.5D strategy) keeps the full plan
+/// structure and the cache bookkeeping charges but skips the per-row
+/// transport bytes/time — the strategy charges whole-block broadcasts
+/// instead.
+pub(crate) fn plan_rounds(ctx: &mut EpochCtx<'_, '_>, charge_transfers: bool) -> Planned {
+    let cfg = ctx.cfg;
+    let p = ctx.workers.len();
+    let mut meta: Vec<RoundMeta> = Vec::with_capacity(cfg.layers);
+    let mut staged: Vec<Vec<Vec<(usize, Vec<f32>)>>> =
+        (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+    let mut sends: Vec<Vec<Vec<SendDirective>>> =
+        (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+    let mut cross: Vec<Vec<Vec<CrossSend>>> =
+        (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+    let mut expect: Vec<Vec<usize>> = (0..p).map(|_| Vec::with_capacity(cfg.layers)).collect();
+    let mut fills: Vec<(usize, FillDirective)> = Vec::new();
+    let mut bytes_moved = 0u64;
+    let mut bytes_saved = 0u64;
+    let mut cross_naive = 0u64;
+    let mut comm_stages = vec![StageTimes::default(); p];
+    for l in 0..cfg.layers {
+        let d = if l == 0 { ctx.f_dim } else { ctx.dims[l - 1].d_out };
+        let is_static = l == 0; // input features never go stale
+        let skip = cfg.skip_exchange && ctx.epoch > 0 && !ctx.refresh_epoch && !is_static;
+        if skip {
+            // Reuse historical halo rows (charged only bookkeeping).
+            meta.push(RoundMeta { dim: d, skip: true });
+            for w in 0..p {
+                staged[w].push(Vec::new());
+                sends[w].push(Vec::new());
+                cross[w].push(Vec::new());
+                expect[w].push(0);
+            }
+            continue;
+        }
+        let mut params = ExchangeParams::new(l as u32, ctx.epoch, d);
+        params.use_cache = cfg.use_cache;
+        params.refresh = ctx.refresh_epoch && !is_static;
+        params.comm_multiplier = cfg.comm_multiplier;
+        params.charge_transfers = charge_transfers;
+        if let Some(b) = cfg.quantized_row_bytes {
+            params.bytes_per_row = b;
+        }
+        let mut rp = ctx.engine.plan_round(ctx.plan, ctx.cache, params);
+        for (cs, st) in comm_stages.iter_mut().zip(&rp.stages) {
+            cs.add(st);
+        }
+        // Byte charges are committed only after the executors succeed: an
+        // aborted epoch moves nothing, so committing planned traffic here
+        // would permanently overstate the report.
+        bytes_moved += rp.bytes_moved;
+        bytes_saved += rp.bytes_saved;
+        cross_naive += rp.cross_bytes_naive;
+        fills.extend(rp.fills.drain(..).map(|f| (l, f)));
+        for w in 0..p {
+            staged[w].push(std::mem::take(&mut rp.staged[w]));
+            sends[w].push(std::mem::take(&mut rp.sends[w]));
+            cross[w].push(std::mem::take(&mut rp.cross[w]));
+            expect[w].push(rp.expect[w]);
+        }
+        meta.push(RoundMeta { dim: d, skip: false });
+    }
+    Planned {
+        meta,
+        staged,
+        sends,
+        cross,
+        expect,
+        fills,
+        bytes_moved,
+        bytes_saved,
+        cross_naive,
+        comm_stages,
+    }
+}
+
+/// How a strategy parameterizes the shared executors.
+pub(crate) struct ExecOpts<'b> {
+    /// Per-worker ascending column blocks of the local operator: `Some`
+    /// aggregates through `Backend::spmm_block` + the combine tails
+    /// (1.5D); `None` runs the fused per-layer kernels (halo).
+    pub(crate) blocks: Option<&'b [Vec<CsrMat>]>,
+    /// Measure per-row cross-machine frames into
+    /// [`WorkerOut::cross_bytes`] (halo accounting). The 1.5D strategy
+    /// sets this false and accounts whole-block frames via `bcast`.
+    pub(crate) row_frames: bool,
+    /// Per worker × round: cross-machine block-broadcast slot count.
+    /// Each slot ships the owner's whole inner block as one frame,
+    /// measured sender-side. Empty = no broadcasts (halo).
+    pub(crate) bcast: Vec<Vec<usize>>,
+}
+
+impl ExecOpts<'_> {
+    /// The halo strategy's options: fused kernels, per-row frames.
+    pub(crate) fn halo() -> ExecOpts<'static> {
+        ExecOpts { blocks: None, row_frames: true, bcast: Vec::new() }
+    }
+}
+
+/// Run the planned epoch under the session's [`ExecMode`]. Both executors
+/// run the same plan and the same per-worker op sequence, so their
+/// numerics (and byte/time accounting) are bit-identical.
+pub(crate) fn execute(
+    ctx: &mut EpochCtx<'_, '_>,
+    planned: Planned,
+    opts: &ExecOpts<'_>,
+) -> Result<Vec<WorkerOut>> {
+    match ctx.cfg.exec {
+        ExecMode::Sequential => run_epoch_sequential(ctx, &planned, opts),
+        ExecMode::Threaded => run_epoch_threaded(ctx, planned, opts),
+    }
+}
+
+/// Everything one threaded worker needs for an epoch: shared structure by
+/// reference (immutable while the scope runs), its own schedule and
+/// channel endpoints by value.
+struct WorkerTask<'a> {
+    wi: usize,
+    sg: &'a Subgraph,
+    gpu: &'a Gpu,
+    model: &'a GnnModel,
+    dims: &'a [LayerDims],
+    meta: &'a [RoundMeta],
+    kind: ModelKind,
+    layers: usize,
+    seed: u64,
+    epoch: u64,
+    bits: Option<u8>,
+    weight: f32,
+    /// This worker's column blocks (1.5D) or `None` (fused halo path).
+    blocks: Option<&'a [CsrMat]>,
+    /// Measure per-row cross-machine frames (halo accounting).
+    row_frames: bool,
+    /// Cross-machine block-broadcast slots per round (1.5D accounting).
+    bcast: Vec<usize>,
+    /// Cached rows per round: (halo idx, row), cloned at plan time.
+    staged: Vec<Vec<(usize, Vec<f32>)>>,
+    /// Rows this worker owns and must deliver intra-machine, per round.
+    sends: Vec<Vec<SendDirective>>,
+    /// Deduplicated cross-machine deliveries this worker owns, per round
+    /// (serialized frames to each destination machine's router).
+    cross: Vec<Vec<CrossSend>>,
+    /// Fresh rows this worker receives, per round.
+    expect: Vec<usize>,
+    txs: Vec<mpsc::Sender<RowMsg>>,
+    /// Frame channel of each machine's router (empty on one machine).
+    frame_txs: Vec<mpsc::Sender<FrameMsg>>,
+    rx: mpsc::Receiver<RowMsg>,
+}
+
+/// Sentinel round tag a failing worker broadcasts so peers blocked on
+/// `recv` fail fast instead of deadlocking on rows that will never come.
+const POISON_ROUND: usize = usize::MAX;
+
+/// Write one halo row into `h[l]` (and the history buffer for l>0).
+fn place_row(w: &mut Worker, n_inner: usize, l: usize, d: usize, hi: usize, row: &[f32]) {
+    let dst = (n_inner + hi) * d;
+    w.h[l][dst..dst + d].copy_from_slice(row);
+    if l > 0 {
+        w.halo_hist[l - 1][hi * d..hi * d + d].copy_from_slice(row);
+    }
+}
+
+/// Skip-exchange round: reuse historical halo rows.
+fn reuse_hist(w: &mut Worker, n_inner: usize, n_halo: usize, l: usize, d: usize) {
+    for hi in 0..n_halo {
+        let dst = (n_inner + hi) * d;
+        let src = hi * d;
+        let hist = &w.halo_hist[l.max(1) - 1];
+        let row = &hist[src..src + d];
+        w.h[l][dst..dst + d].copy_from_slice(row);
+    }
+}
+
+/// Deterministic per-row quantization stream, keyed by (seed, epoch,
+/// layer, vertex): the noise a row receives depends neither on which
+/// worker fetched it first nor on thread interleaving — the keystone of
+/// the sequential/threaded bit-identity guarantee under AdaQP.
+fn row_rng(seed: u64, epoch: u64, layer: usize, vertex: u32) -> Rng {
+    let tag = ((layer as u64) << 32) | vertex as u64;
+    Rng::new(
+        seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ tag.wrapping_mul(0xA24B_AED4_963E_E407),
+    )
+}
+
+/// Read (and optionally quantize) the authoritative wire row of `vertex`
+/// from its owner's representation `l`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fresh_row(
+    owner: &Worker,
+    l: usize,
+    d: usize,
+    src_row: usize,
+    vertex: u32,
+    bits: Option<u8>,
+    seed: u64,
+    epoch: u64,
+) -> WireRow {
+    let src = src_row * d;
+    let row = &owner.h[l][src..src + d];
+    match bits {
+        Some(b) => {
+            let mut rng = row_rng(seed, epoch, l, vertex);
+            quantize_wire(row, b, &mut rng)
+        }
+        None => WireRow { values: row.to_vec(), quantized: true, q8: None },
+    }
+}
+
+/// Forward one layer on one worker and charge its simulated compute time.
+/// The backend writes `h[l+1]` in place — no per-layer allocation. With
+/// `blocks`, aggregation runs as ascending column-block partial products
+/// (`agg` is the reusable Â·H scratch) followed by the combine tail —
+/// bit-identical to the fused kernel because contiguous ascending column
+/// ranges reproduce the CSR walk's per-element accumulation order.
+#[allow(clippy::too_many_arguments)]
+fn compute_layer(
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+    model: &GnnModel,
+    dims: &[LayerDims],
+    l: usize,
+    kind: ModelKind,
+    gpu: &Gpu,
+    n_inner: usize,
+    blocks: Option<&[CsrMat]>,
+    agg: &mut Vec<f32>,
+) -> Result<()> {
+    let ld = dims[l];
+    let n_pad = w.n_pad;
+    {
+        let (head, tail) = w.h.split_at_mut(l + 1);
+        let h_in = &head[l];
+        let h_out = &mut tail[0];
+        match blocks {
+            None => match kind {
+                ModelKind::Gcn => backend.gcn_fwd(
+                    n_pad,
+                    ld.d_in,
+                    ld.d_out,
+                    ld.relu,
+                    &w.adj,
+                    h_in,
+                    &model.weights[l][0],
+                    h_out,
+                )?,
+                ModelKind::Sage => backend.sage_fwd(
+                    n_pad,
+                    ld.d_in,
+                    ld.d_out,
+                    ld.relu,
+                    &w.adj,
+                    h_in,
+                    &model.weights[l][0],
+                    &model.weights[l][1],
+                    h_out,
+                )?,
+            },
+            Some(bl) => {
+                for (bi, blk) in bl.iter().enumerate() {
+                    backend.spmm_block(n_pad, ld.d_in, blk, h_in, agg, bi == 0)?;
+                }
+                match kind {
+                    ModelKind::Gcn => backend.gcn_combine(
+                        n_pad,
+                        ld.d_in,
+                        ld.d_out,
+                        ld.relu,
+                        agg.as_slice(),
+                        &model.weights[l][0],
+                        h_out,
+                    )?,
+                    ModelKind::Sage => backend.sage_combine(
+                        n_pad,
+                        ld.d_in,
+                        ld.d_out,
+                        ld.relu,
+                        agg.as_slice(),
+                        h_in,
+                        &model.weights[l][0],
+                        &model.weights[l][1],
+                        h_out,
+                    )?,
+                }
+            }
+        }
+    }
+    charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, false, kind);
+    Ok(())
+}
+
+/// Loss + full backward chain for one worker. Returns its (weighted)
+/// gradient contribution, weighted loss and validation counts — the same
+/// op sequence whether it runs on the coordinator or a worker thread.
+#[allow(clippy::too_many_arguments)]
+fn loss_and_backward(
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+    model: &GnnModel,
+    dims: &[LayerDims],
+    layers: usize,
+    kind: ModelKind,
+    gpu: &Gpu,
+    n_inner: usize,
+    weight: f32,
+) -> Result<(Grads, f32, f32, f32)> {
+    let n_pad = w.n_pad;
+    let lg = backend.ce_grad(n_pad, w.c_pad, &w.h[layers], &w.y, &w.train_mask)?;
+    let loss = lg.loss * weight;
+    // Validation accuracy from the same logits.
+    let mut val_correct = 0.0f32;
+    let mut val_total = 0.0f32;
+    let vm: f32 = w.val_mask.iter().sum();
+    if vm > 0.0 {
+        let vg = backend.ce_grad(n_pad, w.c_pad, &w.h[layers], &w.y, &w.val_mask)?;
+        val_correct = vg.correct;
+        val_total = vm;
+    }
+    // Backward chain. The backend writes each layer's weight gradients
+    // straight into the (zeroed) accumulator and the upstream dH into a
+    // swap buffer — overwrite semantics, so the merged numbers are the
+    // same the old accumulate-into-zero path produced.
+    let mut grads = model.zero_grads();
+    let mut dh = lg.dz;
+    // Scale to global normalization.
+    for v in dh.iter_mut() {
+        *v *= weight;
+    }
+    let mut dh_prev: Vec<f32> = Vec::new();
+    for l in (0..layers).rev() {
+        let ld = dims[l];
+        match kind {
+            ModelKind::Gcn => {
+                backend.gcn_bwd(
+                    n_pad,
+                    ld.d_in,
+                    ld.d_out,
+                    ld.relu,
+                    &w.adj,
+                    &w.h[l],
+                    &model.weights[l][0],
+                    &dh,
+                    &mut grads[l][0],
+                    &mut dh_prev,
+                )?;
+            }
+            ModelKind::Sage => {
+                let (g_self, g_neigh) = grads[l].split_at_mut(1);
+                backend.sage_bwd(
+                    n_pad,
+                    ld.d_in,
+                    ld.d_out,
+                    ld.relu,
+                    &w.adj,
+                    &w.h[l],
+                    &model.weights[l][0],
+                    &model.weights[l][1],
+                    &dh,
+                    &mut g_self[0],
+                    &mut g_neigh[0],
+                    &mut dh_prev,
+                )?;
+            }
+        }
+        std::mem::swap(&mut dh, &mut dh_prev);
+        // Drop cross-partition halo gradients (S4).
+        for r in n_inner..w.n_pad {
+            for c in 0..ld.d_in {
+                dh[r * ld.d_in + c] = 0.0;
+            }
+        }
+        charge_layer(w, gpu, n_inner, ld.d_in, ld.d_out, true, kind);
+    }
+    Ok((grads, loss, val_correct, val_total))
+}
+
+/// Charge simulated compute time for one layer on one worker.
+fn charge_layer(
+    w: &mut Worker,
+    gpu: &Gpu,
+    n_inner: usize,
+    d_in: usize,
+    d_out: usize,
+    backward: bool,
+    model: ModelKind,
+) {
+    charge_compute(&mut w.stages, gpu, w.e_local, n_inner, d_in, d_out, backward, model);
+}
+
+/// The sequential executor: one thread walks rounds and workers in index
+/// order, delivering staged rows and fresh owner rows in place.
+/// Cross-machine deliveries take the real serialization hop — encode to a
+/// frame, count its wire bytes, decode, fan out — so byte accounting and
+/// numerics match the threaded router path exactly.
+fn run_epoch_sequential(
+    ctx: &mut EpochCtx<'_, '_>,
+    pl: &Planned,
+    opts: &ExecOpts<'_>,
+) -> Result<Vec<WorkerOut>> {
+    let workers = &mut *ctx.workers;
+    let backend = &mut *ctx.backend;
+    let parts = &ctx.plan.parts;
+    let gpus = ctx.engine.gpus;
+    let model = ctx.model;
+    let dims = ctx.dims;
+    let kind = ctx.cfg.model;
+    let layers = ctx.cfg.layers;
+    let seed = ctx.cfg.seed;
+    let epoch = ctx.epoch;
+    let bits = ctx.cfg.quantize_bits;
+    let weights = ctx.weights;
+    let meta = &pl.meta;
+    let p = workers.len();
+    let mut full_rows: Vec<Vec<u64>> = vec![vec![0u64; meta.len()]; p];
+    let mut cross_bytes = vec![0u64; p];
+    let mut agg: Vec<f32> = Vec::new();
+    for l in 0..=layers {
+        if l < meta.len() {
+            let m = meta[l];
+            if m.skip {
+                for (wi, sg) in parts.iter().enumerate() {
+                    reuse_hist(&mut workers[wi], sg.n_inner, sg.n_halo(), l, m.dim);
+                }
+            } else {
+                for wi in 0..p {
+                    let n_inner = parts[wi].n_inner;
+                    for (hi, row) in &pl.staged[wi][l] {
+                        place_row(&mut workers[wi], n_inner, l, m.dim, *hi, row);
+                    }
+                }
+                for ow in 0..p {
+                    for dct in &pl.sends[ow][l] {
+                        let wire = fresh_row(
+                            &workers[ow],
+                            l,
+                            m.dim,
+                            dct.src_row,
+                            dct.vertex,
+                            bits,
+                            seed,
+                            epoch,
+                        );
+                        if !wire.quantized {
+                            full_rows[ow][l] += 1;
+                        }
+                        for &(rw, rhi) in &dct.recipients {
+                            place_row(
+                                &mut workers[rw],
+                                parts[rw].n_inner,
+                                l,
+                                m.dim,
+                                rhi,
+                                &wire.values,
+                            );
+                        }
+                    }
+                    for cs in &pl.cross[ow][l] {
+                        let wire = fresh_row(
+                            &workers[ow],
+                            l,
+                            m.dim,
+                            cs.src_row,
+                            cs.vertex,
+                            bits,
+                            seed,
+                            epoch,
+                        );
+                        if !wire.quantized {
+                            full_rows[ow][l] += cs.charges as u64;
+                        }
+                        let frame = Frame::halo_row(l as u32, cs.vertex, wire.payload());
+                        if opts.row_frames {
+                            cross_bytes[ow] += frame.wire_bytes();
+                        }
+                        let row = Frame::decode(&frame.encode())
+                            .expect("halo frame roundtrip")
+                            .payload
+                            .values();
+                        for &(rw, rhi) in &cs.recipients {
+                            place_row(&mut workers[rw], parts[rw].n_inner, l, m.dim, rhi, &row);
+                        }
+                    }
+                    let slots = opts.bcast.get(ow).and_then(|r| r.get(l)).copied().unwrap_or(0);
+                    if slots > 0 {
+                        // 1.5D: the owner's whole inner block crosses the
+                        // wire once per remote slot, as a real frame.
+                        let n_inner = parts[ow].n_inner;
+                        let block = workers[ow].h[l][..n_inner * m.dim].to_vec();
+                        let frame = Frame::halo_row(l as u32, ow as u32, Payload::F32(block));
+                        cross_bytes[ow] += slots as u64 * frame.wire_bytes();
+                    }
+                }
+            }
+        }
+        if l == layers {
+            break;
+        }
+        for (wi, w) in workers.iter_mut().enumerate() {
+            let blocks = opts.blocks.map(|b| b[wi].as_slice());
+            compute_layer(
+                w,
+                backend,
+                model,
+                dims,
+                l,
+                kind,
+                &gpus[wi],
+                parts[wi].n_inner,
+                blocks,
+                &mut agg,
+            )?;
+        }
+    }
+    let mut outs = Vec::with_capacity(p);
+    for (wi, w) in workers.iter_mut().enumerate() {
+        let (grads, loss, val_correct, val_total) = loss_and_backward(
+            w,
+            backend,
+            model,
+            dims,
+            layers,
+            kind,
+            &gpus[wi],
+            parts[wi].n_inner,
+            weights[wi],
+        )?;
+        outs.push(WorkerOut {
+            grads,
+            loss,
+            val_correct,
+            val_total,
+            full_rows: std::mem::take(&mut full_rows[wi]),
+            cross_bytes: cross_bytes[wi],
+        });
+    }
+    Ok(outs)
+}
+
+/// Broadcasts [`POISON_ROUND`] to every peer unless disarmed — placed on
+/// the stack of each worker thread so an error *or a panic unwind*
+/// unblocks peers waiting in `recv` instead of letting them ride out the
+/// starvation timeout.
+struct PoisonOnDrop<'a> {
+    txs: &'a [mpsc::Sender<RowMsg>],
+    armed: bool,
+}
+
+impl Drop for PoisonOnDrop<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            for tx in self.txs {
+                let _ = tx.send(RowMsg { round: POISON_ROUND, hi: 0, row: Vec::new() });
+            }
+        }
+    }
+}
+
+/// The threaded executor: one OS thread per worker (as in PR 2) plus, on
+/// a multi-machine cluster, one *router* thread per machine. Owners push
+/// cross-machine rows as serialized frames into the destination machine's
+/// router channel; the router decodes each frame once and fans the row
+/// out to every co-located recipient from its plan-derived route table —
+/// the receive side of the §7 machine-granularity dedup.
+fn run_epoch_threaded(
+    ctx: &mut EpochCtx<'_, '_>,
+    pl: Planned,
+    opts: &ExecOpts<'_>,
+) -> Result<Vec<WorkerOut>> {
+    let p = ctx.workers.len();
+    {
+        let backend = &mut *ctx.backend;
+        if ctx.worker_backends.len() != p {
+            *ctx.worker_backends = backend.fork_workers(p).ok_or_else(|| {
+                anyhow!(
+                    "backend '{}' cannot run ExecMode::Threaded (no per-worker fork); use ExecMode::Sequential",
+                    backend.name()
+                )
+            })?;
+        }
+    }
+    let Planned { meta, staged, sends, cross, expect, .. } = pl;
+    let workers = &mut *ctx.workers;
+    let worker_backends = &mut *ctx.worker_backends;
+    let parts = &ctx.plan.parts;
+    let gpus = ctx.engine.gpus;
+    let model = ctx.model;
+    let dims = ctx.dims;
+    let kind = ctx.cfg.model;
+    let layers = ctx.cfg.layers;
+    let seed = ctx.cfg.seed;
+    let epoch = ctx.epoch;
+    let bits = ctx.cfg.quantize_bits;
+    let weights = ctx.weights;
+    let n_machines = ctx.n_machines;
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| mpsc::channel::<RowMsg>()).unzip();
+    // Per-machine frame channels + receive-side route tables (only when
+    // the cluster actually spans machines).
+    let routed = n_machines > 1;
+    let (ftxs, frxs): (Vec<_>, Vec<_>) = if routed {
+        (0..n_machines).map(|_| mpsc::channel::<FrameMsg>()).unzip()
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut routes: Vec<RouteTable> = (0..if routed { n_machines } else { 0 })
+        .map(|_| RouteTable::new())
+        .collect();
+    if routed {
+        for per_round in &cross {
+            for (l, list) in per_round.iter().enumerate() {
+                for c in list {
+                    for &(rw, rhi) in &c.recipients {
+                        routes[c.dest_machine].add(l, c.vertex, (rw, rhi));
+                    }
+                }
+            }
+        }
+    }
+    let meta_ref: &[RoundMeta] = &meta;
+    let (results, router_results) = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        let mut rx_iter = rxs.into_iter();
+        let mut staged_iter = staged.into_iter();
+        let mut sends_iter = sends.into_iter();
+        let mut cross_iter = cross.into_iter();
+        let mut expect_iter = expect.into_iter();
+        let mut wb_iter = worker_backends.iter_mut();
+        for (wi, w) in workers.iter_mut().enumerate() {
+            let task = WorkerTask {
+                wi,
+                sg: &parts[wi],
+                gpu: &gpus[wi],
+                model,
+                dims,
+                meta: meta_ref,
+                kind,
+                layers,
+                seed,
+                epoch,
+                bits,
+                weight: weights[wi],
+                blocks: opts.blocks.map(|b| b[wi].as_slice()),
+                row_frames: opts.row_frames,
+                bcast: opts.bcast.get(wi).cloned().unwrap_or_default(),
+                staged: staged_iter.next().unwrap(),
+                sends: sends_iter.next().unwrap(),
+                cross: cross_iter.next().unwrap(),
+                expect: expect_iter.next().unwrap(),
+                txs: txs.clone(),
+                frame_txs: ftxs.clone(),
+                rx: rx_iter.next().unwrap(),
+            };
+            let wb = wb_iter.next().unwrap();
+            handles.push(scope.spawn(move || worker_epoch_threaded(task, w, &mut **wb)));
+        }
+        let mut router_handles = Vec::with_capacity(routes.len());
+        let mut frx_iter = frxs.into_iter();
+        for rt in routes.drain(..) {
+            let frx = frx_iter.next().unwrap();
+            let row_txs = txs.clone();
+            router_handles.push(scope.spawn(move || machine_router(frx, rt, &row_txs)));
+        }
+        drop(txs);
+        drop(ftxs);
+        // Workers first: once they are done (or dead), every frame sender
+        // is dropped and the routers drain out.
+        let results: Vec<Result<WorkerOut>> = handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect();
+        let router_results: Vec<Result<()>> = router_handles
+            .into_iter()
+            .map(|h| h.join().expect("router thread panicked"))
+            .collect();
+        (results, router_results)
+    });
+    let mut outs = Vec::with_capacity(p);
+    for r in results {
+        outs.push(r?);
+    }
+    for r in router_results {
+        r?;
+    }
+    Ok(outs)
+}
+
+/// One machine's frame router: decode each inbound frame once, fan the
+/// row out to the local recipients the plan registered. Exits when every
+/// owner has dropped its frame sender; poisons local workers if routing
+/// fails so nobody deadlocks.
+fn machine_router(
+    rx: mpsc::Receiver<FrameMsg>,
+    mut routes: RouteTable,
+    row_txs: &[mpsc::Sender<RowMsg>],
+) -> Result<()> {
+    let mut guard = PoisonOnDrop { txs: row_txs, armed: true };
+    let res = (|| -> Result<()> {
+        while let Ok(msg) = rx.recv() {
+            let frame = Frame::decode(&msg.bytes)?;
+            let round = frame.layer as usize;
+            let row = frame.payload.values();
+            let recipients = routes.take(round, frame.id).ok_or_else(|| {
+                anyhow!("no route for round {round} vertex {} on this machine", frame.id)
+            })?;
+            for (w, hi) in recipients {
+                row_txs[w]
+                    .send(RowMsg { round, hi, row: row.clone() })
+                    .map_err(|_| anyhow!("worker {w} hung up (frame fan-out)"))?;
+            }
+        }
+        Ok(())
+    })();
+    if res.is_ok() {
+        guard.armed = false;
+    }
+    res
+}
+
+/// One threaded worker's epoch: send own rows as soon as each layer is
+/// computed, bank early arrivals, compute, then run loss/backward locally.
+/// On error or panic, poison every peer so no one deadlocks waiting for
+/// rows that will never come.
+fn worker_epoch_threaded(
+    task: WorkerTask<'_>,
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+) -> Result<WorkerOut> {
+    let mut guard = PoisonOnDrop { txs: &task.txs, armed: true };
+    let out = worker_epoch_body(&task, w, backend);
+    if out.is_ok() {
+        guard.armed = false;
+    }
+    out
+}
+
+fn worker_epoch_body(
+    t: &WorkerTask<'_>,
+    w: &mut Worker,
+    backend: &mut dyn Backend,
+) -> Result<WorkerOut> {
+    let rounds = t.meta.len();
+    let n_inner = t.sg.n_inner;
+    let n_halo = t.sg.n_halo();
+    let mut inbox = HaloInbox::new(rounds);
+    let mut full_rows = vec![0u64; rounds];
+    let mut cross_bytes = 0u64;
+    let mut agg: Vec<f32> = Vec::new();
+    for l in 0..=t.layers {
+        if l < rounds {
+            let m = t.meta[l];
+            if m.skip {
+                reuse_hist(w, n_inner, n_halo, l, m.dim);
+            } else {
+                // Publish this round's owned rows the moment they exist —
+                // receivers still busy with earlier layers bank them, so
+                // the halo exchange overlaps their compute.
+                for dct in &t.sends[l] {
+                    let wire = fresh_row(
+                        w, l, m.dim, dct.src_row, dct.vertex, t.bits, t.seed, t.epoch,
+                    );
+                    if !wire.quantized {
+                        full_rows[l] += 1;
+                    }
+                    for &(rw, rhi) in &dct.recipients {
+                        t.txs[rw]
+                            .send(RowMsg { round: l, hi: rhi, row: wire.values.clone() })
+                            .map_err(|_| anyhow!("worker {rw} hung up mid-epoch"))?;
+                    }
+                }
+                // Cross-machine rows leave as one serialized frame per
+                // destination machine; the router fans them out there.
+                for cs in &t.cross[l] {
+                    let wire = fresh_row(
+                        w, l, m.dim, cs.src_row, cs.vertex, t.bits, t.seed, t.epoch,
+                    );
+                    if !wire.quantized {
+                        full_rows[l] += cs.charges as u64;
+                    }
+                    let frame = Frame::halo_row(l as u32, cs.vertex, wire.payload());
+                    if t.row_frames {
+                        cross_bytes += frame.wire_bytes();
+                    }
+                    t.frame_txs[cs.dest_machine]
+                        .send(FrameMsg { bytes: frame.encode() })
+                        .map_err(|_| {
+                            anyhow!("machine {} router hung up mid-epoch", cs.dest_machine)
+                        })?;
+                }
+                let slots = t.bcast.get(l).copied().unwrap_or(0);
+                if slots > 0 {
+                    // 1.5D: the whole inner block crosses the wire once
+                    // per remote slot — same frame the sequential
+                    // executor measures, so the sums agree bit-for-bit.
+                    let block = w.h[l][..n_inner * m.dim].to_vec();
+                    let frame = Frame::halo_row(l as u32, t.wi as u32, Payload::F32(block));
+                    cross_bytes += slots as u64 * frame.wire_bytes();
+                }
+                for (hi, row) in &t.staged[l] {
+                    place_row(w, n_inner, l, m.dim, *hi, row);
+                }
+                // Gather this round's fresh rows: banked first, then live.
+                // The timeout only fires if a peer died without poisoning
+                // (e.g. a panic) — far beyond any legitimate layer time.
+                let mut got = inbox.take(l);
+                while got.len() < t.expect[l] {
+                    let msg = t
+                        .rx
+                        .recv_timeout(Duration::from_secs(600))
+                        .map_err(|e| anyhow!("halo row starved at round {l}: {e:?}"))?;
+                    if msg.round == POISON_ROUND {
+                        return Err(anyhow!("peer worker failed; aborting epoch"));
+                    }
+                    if msg.round == l {
+                        got.push((msg.hi, msg.row));
+                    } else {
+                        inbox.stash(msg);
+                    }
+                }
+                for (hi, row) in &got {
+                    place_row(w, n_inner, l, m.dim, *hi, row);
+                }
+            }
+        }
+        if l == t.layers {
+            break;
+        }
+        compute_layer(
+            w, backend, t.model, t.dims, l, t.kind, t.gpu, n_inner, t.blocks, &mut agg,
+        )?;
+    }
+    let (grads, loss, val_correct, val_total) = loss_and_backward(
+        w, backend, t.model, t.dims, t.layers, t.kind, t.gpu, n_inner, t.weight,
+    )?;
+    Ok(WorkerOut { grads, loss, val_correct, val_total, full_rows, cross_bytes })
+}

@@ -1,0 +1,156 @@
+//! Pluggable epoch-execution strategies (ROADMAP item 4).
+//!
+//! A [`CommStrategy`] owns one full-batch epoch's forward/backward
+//! aggregation — everything between "per-worker state is ready" and
+//! "per-worker outputs are ready to reduce": planning the exchange
+//! rounds, moving halo content (serially or on threads), and running the
+//! per-worker compute. The [`crate::train::Session`] stays the single
+//! owner of partitioning, cache construction, and the reduce phase
+//! (loss/gradient merge, SGD, deferred cache fills), so every strategy
+//! shares those bit-for-bit.
+//!
+//! Two strategies exist today:
+//!
+//! - [`HaloStrategy`] — the paper's vertex-partitioned halo exchange:
+//!   per-(worker, vertex) cache decisions, owner→requester row
+//!   deliveries, §7 machine-granularity dedup. Communication scales with
+//!   the *edge cut*.
+//! - [`OneHalfDStrategy`] — a CAGNET-style 1.5D block algorithm
+//!   (Tripathy et al.): each owner broadcasts its whole inner block of H
+//!   once per replication group per machine, and workers compute Â·H
+//!   from ascending column blocks. Communication scales with the
+//!   *replication factor*, independent of the edge cut.
+//!
+//! Both run the same exchange plan and deliver bit-identical row values,
+//! so losses/accuracies agree bitwise across strategies, worker counts,
+//! and [`crate::train::ExecMode`]s — only the time/byte accounting
+//! differs. The determinism argument and the per-strategy bytes
+//! semantics are documented in ARCHITECTURE.md ("Execution strategies").
+
+pub(crate) mod exec;
+mod halo;
+mod one_half_d;
+
+pub use halo::HaloStrategy;
+pub use one_half_d::OneHalfDStrategy;
+
+use crate::cache::TwoLevelCache;
+use crate::comm::exchange::{ExchangeEngine, FillDirective};
+use crate::model::{GnnModel, LayerDims};
+use crate::partition::halo::SubgraphPlan;
+use crate::runtime::Backend;
+use crate::train::session::Worker;
+use crate::train::trainer::TrainConfig;
+use anyhow::Result;
+use exec::{RoundMeta, WorkerOut};
+
+/// Which epoch-execution strategy a run uses (`--strategy halo|1.5d`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Vertex-partitioned halo exchange with JACA caching (the paper's
+    /// path and the reference numerics).
+    #[default]
+    Halo,
+    /// CAGNET-style 1.5D block SpMM: whole-block broadcasts per
+    /// replication group, ascending column-block aggregation.
+    OneHalfD,
+}
+
+impl StrategyKind {
+    /// Short name for reports/CLI ("halo" / "1.5d").
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Halo => "halo",
+            StrategyKind::OneHalfD => "1.5d",
+        }
+    }
+
+    /// Parse a CLI name (`halo` | `1.5d`).
+    pub fn from_name(s: &str) -> Option<StrategyKind> {
+        match s {
+            "halo" => Some(StrategyKind::Halo),
+            "1.5d" | "1.5D" | "15d" => Some(StrategyKind::OneHalfD),
+            _ => None,
+        }
+    }
+}
+
+/// Everything one epoch of a strategy may read or mutate, borrowed from
+/// the session for the duration of [`CommStrategy::run_epoch`]. Workers'
+/// activations and stage clocks are mutated in place; the cache is
+/// consulted (and charged) through the exchange plan; the reduce-phase
+/// state (report, model step) stays with the session.
+pub struct EpochCtx<'s, 'g> {
+    pub(crate) cfg: &'s TrainConfig,
+    pub(crate) backend: &'s mut dyn Backend,
+    pub(crate) worker_backends: &'s mut Vec<Box<dyn Backend + Send>>,
+    pub(crate) plan: &'s SubgraphPlan,
+    pub(crate) model: &'s GnnModel,
+    pub(crate) dims: &'s [LayerDims],
+    pub(crate) workers: &'s mut [Worker],
+    pub(crate) cache: &'s mut TwoLevelCache,
+    pub(crate) engine: &'s ExchangeEngine<'g>,
+    pub(crate) machine_of: &'s [usize],
+    pub(crate) n_machines: usize,
+    pub(crate) epoch: u64,
+    pub(crate) refresh_epoch: bool,
+    pub(crate) f_dim: usize,
+    pub(crate) weights: &'s [f32],
+}
+
+/// What one strategy epoch produced: per-worker outputs for the
+/// session's reduce phase, plus the plan artifacts and byte/time
+/// accounting the strategy committed to.
+pub struct EpochOutcome {
+    pub(crate) outs: Vec<WorkerOut>,
+    pub(crate) meta: Vec<RoundMeta>,
+    pub(crate) fills: Vec<(usize, FillDirective)>,
+    /// Planned device bytes, committed by the session only after the
+    /// executors succeeded (an aborted epoch moves nothing).
+    pub(crate) bytes_moved: u64,
+    pub(crate) bytes_saved: u64,
+    pub(crate) cross_naive: u64,
+    /// Device bytes of whole-block broadcasts (0 for the halo strategy;
+    /// also included in `bytes_moved`).
+    pub(crate) broadcast_bytes: u64,
+    /// Measured wall-clock of the plan phase (real seconds).
+    pub(crate) wall_plan: f64,
+    /// Measured wall-clock of the execute phase (real seconds).
+    pub(crate) wall_execute: f64,
+}
+
+/// One epoch's forward/backward aggregation, given the partition, model,
+/// backend, and clock.
+///
+/// Contract: `run_epoch` must (1) leave every worker's `h[layers]`
+/// logits and stage clocks in the same state the reference halo path
+/// would — row values delivered to workers must be bit-identical to
+/// [`HaloStrategy`]'s, whatever the transport granularity — and
+/// (2) return per-worker outputs ordered by worker index so the
+/// session's deterministic reduce applies unchanged. On error the
+/// session sweeps pending cache fills; the strategy must not commit
+/// byte charges itself.
+pub trait CommStrategy {
+    /// Short name for reports ("halo" / "1.5d").
+    fn name(&self) -> &'static str;
+
+    /// Plan and execute one epoch over `ctx`, returning the per-worker
+    /// outputs and accounting for the session to reduce.
+    fn run_epoch(&mut self, ctx: &mut EpochCtx<'_, '_>) -> Result<EpochOutcome>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_kind_names_round_trip() {
+        assert_eq!(StrategyKind::from_name("halo"), Some(StrategyKind::Halo));
+        assert_eq!(StrategyKind::from_name("1.5d"), Some(StrategyKind::OneHalfD));
+        assert_eq!(StrategyKind::from_name("2d"), None);
+        for k in [StrategyKind::Halo, StrategyKind::OneHalfD] {
+            assert_eq!(StrategyKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(StrategyKind::default(), StrategyKind::Halo);
+    }
+}

@@ -1,0 +1,140 @@
+//! CAGNET-style 1.5D block SpMM (Tripathy, Yelick & Buluç, SC'20),
+//! adapted to this crate's vertex-partitioned simulation.
+//!
+//! Instead of shipping individual halo rows along the edge cut, each
+//! owner broadcasts its whole inner block of H once per *replication
+//! group* per machine, and every worker computes Â·H from ascending
+//! column blocks of its local operator. Communication therefore scales
+//! with the replication factor `c` (`--replication`), independent of the
+//! edge cut — the crossover against the halo strategy is charted by the
+//! `pr8_strategy` bench.
+//!
+//! Numerics are bit-identical to [`super::HaloStrategy`]: the same
+//! exchange plan delivers the same rows through the same per-row
+//! mechanics (including the vertex-keyed AdaQP quantization stream, when
+//! enabled), and contiguous ascending column-block accumulation
+//! reproduces the fused CSR walk's per-element op order exactly. Only the
+//! time/byte accounting differs: per-row transport charges are replaced
+//! by whole-block broadcast charges (blocks modeled as raw `f32`), and
+//! cross-machine wire bytes are measured from real whole-block frames.
+
+use crate::graph::CsrMat;
+use crate::train::strategy::exec::{execute, plan_rounds, ExecOpts};
+use crate::train::strategy::{CommStrategy, EpochCtx, EpochOutcome};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// The 1.5D block strategy: whole-block H broadcasts per replication
+/// group, ascending column-block aggregation through
+/// [`crate::runtime::Backend::spmm_block`].
+pub struct OneHalfDStrategy {
+    /// Replication factor `c`: workers are grouped into ⌈p/c⌉ consecutive
+    /// groups of `c`; one block copy serves a whole group per machine.
+    replication: usize,
+    /// Per-worker ascending column blocks of the local operator, built
+    /// once at session construction (`SparseAdj::col_blocks`).
+    blocks: Vec<Vec<CsrMat>>,
+}
+
+impl OneHalfDStrategy {
+    /// Build from the session's per-worker column blocks.
+    pub(crate) fn new(replication: usize, blocks: Vec<Vec<CsrMat>>) -> OneHalfDStrategy {
+        OneHalfDStrategy { replication, blocks }
+    }
+}
+
+impl CommStrategy for OneHalfDStrategy {
+    fn name(&self) -> &'static str {
+        "1.5d"
+    }
+
+    fn run_epoch(&mut self, ctx: &mut EpochCtx<'_, '_>) -> Result<EpochOutcome> {
+        let p = ctx.workers.len();
+        let c = self.replication.clamp(1, p.max(1));
+        let t_plan = Instant::now();
+        // Same central plan as halo (identical rows reach identical
+        // workers — that is the bit-identity guarantee), but per-row
+        // transport charges are suppressed: transport is whole blocks.
+        let mut planned = plan_rounds(ctx, false);
+        let rounds = planned.meta.len();
+        let mut bcast: Vec<Vec<usize>> = vec![vec![0usize; rounds]; p];
+        let mut broadcast_bytes = 0u64;
+        for (l, m) in planned.meta.iter().enumerate() {
+            if m.skip {
+                continue;
+            }
+            // One broadcast slot per (replication group, machine) that
+            // needs any fresh row of this owner this round; the group's
+            // lowest-indexed recipient acts as leader and takes the
+            // transfer-time charge. Cached recipients cost nothing — the
+            // plan already pruned them, so JACA composes with 1.5D.
+            let mut slots: Vec<BTreeMap<(usize, usize), usize>> = vec![BTreeMap::new(); p];
+            for ow in 0..p {
+                for dct in &planned.sends[ow][l] {
+                    for &(rw, _) in &dct.recipients {
+                        let e = slots[ow].entry((rw / c, ctx.machine_of[rw])).or_insert(rw);
+                        if rw < *e {
+                            *e = rw;
+                        }
+                    }
+                }
+                for cs in &planned.cross[ow][l] {
+                    for &(rw, _) in &cs.recipients {
+                        let e = slots[ow].entry((rw / c, ctx.machine_of[rw])).or_insert(rw);
+                        if rw < *e {
+                            *e = rw;
+                        }
+                    }
+                }
+            }
+            let active: usize = slots.iter().map(|s| s.len()).sum();
+            for ow in 0..p {
+                let n_inner = ctx.plan.parts[ow].n_inner;
+                let block_bytes = (n_inner * m.dim * 4) as u64;
+                for (&(_, machine), &leader) in &slots[ow] {
+                    broadcast_bytes += block_bytes;
+                    if machine != ctx.machine_of[ow] {
+                        bcast[ow][l] += 1;
+                    }
+                    planned.comm_stages[leader].communication += ctx
+                        .engine
+                        .topology
+                        .transfer_time(ctx.engine.gpus, ow, leader, block_bytes, active.max(1))
+                        * ctx.cfg.comm_multiplier;
+                }
+            }
+        }
+        for (w, st) in ctx.workers.iter_mut().zip(&planned.comm_stages) {
+            w.stages.add(st);
+        }
+        let wall_plan = t_plan.elapsed().as_secs_f64();
+        let meta = planned.meta.clone();
+        let fills = std::mem::take(&mut planned.fills);
+        let bytes_moved = planned.bytes_moved + broadcast_bytes;
+        let bytes_saved = planned.bytes_saved;
+        let cross_naive = planned.cross_naive;
+        let opts = ExecOpts { blocks: Some(&self.blocks), row_frames: false, bcast };
+        let t_exec = Instant::now();
+        let mut outs = execute(ctx, planned, &opts)?;
+        let wall_execute = t_exec.elapsed().as_secs_f64();
+        // Blocks ship raw f32, so no owned row is ever quantized narrow:
+        // the session's quantized-width byte correction must not fire.
+        for o in &mut outs {
+            for fr in &mut o.full_rows {
+                *fr = 0;
+            }
+        }
+        Ok(EpochOutcome {
+            outs,
+            meta,
+            fills,
+            bytes_moved,
+            bytes_saved,
+            cross_naive,
+            broadcast_bytes,
+            wall_plan,
+            wall_execute,
+        })
+    }
+}

@@ -6,12 +6,9 @@
 //! `cfg.epochs` epochs (optionally with early stopping), and return both
 //! the [`TrainReport`] and the [`crate::model::TrainedModel`] artifact.
 //! Callers that want staged control (per-epoch stats, eval between
-//! epochs, cache refreshes) should build the session directly; the
-//! legacy `(&[Gpu], &Topology)` [`train`] shim is deprecated.
+//! epochs, cache refreshes) should build the session directly.
 
 use crate::cache::PolicyKind;
-use crate::device::profile::Gpu;
-use crate::device::topology::Topology;
 use crate::dist::Cluster;
 use crate::graph::Dataset;
 use crate::model::{ModelKind, TrainedModel};
@@ -20,6 +17,7 @@ use crate::partition::Method;
 use crate::runtime::Backend;
 use crate::train::sampled::SampledSession;
 use crate::train::session::{EpochStats, Session};
+use crate::train::strategy::StrategyKind;
 use crate::train::TrainReport;
 use anyhow::Result;
 
@@ -147,6 +145,14 @@ pub struct TrainConfig {
     /// Worker execution mode (sequential reference or one thread per
     /// worker with overlapped halo exchange). Bit-identical numerics.
     pub exec: ExecMode,
+    /// Epoch-execution strategy: the paper's halo exchange (default) or
+    /// the CAGNET-style 1.5D block algorithm. Bit-identical numerics;
+    /// only the communication pattern and its accounting differ.
+    pub strategy: StrategyKind,
+    /// Replication factor `c` for the 1.5D strategy (groups of `c`
+    /// consecutive workers share one block broadcast). Only meaningful
+    /// with [`StrategyKind::OneHalfD`]; 1 elsewhere.
+    pub replication: usize,
     /// Full-batch (default) or mini-batch neighbor-sampled training.
     pub mode: TrainMode,
     /// Seeds per mini-batch (sampled mode only; 0 = unset).
@@ -180,6 +186,8 @@ impl TrainConfig {
             comm_multiplier: 1.0,
             invert_priority: false,
             exec: ExecMode::Sequential,
+            strategy: StrategyKind::Halo,
+            replication: 1,
             mode: TrainMode::FullBatch,
             batch_size: 0,
             fanout: Vec::new(),
@@ -284,27 +292,11 @@ where
     Ok(None)
 }
 
-/// Run training; `gpus.len()` = number of partitions.
-///
-/// Legacy one-call path, kept for source compatibility: wraps the device
-/// list into a [`Cluster`] and defers to [`run`], discarding the
-/// [`TrainedModel`] artifact.
-#[deprecated(note = "use `train::run`, which also returns the `TrainedModel` artifact")]
-pub fn train(
-    dataset: &Dataset,
-    gpus: &[Gpu],
-    topology: &Topology,
-    backend: &mut dyn Backend,
-    cfg: &TrainConfig,
-) -> Result<TrainReport> {
-    let cluster = Cluster::from_parts(gpus.to_vec(), topology.clone())?;
-    Ok(run(dataset, &cluster, backend, cfg)?.0)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::profile::DeviceKind;
+    use crate::device::profile::{DeviceKind, Gpu};
+    use crate::device::topology::Topology;
     use crate::graph::datasets::tiny;
     use crate::runtime::NativeBackend;
     use crate::util::Rng;
@@ -465,17 +457,12 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_shim_matches_run() {
-        let ds = tiny(9);
-        let gpus = gpus(2);
-        let topo = Topology::pcie_pairs(2);
-        let mut backend = NativeBackend::new();
-        let cfg = tiny_cfg(3);
-        #[allow(deprecated)]
-        let legacy = train(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
-        let unified = run_report(&ds, &gpus, &topo, &mut backend, &cfg).unwrap();
-        assert_eq!(legacy.losses, unified.losses);
-        assert_eq!(legacy.val_accs, unified.val_accs);
+    fn strategy_and_replication_default_off() {
+        let cfg = TrainConfig::capgnn(1);
+        assert_eq!(cfg.strategy, StrategyKind::Halo);
+        assert_eq!(cfg.replication, 1);
+        let v = TrainConfig::vanilla(1);
+        assert_eq!(v.strategy, StrategyKind::Halo);
     }
 
     #[test]

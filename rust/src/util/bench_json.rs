@@ -1,0 +1,123 @@
+//! Shared `BENCH_*.json` emission for the `pr*` CI-gate benches.
+//!
+//! Every PR bench used to hand-roll the same envelope: a document with
+//! the bench name and `BENCH_QUICK` flag, per-gate boolean fields, a
+//! `write_json_file` call, and a per-failed-gate message + nonzero exit.
+//! [`BenchDoc`] owns that protocol once. Non-finite numbers are
+//! finitized to `null` by the [`crate::util::json`] writer, so a NaN
+//! metric can never corrupt a report file.
+
+use crate::util::bench::{quick_mode, write_json_file};
+use crate::util::json::{s, Json};
+use std::collections::BTreeMap;
+
+/// One bench's JSON document plus its CI gates: accumulate fields and
+/// named gates, then [`BenchDoc::finish`] writes the file and turns any
+/// failed gate into a nonzero exit.
+pub struct BenchDoc {
+    name: String,
+    path: String,
+    quick: bool,
+    fields: Vec<(String, Json)>,
+    failures: Vec<String>,
+}
+
+impl BenchDoc {
+    /// Start a document for bench `name`, written to `path` (repo-root
+    /// `BENCH_PRn.json` by convention). Reads `BENCH_QUICK` once.
+    pub fn new(name: &str, path: &str) -> BenchDoc {
+        BenchDoc {
+            name: name.to_string(),
+            path: path.to_string(),
+            quick: quick_mode(),
+            fields: Vec::new(),
+            failures: Vec::new(),
+        }
+    }
+
+    /// Whether `BENCH_QUICK=1` shrunk workloads for this run.
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Attach one top-level field to the document.
+    pub fn field(&mut self, key: &str, value: Json) {
+        self.fields.push((key.to_string(), value));
+    }
+
+    /// Record a named boolean CI gate: the flag lands in the document
+    /// either way; a failed gate prints `fail_msg` and fails the process
+    /// at [`BenchDoc::finish`].
+    pub fn gate(&mut self, key: &str, ok: bool, fail_msg: &str) {
+        self.fields.push((key.to_string(), Json::Bool(ok)));
+        if !ok {
+            self.failures.push(fail_msg.to_string());
+        }
+    }
+
+    /// The assembled document (what `finish` writes; exposed for tests).
+    pub fn to_json(&self) -> Json {
+        let mut map = BTreeMap::new();
+        map.insert("bench".to_string(), s(&self.name));
+        map.insert("quick".to_string(), Json::Bool(self.quick));
+        for (k, v) in &self.fields {
+            map.insert(k.clone(), v.clone());
+        }
+        Json::Obj(map)
+    }
+
+    /// Write the document, print a one-line summary with each gate's
+    /// verdict, and exit nonzero if any gate failed.
+    pub fn finish(self) {
+        let doc = self.to_json();
+        if let Err(e) = write_json_file(&self.path, &doc) {
+            eprintln!("write {}: {e}", self.path);
+            std::process::exit(1);
+        }
+        let gates: Vec<String> = self
+            .fields
+            .iter()
+            .filter_map(|(k, v)| match v {
+                Json::Bool(b) => Some(format!("{k}={b}")),
+                _ => None,
+            })
+            .collect();
+        if gates.is_empty() {
+            println!("wrote {}", self.path);
+        } else {
+            println!("wrote {} ({})", self.path, gates.join(", "));
+        }
+        if !self.failures.is_empty() {
+            for f in &self.failures {
+                eprintln!("{f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn document_shape() {
+        let mut d = BenchDoc::new("pr0_test", "BENCH_PR0.json");
+        d.field("n", num(4.0));
+        d.gate("ok_gate", true, "unused");
+        let j = d.to_json();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("pr0_test"));
+        assert_eq!(j.get("n").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("ok_gate"), Some(&Json::Bool(true)));
+        assert!(j.get("quick").is_some());
+    }
+
+    #[test]
+    fn failed_gate_recorded() {
+        let mut d = BenchDoc::new("pr0_test", "BENCH_PR0.json");
+        d.gate("bad_gate", false, "boom");
+        assert_eq!(d.to_json().get("bad_gate"), Some(&Json::Bool(false)));
+        assert_eq!(d.failures, vec!["boom".to_string()]);
+    }
+}

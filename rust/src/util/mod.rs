@@ -1,11 +1,13 @@
 //! Offline-registry shims and small shared utilities: CLI parsing
 //! ([`Args`], in place of clap), the bench harness ([`bench`], in place
-//! of criterion), JSON reading/writing ([`json`], in place of serde),
+//! of criterion), the shared `BENCH_*.json` gate protocol
+//! ([`bench_json`]), JSON reading/writing ([`json`], in place of serde),
 //! the deterministic PRNG ([`Rng`]), summary statistics and ASCII
 //! tables.
 
 pub mod args;
 pub mod bench;
+pub mod bench_json;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -4,14 +4,16 @@
 //! losses, accuracies, simulated times, byte accounting and cache
 //! counters — across worker counts, caching on/off and quantization
 //! on/off. This is what makes the threaded path a drop-in replacement.
+//! The same file carries the cross-strategy contract: `--strategy 1.5d`
+//! must reproduce the halo reference's losses/accuracies bit-for-bit.
 
 use capgnn::device::profile::DeviceKind;
 use capgnn::dist::Cluster;
 use capgnn::graph::datasets::tiny;
 use capgnn::runtime::NativeBackend;
 use capgnn::train::{
-    ConvergenceLog, EarlyStopping, ExecMode, SampledSession, Session, TrainConfig, TrainMode,
-    TrainReport,
+    ConvergenceLog, EarlyStopping, ExecMode, SampledSession, Session, StrategyKind, TrainConfig,
+    TrainMode, TrainReport,
 };
 
 fn tiny_cfg(epochs: usize) -> TrainConfig {
@@ -63,7 +65,91 @@ fn assert_identical(a: &TrainReport, b: &TrainReport, what: &str) {
     assert_eq!(a.bytes_saved, b.bytes_saved, "{what}: bytes saved");
     assert_eq!(a.cross_bytes_moved, b.cross_bytes_moved, "{what}: cross-machine bytes");
     assert_eq!(a.cross_bytes_naive, b.cross_bytes_naive, "{what}: naive cross bytes");
+    assert_eq!(a.broadcast_bytes, b.broadcast_bytes, "{what}: broadcast bytes");
+    assert_eq!(a.strategy, b.strategy, "{what}: strategy label");
     assert_eq!(a.cache, b.cache, "{what}: cache counters");
+}
+
+/// Numerics-only comparison for cross-strategy checks: losses,
+/// accuracies, and the convergence trajectory must agree bitwise, while
+/// byte/time accounting legitimately differs (per-row halo charges vs
+/// whole-block broadcast charges).
+fn assert_same_numerics(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses");
+    assert_eq!(a.val_accs, b.val_accs, "{what}: val accs");
+    assert_eq!(
+        a.test_acc.to_bits(),
+        b.test_acc.to_bits(),
+        "{what}: test acc ({} vs {})",
+        a.test_acc,
+        b.test_acc
+    );
+}
+
+/// The PR8 tentpole contract: `--strategy 1.5d` produces bit-identical
+/// losses/accuracies to `--strategy halo` across 1/2/4 workers ×
+/// Sequential/Threaded × cache on/off × replication 1/2 — and within the
+/// 1.5D strategy, Threaded ≡ Sequential down to the byte accounting.
+#[test]
+fn one_half_d_matches_halo_bitwise() {
+    for &workers in &[1usize, 2, 4] {
+        for &use_cache in &[true, false] {
+            for &replication in &[1usize, 2] {
+                let mut halo_cfg = tiny_cfg(3);
+                halo_cfg.use_cache = use_cache;
+                let mut od_cfg = halo_cfg.clone();
+                od_cfg.strategy = StrategyKind::OneHalfD;
+                od_cfg.replication = replication;
+                let what =
+                    format!("workers={workers} cache={use_cache} replication={replication}");
+                let halo = run(&halo_cfg, workers, ExecMode::Sequential);
+                let od_seq = run(&od_cfg, workers, ExecMode::Sequential);
+                let od_thr = run(&od_cfg, workers, ExecMode::Threaded);
+                assert_same_numerics(&halo, &od_seq, &format!("{what}: halo vs 1.5d"));
+                // Same strategy, different executor: everything matches,
+                // including the broadcast-byte accounting.
+                assert_identical(&od_seq, &od_thr, &format!("{what}: 1.5d seq vs thr"));
+                // Report labeling and per-strategy byte semantics.
+                assert_eq!(halo.strategy, "halo", "{what}");
+                assert_eq!(od_seq.strategy, "1.5d", "{what}");
+                assert_eq!(halo.broadcast_bytes, 0, "{what}: halo broadcasts nothing");
+                if workers > 1 {
+                    assert!(
+                        od_seq.broadcast_bytes > 0,
+                        "{what}: 1.5d moved no blocks across {workers} workers?"
+                    );
+                }
+                assert!(
+                    od_seq.broadcast_bytes <= od_seq.bytes_moved,
+                    "{what}: broadcast bytes are a subset of bytes moved"
+                );
+                assert!(halo.losses.iter().all(|l| l.is_finite()), "{what}");
+            }
+        }
+    }
+}
+
+/// Strategies also agree bitwise across machine boundaries: on the 2M-2D
+/// preset the 1.5D block frames cross the interconnect yet deliver the
+/// same rows, so the convergence trajectory is unchanged.
+#[test]
+fn one_half_d_matches_halo_multi_machine() {
+    let cluster = Cluster::preset("2M-2D").unwrap();
+    for &replication in &[1usize, 2] {
+        let halo_cfg = tiny_cfg(3);
+        let mut od_cfg = halo_cfg.clone();
+        od_cfg.strategy = StrategyKind::OneHalfD;
+        od_cfg.replication = replication;
+        let what = format!("2M-2D replication={replication}");
+        let halo = run_on(&halo_cfg, &cluster, ExecMode::Sequential);
+        let od_seq = run_on(&od_cfg, &cluster, ExecMode::Sequential);
+        let od_thr = run_on(&od_cfg, &cluster, ExecMode::Threaded);
+        assert_same_numerics(&halo, &od_seq, &format!("{what}: halo vs 1.5d"));
+        assert_identical(&od_seq, &od_thr, &format!("{what}: 1.5d seq vs thr"));
+        // Whole blocks crossed the machine boundary as real frames.
+        assert!(od_seq.cross_bytes_moved > 0, "{what}: no cross-machine blocks?");
+        assert!(od_seq.broadcast_bytes > 0, "{what}: no broadcasts?");
+    }
 }
 
 /// The satellite contract: 1/2/4 workers × 3 epochs × cache on/off ×
