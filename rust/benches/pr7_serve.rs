@@ -69,6 +69,7 @@ fn serve_once(
         cache_capacity: cache,
         prepopulate: cache / 2,
         seed: 42,
+        ..ServeConfig::new(2)
     };
     let mut handle = Server::start(ds, model.clone(), &cfg).expect("server start");
     let rep = run_driver(&mut handle, workload, Pacing::Open { qps }).expect("driver");

@@ -1,0 +1,253 @@
+//! PR9 bench / CI gate: fault injection, recovery parity, and serving
+//! degradation.
+//!
+//! Three scenarios on a two-machine cluster preset:
+//!
+//! 1. **Chaos training** — the full fault matrix (frame corruption,
+//!    drops, delays, transient backend errors, worker panics) against a
+//!    clean reference run. The link layer recovers frame faults by CRC +
+//!    bounded retransmission; the `--max-retries` budget replays aborted
+//!    epochs. Gate: losses, accuracies, and byte accounting are
+//!    bit-identical to the clean run, and a nonzero number of faults
+//!    actually fired.
+//! 2. **Checkpoint → kill → resume** — a run killed after its mid-point
+//!    checkpoint and resumed from the `.cgk` artifact. Gate: final
+//!    numerics, bytes, and weights match the uninterrupted run bitwise.
+//! 3. **Serving degradation** — a one-worker server with injected worker
+//!    panics and a bounded admission queue under a burst. Gate: overload
+//!    is shed via the typed error, the panicking worker is respawned,
+//!    and every non-lost request is answered.
+//!
+//! Writes `BENCH_PR9.json` to the repo root; exits nonzero if any gate
+//! fails. `BENCH_QUICK=1` shrinks the graph for smoke runs.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::fault::FaultPlan;
+use capgnn::graph::datasets::synthetic_node_data;
+use capgnn::graph::{Dataset, Graph};
+use capgnn::model::TrainedModel;
+use capgnn::runtime::NativeBackend;
+use capgnn::sample::Fanout;
+use capgnn::serve::{ServeConfig, ServeError, Server};
+use capgnn::train::{run_with, RunOptions, TrainConfig, TrainReport};
+use capgnn::util::bench;
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{num, obj, Json};
+use capgnn::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Random graph (avg degree ≈ 8) with synthetic labeled features.
+fn make_dataset(n: usize, seed: u64) -> Dataset {
+    let m = n * 8;
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 8, 32, seed);
+    Dataset { name: "bench", label: "Bn", graph, data }
+}
+
+fn base_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 32, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn run(ds: &Dataset, cluster: &Cluster, cfg: &TrainConfig, opts: RunOptions) -> (TrainReport, TrainedModel) {
+    let mut backend = NativeBackend::new();
+    let out = run_with(ds, cluster, &mut backend, cfg, opts).expect("run");
+    (out.report, out.model)
+}
+
+/// Recovery parity: numerics + byte accounting, bitwise.
+fn same_outcome(a: &TrainReport, b: &TrainReport) -> bool {
+    a.losses == b.losses
+        && a.val_accs == b.val_accs
+        && a.test_acc.to_bits() == b.test_acc.to_bits()
+        && a.bytes_moved == b.bytes_moved
+        && a.bytes_saved == b.bytes_saved
+        && a.cross_bytes_moved == b.cross_bytes_moved
+        && a.cross_bytes_naive == b.cross_bytes_naive
+}
+
+fn same_weights(a: &TrainedModel, b: &TrainedModel) -> bool {
+    a.model.weights.iter().zip(&b.model.weights).all(|(la, lb)| {
+        la.iter()
+            .zip(lb)
+            .all(|(ra, rb)| ra.iter().zip(rb).all(|(x, y)| x.to_bits() == y.to_bits()))
+    })
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let n = if quick { 1024 } else { 4096 };
+    let epochs = if quick { 4 } else { 6 };
+    let cluster = Cluster::preset("2M-2D").unwrap();
+    let ds = make_dataset(n, 42);
+    let cfg = base_cfg(epochs);
+
+    // ---- 1. Chaos training vs clean reference ---------------------------
+    let t0 = std::time::Instant::now();
+    let (clean, clean_model) = run(&ds, &cluster, &cfg, RunOptions::default());
+    let clean_wall = t0.elapsed().as_secs_f64();
+
+    let fp = Arc::new(
+        FaultPlan::parse("seed=13,corrupt=0.2,drop=0.1,delay=0.1,backend=0.3,panic=0.1")
+            .unwrap(),
+    );
+    let mut chaos_cfg = cfg.clone();
+    chaos_cfg.fault = Some(fp.clone());
+    let t1 = std::time::Instant::now();
+    let (chaos, chaos_model) = run(
+        &ds,
+        &cluster,
+        &chaos_cfg,
+        RunOptions { max_retries: 4, ..RunOptions::default() },
+    );
+    let chaos_wall = t1.elapsed().as_secs_f64();
+    let c = fp.counters();
+    let injected = fp.total_injected();
+    let chaos_parity = same_outcome(&clean, &chaos) && same_weights(&clean_model, &chaos_model);
+    println!(
+        "chaos: {} faults injected ({} corrupt, {} drop, {} delay, {} backend, {} panic; \
+         {} retransmissions) — parity {}",
+        injected, c.corrupted, c.dropped, c.delayed, c.backend_errs, c.panics, c.retries,
+        if chaos_parity { "BIT-IDENTICAL" } else { "DIVERGED" },
+    );
+
+    // ---- 2. Checkpoint -> kill -> resume --------------------------------
+    let ck_path = std::env::temp_dir()
+        .join(format!("capgnn_pr9_bench_{}.cgk", std::process::id()));
+    let ck_s = ck_path.to_str().unwrap().to_string();
+    let half = epochs / 2;
+    let mut cfg_half = cfg.clone();
+    cfg_half.epochs = half;
+    run(
+        &ds,
+        &cluster,
+        &cfg_half,
+        RunOptions {
+            checkpoint_every: Some(half as u64),
+            checkpoint_path: Some(ck_s.clone()),
+            ..RunOptions::default()
+        },
+    );
+    let ck_bytes = std::fs::metadata(&ck_path).map(|m| m.len()).unwrap_or(0);
+    let (resumed, resumed_model) = run(
+        &ds,
+        &cluster,
+        &cfg,
+        RunOptions { resume: Some(ck_s), ..RunOptions::default() },
+    );
+    let resume_parity = resumed.losses.len() == epochs
+        && same_outcome(&clean, &resumed)
+        && same_weights(&clean_model, &resumed_model);
+    std::fs::remove_file(&ck_path).ok();
+    println!(
+        "resume: killed after epoch {half}, resumed from a {ck_bytes}-byte .cgk — parity {}",
+        if resume_parity { "BIT-IDENTICAL" } else { "DIVERGED" },
+    );
+
+    // ---- 3. Serving degradation -----------------------------------------
+    let scfg = ServeConfig {
+        fanout: Fanout(vec![6, 4]),
+        cache_capacity: 256,
+        prepopulate: 0,
+        workers: 1,
+        max_batch: 1,
+        max_wait_us: 100,
+        max_queue: 64,
+        fault: Some(Arc::new(FaultPlan::parse("seed=3,panic=1.0").unwrap())),
+        ..ServeConfig::new(2)
+    };
+    let burst = 200usize;
+    let mut handle = Server::start(&ds, clean_model.clone(), &scfg).expect("server start");
+    let mut accepted = 0usize;
+    let mut typed_shed = 0usize;
+    for v in 0..burst as u32 {
+        match handle.submit(v) {
+            Ok(_) => accepted += 1,
+            Err(e) if e.downcast_ref::<ServeError>().is_some() => typed_shed += 1,
+            Err(e) => panic!("untyped submit error: {e}"),
+        }
+    }
+    // Liveness: everything that was admitted (minus the one batch lost to
+    // the injected panic) comes back within a bounded wait.
+    let mut answered = 0usize;
+    while answered + 1 < accepted {
+        match handle.recv_timeout(Duration::from_secs(30)) {
+            Some(_) => answered += 1,
+            None => break,
+        }
+    }
+    let srep = handle.shutdown().expect("shutdown");
+    let serve_ok = typed_shed as u64 == srep.shed
+        && srep.panics >= 1
+        && srep.respawns >= 1
+        && srep.responses == accepted as u64 - 1;
+    println!(
+        "serve: burst {burst} -> {accepted} admitted, {} shed, {} answered after {} panic(s) \
+         / {} respawn(s)",
+        srep.shed, srep.responses, srep.panics, srep.respawns,
+    );
+
+    let mut doc = BenchDoc::new("pr9_faults", "BENCH_PR9.json");
+    doc.field("n", num(n as f64));
+    doc.field("epochs", num(epochs as f64));
+    doc.field(
+        "chaos",
+        obj(vec![
+            ("injected", num(injected as f64)),
+            ("corrupted", num(c.corrupted as f64)),
+            ("dropped", num(c.dropped as f64)),
+            ("delayed", num(c.delayed as f64)),
+            ("backend_errors", num(c.backend_errs as f64)),
+            ("worker_panics", num(c.panics as f64)),
+            ("retransmissions", num(c.retries as f64)),
+            ("clean_wall_s", num(clean_wall)),
+            ("chaos_wall_s", num(chaos_wall)),
+            ("recovery_overhead", num(if clean_wall > 0.0 { chaos_wall / clean_wall } else { 0.0 })),
+            ("bit_identical", Json::Bool(chaos_parity)),
+        ]),
+    );
+    doc.field(
+        "resume",
+        obj(vec![
+            ("checkpoint_bytes", num(ck_bytes as f64)),
+            ("killed_after_epoch", num(half as f64)),
+            ("bit_identical", Json::Bool(resume_parity)),
+        ]),
+    );
+    doc.field(
+        "serve",
+        obj(vec![
+            ("burst", num(burst as f64)),
+            ("admitted", num(accepted as f64)),
+            ("shed", num(srep.shed as f64)),
+            ("answered", num(srep.responses as f64)),
+            ("panics", num(srep.panics as f64)),
+            ("respawns", num(srep.respawns as f64)),
+        ]),
+    );
+    doc.gate(
+        "faults_injected",
+        injected > 0,
+        "FAULT GATE FAILED: the chaos plan injected nothing — the run was not stressed",
+    );
+    doc.gate(
+        "chaos_recovery_bit_identical",
+        chaos_parity,
+        "PARITY GATE FAILED: the recovered chaos run diverged from the clean run",
+    );
+    doc.gate(
+        "resume_bit_identical",
+        resume_parity,
+        "RESUME GATE FAILED: checkpoint -> kill -> resume diverged from the clean run",
+    );
+    doc.gate(
+        "serve_degrades_gracefully",
+        serve_ok,
+        "SERVE GATE FAILED: overload shedding / worker respawn did not behave",
+    );
+    doc.finish();
+}

@@ -1,6 +1,6 @@
 //! FIFO replacement — baseline of Figs. 15/16 (as in BGL's base strategy).
 
-use super::{CachePolicy, InsertOutcome};
+use super::{CachePolicy, InsertOutcome, PolicyState};
 use std::collections::{HashSet, VecDeque};
 
 /// First-in-first-out replacement over u64 keys.
@@ -72,6 +72,21 @@ impl CachePolicy for FifoCache {
 
     fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    fn export_state(&self) -> PolicyState {
+        // Queue order *is* eviction order, but the queue may hold stale
+        // entries for removed keys (skipped at eviction) and duplicates
+        // never arise (resident re-insert is a no-op). Filter to live
+        // keys, keeping first occurrence.
+        let mut seen = HashSet::new();
+        let residents = self
+            .queue
+            .iter()
+            .copied()
+            .filter(|k| self.set.contains(k) && seen.insert(*k))
+            .collect();
+        PolicyState { residents, hints: Vec::new() }
     }
 }
 

@@ -8,7 +8,7 @@
 //! keeps high-overlap halo vertices pinned, which drives JACA's hit-rate
 //! advantage in Fig. 15.
 
-use super::{CachePolicy, InsertOutcome};
+use super::{CachePolicy, InsertOutcome, PolicyState};
 use std::collections::{BTreeSet, HashMap};
 
 /// The JACA replacement policy: overlap-ratio priority with recency
@@ -133,6 +133,22 @@ impl CachePolicy for JacaCache {
         // Re-rank if resident.
         if self.meta.contains_key(&key) {
             self.bump(key, priority);
+        }
+    }
+
+    fn export_state(&self) -> PolicyState {
+        // The live hint map is part of the state: eviction prunes a
+        // victim's hint, so re-hinting every build-time key at restore
+        // would diverge from the uninterrupted run.
+        let mut hints: Vec<(u64, u32)> = self.priorities.iter().map(|(&k, &p)| (k, p)).collect();
+        hints.sort_by_key(|&(k, _)| k);
+        PolicyState {
+            // Ascending (priority, tick) = eviction order. Restore
+            // replays inserts in this order, and since hints are applied
+            // first, each insert re-ranks with its original priority —
+            // the fresh ticks preserve the relative recency order.
+            residents: self.order.iter().map(|&(_, _, k)| k).collect(),
+            hints,
         }
     }
 }

@@ -1,6 +1,6 @@
 //! LRU replacement — classic baseline of Figs. 15/16.
 
-use super::{CachePolicy, InsertOutcome};
+use super::{CachePolicy, InsertOutcome, PolicyState};
 use std::collections::{BTreeSet, HashMap};
 
 /// Least-recently-used replacement over u64 keys.
@@ -83,6 +83,14 @@ impl CachePolicy for LruCache {
 
     fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    fn export_state(&self) -> PolicyState {
+        // Ascending tick = least-recent first = eviction order.
+        PolicyState {
+            residents: self.order.iter().map(|&(_, k)| k).collect(),
+            hints: Vec::new(),
+        }
     }
 }
 

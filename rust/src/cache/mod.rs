@@ -17,7 +17,7 @@ pub mod twolevel;
 pub use capacity::{cal_capacity, CacheCapacity, CapacityInput};
 pub use serve::{ServeCache, ServeCacheStats};
 pub use store::FeatureStore;
-pub use twolevel::{TwoLevelCache, TwoLevelStats};
+pub use twolevel::{CacheSnapshot, TwoLevelCache, TwoLevelStats};
 
 /// What a [`CachePolicy::insert`] did.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,6 +70,27 @@ pub trait CachePolicy: Send {
     /// Hint the static priority of a key (vertex overlap ratio for JACA).
     /// Default: ignored.
     fn set_priority(&mut self, _key: u64, _priority: u32) {}
+    /// Snapshot the policy's replacement state for a checkpoint (PR 9).
+    /// [`PolicyKind::restore`] rebuilds a behaviorally identical policy
+    /// from it.
+    fn export_state(&self) -> PolicyState;
+}
+
+/// Serializable replacement-policy state: the residents in eviction
+/// order (front = next victim) plus, for JACA, the live priority-hint
+/// map. Restoring replays the residents through `insert`, so the
+/// rebuilt policy makes bit-identical decisions from that point on.
+///
+/// The hint map is captured *live* rather than re-derived at restore
+/// time because JACA prunes a victim's hint at eviction — a resumed run
+/// that re-hinted every build-time key would diverge from the
+/// uninterrupted one.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PolicyState {
+    /// Resident keys, front = next eviction candidate.
+    pub residents: Vec<u64>,
+    /// `(key, priority)` hints (sorted by key; empty for FIFO/LRU).
+    pub hints: Vec<(u64, u32)>,
 }
 
 /// Which policy to instantiate (benches sweep this).
@@ -100,6 +121,20 @@ impl PolicyKind {
             PolicyKind::Fifo => "FIFO",
             PolicyKind::Lru => "LRU",
         }
+    }
+
+    /// Rebuild a policy from a [`PolicyState`] snapshot: hints first (so
+    /// JACA inserts rank correctly), then residents in eviction order —
+    /// the replayed recency ticks preserve the snapshot's relative order.
+    pub fn restore(self, capacity: usize, state: &PolicyState) -> Box<dyn CachePolicy> {
+        let mut policy = self.build(capacity);
+        for &(key, priority) in &state.hints {
+            policy.set_priority(key, priority);
+        }
+        for &key in &state.residents {
+            policy.insert(key);
+        }
+        policy
     }
 
     /// Parse a CLI `--policy` name (case-insensitive).

@@ -74,6 +74,27 @@ impl FeatureStore {
         self.written_at.clear();
         self.bytes = 0;
     }
+
+    /// Snapshot every row as `(key, row, written_at)`, sorted by key so
+    /// the serialized checkpoint bytes are deterministic.
+    pub fn export(&self) -> Vec<(u64, Vec<f32>, u64)> {
+        let mut out: Vec<(u64, Vec<f32>, u64)> = self
+            .rows
+            .iter()
+            .map(|(&k, r)| (k, r.clone(), self.written_at.get(&k).copied().unwrap_or(0)))
+            .collect();
+        out.sort_by_key(|(k, _, _)| *k);
+        out
+    }
+
+    /// Rebuild a store from an [`FeatureStore::export`] snapshot.
+    pub fn restore(items: &[(u64, Vec<f32>, u64)]) -> FeatureStore {
+        let mut s = FeatureStore::new();
+        for (k, row, at) in items {
+            s.put(*k, row.clone(), *at);
+        }
+        s
+    }
 }
 
 /// Byte accounting for the pinned-per-GPU + shared regions (Fig. 3 upper

@@ -10,7 +10,7 @@
 //! [`TwoLevelCache::new`] keeps the single-machine behavior.
 
 use super::store::FeatureStore;
-use super::{CachePolicy, InsertOutcome, PolicyKind};
+use super::{CachePolicy, InsertOutcome, PolicyKind, PolicyState};
 use std::collections::HashSet;
 
 /// Where a lookup was satisfied.
@@ -64,6 +64,22 @@ impl TwoLevelStats {
             self.local_hits as f64 / self.checks as f64
         }
     }
+}
+
+/// Serializable snapshot of a [`TwoLevelCache`]'s complete state (what
+/// a `.cgk` checkpoint stores).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheSnapshot {
+    /// Replacement state per worker-local cache.
+    pub locals: Vec<PolicyState>,
+    /// Replacement state per machine-global cache.
+    pub globals: Vec<PolicyState>,
+    /// `(key, row, written_at)` rows per worker-local store.
+    pub local_rows: Vec<Vec<(u64, Vec<f32>, u64)>>,
+    /// `(key, row, written_at)` rows per machine-global store.
+    pub global_rows: Vec<Vec<(u64, Vec<f32>, u64)>>,
+    /// Cumulative counters at snapshot time.
+    pub stats: TwoLevelStats,
 }
 
 /// Two-level cache over `P` workers (and `M` machine-local global
@@ -331,6 +347,42 @@ impl TwoLevelCache {
         }
     }
 
+    /// Snapshot the complete cache state for a checkpoint (PR 9):
+    /// per-level replacement state, stored rows with their write epochs,
+    /// and the cumulative counters. Taken at an epoch boundary, where no
+    /// fills are pending.
+    pub fn snapshot(&self) -> CacheSnapshot {
+        debug_assert!(self.pending.is_empty(), "snapshot mid-epoch (pending fills)");
+        CacheSnapshot {
+            locals: self.locals.iter().map(|p| p.export_state()).collect(),
+            globals: self.globals.iter().map(|p| p.export_state()).collect(),
+            local_rows: self.local_store.iter().map(|s| s.export()).collect(),
+            global_rows: self.global_store.iter().map(|s| s.export()).collect(),
+            stats: self.stats,
+        }
+    }
+
+    /// Replace this cache's state with a [`TwoLevelCache::snapshot`],
+    /// rebuilding every policy from its exported state — including the
+    /// live JACA hint maps, which *overwrite* the hints `Session::build`
+    /// planted (eviction prunes hints, so the build-time map is wrong
+    /// for a mid-run resume). Shapes must match the snapshot's origin;
+    /// the checkpoint loader's fingerprint check guarantees that.
+    pub fn restore(&mut self, snap: &CacheSnapshot) {
+        assert_eq!(snap.locals.len(), self.locals.len(), "worker count mismatch");
+        assert_eq!(snap.globals.len(), self.globals.len(), "machine count mismatch");
+        for (i, state) in snap.locals.iter().enumerate() {
+            self.locals[i] = self.kind.restore(self.locals[i].capacity(), state);
+            self.local_store[i] = FeatureStore::restore(&snap.local_rows[i]);
+        }
+        for (i, state) in snap.globals.iter().enumerate() {
+            self.globals[i] = self.kind.restore(self.globals[i].capacity(), state);
+            self.global_store[i] = FeatureStore::restore(&snap.global_rows[i]);
+        }
+        self.pending.clear();
+        self.stats = snap.stats;
+    }
+
     /// Drop everything (between runs).
     pub fn clear(&mut self) {
         let caps: Vec<usize> = self.locals.iter().map(|l| l.capacity()).collect();
@@ -542,6 +594,37 @@ mod tests {
         c.purge_pending();
         assert_eq!(c.lookup(1, 4), Hit::Miss);
         assert_eq!(c.lookup(0, 4), Hit::Miss);
+    }
+
+    #[test]
+    fn snapshot_restore_is_behaviorally_identical() {
+        for kind in [PolicyKind::Jaca, PolicyKind::Lru, PolicyKind::Fifo] {
+            // Build a cache with history: hints, fills, evictions, hits.
+            let mut a = TwoLevelCache::new(kind, &[2, 2], 3);
+            for (w, k) in [(0u64, 1u64), (0, 2), (1, 3), (0, 4)] {
+                a.set_priority(w as usize, k, (k + 1) as u32);
+                a.fill(w as usize, k, vec![k as f32; 2], k);
+            }
+            a.lookup(0, 1);
+            a.lookup(1, 2);
+            // Restore the snapshot into a *fresh* cache that got
+            // different build-time hints (the resume scenario).
+            let snap = a.snapshot();
+            let mut b = TwoLevelCache::new(kind, &[2, 2], 3);
+            for k in 1..=9u64 {
+                b.set_priority(0, k, 1);
+            }
+            b.restore(&snap);
+            assert_eq!(b.snapshot(), snap, "restore is a fixed point");
+            assert_eq!(b.stats, a.stats);
+            // Identical state ⇒ identical future decisions.
+            for (w, k) in [(0usize, 7u64), (1, 1), (0, 2), (1, 9)] {
+                assert_eq!(a.lookup(w, k), b.lookup(w, k), "{kind:?} lookup({w},{k})");
+            }
+            a.fill(0, 7, vec![7.0; 2], 9);
+            b.fill(0, 7, vec![7.0; 2], 9);
+            assert_eq!(a.snapshot(), b.snapshot(), "{kind:?} post-restore fill");
+        }
     }
 
     #[test]

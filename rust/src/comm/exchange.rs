@@ -303,6 +303,10 @@ impl<'a> ExchangeEngine<'a> {
         // Keys already scheduled for an in-place refresh this round.
         let mut refreshed: HashSet<u64> = HashSet::new();
 
+        // Infallible: `halo_owner[hi]` is by construction the partition
+        // that holds `v` as an inner vertex (the partitioner assigns every
+        // vertex to exactly one part, and halo lists are built from the
+        // cut edges of that assignment), so `local_of` cannot miss.
         let src_row_of = |owner: usize, v: u32| -> usize {
             plan.parts[owner]
                 .local_of(v)
@@ -524,6 +528,9 @@ impl<'a> ExchangeEngine<'a> {
         // NIC. `transfer_time` applies the cross-machine link multiplier.
         if p.charge_transfers {
             for ((ow, _m), (bytes, recips)) in &xagg {
+                // Infallible: an `xagg` entry is only ever inserted when a
+                // recipient is pushed in the same statement, so the set is
+                // non-empty by construction.
                 let rep = *recips.iter().next().expect("frame with no recipients");
                 let t = (self
                     .topology

@@ -13,4 +13,4 @@ pub use exchange::{
 };
 pub use pipeline::combine_epoch;
 pub use queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};
-pub use transport::{Frame, FrameKind, Payload, FRAME_HEADER_BYTES};
+pub use transport::{Frame, FrameError, FrameKind, Payload, FRAME_HEADER_BYTES};

@@ -127,9 +127,14 @@ impl HaloInbox {
         HaloInbox { pending: vec![Vec::new(); rounds] }
     }
 
-    /// Bank a row for whichever round it belongs to.
+    /// Bank a row for whichever round it belongs to. A round beyond the
+    /// inbox's horizon (e.g. a control value that escaped the caller's
+    /// poison check) is ignored rather than panicking the worker thread —
+    /// no real gather ever reads such a round.
     pub fn stash(&mut self, msg: RowMsg) {
-        self.pending[msg.round].push((msg.hi, msg.row));
+        if let Some(bank) = self.pending.get_mut(msg.round) {
+            bank.push((msg.hi, msg.row));
+        }
     }
 
     /// Drain everything banked for `round` (arrivals while the worker was
@@ -223,6 +228,14 @@ mod tests {
         assert_eq!(inbox.buffered(), 0);
         // A second take is empty (drained).
         assert!(inbox.take(2).is_empty());
+    }
+
+    #[test]
+    fn inbox_ignores_out_of_range_round() {
+        let mut inbox = HaloInbox::new(2);
+        inbox.stash(RowMsg { round: usize::MAX, hi: 0, row: vec![1.0] });
+        inbox.stash(RowMsg { round: 2, hi: 0, row: vec![1.0] });
+        assert_eq!(inbox.buffered(), 0);
     }
 
     #[test]

@@ -14,12 +14,99 @@
 //! machine reproduces the owner's dequantized row bit-for-bit. That is
 //! what lets the multi-machine execution path keep the PR 2 guarantee —
 //! threaded ≡ sequential ≡ single-wire numerics.
+//!
+//! Framing is also *checked*: the header carries an IEEE CRC-32 over the
+//! rest of the frame, and [`Frame::decode`] returns a typed
+//! [`FrameError`] — a flipped bit anywhere in the frame surfaces as
+//! [`FrameError::Checksum`] instead of silently corrupting a halo row.
+//! The CRC lives in what used to be the reserved header bytes, so wire
+//! sizes (and every byte-accounting gate built on them) are unchanged.
 
-use anyhow::{anyhow, Result};
+use std::fmt;
 
 /// Fixed wire header per frame: kind (1) + payload tag (1) + layer (2,
-/// LE u16) + id (4, LE u32) + element count (4, LE u32) + reserved (4).
+/// LE u16) + id (4, LE u32) + element count (4, LE u32) + CRC-32 of the
+/// rest of the frame (4, LE u32).
 pub const FRAME_HEADER_BYTES: u64 = 16;
+
+/// Why a byte buffer failed to decode as a [`Frame`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Fewer bytes than the fixed header.
+    Truncated {
+        /// Bytes actually present.
+        got: usize,
+    },
+    /// Unknown [`FrameKind`] tag byte.
+    BadKind(u8),
+    /// Unknown payload tag byte.
+    BadPayloadTag(u8),
+    /// Payload byte count disagrees with the header's element count.
+    SizeMismatch {
+        /// Payload bytes present after the header.
+        got: usize,
+        /// Payload bytes the header's element count implies.
+        want: usize,
+    },
+    /// Stored CRC-32 does not match the frame contents.
+    Checksum {
+        /// CRC stored in the header.
+        stored: u32,
+        /// CRC computed over the received bytes.
+        computed: u32,
+    },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated { got } => {
+                write!(f, "frame truncated: {got} header bytes")
+            }
+            FrameError::BadKind(t) => write!(f, "unknown frame kind tag {t}"),
+            FrameError::BadPayloadTag(t) => write!(f, "unknown payload tag {t}"),
+            FrameError::SizeMismatch { got, want } => {
+                write!(f, "payload size {got} != {want}")
+            }
+            FrameError::Checksum { stored, computed } => {
+                write!(
+                    f,
+                    "frame checksum mismatch: stored {stored:08x}, computed {computed:08x}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Reflected IEEE polynomial (Ethernet/zip CRC-32).
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 over the concatenation of `parts`.
+fn crc32(parts: &[&[u8]]) -> u32 {
+    let mut c = !0u32;
+    for part in parts {
+        for &b in *part {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
 
 /// What a frame carries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,11 +126,11 @@ impl FrameKind {
         }
     }
 
-    fn from_tag(t: u8) -> Result<FrameKind> {
+    fn from_tag(t: u8) -> Result<FrameKind, FrameError> {
         match t {
             0 => Ok(FrameKind::HaloRow),
             1 => Ok(FrameKind::GradChunk),
-            other => Err(anyhow!("unknown frame kind tag {other}")),
+            other => Err(FrameError::BadKind(other)),
         }
     }
 }
@@ -146,7 +233,7 @@ impl Frame {
         out.extend_from_slice(&(self.layer as u16).to_le_bytes());
         out.extend_from_slice(&self.id.to_le_bytes());
         out.extend_from_slice(&n.to_le_bytes());
-        out.extend_from_slice(&[0u8; 4]);
+        out.extend_from_slice(&[0u8; 4]); // CRC placeholder
         match &self.payload {
             Payload::F32(v) => {
                 for x in v {
@@ -159,19 +246,28 @@ impl Frame {
                 out.extend_from_slice(codes);
             }
         }
+        let crc = crc32(&[&out[..12], &out[16..]]);
+        out[12..16].copy_from_slice(&crc.to_le_bytes());
         out
     }
 
-    /// Decode wire bytes produced by [`Frame::encode`].
-    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+    /// Decode wire bytes produced by [`Frame::encode`], verifying the
+    /// header CRC-32 first — any single flipped bit in header or payload
+    /// yields [`FrameError::Checksum`].
+    pub fn decode(bytes: &[u8]) -> Result<Frame, FrameError> {
         if bytes.len() < FRAME_HEADER_BYTES as usize {
-            return Err(anyhow!("frame truncated: {} header bytes", bytes.len()));
+            return Err(FrameError::Truncated { got: bytes.len() });
+        }
+        let stored = u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]);
+        let computed = crc32(&[&bytes[..12], &bytes[16..]]);
+        if stored != computed {
+            return Err(FrameError::Checksum { stored, computed });
         }
         let kind = FrameKind::from_tag(bytes[0])?;
         let q8 = match bytes[1] {
             0 => false,
             1 => true,
-            other => return Err(anyhow!("unknown payload tag {other}")),
+            other => return Err(FrameError::BadPayloadTag(other)),
         };
         let layer = u16::from_le_bytes([bytes[2], bytes[3]]) as u32;
         let id = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
@@ -179,14 +275,14 @@ impl Frame {
         let body = &bytes[FRAME_HEADER_BYTES as usize..];
         let payload = if q8 {
             if body.len() != 8 + n {
-                return Err(anyhow!("q8 payload size {} != {}", body.len(), 8 + n));
+                return Err(FrameError::SizeMismatch { got: body.len(), want: 8 + n });
             }
             let lo = f32::from_le_bytes([body[0], body[1], body[2], body[3]]);
             let scale = f32::from_le_bytes([body[4], body[5], body[6], body[7]]);
             Payload::Q8 { lo, scale, codes: body[8..].to_vec() }
         } else {
             if body.len() != n * 4 {
-                return Err(anyhow!("f32 payload size {} != {}", body.len(), n * 4));
+                return Err(FrameError::SizeMismatch { got: body.len(), want: n * 4 });
             }
             let mut v = Vec::with_capacity(n);
             for c in body.chunks_exact(4) {
@@ -272,5 +368,46 @@ mod tests {
         let mut good = Frame::halo_row(0, 0, Payload::F32(vec![1.0])).encode();
         good.pop(); // truncate payload
         assert!(Frame::decode(&good).is_err());
+    }
+
+    #[test]
+    fn checksum_catches_any_single_flipped_bit() {
+        let f = Frame::halo_row(3, 41, Payload::F32(vec![1.0, -2.5, 0.125]));
+        let clean = f.encode();
+        assert_eq!(Frame::decode(&clean).unwrap(), f);
+        for byte in 0..clean.len() {
+            for bit in 0..8 {
+                let mut bad = clean.clone();
+                bad[byte] ^= 1 << bit;
+                let err = Frame::decode(&bad).unwrap_err();
+                // A flip inside the stored CRC itself also lands here:
+                // the stored value no longer matches the computed one.
+                assert!(
+                    matches!(err, FrameError::Checksum { .. }),
+                    "byte {byte} bit {bit}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn typed_errors_name_the_failure() {
+        assert_eq!(Frame::decode(&[1, 2, 3]).unwrap_err(), FrameError::Truncated { got: 3 });
+        // Hand-build a frame with a bad kind tag but a *valid* CRC, to
+        // prove the structural checks still run behind the checksum.
+        let mut bytes = Frame::halo_row(0, 0, Payload::F32(vec![])).encode();
+        bytes[0] = 7;
+        let crc = crc32(&[&bytes[..12], &bytes[16..]]);
+        bytes[12..16].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(Frame::decode(&bytes).unwrap_err(), FrameError::BadKind(7));
+        let msg = FrameError::Checksum { stored: 1, computed: 2 }.to_string();
+        assert!(msg.contains("checksum"), "{msg}");
+    }
+
+    #[test]
+    fn crc_is_standard_ieee() {
+        // Known-answer test: CRC-32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
     }
 }

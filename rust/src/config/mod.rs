@@ -5,16 +5,20 @@ use crate::baselines::System;
 use crate::cache::PolicyKind;
 use crate::device::profile::{Gpu, GpuGroup};
 use crate::device::topology::Topology;
+use crate::fault::FaultPlan;
 use crate::graph::{Dataset, DatasetSource};
 use crate::model::{ModelKind, TrainedModel};
 use crate::partition::Method;
 use crate::runtime::BackendKind;
 use crate::sample::Fanout;
 use crate::serve::{Pacing, ServeConfig, WorkloadConfig};
-use crate::train::{CapacityMode, ExecMode, StrategyKind, TrainConfig, TrainMode};
+use crate::train::{
+    CapacityMode, ExecMode, RunOptions, StrategyKind, TrainConfig, TrainMode,
+};
 use crate::util::{Args, Rng};
 use anyhow::{anyhow, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Options that only the serving path reads; train modes reject them so
 /// a typo'd invocation fails loudly instead of silently ignoring knobs.
@@ -29,6 +33,8 @@ const SERVE_ONLY_OPTS: &[&str] = &[
     "serve-cache",
     "prepopulate",
     "hot-ranks",
+    "max-queue",
+    "deadline-us",
 ];
 
 /// Options that only training reads; `capgnn serve` rejects them.
@@ -52,6 +58,10 @@ const TRAIN_ONLY_OPTS: &[&str] = &[
     "save-model",
     "strategy",
     "replication",
+    "max-retries",
+    "checkpoint",
+    "checkpoint-every",
+    "resume",
 ];
 
 /// Boolean flags that only training reads; `capgnn serve` rejects them.
@@ -73,6 +83,10 @@ pub struct RunSpec {
     pub backend: BackendKind,
     /// Baseline system whose policy preset seeds `train`.
     pub system: System,
+    /// Run-level options (retry budget, checkpoint/resume) for
+    /// [`crate::train::run_with`]; early stopping is merged in by the
+    /// caller.
+    pub options: RunOptions,
 }
 
 /// Parse a [`RunSpec`] from CLI options. Recognized options:
@@ -81,7 +95,9 @@ pub struct RunSpec {
 ///  --backend xla|native --scale 1.0 --seed 42 --local-cap N
 ///  --global-cap N --no-pipe --refresh 8 --lr 0.02 --hidden 64
 ///  --layers 3 --mode full|sampled --batch-size 64 --fanout 10,5
-///  --strategy halo|1.5d --replication 2`
+///  --strategy halo|1.5d --replication 2 --fault seed=1,corrupt=0.01
+///  --max-retries 2 --checkpoint ck.cgk --checkpoint-every 10
+///  --resume ck.cgk`
 ///
 /// `--dataset` goes through the [`DatasetSource`] registry, so every
 /// consumer of the spec accepts a synthetic twin and an ingested on-disk
@@ -256,13 +272,54 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
         };
     }
 
+    // `--fault` arms the deterministic fault-injection harness; the spec
+    // grammar has its own typed parse errors, surfaced verbatim.
+    if let Some(spec) = args.get("fault") {
+        train.fault =
+            Some(Arc::new(FaultPlan::parse(spec).map_err(|e| anyhow!("bad --fault: {e}"))?));
+    }
+
+    // Fault-tolerance run options. Checkpointing is full-batch-only (a
+    // sampled epoch is not a resumable unit), so in sampled mode the
+    // knobs are dead and error out like --batch-size does above.
+    if train.mode == TrainMode::Sampled {
+        for k in ["checkpoint", "checkpoint-every", "resume"] {
+            if args.get(k).is_some() {
+                return Err(anyhow!(
+                    "--{k} only applies to full-batch training; drop --mode sampled"
+                ));
+            }
+        }
+    }
+    let mut options = RunOptions {
+        max_retries: args.usize_or("max-retries", 0),
+        checkpoint_path: args.get("checkpoint").map(str::to_string),
+        resume: args.get("resume").map(str::to_string),
+        ..RunOptions::default()
+    };
+    options.checkpoint_every = match args.get("checkpoint-every") {
+        // A bare --checkpoint <path> snapshots every epoch.
+        None => options.checkpoint_path.as_ref().map(|_| 1),
+        Some(v) => {
+            if options.checkpoint_path.is_none() {
+                return Err(anyhow!("--checkpoint-every requires --checkpoint <path>"));
+            }
+            Some(
+                v.parse()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| anyhow!("bad --checkpoint-every {v} (want an integer >= 1)"))?,
+            )
+        }
+    };
+
     let backend = match args.get_or("backend", "native").as_str() {
         "xla" => BackendKind::Xla,
         "native" => BackendKind::Native,
         other => return Err(anyhow!("unknown backend {other}")),
     };
 
-    Ok(RunSpec { dataset, source, gpus, topology, train, backend, system })
+    Ok(RunSpec { dataset, source, gpus, topology, train, backend, system, options })
 }
 
 /// Everything needed to launch one serving run.
@@ -287,6 +344,7 @@ pub struct ServeSpec {
 /// `--model model.cgm --dataset rt|file:<graph.cgr> --scale 1.0
 ///  --seed 42 --fanout 10,5 --serve-cache 1024 --prepopulate 512
 ///  --max-batch 32 --max-wait-us 1000 --serve-workers 2
+///  --max-queue 0 --deadline-us 0 --fault seed=1,panic=0.01
 ///  --requests 2000 --zipf 1.1 --hot-ranks 1024 --qps 500|--closed 16`
 ///
 /// Training-only options (`--epochs`, `--lr`, `--mode`, …) are rejected
@@ -328,6 +386,15 @@ pub fn serve_spec(args: &Args) -> Result<ServeSpec> {
     serve.max_batch = args.usize_or("max-batch", 32);
     serve.max_wait_us = args.u64_or("max-wait-us", 1000);
     serve.workers = args.usize_or("serve-workers", 2);
+    // Degradation knobs (0 = off): admission-control queue bound and
+    // per-request staleness deadline; `--fault` arms injection exactly
+    // as it does for training.
+    serve.max_queue = args.usize_or("max-queue", 0);
+    serve.deadline_us = args.u64_or("deadline-us", 0);
+    if let Some(spec) = args.get("fault") {
+        serve.fault =
+            Some(Arc::new(FaultPlan::parse(spec).map_err(|e| anyhow!("bad --fault: {e}"))?));
+    }
     if let Some(v) = args.get("fanout") {
         let f = Fanout::parse(v).map_err(|e| anyhow!("bad --fanout: {e}"))?;
         if f.0.len() != model.layers() {
@@ -533,6 +600,93 @@ mod tests {
     }
 
     #[test]
+    fn fault_spec_parses_into_train_config() {
+        let spec = run_spec(&args(&[
+            "--scale", "0.1", "--fault", "seed=9,corrupt=0.25,panic=0.01",
+        ]))
+        .unwrap();
+        let fp = spec.train.fault.expect("--fault should arm a plan");
+        assert_eq!(fp.spec().seed, 9);
+        assert_eq!(fp.spec().corrupt, 0.25);
+        assert_eq!(fp.spec().panic, 0.01);
+        // No --fault → clean run, no plan allocated.
+        assert!(run_spec(&args(&["--scale", "0.1"])).unwrap().train.fault.is_none());
+    }
+
+    #[test]
+    fn fault_spec_errors_are_typed_and_named() {
+        for (bad, needle) in [
+            ("seed=1,bogus=0.5", "bogus"),
+            ("corrupt=notanum", "corrupt"),
+            ("drop=1.5", "drop"),
+            ("seed", "seed"),
+        ] {
+            let err = run_spec(&args(&["--scale", "0.1", "--fault", bad]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("bad --fault"), "no --fault prefix: {err}");
+            assert!(err.contains(needle), "error does not name the culprit: {err}");
+        }
+    }
+
+    #[test]
+    fn retry_and_checkpoint_knobs_parse() {
+        let spec = run_spec(&args(&[
+            "--scale", "0.1", "--max-retries", "3", "--checkpoint", "ck.cgk",
+            "--checkpoint-every", "5",
+        ]))
+        .unwrap();
+        assert_eq!(spec.options.max_retries, 3);
+        assert_eq!(spec.options.checkpoint_path.as_deref(), Some("ck.cgk"));
+        assert_eq!(spec.options.checkpoint_every, Some(5));
+        assert!(spec.options.resume.is_none());
+        // A bare --checkpoint snapshots every epoch.
+        let bare = run_spec(&args(&["--scale", "0.1", "--checkpoint", "ck.cgk"])).unwrap();
+        assert_eq!(bare.options.checkpoint_every, Some(1));
+        // Defaults: no retries, no checkpointing.
+        let d = run_spec(&args(&["--scale", "0.1"])).unwrap();
+        assert_eq!(d.options.max_retries, 0);
+        assert!(d.options.checkpoint_every.is_none());
+        assert!(d.options.checkpoint_path.is_none());
+    }
+
+    #[test]
+    fn checkpoint_dead_knobs_rejected() {
+        // --checkpoint-every without a destination path is dead.
+        let err = run_spec(&args(&["--scale", "0.1", "--checkpoint-every", "5"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--checkpoint <path>"), "unhelpful error: {err}");
+        // Zero/garbage intervals are rejected.
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--checkpoint", "ck.cgk", "--checkpoint-every", "0",
+        ]))
+        .is_err());
+        // Checkpoint/resume is full-batch only: dead in sampled mode.
+        for k in ["--checkpoint", "--resume"] {
+            let err = run_spec(&args(&["--scale", "0.1", "--mode", "sampled", k, "x.cgk"]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("full-batch"), "unhelpful error: {err}");
+        }
+        // Serving rejects all the training fault-tolerance knobs.
+        for bad in [
+            vec!["--max-retries", "2"],
+            vec!["--checkpoint", "x.cgk"],
+            vec!["--checkpoint-every", "5"],
+            vec!["--resume", "x.cgk"],
+        ] {
+            let err = serve_spec(&args(&bad)).unwrap_err().to_string();
+            assert!(err.contains("train"), "unhelpful error: {err}");
+        }
+        // And training rejects the serving degradation knobs.
+        for bad in [vec!["--max-queue", "8"], vec!["--deadline-us", "100"]] {
+            let err = run_spec(&args(&bad)).unwrap_err().to_string();
+            assert!(err.contains("serve"), "unhelpful error: {err}");
+        }
+    }
+
+    #[test]
     fn fixed_capacity() {
         let spec = run_spec(&args(&[
             "--scale", "0.1", "--local-cap", "100", "--global-cap", "400",
@@ -609,13 +763,17 @@ mod tests {
         let spec = serve_spec(&args(&[
             "--dataset", "rt", "--scale", "0.05", "--model", p,
             "--serve-cache", "64", "--max-batch", "8", "--qps", "500",
-            "--fanout", "4,4", "--requests", "100",
+            "--fanout", "4,4", "--requests", "100", "--max-queue", "16",
+            "--deadline-us", "2000", "--fault", "seed=5,panic=0.5",
         ]))
         .unwrap();
         assert_eq!(spec.serve.cache_capacity, 64);
         assert_eq!(spec.serve.prepopulate, 32, "defaults to half the cache");
         assert_eq!(spec.serve.max_batch, 8);
         assert_eq!(spec.serve.fanout.0, vec![4, 4]);
+        assert_eq!(spec.serve.max_queue, 16);
+        assert_eq!(spec.serve.deadline_us, 2000);
+        assert_eq!(spec.serve.fault.as_ref().map(|f| f.spec().seed), Some(5));
         assert_eq!(spec.workload.requests, 100);
         assert!(matches!(spec.pacing, Pacing::Open { qps } if qps == 500.0));
         assert_eq!(spec.model.layers(), 2);

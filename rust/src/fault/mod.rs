@@ -1,0 +1,498 @@
+//! Deterministic fault injection (the PR 9 robustness harness).
+//!
+//! A [`FaultPlan`] decides — reproducibly, from a seed — which frames
+//! get corrupted, dropped or delayed at the transport boundary, which
+//! workers see a transient backend error, and which panic mid-epoch.
+//! Decisions are keyed by `(seed, domain, epoch, worker, serial)` with
+//! the same domain-tagged RNG discipline as the quantization stream in
+//! [`crate::train::strategy`]: the verdict for a given frame depends
+//! neither on thread interleaving nor on which executor runs, so a
+//! faulted run is exactly as reproducible as a clean one.
+//!
+//! Faults are *transient* by default: they fire only on the first
+//! transmission attempt of a frame (or the first attempt of an epoch),
+//! so the bounded link-layer retry in [`send_bytes`] and the epoch-level
+//! retry budget always recover, and the recovered run must be
+//! bit-identical to an unfaulted one — the acceptance bar the chaos
+//! tests enforce. `sticky=1` makes decisions attempt-independent
+//! instead, which is how the tests exercise retry-budget exhaustion.
+
+use crate::comm::transport::{Frame, FrameError};
+use crate::util::rng::Rng;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Transmission attempts the simulated link layer makes per frame
+/// before giving up (first try + 3 retransmissions).
+pub const FRAME_TRIES: u32 = 4;
+
+/// Simulated backoff charged per retransmission, doubled per try.
+pub const BACKOFF_BASE_NS: u64 = 100_000;
+
+/// Simulated in-flight delay charged by a delay fault.
+pub const DELAY_NS: u64 = 250_000;
+
+// Domain tags keep the per-fault-kind streams independent.
+const D_CORRUPT: u64 = 0x6672_616D_655F_6331;
+const D_DROP: u64 = 0x6672_616D_655F_6432;
+const D_DELAY: u64 = 0x6672_616D_655F_6C33;
+const D_BACKEND: u64 = 0x6261_636B_656E_6434;
+const D_PANIC: u64 = 0x7061_6E69_635F_7735;
+
+/// Why a `--fault` spec string failed to parse.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultSpecError {
+    /// The spec was empty.
+    Empty,
+    /// A `key=value` pair had no `=`.
+    MissingValue(String),
+    /// Unrecognized key.
+    UnknownKey(String),
+    /// Value failed to parse as the key's type.
+    BadValue {
+        /// Offending key.
+        key: String,
+        /// Offending value text.
+        value: String,
+    },
+    /// A probability was outside `[0, 1]`.
+    OutOfRange {
+        /// Offending key.
+        key: String,
+        /// Parsed value.
+        value: f64,
+    },
+}
+
+impl fmt::Display for FaultSpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultSpecError::Empty => write!(f, "empty fault spec"),
+            FaultSpecError::MissingValue(p) => {
+                write!(f, "fault spec entry '{p}' is not key=value")
+            }
+            FaultSpecError::UnknownKey(k) => write!(
+                f,
+                "unknown fault spec key '{k}' (expected seed, corrupt, drop, \
+                 delay, backend, panic, sticky)"
+            ),
+            FaultSpecError::BadValue { key, value } => {
+                write!(f, "fault spec {key}={value}: not a number")
+            }
+            FaultSpecError::OutOfRange { key, value } => {
+                write!(f, "fault spec {key}={value}: probability must be in [0, 1]")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultSpecError {}
+
+/// Parsed `--fault` specification: per-domain injection probabilities.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Seed of the fault decision streams (independent of the training
+    /// seed, so the same run can be replayed under different faults).
+    pub seed: u64,
+    /// Per-transmission probability of flipping one payload bit.
+    pub corrupt: f64,
+    /// Per-transmission probability of losing the frame.
+    pub drop: f64,
+    /// Per-transmission probability of a simclock-charged delay.
+    pub delay: f64,
+    /// Per-(epoch, worker) probability of a transient backend error.
+    pub backend: f64,
+    /// Per-(epoch, worker) probability of a worker panic.
+    pub panic: f64,
+    /// When true, decisions ignore the attempt counter: faults persist
+    /// across retries (tests the budget-exhaustion path).
+    pub sticky: bool,
+}
+
+impl FaultSpec {
+    /// Parse a comma-separated `key=value` spec, e.g.
+    /// `seed=7,corrupt=0.05,drop=0.02,panic=0.1`.
+    pub fn parse(spec: &str) -> Result<FaultSpec, FaultSpecError> {
+        if spec.trim().is_empty() {
+            return Err(FaultSpecError::Empty);
+        }
+        let mut out = FaultSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| FaultSpecError::MissingValue(part.to_string()))?;
+            let bad = || FaultSpecError::BadValue {
+                key: key.to_string(),
+                value: value.to_string(),
+            };
+            match key {
+                "seed" => out.seed = value.parse().map_err(|_| bad())?,
+                "sticky" => out.sticky = value.parse::<u8>().map_err(|_| bad())? != 0,
+                "corrupt" | "drop" | "delay" | "backend" | "panic" => {
+                    let p: f64 = value.parse().map_err(|_| bad())?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(FaultSpecError::OutOfRange {
+                            key: key.to_string(),
+                            value: p,
+                        });
+                    }
+                    match key {
+                        "corrupt" => out.corrupt = p,
+                        "drop" => out.drop = p,
+                        "delay" => out.delay = p,
+                        "backend" => out.backend = p,
+                        _ => out.panic = p,
+                    }
+                }
+                other => return Err(FaultSpecError::UnknownKey(other.to_string())),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// What the plan does to one frame transmission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameFault {
+    /// Deliver unchanged.
+    None,
+    /// Flip one bit in flight (caught by the receiver's CRC).
+    Corrupt,
+    /// Lose the frame (the sender times out waiting for the ACK).
+    Drop,
+    /// Deliver after a charged delay.
+    Delay(u64),
+}
+
+/// Cumulative injection/recovery counters (one snapshot, plain values).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Frames corrupted in flight.
+    pub corrupted: u64,
+    /// Frames dropped in flight.
+    pub dropped: u64,
+    /// Frames delayed in flight.
+    pub delayed: u64,
+    /// Transient backend errors injected.
+    pub backend_errs: u64,
+    /// Worker panics injected.
+    pub panics: u64,
+    /// Link-layer retransmissions performed.
+    pub retries: u64,
+    /// Simulated backoff + delay nanoseconds charged.
+    pub backoff_ns: u64,
+}
+
+/// A seeded, replayable fault schedule plus live counters. Shared
+/// read-only (`Arc`) across workers; counters are atomics so decision
+/// methods take `&self` and executor signatures stay unchanged.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    /// Current epoch attempt (0 = first try); set by the retry loop via
+    /// [`FaultPlan::begin_attempt`] so transient faults clear on retry.
+    attempt: AtomicU64,
+    corrupted: AtomicU64,
+    dropped: AtomicU64,
+    delayed: AtomicU64,
+    backend_errs: AtomicU64,
+    panics: AtomicU64,
+    retries: AtomicU64,
+    backoff_ns: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Plan executing `spec`.
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan { spec, ..FaultPlan::default() }
+    }
+
+    /// Parse-and-build convenience for the CLI path.
+    pub fn parse(spec: &str) -> Result<FaultPlan, FaultSpecError> {
+        Ok(FaultPlan::new(FaultSpec::parse(spec)?))
+    }
+
+    /// The spec this plan executes.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Mark the start of epoch attempt `k` (0 = first try). Transient
+    /// (non-sticky) epoch-scope faults fire only at attempt 0.
+    pub fn begin_attempt(&self, k: u64) {
+        self.attempt.store(k, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            corrupted: self.corrupted.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+            backend_errs: self.backend_errs.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            backoff_ns: self.backoff_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total injected faults of every kind.
+    pub fn total_injected(&self) -> u64 {
+        let c = self.counters();
+        c.corrupted + c.dropped + c.delayed + c.backend_errs + c.panics
+    }
+
+    fn fires(&self, domain: u64, p: f64, a: u64, b: u64, c: u64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(
+            self.spec.seed
+                ^ domain
+                ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ b.wrapping_mul(0xA24B_AED4_963E_E407)
+                ^ c.wrapping_mul(0xD6E8_FEB8_6659_FD93),
+        );
+        rng.chance(p)
+    }
+
+    /// Verdict for transmission try `xmit_try` of frame `serial` sent by
+    /// `worker` in `epoch`. At most one fault per transmission; drops
+    /// shadow corruption, corruption shadows delay.
+    pub fn frame_fault(&self, epoch: u64, worker: u64, serial: u64, xmit_try: u32) -> FrameFault {
+        if xmit_try > 0 && !self.spec.sticky {
+            return FrameFault::None;
+        }
+        if self.fires(D_DROP, self.spec.drop, epoch, worker, serial) {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Drop;
+        }
+        if self.fires(D_CORRUPT, self.spec.corrupt, epoch, worker, serial) {
+            self.corrupted.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Corrupt;
+        }
+        if self.fires(D_DELAY, self.spec.delay, epoch, worker, serial) {
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            self.backoff_ns.fetch_add(DELAY_NS, Ordering::Relaxed);
+            return FrameFault::Delay(DELAY_NS);
+        }
+        FrameFault::None
+    }
+
+    /// Whether `worker` sees a transient backend error in `epoch` (at
+    /// the current attempt).
+    pub fn backend_error(&self, epoch: u64, worker: u64) -> bool {
+        if self.attempt.load(Ordering::Relaxed) > 0 && !self.spec.sticky {
+            return false;
+        }
+        let hit = self.fires(D_BACKEND, self.spec.backend, epoch, worker, 0);
+        if hit {
+            self.backend_errs.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Whether `worker` panics in `epoch` (at the current attempt).
+    pub fn worker_panics(&self, epoch: u64, worker: u64) -> bool {
+        if self.attempt.load(Ordering::Relaxed) > 0 && !self.spec.sticky {
+            return false;
+        }
+        let hit = self.fires(D_PANIC, self.spec.panic, epoch, worker, 0);
+        if hit {
+            self.panics.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn charge_retry(&self, xmit_try: u32) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        self.backoff_ns
+            .fetch_add(BACKOFF_BASE_NS << xmit_try.min(10), Ordering::Relaxed);
+    }
+}
+
+/// Why a frame could not be delivered within the retry budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameSendError {
+    /// Every transmission attempt failed.
+    Exhausted {
+        /// Attempts made (= [`FRAME_TRIES`]).
+        tries: u32,
+        /// Receiver-side decode error of the last attempt; `None` if the
+        /// last attempt was a drop (ACK timeout).
+        last: Option<FrameError>,
+    },
+}
+
+impl fmt::Display for FrameSendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameSendError::Exhausted { tries, last: Some(e) } => {
+                write!(f, "frame undeliverable after {tries} tries: {e}")
+            }
+            FrameSendError::Exhausted { tries, last: None } => {
+                write!(f, "frame dropped on all {tries} tries (ACK timeout)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameSendError {}
+
+/// Simulated link layer with ARQ: encode `frame`, let `plan` decide the
+/// fate of each transmission, verify receiver-side (the CRC check +
+/// NACK), and retransmit with exponential backoff — up to
+/// [`FRAME_TRIES`] attempts. On success the *delivered* bytes are the
+/// clean encoding (a retransmission, not a repaired frame), so
+/// downstream numerics and byte accounting are bit-identical to an
+/// unfaulted run; only the charged backoff differs. With `plan: None`
+/// this is exactly the old `encode` + verify-decode round-trip.
+pub fn send_bytes(
+    plan: Option<&FaultPlan>,
+    frame: &Frame,
+    epoch: u64,
+    worker: u64,
+    serial: u64,
+) -> Result<Vec<u8>, FrameSendError> {
+    let clean = frame.encode();
+    let mut last: Option<FrameError> = None;
+    for xmit_try in 0..FRAME_TRIES {
+        if xmit_try > 0 {
+            if let Some(p) = plan {
+                p.charge_retry(xmit_try);
+            }
+        }
+        let fault = plan
+            .map(|p| p.frame_fault(epoch, worker, serial, xmit_try))
+            .unwrap_or(FrameFault::None);
+        let wire = match fault {
+            FrameFault::Drop => {
+                last = None;
+                continue;
+            }
+            FrameFault::Corrupt => {
+                let mut bad = clean.clone();
+                let idx = (serial as usize).wrapping_mul(31) % bad.len();
+                bad[idx] ^= 1 << ((epoch as u8 ^ serial as u8) & 7);
+                bad
+            }
+            FrameFault::Delay(_) | FrameFault::None => clean.clone(),
+        };
+        match Frame::decode(&wire) {
+            Ok(_) => return Ok(wire),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(FrameSendError::Exhausted { tries: FRAME_TRIES, last })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::Payload;
+
+    fn frame() -> Frame {
+        Frame::halo_row(1, 42, Payload::F32(vec![1.0, -2.0, 3.5]))
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let s = FaultSpec::parse("seed=7,corrupt=0.5,drop=0.25,sticky=1").unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.corrupt, 0.5);
+        assert_eq!(s.drop, 0.25);
+        assert!(s.sticky);
+        assert_eq!(FaultSpec::parse("").unwrap_err(), FaultSpecError::Empty);
+        assert_eq!(
+            FaultSpec::parse("corrupt").unwrap_err(),
+            FaultSpecError::MissingValue("corrupt".into())
+        );
+        assert_eq!(
+            FaultSpec::parse("bogus=1").unwrap_err(),
+            FaultSpecError::UnknownKey("bogus".into())
+        );
+        assert!(matches!(
+            FaultSpec::parse("drop=1.5").unwrap_err(),
+            FaultSpecError::OutOfRange { .. }
+        ));
+        assert!(matches!(
+            FaultSpec::parse("drop=abc").unwrap_err(),
+            FaultSpecError::BadValue { .. }
+        ));
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_transient() {
+        let p = FaultPlan::parse("seed=3,corrupt=0.5,drop=0.3,backend=0.5").unwrap();
+        let q = FaultPlan::parse("seed=3,corrupt=0.5,drop=0.3,backend=0.5").unwrap();
+        for e in 0..4u64 {
+            for w in 0..4u64 {
+                for s in 0..32u64 {
+                    assert_eq!(p.frame_fault(e, w, s, 0), q.frame_fault(e, w, s, 0));
+                    // Retransmissions are always clean (transient faults).
+                    assert_eq!(p.frame_fault(e, w, s, 1), FrameFault::None);
+                }
+                assert_eq!(p.backend_error(e, w), q.backend_error(e, w));
+            }
+        }
+        // Epoch retry (attempt > 0) clears epoch-scope faults.
+        p.begin_attempt(1);
+        for e in 0..4u64 {
+            for w in 0..4u64 {
+                assert!(!p.backend_error(e, w));
+                assert!(!p.worker_panics(e, w));
+            }
+        }
+    }
+
+    #[test]
+    fn arq_recovers_corruption_with_clean_delivery() {
+        let p = FaultPlan::parse("seed=1,corrupt=1.0").unwrap();
+        let f = frame();
+        let delivered = send_bytes(Some(&p), &f, 0, 0, 9).unwrap();
+        assert_eq!(delivered, f.encode(), "retransmission delivers clean bytes");
+        let c = p.counters();
+        assert_eq!(c.corrupted, 1, "only the first try is faulted");
+        assert_eq!(c.retries, 1);
+        assert!(c.backoff_ns >= BACKOFF_BASE_NS);
+        assert_eq!(Frame::decode(&delivered).unwrap(), f);
+    }
+
+    #[test]
+    fn arq_recovers_drops() {
+        let p = FaultPlan::parse("seed=2,drop=1.0").unwrap();
+        let delivered = send_bytes(Some(&p), &frame(), 3, 1, 0).unwrap();
+        assert_eq!(delivered, frame().encode());
+        assert_eq!(p.counters().dropped, 1);
+    }
+
+    #[test]
+    fn sticky_faults_exhaust_the_budget() {
+        let p = FaultPlan::parse("seed=2,drop=1.0,sticky=1").unwrap();
+        let err = send_bytes(Some(&p), &frame(), 0, 0, 0).unwrap_err();
+        assert_eq!(err, FrameSendError::Exhausted { tries: FRAME_TRIES, last: None });
+        assert_eq!(p.counters().dropped, FRAME_TRIES as u64);
+        let msg = err.to_string();
+        assert!(msg.contains("dropped"), "{msg}");
+    }
+
+    #[test]
+    fn no_plan_is_a_clean_roundtrip() {
+        let f = frame();
+        let bytes = send_bytes(None, &f, 0, 0, 0).unwrap();
+        assert_eq!(Frame::decode(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn delay_charges_time_but_delivers_first_try() {
+        let p = FaultPlan::parse("seed=5,delay=1.0").unwrap();
+        let f = frame();
+        let bytes = send_bytes(Some(&p), &f, 0, 0, 0).unwrap();
+        assert_eq!(bytes, f.encode());
+        let c = p.counters();
+        assert_eq!(c.delayed, 1);
+        assert_eq!(c.retries, 0);
+        assert_eq!(c.backoff_ns, DELAY_NS);
+    }
+}

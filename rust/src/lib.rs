@@ -119,6 +119,7 @@ pub mod config;
 pub mod device;
 pub mod dist;
 pub mod expt;
+pub mod fault;
 pub mod graph;
 pub mod model;
 pub mod partition;

@@ -96,7 +96,22 @@ COMMANDS:
                                  serves C consecutive workers per machine
                                  (requires --strategy 1.5d)
               --save-model M.cgm write the trained weights as a versioned
-                                 artifact for `capgnn serve`]
+                                 artifact for `capgnn serve`
+              --fault SPEC       deterministic fault injection, e.g.
+                                 seed=7,corrupt=0.05,drop=0.02,delay=0.01,
+                                 backend=0.05,panic=0.05,sticky=1 (faults
+                                 are transient unless sticky; recovered
+                                 runs stay bit-identical to clean ones)
+              --max-retries K    re-run a failed epoch up to K extra
+                                 times (default 0 = first failure aborts)
+              --checkpoint C.cgk write a resumable checkpoint artifact
+                                 (full-batch only)
+              --checkpoint-every N   snapshot cadence in epochs (default
+                                 1 when --checkpoint is set)
+              --resume C.cgk     continue a checkpointed run; the
+                                 config/dataset fingerprint must match,
+                                 and the result is bit-identical to an
+                                 uninterrupted run]
   serve      --model m.cgm      trained artifact (from train --save-model)
              --dataset rt|file:<path> --scale 1.0 --seed 42
              [--fanout 10,5     neighbors per layer (default 10 each;
@@ -112,6 +127,13 @@ COMMANDS:
               --hot-ranks N     distinct popular vertices (default 1024)
               --qps R | --closed C   open-loop rate or closed-loop
                                 outstanding requests (default closed 16)
+              --max-queue N     admission control: shed submissions once
+                                N requests are pending (default 0 = off)
+              --deadline-us N   expire requests older than N µs at
+                                pickup instead of computing them
+                                (default 0 = off)
+              --fault SPEC      inject worker panics (seed=S,panic=P);
+                                panicking workers are respawned in place
               --histogram       print the log2 latency histogram]
              Responses are bit-deterministic per vertex: same id, same
              output, regardless of batching, worker, or cache hits.
@@ -197,12 +219,15 @@ fn cmd_train(args: &Args) -> i32 {
         },
         None => None,
     };
+    if let Some(path) = &spec.options.resume {
+        println!("resuming from checkpoint {path}");
+    }
     let run = capgnn::train::run_with(
         &spec.dataset,
         &cluster,
         backend.as_mut(),
         &spec.train,
-        RunOptions { patience },
+        RunOptions { patience, ..spec.options.clone() },
     );
     match run {
         Ok(out) => {
@@ -265,6 +290,26 @@ fn cmd_train(args: &Args) -> i32 {
                     r.cross_bytes_moved,
                     r.cross_bytes_naive,
                     r.cross_savings() * 100.0,
+                );
+            }
+            if let Some(fp) = &spec.train.fault {
+                let c = fp.counters();
+                println!(
+                    "fault injection: {} corrupted, {} dropped, {} delayed frames | {} backend errors, {} worker panics | {} retransmissions, {:.3}ms simulated backoff",
+                    c.corrupted,
+                    c.dropped,
+                    c.delayed,
+                    c.backend_errs,
+                    c.panics,
+                    c.retries,
+                    c.backoff_ns as f64 / 1e6,
+                );
+            }
+            if let (Some(every), Some(path)) =
+                (spec.options.checkpoint_every, spec.options.checkpoint_path.as_deref())
+            {
+                println!(
+                    "checkpointing: every {every} epoch(s) -> {path} (resume with `capgnn train --resume {path}`)"
                 );
             }
             if let Some(path) = args.get("save-model") {
@@ -377,6 +422,12 @@ fn cmd_serve(args: &Args) -> i32 {
         srep.max_batch_seen,
         srep.worker_served,
     );
+    if srep.shed + srep.expired + srep.panics + srep.respawns > 0 {
+        println!(
+            "degradation: {} shed at admission, {} expired past deadline, {} worker panics ({} respawns)",
+            srep.shed, srep.expired, srep.panics, srep.respawns,
+        );
+    }
     if args.has_flag("histogram") {
         for b in &srep.latency_histogram {
             println!("  [{:>9} us, {:>9} us): {}", b.lo_us, b.hi_us, b.count);

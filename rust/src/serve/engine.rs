@@ -21,6 +21,7 @@
 //! worker counts are all unobservable in the responses.
 
 use crate::cache::{PolicyKind, ServeCache, ServeCacheStats};
+use crate::fault::FaultPlan;
 use crate::graph::{Dataset, Graph, NodeData};
 use crate::model::{GnnModel, TrainedModel};
 use crate::runtime::{Backend, NativeBackend};
@@ -30,10 +31,49 @@ use crate::serve::metrics::{LatencyBucket, LatencyStats, LatencySummary};
 use crate::train::sampled::forward_block;
 use anyhow::{anyhow, Result};
 use std::cmp::Reverse;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock a shared serving mutex, recovering the data if a previous holder
+/// panicked. Serving must degrade, never propagate poison: every critical
+/// section below (cache probe/admit, latency record, queue dequeue) leaves
+/// its structure consistent at each step, and injected worker panics fire
+/// *outside* lock scopes — so the poisoned data is always safe to reuse.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Typed degradation verdicts the server hands back instead of serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request: the pending queue already
+    /// holds `depth` requests against a `limit` ceiling. Back off and
+    /// retry — accepted requests are unaffected.
+    Overloaded {
+        /// Queued-but-unpicked requests at rejection time.
+        depth: usize,
+        /// The configured `max_queue` ceiling.
+        limit: usize,
+    },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { depth, limit } => write!(
+                f,
+                "server overloaded: {depth} requests queued (limit {limit}); retry later"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Serving knobs.
 #[derive(Clone, Debug)]
@@ -54,12 +94,26 @@ pub struct ServeConfig {
     /// Serve seed: keys per-vertex block extraction (see
     /// [`crate::sample::serve_rng`]).
     pub seed: u64,
+    /// Load-shedding ceiling: when this many requests are queued but not
+    /// yet picked up by a worker, [`ServerHandle::submit`] rejects with a
+    /// typed [`ServeError::Overloaded`] instead of growing the backlog
+    /// (0 = never shed).
+    pub max_queue: usize,
+    /// Per-request deadline in microseconds: a request already older
+    /// than this when a worker picks it up is expired (dropped, counted
+    /// in [`ServeReport::expired`]) rather than computed — stale answers
+    /// help nobody and starve fresh requests (0 = no deadline).
+    pub deadline_us: u64,
+    /// Deterministic fault schedule (PR 9): worker-panic injection keyed
+    /// by `(batch sequence, worker)`. `None` = clean serving.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl ServeConfig {
     /// Defaults for a model with `layers` GNN layers: batch 32, 1 ms
     /// deadline, 2 workers, fanout 10 per layer, 1024-row cache with the
-    /// 512 hottest vertices pre-populated.
+    /// 512 hottest vertices pre-populated; no shedding, no request
+    /// deadline, no faults.
     pub fn new(layers: usize) -> ServeConfig {
         ServeConfig {
             max_batch: 32,
@@ -69,6 +123,9 @@ impl ServeConfig {
             cache_capacity: 1024,
             prepopulate: 512,
             seed: 42,
+            max_queue: 0,
+            deadline_us: 0,
+            fault: None,
         }
     }
 
@@ -151,13 +208,18 @@ struct ServeState {
     model: TrainedModel,
     fanout: Fanout,
     seed: u64,
+    deadline_us: u64,
+    fault: Option<Arc<FaultPlan>>,
 }
 
-/// Shared mutable serving state (cache + latency recorder).
+/// Shared mutable serving state (cache + latency recorder + the live
+/// queue-depth gauge admission control sheds against).
 struct Shared {
     state: ServeState,
     cache: Mutex<ServeCache>,
     lat: Mutex<LatencyStats>,
+    /// Requests submitted but not yet picked up by a worker.
+    depth: AtomicUsize,
 }
 
 /// Per-worker counters, summed into the [`ServeReport`] at shutdown.
@@ -166,6 +228,9 @@ struct WorkerStats {
     served: u64,
     computed: u64,
     errors: u64,
+    expired: u64,
+    panics: u64,
+    respawns: u64,
 }
 
 /// One answered request.
@@ -198,6 +263,15 @@ pub struct ServeReport {
     pub computed: u64,
     /// Requests dropped by compute errors.
     pub compute_errors: u64,
+    /// Requests shed at admission ([`ServeError::Overloaded`]).
+    pub shed: u64,
+    /// Requests expired past their deadline before a worker reached them.
+    pub expired: u64,
+    /// Worker panics survived (isolated per batch; the panicking batch's
+    /// unanswered requests are lost, everything after is served).
+    pub panics: u64,
+    /// Workers respawned in place after a panic.
+    pub respawns: u64,
     /// Micro-batches emitted.
     pub batches: u64,
     /// Batches flushed at `max_batch`.
@@ -243,6 +317,8 @@ impl Server {
             model,
             fanout: cfg.fanout.clone(),
             seed: cfg.seed,
+            deadline_us: cfg.deadline_us,
+            fault: cfg.fault.clone(),
         };
 
         // Heat pass: pre-compute the highest-degree vertices so a
@@ -271,6 +347,7 @@ impl Server {
             state,
             cache: Mutex::new(cache),
             lat: Mutex::new(LatencyStats::new()),
+            depth: AtomicUsize::new(0),
         });
 
         let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -289,7 +366,8 @@ impl Server {
             let shared = Arc::clone(&shared);
             let queue = Arc::clone(&queue);
             let resp_tx = resp_tx.clone();
-            workers.push(std::thread::spawn(move || worker_loop(wid, shared, queue, resp_tx)));
+            workers
+                .push(std::thread::spawn(move || worker_supervisor(wid, shared, queue, resp_tx)));
         }
         drop(resp_tx); // workers hold the only senders now
 
@@ -300,34 +378,82 @@ impl Server {
             workers,
             shared,
             n_vertices,
+            max_queue: cfg.max_queue,
             next_id: 0,
             submitted: 0,
+            shed: 0,
             started: Instant::now(),
         })
     }
 }
 
-/// One worker: pull a batch, answer each request (cache probe, else
-/// recompute + admit), record latency, emit responses.
-fn worker_loop(
+/// Worker thread entry: run [`worker_loop`] inside a panic boundary and
+/// respawn it in place (fresh backend, same shared state) whenever it
+/// unwinds. A panic loses the unanswered remainder of the batch being
+/// processed — never the server: the thread, the queue, and every other
+/// worker keep serving, and the supervisor re-enters the loop
+/// immediately. Counters survive the unwind (monotone `u64` bumps only).
+fn worker_supervisor(
     wid: usize,
     shared: Arc<Shared>,
     queue: Arc<Mutex<Receiver<Batch>>>,
     resp_tx: Sender<Response>,
 ) -> WorkerStats {
-    let mut backend = NativeBackend::new();
     let mut stats = WorkerStats::default();
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(wid, &shared, &queue, &resp_tx, &mut stats)
+        }));
+        match run {
+            Ok(()) => return stats, // clean exit: channels closed
+            Err(_) => {
+                stats.panics += 1;
+                stats.respawns += 1;
+            }
+        }
+    }
+}
+
+/// One worker: pull a batch, answer each live request (cache probe, else
+/// recompute + admit), record latency, emit responses. Returns when the
+/// batcher has exited and the queue is drained, or when the response
+/// receiver is gone.
+fn worker_loop(
+    wid: usize,
+    shared: &Shared,
+    queue: &Mutex<Receiver<Batch>>,
+    resp_tx: &Sender<Response>,
+    stats: &mut WorkerStats,
+) {
+    let mut backend = NativeBackend::new();
     let st = &shared.state;
     loop {
         // Hold the queue lock only for the dequeue, not the compute.
-        let batch = match queue.lock().unwrap().recv() {
+        let batch = match lock_clean(queue).recv() {
             Ok(b) => b,
             Err(_) => break, // batcher exited and the queue drained
         };
+        // The whole batch has left the queue: retire its depth charge
+        // up front so a panic mid-batch can never leak admission slots.
+        shared.depth.fetch_sub(batch.requests.len(), Ordering::Relaxed);
         let seq = batch.seq;
+        if let Some(fp) = st.fault.as_deref() {
+            // Transient panics fire at most once per worker lifetime
+            // (sticky plans re-fire on the schedule every batch).
+            if (fp.spec().sticky || stats.panics == 0) && fp.worker_panics(seq, wid as u64) {
+                panic!("injected serve worker panic (batch {seq}, worker {wid})");
+            }
+        }
         for req in batch.requests {
+            let waited_us = req.enqueued.elapsed().as_micros() as u64;
+            if st.deadline_us > 0 && waited_us > st.deadline_us {
+                // Too stale to be useful: expire instead of computing,
+                // so a backlog spends workers on answerable requests.
+                stats.expired += 1;
+                continue;
+            }
             let cached: Option<Vec<f32>> = {
-                let mut c = shared.cache.lock().unwrap();
+                let mut c = lock_clean(&shared.cache);
                 c.lookup(req.vertex).map(|row| row.to_vec())
             };
             let (output, cache_hit) = match cached {
@@ -350,13 +476,13 @@ fn worker_loop(
                     };
                     stats.computed += 1;
                     let heat = (st.graph.degree(req.vertex) + 1).min(u32::MAX as usize) as u32;
-                    let mut c = shared.cache.lock().unwrap();
+                    let mut c = lock_clean(&shared.cache);
                     c.admit(req.vertex, heat, row.clone());
                     (row, false)
                 }
             };
             let latency_us = req.enqueued.elapsed().as_micros() as u64;
-            shared.lat.lock().unwrap().record(latency_us);
+            lock_clean(&shared.lat).record(latency_us);
             stats.served += 1;
             let resp = Response {
                 id: req.id,
@@ -368,11 +494,10 @@ fn worker_loop(
                 latency_us,
             };
             if resp_tx.send(resp).is_err() {
-                return stats; // receiver gone: stop serving
+                return; // receiver gone: stop serving
             }
         }
     }
-    stats
 }
 
 /// Live handle to a running server: submit requests, drain responses,
@@ -384,19 +509,31 @@ pub struct ServerHandle {
     workers: Vec<JoinHandle<WorkerStats>>,
     shared: Arc<Shared>,
     n_vertices: usize,
+    max_queue: usize,
     next_id: u64,
     submitted: u64,
+    shed: u64,
     started: Instant,
 }
 
 impl ServerHandle {
-    /// Enqueue a request for `vertex`; returns its request id.
+    /// Enqueue a request for `vertex`; returns its request id. Under a
+    /// `max_queue` ceiling, a full pending queue rejects the request
+    /// with a typed [`ServeError::Overloaded`] (downcastable from the
+    /// returned error) instead of letting the backlog grow unboundedly.
     pub fn submit(&mut self, vertex: u32) -> Result<u64> {
         if (vertex as usize) >= self.n_vertices {
             return Err(anyhow!(
                 "vertex {vertex} out of range (graph has {} vertices)",
                 self.n_vertices
             ));
+        }
+        if self.max_queue > 0 {
+            let depth = self.shared.depth.load(Ordering::Relaxed);
+            if depth >= self.max_queue {
+                self.shed += 1;
+                return Err(ServeError::Overloaded { depth, limit: self.max_queue }.into());
+            }
         }
         let id = self.next_id;
         let req = Request { id, vertex, enqueued: Instant::now() };
@@ -405,9 +542,20 @@ impl ServerHandle {
             .ok_or_else(|| anyhow!("server is shutting down"))?
             .send(req)
             .map_err(|_| anyhow!("request queue closed"))?;
+        self.shared.depth.fetch_add(1, Ordering::Relaxed);
         self.next_id += 1;
         self.submitted += 1;
         Ok(id)
+    }
+
+    /// Requests currently queued but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed at admission so far ([`ServeError::Overloaded`]).
+    pub fn shed(&self) -> u64 {
+        self.shed
     }
 
     /// Non-blocking response poll.
@@ -425,31 +573,46 @@ impl ServerHandle {
     /// still count (latency is recorded at the worker).
     pub fn shutdown(mut self) -> Result<ServeReport> {
         drop(self.req_tx.take());
-        let bstats: BatcherStats = self
-            .batcher
-            .take()
-            .expect("shutdown runs once")
-            .join()
-            .map_err(|_| anyhow!("batcher thread panicked"))?;
+        // Infallible take: `shutdown` consumes `self` and is the only
+        // taker (the Option exists so the drop above can run first). A
+        // panicked batcher degrades to empty batching stats rather than
+        // failing the whole report.
+        let bstats: BatcherStats = match self.batcher.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => BatcherStats::default(),
+        };
         let mut worker_served = Vec::with_capacity(self.workers.len());
         let mut computed = 0u64;
         let mut errors = 0u64;
         let mut responses = 0u64;
+        let mut expired = 0u64;
+        let mut panics = 0u64;
+        let mut respawns = 0u64;
         for h in self.workers.drain(..) {
-            let w = h.join().map_err(|_| anyhow!("worker thread panicked"))?;
+            // The supervisor catches every worker unwind, so join only
+            // fails on a panic *in the supervisor itself* — degrade to
+            // zeroed stats for that worker instead of losing the report.
+            let w = h.join().unwrap_or_default();
             worker_served.push(w.served);
             responses += w.served;
             computed += w.computed;
             errors += w.errors;
+            expired += w.expired;
+            panics += w.panics;
+            respawns += w.respawns;
         }
         let elapsed_s = self.started.elapsed().as_secs_f64();
-        let lat = self.shared.lat.lock().unwrap();
-        let cache = self.shared.cache.lock().unwrap();
+        let lat = lock_clean(&self.shared.lat);
+        let cache = lock_clean(&self.shared.cache);
         Ok(ServeReport {
             requests: self.submitted,
             responses,
             computed,
             compute_errors: errors,
+            shed: self.shed,
+            expired,
+            panics,
+            respawns,
             batches: bstats.batches,
             full_flushes: bstats.full_flushes,
             deadline_flushes: bstats.deadline_flushes,
@@ -519,6 +682,87 @@ mod tests {
             let (da, db) = (ds.graph.degree(a), ds.graph.degree(b));
             assert!(da > db || (da == db && a < b), "order broken at {a}->{b}");
         }
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_rejection() {
+        let ds = tiny_dataset(30, 5);
+        let tm = tiny_model(&ds.data, 6);
+        let mut cfg = ServeConfig::new(tm.layers());
+        cfg.fanout = tm_fanout(&tm);
+        cfg.prepopulate = 0;
+        // Nothing flushes during the test window: every accepted request
+        // stays queued, so the depth gauge is fully deterministic.
+        cfg.max_batch = 1024;
+        cfg.max_wait_us = 60_000_000;
+        cfg.max_queue = 4;
+        let mut h = Server::start(&ds, tm, &cfg).unwrap();
+        for v in 0..4 {
+            h.submit(v).unwrap();
+        }
+        assert_eq!(h.queue_depth(), 4);
+        let err = h.submit(9).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(&ServeError::Overloaded { depth, limit }) => {
+                assert_eq!(depth, 4);
+                assert_eq!(limit, 4);
+            }
+            other => panic!("expected a typed Overloaded rejection, got {other:?}"),
+        }
+        assert_eq!(h.shed(), 1);
+        // Shutdown drains the queue: the accepted requests are still
+        // answered, only the shed one is lost.
+        let rep = h.shutdown().unwrap();
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.requests, 4);
+        assert_eq!(rep.responses, 4);
+    }
+
+    #[test]
+    fn worker_panic_respawns_and_keeps_serving() {
+        let ds = tiny_dataset(30, 7);
+        let tm = tiny_model(&ds.data, 8);
+        let mut cfg = ServeConfig::new(tm.layers());
+        cfg.fanout = tm_fanout(&tm);
+        cfg.prepopulate = 0;
+        cfg.workers = 1;
+        cfg.max_batch = 1; // one request per batch: exactly one is lost
+        cfg.fault = Some(Arc::new(
+            crate::fault::FaultPlan::parse("seed=3,panic=1.0").unwrap(),
+        ));
+        let mut h = Server::start(&ds, tm, &cfg).unwrap();
+        for v in 0..5 {
+            h.submit(v).unwrap();
+        }
+        let rep = h.shutdown().unwrap();
+        // The transient panic fires on the worker's first batch only; the
+        // respawned worker answers everything after it.
+        assert_eq!(rep.panics, 1, "{rep:?}");
+        assert_eq!(rep.respawns, 1);
+        assert_eq!(rep.requests, 5);
+        assert_eq!(rep.responses, 4, "one batch lost to the panic, rest served");
+    }
+
+    #[test]
+    fn stale_requests_expire_instead_of_serving() {
+        let ds = tiny_dataset(30, 9);
+        let tm = tiny_model(&ds.data, 2);
+        let mut cfg = ServeConfig::new(tm.layers());
+        cfg.fanout = tm_fanout(&tm);
+        cfg.prepopulate = 0;
+        // Requests sit in the batcher (no flush before shutdown) while
+        // their 1 ms deadline lapses: every one is stale by pickup time.
+        cfg.max_batch = 1024;
+        cfg.max_wait_us = 60_000_000;
+        cfg.deadline_us = 1_000;
+        let mut h = Server::start(&ds, tm, &cfg).unwrap();
+        for v in 0..6 {
+            h.submit(v).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let rep = h.shutdown().unwrap();
+        assert_eq!(rep.expired, 6, "{rep:?}");
+        assert_eq!(rep.responses, 0);
     }
 
     #[test]

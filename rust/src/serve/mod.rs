@@ -42,6 +42,19 @@
 //! generates), popularity tracks degree, so the very first wave of hot
 //! requests already hits — and JACA's priority admission keeps one-off
 //! cold vertices from displacing the warmed head.
+//!
+//! # Graceful degradation (PR 9)
+//!
+//! The server sheds load instead of falling over. Admission control
+//! rejects submissions with a typed [`ServeError::Overloaded`] once
+//! `max_queue` requests are pending; requests older than `deadline_us`
+//! at pickup are expired (counted, not computed); and every worker runs
+//! inside a panic boundary — a panicking worker loses at most the
+//! remainder of its current micro-batch, is respawned in place with a
+//! fresh backend, and all shared mutexes recover from poisoning, so one
+//! bad request can never take the server down. The
+//! [`ServeReport`] carries `shed` / `expired` / `panics` / `respawns`
+//! counters for all of it.
 
 pub mod batcher;
 pub mod driver;
@@ -51,6 +64,7 @@ pub mod metrics;
 pub use batcher::{Batch, BatcherStats, Request};
 pub use driver::{run_driver, zipf_workload, DriverReport, Pacing, WorkloadConfig};
 pub use engine::{
-    hot_vertices, serve_output, Response, ServeConfig, ServeReport, Server, ServerHandle,
+    hot_vertices, serve_output, Response, ServeConfig, ServeError, ServeReport, Server,
+    ServerHandle,
 };
 pub use metrics::{LatencyBucket, LatencyStats, LatencySummary};

@@ -1,0 +1,697 @@
+//! Versioned `.cgk` training checkpoint (PR 9).
+//!
+//! A [`Checkpoint`] captures everything a full-batch
+//! [`Session`](crate::train::Session) needs to resume *bit-identically*:
+//! model weights, the accumulated [`TrainReport`] (losses and byte
+//! accounting continue exactly where they left off), the epoch counter,
+//! the complete two-level cache state ([`CacheSnapshot`] — replacement
+//! order, live JACA hints, stored rows with write epochs), per-worker
+//! historical halo embeddings, the one-shot refresh flag, and the
+//! early-stopping tracker ([`Patience`]). Everything else a session holds
+//! (partition plan, padded worker tensors, exchange engine) is rebuilt
+//! deterministically by `Session::build` from the same config + dataset,
+//! which is what the fingerprint check enforces.
+//!
+//! The on-disk format mirrors the `.cgm` discipline in
+//! [`crate::model::artifact`]: little-endian fields, a magic/version
+//! header, typed [`IoError`]s for every malformed input, trailing-byte
+//! rejection, and a bit-exact round-trip (floats travel as raw bits).
+//!
+//! # `.cgk` layout (version 1)
+//!
+//! | section | contents |
+//! |---------|----------|
+//! | header  | magic `"CGKF"`, version (u16), config/dataset fingerprint (u64) |
+//! | cursor  | epoch counter (u64), force-refresh flag (u8), patience (f32 bits + u64) |
+//! | model   | length-prefixed embedded `.cgm` artifact |
+//! | report  | every [`TrainReport`] field, vectors length-prefixed |
+//! | cache   | [`CacheSnapshot`]: per-level [`PolicyState`]s + stored rows + counters |
+//! | halo    | per-worker, per-layer historical halo rows |
+
+use crate::cache::twolevel::CacheSnapshot;
+use crate::cache::{PolicyState, TwoLevelStats};
+use crate::device::simclock::{StageTimes, WallStages};
+use crate::graph::io::IoError;
+use crate::model::TrainedModel;
+use crate::train::report::TrainReport;
+use crate::train::trainer::{Patience, TrainConfig};
+use std::io::Write;
+use std::path::Path;
+
+/// First four bytes of every `.cgk` file.
+pub const CGK_MAGIC: [u8; 4] = *b"CGKF";
+
+/// Newest `.cgk` format version this build writes and understands.
+pub const CGK_VERSION: u16 = 1;
+
+/// A full-batch training run frozen at an epoch boundary.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// FNV-1a digest of the numerics-relevant config + dataset shape
+    /// (see [`fingerprint`]); resume refuses a mismatch.
+    pub fingerprint: u64,
+    /// Epochs completed when the checkpoint was taken (resume runs
+    /// epochs `epoch..cfg.epochs`).
+    pub epoch: u64,
+    /// Pending one-shot cache refresh (`Session::request_refresh`).
+    pub force_refresh: bool,
+    /// Early-stopping tracker, so a resumed run stops on exactly the
+    /// epoch an uninterrupted one would.
+    pub patience: Patience,
+    /// The weights at the boundary, as a `.cgm`-shaped artifact.
+    pub model: TrainedModel,
+    /// The report accumulated so far (losses, times, byte accounting).
+    pub report: TrainReport,
+    /// Complete two-level cache state.
+    pub cache: CacheSnapshot,
+    /// `halo_hist[worker][layer]`: historical halo embeddings (the
+    /// bounded-staleness state `skip_exchange`/refresh modes read).
+    pub halo_hist: Vec<Vec<Vec<f32>>>,
+}
+
+impl Checkpoint {
+    /// Serialize to the `.cgk` byte layout (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&CGK_MAGIC);
+        out.extend_from_slice(&CGK_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.push(self.force_refresh as u8);
+        out.extend_from_slice(&self.patience.best.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.patience.since_best.to_le_bytes());
+        let model = self.model.to_bytes();
+        out.extend_from_slice(&(model.len() as u64).to_le_bytes());
+        out.extend_from_slice(&model);
+        put_report(&mut out, &self.report);
+        put_snapshot(&mut out, &self.cache);
+        put_u32(&mut out, self.halo_hist.len());
+        for worker in &self.halo_hist {
+            put_u32(&mut out, worker.len());
+            for layer in worker {
+                put_f32s(&mut out, layer);
+            }
+        }
+        out
+    }
+
+    /// Write the checkpoint to `path` (`capgnn train --checkpoint`).
+    pub fn save(&self, path: &Path) -> Result<(), IoError> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&self.to_bytes())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read a checkpoint back; bit-exact inverse of [`Checkpoint::save`].
+    pub fn load(path: &Path) -> Result<Checkpoint, IoError> {
+        Checkpoint::from_bytes(&std::fs::read(path)?)
+    }
+
+    /// Parse the `.cgk` byte layout, validating the header and the exact
+    /// byte length (trailing bytes are [`IoError::Corrupt`]).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, IoError> {
+        let mut c = Cur { bytes, pos: 0 };
+        let magic = c.take(4, "magic")?;
+        if magic != CGK_MAGIC {
+            return Err(IoError::BadMagic { found: [magic[0], magic[1], magic[2], magic[3]] });
+        }
+        let version = c.u16("version")?;
+        if version == 0 || version > CGK_VERSION {
+            return Err(IoError::UnsupportedVersion(version));
+        }
+        let fingerprint = c.u64("fingerprint")?;
+        let epoch = c.u64("epoch")?;
+        let force_refresh = match c.u8("force_refresh")? {
+            0 => false,
+            1 => true,
+            b => return Err(IoError::Corrupt(format!("bad force_refresh byte {b}"))),
+        };
+        let patience = Patience {
+            best: f32::from_bits(c.u32("patience")?),
+            since_best: c.u64("patience")?,
+        };
+        let model_len = c.u64("model length")? as usize;
+        let model = TrainedModel::from_bytes(c.take(model_len, "embedded model")?)?;
+        let report = get_report(&mut c)?;
+        let cache = get_snapshot(&mut c)?;
+        let workers = c.u32("halo_hist")? as usize;
+        let mut halo_hist = Vec::with_capacity(workers.min(1 << 16));
+        for _ in 0..workers {
+            let layers = c.u32("halo_hist")? as usize;
+            let mut w = Vec::with_capacity(layers.min(1 << 16));
+            for _ in 0..layers {
+                w.push(c.f32_vec("halo_hist")?);
+            }
+            halo_hist.push(w);
+        }
+        if c.pos != bytes.len() {
+            return Err(IoError::Corrupt(format!(
+                "{} trailing bytes after the checkpoint",
+                bytes.len() - c.pos
+            )));
+        }
+        Ok(Checkpoint {
+            fingerprint,
+            epoch,
+            force_refresh,
+            patience,
+            model,
+            report,
+            cache,
+            halo_hist,
+        })
+    }
+}
+
+/// FNV-1a digest of every numerics-relevant [`TrainConfig`] field plus
+/// the dataset/cluster shape. Two runs with equal fingerprints build
+/// bit-identical sessions, so resuming across them is sound.
+///
+/// Deliberately *excluded*: `epochs` (a checkpoint may seed a longer
+/// run — the shared prefix is still bit-identical) and `fault` (a
+/// recovered transient fault never changes results, which is the whole
+/// point of this PR).
+pub fn fingerprint(
+    cfg: &TrainConfig,
+    n: usize,
+    f_dim: usize,
+    num_classes: usize,
+    machine_of: &[usize],
+) -> u64 {
+    let desc = format!(
+        "{:?}|{}|{}|{:08x}|{}|{:?}|{}|{:?}|{}|{:?}|{:?}|{}|{}|{}|{:?}|{:?}|{:016x}|{}|{:?}|{:?}|{}|{:?}|{}|{:?}|n={n}|f={f_dim}|c={num_classes}|m={machine_of:?}",
+        cfg.model,
+        cfg.hidden,
+        cfg.layers,
+        cfg.lr.to_bits(),
+        cfg.seed,
+        cfg.method,
+        cfg.use_rapa,
+        cfg.rapa,
+        cfg.use_cache,
+        cfg.policy,
+        cfg.capacity,
+        cfg.pipeline,
+        cfg.refresh_interval,
+        cfg.skip_exchange,
+        cfg.quantized_row_bytes,
+        cfg.quantize_bits,
+        cfg.comm_multiplier.to_bits(),
+        cfg.invert_priority,
+        cfg.exec,
+        cfg.strategy,
+        cfg.replication,
+        cfg.mode,
+        cfg.batch_size,
+        cfg.fanout,
+    );
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in desc.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- writers ---------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&(v as u32).to_le_bytes());
+}
+
+fn put_u64s(out: &mut Vec<u8>, v: &[u64]) {
+    put_u32(out, v.len());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len());
+    for x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u32(out, v.len());
+    for x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn put_stage(out: &mut Vec<u8>, s: &StageTimes) {
+    for v in [s.check_cache, s.pick_cache, s.communication, s.aggregation, s.compute, s.sync] {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn put_two_level(out: &mut Vec<u8>, s: &TwoLevelStats) {
+    for v in [
+        s.checks,
+        s.local_hits,
+        s.global_hits,
+        s.misses,
+        s.local_evictions,
+        s.global_evictions,
+        s.local_refusals,
+        s.global_refusals,
+        s.fills,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_report(out: &mut Vec<u8>, r: &TrainReport) {
+    put_f64s(out, &r.epoch_times);
+    put_f64s(out, &r.comm_times);
+    put_f32s(out, &r.losses);
+    put_f32s(out, &r.val_accs);
+    out.extend_from_slice(&r.test_acc.to_bits().to_le_bytes());
+    put_stage(out, &r.stage_totals);
+    put_u32(out, r.worker_stages.len());
+    for s in &r.worker_stages {
+        put_stage(out, s);
+    }
+    put_u32(out, r.strategy.len());
+    out.extend_from_slice(r.strategy.as_bytes());
+    for v in [
+        r.bytes_moved,
+        r.broadcast_bytes,
+        r.bytes_saved,
+        r.cross_bytes_moved,
+        r.cross_bytes_naive,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    put_two_level(out, &r.cache);
+    put_f64s(out, &r.epoch_wall);
+    for v in [r.wall_stages.plan, r.wall_stages.execute, r.wall_stages.reduce, r.wallclock] {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for v in [r.rapa_pruned as u64, r.batches_per_epoch as u64, r.sampled_vertices] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    put_u64s(out, &r.epoch_touched);
+    for v in [r.peak_block_vertices as u64, r.peak_block_bytes] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_policy(out: &mut Vec<u8>, p: &PolicyState) {
+    put_u64s(out, &p.residents);
+    put_u32(out, p.hints.len());
+    for &(k, prio) in &p.hints {
+        out.extend_from_slice(&k.to_le_bytes());
+        out.extend_from_slice(&prio.to_le_bytes());
+    }
+}
+
+fn put_rows(out: &mut Vec<u8>, rows: &[(u64, Vec<f32>, u64)]) {
+    put_u32(out, rows.len());
+    for (key, row, written_at) in rows {
+        out.extend_from_slice(&key.to_le_bytes());
+        out.extend_from_slice(&written_at.to_le_bytes());
+        put_f32s(out, row);
+    }
+}
+
+fn put_snapshot(out: &mut Vec<u8>, s: &CacheSnapshot) {
+    put_u32(out, s.locals.len());
+    for p in &s.locals {
+        put_policy(out, p);
+    }
+    put_u32(out, s.globals.len());
+    for p in &s.globals {
+        put_policy(out, p);
+    }
+    put_u32(out, s.local_rows.len());
+    for rows in &s.local_rows {
+        put_rows(out, rows);
+    }
+    put_u32(out, s.global_rows.len());
+    for rows in &s.global_rows {
+        put_rows(out, rows);
+    }
+    put_two_level(out, &s.stats);
+}
+
+// ---- readers ---------------------------------------------------------
+
+fn get_stage(c: &mut Cur<'_>) -> Result<StageTimes, IoError> {
+    Ok(StageTimes {
+        check_cache: c.f64("stage times")?,
+        pick_cache: c.f64("stage times")?,
+        communication: c.f64("stage times")?,
+        aggregation: c.f64("stage times")?,
+        compute: c.f64("stage times")?,
+        sync: c.f64("stage times")?,
+    })
+}
+
+fn get_two_level(c: &mut Cur<'_>) -> Result<TwoLevelStats, IoError> {
+    Ok(TwoLevelStats {
+        checks: c.u64("cache stats")?,
+        local_hits: c.u64("cache stats")?,
+        global_hits: c.u64("cache stats")?,
+        misses: c.u64("cache stats")?,
+        local_evictions: c.u64("cache stats")?,
+        global_evictions: c.u64("cache stats")?,
+        local_refusals: c.u64("cache stats")?,
+        global_refusals: c.u64("cache stats")?,
+        fills: c.u64("cache stats")?,
+    })
+}
+
+fn get_report(c: &mut Cur<'_>) -> Result<TrainReport, IoError> {
+    let epoch_times = c.f64_vec("report")?;
+    let comm_times = c.f64_vec("report")?;
+    let losses = c.f32_vec("report")?;
+    let val_accs = c.f32_vec("report")?;
+    let test_acc = f32::from_bits(c.u32("report")?);
+    let stage_totals = get_stage(c)?;
+    let n_workers = c.u32("report")? as usize;
+    let mut worker_stages = Vec::with_capacity(n_workers.min(1 << 16));
+    for _ in 0..n_workers {
+        worker_stages.push(get_stage(c)?);
+    }
+    let strategy_len = c.u32("report")? as usize;
+    let strategy = String::from_utf8(c.take(strategy_len, "strategy name")?.to_vec())
+        .map_err(|e| IoError::Corrupt(format!("strategy name not UTF-8: {e}")))?;
+    let bytes_moved = c.u64("report")?;
+    let broadcast_bytes = c.u64("report")?;
+    let bytes_saved = c.u64("report")?;
+    let cross_bytes_moved = c.u64("report")?;
+    let cross_bytes_naive = c.u64("report")?;
+    let cache = get_two_level(c)?;
+    let epoch_wall = c.f64_vec("report")?;
+    let wall_stages = WallStages {
+        plan: c.f64("report")?,
+        execute: c.f64("report")?,
+        reduce: c.f64("report")?,
+    };
+    let wallclock = c.f64("report")?;
+    let rapa_pruned = c.u64("report")? as usize;
+    let batches_per_epoch = c.u64("report")? as usize;
+    let sampled_vertices = c.u64("report")?;
+    let epoch_touched = c.u64_vec("report")?;
+    let peak_block_vertices = c.u64("report")? as usize;
+    let peak_block_bytes = c.u64("report")?;
+    Ok(TrainReport {
+        epoch_times,
+        comm_times,
+        losses,
+        val_accs,
+        test_acc,
+        stage_totals,
+        worker_stages,
+        strategy,
+        bytes_moved,
+        broadcast_bytes,
+        bytes_saved,
+        cross_bytes_moved,
+        cross_bytes_naive,
+        cache,
+        epoch_wall,
+        wall_stages,
+        wallclock,
+        rapa_pruned,
+        batches_per_epoch,
+        sampled_vertices,
+        epoch_touched,
+        peak_block_vertices,
+        peak_block_bytes,
+    })
+}
+
+fn get_policy(c: &mut Cur<'_>) -> Result<PolicyState, IoError> {
+    let residents = c.u64_vec("policy state")?;
+    let n = c.u32("policy state")? as usize;
+    let mut hints = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        hints.push((c.u64("policy state")?, c.u32("policy state")?));
+    }
+    Ok(PolicyState { residents, hints })
+}
+
+fn get_rows(c: &mut Cur<'_>) -> Result<Vec<(u64, Vec<f32>, u64)>, IoError> {
+    let n = c.u32("cached rows")? as usize;
+    let mut rows = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let key = c.u64("cached rows")?;
+        let written_at = c.u64("cached rows")?;
+        rows.push((key, c.f32_vec("cached rows")?, written_at));
+    }
+    Ok(rows)
+}
+
+fn get_snapshot(c: &mut Cur<'_>) -> Result<CacheSnapshot, IoError> {
+    let n_locals = c.u32("cache snapshot")? as usize;
+    let mut locals = Vec::with_capacity(n_locals.min(1 << 16));
+    for _ in 0..n_locals {
+        locals.push(get_policy(c)?);
+    }
+    let n_globals = c.u32("cache snapshot")? as usize;
+    let mut globals = Vec::with_capacity(n_globals.min(1 << 16));
+    for _ in 0..n_globals {
+        globals.push(get_policy(c)?);
+    }
+    let n_ls = c.u32("cache snapshot")? as usize;
+    let mut local_rows = Vec::with_capacity(n_ls.min(1 << 16));
+    for _ in 0..n_ls {
+        local_rows.push(get_rows(c)?);
+    }
+    let n_gs = c.u32("cache snapshot")? as usize;
+    let mut global_rows = Vec::with_capacity(n_gs.min(1 << 16));
+    for _ in 0..n_gs {
+        global_rows.push(get_rows(c)?);
+    }
+    Ok(CacheSnapshot { locals, globals, local_rows, global_rows, stats: get_two_level(c)? })
+}
+
+/// Bounds-checked little-endian reader (same shape as the `.cgm`
+/// reader's cursor — every short read is a typed `Truncated`).
+struct Cur<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, len: usize, section: &'static str) -> Result<&'a [u8], IoError> {
+        let end = self.pos.checked_add(len).ok_or(IoError::Truncated {
+            section,
+            expected: len as u64,
+            actual: 0,
+        })?;
+        if end > self.bytes.len() {
+            return Err(IoError::Truncated {
+                section,
+                expected: len as u64,
+                actual: (self.bytes.len() - self.pos) as u64,
+            });
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, section: &'static str) -> Result<u8, IoError> {
+        Ok(self.take(1, section)?[0])
+    }
+
+    fn u16(&mut self, section: &'static str) -> Result<u16, IoError> {
+        let b = self.take(2, section)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, section: &'static str) -> Result<u32, IoError> {
+        let b = self.take(4, section)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, section: &'static str) -> Result<u64, IoError> {
+        let b = self.take(8, section)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self, section: &'static str) -> Result<f64, IoError> {
+        Ok(f64::from_bits(self.u64(section)?))
+    }
+
+    fn f32_vec(&mut self, section: &'static str) -> Result<Vec<f32>, IoError> {
+        let count = self.u32(section)? as usize;
+        let b = self.take(count * 4, section)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    fn f64_vec(&mut self, section: &'static str) -> Result<Vec<f64>, IoError> {
+        let count = self.u32(section)? as usize;
+        let b = self.take(count * 8, section)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| {
+                let mut a = [0u8; 8];
+                a.copy_from_slice(c);
+                f64::from_bits(u64::from_le_bytes(a))
+            })
+            .collect())
+    }
+
+    fn u64_vec(&mut self, section: &'static str) -> Result<Vec<u64>, IoError> {
+        let count = self.u32(section)? as usize;
+        let b = self.take(count * 8, section)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| {
+                let mut a = [0u8; 8];
+                a.copy_from_slice(c);
+                u64::from_le_bytes(a)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{layer_stack, GnnModel, ModelKind};
+    use crate::util::Rng;
+
+    fn sample() -> Checkpoint {
+        let dims = layer_stack(8, 6, 4, 2);
+        let model =
+            TrainedModel::new(GnnModel::new(ModelKind::Gcn, dims, &mut Rng::new(5)), 42);
+        let report = TrainReport {
+            epoch_times: vec![1.5, 2.5],
+            comm_times: vec![0.5, 0.25],
+            losses: vec![2.0, 1.5],
+            val_accs: vec![0.5, 0.75],
+            test_acc: 0.7,
+            worker_stages: vec![StageTimes::default(); 2],
+            strategy: "halo".to_string(),
+            bytes_moved: 1234,
+            bytes_saved: 99,
+            cross_bytes_moved: 17,
+            epoch_touched: vec![3, 4],
+            ..Default::default()
+        };
+        let cache = CacheSnapshot {
+            locals: vec![PolicyState {
+                residents: vec![7, 9],
+                hints: vec![(7, 3), (9, 1)],
+            }],
+            globals: vec![PolicyState::default()],
+            local_rows: vec![vec![(7, vec![1.0, -0.5], 1)]],
+            global_rows: vec![Vec::new()],
+            stats: TwoLevelStats { checks: 10, local_hits: 4, ..Default::default() },
+        };
+        Checkpoint {
+            fingerprint: 0xDEAD_BEEF_0BAD_F00D,
+            epoch: 2,
+            force_refresh: true,
+            patience: Patience { best: 0.75, since_best: 1 },
+            model,
+            report,
+            cache,
+            halo_hist: vec![vec![vec![0.25, f32::MIN_POSITIVE], vec![]]],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let ck = sample();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.epoch, ck.epoch);
+        assert_eq!(back.force_refresh, ck.force_refresh);
+        assert_eq!(back.patience, ck.patience);
+        assert_eq!(back.model.seed, ck.model.seed);
+        assert_eq!(back.model.model.dims, ck.model.model.dims);
+        assert_eq!(back.cache, ck.cache);
+        assert_eq!(back.halo_hist, ck.halo_hist);
+        assert_eq!(back.report.losses, ck.report.losses);
+        assert_eq!(back.report.epoch_times, ck.report.epoch_times);
+        assert_eq!(back.report.bytes_moved, ck.report.bytes_moved);
+        assert_eq!(back.report.cross_bytes_moved, ck.report.cross_bytes_moved);
+        assert_eq!(back.report.epoch_touched, ck.report.epoch_touched);
+        assert_eq!(back.report.strategy, ck.report.strategy);
+        assert_eq!(back.report.cache, ck.report.cache);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let ck = sample();
+        let path = std::env::temp_dir()
+            .join(format!("capgnn_cgk_test_{}", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.to_bytes(), ck.to_bytes(), "byte-exact round trip");
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors() {
+        let bytes = sample().to_bytes();
+        // Wrong magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            Checkpoint::from_bytes(&bad),
+            Err(IoError::BadMagic { .. })
+        ));
+        // Future version.
+        let mut bad = bytes.clone();
+        bad[4..6].copy_from_slice(&9u16.to_le_bytes());
+        assert!(matches!(
+            Checkpoint::from_bytes(&bad),
+            Err(IoError::UnsupportedVersion(9))
+        ));
+        // Truncation anywhere.
+        assert!(matches!(
+            Checkpoint::from_bytes(&bytes[..bytes.len() - 1]),
+            Err(IoError::Truncated { .. })
+        ));
+        // Trailing bytes.
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(matches!(
+            Checkpoint::from_bytes(&extra),
+            Err(IoError::Corrupt(_))
+        ));
+        // A corrupt embedded model surfaces its own typed error
+        // (header is 4+2+8+8+1+4+8 = 35 bytes, then the 8-byte model
+        // length prefix, so byte 43 is the embedded `.cgm` magic).
+        let mut bad = bytes;
+        bad[43] = b'Z';
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_configs_and_datasets() {
+        let a = TrainConfig::capgnn(5);
+        let mut b = a.clone();
+        b.seed += 1;
+        let f = |cfg: &TrainConfig| fingerprint(cfg, 100, 16, 4, &[0, 0]);
+        assert_ne!(f(&a), f(&b), "seed must change the fingerprint");
+        let mut c = a.clone();
+        c.lr *= 2.0;
+        assert_ne!(f(&a), f(&c), "lr must change the fingerprint");
+        assert_ne!(
+            fingerprint(&a, 100, 16, 4, &[0, 0]),
+            fingerprint(&a, 101, 16, 4, &[0, 0]),
+            "dataset shape must change the fingerprint"
+        );
+        assert_ne!(
+            fingerprint(&a, 100, 16, 4, &[0, 0]),
+            fingerprint(&a, 100, 16, 4, &[0, 1]),
+            "cluster shape must change the fingerprint"
+        );
+        // Epochs and fault plan are deliberately outside the digest.
+        let mut d = a.clone();
+        d.epochs += 10;
+        assert_eq!(f(&a), f(&d));
+    }
+}

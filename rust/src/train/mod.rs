@@ -14,12 +14,14 @@
 //!   (`--strategy halo|1.5d`): [`HaloStrategy`] is the paper's halo
 //!   exchange, [`OneHalfDStrategy`] the CAGNET-style 1.5D block SpMM.
 
+pub mod checkpoint;
 pub mod report;
 pub mod sampled;
 pub mod session;
 pub mod strategy;
 pub mod trainer;
 
+pub use checkpoint::Checkpoint;
 pub use report::TrainReport;
 pub use sampled::SampledSession;
 pub use session::{
@@ -28,5 +30,6 @@ pub use session::{
 };
 pub use strategy::{CommStrategy, HaloStrategy, OneHalfDStrategy, StrategyKind};
 pub use trainer::{
-    run, run_with, CapacityMode, ExecMode, RunOptions, RunOutcome, TrainConfig, TrainMode,
+    run, run_with, CapacityMode, ExecMode, Patience, RunOptions, RunOutcome, TrainConfig,
+    TrainMode,
 };

@@ -365,10 +365,44 @@ impl<'a> SampledSession<'a> {
 
         let t1 = Instant::now();
         let mut acc = EpochAcc::new(p);
+        // Epoch-transactional rollback state. Sampled training steps the
+        // optimizer per *batch*, so an abort mid-epoch would otherwise
+        // leave a partially updated model behind and a retried epoch
+        // would silently diverge from a clean run. The model clone is a
+        // few weight matrices; the cache image (rolls byte accounting
+        // back too) is only taken when a fault plan is armed — the one
+        // case the retry loop is expected to replay exactly.
+        let model_entry = model.clone();
+        let fault = cfg.fault.as_deref();
+        let cache_entry = fault.map(|_| cache.snapshot());
+        let inject = |b: usize| -> Result<()> {
+            let Some(fp) = fault else { return Ok(()) };
+            // Worker-scope faults fire on a worker's first batch of the
+            // epoch. Batches run on the session thread, so an injected
+            // "panic" surfaces as an abort error, not an unwind.
+            if b < p {
+                let w = (b % p) as u64;
+                if fp.worker_panics(epoch, w) {
+                    return Err(anyhow!(
+                        "injected panic: sampled worker {w} died in epoch {epoch}"
+                    ));
+                }
+                if fp.backend_error(epoch, w) {
+                    return Err(anyhow!(
+                        "injected transient backend error: sampled worker {w}, epoch {epoch}"
+                    ));
+                }
+            }
+            Ok(())
+        };
         let run_res: Result<()> = match cfg.exec {
             ExecMode::Sequential => {
                 let mut res = Ok(());
                 for b in 0..nb {
+                    if let Err(e) = inject(b) {
+                        res = Err(e);
+                        break;
+                    }
                     let mut rng = batch_rng(cfg.seed, epoch, b as u64);
                     let block =
                         extract_block(graph, schedule.batch(b), fanout, cfg.model, &mut rng);
@@ -406,6 +440,7 @@ impl<'a> SampledSession<'a> {
                         });
                     }
                     for b in 0..nb {
+                        inject(b)?;
                         let block = rxs[b % threads]
                             .recv()
                             .map_err(|_| anyhow!("sampler thread died"))?;
@@ -419,7 +454,15 @@ impl<'a> SampledSession<'a> {
             }
         };
         if run_res.is_err() {
+            // Abort: sweep content-less pending entries, roll the model
+            // back to the epoch boundary, and (under a fault plan) roll
+            // the cache image back too — a retried epoch then matches a
+            // never-faulted one bit for bit, counters included.
             cache.purge_pending();
+            *model = model_entry;
+            if let Some(snap) = &cache_entry {
+                cache.restore(snap);
+            }
         }
         run_res?;
         let wall_execute = t1.elapsed().as_secs_f64();

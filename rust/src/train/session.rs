@@ -25,14 +25,16 @@ use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind, TrainedMo
 use crate::partition::halo::{build_plan, SubgraphPlan};
 use crate::partition::rapa;
 use crate::runtime::Backend;
+use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::report::TrainReport;
 use crate::train::strategy::exec::fresh_row;
 use crate::train::strategy::{
     CommStrategy, EpochCtx, EpochOutcome, HaloStrategy, OneHalfDStrategy, StrategyKind,
 };
-use crate::train::trainer::{CapacityMode, TrainConfig};
+use crate::train::trainer::{CapacityMode, Patience, TrainConfig};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
+use std::path::Path;
 use std::time::Instant;
 
 /// Per-worker training state (one simulated GPU). `pub(crate)` because
@@ -235,6 +237,9 @@ pub struct Session<'a> {
     total_train: f32,
     f_dim: usize,
     wall: Instant,
+    /// Config/dataset digest stamped into `.cgk` checkpoints; resume
+    /// refuses a checkpoint whose fingerprint differs.
+    fingerprint: u64,
 }
 
 impl<'a> Session<'a> {
@@ -475,6 +480,13 @@ impl<'a> Session<'a> {
             total_train,
             f_dim: data.f_dim,
             wall,
+            fingerprint: checkpoint::fingerprint(
+                cfg,
+                g.n(),
+                data.f_dim,
+                data.num_classes,
+                cluster.machine_of(),
+            ),
         })
     }
 
@@ -542,7 +554,6 @@ impl<'a> Session<'a> {
             && epoch_now > 0
             && epoch_now % cfg.refresh_interval == 0)
             || *force_refresh;
-        *force_refresh = false;
         let weights: Vec<f32> =
             workers.iter().map(|w| w.train_count / *total_train).collect();
 
@@ -573,11 +584,16 @@ impl<'a> Session<'a> {
                 // A worker died after the plan ran `fill_pending`: sweep
                 // the content-less pending entries so the next epoch
                 // re-misses (and re-fetches) instead of hitting rows that
-                // do not exist.
+                // do not exist. `force_refresh` is deliberately NOT
+                // consumed on this path — a retried epoch must see the
+                // same refresh decision the failed attempt did.
                 cache.purge_pending();
                 return Err(e);
             }
         };
+        // The epoch is past the point of failure: consume the one-shot
+        // refresh flag only now, so a faulted attempt replays it.
+        *force_refresh = false;
         let EpochOutcome {
             outs,
             meta,
@@ -862,6 +878,75 @@ impl<'a> Session<'a> {
         self.machine_of.iter().copied().max().map_or(1, |m| m + 1)
     }
 
+    /// Capture everything that persists across epochs into a
+    /// [`Checkpoint`] — model weights, the accumulated report, the
+    /// epoch counter, the pending refresh flag, the caller's
+    /// early-stopping [`Patience`], the full two-level cache image, and
+    /// each worker's historical halo rows. Activations, plans, and the
+    /// partition itself are *not* captured: [`Session::build`] is
+    /// deterministic from `(cfg, dataset, cluster)`, so a resumed run
+    /// rebuilds them bit-identically.
+    pub fn checkpoint(&self, patience: Patience) -> Checkpoint {
+        Checkpoint {
+            fingerprint: self.fingerprint,
+            epoch: self.epoch,
+            force_refresh: self.force_refresh,
+            patience,
+            model: TrainedModel::new(self.model.clone(), self.cfg.seed),
+            report: self.report.clone(),
+            cache: self.cache.snapshot(),
+            halo_hist: self.workers.iter().map(|w| w.halo_hist.clone()).collect(),
+        }
+    }
+
+    /// Write a [`Checkpoint`] of the current state as a `.cgk` file.
+    pub fn save_checkpoint(&self, path: &Path, patience: Patience) -> Result<()> {
+        self.checkpoint(patience).save(path)?;
+        Ok(())
+    }
+
+    /// Restore a freshly built session to the state a [`Checkpoint`] was
+    /// taken at. The session must have been built from the *same*
+    /// config, dataset and cluster the checkpoint came from — verified
+    /// through the stamped fingerprint plus model/halo shape checks —
+    /// after which continuing the run is bit-identical to the
+    /// uninterrupted one.
+    pub fn restore_from(&mut self, ck: &Checkpoint) -> Result<()> {
+        if ck.fingerprint != self.fingerprint {
+            return Err(anyhow!(
+                "checkpoint fingerprint {:016x} does not match this run's \
+                 config/dataset ({:016x}); resume requires the same model, \
+                 partitioning, cache, cluster and dataset settings",
+                ck.fingerprint,
+                self.fingerprint
+            ));
+        }
+        if ck.model.model.kind != self.model.kind || ck.model.model.dims != self.dims {
+            return Err(anyhow!("checkpoint model shape does not match this session"));
+        }
+        if ck.halo_hist.len() != self.workers.len()
+            || ck
+                .halo_hist
+                .iter()
+                .zip(&self.workers)
+                .any(|(hist, w)| {
+                    hist.len() != w.halo_hist.len()
+                        || hist.iter().zip(&w.halo_hist).any(|(a, b)| a.len() != b.len())
+                })
+        {
+            return Err(anyhow!("checkpoint halo history shape does not match this session"));
+        }
+        self.model = ck.model.model.clone();
+        self.report = ck.report.clone();
+        self.epoch = ck.epoch;
+        self.force_refresh = ck.force_refresh;
+        self.cache.restore(&ck.cache);
+        for (w, hist) in self.workers.iter_mut().zip(&ck.halo_hist) {
+            w.halo_hist = hist.clone();
+        }
+        Ok(())
+    }
+
     /// Close the run: score the test split from the final logits and
     /// return the accumulated [`TrainReport`] together with the trained
     /// weights as a [`TrainedModel`] artifact (ready for `.cgm` export
@@ -917,10 +1002,16 @@ fn grads_over_wire(grads: &Grads) -> (Grads, u64) {
                 .map(|(mi, mat)| {
                     let frame = Frame::grad_chunk(l as u32, mi as u32, mat);
                     bytes += frame.wire_bytes();
-                    Frame::decode(&frame.encode())
-                        .expect("grad frame roundtrip")
-                        .payload
-                        .values()
+                    // Infallible: decode(encode(f)) of a frame we just
+                    // built cannot fail — the encoder stamps a valid
+                    // header and checksum and no wire sits between.
+                    // (Injected gradient-frame faults go through
+                    // `fault::send_bytes` in the strategy executors, not
+                    // through this reduce-side helper.)
+                    match Frame::decode(&frame.encode()) {
+                        Ok(f) => f.payload.values(),
+                        Err(e) => unreachable!("grad frame roundtrip: {e}"),
+                    }
                 })
                 .collect()
         })
@@ -1322,6 +1413,71 @@ mod tests {
         assert_eq!(retry.cache.local_hits - after_fail.local_hits, f0.cache.local_hits);
         assert_eq!(retry.cache.global_hits - after_fail.global_hits, f0.cache.global_hits);
         assert_eq!(retry.cache.fills - after_fail.fills, f0.cache.fills);
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        // Interrupt-and-resume parity: run 3 epochs, checkpoint, "kill"
+        // the process (drop the session), rebuild from scratch, restore,
+        // run 3 more — every loss, accuracy and byte counter must match
+        // the uninterrupted 6-epoch run bit for bit. Fractional cache
+        // capacity + periodic refresh exercise eviction-hint and
+        // resident-set restoration across the boundary.
+        let ds = tiny(14);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let mut cfg = tiny_cfg(6);
+        cfg.capacity = CapacityMode::Fraction(0.5);
+        cfg.refresh_interval = 2;
+
+        let mut b_clean = NativeBackend::new();
+        let mut clean = Session::build(&ds, &cluster, &mut b_clean, &cfg).unwrap();
+        clean.run_epochs(6).unwrap();
+        let (clean_report, clean_model) = clean.finish().unwrap();
+
+        let ck = {
+            let mut b = NativeBackend::new();
+            let mut first = Session::build(&ds, &cluster, &mut b, &cfg).unwrap();
+            first.run_epochs(3).unwrap();
+            first.checkpoint(Patience::default())
+        };
+        // Round-trip through bytes — what the .cgk file actually holds.
+        let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+
+        let mut b_resume = NativeBackend::new();
+        let mut resumed = Session::build(&ds, &cluster, &mut b_resume, &cfg).unwrap();
+        resumed.restore_from(&ck).unwrap();
+        assert_eq!(resumed.epoch(), 3);
+        resumed.run_epochs(3).unwrap();
+        let (resumed_report, resumed_model) = resumed.finish().unwrap();
+
+        assert_eq!(resumed_report.losses, clean_report.losses);
+        assert_eq!(resumed_report.val_accs, clean_report.val_accs);
+        assert_eq!(resumed_report.test_acc, clean_report.test_acc);
+        assert_eq!(resumed_report.bytes_moved, clean_report.bytes_moved);
+        assert_eq!(resumed_report.bytes_saved, clean_report.bytes_saved);
+        assert_eq!(resumed_report.cross_bytes_moved, clean_report.cross_bytes_moved);
+        assert_eq!(resumed_model.model.weights, clean_model.model.weights);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_fingerprint() {
+        let ds = tiny(14);
+        let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+        let cfg = tiny_cfg(4);
+        let ck = {
+            let mut b = NativeBackend::new();
+            let mut s = Session::build(&ds, &cluster, &mut b, &cfg).unwrap();
+            s.run_epochs(1).unwrap();
+            s.checkpoint(Patience::default())
+        };
+        // Same dataset, different seed ⇒ different partition/weights ⇒
+        // the checkpoint must be refused, not silently misapplied.
+        let mut other = cfg.clone();
+        other.seed += 1;
+        let mut b = NativeBackend::new();
+        let mut s = Session::build(&ds, &cluster, &mut b, &other).unwrap();
+        let err = s.restore_from(&ck).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "unexpected error: {err}");
     }
 
     #[test]

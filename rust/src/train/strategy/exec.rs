@@ -13,6 +13,7 @@ use crate::comm::exchange::{CrossSend, ExchangeParams, FillDirective, SendDirect
 use crate::comm::queues::{FrameMsg, HaloInbox, RouteTable, RowMsg};
 use crate::comm::transport::{Frame, Payload};
 use crate::device::profile::Gpu;
+use crate::fault::{send_bytes, FaultPlan};
 use crate::device::simclock::StageTimes;
 use crate::graph::CsrMat;
 use crate::model::{GnnModel, Grads, LayerDims, ModelKind};
@@ -24,6 +25,7 @@ use crate::train::trainer::ExecMode;
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Per-round execution metadata shared by both executors.
@@ -227,6 +229,15 @@ struct WorkerTask<'a> {
     /// Frame channel of each machine's router (empty on one machine).
     frame_txs: Vec<mpsc::Sender<FrameMsg>>,
     rx: mpsc::Receiver<RowMsg>,
+    /// Deterministic fault schedule (PR 9); `None` = clean run.
+    fault: Option<Arc<FaultPlan>>,
+}
+
+/// Per-(round, vertex) serial number keying link-layer fault decisions —
+/// identical in both executors, so a faulted run is reproducible across
+/// `ExecMode`s.
+fn frame_serial(l: usize, vertex: u32) -> u64 {
+    ((l as u64) << 32) | vertex as u64
 }
 
 /// Sentinel round tag a failing worker broadcasts so peers blocked on
@@ -490,9 +501,28 @@ fn run_epoch_sequential(
     let seed = ctx.cfg.seed;
     let epoch = ctx.epoch;
     let bits = ctx.cfg.quantize_bits;
+    let fault = ctx.cfg.fault.clone();
     let weights = ctx.weights;
     let meta = &pl.meta;
     let p = workers.len();
+    // Epoch-scope fault injection: the sequential executor simulates both
+    // a worker panic and a transient backend error as an epoch abort (the
+    // threaded executor really panics; either way the session purges
+    // pending fills and the retry budget re-runs the epoch).
+    if let Some(fp) = &fault {
+        for wi in 0..p {
+            if fp.worker_panics(epoch, wi as u64) {
+                return Err(anyhow!(
+                    "injected worker panic (epoch {epoch}, worker {wi}; simulated as abort)"
+                ));
+            }
+            if fp.backend_error(epoch, wi as u64) {
+                return Err(anyhow!(
+                    "injected transient backend error (epoch {epoch}, worker {wi})"
+                ));
+            }
+        }
+    }
     let mut full_rows: Vec<Vec<u64>> = vec![vec![0u64; meta.len()]; p];
     let mut cross_bytes = vec![0u64; p];
     let mut agg: Vec<f32> = Vec::new();
@@ -554,10 +584,21 @@ fn run_epoch_sequential(
                         if opts.row_frames {
                             cross_bytes[ow] += frame.wire_bytes();
                         }
-                        let row = Frame::decode(&frame.encode())
-                            .expect("halo frame roundtrip")
-                            .payload
-                            .values();
+                        // The real serialization hop, through the simulated
+                        // link layer: corruption/drops are caught by the
+                        // receiver's CRC and recovered by bounded
+                        // retransmission, so the delivered bytes are clean
+                        // (retransmissions are not re-counted — the final
+                        // delivery is the one cross_bytes already charged).
+                        let bytes = send_bytes(
+                            fault.as_deref(),
+                            &frame,
+                            epoch,
+                            ow as u64,
+                            frame_serial(l, cs.vertex),
+                        )
+                        .map_err(|e| anyhow!("worker {ow} cross-machine send: {e}"))?;
+                        let row = Frame::decode(&bytes)?.payload.values();
                         for &(rw, rhi) in &cs.recipients {
                             place_row(&mut workers[rw], parts[rw].n_inner, l, m.dim, rhi, &row);
                         }
@@ -672,6 +713,7 @@ fn run_epoch_threaded(
     let seed = ctx.cfg.seed;
     let epoch = ctx.epoch;
     let bits = ctx.cfg.quantize_bits;
+    let fault = ctx.cfg.fault.clone();
     let weights = ctx.weights;
     let n_machines = ctx.n_machines;
     let (txs, rxs): (Vec<_>, Vec<_>) = (0..p).map(|_| mpsc::channel::<RowMsg>()).unzip();
@@ -729,7 +771,10 @@ fn run_epoch_threaded(
                 expect: expect_iter.next().unwrap(),
                 txs: txs.clone(),
                 frame_txs: ftxs.clone(),
+                // Infallible: each iterator yields exactly `p` items (one
+                // per worker) and this loop draws exactly one per worker.
                 rx: rx_iter.next().unwrap(),
+                fault: fault.clone(),
             };
             let wb = wb_iter.next().unwrap();
             handles.push(scope.spawn(move || worker_epoch_threaded(task, w, &mut **wb)));
@@ -744,14 +789,25 @@ fn run_epoch_threaded(
         drop(txs);
         drop(ftxs);
         // Workers first: once they are done (or dead), every frame sender
-        // is dropped and the routers drain out.
+        // is dropped and the routers drain out. A panicking worker (real
+        // or injected) is converted into an epoch abort, not a process
+        // abort: its `PoisonOnDrop` already unblocked the peers, and the
+        // session's purge + retry path handles the rest.
         let results: Vec<Result<WorkerOut>> = handles
             .into_iter()
-            .map(|h| h.join().expect("worker thread panicked"))
+            .enumerate()
+            .map(|(wi, h)| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("worker {wi} thread panicked; epoch aborted")),
+            })
             .collect();
         let router_results: Vec<Result<()>> = router_handles
             .into_iter()
-            .map(|h| h.join().expect("router thread panicked"))
+            .enumerate()
+            .map(|(m, h)| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("machine {m} router thread panicked; epoch aborted")),
+            })
             .collect();
         (results, router_results)
     });
@@ -822,6 +878,21 @@ fn worker_epoch_body(
     let rounds = t.meta.len();
     let n_inner = t.sg.n_inner;
     let n_halo = t.sg.n_halo();
+    // Epoch-scope fault injection. The panic is real: it unwinds through
+    // `worker_epoch_threaded`, whose `PoisonOnDrop` unblocks the peers,
+    // and the coordinator turns the failed join into an epoch abort.
+    if let Some(fp) = &t.fault {
+        if fp.worker_panics(t.epoch, t.wi as u64) {
+            panic!("injected worker panic (epoch {}, worker {})", t.epoch, t.wi);
+        }
+        if fp.backend_error(t.epoch, t.wi as u64) {
+            return Err(anyhow!(
+                "injected transient backend error (epoch {}, worker {})",
+                t.epoch,
+                t.wi
+            ));
+        }
+    }
     let mut inbox = HaloInbox::new(rounds);
     let mut full_rows = vec![0u64; rounds];
     let mut cross_bytes = 0u64;
@@ -861,8 +932,19 @@ fn worker_epoch_body(
                     if t.row_frames {
                         cross_bytes += frame.wire_bytes();
                     }
+                    // Same simulated link layer (and the same fault keys)
+                    // as the sequential executor: the router only ever
+                    // sees CRC-clean bytes, after bounded retransmission.
+                    let bytes = send_bytes(
+                        t.fault.as_deref(),
+                        &frame,
+                        t.epoch,
+                        t.wi as u64,
+                        frame_serial(l, cs.vertex),
+                    )
+                    .map_err(|e| anyhow!("worker {} cross-machine send: {e}", t.wi))?;
                     t.frame_txs[cs.dest_machine]
-                        .send(FrameMsg { bytes: frame.encode() })
+                        .send(FrameMsg { bytes })
                         .map_err(|_| {
                             anyhow!("machine {} router hung up mid-epoch", cs.dest_machine)
                         })?;

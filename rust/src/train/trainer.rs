@@ -10,16 +10,20 @@
 
 use crate::cache::PolicyKind;
 use crate::dist::Cluster;
+use crate::fault::FaultPlan;
 use crate::graph::Dataset;
 use crate::model::{ModelKind, TrainedModel};
 use crate::partition::rapa::RapaConfig;
 use crate::partition::Method;
 use crate::runtime::Backend;
+use crate::train::checkpoint::Checkpoint;
 use crate::train::sampled::SampledSession;
 use crate::train::session::{EpochStats, Session};
 use crate::train::strategy::StrategyKind;
 use crate::train::TrainReport;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::Arc;
 
 /// How workers execute within an epoch.
 ///
@@ -160,6 +164,12 @@ pub struct TrainConfig {
     /// Per-layer neighbor fanout (sampled mode only; one entry per GNN
     /// layer, empty = unset).
     pub fanout: Vec<usize>,
+    /// Deterministic fault-injection schedule (PR 9, `--fault <spec>`);
+    /// `None` = clean run. Shared (`Arc`) so threaded workers and the
+    /// retry loop see one set of counters. Deliberately outside the
+    /// checkpoint fingerprint: a recovered transient fault never changes
+    /// results.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl TrainConfig {
@@ -191,6 +201,7 @@ impl TrainConfig {
             mode: TrainMode::FullBatch,
             batch_size: 0,
             fanout: Vec::new(),
+            fault: None,
         }
     }
 
@@ -207,12 +218,59 @@ impl TrainConfig {
 }
 
 /// Options steering [`run_with`] beyond the [`TrainConfig`] itself.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct RunOptions {
     /// Early-stop patience: stop once validation accuracy has failed to
     /// improve by 1e-4 for more than this many consecutive epochs
     /// (`None` = always run all `cfg.epochs`).
     pub patience: Option<usize>,
+    /// Epoch retry budget (`--max-retries`): a failed epoch is purged
+    /// and re-run up to this many extra times before the run aborts.
+    /// 0 = any epoch failure is fatal.
+    pub max_retries: usize,
+    /// Write a `.cgk` checkpoint every N epochs (`--checkpoint-every`;
+    /// requires [`RunOptions::checkpoint_path`]; full-batch only).
+    pub checkpoint_every: Option<u64>,
+    /// Where periodic checkpoints go (`--checkpoint`; full-batch only).
+    pub checkpoint_path: Option<String>,
+    /// Resume from a `.cgk` checkpoint (`--resume`; full-batch only).
+    /// The checkpoint's config/dataset fingerprint must match this run.
+    pub resume: Option<String>,
+}
+
+/// Early-stopping tracker: the best validation accuracy seen and how
+/// many consecutive epochs failed to improve on it by 1e-4. Serialized
+/// into `.cgk` checkpoints so a resumed run stops on exactly the epoch
+/// an uninterrupted one would.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Patience {
+    /// Best validation accuracy seen so far.
+    pub best: f32,
+    /// Consecutive epochs without a ≥ 1e-4 improvement.
+    pub since_best: u64,
+}
+
+impl Default for Patience {
+    fn default() -> Patience {
+        Patience { best: f32::NEG_INFINITY, since_best: 0 }
+    }
+}
+
+impl Patience {
+    /// Record one epoch's validation accuracy.
+    pub fn observe(&mut self, val_acc: f32) {
+        if val_acc > self.best + 1e-4 {
+            self.best = val_acc;
+            self.since_best = 0;
+        } else {
+            self.since_best += 1;
+        }
+    }
+
+    /// Has the plateau outlasted `patience` epochs?
+    pub fn exhausted(&self, patience: usize) -> bool {
+        self.since_best > patience as u64
+    }
 }
 
 /// What a unified training run produced.
@@ -241,10 +299,9 @@ pub fn run(
     Ok((out.report, out.model))
 }
 
-/// [`run`] with options — currently early stopping, applied identically
-/// in both modes (the full-batch `EarlyStopping` observer and the old
-/// inline sampled-mode loop had the same semantics; this is that logic,
-/// once).
+/// [`run`] with options — early stopping and the epoch retry budget
+/// apply identically in both modes; checkpoint/resume is full-batch
+/// only (a knob pointing at the sampled path is rejected, not ignored).
 pub fn run_with(
     dataset: &Dataset,
     cluster: &Cluster,
@@ -254,39 +311,108 @@ pub fn run_with(
 ) -> Result<RunOutcome> {
     match cfg.mode {
         TrainMode::FullBatch => {
+            if opts.checkpoint_every.is_some() && opts.checkpoint_path.is_none() {
+                return Err(anyhow!("--checkpoint-every requires --checkpoint <path>"));
+            }
             let mut session = Session::build(dataset, cluster, backend, cfg)?;
-            let stopped_at = drive_epochs(cfg.epochs, opts.patience, || session.run_epoch())?;
+            let mut patience = Patience::default();
+            if let Some(path) = &opts.resume {
+                let ck = Checkpoint::load(Path::new(path))
+                    .map_err(|e| anyhow!("--resume {path}: {e}"))?;
+                session.restore_from(&ck)?;
+                patience = ck.patience;
+            }
+            let mut stopped_at = None;
+            while session.epoch() < cfg.epochs as u64 {
+                let stats =
+                    retry_epoch(opts.max_retries, cfg.fault.as_deref(), || session.run_epoch())?;
+                patience.observe(stats.val_acc);
+                if let (Some(every), Some(path)) =
+                    (opts.checkpoint_every, opts.checkpoint_path.as_deref())
+                {
+                    if every > 0 && (stats.epoch + 1) % every == 0 {
+                        session.save_checkpoint(Path::new(path), patience)?;
+                    }
+                }
+                if opts.patience.is_some_and(|p| patience.exhausted(p)) {
+                    stopped_at = Some(stats.epoch);
+                    break;
+                }
+            }
             let (report, model) = session.finish()?;
             Ok(RunOutcome { report, model, stopped_at })
         }
         TrainMode::Sampled => {
+            if opts.resume.is_some()
+                || opts.checkpoint_every.is_some()
+                || opts.checkpoint_path.is_some()
+            {
+                return Err(anyhow!(
+                    "checkpoint/resume applies to full-batch training only (mode=sampled)"
+                ));
+            }
             let mut session = SampledSession::build(dataset, cluster, backend, cfg)?;
-            let stopped_at = drive_epochs(cfg.epochs, opts.patience, || session.run_epoch())?;
+            let stopped_at = drive_epochs(
+                cfg.epochs,
+                opts.patience,
+                opts.max_retries,
+                cfg.fault.as_deref(),
+                || session.run_epoch(),
+            )?;
             let (report, model) = session.finish()?;
             Ok(RunOutcome { report, model, stopped_at })
         }
     }
 }
 
-/// Shared epoch loop: run up to `epochs` steps, stopping early when
-/// `patience` is set and the validation accuracy plateaus. Returns the
-/// epoch index the stop fired at, if it did.
-fn drive_epochs<F>(epochs: usize, patience: Option<usize>, mut step: F) -> Result<Option<u64>>
+/// Run one epoch with the `--max-retries` budget: a failed attempt has
+/// already purged its pending cache fills and left the epoch counter
+/// unmoved, so re-running the step replays the *same* epoch. Each
+/// attempt is announced to the fault plan — non-sticky injected faults
+/// fire only on attempt 0, so a retried epoch is clean and, by the
+/// purge contract, bit-identical to one that never faulted.
+fn retry_epoch<F>(
+    max_retries: usize,
+    fault: Option<&FaultPlan>,
+    mut step: F,
+) -> Result<EpochStats>
 where
     F: FnMut() -> Result<EpochStats>,
 {
-    let (mut best, mut since_best) = (f32::NEG_INFINITY, 0usize);
+    let mut last = None;
+    for attempt in 0..=max_retries as u64 {
+        if let Some(fp) = fault {
+            fp.begin_attempt(attempt);
+        }
+        match step() {
+            Ok(stats) => return Ok(stats),
+            Err(e) => last = Some(e),
+        }
+    }
+    let e = last.unwrap_or_else(|| anyhow!("epoch failed"));
+    Err(anyhow!("epoch failed after {} attempt(s): {e}", max_retries + 1))
+}
+
+/// Shared epoch loop: run up to `epochs` steps (each under the retry
+/// budget), stopping early when `patience` is set and the validation
+/// accuracy plateaus. Returns the epoch index the stop fired at, if it
+/// did.
+fn drive_epochs<F>(
+    epochs: usize,
+    patience: Option<usize>,
+    max_retries: usize,
+    fault: Option<&FaultPlan>,
+    mut step: F,
+) -> Result<Option<u64>>
+where
+    F: FnMut() -> Result<EpochStats>,
+{
+    let mut tracker = Patience::default();
     for _ in 0..epochs {
-        let stats = step()?;
-        let Some(p) = patience else { continue };
-        if stats.val_acc > best + 1e-4 {
-            best = stats.val_acc;
-            since_best = 0;
-        } else {
-            since_best += 1;
-            if since_best > p {
-                return Ok(Some(stats.epoch));
-            }
+        let stats = retry_epoch(max_retries, fault, &mut step)?;
+        tracker.observe(stats.val_acc);
+        if patience.is_some_and(|p| tracker.exhausted(p)) {
+            return Ok(Some(stats.epoch));
         }
     }
     Ok(None)
@@ -499,7 +625,7 @@ mod tests {
         let mut backend = NativeBackend::new();
         let cfg = tiny_cfg(40);
         let out = run_with(&ds, &cluster, &mut backend, &cfg,
-            RunOptions { patience: Some(1) }).unwrap();
+            RunOptions { patience: Some(1), ..Default::default() }).unwrap();
         // Whether or not the curve plateaued, the report length and the
         // stop marker must agree.
         match out.stopped_at {
@@ -512,5 +638,90 @@ mod tests {
             RunOptions::default()).unwrap();
         assert!(full.stopped_at.is_none());
         assert_eq!(full.report.epoch_times.len(), 4);
+    }
+
+    #[test]
+    fn patience_tracker_semantics() {
+        let mut p = Patience::default();
+        p.observe(0.5);
+        assert_eq!(p.best, 0.5);
+        assert_eq!(p.since_best, 0);
+        p.observe(0.5); // within 1e-4: not an improvement
+        p.observe(0.4);
+        assert_eq!(p.since_best, 2);
+        assert!(!p.exhausted(2));
+        p.observe(0.3);
+        assert!(p.exhausted(2));
+        p.observe(0.9);
+        assert_eq!(p.since_best, 0, "an improvement resets the plateau");
+    }
+
+    #[test]
+    fn retry_budget_reruns_failed_epochs() {
+        use anyhow::anyhow;
+        // Fails twice, then succeeds — a budget of 2 recovers it.
+        let mut calls = 0;
+        let stats = retry_epoch(2, None, || {
+            calls += 1;
+            if calls < 3 {
+                Err(anyhow!("transient"))
+            } else {
+                Ok(EpochStats {
+                    epoch: 0,
+                    time: 0.0,
+                    comm_time: 0.0,
+                    loss: 1.0,
+                    val_acc: 0.5,
+                    bytes_moved: 0,
+                    bytes_saved: 0,
+                    cross_bytes: 0,
+                    stages: Default::default(),
+                    cache: Default::default(),
+                    batches: 0,
+                    sampled_vertices: 0,
+                    wall: Default::default(),
+                })
+            }
+        })
+        .unwrap();
+        assert_eq!(calls, 3);
+        assert_eq!(stats.loss, 1.0);
+        // A budget of 1 is exhausted by the same failure pattern.
+        let mut calls = 0;
+        let err = retry_epoch(1, None, || -> Result<EpochStats> {
+            calls += 1;
+            Err(anyhow!("transient"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 2);
+        assert!(err.to_string().contains("after 2 attempt(s)"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_knobs_are_full_batch_only() {
+        let ds = tiny(12);
+        let cluster =
+            Cluster::from_parts(gpus(2), Topology::pcie_pairs(2)).unwrap();
+        let mut backend = NativeBackend::new();
+        let mut cfg = tiny_cfg(2);
+        cfg.mode = TrainMode::Sampled;
+        cfg.batch_size = 16;
+        cfg.fanout = vec![4, 4];
+        let err = run_with(&ds, &cluster, &mut backend, &cfg, RunOptions {
+            checkpoint_every: Some(1),
+            checkpoint_path: Some("x.cgk".into()),
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("full-batch"), "{err}");
+        // --checkpoint-every without a path is rejected in full-batch too.
+        let mut full = tiny_cfg(2);
+        full.mode = TrainMode::FullBatch;
+        let err = run_with(&ds, &cluster, &mut backend, &full, RunOptions {
+            checkpoint_every: Some(1),
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("--checkpoint"), "{err}");
     }
 }

@@ -1,0 +1,413 @@
+//! PR9 chaos matrix: deterministic fault injection across the transport,
+//! training, and serving layers.
+//!
+//! The contract under test is *transparent recovery*: a run that hits
+//! injected faults but recovers — link-layer retransmission for
+//! corrupted/dropped frames, the `--max-retries` epoch budget for worker
+//! panics and transient backend errors, checkpoint → kill → `--resume`
+//! for process death — must be **bit-identical** to a clean run in its
+//! losses, accuracies, and byte accounting. (Wall clocks and the fault
+//! counters themselves legitimately differ.) The serving side has a
+//! weaker, liveness-shaped contract: overload sheds with a typed error,
+//! panicking workers respawn, and the server keeps answering.
+
+use capgnn::device::profile::DeviceKind;
+use capgnn::dist::Cluster;
+use capgnn::fault::FaultPlan;
+use capgnn::graph::datasets::{synthetic_node_data, tiny};
+use capgnn::graph::{Dataset, Graph};
+use capgnn::runtime::NativeBackend;
+use capgnn::sample::Fanout;
+use capgnn::serve::{ServeConfig, ServeError, Server};
+use capgnn::train::{
+    run_with, ExecMode, RunOptions, SampledSession, StrategyKind, TrainConfig, TrainMode,
+    TrainReport,
+};
+use capgnn::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn sampled_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        mode: TrainMode::Sampled,
+        batch_size: 16,
+        fanout: vec![4, 3],
+        ..tiny_cfg(epochs)
+    }
+}
+
+/// Arm a config with a parsed `--fault` plan; returns the plan too so
+/// tests can assert which faults actually fired.
+fn armed(cfg: &TrainConfig, spec: &str) -> (TrainConfig, Arc<FaultPlan>) {
+    let fp = Arc::new(FaultPlan::parse(spec).expect("fault spec"));
+    let mut cfg = cfg.clone();
+    cfg.fault = Some(fp.clone());
+    (cfg, fp)
+}
+
+/// One full run through the unified facade on a fixed dataset.
+fn run_report(cfg: &TrainConfig, cluster: &Cluster, max_retries: usize) -> TrainReport {
+    let ds = tiny(21);
+    let mut backend = NativeBackend::new();
+    run_with(
+        &ds,
+        cluster,
+        &mut backend,
+        cfg,
+        RunOptions { max_retries, ..RunOptions::default() },
+    )
+    .expect("run")
+    .report
+}
+
+/// The recovery parity criteria: numerics and byte accounting, bitwise.
+/// Deliberately excludes wall clocks, simulated times and cache *stat
+/// counters* (a retried epoch legitimately re-counts its cache checks),
+/// which is exactly the PR9 acceptance bar.
+fn assert_same_outcome(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses");
+    assert_eq!(a.val_accs, b.val_accs, "{what}: val accs");
+    assert_eq!(
+        a.test_acc.to_bits(),
+        b.test_acc.to_bits(),
+        "{what}: test acc ({} vs {})",
+        a.test_acc,
+        b.test_acc
+    );
+    assert_eq!(a.bytes_moved, b.bytes_moved, "{what}: bytes moved");
+    assert_eq!(a.bytes_saved, b.bytes_saved, "{what}: bytes saved");
+    assert_eq!(a.cross_bytes_moved, b.cross_bytes_moved, "{what}: cross wire bytes");
+    assert_eq!(a.cross_bytes_naive, b.cross_bytes_naive, "{what}: naive cross bytes");
+    assert_eq!(a.broadcast_bytes, b.broadcast_bytes, "{what}: broadcast bytes");
+}
+
+/// Corrupted, dropped, and delayed frames are recovered *below* the
+/// epoch level (CRC + bounded retransmission), so a heavily faulted run
+/// needs no retry budget at all — across both strategies and both
+/// executors on a two-machine cluster.
+#[test]
+fn link_faults_recover_bitwise_across_matrix() {
+    let cluster = Cluster::preset("2M-2D").unwrap();
+    for strategy in [StrategyKind::Halo, StrategyKind::OneHalfD] {
+        for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+            let mut cfg = tiny_cfg(3);
+            cfg.strategy = strategy;
+            cfg.exec = exec;
+            let what = format!("2M-2D {:?} {exec:?}", strategy);
+            let clean = run_report(&cfg, &cluster, 0);
+            let (fcfg, fp) = armed(&cfg, "seed=11,corrupt=0.4,drop=0.3,delay=0.3");
+            let faulted = run_report(&fcfg, &cluster, 0);
+            let c = fp.counters();
+            assert!(
+                fp.total_injected() > 0,
+                "{what}: no faults fired — the matrix is not testing anything"
+            );
+            assert!(c.retries > 0, "{what}: faults fired but nothing retransmitted");
+            assert_same_outcome(&clean, &faulted, &what);
+        }
+    }
+    // On one machine no rows travel as frames, so link faults have no
+    // surface to bite: the plan stays silent even at probability 1.
+    let one_machine = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let (fcfg, fp) = armed(&tiny_cfg(2), "seed=11,corrupt=1.0,drop=1.0");
+    let clean = run_report(&tiny_cfg(2), &one_machine, 0);
+    let faulted = run_report(&fcfg, &one_machine, 0);
+    assert_eq!(fp.total_injected(), 0, "1M cluster has no frames to fault");
+    assert_same_outcome(&clean, &faulted, "1M link faults");
+}
+
+/// Worker panics and transient backend errors abort the epoch; with a
+/// retry budget the purged-and-replayed epoch is bit-identical to one
+/// that never faulted — on one and two machines, both executors. (On the
+/// threaded executor the injected panic really unwinds a worker thread.)
+#[test]
+fn epoch_aborts_retry_bitwise() {
+    let clusters = [
+        ("1M-2D", Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7)),
+        ("2M-2D", Cluster::preset("2M-2D").unwrap()),
+    ];
+    for (cname, cluster) in &clusters {
+        for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+            for spec in ["seed=5,panic=1.0", "seed=5,backend=1.0"] {
+                let mut cfg = tiny_cfg(3);
+                cfg.exec = exec;
+                let what = format!("{cname} {exec:?} {spec}");
+                let clean = run_report(&cfg, cluster, 0);
+                let (fcfg, fp) = armed(&cfg, spec);
+                // Probability 1 faults every epoch's first attempt; one
+                // retry per epoch recovers each.
+                let faulted = run_report(&fcfg, cluster, 1);
+                let c = fp.counters();
+                assert!(
+                    c.panics + c.backend_errs >= 3,
+                    "{what}: expected one abort per epoch, saw {c:?}"
+                );
+                assert_same_outcome(&clean, &faulted, &what);
+            }
+        }
+    }
+}
+
+/// Sticky faults ignore the attempt counter, so they exhaust any retry
+/// budget — and the error says how many attempts were burned.
+#[test]
+fn sticky_faults_exhaust_the_retry_budget() {
+    let ds = tiny(21);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let (cfg, _) = armed(&tiny_cfg(3), "seed=5,backend=1.0,sticky=1");
+    let mut backend = NativeBackend::new();
+    let err = run_with(
+        &ds,
+        &cluster,
+        &mut backend,
+        &cfg,
+        RunOptions { max_retries: 2, ..RunOptions::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("after 3 attempt(s)"), "{err}");
+    assert!(err.contains("backend"), "{err}");
+}
+
+/// Satellite (b): a `SampledSession` epoch that fails mid-stream (after
+/// some mini-batch SGD steps already landed) rolls back to its entry
+/// state, so the retried epoch is bit-identical to a fresh session's
+/// epoch 0 — model updates and byte accounting included.
+#[test]
+fn sampled_retried_epoch_matches_fresh_run() {
+    let ds = tiny(21);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+        let mut cfg = sampled_cfg(2);
+        cfg.exec = exec;
+        let what = format!("sampled {exec:?}");
+
+        // Clean reference epoch.
+        let mut cb = NativeBackend::new();
+        let mut clean = SampledSession::build(&ds, &cluster, &mut cb, &cfg).unwrap();
+        let want = clean.run_epoch().unwrap();
+
+        // Faulted: the first attempt aborts (transient backend error on
+        // every worker), the second replays the same epoch.
+        let (fcfg, fp) = armed(&cfg, "seed=9,backend=1.0");
+        let mut fb = NativeBackend::new();
+        let mut s = SampledSession::build(&ds, &cluster, &mut fb, &fcfg).unwrap();
+        assert!(s.run_epoch().is_err(), "{what}: probability-1 fault must abort");
+        assert_eq!(s.epoch(), 0, "{what}: a failed epoch must not advance the counter");
+        fp.begin_attempt(1);
+        let got = s.run_epoch().unwrap();
+        assert_eq!(got.epoch, 0, "{what}");
+        assert_eq!(got.loss.to_bits(), want.loss.to_bits(), "{what}: loss");
+        assert_eq!(got.val_acc.to_bits(), want.val_acc.to_bits(), "{what}: val acc");
+        assert_eq!(got.bytes_moved, want.bytes_moved, "{what}: bytes moved");
+        assert_eq!(got.bytes_saved, want.bytes_saved, "{what}: bytes saved");
+        assert_eq!(got.batches, want.batches, "{what}: batch count");
+        assert_eq!(got.sampled_vertices, want.sampled_vertices, "{what}: block vertices");
+    }
+
+    // Whole-run parity through the facade: every epoch faults once and
+    // retries once; the final report and artifact match a clean run.
+    let cfg = sampled_cfg(3);
+    let mut cb = NativeBackend::new();
+    let clean = run_with(&ds, &cluster, &mut cb, &cfg, RunOptions::default()).unwrap();
+    let (fcfg, _) = armed(&cfg, "seed=9,backend=1.0");
+    let mut fb = NativeBackend::new();
+    let faulted = run_with(
+        &ds,
+        &cluster,
+        &mut fb,
+        &fcfg,
+        RunOptions { max_retries: 1, ..RunOptions::default() },
+    )
+    .unwrap();
+    assert_same_outcome(&clean.report, &faulted.report, "sampled facade retry");
+    for (a, b) in clean.model.model.weights.iter().zip(&faulted.model.model.weights) {
+        for (ra, rb) in a.iter().zip(b) {
+            assert!(
+                ra.iter().zip(rb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "sampled facade retry: weights diverged"
+            );
+        }
+    }
+}
+
+/// Checkpoint → kill → resume through the CLI-facing `run_with` path: a
+/// run killed after its epoch-3 checkpoint and resumed from the `.cgk`
+/// file finishes with bit-identical numerics, bytes, and weights to an
+/// uninterrupted run. A checkpoint from a different config is refused by
+/// fingerprint.
+#[test]
+fn checkpoint_kill_resume_is_bit_identical() {
+    let ds = tiny(22);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let mut cfg = tiny_cfg(6);
+    cfg.refresh_interval = 2; // exercise the one-shot refresh flag across the boundary
+    let path = std::env::temp_dir()
+        .join(format!("capgnn_faults_resume_{}.cgk", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+
+    let mut b0 = NativeBackend::new();
+    let clean = run_with(&ds, &cluster, &mut b0, &cfg, RunOptions::default()).unwrap();
+
+    // First life: 3 epochs, checkpoint written after the 3rd, then the
+    // process "dies" (the session is simply dropped).
+    let mut cfg3 = cfg.clone();
+    cfg3.epochs = 3;
+    let mut b1 = NativeBackend::new();
+    run_with(
+        &ds,
+        &cluster,
+        &mut b1,
+        &cfg3,
+        RunOptions {
+            checkpoint_every: Some(3),
+            checkpoint_path: Some(path_s.clone()),
+            ..RunOptions::default()
+        },
+    )
+    .unwrap();
+
+    // Second life: resume the 6-epoch config from the artifact. The
+    // fingerprint ignores `epochs`, so interrupted and full configs match.
+    let mut b2 = NativeBackend::new();
+    let resumed = run_with(
+        &ds,
+        &cluster,
+        &mut b2,
+        &cfg,
+        RunOptions { resume: Some(path_s.clone()), ..RunOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(resumed.report.losses.len(), 6, "resume must keep the full history");
+    assert_same_outcome(&clean.report, &resumed.report, "kill + resume");
+    for (a, b) in clean.model.model.weights.iter().zip(&resumed.model.model.weights) {
+        for (ra, rb) in a.iter().zip(b) {
+            assert!(
+                ra.iter().zip(rb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "kill + resume: weights diverged"
+            );
+        }
+    }
+
+    // A config with different numerics must be refused, not resumed.
+    let mut other = cfg.clone();
+    other.seed += 1;
+    let mut b3 = NativeBackend::new();
+    let err = run_with(
+        &ds,
+        &cluster,
+        &mut b3,
+        &other,
+        RunOptions { resume: Some(path_s), ..RunOptions::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---- Serving degradation ------------------------------------------------
+
+fn serve_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for v in 1..n as u32 {
+        edges.push((v - 1, v));
+    }
+    for _ in 0..n * 4 {
+        let a = rng.index(n) as u32;
+        let b = rng.index(n) as u32;
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 6, 8, seed);
+    Dataset { name: "faults-serve", label: "Fs", graph, data }
+}
+
+/// Admission control under overload: once `max_queue` requests are
+/// pending, further submissions fail with the typed
+/// [`ServeError::Overloaded`] — and the queued requests still complete.
+#[test]
+fn serve_overload_sheds_typed_and_stays_consistent() {
+    let ds = serve_dataset(128, 13);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let mut backend = NativeBackend::new();
+    let cfg = TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(2) };
+    let model = run_with(&ds, &cluster, &mut backend, &cfg, RunOptions::default())
+        .unwrap()
+        .model;
+    let scfg = ServeConfig {
+        fanout: Fanout(vec![4, 4]),
+        cache_capacity: 32,
+        prepopulate: 0,
+        workers: 1,
+        max_batch: 1024,
+        max_wait_us: 60_000_000, // hold everything until shutdown drains
+        max_queue: 3,
+        ..ServeConfig::new(2)
+    };
+    let mut h = Server::start(&ds, model, &scfg).unwrap();
+    for v in 0..3 {
+        h.submit(v).unwrap();
+    }
+    assert_eq!(h.queue_depth(), 3);
+    let err = h.submit(3).unwrap_err();
+    let shed = err
+        .downcast_ref::<ServeError>()
+        .unwrap_or_else(|| panic!("untyped overload error: {err}"));
+    let ServeError::Overloaded { depth, limit } = shed;
+    assert_eq!((*depth, *limit), (3, 3));
+    assert_eq!(h.shed(), 1);
+    let rep = h.shutdown().unwrap();
+    assert_eq!(rep.shed, 1);
+    assert_eq!(rep.requests, 3, "shed submissions never entered the pipeline");
+    assert_eq!(rep.responses, 3, "queued requests must still be answered");
+}
+
+/// A panicking worker is respawned in place and the server keeps
+/// answering — bounded-time liveness, verified with real timeouts.
+#[test]
+fn serve_worker_panic_respawns_and_keeps_answering() {
+    let ds = serve_dataset(128, 17);
+    let cluster = Cluster::homogeneous(DeviceKind::Rtx3090, 2, 7);
+    let mut backend = NativeBackend::new();
+    let cfg = TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(2) };
+    let model = run_with(&ds, &cluster, &mut backend, &cfg, RunOptions::default())
+        .unwrap()
+        .model;
+    let scfg = ServeConfig {
+        fanout: Fanout(vec![4, 4]),
+        cache_capacity: 32,
+        prepopulate: 0,
+        workers: 1,
+        max_batch: 1,
+        max_wait_us: 100,
+        fault: Some(Arc::new(FaultPlan::parse("seed=3,panic=1.0").unwrap())),
+        ..ServeConfig::new(2)
+    };
+    let mut h = Server::start(&ds, model, &scfg).unwrap();
+    for v in 0..5 {
+        h.submit(v).unwrap();
+    }
+    // The first dequeued batch dies with its worker (a non-sticky panic
+    // fires once per worker lifetime); the respawned worker must answer
+    // the remaining four within the timeout.
+    let mut got = 0;
+    while got < 4 {
+        match h.recv_timeout(Duration::from_secs(30)) {
+            Some(_) => got += 1,
+            None => panic!("server went silent after a worker panic ({got} of 4)"),
+        }
+    }
+    let rep = h.shutdown().unwrap();
+    assert_eq!(rep.panics, 1, "exactly one injected panic");
+    assert_eq!(rep.respawns, 1, "the dead worker must be respawned");
+    assert_eq!(rep.requests, 5);
+    assert_eq!(rep.responses, 4, "only the in-flight batch is lost");
+}
