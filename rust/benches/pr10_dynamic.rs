@@ -1,0 +1,237 @@
+//! PR10 bench / CI gate: dynamic graphs — incremental edge updates with
+//! cache invalidation.
+//!
+//! At three graph sizes:
+//!
+//! 1. **Update-apply throughput** — a `DeltaGraph` absorbs the full
+//!    update stream (inserts, deletes, redundant ops, self-loops) and
+//!    materializes a canonical snapshot; reported as updates/second
+//!    against the equivalent from-scratch rebuild.
+//! 2. **Interleaved update+train** — the same stream applied at update
+//!    points inside a training run ([`GraphMode::Delta`]) versus the
+//!    rebuild-from-scratch reference arm ([`GraphMode::Rebuild`]).
+//!    Gate: every observable (losses, accuracies, bytes, cache counters,
+//!    invalidation totals, drift decisions, final weights) is
+//!    bit-identical — and the update points provably invalidated stale
+//!    cached rows (invalidations > 0).
+//!
+//! Writes `BENCH_PR10.json` to the repo root; exits nonzero if any gate
+//! fails. `BENCH_QUICK=1` shrinks the graphs for smoke runs.
+
+use capgnn::dist::Cluster;
+use capgnn::graph::delta::{DeltaGraph, Update, UpdateBatch};
+use capgnn::graph::datasets::synthetic_node_data;
+use capgnn::graph::{Dataset, Graph};
+use capgnn::runtime::NativeBackend;
+use capgnn::train::{run_dynamic, DynamicConfig, DynamicOutcome, GraphMode, TrainConfig};
+use capgnn::util::bench;
+use capgnn::util::bench_json::BenchDoc;
+use capgnn::util::json::{num, obj, Json};
+use capgnn::util::Rng;
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+/// Random graph (avg degree ≈ 8) with synthetic labeled features.
+fn make_dataset(n: usize, seed: u64) -> Dataset {
+    let m = n * 8;
+    let mut rng = Rng::new(seed);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    let graph = Graph::from_edges(n, &edges);
+    let data = synthetic_node_data(&graph, 8, 32, seed);
+    Dataset { name: "bench", label: "Bn", graph, data }
+}
+
+fn base_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 32, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+/// Update stream: random churn plus guaranteed-effective deletions of
+/// existing edges (so every batch touches resident halo vertices and the
+/// invalidation path actually fires).
+fn make_batches(g: &Graph, batches: usize, per_batch: usize, seed: u64) -> Vec<UpdateBatch> {
+    let n = g.n();
+    let mut rng = Rng::new(seed);
+    (0..batches)
+        .map(|b| {
+            let mut batch = UpdateBatch::new();
+            for i in 0..per_batch {
+                if i % 4 == 0 {
+                    // Effective deletion of a real edge.
+                    let u = ((b * per_batch + i) * 7 % n) as u32;
+                    if let Some(&v) = g.nbrs(u).first() {
+                        batch.push(Update::Delete(u, v));
+                        continue;
+                    }
+                }
+                let u = rng.index(n) as u32;
+                let v = if rng.index(10) == 0 { u } else { rng.index(n) as u32 };
+                batch.push(if rng.index(2) == 0 {
+                    Update::Insert(u, v)
+                } else {
+                    Update::Delete(u, v)
+                });
+            }
+            batch
+        })
+        .collect()
+}
+
+/// Delta arm vs from-scratch rebuild at the graph level, timed.
+fn apply_throughput(g: &Graph, batches: &[UpdateBatch]) -> (f64, f64, bool) {
+    let total_updates: usize = batches.iter().map(|b| b.len()).sum();
+
+    let t0 = Instant::now();
+    let mut dg = DeltaGraph::new(g.clone());
+    for b in batches {
+        dg.apply(b).expect("apply");
+    }
+    let delta_graph = dg.snapshot();
+    let delta_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let mut edges: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for u in 0..g.n() as u32 {
+        for &v in g.nbrs(u) {
+            if u < v {
+                edges.insert((u, v));
+            }
+        }
+    }
+    let mut rebuilt = g.clone();
+    for b in batches {
+        for up in b {
+            let (u, v) = up.endpoints();
+            if u == v {
+                continue;
+            }
+            let e = (u.min(v), u.max(v));
+            match up {
+                Update::Insert(..) => edges.insert(e),
+                Update::Delete(..) => edges.remove(&e),
+            };
+        }
+        let list: Vec<(u32, u32)> = edges.iter().copied().collect();
+        rebuilt = Graph::from_edges(g.n(), &list);
+    }
+    let rebuild_s = t1.elapsed().as_secs_f64();
+
+    let ups = |s: f64| if s > 0.0 { total_updates as f64 / s } else { 0.0 };
+    (ups(delta_s), ups(rebuild_s), delta_graph == rebuilt)
+}
+
+fn same_outcome(a: &DynamicOutcome, b: &DynamicOutcome) -> bool {
+    let w = |m: &capgnn::model::TrainedModel| -> Vec<u32> {
+        m.model
+            .weights
+            .iter()
+            .flatten()
+            .flatten()
+            .map(|x| x.to_bits())
+            .collect()
+    };
+    a.report.losses.iter().map(|x| x.to_bits()).eq(b.report.losses.iter().map(|x| x.to_bits()))
+        && a.report.test_acc.to_bits() == b.report.test_acc.to_bits()
+        && a.report.bytes_moved == b.report.bytes_moved
+        && a.report.bytes_saved == b.report.bytes_saved
+        && a.report.cache == b.report.cache
+        && a.invalidated == b.invalidated
+        && a.repartitions == b.repartitions
+        && a.touched == b.touched
+        && a.drift == b.drift
+        && w(&a.model) == w(&b.model)
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let sizes: [usize; 3] = if quick { [256, 512, 1024] } else { [1024, 2048, 4096] };
+    let epochs = if quick { 4 } else { 6 };
+    let cluster = Cluster::preset("2M-2D").unwrap();
+
+    let mut doc = BenchDoc::new("pr10_dynamic", "BENCH_PR10.json");
+    doc.field("epochs", num(epochs as f64));
+    doc.field("sizes", Json::Array(sizes.iter().map(|&n| num(n as f64)).collect()));
+
+    let mut all_identical = true;
+    let mut all_equivalent = true;
+    let mut total_invalidated = 0u64;
+    let mut rows = Vec::new();
+
+    for (i, &n) in sizes.iter().enumerate() {
+        let ds = make_dataset(n, 42 + i as u64);
+        let batches = make_batches(&ds.graph, 2, (n / 8).max(16), 7 + i as u64);
+        let n_updates: usize = batches.iter().map(|b| b.len()).sum();
+
+        let (delta_ups, rebuild_ups, graphs_equal) = apply_throughput(&ds.graph, &batches);
+        all_equivalent &= graphs_equal;
+
+        let cfg = base_cfg(epochs);
+        let dyn_cfg = DynamicConfig {
+            batches: batches.clone(),
+            update_every: 2,
+            ..DynamicConfig::default()
+        };
+        let t0 = Instant::now();
+        let mut b1 = NativeBackend::new();
+        let delta =
+            run_dynamic(&ds, &cluster, &mut b1, &cfg, &dyn_cfg, GraphMode::Delta).expect("delta");
+        let delta_wall = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let mut b2 = NativeBackend::new();
+        let rebuild = run_dynamic(&ds, &cluster, &mut b2, &cfg, &dyn_cfg, GraphMode::Rebuild)
+            .expect("rebuild");
+        let rebuild_wall = t1.elapsed().as_secs_f64();
+
+        let identical = same_outcome(&delta, &rebuild);
+        all_identical &= identical;
+        total_invalidated += delta.invalidated;
+
+        println!(
+            "n={n}: {n_updates} updates | apply {:.0}/s (rebuild {:.0}/s) | \
+             interleaved epoch {:.4}s delta vs {:.4}s rebuild | {} rows invalidated, \
+             {} repartition(s) — {}",
+            delta_ups,
+            rebuild_ups,
+            delta_wall / epochs as f64,
+            rebuild_wall / epochs as f64,
+            delta.invalidated,
+            delta.repartitions,
+            if identical { "BIT-IDENTICAL" } else { "DIVERGED" },
+        );
+
+        rows.push(obj(vec![
+            ("n", num(n as f64)),
+            ("updates", num(n_updates as f64)),
+            ("delta_updates_per_s", num(delta_ups)),
+            ("rebuild_updates_per_s", num(rebuild_ups)),
+            ("delta_epoch_s", num(delta_wall / epochs as f64)),
+            ("rebuild_epoch_s", num(rebuild_wall / epochs as f64)),
+            ("invalidated_rows", num(delta.invalidated as f64)),
+            ("repartitions", num(delta.repartitions as f64)),
+            ("effective_inserts", num(delta.stats.inserts as f64)),
+            ("effective_deletes", num(delta.stats.deletes as f64)),
+            ("redundant", num(delta.stats.redundant as f64)),
+            ("self_loops", num(delta.stats.self_loops as f64)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+    }
+    doc.field("runs", Json::Array(rows));
+    doc.field("total_invalidated", num(total_invalidated as f64));
+
+    doc.gate(
+        "delta_equals_rebuild_graphs",
+        all_equivalent,
+        "DELTA GATE FAILED: incremental snapshots diverged from from-scratch rebuilds",
+    );
+    doc.gate(
+        "delta_equals_rebuild_runs",
+        all_identical,
+        "EQUIVALENCE GATE FAILED: a delta-maintained run diverged from the rebuild arm",
+    );
+    doc.gate(
+        "invalidations_nonzero",
+        total_invalidated > 0,
+        "INVALIDATION GATE FAILED: no cached row was ever invalidated — stale rows survived",
+    );
+    doc.finish();
+}

@@ -136,6 +136,10 @@ impl CachePolicy for JacaCache {
         }
     }
 
+    fn drop_priority(&mut self, key: u64) {
+        self.priorities.remove(&key);
+    }
+
     fn export_state(&self) -> PolicyState {
         // The live hint map is part of the state: eviction prunes a
         // victim's hint, so re-hinting every build-time key at restore

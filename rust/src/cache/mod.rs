@@ -70,6 +70,12 @@ pub trait CachePolicy: Send {
     /// Hint the static priority of a key (vertex overlap ratio for JACA).
     /// Default: ignored.
     fn set_priority(&mut self, _key: u64, _priority: u32) {}
+    /// Forget a key's priority hint (invalidation path, PR 10): a dynamic
+    /// update makes the hint as stale as the row, so unlike [`Self::remove`]
+    /// — whose abort-retry contract *keeps* hints — invalidation prunes
+    /// them. The next build re-plants hints for the new topology.
+    /// Default: no-op (FIFO/LRU keep no hints).
+    fn drop_priority(&mut self, _key: u64) {}
     /// Snapshot the policy's replacement state for a checkpoint (PR 9).
     /// [`PolicyKind::restore`] rebuilds a behaviorally identical policy
     /// from it.

@@ -37,6 +37,9 @@ pub struct ServeCacheStats {
     pub refused: u64,
     /// Rows stored by the startup heat pass (subset of `inserted`).
     pub prepopulated: u64,
+    /// Resident rows dropped because a dynamic-graph update made them
+    /// stale (PR 10).
+    pub invalidated: u64,
 }
 
 impl ServeCacheStats {
@@ -125,6 +128,27 @@ impl ServeCache {
         stored
     }
 
+    /// Invalidate the cached output rows of the given vertices (PR 10): a
+    /// dynamic edge update changed their aggregation neighborhoods, so the
+    /// cached outputs no longer equal what [`crate::serve::serve_output`]
+    /// would recompute on the new graph. The priority hint is pruned too —
+    /// the vertex's heat is re-derived at the next admit. Returns the
+    /// number of resident rows dropped.
+    pub fn invalidate(&mut self, vertices: &[u32]) -> u64 {
+        let mut dropped = 0u64;
+        for &v in vertices {
+            let key = key_of(0, v);
+            if self.policy.contains(key) {
+                self.policy.remove(key);
+                self.store.remove(key);
+                dropped += 1;
+            }
+            self.policy.drop_priority(key);
+        }
+        self.stats.invalidated += dropped;
+        dropped
+    }
+
     /// Resident rows.
     pub fn len(&self) -> usize {
         self.policy.len()
@@ -205,6 +229,22 @@ mod tests {
         assert!(c.is_empty());
         assert_eq!(c.capacity(), 0);
         assert!(c.lookup(1).is_none() && c.lookup(2).is_none());
+    }
+
+    #[test]
+    fn invalidate_forces_recompute_and_counts() {
+        let mut c = ServeCache::new(PolicyKind::Jaca, 4);
+        c.admit(1, 10, row(1));
+        c.admit(2, 10, row(2));
+        assert!(c.lookup(1).is_some());
+        assert_eq!(c.invalidate(&[1, 99]), 1, "only resident rows count");
+        assert_eq!(c.stats.invalidated, 1);
+        // The stale row misses; a fresh admit restores service.
+        assert!(c.lookup(1).is_none());
+        assert!(c.admit(1, 10, row(1)).stored());
+        assert_eq!(c.lookup(1).unwrap(), &row(1)[..]);
+        // Untouched vertices keep their rows.
+        assert_eq!(c.lookup(2).unwrap(), &row(2)[..]);
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct TwoLevelStats {
     pub global_refusals: u64,
     /// Rows newly written into a cache.
     pub fills: u64,
+    /// Resident entries dropped because a dynamic-graph update made them
+    /// stale (PR 10). Counted separately from evictions: an eviction is
+    /// capacity pressure, an invalidation is a correctness obligation.
+    pub invalidations: u64,
 }
 
 impl TwoLevelStats {
@@ -154,6 +158,17 @@ impl TwoLevelCache {
     /// Total resident keys across every machine's global cache.
     pub fn global_len(&self) -> usize {
         self.globals.iter().map(|g| g.len()).sum()
+    }
+
+    /// Capacity of worker `w`'s local cache, in rows.
+    pub fn local_capacity(&self, w: usize) -> usize {
+        self.locals[w].capacity()
+    }
+
+    /// Capacity of one machine's global cache, in rows (every machine
+    /// gets the same `global_cap`).
+    pub fn global_capacity(&self) -> usize {
+        self.globals.first().map_or(0, |g| g.capacity())
     }
 
     /// Hint JACA priorities (vertex overlap ratios) for a worker's halo.
@@ -343,6 +358,81 @@ impl TwoLevelCache {
         for (w, local) in self.locals.iter().enumerate() {
             if local.contains(key) {
                 self.local_store[w].put(key, row.to_vec(), epoch);
+            }
+        }
+    }
+
+    /// Invalidate every cached copy of the touched vertices' rows — input
+    /// features and all per-layer embeddings (`key_of(l, v)` for `l` in
+    /// `0..=layers`) across every local and global region. A dynamic edge
+    /// update changes the aggregation neighborhood of its endpoints, so
+    /// any cached row for them is stale; the next lookup misses and
+    /// re-fetches fresh content. Priority hints for touched keys are
+    /// pruned too (unlike [`CachePolicy::remove`]'s abort-retry contract,
+    /// which keeps them): the overlap ratios they encoded described the
+    /// old topology, and the next session build re-plants fresh ones.
+    /// Returns the number of resident entries dropped.
+    pub fn invalidate_vertices(&mut self, vertices: &[u32], layers: usize) -> u64 {
+        let mut dropped = 0u64;
+        for &v in vertices {
+            for l in 0..=layers as u32 {
+                let key = super::key_of(l, v);
+                for (w, local) in self.locals.iter_mut().enumerate() {
+                    if local.contains(key) {
+                        local.remove(key);
+                        self.local_store[w].remove(key);
+                        dropped += 1;
+                    }
+                    local.drop_priority(key);
+                }
+                for (m, global) in self.globals.iter_mut().enumerate() {
+                    if global.contains(key) {
+                        global.remove(key);
+                        self.global_store[m].remove(key);
+                        dropped += 1;
+                    }
+                    global.drop_priority(key);
+                }
+                self.pending.remove(&key);
+            }
+        }
+        self.stats.invalidations += dropped;
+        dropped
+    }
+
+    /// Re-shape the cache for a new topology (PR 10): adaptive capacities
+    /// depend on halo sizes, so after a dynamic update the budgets can
+    /// change. Residents survive in eviction order up to the new
+    /// capacities (overflow is dropped oldest-first, exactly as if the
+    /// smaller cache had made the original decisions); counters persist.
+    /// Worker and machine counts are structural and must not change.
+    pub fn resize(&mut self, local_caps: &[usize], global_cap: usize) {
+        assert_eq!(local_caps.len(), self.locals.len(), "worker count is structural");
+        debug_assert!(self.pending.is_empty(), "resize mid-epoch (pending fills)");
+        for (i, &cap) in local_caps.iter().enumerate() {
+            let state = self.locals[i].export_state();
+            self.locals[i] = self.kind.restore(cap, &state);
+            let stale: Vec<u64> = self.local_store[i]
+                .export()
+                .into_iter()
+                .map(|(k, _, _)| k)
+                .filter(|&k| !self.locals[i].contains(k))
+                .collect();
+            for k in stale {
+                self.local_store[i].remove(k);
+            }
+        }
+        for i in 0..self.globals.len() {
+            let state = self.globals[i].export_state();
+            self.globals[i] = self.kind.restore(global_cap, &state);
+            let stale: Vec<u64> = self.global_store[i]
+                .export()
+                .into_iter()
+                .map(|(k, _, _)| k)
+                .filter(|&k| !self.globals[i].contains(k))
+                .collect();
+            for k in stale {
+                self.global_store[i].remove(k);
             }
         }
     }
@@ -625,6 +715,85 @@ mod tests {
             b.fill(0, 7, vec![7.0; 2], 9);
             assert_eq!(a.snapshot(), b.snapshot(), "{kind:?} post-restore fill");
         }
+    }
+
+    #[test]
+    fn invalidate_drops_every_copy_and_counts() {
+        let mut c = cache(PolicyKind::Lru);
+        // key_of(0, 7) resident locally (worker 0) and globally; worker 1
+        // promotes its own local copy too.
+        let k = crate::cache::key_of(0, 7);
+        c.fill(0, k, vec![1.0], 0);
+        assert_eq!(c.lookup(1, k), Hit::Global);
+        let dropped = c.invalidate_vertices(&[7], 0);
+        // Three resident copies: local(0), local(1), global.
+        assert_eq!(dropped, 3);
+        assert_eq!(c.stats.invalidations, 3);
+        // Invalidation is not an eviction.
+        assert_eq!(c.stats.local_evictions, 0);
+        assert_eq!(c.lookup(0, k), Hit::Miss);
+        assert!(c.get_row(1, k).is_none());
+        // Untouched vertices are untouched.
+        c.fill(0, crate::cache::key_of(0, 8), vec![2.0], 0);
+        assert_eq!(c.invalidate_vertices(&[7], 0), 0);
+        assert_eq!(c.lookup(0, crate::cache::key_of(0, 8)), Hit::Local);
+    }
+
+    #[test]
+    fn invalidate_covers_all_layers_and_prunes_hints() {
+        let mut c = cache(PolicyKind::Jaca);
+        for l in 0..=2u32 {
+            let k = crate::cache::key_of(l, 5);
+            c.set_priority(0, k, 9);
+            c.fill(0, k, vec![l as f32], 0);
+        }
+        assert_eq!(c.invalidate_vertices(&[5], 2), 6, "3 layers x 2 levels");
+        for l in 0..=2u32 {
+            assert_eq!(c.lookup(0, crate::cache::key_of(l, 5)), Hit::Miss);
+        }
+        // The stale hints are gone: a fresh low-priority key now wins the
+        // slot that the old hint would have pinned.
+        let k0 = crate::cache::key_of(0, 5);
+        c.set_priority(0, crate::cache::key_of(0, 1), 1);
+        c.fill(0, crate::cache::key_of(0, 1), vec![1.0], 1);
+        c.set_priority(0, crate::cache::key_of(0, 2), 1);
+        c.fill(0, crate::cache::key_of(0, 2), vec![2.0], 1);
+        // Were key k0's priority-9 hint still alive, re-inserting it would
+        // outrank both; with the hint pruned it is a default-priority key
+        // and is refused by the full local cache.
+        c.fill(0, k0, vec![9.0], 1);
+        assert!(c.stats.local_refusals >= 1);
+    }
+
+    #[test]
+    fn invalidate_sweeps_pending_fills() {
+        let mut c = cache(PolicyKind::Lru);
+        let k = crate::cache::key_of(1, 3);
+        c.fill_pending(0, k);
+        assert_eq!(c.invalidate_vertices(&[3], 1), 2, "local + global metadata");
+        assert_eq!(c.pending_len(), 0);
+        // Late content cannot resurrect the invalidated key.
+        c.complete_fill(k, &[1.0], 0);
+        assert_eq!(c.lookup(0, k), Hit::Miss);
+    }
+
+    #[test]
+    fn resize_preserves_residents_up_to_new_capacity() {
+        let mut c = cache(PolicyKind::Lru);
+        c.fill(0, 1, vec![1.0], 0);
+        c.fill(0, 2, vec![2.0], 0);
+        let stats_before = c.stats;
+        // Growing keeps everything.
+        c.resize(&[4, 4], 8);
+        assert_eq!(c.lookup(0, 1), Hit::Local);
+        assert_eq!(c.lookup(0, 2), Hit::Local);
+        // Shrinking drops overflow oldest-first and prunes its rows.
+        c.resize(&[1, 1], 1);
+        assert_eq!(c.local_len(0), 1);
+        assert_eq!(c.global_len(), 1);
+        assert!(c.get_row(0, 1).is_none() || c.get_row(0, 2).is_none());
+        // Counters persist across the reshape (minus the lookups above).
+        assert_eq!(c.stats.fills, stats_before.fills);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::runtime::BackendKind;
 use crate::sample::Fanout;
 use crate::serve::{Pacing, ServeConfig, WorkloadConfig};
 use crate::train::{
-    CapacityMode, ExecMode, RunOptions, StrategyKind, TrainConfig, TrainMode,
+    CapacityMode, DynamicConfig, ExecMode, RunOptions, StrategyKind, TrainConfig, TrainMode,
 };
 use crate::util::{Args, Rng};
 use anyhow::{anyhow, Result};
@@ -62,6 +62,10 @@ const TRAIN_ONLY_OPTS: &[&str] = &[
     "checkpoint",
     "checkpoint-every",
     "resume",
+    "updates",
+    "update-every",
+    "drift-threshold",
+    "compact-every",
 ];
 
 /// Boolean flags that only training reads; `capgnn serve` rejects them.
@@ -87,6 +91,10 @@ pub struct RunSpec {
     /// [`crate::train::run_with`]; early stopping is merged in by the
     /// caller.
     pub options: RunOptions,
+    /// Dynamic-graph update schedule (`--updates file:<deltas>`), when
+    /// the run interleaves edge-update batches with training epochs via
+    /// [`crate::train::run_dynamic`]. `None` for a static graph.
+    pub dynamic: Option<DynamicConfig>,
 }
 
 /// Parse a [`RunSpec`] from CLI options. Recognized options:
@@ -97,7 +105,8 @@ pub struct RunSpec {
 ///  --layers 3 --mode full|sampled --batch-size 64 --fanout 10,5
 ///  --strategy halo|1.5d --replication 2 --fault seed=1,corrupt=0.01
 ///  --max-retries 2 --checkpoint ck.cgk --checkpoint-every 10
-///  --resume ck.cgk`
+///  --resume ck.cgk --updates file:deltas.txt --update-every 4
+///  --drift-threshold 0.15 --compact-every 4`
 ///
 /// `--dataset` goes through the [`DatasetSource`] registry, so every
 /// consumer of the spec accepts a synthetic twin and an ingested on-disk
@@ -313,13 +322,82 @@ pub fn run_spec(args: &Args) -> Result<RunSpec> {
         }
     };
 
+    // `--updates file:<deltas>` arms the dynamic-graph driver: update
+    // batches interleave with training epochs. Sub-knobs without
+    // --updates are dead and error out; updates are full-batch-only and
+    // (because every update point rebuilds the session) incompatible
+    // with checkpoint/resume.
+    let dynamic = parse_dynamic(args, &train, &options)?;
+
     let backend = match args.get_or("backend", "native").as_str() {
         "xla" => BackendKind::Xla,
         "native" => BackendKind::Native,
         other => return Err(anyhow!("unknown backend {other}")),
     };
 
-    Ok(RunSpec { dataset, source, gpus, topology, train, backend, system, options })
+    Ok(RunSpec { dataset, source, gpus, topology, train, backend, system, options, dynamic })
+}
+
+/// Parse the dynamic-graph knobs (`--updates`, `--update-every`,
+/// `--drift-threshold`, `--compact-every`) into a [`DynamicConfig`],
+/// rejecting every dead-knob combination.
+fn parse_dynamic(
+    args: &Args,
+    train: &TrainConfig,
+    options: &RunOptions,
+) -> Result<Option<DynamicConfig>> {
+    let Some(spec) = args.get("updates") else {
+        for k in ["update-every", "drift-threshold", "compact-every"] {
+            if args.get(k).is_some() {
+                return Err(anyhow!("--{k} requires --updates file:<deltas>"));
+            }
+        }
+        return Ok(None);
+    };
+    if train.mode == TrainMode::Sampled {
+        return Err(anyhow!(
+            "--updates only applies to full-batch training; drop --mode sampled"
+        ));
+    }
+    if options.checkpoint_path.is_some() || options.resume.is_some() {
+        return Err(anyhow!(
+            "--updates rebuilds the session at every update point and cannot be \
+             combined with --checkpoint/--resume"
+        ));
+    }
+    let path = spec.strip_prefix("file:").ok_or_else(|| {
+        anyhow!("bad --updates {spec}: expected file:<deltas> (a text update file)")
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading update file {path}: {e}"))?;
+    let batches = crate::graph::delta::parse_updates(&text)
+        .map_err(|e| anyhow!("parsing update file {path}: {e}"))?;
+    if batches.is_empty() {
+        return Err(anyhow!("update file {path} contains no update batches"));
+    }
+    let mut cfg = DynamicConfig { batches, ..DynamicConfig::default() };
+    if let Some(v) = args.get("update-every") {
+        cfg.update_every = v
+            .parse()
+            .ok()
+            .filter(|&e| e >= 1)
+            .ok_or_else(|| anyhow!("bad --update-every {v} (want an integer >= 1)"))?;
+    }
+    if let Some(v) = args.get("drift-threshold") {
+        cfg.drift_threshold = v
+            .parse()
+            .ok()
+            .filter(|&t: &f64| t >= 0.0 && t.is_finite())
+            .ok_or_else(|| anyhow!("bad --drift-threshold {v} (want a finite value >= 0)"))?;
+    }
+    if let Some(v) = args.get("compact-every") {
+        cfg.compact_every = v
+            .parse()
+            .ok()
+            .filter(|&e| e >= 1)
+            .ok_or_else(|| anyhow!("bad --compact-every {v} (want an integer >= 1)"))?;
+    }
+    Ok(Some(cfg))
 }
 
 /// Everything needed to launch one serving run.
@@ -684,6 +762,99 @@ mod tests {
             let err = run_spec(&args(&bad)).unwrap_err().to_string();
             assert!(err.contains("serve"), "unhelpful error: {err}");
         }
+    }
+
+    #[test]
+    fn updates_file_parses_into_dynamic_config() {
+        let path = std::env::temp_dir()
+            .join(format!("capgnn_cfg_updates_{}.txt", std::process::id()));
+        std::fs::write(&path, "# two batches\n+ 0 1\n- 2 3\n---\n+ 4 5\n").unwrap();
+        let p = path.to_str().unwrap();
+        let fspec = format!("file:{p}");
+
+        let spec = run_spec(&args(&[
+            "--scale", "0.1", "--updates", &fspec, "--update-every", "3",
+            "--drift-threshold", "0.4", "--compact-every", "2",
+        ]))
+        .unwrap();
+        let d = spec.dynamic.expect("--updates should arm the dynamic driver");
+        assert_eq!(d.batches.len(), 2);
+        assert_eq!(d.update_every, 3);
+        assert_eq!(d.drift_threshold, 0.4);
+        assert_eq!(d.compact_every, 2);
+
+        // Defaults when only --updates is given.
+        let d = run_spec(&args(&["--scale", "0.1", "--updates", &fspec]))
+            .unwrap()
+            .dynamic
+            .unwrap();
+        assert_eq!(d.update_every, 1);
+        assert_eq!(d.drift_threshold, 0.15);
+        assert_eq!(d.compact_every, 4);
+
+        // No --updates → static run.
+        assert!(run_spec(&args(&["--scale", "0.1"])).unwrap().dynamic.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dynamic_dead_knobs_rejected() {
+        // Sub-knobs without --updates are dead.
+        for k in ["--update-every", "--drift-threshold", "--compact-every"] {
+            let err = run_spec(&args(&["--scale", "0.1", k, "2"]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--updates"), "unhelpful error: {err}");
+        }
+        // Bad --updates forms are typed errors, not panics.
+        let err = run_spec(&args(&["--scale", "0.1", "--updates", "deltas.txt"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("file:"), "unhelpful error: {err}");
+        assert!(run_spec(&args(&[
+            "--scale", "0.1", "--updates", "file:/no/such/deltas.txt",
+        ]))
+        .is_err());
+
+        let path = std::env::temp_dir()
+            .join(format!("capgnn_cfg_updates2_{}.txt", std::process::id()));
+        std::fs::write(&path, "+ 0 1\n").unwrap();
+        let fspec = format!("file:{}", path.to_str().unwrap());
+        // Updates are full-batch-only and exclusive with checkpointing.
+        let err = run_spec(&args(&[
+            "--scale", "0.1", "--mode", "sampled", "--updates", &fspec,
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("full-batch"), "unhelpful error: {err}");
+        for k in ["--checkpoint", "--resume"] {
+            let err = run_spec(&args(&["--scale", "0.1", "--updates", &fspec, k, "x.cgk"]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--updates"), "unhelpful error: {err}");
+        }
+        // Garbage sub-knob values are rejected.
+        for bad in [
+            vec!["--update-every", "0"],
+            vec!["--compact-every", "0"],
+            vec!["--drift-threshold", "-1"],
+            vec!["--drift-threshold", "nan"],
+        ] {
+            let mut argv: Vec<&str> = vec!["--scale", "0.1", "--updates", fspec.as_str()];
+            argv.extend(bad);
+            assert!(run_spec(&args(&argv)).is_err());
+        }
+        // Serving rejects every dynamic knob as training-only.
+        for bad in [
+            vec!["--updates", "file:x.txt"],
+            vec!["--update-every", "2"],
+            vec!["--drift-threshold", "0.2"],
+            vec!["--compact-every", "2"],
+        ] {
+            let err = serve_spec(&args(&bad)).unwrap_err().to_string();
+            assert!(err.contains("train"), "unhelpful error: {err}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

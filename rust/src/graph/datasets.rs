@@ -280,7 +280,7 @@ pub fn synthetic_node_data(graph: &Graph, classes: usize, f_dim: usize, seed: u6
 /// a node-data section get [`synthetic_node_data`] with the
 /// [`FILE_CLASSES`]/[`FILE_F_DIM`] defaults.
 pub fn load_file_dataset(path: &Path, seed: u64) -> Result<Dataset> {
-    let CgrFile { graph, data } =
+    let CgrFile { graph, data, .. } =
         io::load_graph_file(path).map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
     if graph.n() == 0 {
         return Err(anyhow!("{}: graph has no vertices", path.display()));

@@ -1,0 +1,396 @@
+//! Dynamic graphs: incremental edge updates over the static CSR.
+//!
+//! [`DeltaGraph`] wraps a base [`Graph`] with per-vertex overlays — a set
+//! of added and a set of removed neighbors per endpoint — so edge
+//! insert/delete batches apply in O(batch) without rebuilding the CSR.
+//! [`DeltaGraph::snapshot`] merges base + overlays into a fresh canonical
+//! CSR; because [`Graph::from_edges`] sorts, dedups and drops self-loops,
+//! the snapshot is **bitwise identical** to a from-scratch build over the
+//! same logical edge set. That equivalence is the correctness contract of
+//! the whole dynamic path and is enforced by `tests/dynamic.rs`.
+//!
+//! The vertex universe is fixed at construction: updates add and remove
+//! edges, never vertices. Isolated vertices are born when their last edge
+//! is deleted and die back into connectivity when an edge arrives —
+//! exactly the cases the equivalence suite randomizes over.
+//!
+//! Update files use a line format shared by `--updates file:<path>` and
+//! `capgnn update`:
+//!
+//! ```text
+//! # comment
+//! + 0 5      insert undirected edge {0, 5}
+//! - 3 4      delete undirected edge {3, 4}
+//! ---        batch separator
+//! + 1 2
+//! ```
+
+use crate::graph::Graph;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One edge update: insert or delete an undirected edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Update {
+    /// Insert the undirected edge {u, v}.
+    Insert(u32, u32),
+    /// Delete the undirected edge {u, v}.
+    Delete(u32, u32),
+}
+
+impl Update {
+    /// The two endpoints, in file order.
+    pub fn endpoints(&self) -> (u32, u32) {
+        match *self {
+            Update::Insert(u, v) | Update::Delete(u, v) => (u, v),
+        }
+    }
+}
+
+/// A batch of updates applied atomically between training/serving phases.
+pub type UpdateBatch = Vec<Update>;
+
+/// Lifetime counters of a [`DeltaGraph`] (persisted into `.cgr` files by
+/// `capgnn update` and printed by `capgnn inspect`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Update batches applied.
+    pub batches: u64,
+    /// Effective edge insertions (duplicates excluded).
+    pub inserts: u64,
+    /// Effective edge deletions (misses excluded).
+    pub deletes: u64,
+    /// Redundant updates: inserts of present edges, deletes of absent ones.
+    pub redundant: u64,
+    /// Self-loop updates skipped (the CSR never stores self-loops).
+    pub self_loops: u64,
+    /// Compactions folding the overlays into a fresh base CSR.
+    pub compactions: u64,
+    /// Delta-log depth: batches applied since the last compaction.
+    pub depth: u64,
+}
+
+/// What one [`DeltaGraph::apply`] call did.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ApplyOutcome {
+    /// Endpoints of every *effective* insert/delete, sorted and deduped.
+    /// This is exactly the set whose cached feature rows went stale —
+    /// the cache-invalidation hooks consume it verbatim.
+    pub touched: Vec<u32>,
+    /// Effective insertions in this batch.
+    pub inserted: u64,
+    /// Effective deletions in this batch.
+    pub deleted: u64,
+    /// Redundant updates in this batch.
+    pub redundant: u64,
+    /// Self-loop updates skipped in this batch.
+    pub self_loops: u64,
+}
+
+/// A CSR graph plus an overlay delta log of pending edge updates.
+#[derive(Clone, Debug)]
+pub struct DeltaGraph {
+    base: Graph,
+    /// Per-vertex neighbors added on top of `base` (both arc directions).
+    added: BTreeMap<u32, BTreeSet<u32>>,
+    /// Per-vertex neighbors removed from `base` (both arc directions).
+    removed: BTreeMap<u32, BTreeSet<u32>>,
+    stats: DeltaStats,
+}
+
+impl DeltaGraph {
+    /// Wrap a base CSR; the vertex universe is fixed to `base.n()`.
+    pub fn new(base: Graph) -> DeltaGraph {
+        DeltaGraph {
+            base,
+            added: BTreeMap::new(),
+            removed: BTreeMap::new(),
+            stats: DeltaStats::default(),
+        }
+    }
+
+    /// Number of vertices (constant across updates).
+    pub fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    /// The base CSR beneath the overlays (stale by up to the delta log).
+    pub fn base(&self) -> &Graph {
+        &self.base
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> DeltaStats {
+        self.stats
+    }
+
+    /// Directed arcs currently held in the overlays (added + removed).
+    pub fn overlay_arcs(&self) -> usize {
+        self.added.values().map(BTreeSet::len).sum::<usize>()
+            + self.removed.values().map(BTreeSet::len).sum::<usize>()
+    }
+
+    /// True if the undirected edge {u, v} exists in the *effective* graph
+    /// (base minus removed plus added).
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        if self.added.get(&u).is_some_and(|s| s.contains(&v)) {
+            return true;
+        }
+        if self.removed.get(&u).is_some_and(|s| s.contains(&v)) {
+            return false;
+        }
+        self.base.has_edge(u, v)
+    }
+
+    /// Apply one update batch. Returns the per-batch outcome, whose
+    /// `touched` list feeds cache invalidation. Ids outside the fixed
+    /// vertex universe are an error (the universe never grows).
+    pub fn apply(&mut self, batch: &[Update]) -> Result<ApplyOutcome, String> {
+        let n = self.n() as u32;
+        let mut out = ApplyOutcome::default();
+        let mut touched = BTreeSet::new();
+        for (i, up) in batch.iter().enumerate() {
+            let (u, v) = up.endpoints();
+            if u >= n || v >= n {
+                return Err(format!(
+                    "update {i}: vertex {} out of range (graph has {n} vertices)",
+                    u.max(v)
+                ));
+            }
+            if u == v {
+                out.self_loops += 1;
+                continue;
+            }
+            let effective = match up {
+                Update::Insert(..) => {
+                    if self.has_edge(u, v) {
+                        false
+                    } else {
+                        self.arc_insert(u, v);
+                        self.arc_insert(v, u);
+                        out.inserted += 1;
+                        true
+                    }
+                }
+                Update::Delete(..) => {
+                    if !self.has_edge(u, v) {
+                        false
+                    } else {
+                        self.arc_delete(u, v);
+                        self.arc_delete(v, u);
+                        out.deleted += 1;
+                        true
+                    }
+                }
+            };
+            if effective {
+                touched.insert(u);
+                touched.insert(v);
+            } else {
+                out.redundant += 1;
+            }
+        }
+        out.touched = touched.into_iter().collect();
+        self.stats.batches += 1;
+        self.stats.depth += 1;
+        self.stats.inserts += out.inserted;
+        self.stats.deletes += out.deleted;
+        self.stats.redundant += out.redundant;
+        self.stats.self_loops += out.self_loops;
+        Ok(out)
+    }
+
+    /// Record arc u→v as present: either un-remove it or add it.
+    fn arc_insert(&mut self, u: u32, v: u32) {
+        if let Some(r) = self.removed.get_mut(&u) {
+            if r.remove(&v) {
+                if r.is_empty() {
+                    self.removed.remove(&u);
+                }
+                return;
+            }
+        }
+        self.added.entry(u).or_default().insert(v);
+    }
+
+    /// Record arc u→v as absent: either un-add it or remove it.
+    fn arc_delete(&mut self, u: u32, v: u32) {
+        if let Some(a) = self.added.get_mut(&u) {
+            if a.remove(&v) {
+                if a.is_empty() {
+                    self.added.remove(&u);
+                }
+                return;
+            }
+        }
+        self.removed.entry(u).or_default().insert(v);
+    }
+
+    /// Merge base + overlays into a fresh canonical CSR. Bitwise equal to
+    /// `Graph::from_edges` over the same logical edge set (the CSR form
+    /// is canonical: sorted, deduped, self-loop-free, both directions).
+    pub fn snapshot(&self) -> Graph {
+        let mut edges: Vec<(u32, u32)> = Vec::with_capacity(self.base.m() + self.overlay_arcs());
+        for u in 0..self.base.n() as u32 {
+            let removed = self.removed.get(&u);
+            for &v in self.base.nbrs(u) {
+                if u < v && !removed.is_some_and(|s| s.contains(&v)) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        for (&u, vs) in &self.added {
+            for &v in vs {
+                if u < v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Graph::from_edges(self.base.n(), &edges)
+    }
+
+    /// Fold the delta log into the base: base := snapshot, overlays
+    /// cleared, depth reset. The effective graph is unchanged.
+    pub fn compact(&mut self) {
+        self.base = self.snapshot();
+        self.added.clear();
+        self.removed.clear();
+        self.stats.compactions += 1;
+        self.stats.depth = 0;
+    }
+}
+
+/// Parse an update file (see the module docs for the line format) into
+/// batches separated by `---` lines. Vertex ids are range-checked later,
+/// at apply time, against the target graph.
+pub fn parse_updates(text: &str) -> Result<Vec<UpdateBatch>, String> {
+    let mut batches = Vec::new();
+    let mut current: UpdateBatch = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "---" {
+            batches.push(std::mem::take(&mut current));
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let op = parts.next().unwrap_or("");
+        let u = parts.next().and_then(|t| t.parse::<u32>().ok());
+        let v = parts.next().and_then(|t| t.parse::<u32>().ok());
+        let extra = parts.next();
+        let (Some(u), Some(v), None) = (u, v, extra) else {
+            return Err(format!("line {}: expected `+ u v` or `- u v`, got {raw:?}", ln + 1));
+        };
+        match op {
+            "+" => current.push(Update::Insert(u, v)),
+            "-" => current.push(Update::Delete(u, v)),
+            _ => {
+                return Err(format!("line {}: unknown op {op:?} (use + or -)", ln + 1));
+            }
+        }
+    }
+    if !current.is_empty() {
+        batches.push(current);
+    }
+    Ok(batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn insert_delete_roundtrip_is_identity() {
+        let mut dg = DeltaGraph::new(path4());
+        dg.apply(&[Update::Insert(0, 3)]).unwrap();
+        assert!(dg.has_edge(0, 3));
+        dg.apply(&[Update::Delete(0, 3)]).unwrap();
+        assert!(!dg.has_edge(0, 3));
+        // Overlays fully cancel: nothing pending.
+        assert_eq!(dg.overlay_arcs(), 0);
+        assert_eq!(dg.snapshot(), path4());
+    }
+
+    #[test]
+    fn delete_then_reinsert_unremoves() {
+        let mut dg = DeltaGraph::new(path4());
+        dg.apply(&[Update::Delete(1, 2), Update::Insert(1, 2)]).unwrap();
+        assert!(dg.has_edge(1, 2));
+        assert_eq!(dg.overlay_arcs(), 0);
+        assert_eq!(dg.snapshot(), path4());
+    }
+
+    #[test]
+    fn redundant_and_self_loop_updates_are_counted_not_applied() {
+        let mut dg = DeltaGraph::new(path4());
+        let out = dg
+            .apply(&[Update::Insert(0, 1), Update::Delete(0, 2), Update::Insert(3, 3)])
+            .unwrap();
+        assert_eq!(out.redundant, 2);
+        assert_eq!(out.self_loops, 1);
+        assert!(out.touched.is_empty(), "no effective change, nothing stale");
+        assert_eq!(dg.snapshot(), path4());
+    }
+
+    #[test]
+    fn touched_lists_effective_endpoints_sorted() {
+        let mut dg = DeltaGraph::new(path4());
+        let out = dg.apply(&[Update::Insert(3, 0), Update::Delete(1, 2)]).unwrap();
+        assert_eq!(out.touched, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn snapshot_matches_from_scratch_build() {
+        let mut dg = DeltaGraph::new(path4());
+        dg.apply(&[Update::Delete(2, 3), Update::Insert(0, 2)]).unwrap();
+        let scratch = Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(dg.snapshot(), scratch);
+        // Compaction folds without changing the effective graph.
+        dg.compact();
+        assert_eq!(dg.base(), &scratch);
+        assert_eq!(dg.overlay_arcs(), 0);
+        assert_eq!(dg.stats().depth, 0);
+        assert_eq!(dg.stats().compactions, 1);
+    }
+
+    #[test]
+    fn isolated_vertex_birth_and_death() {
+        let mut dg = DeltaGraph::new(path4());
+        // Kill vertex 3's only edge: it becomes isolated…
+        dg.apply(&[Update::Delete(2, 3)]).unwrap();
+        let s = dg.snapshot();
+        assert_eq!(s.degree(3), 0);
+        assert_eq!(s.n(), 4, "the vertex universe never shrinks");
+        // …and is reborn by a later insert.
+        dg.apply(&[Update::Insert(3, 0)]).unwrap();
+        assert_eq!(dg.snapshot().degree(3), 1);
+    }
+
+    #[test]
+    fn out_of_range_vertex_is_a_typed_error() {
+        let mut dg = DeltaGraph::new(path4());
+        let err = dg.apply(&[Update::Insert(0, 9)]).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn parser_batches_comments_and_errors() {
+        let text = "# header\n+ 0 1\n- 2 3\n---\n\n+ 1 3\n";
+        let batches = parse_updates(text).unwrap();
+        assert_eq!(
+            batches,
+            vec![
+                vec![Update::Insert(0, 1), Update::Delete(2, 3)],
+                vec![Update::Insert(1, 3)],
+            ]
+        );
+        assert!(parse_updates("* 0 1").unwrap_err().contains("unknown op"));
+        assert!(parse_updates("+ 0").unwrap_err().contains("expected"));
+        assert!(parse_updates("+ 0 1 2").unwrap_err().contains("expected"));
+    }
+}

@@ -45,7 +45,16 @@
 //! …       n·4           labels, u32 each (each < num_classes)
 //! …       n·1           split masks, one byte per vertex
 //!                       (bit 0 train, bit 1 val, bit 2 test)
+//! --- delta provenance section (only when flags bit 1 is set) ---
+//! …       7·8           update-history counters, u64 each: batches,
+//!                       inserts, deletes, redundant, self_loops,
+//!                       compactions, depth (see [`DeltaProvenance`])
 //! ```
+//!
+//! The delta section (PR 10) is written by `capgnn update` so an
+//! updated graph records how it came to be; `capgnn inspect` reports
+//! it. Readers that predate the flag reject such files explicitly
+//! (unknown flag bits are an error, never silently ignored).
 
 use super::csr::Graph;
 use super::features::NodeData;
@@ -59,6 +68,8 @@ pub const CGR_MAGIC: [u8; 4] = *b"CGRF";
 pub const CGR_VERSION: u16 = 1;
 /// Header flag bit: a node-data section follows the CSR arrays.
 const FLAG_NODE_DATA: u16 = 1;
+/// Header flag bit: a delta-provenance section trails the file.
+const FLAG_DELTA: u16 = 2;
 /// Fixed-size `.cgr` header: magic + version + flags + n + arcs.
 const HEADER_BYTES: usize = 4 + 2 + 2 + 8 + 8;
 
@@ -409,6 +420,46 @@ pub struct CgrFile {
     pub graph: Graph,
     /// Features/labels/masks, when the file carries them.
     pub data: Option<NodeData>,
+    /// Update-history counters, when the graph was produced by
+    /// `capgnn update` (delta-provenance section).
+    pub delta: Option<DeltaProvenance>,
+}
+
+/// Update-history counters stored in a `.cgr` delta-provenance section:
+/// a snapshot of [`super::delta::DeltaStats`] at save time, so an
+/// updated graph records how it came to be and `capgnn inspect` can
+/// report it. Seven u64 fields, stored in declaration order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaProvenance {
+    /// Update batches applied.
+    pub batches: u64,
+    /// Effective edge insertions.
+    pub inserts: u64,
+    /// Effective edge deletions.
+    pub deletes: u64,
+    /// Redundant updates (inserting a present edge, deleting an absent
+    /// one).
+    pub redundant: u64,
+    /// Self-loop updates ignored.
+    pub self_loops: u64,
+    /// Compactions folded into the base CSR.
+    pub compactions: u64,
+    /// Batches applied since the last compaction.
+    pub depth: u64,
+}
+
+impl From<&super::delta::DeltaStats> for DeltaProvenance {
+    fn from(s: &super::delta::DeltaStats) -> DeltaProvenance {
+        DeltaProvenance {
+            batches: s.batches,
+            inserts: s.inserts,
+            deletes: s.deletes,
+            redundant: s.redundant,
+            self_loops: s.self_loops,
+            compactions: s.compactions,
+            depth: s.depth,
+        }
+    }
 }
 
 /// Write `graph` (and, when given, `data`) to `path` in the `.cgr`
@@ -416,6 +467,19 @@ pub struct CgrFile {
 /// indices, labels, masks and every `f32` feature bit come back
 /// identical.
 pub fn save_cgr(path: &Path, graph: &Graph, data: Option<&NodeData>) -> Result<(), IoError> {
+    save_cgr_with_delta(path, graph, data, None)
+}
+
+/// [`save_cgr`] plus an optional delta-provenance trailer. Passing
+/// `None` for `delta` produces a byte-identical file to [`save_cgr`];
+/// `Some` sets header flag bit 1 and appends the seven counters after
+/// the last section.
+pub fn save_cgr_with_delta(
+    path: &Path,
+    graph: &Graph,
+    data: Option<&NodeData>,
+    delta: Option<&DeltaProvenance>,
+) -> Result<(), IoError> {
     if let Some(d) = data {
         if d.n() != graph.n() {
             return Err(IoError::Corrupt(format!(
@@ -429,7 +493,10 @@ pub fn save_cgr(path: &Path, graph: &Graph, data: Option<&NodeData>) -> Result<(
     let mut w = std::io::BufWriter::new(f);
     w.write_all(&CGR_MAGIC)?;
     w.write_all(&CGR_VERSION.to_le_bytes())?;
-    let flags: u16 = if data.is_some() { FLAG_NODE_DATA } else { 0 };
+    let mut flags: u16 = if data.is_some() { FLAG_NODE_DATA } else { 0 };
+    if delta.is_some() {
+        flags |= FLAG_DELTA;
+    }
     w.write_all(&flags.to_le_bytes())?;
     w.write_all(&(graph.n() as u64).to_le_bytes())?;
     w.write_all(&(graph.arcs() as u64).to_le_bytes())?;
@@ -451,6 +518,12 @@ pub fn save_cgr(path: &Path, graph: &Graph, data: Option<&NodeData>) -> Result<(
         for v in 0..d.n() {
             let b = (d.train_mask[v] as u8) | ((d.val_mask[v] as u8) << 1) | ((d.test_mask[v] as u8) << 2);
             w.write_all(&[b])?;
+        }
+    }
+    if let Some(p) = delta {
+        for c in [p.batches, p.inserts, p.deletes, p.redundant, p.self_loops, p.compactions, p.depth]
+        {
+            w.write_all(&c.to_le_bytes())?;
         }
     }
     w.flush()?;
@@ -529,7 +602,7 @@ pub fn load_cgr_bytes(bytes: &[u8]) -> Result<CgrFile, IoError> {
         return Err(IoError::UnsupportedVersion(version));
     }
     let flags = c.u16("header")?;
-    if flags & !FLAG_NODE_DATA != 0 {
+    if flags & !(FLAG_NODE_DATA | FLAG_DELTA) != 0 {
         return Err(IoError::Corrupt(format!("unknown header flags {flags:#06x}")));
     }
     let n64 = c.u64("header")?;
@@ -614,13 +687,26 @@ pub fn load_cgr_bytes(bytes: &[u8]) -> Result<CgrFile, IoError> {
     } else {
         None
     };
+    let delta = if flags & FLAG_DELTA != 0 {
+        Some(DeltaProvenance {
+            batches: c.u64("delta provenance")?,
+            inserts: c.u64("delta provenance")?,
+            deletes: c.u64("delta provenance")?,
+            redundant: c.u64("delta provenance")?,
+            self_loops: c.u64("delta provenance")?,
+            compactions: c.u64("delta provenance")?,
+            depth: c.u64("delta provenance")?,
+        })
+    } else {
+        None
+    };
     if c.pos != bytes.len() {
         return Err(IoError::Corrupt(format!(
             "{} trailing bytes after the last section",
             bytes.len() - c.pos
         )));
     }
-    Ok(CgrFile { graph, data })
+    Ok(CgrFile { graph, data, delta })
 }
 
 /// Load a graph file by extension: `.cgr` → [`load_cgr`], anything else
@@ -633,7 +719,7 @@ pub fn load_graph_file(path: &Path) -> Result<CgrFile, IoError> {
     } else {
         let list = read_edge_list_path(path, None)?;
         let (graph, _) = build_csr(list.n, &list.edges, 1)?;
-        Ok(CgrFile { graph, data: None })
+        Ok(CgrFile { graph, data: None, delta: None })
     }
 }
 
@@ -720,5 +806,60 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(back.graph, g);
         assert!(back.data.is_none());
+        assert!(back.delta.is_none());
+    }
+
+    #[test]
+    fn cgr_roundtrip_with_delta_provenance() {
+        let mut rng = Rng::new(6);
+        let g = Graph::random(30, 90, &mut rng);
+        let prov = DeltaProvenance {
+            batches: 5,
+            inserts: 12,
+            deletes: 3,
+            redundant: 2,
+            self_loops: 1,
+            compactions: 1,
+            depth: 0,
+        };
+        let path = std::env::temp_dir()
+            .join(format!("capgnn-io-delta-{}.cgr", std::process::id()));
+        save_cgr_with_delta(&path, &g, None, Some(&prov)).unwrap();
+        let back = load_cgr(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.graph, g);
+        assert_eq!(back.delta, Some(prov));
+
+        // Without a trailer the writer stays byte-identical to save_cgr.
+        let a = std::env::temp_dir().join(format!("capgnn-io-a-{}.cgr", std::process::id()));
+        let b = std::env::temp_dir().join(format!("capgnn-io-b-{}.cgr", std::process::id()));
+        save_cgr(&a, &g, None).unwrap();
+        save_cgr_with_delta(&b, &g, None, None).unwrap();
+        let (ba, bb) = (std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+        assert_eq!(ba, bb);
+    }
+
+    #[test]
+    fn unknown_flag_bits_are_still_rejected() {
+        let mut rng = Rng::new(7);
+        let g = Graph::random(10, 20, &mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("capgnn-io-flags-{}.cgr", std::process::id()));
+        save_cgr(&path, &g, None).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        bytes[6] |= 0x04; // set an undefined flag bit
+        match load_cgr_bytes(&bytes) {
+            Err(IoError::Corrupt(msg)) => assert!(msg.contains("unknown header flags")),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // A delta flag with no trailer is a typed truncation, not a panic.
+        bytes[6] = FLAG_DELTA as u8;
+        match load_cgr_bytes(&bytes) {
+            Err(IoError::Truncated { section, .. }) => assert_eq!(section, "delta provenance"),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
     }
 }

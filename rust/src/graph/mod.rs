@@ -4,6 +4,7 @@
 
 pub mod csr;
 pub mod datasets;
+pub mod delta;
 pub mod features;
 pub mod generator;
 pub mod io;
@@ -11,7 +12,8 @@ pub mod reorder;
 pub mod sparse;
 
 pub use csr::Graph;
+pub use delta::{DeltaGraph, DeltaStats, Update, UpdateBatch};
 pub use datasets::{spec_by_name, Dataset, DatasetSource, DatasetSpec, SPECS};
 pub use features::NodeData;
-pub use io::{CgrFile, IoError};
+pub use io::{CgrFile, DeltaProvenance, IoError};
 pub use sparse::{CsrMat, SparseAdj};

@@ -5,6 +5,7 @@
 //!   serve      answer online inference requests over a trained .cgm model
 //!   partition  run a partitioner (+ optional RAPA) and print halo stats
 //!   ingest     build a binary .cgr graph from a text edge list
+//!   update     apply edge-update batches to a graph, write a new .cgr
 //!   inspect    print and validate a .cgr file's header and stats
 //!   device     print the simulated-testbed Table 1
 //!   expt <id>  run a paper experiment (fig4…tab9; see DESIGN.md)
@@ -21,7 +22,7 @@ use capgnn::partition::halo::halo_stats;
 use capgnn::partition::rapa::{self, RapaConfig};
 use capgnn::runtime::Manifest;
 use capgnn::serve::{run_driver, zipf_workload, Server};
-use capgnn::train::{RunOptions, TrainMode};
+use capgnn::train::{GraphMode, RunOptions, TrainMode};
 use capgnn::util::table::fmt_secs;
 use capgnn::util::{Args, Rng, Table};
 
@@ -33,6 +34,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "partition" => cmd_partition(&args),
         "ingest" => cmd_ingest(&args),
+        "update" => cmd_update(&args),
         "inspect" => cmd_inspect(&args),
         "device" => {
             expt::device_tab::tab1(expt::Ctx::from_args(&args));
@@ -111,7 +113,21 @@ COMMANDS:
               --resume C.cgk     continue a checkpointed run; the
                                  config/dataset fingerprint must match,
                                  and the result is bit-identical to an
-                                 uninterrupted run]
+                                 uninterrupted run
+              --updates file:D   interleave edge-update batches (one
+                                 `+ u v`/`- u v` per line, batches split
+                                 by `---`) with training epochs; cached
+                                 rows touched by an update are
+                                 invalidated, and results are
+                                 bit-identical to rebuilding the graph
+                                 from scratch at every update point
+                                 (full-batch only; excludes --checkpoint)
+              --update-every N   epochs between update points (default 1)
+              --drift-threshold T  repartition when RAPA load drift
+                                 Std(lambda)/mean exceeds T (default 0.15)
+              --compact-every K  fold the delta log into the base CSR
+                                 every K batches (default 4; never
+                                 changes results, only log depth)]
   serve      --model m.cgm      trained artifact (from train --save-model)
              --dataset rt|file:<path> --scale 1.0 --seed 42
              [--fanout 10,5     neighbors per layer (default 10 each;
@@ -147,10 +163,15 @@ COMMANDS:
               --with-node-data  embed deterministic synthetic features/
                                 labels/masks (--seed) so the file is
                                 self-contained]
+  update     <graph.cgr|edges.txt> --updates file:<deltas> -o <out.cgr>
+                                apply edge-update batches and write the
+                                updated graph with a delta-provenance
+                                trailer (inspect reports it; node data
+                                carries through unchanged)
   inspect    <graph.cgr>        print header, sizes, degree stats with
                                 out-degree percentiles (fanout guidance
-                                for sampled training) and validate the
-                                CSR invariants
+                                for sampled training), delta provenance,
+                                and validate the CSR invariants
   device     print the simulated GPU testbed (paper Table 1)
   expt <id>  fig4 fig5 fig6 tab1 fig14 fig15 fig16 fig17 fig19 fig20
              fig21 fig22 tab7 [--full] tab8 tab9   [--quick]
@@ -219,6 +240,83 @@ fn cmd_train(args: &Args) -> i32 {
         },
         None => None,
     };
+    // `--updates` routes through the dynamic-graph driver: update
+    // batches interleave with epochs, stale cached rows are invalidated,
+    // and RAPA drift decides when to repartition. The result is
+    // bit-identical to rebuilding the graph from scratch at every
+    // update point (asserted in rust/tests/dynamic.rs).
+    if let Some(dyn_cfg) = &spec.dynamic {
+        if patience.is_some() {
+            eprintln!("error: --early-stop does not apply to dynamic-update runs");
+            return 2;
+        }
+        println!(
+            "dynamic: {} update batch(es), one every {} epoch(s) | drift threshold {} | compact every {} batches",
+            dyn_cfg.batches.len(),
+            dyn_cfg.update_every,
+            dyn_cfg.drift_threshold,
+            dyn_cfg.compact_every,
+        );
+        let out = match capgnn::train::run_dynamic(
+            &spec.dataset,
+            &cluster,
+            backend.as_mut(),
+            &spec.train,
+            dyn_cfg,
+            GraphMode::Delta,
+        ) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("training failed: {e}");
+                return 1;
+            }
+        };
+        let r = &out.report;
+        println!(
+            "epochs={} total={}s comm={}s (sim) | loss {:.4} -> {:.4} | best val acc {:.2}% | test acc {:.2}%",
+            r.epoch_times.len(),
+            fmt_secs(r.total_time()),
+            fmt_secs(r.total_comm()),
+            r.losses.first().copied().unwrap_or(f32::NAN),
+            r.losses.last().copied().unwrap_or(f32::NAN),
+            r.best_val_acc() * 100.0,
+            r.test_acc * 100.0,
+        );
+        println!(
+            "cache: {:.1}% hit rate, {} fills, {} invalidations | bytes moved {} saved {}",
+            r.cache.hit_rate() * 100.0,
+            r.cache.fills,
+            r.cache.invalidations,
+            r.bytes_moved,
+            r.bytes_saved,
+        );
+        let s = &out.stats;
+        println!(
+            "updates: {} batch(es) applied ({} inserts, {} deletes, {} redundant, {} self-loops ignored) | {} compaction(s), depth {}",
+            s.batches, s.inserts, s.deletes, s.redundant, s.self_loops, s.compactions, s.depth,
+        );
+        println!(
+            "invalidation: {} cached rows dropped | repartitions: {} of {} update points | drift per update: [{}]",
+            out.invalidated,
+            out.repartitions,
+            out.drift.len(),
+            out.drift.iter().map(|d| format!("{d:.3}")).collect::<Vec<_>>().join(", "),
+        );
+        if let Some(path) = args.get("save-model") {
+            match out.model.save(std::path::Path::new(path)) {
+                Ok(()) => println!(
+                    "saved model artifact to {path} ({} layers, {} params); serve it with `capgnn serve --model {path}`",
+                    out.model.layers(),
+                    out.model.model.param_count(),
+                ),
+                Err(e) => {
+                    eprintln!("saving {path}: {e}");
+                    return 1;
+                }
+            }
+        }
+        return 0;
+    }
     if let Some(path) = &spec.options.resume {
         println!("resuming from checkpoint {path}");
     }
@@ -580,6 +678,113 @@ fn cmd_ingest(args: &Args) -> i32 {
     0
 }
 
+/// `capgnn update <graph.cgr|edges.txt> --updates file:<deltas> -o <out.cgr>`:
+/// apply edge-update batches to an on-disk graph and write the updated
+/// graph back as a `.cgr` with a delta-provenance trailer. Node data is
+/// carried through unchanged; provenance counters accumulate across
+/// repeated updates of the same file.
+fn cmd_update(args: &Args) -> i32 {
+    // Positionals look like ["update", input, "-o", output]; accept
+    // `--out <path>` as the long-form spelling (same as ingest).
+    let mut input: Option<&str> = None;
+    let mut output: Option<String> = args.get("out").map(|s| s.to_string());
+    let mut i = 1;
+    while i < args.positional.len() {
+        let tok = args.positional[i].as_str();
+        if tok == "-o" {
+            match args.positional.get(i + 1) {
+                Some(v) => {
+                    output = Some(v.clone());
+                    i += 2;
+                    continue;
+                }
+                None => {
+                    eprintln!("error: -o needs an output path");
+                    return 2;
+                }
+            }
+        }
+        if input.is_none() {
+            input = Some(tok);
+        } else {
+            eprintln!("error: unexpected argument {tok:?}");
+            return 2;
+        }
+        i += 1;
+    }
+    let (Some(input), Some(output), Some(spec)) = (input, output, args.get("updates")) else {
+        eprintln!(
+            "usage: capgnn update <graph.cgr|edges.txt> --updates file:<deltas> -o <out.cgr>"
+        );
+        return 2;
+    };
+    let Some(upath) = spec.strip_prefix("file:") else {
+        eprintln!("error: bad --updates {spec}: expected file:<deltas>");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(upath) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading update file {upath}: {e}");
+            return 1;
+        }
+    };
+    let batches = match capgnn::graph::delta::parse_updates(&text) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("parsing update file {upath}: {e}");
+            return 1;
+        }
+    };
+    let file = match io::load_graph_file(std::path::Path::new(input)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("loading {input}: {e}");
+            return 1;
+        }
+    };
+    let capgnn::graph::CgrFile { graph, data, delta: prior } = file;
+    let (n0, m0) = (graph.n(), graph.m());
+    let mut dg = capgnn::graph::DeltaGraph::new(graph);
+    for (bi, batch) in batches.iter().enumerate() {
+        if let Err(e) = dg.apply(batch) {
+            eprintln!("applying batch {bi}: {e}");
+            return 1;
+        }
+    }
+    // Fold the overlay into the base CSR so the written file is a plain
+    // canonical graph; provenance records the history.
+    dg.compact();
+    let stats = dg.stats();
+    let mut prov = io::DeltaProvenance::from(&stats);
+    if let Some(p) = prior {
+        prov.batches += p.batches;
+        prov.inserts += p.inserts;
+        prov.deletes += p.deletes;
+        prov.redundant += p.redundant;
+        prov.self_loops += p.self_loops;
+        prov.compactions += p.compactions;
+    }
+    let updated = dg.base().clone();
+    if let Err(e) =
+        io::save_cgr_with_delta(std::path::Path::new(&output), &updated, data.as_ref(), Some(&prov))
+    {
+        eprintln!("writing {output}: {e}");
+        return 1;
+    }
+    println!(
+        "updated {input}: {} batch(es) ({} inserts, {} deletes, {} redundant, {} self-loops ignored)",
+        stats.batches, stats.inserts, stats.deletes, stats.redundant, stats.self_loops,
+    );
+    println!(
+        "graph: {n0} vertices, {m0} edges -> {} vertices, {} edges | wrote {output}{}",
+        updated.n(),
+        updated.m(),
+        if data.is_some() { " (node data carried through)" } else { "" },
+    );
+    0
+}
+
 /// `capgnn inspect <graph.cgr>`: print the header and structural stats,
 /// and validate the CSR invariants.
 fn cmd_inspect(args: &Args) -> i32 {
@@ -640,6 +845,13 @@ fn cmd_inspect(args: &Args) -> i32 {
             );
         }
         None => println!("node data: none (train synthesizes deterministic features from --seed)"),
+    }
+    match &file.delta {
+        Some(p) => println!(
+            "delta provenance: {} update batch(es) ({} inserts, {} deletes, {} redundant, {} self-loops) | {} compaction(s), log depth {}",
+            p.batches, p.inserts, p.deletes, p.redundant, p.self_loops, p.compactions, p.depth,
+        ),
+        None => println!("delta provenance: none (never touched by `capgnn update`)"),
     }
     match g.check_invariants() {
         Ok(()) => {

@@ -313,6 +313,34 @@ pub fn run_with_partition(
     RapaResult { plan, assignment: ps, trace, lambda, pruned }
 }
 
+/// Relative load imbalance `Std(λ)/mean(λ)` of an *existing* assignment
+/// evaluated against the current graph, with full (unpruned) 1-hop halos.
+///
+/// The dynamic-graph driver (PR 10) calls this after each update batch:
+/// edge inserts/deletes shift per-part edge counts, and once the drift
+/// exceeds `--drift-threshold` the assignment is recomputed from scratch
+/// instead of reused. Returns 0 when the mean load is 0 (degenerate
+/// empty graph), so a threshold comparison never repartitions on noise.
+pub fn lambda_drift(g: &Graph, gpus: &[Gpu], cfg: &RapaConfig, ps: &PartitionSet) -> f64 {
+    let parts = gpus.len();
+    assert_eq!(ps.num_parts, parts);
+    let lambdas: Vec<f64> = (0..parts as u32)
+        .map(|p| {
+            let inner = ps.members(p);
+            let halo = expand_halo(g, ps, p, 1);
+            let (e_all, e_outer) = count_edges(g, &inner, &halo, &ps.assignment, p);
+            let st = PartState { inner, halo, e_all, e_outer };
+            lambda_of(gpus, cfg, &st, parts, p as usize)
+        })
+        .collect();
+    let mean = crate::util::stats::mean(&lambdas);
+    if mean <= 0.0 {
+        0.0
+    } else {
+        crate::util::stats::std_dev(&lambdas) / mean
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,6 +415,30 @@ mod tests {
                 .max(1) as f64;
         // Equal GPUs: METIS is already balanced, pruning should be mild.
         assert!(frac_pruned < 1.0, "pruned fraction {frac_pruned}");
+    }
+
+    #[test]
+    fn lambda_drift_flags_skewed_assignments() {
+        let mut rng = Rng::new(74);
+        let (g, _) = skewed_sbm(400, 4, 10.0, 4.0, 1.4, &mut rng);
+        let gpus = GpuGroup::by_name("x2").unwrap().instantiate(&mut rng);
+        let cfg = RapaConfig::default();
+        let balanced = Method::Metis.partition(&g, gpus.len(), &mut rng);
+        let d_balanced = lambda_drift(&g, &gpus, &cfg, &balanced);
+        assert!(d_balanced.is_finite() && d_balanced >= 0.0);
+        // Cram every vertex but one onto part 0: the relative imbalance
+        // must dwarf the METIS assignment's.
+        let mut assignment = vec![0u32; g.n()];
+        assignment[0] = 1;
+        for p in 2..gpus.len() as u32 {
+            assignment[p as usize] = p;
+        }
+        let skewed = PartitionSet::new(gpus.len(), assignment);
+        let d_skewed = lambda_drift(&g, &gpus, &cfg, &skewed);
+        assert!(
+            d_skewed > d_balanced,
+            "skewed {d_skewed} <= balanced {d_balanced}"
+        );
     }
 
     #[test]

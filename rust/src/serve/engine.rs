@@ -558,6 +558,18 @@ impl ServerHandle {
         self.shed
     }
 
+    /// Drop the cached output rows of `vertices` (dynamic-graph updates,
+    /// PR 10). A server instance serves one immutable graph snapshot, so
+    /// after an update batch the driver restarts serving on the new
+    /// graph; this hook covers the window in between — stale rows are
+    /// dropped immediately (counted as `invalidated` in the report's
+    /// cache stats), and a request for a touched vertex recomputes from
+    /// the snapshot instead of answering from a row the update outdated.
+    /// Returns the number of resident rows dropped.
+    pub fn invalidate(&self, vertices: &[u32]) -> u64 {
+        lock_clean(&self.shared.cache).invalidate(vertices)
+    }
+
     /// Non-blocking response poll.
     pub fn try_recv(&self) -> Option<Response> {
         self.resp_rx.try_recv().ok()
@@ -763,6 +775,26 @@ mod tests {
         let rep = h.shutdown().unwrap();
         assert_eq!(rep.expired, 6, "{rep:?}");
         assert_eq!(rep.responses, 0);
+    }
+
+    #[test]
+    fn handle_invalidation_forces_recompute() {
+        let ds = tiny_dataset(30, 11);
+        let tm = tiny_model(&ds.data, 3);
+        let mut cfg = ServeConfig::new(tm.layers());
+        cfg.fanout = tm_fanout(&tm);
+        cfg.prepopulate = 8; // vertex 0 (star center) is warmed
+        let mut h = Server::start(&ds, tm, &cfg).unwrap();
+        // A dynamic update touched vertex 0: its warmed row must go.
+        assert_eq!(h.invalidate(&[0]), 1);
+        assert_eq!(h.invalidate(&[0]), 0, "already dropped");
+        h.submit(0).unwrap();
+        let resp = h.recv_timeout(Duration::from_secs(5)).expect("response");
+        assert_eq!(resp.vertex, 0);
+        assert!(!resp.cache_hit, "stale row must not answer");
+        let rep = h.shutdown().unwrap();
+        assert_eq!(rep.cache.invalidated, 1);
+        assert_eq!(rep.computed, 1, "recomputed after invalidation");
     }
 
     #[test]

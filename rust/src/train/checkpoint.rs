@@ -17,7 +17,7 @@
 //! header, typed [`IoError`]s for every malformed input, trailing-byte
 //! rejection, and a bit-exact round-trip (floats travel as raw bits).
 //!
-//! # `.cgk` layout (version 1)
+//! # `.cgk` layout (version 2)
 //!
 //! | section | contents |
 //! |---------|----------|
@@ -27,6 +27,10 @@
 //! | report  | every [`TrainReport`] field, vectors length-prefixed |
 //! | cache   | [`CacheSnapshot`]: per-level [`PolicyState`]s + stored rows + counters |
 //! | halo    | per-worker, per-layer historical halo rows |
+//!
+//! Version 2 (PR 10) appends the `invalidations` counter to every
+//! serialized [`TwoLevelStats`] block; version-1 files still parse, with
+//! the counter defaulting to 0.
 
 use crate::cache::twolevel::CacheSnapshot;
 use crate::cache::{PolicyState, TwoLevelStats};
@@ -42,7 +46,7 @@ use std::path::Path;
 pub const CGK_MAGIC: [u8; 4] = *b"CGKF";
 
 /// Newest `.cgk` format version this build writes and understands.
-pub const CGK_VERSION: u16 = 1;
+pub const CGK_VERSION: u16 = 2;
 
 /// A full-batch training run frozen at an epoch boundary.
 #[derive(Clone, Debug)]
@@ -72,9 +76,15 @@ pub struct Checkpoint {
 impl Checkpoint {
     /// Serialize to the `.cgk` byte layout (see module docs).
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_versioned(CGK_VERSION)
+    }
+
+    /// Serialize at an explicit (older) format version — the writer half
+    /// of the backward-compatibility contract, exercised by tests.
+    fn to_bytes_versioned(&self, version: u16) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(&CGK_MAGIC);
-        out.extend_from_slice(&CGK_VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&self.fingerprint.to_le_bytes());
         out.extend_from_slice(&self.epoch.to_le_bytes());
         out.push(self.force_refresh as u8);
@@ -83,8 +93,8 @@ impl Checkpoint {
         let model = self.model.to_bytes();
         out.extend_from_slice(&(model.len() as u64).to_le_bytes());
         out.extend_from_slice(&model);
-        put_report(&mut out, &self.report);
-        put_snapshot(&mut out, &self.cache);
+        put_report(&mut out, &self.report, version);
+        put_snapshot(&mut out, &self.cache, version);
         put_u32(&mut out, self.halo_hist.len());
         for worker in &self.halo_hist {
             put_u32(&mut out, worker.len());
@@ -133,8 +143,8 @@ impl Checkpoint {
         };
         let model_len = c.u64("model length")? as usize;
         let model = TrainedModel::from_bytes(c.take(model_len, "embedded model")?)?;
-        let report = get_report(&mut c)?;
-        let cache = get_snapshot(&mut c)?;
+        let report = get_report(&mut c, version)?;
+        let cache = get_snapshot(&mut c, version)?;
         let workers = c.u32("halo_hist")? as usize;
         let mut halo_hist = Vec::with_capacity(workers.min(1 << 16));
         for _ in 0..workers {
@@ -247,7 +257,7 @@ fn put_stage(out: &mut Vec<u8>, s: &StageTimes) {
     }
 }
 
-fn put_two_level(out: &mut Vec<u8>, s: &TwoLevelStats) {
+fn put_two_level(out: &mut Vec<u8>, s: &TwoLevelStats, version: u16) {
     for v in [
         s.checks,
         s.local_hits,
@@ -261,9 +271,13 @@ fn put_two_level(out: &mut Vec<u8>, s: &TwoLevelStats) {
     ] {
         out.extend_from_slice(&v.to_le_bytes());
     }
+    // v2 appended the invalidation counter (PR 10).
+    if version >= 2 {
+        out.extend_from_slice(&s.invalidations.to_le_bytes());
+    }
 }
 
-fn put_report(out: &mut Vec<u8>, r: &TrainReport) {
+fn put_report(out: &mut Vec<u8>, r: &TrainReport, version: u16) {
     put_f64s(out, &r.epoch_times);
     put_f64s(out, &r.comm_times);
     put_f32s(out, &r.losses);
@@ -285,7 +299,7 @@ fn put_report(out: &mut Vec<u8>, r: &TrainReport) {
     ] {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    put_two_level(out, &r.cache);
+    put_two_level(out, &r.cache, version);
     put_f64s(out, &r.epoch_wall);
     for v in [r.wall_stages.plan, r.wall_stages.execute, r.wall_stages.reduce, r.wallclock] {
         out.extend_from_slice(&v.to_bits().to_le_bytes());
@@ -317,7 +331,7 @@ fn put_rows(out: &mut Vec<u8>, rows: &[(u64, Vec<f32>, u64)]) {
     }
 }
 
-fn put_snapshot(out: &mut Vec<u8>, s: &CacheSnapshot) {
+fn put_snapshot(out: &mut Vec<u8>, s: &CacheSnapshot, version: u16) {
     put_u32(out, s.locals.len());
     for p in &s.locals {
         put_policy(out, p);
@@ -334,7 +348,7 @@ fn put_snapshot(out: &mut Vec<u8>, s: &CacheSnapshot) {
     for rows in &s.global_rows {
         put_rows(out, rows);
     }
-    put_two_level(out, &s.stats);
+    put_two_level(out, &s.stats, version);
 }
 
 // ---- readers ---------------------------------------------------------
@@ -350,7 +364,7 @@ fn get_stage(c: &mut Cur<'_>) -> Result<StageTimes, IoError> {
     })
 }
 
-fn get_two_level(c: &mut Cur<'_>) -> Result<TwoLevelStats, IoError> {
+fn get_two_level(c: &mut Cur<'_>, version: u16) -> Result<TwoLevelStats, IoError> {
     Ok(TwoLevelStats {
         checks: c.u64("cache stats")?,
         local_hits: c.u64("cache stats")?,
@@ -361,10 +375,12 @@ fn get_two_level(c: &mut Cur<'_>) -> Result<TwoLevelStats, IoError> {
         local_refusals: c.u64("cache stats")?,
         global_refusals: c.u64("cache stats")?,
         fills: c.u64("cache stats")?,
+        // v1 predates the invalidation counter: default 0.
+        invalidations: if version >= 2 { c.u64("cache stats")? } else { 0 },
     })
 }
 
-fn get_report(c: &mut Cur<'_>) -> Result<TrainReport, IoError> {
+fn get_report(c: &mut Cur<'_>, version: u16) -> Result<TrainReport, IoError> {
     let epoch_times = c.f64_vec("report")?;
     let comm_times = c.f64_vec("report")?;
     let losses = c.f32_vec("report")?;
@@ -384,7 +400,7 @@ fn get_report(c: &mut Cur<'_>) -> Result<TrainReport, IoError> {
     let bytes_saved = c.u64("report")?;
     let cross_bytes_moved = c.u64("report")?;
     let cross_bytes_naive = c.u64("report")?;
-    let cache = get_two_level(c)?;
+    let cache = get_two_level(c, version)?;
     let epoch_wall = c.f64_vec("report")?;
     let wall_stages = WallStages {
         plan: c.f64("report")?,
@@ -446,7 +462,7 @@ fn get_rows(c: &mut Cur<'_>) -> Result<Vec<(u64, Vec<f32>, u64)>, IoError> {
     Ok(rows)
 }
 
-fn get_snapshot(c: &mut Cur<'_>) -> Result<CacheSnapshot, IoError> {
+fn get_snapshot(c: &mut Cur<'_>, version: u16) -> Result<CacheSnapshot, IoError> {
     let n_locals = c.u32("cache snapshot")? as usize;
     let mut locals = Vec::with_capacity(n_locals.min(1 << 16));
     for _ in 0..n_locals {
@@ -467,7 +483,13 @@ fn get_snapshot(c: &mut Cur<'_>) -> Result<CacheSnapshot, IoError> {
     for _ in 0..n_gs {
         global_rows.push(get_rows(c)?);
     }
-    Ok(CacheSnapshot { locals, globals, local_rows, global_rows, stats: get_two_level(c)? })
+    Ok(CacheSnapshot {
+        locals,
+        globals,
+        local_rows,
+        global_rows,
+        stats: get_two_level(c, version)?,
+    })
 }
 
 /// Bounds-checked little-endian reader (same shape as the `.cgm`
@@ -586,7 +608,12 @@ mod tests {
             globals: vec![PolicyState::default()],
             local_rows: vec![vec![(7, vec![1.0, -0.5], 1)]],
             global_rows: vec![Vec::new()],
-            stats: TwoLevelStats { checks: 10, local_hits: 4, ..Default::default() },
+            stats: TwoLevelStats {
+                checks: 10,
+                local_hits: 4,
+                invalidations: 3,
+                ..Default::default()
+            },
         };
         Checkpoint {
             fingerprint: 0xDEAD_BEEF_0BAD_F00D,
@@ -667,6 +694,22 @@ mod tests {
         let mut bad = bytes;
         bad[43] = b'Z';
         assert!(Checkpoint::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn version_1_files_still_parse_with_zero_invalidations() {
+        let ck = sample();
+        let v1 = ck.to_bytes_versioned(1);
+        let back = Checkpoint::from_bytes(&v1).unwrap();
+        // Every pre-v2 field survives; the appended counter defaults.
+        assert_eq!(back.report.losses, ck.report.losses);
+        assert_eq!(back.cache.locals, ck.cache.locals);
+        assert_eq!(back.cache.stats.checks, ck.cache.stats.checks);
+        assert_eq!(back.cache.stats.invalidations, 0);
+        assert_eq!(back.report.cache.invalidations, 0);
+        // And the v2 round trip keeps the live counter.
+        let v2 = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(v2.cache.stats.invalidations, 3);
     }
 
     #[test]

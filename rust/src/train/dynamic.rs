@@ -1,0 +1,446 @@
+//! Dynamic-graph training: interleave edge-update batches with training
+//! epochs (PR 10).
+//!
+//! [`run_dynamic`] drives one training run over a graph that changes
+//! while it trains: every `--update-every` epochs the next update batch
+//! is applied, the per-worker plans and halos are rebuilt against the
+//! new topology, and training continues with the *same* model weights,
+//! epoch counter, accumulated report and (invalidated, resized)
+//! two-level cache — one run, stitched from per-topology phases.
+//!
+//! ## The delta-vs-rebuild equivalence
+//!
+//! The driver is parameterized by [`GraphMode`]: `Delta` maintains a
+//! [`DeltaGraph`] (overlay log over the base CSR, compacted every
+//! `--compact-every` batches), `Rebuild` maintains a plain normalized
+//! edge set and rebuilds the CSR from scratch at every update point.
+//! Both modes make identical decisions everywhere else, so a bitwise
+//! run-level comparison (losses, bytes, cache counters, serve digests)
+//! reduces to graph-maintenance correctness: `DeltaGraph::snapshot` must
+//! equal the from-scratch build. [`crate::graph::Graph::from_edges`]
+//! canonicalizes (sorts, dedups, drops self-loops), which makes the CSR
+//! unique per edge *membership* — `tests/dynamic.rs` asserts the whole
+//! chain across executors × caching × strategies × cluster shapes.
+//!
+//! ## Invalidation and repartitioning
+//!
+//! An update batch returns the *touched* vertices (endpoints of
+//! effective inserts/deletes only — redundant updates and self-loops
+//! touch nothing). Their cached rows are stale in every copy, so the
+//! carried [`TwoLevelCache`] drops them (counted as `invalidations`,
+//! not evictions) before the next phase adopts it. After each batch the
+//! RAPA load drift ([`rapa::lambda_drift`]) of the carried assignment is
+//! evaluated against the new graph; while it stays at or below
+//! `--drift-threshold` the assignment is reused (the vertex universe is
+//! fixed, so it stays valid), otherwise the next phase repartitions from
+//! scratch.
+
+use crate::dist::Cluster;
+use crate::graph::delta::{DeltaGraph, DeltaStats, Update, UpdateBatch};
+use crate::graph::{Dataset, Graph};
+use crate::model::TrainedModel;
+use crate::partition::{rapa, PartitionSet};
+use crate::runtime::Backend;
+use crate::train::session::{Session, SessionCarry};
+use crate::train::trainer::{TrainConfig, TrainMode};
+use crate::train::TrainReport;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeSet;
+
+/// Knobs of a dynamic run, deliberately *outside* [`TrainConfig`]: the
+/// checkpoint fingerprint hashes the train config, and a dynamic run's
+/// phases must fingerprint exactly like the static runs they stitch.
+#[derive(Clone, Debug)]
+pub struct DynamicConfig {
+    /// Update batches, applied in order at the update points.
+    pub batches: Vec<UpdateBatch>,
+    /// Epochs trained between consecutive update points.
+    pub update_every: usize,
+    /// Repartition when `Std(λ)/mean(λ)` of the carried assignment
+    /// exceeds this after an update (relative RAPA load imbalance).
+    pub drift_threshold: f64,
+    /// Compact the delta log every this many applied batches (0 = never;
+    /// ignored in [`GraphMode::Rebuild`]). Compaction never changes
+    /// results — `DeltaGraph::snapshot` is canonical either way.
+    pub compact_every: usize,
+}
+
+impl Default for DynamicConfig {
+    fn default() -> DynamicConfig {
+        DynamicConfig {
+            batches: Vec::new(),
+            update_every: 1,
+            drift_threshold: 0.15,
+            compact_every: 4,
+        }
+    }
+}
+
+/// How the evolving graph is maintained between update points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphMode {
+    /// Incremental: a [`DeltaGraph`] overlay log, compacted periodically.
+    Delta,
+    /// Reference arm: a normalized edge set rebuilt through
+    /// [`Graph::from_edges`] at every update point. Exists to *prove*
+    /// the delta path — every observable must match it bit for bit.
+    Rebuild,
+}
+
+impl GraphMode {
+    /// Short name for reports ("delta" / "rebuild").
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphMode::Delta => "delta",
+            GraphMode::Rebuild => "rebuild",
+        }
+    }
+}
+
+/// What a dynamic run produced beyond the ordinary training outcome.
+#[derive(Debug)]
+pub struct DynamicOutcome {
+    /// The stitched per-epoch report across every phase.
+    pub report: TrainReport,
+    /// The trained weights after the final phase.
+    pub model: TrainedModel,
+    /// Delta-log counters (in [`GraphMode::Rebuild`] the effective
+    /// insert/delete/redundant/self-loop counts are maintained
+    /// identically; `depth`/`compactions` stay 0 — there is no log).
+    pub stats: DeltaStats,
+    /// Cache rows invalidated across all update points (two-level rows;
+    /// 0 when no update touched a resident row).
+    pub invalidated: u64,
+    /// Update points whose drift exceeded the threshold (each one cost
+    /// a fresh partition in the following phase).
+    pub repartitions: usize,
+    /// RAPA load drift measured after each update batch, in order.
+    pub drift: Vec<f64>,
+    /// Touched vertices per update batch (endpoints of effective
+    /// changes), in order — the exact sets the cache invalidated.
+    pub touched: Vec<Vec<u32>>,
+}
+
+/// The evolving graph, behind the [`GraphMode`] seam. Both arms apply
+/// updates sequentially with last-write-wins semantics per edge, count
+/// the same effective/redundant/self-loop outcomes, and report the same
+/// touched endpoints — so any divergence between them is a
+/// graph-maintenance bug, not a bookkeeping artifact.
+enum GraphState {
+    Delta(DeltaGraph),
+    Rebuild {
+        n: usize,
+        /// Normalized undirected edges `(u, v)` with `u < v`.
+        edges: BTreeSet<(u32, u32)>,
+        stats: DeltaStats,
+    },
+}
+
+impl GraphState {
+    fn new(mode: GraphMode, base: &Graph) -> GraphState {
+        match mode {
+            GraphMode::Delta => GraphState::Delta(DeltaGraph::new(base.clone())),
+            GraphMode::Rebuild => {
+                let mut edges = BTreeSet::new();
+                for u in 0..base.n() as u32 {
+                    for &v in base.nbrs(u) {
+                        if u < v {
+                            edges.insert((u, v));
+                        }
+                    }
+                }
+                GraphState::Rebuild { n: base.n(), edges, stats: DeltaStats::default() }
+            }
+        }
+    }
+
+    /// Apply one batch; returns the touched vertices (sorted, deduped).
+    fn apply(&mut self, batch: &[Update]) -> Result<Vec<u32>> {
+        match self {
+            GraphState::Delta(dg) => {
+                let out = dg.apply(batch).map_err(|e| anyhow!("{e}"))?;
+                Ok(out.touched)
+            }
+            GraphState::Rebuild { n, edges, stats } => {
+                let mut touched = BTreeSet::new();
+                for (i, up) in batch.iter().enumerate() {
+                    let (a, b) = up.endpoints();
+                    for x in [a, b] {
+                        if x as usize >= *n {
+                            return Err(anyhow!(
+                                "update {i}: vertex {x} out of range (graph has {n} vertices)"
+                            ));
+                        }
+                    }
+                    if a == b {
+                        stats.self_loops += 1;
+                        continue;
+                    }
+                    let e = (a.min(b), a.max(b));
+                    let effective = match up {
+                        Update::Insert(..) => edges.insert(e),
+                        Update::Delete(..) => edges.remove(&e),
+                    };
+                    if effective {
+                        match up {
+                            Update::Insert(..) => stats.inserts += 1,
+                            Update::Delete(..) => stats.deletes += 1,
+                        }
+                        touched.insert(a);
+                        touched.insert(b);
+                    } else {
+                        stats.redundant += 1;
+                    }
+                }
+                stats.batches += 1;
+                Ok(touched.into_iter().collect())
+            }
+        }
+    }
+
+    /// The current graph as a canonical CSR.
+    fn graph(&self) -> Graph {
+        match self {
+            GraphState::Delta(dg) => dg.snapshot(),
+            GraphState::Rebuild { n, edges, .. } => {
+                let list: Vec<(u32, u32)> = edges.iter().copied().collect();
+                Graph::from_edges(*n, &list)
+            }
+        }
+    }
+
+    fn maybe_compact(&mut self, every: usize) {
+        if let GraphState::Delta(dg) = self {
+            if every > 0 && dg.stats().batches % every as u64 == 0 {
+                dg.compact();
+            }
+        }
+    }
+
+    fn stats(&self) -> DeltaStats {
+        match self {
+            GraphState::Delta(dg) => dg.stats(),
+            GraphState::Rebuild { stats, .. } => *stats,
+        }
+    }
+}
+
+/// Epochs the phase after update point `k` trains (`k` = batches already
+/// applied). Update points sit at `update_every, 2·update_every, …`;
+/// whatever remains of `cfg.epochs` after the last batch runs in the
+/// final phase. When the epoch budget runs out early, the remaining
+/// batches still apply (zero-epoch phases keep the graph/cache/report
+/// bookkeeping uniform).
+fn phase_epochs(total: usize, update_every: usize, k: usize, n_batches: usize) -> usize {
+    let done = (update_every * k).min(total);
+    if k < n_batches {
+        (update_every * (k + 1)).min(total) - done
+    } else {
+        total - done
+    }
+}
+
+/// Train `cfg.epochs` epochs over a graph that changes mid-run: apply
+/// `dyn_cfg.batches` one by one every `dyn_cfg.update_every` epochs,
+/// invalidating the touched vertices' cached rows and rebuilding the
+/// session against each new topology while the model, epoch counter,
+/// report and cache carry across. Full-batch only — the sampled path
+/// has no persistent halo plan to invalidate against.
+pub fn run_dynamic(
+    dataset: &Dataset,
+    cluster: &Cluster,
+    backend: &mut dyn Backend,
+    cfg: &TrainConfig,
+    dyn_cfg: &DynamicConfig,
+    mode: GraphMode,
+) -> Result<DynamicOutcome> {
+    if cfg.mode != TrainMode::FullBatch {
+        return Err(anyhow!(
+            "dynamic updates apply to full-batch training only; drop --mode sampled"
+        ));
+    }
+    if dyn_cfg.update_every == 0 {
+        return Err(anyhow!("--update-every must be at least 1"));
+    }
+    let mut rcfg = cfg.rapa;
+    rcfg.f_dim = dataset.data.f_dim;
+    rcfg.layers = cfg.layers;
+
+    let mut state = GraphState::new(mode, &dataset.graph);
+    let mut carry: Option<SessionCarry> = None;
+    let mut assignment: Option<PartitionSet> = None;
+    let mut invalidated = 0u64;
+    let mut repartitions = 0usize;
+    let mut drift = Vec::with_capacity(dyn_cfg.batches.len());
+    let mut touched_log = Vec::with_capacity(dyn_cfg.batches.len());
+    let n_batches = dyn_cfg.batches.len();
+
+    let mut current = Dataset {
+        name: dataset.name,
+        label: dataset.label,
+        graph: dataset.graph.clone(),
+        data: dataset.data.clone(),
+    };
+
+    for k in 0..=n_batches {
+        let epochs = phase_epochs(cfg.epochs, dyn_cfg.update_every, k, n_batches);
+        let mut session =
+            Session::build_with_assignment(&current, cluster, backend, cfg, assignment.take())?;
+        if let Some(c) = carry.take() {
+            session.adopt_carry(c)?;
+        }
+        let target = session.epoch() + epochs as u64;
+        while session.epoch() < target {
+            session.run_epoch()?;
+        }
+
+        if k == n_batches {
+            // Final phase: close the run.
+            let (report, model) = session.finish()?;
+            return Ok(DynamicOutcome {
+                report,
+                model,
+                stats: state.stats(),
+                invalidated,
+                repartitions,
+                drift,
+                touched: touched_log,
+            });
+        }
+
+        // Update point: tear down, mutate the graph, invalidate, decide
+        // whether the assignment survives, and carry into the next phase.
+        let kept_assignment = session.assignment().clone();
+        let epochs_done = session.epoch();
+        let (report, model, mut cache) = session.dismantle();
+        let touched = state.apply(&dyn_cfg.batches[k])?;
+        state.maybe_compact(dyn_cfg.compact_every);
+        invalidated += cache.invalidate_vertices(&touched, cfg.layers);
+        touched_log.push(touched);
+        current.graph = state.graph();
+
+        let d = rapa::lambda_drift(&current.graph, cluster.gpus(), &rcfg, &kept_assignment);
+        drift.push(d);
+        if d > dyn_cfg.drift_threshold {
+            repartitions += 1;
+            assignment = None;
+        } else {
+            assignment = Some(kept_assignment);
+        }
+        carry = Some(SessionCarry { model, epoch: epochs_done, report, cache: Some(cache) });
+    }
+    unreachable!("the k == n_batches arm returns");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Cluster;
+    use crate::graph::datasets::tiny;
+    use crate::runtime::NativeBackend;
+
+    fn tiny_cfg(epochs: usize) -> TrainConfig {
+        TrainConfig {
+            hidden: 16,
+            layers: 2,
+            lr: 0.05,
+            ..TrainConfig::capgnn(epochs)
+        }
+    }
+
+    #[test]
+    fn zero_batches_matches_a_static_run() {
+        let ds = tiny(21);
+        let cluster = Cluster::preset("2M-2D").unwrap();
+        let cfg = tiny_cfg(4);
+        let mut b1 = NativeBackend::new();
+        let dyn_out = run_dynamic(
+            &ds,
+            &cluster,
+            &mut b1,
+            &cfg,
+            &DynamicConfig::default(),
+            GraphMode::Delta,
+        )
+        .unwrap();
+        let mut b2 = NativeBackend::new();
+        let static_rep = Session::train(&ds, &cluster, &mut b2, &cfg).unwrap();
+        assert_eq!(dyn_out.report.losses.len(), 4);
+        for (a, b) in dyn_out.report.losses.iter().zip(&static_rep.losses) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(dyn_out.report.bytes_moved, static_rep.bytes_moved);
+        assert_eq!(dyn_out.invalidated, 0);
+        assert!(dyn_out.drift.is_empty() && dyn_out.touched.is_empty());
+    }
+
+    #[test]
+    fn phase_schedule_covers_all_epochs_and_batches() {
+        // 7 epochs, update every 2, 2 batches: phases train 2, 2, 3.
+        assert_eq!(phase_epochs(7, 2, 0, 2), 2);
+        assert_eq!(phase_epochs(7, 2, 1, 2), 2);
+        assert_eq!(phase_epochs(7, 2, 2, 2), 3);
+        // Budget shorter than the update points: later phases train 0.
+        assert_eq!(phase_epochs(3, 2, 0, 3), 2);
+        assert_eq!(phase_epochs(3, 2, 1, 3), 1);
+        assert_eq!(phase_epochs(3, 2, 2, 3), 0);
+        assert_eq!(phase_epochs(3, 2, 3, 3), 0);
+        // No batches: one phase with everything.
+        assert_eq!(phase_epochs(5, 2, 0, 0), 5);
+    }
+
+    #[test]
+    fn delta_and_rebuild_agree_on_a_small_run() {
+        let ds = tiny(22);
+        let cluster = Cluster::preset("2M-2D").unwrap();
+        let cfg = tiny_cfg(6);
+        let n = ds.graph.n() as u32;
+        let dyn_cfg = DynamicConfig {
+            batches: vec![
+                vec![Update::Insert(0, n - 1), Update::Delete(0, 1)],
+                vec![Update::Insert(1, 2), Update::Insert(1, 2), Update::Delete(5, 6)],
+            ],
+            update_every: 2,
+            ..DynamicConfig::default()
+        };
+        let mut b1 = NativeBackend::new();
+        let a = run_dynamic(&ds, &cluster, &mut b1, &cfg, &dyn_cfg, GraphMode::Delta).unwrap();
+        let mut b2 = NativeBackend::new();
+        let b = run_dynamic(&ds, &cluster, &mut b2, &cfg, &dyn_cfg, GraphMode::Rebuild).unwrap();
+        assert_eq!(a.report.losses.len(), b.report.losses.len());
+        for (x, y) in a.report.losses.iter().zip(&b.report.losses) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.report.test_acc.to_bits(), b.report.test_acc.to_bits());
+        assert_eq!(a.report.bytes_moved, b.report.bytes_moved);
+        assert_eq!(a.invalidated, b.invalidated);
+        assert_eq!(a.touched, b.touched);
+        assert_eq!(a.drift, b.drift);
+        // Effective-change counters agree; only the log shape differs.
+        assert_eq!(a.stats.inserts, b.stats.inserts);
+        assert_eq!(a.stats.deletes, b.stats.deletes);
+        assert_eq!(a.stats.redundant, b.stats.redundant);
+        assert_eq!(b.stats.compactions, 0);
+    }
+
+    #[test]
+    fn sampled_mode_is_rejected() {
+        let ds = tiny(23);
+        let cluster = Cluster::preset("2M-2D").unwrap();
+        let mut cfg = tiny_cfg(2);
+        cfg.mode = TrainMode::Sampled;
+        cfg.batch_size = 16;
+        cfg.fanout = vec![4, 4];
+        let mut backend = NativeBackend::new();
+        let err = run_dynamic(
+            &ds,
+            &cluster,
+            &mut backend,
+            &cfg,
+            &DynamicConfig::default(),
+            GraphMode::Delta,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("full-batch"), "{err}");
+    }
+}

@@ -13,8 +13,12 @@
 //! - [`CommStrategy`] — the pluggable epoch-execution seam
 //!   (`--strategy halo|1.5d`): [`HaloStrategy`] is the paper's halo
 //!   exchange, [`OneHalfDStrategy`] the CAGNET-style 1.5D block SpMM.
+//! - [`run_dynamic`] — dynamic-graph training (`--updates`, PR 10):
+//!   interleaves edge-update batches with epochs, invalidating cached
+//!   rows and rebuilding plans while model/report/cache carry across.
 
 pub mod checkpoint;
+pub mod dynamic;
 pub mod report;
 pub mod sampled;
 pub mod session;
@@ -22,11 +26,12 @@ pub mod strategy;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use dynamic::{run_dynamic, DynamicConfig, DynamicOutcome, GraphMode};
 pub use report::TrainReport;
 pub use sampled::SampledSession;
 pub use session::{
     ConvergenceLog, EarlyStopping, EpochObserver, EpochStats, EvalStats, PeriodicRefresh,
-    Session, Signal,
+    Session, SessionCarry, Signal,
 };
 pub use strategy::{CommStrategy, HaloStrategy, OneHalfDStrategy, StrategyKind};
 pub use trainer::{

@@ -114,6 +114,54 @@ impl TrainReport {
         }
     }
 
+    /// Merge a later training phase into this report (dynamic runs,
+    /// PR 10: one phase per update batch, stitched into a single run).
+    ///
+    /// Per-epoch vectors append in order, byte/stage counters add, and
+    /// whole-run scalars (strategy, test accuracy, final cache stats)
+    /// take the later phase's value when it recorded one — the final
+    /// phase's [`crate::train::Session::finish`] stamp wins.
+    pub fn absorb(&mut self, next: &TrainReport) {
+        self.epoch_times.extend_from_slice(&next.epoch_times);
+        self.comm_times.extend_from_slice(&next.comm_times);
+        self.losses.extend_from_slice(&next.losses);
+        self.val_accs.extend_from_slice(&next.val_accs);
+        if next.test_acc != 0.0 {
+            self.test_acc = next.test_acc;
+        }
+        self.stage_totals.add(&next.stage_totals);
+        if self.worker_stages.len() == next.worker_stages.len() {
+            for (mine, theirs) in self.worker_stages.iter_mut().zip(&next.worker_stages) {
+                mine.add(theirs);
+            }
+        } else if self.worker_stages.is_empty() {
+            self.worker_stages = next.worker_stages.clone();
+        }
+        if !next.strategy.is_empty() {
+            self.strategy = next.strategy.clone();
+        }
+        self.bytes_moved += next.bytes_moved;
+        self.broadcast_bytes += next.broadcast_bytes;
+        self.bytes_saved += next.bytes_saved;
+        self.cross_bytes_moved += next.cross_bytes_moved;
+        self.cross_bytes_naive += next.cross_bytes_naive;
+        // Cache counters are cumulative within one cache object; a carried
+        // cache is re-stamped at the end of the run, so a later snapshot
+        // that saw any traffic supersedes the earlier one.
+        if next.cache.checks > 0 || next.cache.fills > 0 || next.cache.invalidations > 0 {
+            self.cache = next.cache;
+        }
+        self.epoch_wall.extend_from_slice(&next.epoch_wall);
+        self.wall_stages.add(&next.wall_stages);
+        self.wallclock += next.wallclock;
+        self.rapa_pruned += next.rapa_pruned;
+        self.batches_per_epoch = self.batches_per_epoch.max(next.batches_per_epoch);
+        self.sampled_vertices += next.sampled_vertices;
+        self.epoch_touched.extend_from_slice(&next.epoch_touched);
+        self.peak_block_vertices = self.peak_block_vertices.max(next.peak_block_vertices);
+        self.peak_block_bytes = self.peak_block_bytes.max(next.peak_block_bytes);
+    }
+
     /// Overhead ratio r_overhead = (check+pick)/total (Fig. 19).
     pub fn overhead_ratio(&self) -> f64 {
         let t = self.total_time();
@@ -151,6 +199,41 @@ mod tests {
         assert_eq!(r.best_val_acc(), 0.0);
         assert_eq!(r.total_wall(), 0.0);
         assert_eq!(r.mean_epoch_wall(), 0.0);
+    }
+
+    #[test]
+    fn absorb_appends_vectors_and_sums_counters() {
+        let mut a = TrainReport {
+            losses: vec![1.0, 0.5],
+            val_accs: vec![0.2],
+            epoch_times: vec![1.0],
+            bytes_moved: 100,
+            rapa_pruned: 2,
+            strategy: "halo".to_string(),
+            ..Default::default()
+        };
+        let b = TrainReport {
+            losses: vec![0.25],
+            val_accs: vec![0.4],
+            epoch_times: vec![2.0],
+            bytes_moved: 50,
+            rapa_pruned: 1,
+            test_acc: 0.9,
+            strategy: "halo".to_string(),
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.losses, vec![1.0, 0.5, 0.25]);
+        assert_eq!(a.val_accs, vec![0.2, 0.4]);
+        assert_eq!(a.total_time(), 3.0);
+        assert_eq!(a.bytes_moved, 150);
+        assert_eq!(a.rapa_pruned, 3);
+        assert_eq!(a.test_acc, 0.9);
+        // Absorbing an empty report changes nothing observable.
+        let before = a.losses.clone();
+        a.absorb(&TrainReport::default());
+        assert_eq!(a.losses, before);
+        assert_eq!(a.test_acc, 0.9);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::graph::{Dataset, SparseAdj};
 use crate::model::{layer_stack, GnnModel, Grads, LayerDims, ModelKind, TrainedModel};
 use crate::partition::halo::{build_plan, SubgraphPlan};
 use crate::partition::rapa;
+use crate::partition::PartitionSet;
 use crate::runtime::Backend;
 use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::report::TrainReport;
@@ -240,6 +241,28 @@ pub struct Session<'a> {
     /// Config/dataset digest stamped into `.cgk` checkpoints; resume
     /// refuses a checkpoint whose fingerprint differs.
     fingerprint: u64,
+    /// The vertex→part assignment this session trains under (post-RAPA
+    /// identical to the pre-partitioning: RAPA only prunes halo
+    /// *replicas*). The dynamic driver (PR 10) carries it across update
+    /// batches and reuses it while the RAPA load drift stays small.
+    assignment: PartitionSet,
+}
+
+/// State that survives the per-phase session rebuilds of a dynamic run
+/// (PR 10): an update batch changes the graph, so plans, workers and
+/// halos must be rebuilt — but the model keeps training, the epoch
+/// counter keeps counting, the report keeps accumulating, and the
+/// two-level cache keeps its (invalidated, resized) residents.
+pub struct SessionCarry {
+    /// Model weights to continue training with.
+    pub model: GnnModel,
+    /// Epochs already run (the next epoch gets this index).
+    pub epoch: u64,
+    /// Report accumulated by earlier phases (vectors keep growing).
+    pub report: TrainReport,
+    /// The carried cache, already invalidated for the update's touched
+    /// vertices; `None` starts the phase cold (e.g. `--no-cache`).
+    pub cache: Option<TwoLevelCache>,
 }
 
 impl<'a> Session<'a> {
@@ -251,6 +274,22 @@ impl<'a> Session<'a> {
         cluster: &'a Cluster,
         backend: &'a mut dyn Backend,
         cfg: &TrainConfig,
+    ) -> Result<Session<'a>> {
+        Session::build_with_assignment(dataset, cluster, backend, cfg, None)
+    }
+
+    /// [`Session::build`] with an optional pre-existing vertex→part
+    /// assignment (PR 10). `Some(ps)` skips the pre-partitioning step and
+    /// runs the rest of the pipeline (RAPA adjustment when enabled, plan,
+    /// workers, cache) against `ps` — the dynamic driver uses this to
+    /// keep the assignment stable across update batches while the load
+    /// drift stays below threshold. `None` is exactly `build`.
+    pub fn build_with_assignment(
+        dataset: &Dataset,
+        cluster: &'a Cluster,
+        backend: &'a mut dyn Backend,
+        cfg: &TrainConfig,
+        prior: Option<PartitionSet>,
     ) -> Result<Session<'a>> {
         let wall = Instant::now();
         let gpus = cluster.gpus();
@@ -267,17 +306,37 @@ impl<'a> Session<'a> {
         let data = &dataset.data;
 
         // ---- Partition (RAPA or plain) ---------------------------------
-        let (plan, rapa_pruned): (SubgraphPlan, usize) = if cfg.use_rapa {
-            let mut rcfg = cfg.rapa;
-            rcfg.f_dim = data.f_dim;
-            rcfg.layers = cfg.layers;
-            let res = rapa::run(g, gpus, &rcfg, cfg.method, &mut rng);
-            let pruned = res.pruned.iter().sum();
-            (res.plan, pruned)
-        } else {
-            let ps = cfg.method.partition(g, p, &mut rng);
-            (build_plan(g, &ps), 0)
+        // `rapa::run` is exactly `partition` + `run_with_partition`, so
+        // splitting the steps here (to admit a carried assignment) keeps
+        // the no-prior path bit-identical to what it always produced.
+        let ps = match prior {
+            Some(ps) => {
+                if ps.num_parts != p || ps.assignment.len() != g.n() {
+                    return Err(anyhow!(
+                        "carried assignment shape ({} parts, {} vertices) does not \
+                         match this run ({} parts, {} vertices)",
+                        ps.num_parts,
+                        ps.assignment.len(),
+                        p,
+                        g.n()
+                    ));
+                }
+                ps
+            }
+            None => cfg.method.partition(g, p, &mut rng),
         };
+        let (plan, rapa_pruned, assignment): (SubgraphPlan, usize, PartitionSet) =
+            if cfg.use_rapa {
+                let mut rcfg = cfg.rapa;
+                rcfg.f_dim = data.f_dim;
+                rcfg.layers = cfg.layers;
+                let res = rapa::run_with_partition(g, gpus, &rcfg, ps);
+                let pruned = res.pruned.iter().sum();
+                (res.plan, pruned, res.assignment)
+            } else {
+                let plan = build_plan(g, &ps);
+                (plan, 0, ps)
+            };
 
         // ---- Model ------------------------------------------------------
         let c_pad = if data.num_classes <= 4 { 4 } else { 16 };
@@ -487,6 +546,7 @@ impl<'a> Session<'a> {
                 data.num_classes,
                 cluster.machine_of(),
             ),
+            assignment,
         })
     }
 
@@ -876,6 +936,77 @@ impl<'a> Session<'a> {
     /// box).
     pub fn num_machines(&self) -> usize {
         self.machine_of.iter().copied().max().map_or(1, |m| m + 1)
+    }
+
+    /// The vertex→part assignment this session trains under.
+    pub fn assignment(&self) -> &PartitionSet {
+        &self.assignment
+    }
+
+    /// Adopt the carried state of an earlier phase into this freshly
+    /// built session (PR 10): weights continue training, the epoch
+    /// counter and report continue accumulating, and — when present —
+    /// the carried cache replaces the cold one the build made, resized
+    /// to this build's capacities with this topology's JACA priorities
+    /// re-planted. Must be called before the first epoch.
+    pub fn adopt_carry(&mut self, carry: SessionCarry) -> Result<()> {
+        if carry.model.kind != self.model.kind || carry.model.dims != self.dims {
+            return Err(anyhow!(
+                "carried model shape does not match this session (layer dims are \
+                 topology-independent, so this indicates a config change mid-run)"
+            ));
+        }
+        if self.epoch != 0 {
+            return Err(anyhow!("adopt_carry must precede the first epoch"));
+        }
+        self.model = carry.model;
+        self.epoch = carry.epoch;
+        let fresh = std::mem::take(&mut self.report);
+        let mut merged = carry.report;
+        merged.absorb(&fresh);
+        self.report = merged;
+        if let Some(mut cache) = carry.cache {
+            let local_caps: Vec<usize> = (0..self.workers.len())
+                .map(|w| self.cache.local_capacity(w))
+                .collect();
+            let global_cap = self.cache.global_capacity();
+            cache.resize(&local_caps, global_cap);
+            // Re-plant this topology's priorities: the build hinted the
+            // cold cache it made; the carried one needs the same hints
+            // (stale hints for vanished halo vertices were dropped by
+            // the invalidation pass the driver ran before the carry).
+            let max_overlap = self
+                .plan
+                .parts
+                .iter()
+                .flat_map(|sg| sg.halo_overlap.iter().copied())
+                .max()
+                .unwrap_or(1);
+            for (w, sg) in self.plan.parts.iter().enumerate() {
+                for (hi, &v) in sg.halo_ids().iter().enumerate() {
+                    let prio = if self.cfg.invert_priority {
+                        max_overlap + 1 - sg.halo_overlap[hi]
+                    } else {
+                        sg.halo_overlap[hi]
+                    };
+                    for l in 0..=self.cfg.layers as u32 {
+                        cache.set_priority(w, key_of(l, v), prio);
+                    }
+                }
+            }
+            self.cache = cache;
+        }
+        Ok(())
+    }
+
+    /// Tear the session down *without* closing the run (PR 10): returns
+    /// the accumulated report, the live model weights and the cache so a
+    /// dynamic driver can rebuild against an updated graph and
+    /// [`Session::adopt_carry`] them into the next phase. The final
+    /// phase uses [`Session::finish`] instead, which scores the test
+    /// split and stamps the closing cache stats.
+    pub fn dismantle(self) -> (TrainReport, GnnModel, TwoLevelCache) {
+        (self.report, self.model, self.cache)
     }
 
     /// Capture everything that persists across epochs into a

@@ -1,0 +1,382 @@
+//! Delta-vs-rebuild equivalence suite (PR 10): every observable of a
+//! dynamic-graph run — CSR bytes, propagation operators (including the
+//! lazily built transpose), training losses, cache counters, serve
+//! outputs — must be **bitwise identical** whether the evolving graph is
+//! maintained incrementally ([`GraphMode::Delta`], an overlay log with
+//! periodic compaction) or rebuilt from scratch at every update point
+//! ([`GraphMode::Rebuild`]). The randomized generator exercises inserts,
+//! deletes, duplicate edges, self-loops, and isolated-vertex birth and
+//! death across executors × caching × strategies × cluster shapes.
+
+use capgnn::dist::Cluster;
+use capgnn::graph::datasets::tiny;
+use capgnn::graph::delta::{parse_updates, DeltaGraph, Update, UpdateBatch};
+use capgnn::graph::{Graph, SparseAdj};
+use capgnn::runtime::NativeBackend;
+use capgnn::sample::Fanout;
+use capgnn::serve::serve_output;
+use capgnn::train::{
+    run_dynamic, DynamicConfig, DynamicOutcome, ExecMode, GraphMode, StrategyKind, TrainConfig,
+};
+use capgnn::util::Rng;
+use std::collections::BTreeSet;
+
+/// Seeded batch generator: random inserts/deletes with deliberate
+/// duplicate edges and self-loops mixed in.
+fn random_batches(n: usize, batches: usize, per_batch: usize, rng: &mut Rng) -> Vec<UpdateBatch> {
+    (0..batches)
+        .map(|_| {
+            let mut batch = UpdateBatch::new();
+            for _ in 0..per_batch {
+                let u = rng.index(n) as u32;
+                // ~1 in 8 updates is a self-loop on purpose.
+                let v = if rng.index(8) == 0 { u } else { rng.index(n) as u32 };
+                let up = if rng.index(2) == 0 {
+                    Update::Insert(u, v)
+                } else {
+                    Update::Delete(u, v)
+                };
+                batch.push(up);
+                // ~1 in 4 updates is immediately duplicated (redundant).
+                if rng.index(4) == 0 {
+                    batch.push(up);
+                }
+            }
+            batch
+        })
+        .collect()
+}
+
+/// The reference arm at the graph level: a normalized undirected edge
+/// set with last-write-wins update semantics, rebuilt via `from_edges`.
+fn scratch_apply(n: usize, edges: &mut BTreeSet<(u32, u32)>, batch: &[Update]) {
+    for up in batch {
+        let (u, v) = up.endpoints();
+        assert!((u as usize) < n && (v as usize) < n);
+        if u == v {
+            continue;
+        }
+        let e = (u.min(v), u.max(v));
+        match up {
+            Update::Insert(..) => {
+                edges.insert(e);
+            }
+            Update::Delete(..) => {
+                edges.remove(&e);
+            }
+        }
+    }
+}
+
+fn scratch_graph(n: usize, edges: &BTreeSet<(u32, u32)>) -> Graph {
+    let list: Vec<(u32, u32)> = edges.iter().copied().collect();
+    Graph::from_edges(n, &list)
+}
+
+/// Order-independent FNV-1a digest over (vertex, output bits) — the
+/// serve-equivalence fingerprint.
+fn serve_digest(rows: &[(u32, Vec<f32>)]) -> u64 {
+    let mut items: Vec<(u32, Vec<u32>)> = rows
+        .iter()
+        .map(|(v, out)| (*v, out.iter().map(|x| x.to_bits()).collect()))
+        .collect();
+    items.sort();
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for (v, bits) in items {
+        mix(v as u64);
+        for b in bits {
+            mix(b as u64);
+        }
+    }
+    h
+}
+
+fn tiny_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig { hidden: 16, layers: 2, lr: 0.05, ..TrainConfig::capgnn(epochs) }
+}
+
+fn run_both(
+    seed: u64,
+    cluster: &Cluster,
+    cfg: &TrainConfig,
+    dyn_cfg: &DynamicConfig,
+) -> (DynamicOutcome, DynamicOutcome) {
+    let ds = tiny(seed);
+    let mut b1 = NativeBackend::new();
+    let a = run_dynamic(&ds, cluster, &mut b1, cfg, dyn_cfg, GraphMode::Delta).unwrap();
+    let mut b2 = NativeBackend::new();
+    let b = run_dynamic(&ds, cluster, &mut b2, cfg, dyn_cfg, GraphMode::Rebuild).unwrap();
+    (a, b)
+}
+
+/// Assert every run-level observable matches bitwise between the arms.
+fn assert_equivalent(a: &DynamicOutcome, b: &DynamicOutcome, label: &str) {
+    assert_eq!(a.report.losses.len(), b.report.losses.len(), "{label}: epoch count");
+    for (i, (x, y)) in a.report.losses.iter().zip(&b.report.losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: loss[{i}]");
+    }
+    assert_eq!(a.report.test_acc.to_bits(), b.report.test_acc.to_bits(), "{label}: test acc");
+    assert_eq!(a.report.bytes_moved, b.report.bytes_moved, "{label}: bytes moved");
+    assert_eq!(a.report.bytes_saved, b.report.bytes_saved, "{label}: bytes saved");
+    assert_eq!(a.report.cache, b.report.cache, "{label}: cache stats");
+    assert_eq!(a.invalidated, b.invalidated, "{label}: invalidated rows");
+    assert_eq!(a.repartitions, b.repartitions, "{label}: repartitions");
+    assert_eq!(a.touched, b.touched, "{label}: touched sets");
+    assert_eq!(a.drift, b.drift, "{label}: drift trace");
+    assert_eq!(a.stats.inserts, b.stats.inserts, "{label}: inserts");
+    assert_eq!(a.stats.deletes, b.stats.deletes, "{label}: deletes");
+    assert_eq!(a.stats.redundant, b.stats.redundant, "{label}: redundant");
+    assert_eq!(a.stats.self_loops, b.stats.self_loops, "{label}: self-loops");
+    let wa = &a.model.model.weights;
+    let wb = &b.model.model.weights;
+    assert_eq!(wa.len(), wb.len(), "{label}: layer count");
+    for (la, lb) in wa.iter().zip(wb) {
+        assert_eq!(la.len(), lb.len(), "{label}: matrices per layer");
+        for (ma, mb) in la.iter().zip(lb) {
+            assert_eq!(ma.len(), mb.len(), "{label}: weight matrix shape");
+            for (x, y) in ma.iter().zip(mb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: final weights");
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_snapshot_tracks_scratch_rebuild_under_random_updates() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0xd1f7);
+        let base = tiny(seed).graph;
+        let n = base.n();
+        let mut dg = DeltaGraph::new(base.clone());
+        let mut edges: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for u in 0..n as u32 {
+            for &v in base.nbrs(u) {
+                if u < v {
+                    edges.insert((u, v));
+                }
+            }
+        }
+        for round in 0..8 {
+            let batch = random_batches(n, 1, 12, &mut rng).pop().unwrap();
+            dg.apply(&batch).unwrap();
+            scratch_apply(n, &mut edges, &batch);
+            let snap = dg.snapshot();
+            let scratch = scratch_graph(n, &edges);
+            assert_eq!(snap, scratch, "seed {seed} round {round}: CSR mismatch");
+            snap.check_invariants().unwrap();
+            // The propagation operators (and their lazily built
+            // transposes) are bitwise equal too — the trainer's actual
+            // inputs, not just the raw CSR.
+            for (sa, sb) in [
+                (SparseAdj::gcn_normalized(&snap, n), SparseAdj::gcn_normalized(&scratch, n)),
+                (SparseAdj::sage_mean(&snap, n), SparseAdj::sage_mean(&scratch, n)),
+            ] {
+                assert_eq!(sa.fwd(), sb.fwd(), "seed {seed} round {round}: fwd operator");
+                assert_eq!(
+                    sa.transpose(),
+                    sb.transpose(),
+                    "seed {seed} round {round}: transposed operator"
+                );
+            }
+            // Compaction at a random point must be invisible.
+            if rng.index(3) == 0 {
+                dg.compact();
+                assert_eq!(dg.snapshot(), scratch, "seed {seed} round {round}: post-compact");
+            }
+        }
+    }
+}
+
+#[test]
+fn training_is_bitwise_identical_across_the_matrix() {
+    // Executors × caching × strategies, alternating cluster shapes: the
+    // full dynamic run (losses, bytes, cache counters, invalidations,
+    // drift decisions, final weights) may not depend on how the graph
+    // was maintained.
+    let mut rng = Rng::new(0x9210);
+    let combos = [
+        (ExecMode::Sequential, true, StrategyKind::Halo),
+        (ExecMode::Sequential, true, StrategyKind::OneHalfD),
+        (ExecMode::Sequential, false, StrategyKind::Halo),
+        (ExecMode::Sequential, false, StrategyKind::OneHalfD),
+        (ExecMode::Threaded, true, StrategyKind::Halo),
+        (ExecMode::Threaded, true, StrategyKind::OneHalfD),
+        (ExecMode::Threaded, false, StrategyKind::Halo),
+        (ExecMode::Threaded, false, StrategyKind::OneHalfD),
+    ];
+    for (i, &(exec, use_cache, strategy)) in combos.iter().enumerate() {
+        let preset = if i % 2 == 0 { "1M-4D" } else { "2M-2D" };
+        let cluster = Cluster::preset(preset).unwrap();
+        let mut cfg = tiny_cfg(5);
+        cfg.exec = exec;
+        cfg.use_cache = use_cache;
+        cfg.strategy = strategy;
+        let n = tiny(31).graph.n();
+        let dyn_cfg = DynamicConfig {
+            batches: random_batches(n, 2, 10, &mut rng),
+            update_every: 2,
+            ..DynamicConfig::default()
+        };
+        let (a, b) = run_both(31, &cluster, &cfg, &dyn_cfg);
+        let label = format!("{}/{}/cache={}/{}", preset, exec.name(), use_cache, strategy.name());
+        assert_equivalent(&a, &b, &label);
+        assert_eq!(a.report.losses.len(), 5, "{label}: full epoch budget");
+        if !use_cache {
+            assert_eq!(a.invalidated, 0, "{label}: nothing cached, nothing invalidated");
+        }
+    }
+}
+
+#[test]
+fn invalidation_drops_resident_rows_on_touched_vertices() {
+    // Deterministically touch every connected vertex: delete each
+    // vertex's first edge. Any row resident in the carried cache belongs
+    // to a vertex with at least one (old) edge, so it must be dropped —
+    // invalidations > 0 whenever fills > 0.
+    let ds = tiny(33);
+    let g = &ds.graph;
+    let mut batch = UpdateBatch::new();
+    for u in 0..g.n() as u32 {
+        if let Some(&v) = g.nbrs(u).first() {
+            batch.push(Update::Delete(u, v));
+        }
+    }
+    let cluster = Cluster::preset("1M-4D").unwrap();
+    let cfg = tiny_cfg(4);
+    let dyn_cfg = DynamicConfig {
+        batches: vec![batch],
+        update_every: 2,
+        ..DynamicConfig::default()
+    };
+    let mut backend = NativeBackend::new();
+    let out = run_dynamic(&ds, &cluster, &mut backend, &cfg, &dyn_cfg, GraphMode::Delta).unwrap();
+    assert!(out.report.cache.fills > 0, "the cache must have been exercised");
+    assert!(out.invalidated > 0, "stale resident rows must be dropped");
+    assert_eq!(
+        out.report.cache.invalidations, out.invalidated,
+        "the carried cache's counter must match the driver's total"
+    );
+    // Every touched vertex had an edge deleted, and deleting a vertex's
+    // only edge makes it isolated — the graph still trains.
+    assert_eq!(out.report.losses.len(), 4);
+    assert!(out.stats.deletes > 0);
+}
+
+#[test]
+fn serve_outputs_and_digests_match_after_updates() {
+    let ds = tiny(35);
+    let n = ds.graph.n();
+    let mut rng = Rng::new(0x5e12);
+    let dyn_cfg = DynamicConfig {
+        batches: random_batches(n, 3, 8, &mut rng),
+        update_every: 1,
+        compact_every: 2,
+        ..DynamicConfig::default()
+    };
+    let cluster = Cluster::preset("2M-2D").unwrap();
+    let cfg = tiny_cfg(4);
+    let (a, b) = run_both(35, &cluster, &cfg, &dyn_cfg);
+    assert_equivalent(&a, &b, "serve-pretrain");
+
+    // Reconstruct the final graph both ways and serve over it.
+    let mut dg = DeltaGraph::new(ds.graph.clone());
+    let mut edges: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for u in 0..n as u32 {
+        for &v in ds.graph.nbrs(u) {
+            if u < v {
+                edges.insert((u, v));
+            }
+        }
+    }
+    for batch in &dyn_cfg.batches {
+        dg.apply(batch).unwrap();
+        scratch_apply(n, &mut edges, batch);
+    }
+    let final_delta = dg.snapshot();
+    let final_scratch = scratch_graph(n, &edges);
+    assert_eq!(final_delta, final_scratch, "final graphs must agree");
+
+    let fanout = Fanout(vec![4; cfg.layers]);
+    let vertices: Vec<u32> = (0..12).map(|_| rng.index(n) as u32).collect();
+    let mut rows_a = Vec::new();
+    let mut rows_b = Vec::new();
+    let mut be = NativeBackend::new();
+    for &v in &vertices {
+        let oa = serve_output(&final_delta, &ds.data, &a.model.model, &fanout, 7, v, &mut be)
+            .unwrap();
+        let ob = serve_output(&final_scratch, &ds.data, &b.model.model, &fanout, 7, v, &mut be)
+            .unwrap();
+        for (x, y) in oa.iter().zip(&ob) {
+            assert_eq!(x.to_bits(), y.to_bits(), "serve output for vertex {v}");
+        }
+        rows_a.push((v, oa));
+        rows_b.push((v, ob));
+    }
+    assert_eq!(serve_digest(&rows_a), serve_digest(&rows_b), "serve digests");
+}
+
+#[test]
+fn compaction_schedule_is_invisible_to_results() {
+    let ds = tiny(37);
+    let n = ds.graph.n();
+    let mut rng = Rng::new(0xc0);
+    let batches = random_batches(n, 4, 6, &mut rng);
+    let cluster = Cluster::preset("1M-4D").unwrap();
+    let cfg = tiny_cfg(5);
+    let mut outs = Vec::new();
+    for compact_every in [0usize, 1, 2, 100] {
+        let dyn_cfg = DynamicConfig {
+            batches: batches.clone(),
+            update_every: 1,
+            compact_every,
+            ..DynamicConfig::default()
+        };
+        let mut backend = NativeBackend::new();
+        outs.push(
+            run_dynamic(&ds, &cluster, &mut backend, &cfg, &dyn_cfg, GraphMode::Delta).unwrap(),
+        );
+    }
+    let first = &outs[0];
+    for (i, o) in outs.iter().enumerate().skip(1) {
+        assert_equivalent(first, o, &format!("compact schedule {i}"));
+    }
+    // The schedules really differed: never vs every batch.
+    assert_eq!(outs[0].stats.compactions, 0);
+    assert_eq!(outs[1].stats.compactions, 4);
+}
+
+#[test]
+fn update_file_round_trips_through_the_parser() {
+    // The CLI path (`--updates file:`) and the programmatic path feed
+    // the same driver; a parsed file must behave like the literal
+    // batches it encodes.
+    let text = "# deltas\n+ 0 9\n- 0 1\n---\n+ 3 3\n+ 0 9\n- 250 251\n";
+    let parsed = parse_updates(text).unwrap();
+    let literal = vec![
+        vec![Update::Insert(0, 9), Update::Delete(0, 1)],
+        vec![Update::Insert(3, 3), Update::Insert(0, 9), Update::Delete(250, 251)],
+    ];
+    assert_eq!(parsed, literal);
+    let cluster = Cluster::preset("1M-4D").unwrap();
+    let cfg = tiny_cfg(3);
+    let mk = |batches: Vec<UpdateBatch>| DynamicConfig {
+        batches,
+        update_every: 1,
+        ..DynamicConfig::default()
+    };
+    let ds = tiny(39);
+    let mut b1 = NativeBackend::new();
+    let a = run_dynamic(&ds, &cluster, &mut b1, &cfg, &mk(parsed), GraphMode::Delta).unwrap();
+    let mut b2 = NativeBackend::new();
+    let b = run_dynamic(&ds, &cluster, &mut b2, &cfg, &mk(literal), GraphMode::Rebuild).unwrap();
+    assert_equivalent(&a, &b, "parsed vs literal");
+    // The second batch's self-loop and duplicate insert were counted.
+    assert_eq!(a.stats.self_loops, 1);
+    assert!(a.stats.redundant >= 1);
+}

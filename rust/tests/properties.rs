@@ -4,8 +4,9 @@
 
 use capgnn::cache::{CachePolicy, PolicyKind};
 use capgnn::device::profile::{DeviceKind, Gpu};
+use capgnn::graph::delta::{DeltaGraph, Update};
 use capgnn::graph::generator::{rmat, sbm, skewed_sbm};
-use capgnn::graph::Graph;
+use capgnn::graph::{Graph, SparseAdj};
 use capgnn::partition::halo::{build_plan, expand_halo, halo_stats, overlap_ratio};
 use capgnn::partition::rapa::{self, RapaConfig};
 use capgnn::partition::Method;
@@ -202,6 +203,155 @@ fn prop_cache_insert_then_contains_unless_refused() {
                     assert!(!c.contains(victim));
                 }
             }
+        }
+    });
+}
+
+/// CSR structural invariants beyond `check_invariants`: monotone
+/// offsets, strictly sorted (hence deduped) neighbor lists, no
+/// self-loops, and symmetric adjacency.
+fn assert_csr_canonical(g: &Graph, ctx: &str) {
+    g.check_invariants().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+    for v in 0..g.n() as u32 {
+        let nb = g.nbrs(v);
+        for w in nb.windows(2) {
+            assert!(w[0] < w[1], "{ctx}: vertex {v} neighbors unsorted/duplicated");
+        }
+        for &u in nb {
+            assert_ne!(u, v, "{ctx}: self-loop at {v}");
+            assert!(g.has_edge(u, v), "{ctx}: asymmetric arc {v}->{u}");
+        }
+    }
+}
+
+#[test]
+fn prop_delta_mutations_keep_csr_canonical() {
+    // Every mutation path — apply (inserts, deletes, redundant ops,
+    // self-loops), compaction, snapshot — must land on a canonical CSR.
+    forall_seeds(10, |seed| {
+        let g = random_graph(seed);
+        let n = g.n();
+        let mut rng = Rng::new(seed ^ 0xde17a);
+        let mut dg = DeltaGraph::new(g);
+        for round in 0..6 {
+            let mut batch = Vec::new();
+            for _ in 0..10 {
+                let u = rng.index(n) as u32;
+                let v = if rng.index(8) == 0 { u } else { rng.index(n) as u32 };
+                batch.push(if rng.index(2) == 0 {
+                    Update::Insert(u, v)
+                } else {
+                    Update::Delete(u, v)
+                });
+            }
+            let out = dg.apply(&batch).unwrap();
+            // Touched endpoints are sorted, deduped and in range.
+            for w in out.touched.windows(2) {
+                assert!(w[0] < w[1], "seed {seed}: touched not sorted/deduped");
+            }
+            assert!(out.touched.iter().all(|&v| (v as usize) < n));
+            assert_csr_canonical(&dg.snapshot(), &format!("seed {seed} round {round}"));
+            if rng.index(2) == 0 {
+                dg.compact();
+                assert_csr_canonical(dg.base(), &format!("seed {seed} round {round} compacted"));
+            }
+        }
+    });
+}
+
+#[test]
+fn delta_compaction_boundary_sizes() {
+    let mut rng = Rng::new(7);
+    let g = sbm(80, 4, 6.0, 2.0, &mut rng).0;
+    let n = g.n();
+
+    // Empty delta: apply([]) then compact is a structural no-op.
+    let mut dg = DeltaGraph::new(g.clone());
+    dg.apply(&[]).unwrap();
+    dg.compact();
+    assert_eq!(dg.snapshot(), g, "empty delta must not change the graph");
+    assert_eq!(dg.stats().depth, 0);
+
+    // All-deleted vertex: strip vertex 0 of every edge, then kill and
+    // rebuild the whole graph edge by edge.
+    let mut dg = DeltaGraph::new(g.clone());
+    let batch: Vec<Update> = g.nbrs(0).iter().map(|&v| Update::Delete(0, v)).collect();
+    let out = dg.apply(&batch).unwrap();
+    assert_eq!(out.deleted as usize, g.nbrs(0).len());
+    dg.compact();
+    assert_csr_canonical(dg.base(), "isolated vertex 0");
+    assert!(dg.base().nbrs(0).is_empty(), "vertex 0 must be isolated");
+    assert_eq!(dg.base().n(), n, "vertex universe is fixed");
+
+    // Full teardown: delete every edge → empty CSR at full vertex count.
+    let mut all: Vec<Update> = Vec::new();
+    for u in 0..n as u32 {
+        for &v in g.nbrs(u) {
+            if u < v {
+                all.push(Update::Delete(u, v));
+            }
+        }
+    }
+    let mut dg = DeltaGraph::new(g.clone());
+    dg.apply(&all).unwrap();
+    let empty = dg.snapshot();
+    assert_eq!(empty.m(), 0, "all edges deleted");
+    assert_eq!(empty.n(), n);
+    assert_csr_canonical(&empty, "empty graph");
+
+    // Full rebuild: reinsert the same edges → bitwise the original CSR.
+    let rebuild: Vec<Update> = all
+        .iter()
+        .map(|d| {
+            let (u, v) = d.endpoints();
+            Update::Insert(u, v)
+        })
+        .collect();
+    dg.apply(&rebuild).unwrap();
+    dg.compact();
+    assert_eq!(*dg.base(), g, "delete-all then insert-all must round-trip");
+}
+
+#[test]
+fn prop_sparse_transpose_round_trips() {
+    // The lazily built transpose holds exactly the forward entries with
+    // rows and columns swapped, bit-for-bit, and both operators are
+    // structurally canonical CSR (monotone indptr, sorted columns).
+    forall_seeds(8, |seed| {
+        let g = random_graph(seed);
+        for adj in [SparseAdj::gcn_normalized(&g, g.n()), SparseAdj::sage_mean(&g, g.n())] {
+            for m in [adj.fwd(), adj.transpose()] {
+                assert_eq!(m.indptr.len(), adj.n() + 1);
+                for w in m.indptr.windows(2) {
+                    assert!(w[0] <= w[1], "seed {seed}: indptr not monotone");
+                }
+                for r in 0..m.n_rows() {
+                    let cols = &m.indices[m.indptr[r] as usize..m.indptr[r + 1] as usize];
+                    for w in cols.windows(2) {
+                        assert!(w[0] < w[1], "seed {seed}: row {r} columns unsorted");
+                    }
+                }
+            }
+            let triplets = |m: &capgnn::graph::CsrMat, swap: bool| {
+                let mut t = Vec::with_capacity(m.nnz());
+                for r in 0..m.n_rows() {
+                    for i in m.indptr[r] as usize..m.indptr[r + 1] as usize {
+                        let (a, b) = if swap {
+                            (m.indices[i], r as u32)
+                        } else {
+                            (r as u32, m.indices[i])
+                        };
+                        t.push((a, b, m.values[i].to_bits()));
+                    }
+                }
+                t.sort_unstable();
+                t
+            };
+            assert_eq!(
+                triplets(adj.fwd(), false),
+                triplets(adj.transpose(), true),
+                "seed {seed}: transpose entry set mismatch"
+            );
         }
     });
 }
